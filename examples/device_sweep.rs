@@ -1,0 +1,83 @@
+//! Table IV reproduction as a runnable example: per-board hardware
+//! configuration, resource utilization (FP vs FP+BP), and modeled
+//! latency, plus the pipelined variant and the paper's overhead rows.
+//!
+//!     make artifacts && cargo run --release --example device_sweep
+
+use attrax::attribution::Method;
+use attrax::data;
+use attrax::fpga::{self, Board, ALL_BOARDS};
+use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::sched::{pipeline, AttrOptions, Simulator};
+use attrax::util::rng::Pcg32;
+
+/// Paper Table IV reference values: (board, fp_ms, fpbp_ms).
+const PAPER_LATENCY: [(&str, f64, f64); 3] = [
+    ("Pynq-Z2", 43.53, 66.75),
+    ("Ultra96-V2", 24.56, 39.96),
+    ("ZCU104", 15.32, 26.37),
+];
+
+fn main() -> anyhow::Result<()> {
+    let (_, params) = load_artifacts(&artifacts_dir())?;
+    let net = Network::table3();
+    let method = Method::Guided;
+    let mut rng = Pcg32::seeded(4);
+    let sample = data::make_sample(1, &mut rng);
+
+    println!("== Table IV: per-board configuration, resources, latency ==\n");
+    println!(
+        "{:<12} {:>5} {:>5} {:>5} | {:>5} {:>4} {:>8} {:>8} | {:>8} {:>8} {:>9} | {:>8}",
+        "board", "N_oh", "N_ow", "VMM", "BRAM", "DSP", "FF", "LUT", "FP(ms)", "+BP(ms)", "ovhd(%)", "pipe(x)"
+    );
+    for (bi, b) in ALL_BOARDS.iter().enumerate() {
+        let cfg = fpga::choose_config(*b, &net, method);
+        let sim = Simulator::new(net.clone(), &params, cfg)?;
+        let r = sim.attribute(&sample.image, method, AttrOptions::default());
+        let fp = r.fp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+        let bp = r.bp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+        let rep = pipeline::analyze(&r.fp_cost, &r.bp_cost, fpga::TARGET_FREQ_MHZ);
+        let u = fpga::estimate_fp_bp(&cfg, &net, method);
+        let pct = b.percent(&u);
+        println!(
+            "{:<12} {:>5} {:>5} {:>5} | {:>5} {:>4} {:>8} {:>8} | {:>8.2} {:>8.2} {:>9.1} | {:>8.2}",
+            b.name(),
+            cfg.n_oh,
+            cfg.n_ow,
+            cfg.vmm_tile,
+            u.bram_18k,
+            u.dsp,
+            u.ff,
+            u.lut,
+            fp,
+            fp + bp,
+            100.0 * bp / fp,
+            rep.speedup,
+        );
+        println!(
+            "{:<12} {:>27} | {:>4.0}% {:>4.0}% {:>7.0}% {:>7.0}% | paper: {:>6.2} {:>8.2}",
+            "",
+            "utilization / paper ref",
+            pct[0],
+            pct[1],
+            pct[2],
+            pct[3],
+            PAPER_LATENCY[bi].1,
+            PAPER_LATENCY[bi].2,
+        );
+    }
+
+    println!("\n== per-layer latency breakdown (ZCU104, guided) ==\n");
+    let cfg = fpga::choose_config(Board::Zcu104, &net, method);
+    let sim = Simulator::new(net.clone(), &params, cfg)?;
+    let r = sim.attribute(&sample.image, method, AttrOptions::default());
+    println!("{:<10} {:>12} {:>10}", "layer", "cycles", "ms@100MHz");
+    for (name, cycles) in r.fp_cost.layer_breakdown() {
+        println!("{:<10} {:>12} {:>10.3}", name, cycles, cycles as f64 / 1e5);
+    }
+    println!("-- backward --");
+    for (name, cycles) in r.bp_cost.layer_breakdown() {
+        println!("{:<10} {:>12} {:>10.3}", name, cycles, cycles as f64 / 1e5);
+    }
+    Ok(())
+}

@@ -1,0 +1,100 @@
+//! Fig. 3 reproduction: attribution heatmaps for the three methods,
+//! rendered side by side with the input, on both the fixed-point device
+//! simulator and the PJRT float golden path.
+//!
+//!     make artifacts && cargo run --release --example heatmap_demo
+//!
+//! Writes per-sample panels to out/fig3/:
+//!   sample<k>_input.ppm
+//!   sample<k>_<method>_device.ppm   (16-bit accelerator simulator)
+//!   sample<k>_<method>_golden.ppm   (PJRT float path)
+//! and prints the device-vs-golden correlation + localization table.
+
+use attrax::attribution::{Method, ALL_METHODS};
+use attrax::data;
+use attrax::fpga::{self, Board};
+use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::runtime::Runtime;
+use attrax::sched::{AttrOptions, Simulator};
+use attrax::util::ppm;
+use attrax::util::rng::Pcg32;
+use attrax::util::stats::{pearson, spearman};
+use std::path::PathBuf;
+
+fn channel_sum(rel: &[f32]) -> Vec<f32> {
+    let mut heat = vec![0f32; 1024];
+    for c in 0..3 {
+        for i in 0..1024 {
+            heat[i] += rel[c * 1024 + i];
+        }
+    }
+    heat
+}
+
+fn main() -> anyhow::Result<()> {
+    let (manifest, params) = load_artifacts(&artifacts_dir())?;
+    let net = Network::table3();
+    let cfg = fpga::choose_config(Board::Zcu104, &net, Method::Guided);
+    let sim = Simulator::new(net, &params, cfg)?;
+
+    let runtime = Runtime::cpu()?;
+    let mut golden = std::collections::BTreeMap::new();
+    for m in ALL_METHODS {
+        golden.insert(
+            m,
+            runtime.load_artifact(&manifest, &params, &format!("attr_{}", m.name()), 2)?,
+        );
+    }
+
+    let out_dir = PathBuf::from("out/fig3");
+    std::fs::create_dir_all(&out_dir)?;
+    let mut rng = Pcg32::seeded(11);
+
+    println!(
+        "{:<8} {:<10} {:>6} {:>10} {:>10} {:>8} {:>8}",
+        "sample", "method", "pred", "pearson", "spearman", "loc-dev", "loc-gold"
+    );
+    for (k, cls) in [0usize, 2, 6, 7].iter().enumerate() {
+        let sample = data::make_sample(*cls, &mut rng);
+        // input panel
+        ppm::write_ppm(
+            &out_dir.join(format!("sample{k}_input.ppm")),
+            &ppm::chw_to_rgb(&sample.image, 32, 32),
+            32,
+            32,
+        )?;
+        for m in ALL_METHODS {
+            let dev = sim.attribute(&sample.image, m, AttrOptions::default());
+            let outs = golden[&m].run(&sample.image, &manifest.img_shape)?;
+            let gold_rel = &outs[1];
+
+            let dev_heat = channel_sum(&dev.relevance);
+            let gold_heat = channel_sum(gold_rel);
+            ppm::write_ppm(
+                &out_dir.join(format!("sample{k}_{}_device.ppm", m.name())),
+                &ppm::relevance_to_rgb(&dev_heat),
+                32,
+                32,
+            )?;
+            ppm::write_ppm(
+                &out_dir.join(format!("sample{k}_{}_golden.ppm", m.name())),
+                &ppm::relevance_to_rgb(&gold_heat),
+                32,
+                32,
+            )?;
+            println!(
+                "{:<8} {:<10} {:>6} {:>10.4} {:>10.4} {:>8.3} {:>8.3}",
+                format!("{k}:{}", data::CLASS_NAMES[*cls]),
+                m.name(),
+                dev.pred,
+                pearson(&dev.relevance, gold_rel),
+                spearman(&dev.relevance, gold_rel),
+                data::localization_score(&dev.relevance, &sample.mask),
+                data::localization_score(gold_rel, &sample.mask),
+            );
+        }
+    }
+    println!("\nwrote panels to {}", out_dir.display());
+    println!("(view .ppm files with any image viewer; red = positive relevance, blue = negative)");
+    Ok(())
+}

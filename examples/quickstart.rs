@@ -1,0 +1,68 @@
+//! Quickstart: load the trained artifacts, build the accelerator
+//! simulator for a board, and attribute one image.
+//!
+//!     make artifacts && cargo run --release --example quickstart
+//!
+//! Prints the prediction, the modeled device latency (the paper's
+//! Table-IV quantity), and writes `out/quickstart_heatmap.ppm`.
+
+use attrax::attribution::Method;
+use attrax::data;
+use attrax::fpga::{self, Board};
+use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::sched::{AttrOptions, Simulator};
+use attrax::util::{ppm, rng::Pcg32};
+
+fn main() -> anyhow::Result<()> {
+    // 1. artifacts: weights trained + AOT-compiled by `make artifacts`
+    let (manifest, params) = load_artifacts(&artifacts_dir())?;
+    println!(
+        "loaded {} ({} params, trained to {:.1}% test accuracy)",
+        manifest.network,
+        manifest.param_count,
+        manifest.test_accuracy * 100.0
+    );
+
+    // 2. pick a board; the library chooses the paper's Table-IV config
+    let board = Board::PynqZ2;
+    let net = Network::table3();
+    let cfg = fpga::choose_config(board, &net, Method::Guided);
+    println!(
+        "{board}: N_oh={} N_ow={} VMM={} ({} parallel conv MACs)",
+        cfg.n_oh,
+        cfg.n_ow,
+        cfg.vmm_tile,
+        cfg.conv_macs_parallel()
+    );
+    let sim = Simulator::new(net, &params, cfg)?;
+
+    // 3. one shapes-32 sample through FP+BP on the 16-bit datapath
+    let mut rng = Pcg32::seeded(7);
+    let sample = data::make_sample(2, &mut rng); // a triangle
+    let r = sim.attribute(&sample.image, Method::Guided, AttrOptions::default());
+    let fp = r.fp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+    let bp = r.bp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+    println!(
+        "pred = {} ({}), device latency = {fp:.2} + {bp:.2} = {:.2} ms @100MHz",
+        r.pred,
+        data::CLASS_NAMES[r.pred],
+        fp + bp
+    );
+    println!(
+        "localization (relevance mass on the shape) = {:.3}",
+        data::localization_score(&r.relevance, &sample.mask)
+    );
+
+    // 4. render the heatmap
+    std::fs::create_dir_all("out")?;
+    let mut heat = vec![0f32; 32 * 32];
+    for c in 0..3 {
+        for i in 0..1024 {
+            heat[i] += r.relevance[c * 1024 + i];
+        }
+    }
+    let path = std::path::Path::new("out/quickstart_heatmap.ppm");
+    ppm::write_ppm(path, &ppm::relevance_to_rgb(&heat), 32, 32)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,0 +1,110 @@
+//! End-to-end serving driver (E12): the full system on a real small
+//! workload, proving all layers compose.
+//!
+//!     make artifacts && cargo run --release --example xai_serve -- \
+//!         [requests] [workers] [verify_fraction]
+//!
+//! Pipeline exercised per request:
+//!   shapes-32 generator (rust)  →  bounded queue + worker pool (L3)
+//!   →  16-bit tiled accelerator simulator FP+BP (L3, modeling the
+//!      paper's Table-IV hardware)  →  heatmap + metrics
+//!   and, for a sampled fraction  →  PJRT golden float path (the AOT
+//!      HLO compiled from the L2 JAX model calling the L1 Pallas
+//!      kernels), with fixed-vs-float correlation tracked.
+//!
+//! Reports: accuracy, localization, host latency percentiles, modeled
+//! device latency, throughput, verification agreement. Recorded in
+//! EXPERIMENTS.md §E12.
+
+use attrax::attribution::Method;
+use attrax::coordinator::{server, Config, Coordinator};
+use attrax::fpga::{self, Board};
+use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::sched::Simulator;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60);
+    let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
+    let verify: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.2);
+
+    let (manifest, params) = load_artifacts(&artifacts_dir())?;
+    let net = Network::table3();
+    let board = Board::Zcu104;
+    let cfg = fpga::choose_config(board, &net, Method::Guided);
+    let sim = Simulator::new(net.clone(), &params, cfg)?;
+    println!(
+        "== xai_serve: {requests} requests, {workers} workers, verify {:.0}%, board {board} ==",
+        verify * 100.0
+    );
+    println!(
+        "model: {} params, trained test acc {:.1}%",
+        manifest.param_count,
+        manifest.test_accuracy * 100.0
+    );
+
+    let coord = Coordinator::start(
+        sim,
+        Config {
+            workers,
+            queue_depth: 256,
+            verify_fraction: verify,
+            freq_mhz: fpga::TARGET_FREQ_MHZ,
+        },
+        Some((manifest, params)),
+    )?;
+
+    let report = server::run_load(
+        &coord,
+        server::LoadSpec { requests, rate: 0.0, seed: 2026, method: None },
+    );
+
+    // per-method localization breakdown
+    let mut by_method: std::collections::BTreeMap<Method, (f64, usize)> = Default::default();
+    let mut device_ms = attrax::util::stats::Samples::new();
+    for item in &report.items {
+        if let Some(r) = &item.response {
+            let e = by_method.entry(r.method).or_insert((0.0, 0));
+            e.0 += item.localization;
+            e.1 += 1;
+            device_ms.push(r.device_ms);
+        }
+    }
+
+    println!("\n== workload results ==");
+    println!(
+        "served {} requests in {:.2}s ({:.1} img/s host), rejected {}",
+        report.items.len(),
+        report.wall_s,
+        report.items.len() as f64 / report.wall_s,
+        report.rejected
+    );
+    println!("classification accuracy on generated samples: {:.1}%", report.accuracy * 100.0);
+    println!(
+        "modeled device latency (FP+BP @100MHz): mean {:.2} ms -> {:.1} img/s on-device",
+        device_ms.mean(),
+        1e3 / device_ms.mean()
+    );
+    for (m, (sum, n)) in &by_method {
+        println!("  {m:<10} mean localization {:.3} over {n} requests", sum / *n as f64);
+    }
+
+    // give the verifier a moment to drain, then report
+    std::thread::sleep(std::time::Duration::from_millis(1500));
+    let snap = coord.shutdown();
+    println!("\n== coordinator metrics ==\n{}", snap.report());
+
+    anyhow::ensure!(report.accuracy > 0.9, "end-to-end accuracy regressed");
+    if snap.verified > 0 {
+        anyhow::ensure!(
+            snap.mean_verify_corr > 0.95,
+            "fixed-point vs golden correlation too low: {}",
+            snap.mean_verify_corr
+        );
+        println!(
+            "\nOK: 16-bit device heatmaps match the float golden path (corr {:.4})",
+            snap.mean_verify_corr
+        );
+    }
+    Ok(())
+}

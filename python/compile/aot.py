@@ -1,0 +1,206 @@
+"""AOT compile path: train once, serialize weights, lower FP/BP graphs
+to HLO *text* for the rust PJRT runtime.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+
+Emits into the output directory:
+
+  weights.bin          f32-LE params, concatenated in model.PARAM_SPEC order
+  manifest.json        param table (name/kind/shape/offset), network meta,
+                       mask accounting, training stats, artifact list
+  forward.hlo.txt      (params..., x) -> (logits,)                [pallas]
+  attr_saliency.hlo.txt / attr_deconvnet.hlo.txt / attr_guided.hlo.txt
+                       (params..., x) -> (logits, relevance)      [pallas]
+  attr_*_ref.hlo.txt   same graphs built from the jnp oracle — the
+                       XLA-fusion baseline for the kernel-vs-fused
+                       ablation bench
+  golden.bin           sample images + expected logits/relevance for the
+                       rust integration tests (golden.json describes it)
+
+HLO **text** is the interchange format, not `.serialize()`: jax >= 0.5
+emits protos with 64-bit instruction ids that the xla crate's
+xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+"""
+
+import argparse
+import json
+import os
+import struct
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import data, model, train
+
+
+def to_hlo_text(lowered):
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _param_list(params):
+    return [params[name] for name, _, _ in model.PARAM_SPEC]
+
+
+def _unflatten(flat):
+    return {name: p for (name, _, _), p in zip(model.PARAM_SPEC, flat)}
+
+
+def _lower_forward(use_ref):
+    fwd = model.forward_ref if use_ref else model.forward
+
+    def fn(*args):
+        params, x = _unflatten(args[:-1]), args[-1]
+        logits, _ = fwd(params, x)
+        return (logits,)
+
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, _, shape in model.PARAM_SPEC
+    ]
+    specs.append(jax.ShapeDtypeStruct(data.IMG_SHAPE, jnp.float32))
+    return jax.jit(fn).lower(*specs)
+
+
+def _lower_attr(method, use_ref):
+    attr = model.attribute_ref if use_ref else model.attribute
+
+    def fn(*args):
+        params, x = _unflatten(args[:-1]), args[-1]
+        return attr(params, x, method)
+
+    specs = [
+        jax.ShapeDtypeStruct(shape, jnp.float32) for _, _, shape in model.PARAM_SPEC
+    ]
+    specs.append(jax.ShapeDtypeStruct(data.IMG_SHAPE, jnp.float32))
+    return jax.jit(fn).lower(*specs)
+
+
+def write_weights(params, out_dir):
+    """weights.bin + the param table for manifest.json."""
+    table = []
+    offset = 0
+    with open(os.path.join(out_dir, "weights.bin"), "wb") as f:
+        for name, kind, shape in model.PARAM_SPEC:
+            arr = np.asarray(params[name], dtype="<f4")
+            assert tuple(arr.shape) == tuple(shape), (name, arr.shape, shape)
+            f.write(arr.tobytes())
+            table.append(
+                {
+                    "name": name,
+                    "kind": kind,
+                    "shape": list(shape),
+                    "offset_bytes": offset,
+                    "size_bytes": arr.nbytes,
+                }
+            )
+            offset += arr.nbytes
+    return table, offset
+
+
+def write_golden(params, out_dir, n=6, seed=1234):
+    """Sample images + ref-path expected outputs for rust integration tests."""
+    rng = np.random.default_rng(seed)
+    records = []
+    with open(os.path.join(out_dir, "golden.bin"), "wb") as f:
+        for i in range(n):
+            cls = i % data.NUM_CLASSES
+            img, _ = data.make_sample(cls, rng)
+            x = jnp.asarray(img)
+            rec = {"label": cls}
+            f.write(img.astype("<f4").tobytes())
+            logits = None
+            for method in model.METHODS:
+                lg, rel = model.attribute_ref(params, x, method)
+                if logits is None:
+                    logits = np.asarray(lg, dtype="<f4")
+                    f.write(logits.tobytes())
+                    rec["pred"] = int(np.argmax(logits))
+                f.write(np.asarray(rel, dtype="<f4").tobytes())
+            records.append(rec)
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(
+            {
+                "count": n,
+                "layout": "per-record: image[3*32*32] f32le, logits[10], "
+                "relevance[3*32*32] per method in manifest order",
+                "methods": list(model.METHODS),
+                "records": records,
+            },
+            f,
+            indent=1,
+        )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--steps", type=int, default=400)
+    ap.add_argument("--skip-train", action="store_true", help="random init (CI)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    t0 = time.time()
+    if args.skip_train:
+        params, test_acc, log = model.init_params(jax.random.PRNGKey(0)), 0.0, []
+    else:
+        params, test_acc, log = train.train(steps=args.steps)
+
+    param_table, weight_bytes = write_weights(params, args.out)
+
+    artifacts = {}
+    jobs = [("forward", None, False)]
+    for m in model.METHODS:
+        jobs.append((f"attr_{m}", m, False))
+        jobs.append((f"attr_{m}_ref", m, True))
+    for name, method, use_ref in jobs:
+        t = time.time()
+        lowered = (
+            _lower_forward(use_ref)
+            if method is None
+            else _lower_attr(method, use_ref)
+        )
+        text = to_hlo_text(lowered)
+        fname = f"{name}.hlo.txt"
+        with open(os.path.join(args.out, fname), "w") as f:
+            f.write(text)
+        artifacts[name] = fname
+        print(f"[aot] {fname}: {len(text)} chars ({time.time() - t:.1f}s)")
+
+    write_golden(params, args.out)
+
+    manifest = {
+        "name": "attrax",
+        "network": "table3-cnn",
+        "num_classes": data.NUM_CLASSES,
+        "img_shape": list(data.IMG_SHAPE),
+        "class_names": list(data.CLASS_NAMES),
+        "methods": list(model.METHODS),
+        "param_count": model.param_count(),
+        "weight_bytes": weight_bytes,
+        "params": param_table,
+        "artifacts": artifacts,
+        "test_accuracy": round(float(test_acc), 4),
+        "train_log": [[int(s), float(l), float(a)] for s, l, a in log],
+        "mask_bits_onchip": {m: model.mask_bits_onchip(m) for m in model.METHODS},
+        "mask_bits_conceptual": {
+            m: model.mask_bits_conceptual(m) for m in model.METHODS
+        },
+        "autodiff_cache_bits": model.autodiff_cache_bits(),
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(
+        f"[aot] done in {time.time() - t0:.1f}s — test_acc={test_acc:.4f}, "
+        f"{len(jobs)} HLO artifacts, {weight_bytes} weight bytes"
+    )
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,108 @@
+"""shapes-32: the synthetic stand-in for CIFAR-10 (DESIGN.md §1).
+
+The sandbox has no network access, so the paper's CIFAR-10 workload is
+replaced by a procedurally generated 10-class dataset of 32x32 RGB
+images. Tensor shapes, layer dims and the Table-III network are
+untouched. Beyond availability, shapes-32 has a property CIFAR lacks:
+every sample carries a ground-truth *salient-region mask* (the drawn
+shape's pixels), so attribution heatmaps can be scored quantitatively
+(localization mass, EXPERIMENTS.md E12) instead of only eyeballed.
+
+Classes:
+  0 circle      1 square      2 triangle    3 h-stripes   4 v-stripes
+  5 diagonal    6 cross       7 ring        8 checker     9 dot-grid
+
+Each image: noisy background + one shape drawn in a random saturated
+color at a random position/scale. The same spec is implemented in rust
+(rust/src/data/) for serving-side request generation; the two need not
+be bit-identical (no cross-language exactness is ever compared).
+"""
+
+import numpy as np
+
+NUM_CLASSES = 10
+IMG_SHAPE = (3, 32, 32)
+CLASS_NAMES = (
+    "circle",
+    "square",
+    "triangle",
+    "h-stripes",
+    "v-stripes",
+    "diagonal",
+    "cross",
+    "ring",
+    "checker",
+    "dot-grid",
+)
+
+
+def _shape_mask(cls, rng):
+    """Boolean [32,32] mask of the shape's pixels."""
+    yy, xx = np.mgrid[0:32, 0:32].astype(np.float32)
+    cy = rng.uniform(10, 22)
+    cx = rng.uniform(10, 22)
+    r = rng.uniform(5, 9)
+    if cls == 0:  # circle
+        return (yy - cy) ** 2 + (xx - cx) ** 2 <= r * r
+    if cls == 1:  # square
+        return (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+    if cls == 2:  # triangle (axis-aligned, apex up)
+        h = (yy - (cy - r)) / (2 * r)  # 0 at apex .. 1 at base
+        return (h >= 0) & (h <= 1) & (np.abs(xx - cx) <= h * r)
+    if cls == 3:  # horizontal stripes (band-limited region)
+        period = max(2, int(r) // 2)
+        region = (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+        return region & ((yy.astype(np.int32) // period) % 2 == 0)
+    if cls == 4:  # vertical stripes
+        period = max(2, int(r) // 2)
+        region = (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+        return region & ((xx.astype(np.int32) // period) % 2 == 0)
+    if cls == 5:  # diagonal bar
+        return (np.abs((yy - cy) - (xx - cx)) <= 2) & (np.abs(yy - cy) <= r)
+    if cls == 6:  # cross
+        return ((np.abs(yy - cy) <= 2) | (np.abs(xx - cx) <= 2)) & (
+            (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+        )
+    if cls == 7:  # ring
+        d2 = (yy - cy) ** 2 + (xx - cx) ** 2
+        return (d2 <= r * r) & (d2 >= (r - 2.5) ** 2)
+    if cls == 8:  # checkerboard
+        period = max(2, int(r) // 2)
+        region = (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+        return region & (
+            ((yy.astype(np.int32) // period) + (xx.astype(np.int32) // period)) % 2
+            == 0
+        )
+    if cls == 9:  # dot grid
+        period = max(3, int(r) // 2 + 1)
+        region = (np.abs(yy - cy) <= r) & (np.abs(xx - cx) <= r)
+        return region & (
+            (yy.astype(np.int32) % period < 2) & (xx.astype(np.int32) % period < 2)
+        )
+    raise ValueError(cls)
+
+
+def make_sample(cls, rng):
+    """One (image [3,32,32] float32 in [0,1], mask [32,32] bool) pair."""
+    img = rng.uniform(0.0, 0.35, size=(3, 32, 32)).astype(np.float32)
+    mask = _shape_mask(cls, rng)
+    color = rng.uniform(0.6, 1.0, size=3).astype(np.float32)
+    color[rng.integers(0, 3)] *= rng.uniform(0.1, 0.4)  # saturate a hue
+    img[:, mask] = color[:, None] + rng.normal(
+        0, 0.05, size=(3, int(mask.sum()))
+    ).astype(np.float32)
+    return np.clip(img, 0.0, 1.0), mask
+
+
+def make_dataset(n, seed=0):
+    """Balanced dataset: (images [N,3,32,32], labels [N], masks [N,32,32])."""
+    rng = np.random.default_rng(seed)
+    images = np.empty((n, *IMG_SHAPE), np.float32)
+    labels = np.empty(n, np.int32)
+    masks = np.empty((n, 32, 32), bool)
+    for i in range(n):
+        cls = i % NUM_CLASSES
+        img, m = make_sample(cls, rng)
+        images[i], labels[i], masks[i] = img, cls, m
+    perm = rng.permutation(n)
+    return images[perm], labels[perm], masks[perm]

@@ -1,0 +1,13 @@
+"""Layer-1 Pallas kernel library (all interpret=True, CPU-PJRT runnable).
+
+Kernels mirror the paper's HLS compute blocks:
+  conv2d   — tiled output-stationary convolution + flipped-transpose BP
+  vmm      — tiled vector-matrix product + transpose-load BP
+  relu     — fused ReLU + 1-bit mask; 3 attribution backward dataflows
+  pool     — max-pool 2x2 with 2-bit argmax mask; unpool gradient routing
+  quant    — Q-format quantize/dequantize emulation
+
+`ref` holds the pure-jnp oracles each kernel is tested against.
+"""
+
+from . import conv2d, pool, quant, ref, relu, vmm  # noqa: F401

@@ -1,0 +1,116 @@
+"""Tiled output-stationary conv2d as a Pallas kernel (paper §III-B).
+
+Hardware-adaptation notes (DESIGN.md §Hardware-Adaptation):
+
+* The paper's on-chip input / weight / output buffers become VMEM tiles
+  described by ``BlockSpec``s.
+* The paper's output-stationary dataflow — accumulate an output tile in
+  place while streaming input-channel tiles from DRAM — becomes a grid
+  axis over input-channel blocks with ``o_ref[...] +=`` accumulation and
+  a ``pl.when(ci == 0)`` zero-init, the canonical Pallas reduction idiom.
+* The paper's ``N_oh × N_ow`` DSP unroll becomes the vectorized
+  ``jnp.einsum`` over the whole spatial tile, which the MXU executes.
+* The BP phase reuses this exact kernel: the *caller* presents the
+  flipped-transposed weight view (paper Fig. 6 / Table I) — same compute
+  block, different load pattern, exactly the paper's reuse story.
+
+All ``pallas_call``s use ``interpret=True``: the CPU PJRT plugin cannot
+execute Mosaic custom-calls, and interpret-mode lowers to plain HLO that
+both pytest and the rust runtime can run.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+
+def _conv_kernel(x_ref, w_ref, o_ref, *, kh, kw):
+    """One (co-block, ci-block) grid step of the output-stationary conv.
+
+    x_ref : [CI_BLK, H + kh - 1, W + kw - 1]  padded input tile (halo included)
+    w_ref : [CO_BLK, CI_BLK, kh, kw]
+    o_ref : [CO_BLK, H, W]                    accumulated in place
+    """
+    ci = pl.program_id(1)
+
+    @pl.when(ci == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    h = o_ref.shape[1]
+    w = o_ref.shape[2]
+    x = x_ref[...]
+    wt = w_ref[...]
+    acc = jnp.zeros(o_ref.shape, dtype=o_ref.dtype)
+    # The kh*kw shifted-window MACs — the loop the paper unrolls onto
+    # DSP slices; here each term is a full-tile einsum onto the MXU.
+    for i in range(kh):
+        for j in range(kw):
+            acc += jnp.einsum(
+                "oc,chw->ohw",
+                wt[:, :, i, j],
+                jax.lax.dynamic_slice(x, (0, i, j), (x.shape[0], h, w)),
+                preferred_element_type=o_ref.dtype,
+            )
+    o_ref[...] += acc
+
+
+def _pick_block(n, want):
+    """Largest divisor of n that is <= want (block sizes must tile exactly)."""
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("padding", "co_blk", "ci_blk"))
+def conv2d(x, w, *, padding=1, co_blk=16, ci_blk=16):
+    """Stride-1 'same'-style convolution. x:[I,H,W], w:[O,I,KH,KW].
+
+    Grid = (O/co_blk, I/ci_blk); ci is the innermost (reduction) axis so
+    revisits of each output block are consecutive — required for the
+    in-place accumulation to be well-defined.
+    """
+    i_ch, h, wd = x.shape
+    o_ch, i_ch2, kh, kw = w.shape
+    assert i_ch == i_ch2, f"channel mismatch {i_ch} vs {i_ch2}"
+    co_blk = _pick_block(o_ch, co_blk)
+    ci_blk = _pick_block(i_ch, ci_blk)
+
+    # Halo handling: pad once at the DRAM->VMEM boundary (the paper's
+    # line-buffer load does the same job on the FPGA).
+    xp = jnp.pad(x, ((0, 0), (padding, padding), (padding, padding)))
+    oh = h + 2 * padding - kh + 1
+    ow = wd + 2 * padding - kw + 1
+
+    grid = (o_ch // co_blk, i_ch // ci_blk)
+    return pl.pallas_call(
+        functools.partial(_conv_kernel, kh=kh, kw=kw),
+        grid=grid,
+        in_specs=[
+            # input tile: all spatial rows, one ci block (spatial dims are
+            # small at 32x32; channel tiling is where VMEM pressure lives)
+            pl.BlockSpec(
+                (ci_blk, oh + kh - 1, ow + kw - 1), lambda co, ci: (ci, 0, 0)
+            ),
+            pl.BlockSpec((co_blk, ci_blk, kh, kw), lambda co, ci: (co, ci, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((co_blk, oh, ow), lambda co, ci: (co, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((o_ch, oh, ow), x.dtype),
+        interpret=True,
+    )(xp, w)
+
+
+def conv2d_input_grad(g, w, *, padding=1, co_blk=16, ci_blk=16):
+    """BP conv: same kernel, flipped-transposed weight view (paper Fig. 6).
+
+    The transform happens at load time (index manipulation), not in the
+    compute block — mirroring the paper's modified DRAM access pattern.
+    """
+    kh = w.shape[2]
+    wt = ref.flip_transpose_weights(w)
+    return conv2d(g, wt, padding=kh - 1 - padding, co_blk=co_blk, ci_blk=ci_blk)

@@ -1,0 +1,88 @@
+"""Max-pool 2x2/stride-2 with argmax capture, and unpool gradient routing
+(paper §III-D, Fig. 5).
+
+FP: the pooling is "absorbed into the output store" of the preceding
+layer — we model that as a fused kernel producing both the pooled tile
+and the 2-bit argmax index mask kept on-chip.
+
+BP: the unpool kernel routes each gradient value to the cached argmax
+position within its 2x2 window, zeros elsewhere.
+
+Tiled over channels; each kernel invocation handles one channel block's
+full spatial extent (spatial dims are small on 32x32-class inputs).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _windows(x):
+    c, h, w = x.shape
+    return x.reshape(c, h // 2, 2, w // 2, 2).transpose(0, 1, 3, 2, 4).reshape(
+        c, h // 2, w // 2, 4
+    )
+
+
+def _maxpool_kernel(x_ref, y_ref, i_ref):
+    win = _windows(x_ref[...])
+    y_ref[...] = jnp.max(win, axis=-1)
+    i_ref[...] = jnp.argmax(win, axis=-1).astype(jnp.int8)
+
+
+def _unpool_kernel(g_ref, i_ref, o_ref):
+    g = g_ref[...]
+    c, ho, wo = g.shape
+    onehot = (i_ref[...][..., None] == jnp.arange(4, dtype=jnp.int8)).astype(g.dtype)
+    win = onehot * g[..., None]
+    o_ref[...] = win.reshape(c, ho, wo, 2, 2).transpose(0, 1, 3, 2, 4).reshape(
+        c, 2 * ho, 2 * wo
+    )
+
+
+def _blk(n, want=8):
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@jax.jit
+def maxpool2x2(x):
+    """[C,H,W] -> ([C,H/2,W/2] pooled, [C,H/2,W/2] int8 argmax index)."""
+    c, h, w = x.shape
+    assert h % 2 == 0 and w % 2 == 0, "max-pool needs even spatial dims"
+    blk = _blk(c)
+    out_shape = (c, h // 2, w // 2)
+    return pl.pallas_call(
+        _maxpool_kernel,
+        grid=(c // blk,),
+        in_specs=[pl.BlockSpec((blk, h, w), lambda i: (i, 0, 0))],
+        out_specs=(
+            pl.BlockSpec((blk, h // 2, w // 2), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, h // 2, w // 2), lambda i: (i, 0, 0)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct(out_shape, x.dtype),
+            jax.ShapeDtypeStruct(out_shape, jnp.int8),
+        ),
+        interpret=True,
+    )(x)
+
+
+@jax.jit
+def unpool2x2(g, idx):
+    """Route [C,Ho,Wo] gradients to [C,2Ho,2Wo] via the 2-bit index mask."""
+    c, ho, wo = g.shape
+    blk = _blk(c)
+    return pl.pallas_call(
+        _unpool_kernel,
+        grid=(c // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, ho, wo), lambda i: (i, 0, 0)),
+            pl.BlockSpec((blk, ho, wo), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((blk, 2 * ho, 2 * wo), lambda i: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((c, 2 * ho, 2 * wo), g.dtype),
+        interpret=True,
+    )(g, idx)

@@ -1,0 +1,46 @@
+"""Fixed-point quantization kernel (paper §IV: 16-bit fixed-point datapath).
+
+Models one pass through the Q-format datapath: scale by 2^frac, round to
+nearest, saturate to the signed word range, descale. The golden float
+path inserts this after every layer when emulating the accelerator's
+numerics; the bit-exact integer path lives in the rust simulator
+(rust/src/fx/).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _quant_kernel(x_ref, o_ref, *, scale, lo, hi):
+    x = x_ref[...]
+    o_ref[...] = jnp.clip(jnp.round(x * scale), lo, hi) * (1.0 / scale)
+
+
+def _blk(n, want=8):
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("word_bits", "frac_bits"))
+def quantize_fx(x, *, word_bits=16, frac_bits=9):
+    """Quantize-dequantize through a signed Q(word-frac-1).frac format."""
+    scale = float(2**frac_bits)
+    lo = float(-(2 ** (word_bits - 1)))
+    hi = float(2 ** (word_bits - 1) - 1)
+    c = x.shape[0]
+    blk = _blk(c)
+    rest = x.shape[1:]
+    spec = pl.BlockSpec((blk, *rest), lambda i: (i,) + (0,) * len(rest))
+    return pl.pallas_call(
+        functools.partial(_quant_kernel, scale=scale, lo=lo, hi=hi),
+        grid=(c // blk,),
+        in_specs=[spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        interpret=True,
+    )(x)

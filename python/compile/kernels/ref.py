@@ -1,0 +1,166 @@
+"""Pure-jnp correctness oracles for the Pallas kernel library.
+
+Every kernel in this package has a reference implementation here written
+with stock jax.numpy / lax ops. pytest (python/tests/) sweeps shapes and
+dtypes with hypothesis and asserts allclose between kernel and oracle —
+this is the CORE correctness signal for Layer 1.
+
+Conventions (paper §III, batch size = 1 throughout):
+  activations  : [C, H, W]   (channel-major, like the paper's DRAM layout)
+  conv weights : [O, I, KH, KW]
+  fc weights   : [OUT, IN]
+  relu mask    : same shape as activation, {0,1}  (paper: 1-bit BRAM mask)
+  pool index   : [C, H/2, W/2], values in {0,1,2,3} (paper: 2-bit mask)
+"""
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Convolution (paper §III-B) and its backprop (paper §III-E, Fig. 6)
+# ---------------------------------------------------------------------------
+
+
+def conv2d(x, w, *, padding=1):
+    """Feedforward convolution, stride 1. x:[I,H,W] w:[O,I,KH,KW] -> [O,H',W']."""
+    out = jax.lax.conv_general_dilated(
+        x[None],  # [1,I,H,W]
+        w,
+        window_strides=(1, 1),
+        padding=[(padding, padding), (padding, padding)],
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+    )
+    return out[0]
+
+
+def flip_transpose_weights(w):
+    """Paper Fig. 6: swap in/out channel dims and rotate each kernel 180°."""
+    return jnp.flip(w, axis=(-2, -1)).transpose(1, 0, 2, 3)
+
+
+def conv2d_input_grad(g, w, *, padding=1):
+    """Gradient of conv2d w.r.t. its input: a convolution of the upstream
+    gradient with the flipped-transposed kernels (paper §III-E). Valid for
+    stride-1 convs as used by the paper's CNN."""
+    kh = w.shape[2]
+    return conv2d(g, flip_transpose_weights(w), padding=kh - 1 - padding)
+
+
+# ---------------------------------------------------------------------------
+# Fully connected / VMM (paper §III-C) and its backprop
+# ---------------------------------------------------------------------------
+
+
+def vmm(w, x, b=None):
+    """FC forward: y = W·x (+ b). w:[OUT,IN] x:[IN] -> [OUT]."""
+    y = w @ x
+    if b is not None:
+        y = y + b
+    return y
+
+
+def vmm_t(w, g):
+    """FC input-gradient: gx = Wᵀ·g — the 'transpose-manner DRAM load'
+    reuse of the VMM block (paper §III-E)."""
+    return w.T @ g
+
+
+# ---------------------------------------------------------------------------
+# ReLU (paper §II, Fig. 4) — forward + the three attribution dataflows
+# ---------------------------------------------------------------------------
+
+
+def relu_fwd(x):
+    """Forward ReLU and the 1-bit positivity mask stored in BRAM."""
+    mask = (x > 0).astype(jnp.int8)
+    return jnp.maximum(x, 0.0), mask
+
+
+def relu_bwd_saliency(mask, g):
+    """Eq. 3: R^L = (f^L > 0) ⊙ R^{L+1} — vanilla gradient."""
+    return g * mask.astype(g.dtype)
+
+
+def relu_bwd_deconvnet(mask, g):
+    """Eq. 4: R^L = (R^{L+1} > 0) ⊙ R^{L+1} — ReLU applied to the gradient
+    itself; the FP mask is unused (the method's memory saving)."""
+    del mask
+    return jnp.maximum(g, 0.0)
+
+
+def relu_bwd_guided(mask, g):
+    """Eq. 5: R^L = (f^L > 0) ⊙ (R^{L+1} > 0) ⊙ R^{L+1}."""
+    return jnp.maximum(g, 0.0) * mask.astype(g.dtype)
+
+
+RELU_BWD = {
+    "saliency": relu_bwd_saliency,
+    "deconvnet": relu_bwd_deconvnet,
+    "guided": relu_bwd_guided,
+}
+
+
+# ---------------------------------------------------------------------------
+# Max-pool 2x2 stride 2 (paper §III-D, Fig. 5) and unpooling
+# ---------------------------------------------------------------------------
+
+
+def _pool_windows(x):
+    """[C,H,W] -> [C,H/2,W/2,4] window-major view (row-major within window)."""
+    c, h, w = x.shape
+    return x.reshape(c, h // 2, 2, w // 2, 2).transpose(0, 1, 3, 2, 4).reshape(
+        c, h // 2, w // 2, 4
+    )
+
+
+def maxpool2x2(x):
+    """Forward max-pool; returns (pooled, idx) with idx the 2-bit argmax
+    position inside each 2x2 window (paper Fig. 5a)."""
+    win = _pool_windows(x)
+    idx = jnp.argmax(win, axis=-1).astype(jnp.int8)
+    return jnp.max(win, axis=-1), idx
+
+
+def unpool2x2(g, idx):
+    """Backward gradient routing: place g at the cached argmax position,
+    zeros elsewhere (paper Fig. 5b)."""
+    c, ho, wo = g.shape
+    onehot = jax.nn.one_hot(idx, 4, dtype=g.dtype)  # [C,Ho,Wo,4]
+    win = onehot * g[..., None]
+    return win.reshape(c, ho, wo, 2, 2).transpose(0, 1, 3, 2, 4).reshape(
+        c, 2 * ho, 2 * wo
+    )
+
+
+# ---------------------------------------------------------------------------
+# Fixed-point quantization (paper §IV: 16-bit fixed point datapath)
+# ---------------------------------------------------------------------------
+
+
+def quantize_fx(x, *, word_bits=16, frac_bits=9):
+    """Round-to-nearest, saturate to the signed word range, return the
+    dequantized float value — models one pass through the Q-format
+    datapath. Default Q6.9 (+sign) matches the rust simulator."""
+    scale = jnp.float32(2**frac_bits)
+    lo = jnp.float32(-(2 ** (word_bits - 1)))
+    hi = jnp.float32(2 ** (word_bits - 1) - 1)
+    q = jnp.clip(jnp.round(x * scale), lo, hi)
+    return q / scale
+
+
+# ---------------------------------------------------------------------------
+# Whole-layer compositions used by L2 tests
+# ---------------------------------------------------------------------------
+
+
+def conv_relu_fwd(x, w, b, *, padding=1):
+    """Conv + bias + ReLU, returning activation and mask — the fused unit
+    the scheduler treats as one 'layer' (ReLU absorbed into output store,
+    paper §III-D)."""
+    y = conv2d(x, w, padding=padding) + b[:, None, None]
+    return relu_fwd(y)
+
+
+def fc_relu_fwd(x, w, b):
+    y = vmm(w, x, b)
+    return relu_fwd(y)

@@ -1,0 +1,90 @@
+"""ReLU forward + the three attribution backward dataflows (paper Fig. 4).
+
+The forward kernel produces the activation AND the 1-bit positivity mask
+in one pass — the paper stores this mask in BRAM during FP (§III-D) so
+that BP never needs the full activation tensor. The backward kernel is
+*configured at trace time* with the attribution method, mirroring the
+paper's design-time configurability (§III-G):
+
+  saliency  (eq. 3):  g · (f > 0)            — needs the FP mask
+  deconvnet (eq. 4):  max(g, 0)              — mask-free
+  guided    (eq. 5):  max(g, 0) · (f > 0)    — needs the FP mask
+
+Element-wise kernels tiled over the leading (channel) axis.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+METHODS = ("saliency", "deconvnet", "guided")
+
+
+def _relu_fwd_kernel(x_ref, y_ref, m_ref):
+    x = x_ref[...]
+    y_ref[...] = jnp.maximum(x, 0.0)
+    m_ref[...] = (x > 0).astype(jnp.int8)
+
+
+def _relu_bwd_kernel(m_ref, g_ref, o_ref, *, method):
+    g = g_ref[...]
+    if method == "saliency":
+        o_ref[...] = g * m_ref[...].astype(g.dtype)
+    elif method == "deconvnet":
+        o_ref[...] = jnp.maximum(g, 0.0)
+    elif method == "guided":
+        o_ref[...] = jnp.maximum(g, 0.0) * m_ref[...].astype(g.dtype)
+    else:  # pragma: no cover - guarded by METHODS check in wrappers
+        raise ValueError(method)
+
+
+def _blk(n, want=8):
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@jax.jit
+def relu_fwd(x):
+    """y = max(x,0) plus the 1-bit mask, single fused pass."""
+    c = x.shape[0]
+    blk = _blk(c)
+    rest = x.shape[1:]
+    spec = pl.BlockSpec((blk, *rest), lambda i: (i,) + (0,) * len(rest))
+    return pl.pallas_call(
+        _relu_fwd_kernel,
+        grid=(c // blk,),
+        in_specs=[spec],
+        out_specs=(spec, spec),
+        out_shape=(
+            jax.ShapeDtypeStruct(x.shape, x.dtype),
+            jax.ShapeDtypeStruct(x.shape, jnp.int8),
+        ),
+        interpret=True,
+    )(x)
+
+
+@functools.partial(jax.jit, static_argnames=("method",))
+def relu_bwd(mask, g, *, method):
+    """Route the gradient through the ReLU per the configured method.
+
+    ``mask`` is always passed (fixed kernel signature = fixed buffer
+    allocation, as in the HLS library); deconvnet simply never reads it.
+    """
+    if method not in METHODS:
+        raise ValueError(f"unknown attribution method {method!r}")
+    c = g.shape[0]
+    blk = _blk(c)
+    rest = g.shape[1:]
+    spec = pl.BlockSpec((blk, *rest), lambda i: (i,) + (0,) * len(rest))
+    return pl.pallas_call(
+        functools.partial(_relu_bwd_kernel, method=method),
+        grid=(c // blk,),
+        in_specs=[spec, spec],
+        out_specs=spec,
+        out_shape=jax.ShapeDtypeStruct(g.shape, g.dtype),
+        interpret=True,
+    )(mask, g)

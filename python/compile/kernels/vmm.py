@@ -1,0 +1,90 @@
+"""Tiled vector-matrix product as a Pallas kernel (paper §III-C).
+
+The FC layers are a VMM during FP and a matrix-vector product (Wᵀ·g)
+during BP. The paper reuses one compute block for both by loading the
+weight buffer "in a transpose manner" from DRAM (§III-E); here the same
+kernel body serves both phases and only the weight ``BlockSpec``
+``index_map`` (plus an in-tile transpose) changes — the load pattern,
+not the datapath.
+
+Output-stationary accumulation over input blocks, as in the conv kernel.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _vmm_kernel(w_ref, x_ref, o_ref, *, transpose):
+    """One (out-block, in-block) grid step: o += W_blk · x_blk.
+
+    transpose=False : w_ref is [OUT_BLK, IN_BLK]      (FP load)
+    transpose=True  : w_ref is [IN_BLK, OUT_BLK]      (BP transpose load)
+    """
+    i = pl.program_id(1)
+
+    @pl.when(i == 0)
+    def _zero():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    w = w_ref[...]
+    if transpose:
+        w = w.T
+    o_ref[...] += jnp.dot(w, x_ref[...], preferred_element_type=o_ref.dtype)
+
+
+def _pick_block(n, want):
+    b = min(n, want)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+@functools.partial(jax.jit, static_argnames=("out_blk", "in_blk"))
+def vmm(w, x, *, out_blk=32, in_blk=256):
+    """FC forward: y = W·x. w:[OUT,IN], x:[IN] -> [OUT]."""
+    out_n, in_n = w.shape
+    out_blk = _pick_block(out_n, out_blk)
+    in_blk = _pick_block(in_n, in_blk)
+    grid = (out_n // out_blk, in_n // in_blk)
+    return pl.pallas_call(
+        functools.partial(_vmm_kernel, transpose=False),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((out_blk, in_blk), lambda o, i: (o, i)),
+            pl.BlockSpec((in_blk,), lambda o, i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((out_blk,), lambda o, i: (o,)),
+        out_shape=jax.ShapeDtypeStruct((out_n,), x.dtype),
+        interpret=True,
+    )(w, x)
+
+
+@functools.partial(jax.jit, static_argnames=("out_blk", "in_blk"))
+def vmm_t(w, g, *, out_blk=256, in_blk=32):
+    """FC backward: gx = Wᵀ·g. w:[OUT,IN], g:[OUT] -> [IN].
+
+    Same kernel body; the weight BlockSpec walks the matrix transposed
+    (index_map swaps block coordinates), reproducing the paper's
+    transpose-manner DRAM load into the same on-chip buffer.
+    """
+    out_n, in_n = w.shape
+    # 'out' of this product is IN of the layer; reduction runs over OUT.
+    o_blk = _pick_block(in_n, out_blk)
+    r_blk = _pick_block(out_n, in_blk)
+    grid = (in_n // o_blk, out_n // r_blk)
+    return pl.pallas_call(
+        functools.partial(_vmm_kernel, transpose=True),
+        grid=grid,
+        in_specs=[
+            # block shape [r_blk, o_blk] read at (reduction, output) —
+            # the transposed walk of w
+            pl.BlockSpec((r_blk, o_blk), lambda o, r: (r, o)),
+            pl.BlockSpec((r_blk,), lambda o, r: (r,)),
+        ],
+        out_specs=pl.BlockSpec((o_blk,), lambda o, r: (o,)),
+        out_shape=jax.ShapeDtypeStruct((in_n,), g.dtype),
+        interpret=True,
+    )(w, g)

@@ -1,0 +1,7 @@
+"""Make `compile.*` importable whether pytest runs from python/ or the
+repository root (the Makefile uses python/, CI logs use the root)."""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))

@@ -1,0 +1,100 @@
+"""AOT path checks: lowering produces valid HLO text; the emitted
+artifacts (when present) are internally consistent with the manifest."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import aot, data, model
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_lowering_produces_hlo_text():
+    lowered = aot._lower_forward(use_ref=True)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    assert "parameter" in text.lower()
+    # 12 params + image = 13 inputs
+    assert text.count("parameter(") >= 13 or text.count("Parameter") >= 13
+
+
+def test_attr_lowering_has_two_outputs():
+    lowered = aot._lower_attr("guided", use_ref=True)
+    text = aot.to_hlo_text(lowered)
+    assert "HloModule" in text
+    # root is a 2-tuple: (logits, relevance)
+    assert "(f32[10]" in text.replace(" ", "") and "f32[3,32,32]" in text.replace(" ", "")
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")), reason="run make artifacts")
+def test_manifest_consistent():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["param_count"] == model.param_count()
+    assert m["weight_bytes"] == model.param_count() * 4
+    # param table offsets are contiguous and ordered like PARAM_SPEC
+    offset = 0
+    for entry, (name, kind, shape) in zip(m["params"], model.PARAM_SPEC):
+        assert entry["name"] == name
+        assert entry["kind"] == kind
+        assert tuple(entry["shape"]) == tuple(shape)
+        assert entry["offset_bytes"] == offset
+        offset += entry["size_bytes"]
+    assert offset == m["weight_bytes"]
+    assert set(m["methods"]) == set(model.METHODS)
+    for art in m["artifacts"].values():
+        assert os.path.exists(os.path.join(ART, art)), art
+    # §V accounting embedded for the rust side
+    assert m["mask_bits_onchip"]["saliency"] == 24_704
+    assert m["autodiff_cache_bits"] == 3_543_040
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "weights.bin")), reason="run make artifacts")
+def test_weights_roundtrip_through_forward():
+    """Load weights.bin the way rust does; the reconstructed params must
+    reproduce the golden logits."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    raw = np.fromfile(os.path.join(ART, "weights.bin"), dtype="<f4")
+    params = {}
+    for entry in m["params"]:
+        n = int(np.prod(entry["shape"]))
+        start = entry["offset_bytes"] // 4
+        params[entry["name"]] = jnp.asarray(
+            raw[start : start + n].reshape(entry["shape"])
+        )
+    with open(os.path.join(ART, "golden.json")) as f:
+        g = json.load(f)
+    gb = np.fromfile(os.path.join(ART, "golden.bin"), dtype="<f4")
+    rec_len = 3072 + 10 + len(g["methods"]) * 3072
+    img = jnp.asarray(gb[:3072].reshape(3, 32, 32))
+    want_logits = gb[3072 : 3072 + 10]
+    logits, _ = model.forward_ref(params, img)
+    np.testing.assert_allclose(logits, want_logits, atol=1e-4, rtol=1e-4)
+    assert gb.size == g["count"] * rec_len
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART, "manifest.json")), reason="run make artifacts")
+def test_trained_model_classifies_fresh_data():
+    """The shipped weights generalize to freshly drawn shapes-32 samples."""
+    with open(os.path.join(ART, "manifest.json")) as f:
+        m = json.load(f)
+    raw = np.fromfile(os.path.join(ART, "weights.bin"), dtype="<f4")
+    params = {}
+    for entry in m["params"]:
+        n = int(np.prod(entry["shape"]))
+        start = entry["offset_bytes"] // 4
+        params[entry["name"]] = jnp.asarray(raw[start : start + n].reshape(entry["shape"]))
+    rng = np.random.default_rng(99)
+    correct = 0
+    total = 40
+    for i in range(total):
+        img, _ = data.make_sample(i % 10, rng)
+        logits, _ = model.forward_ref(params, jnp.asarray(img))
+        correct += int(jnp.argmax(logits)) == i % 10
+    assert correct / total > 0.85, f"accuracy {correct}/{total}"

@@ -1,0 +1,64 @@
+"""shapes-32 generator sanity: the synthetic CIFAR-10 stand-in."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+
+
+@settings(max_examples=20, deadline=None)
+@given(cls=st.integers(0, 9), seed=st.integers(0, 2**16))
+def test_sample_well_formed(cls, seed):
+    img, mask = data.make_sample(cls, np.random.default_rng(seed))
+    assert img.shape == (3, 32, 32)
+    assert img.dtype == np.float32
+    assert mask.shape == (32, 32)
+    assert (img >= 0).all() and (img <= 1).all()
+    area = int(mask.sum())
+    assert 8 < area < 600, f"class {cls}: {area} shape pixels"
+
+
+def test_dataset_balanced_and_shuffled():
+    xs, ys, masks = data.make_dataset(100, seed=1)
+    assert xs.shape == (100, 3, 32, 32)
+    assert masks.shape == (100, 32, 32)
+    counts = np.bincount(ys, minlength=10)
+    assert (counts == 10).all()
+    # shuffled: not sorted by class
+    assert not (np.diff(ys) >= 0).all()
+
+
+def test_determinism():
+    a = data.make_dataset(20, seed=7)[0]
+    b = data.make_dataset(20, seed=7)[0]
+    np.testing.assert_array_equal(a, b)
+    c = data.make_dataset(20, seed=8)[0]
+    assert not np.array_equal(a, c)
+
+
+def test_classes_distinguishable():
+    """Mean per-class mask patterns must differ — else training is moot."""
+    rng = np.random.default_rng(3)
+    protos = []
+    for cls in range(10):
+        acc = np.zeros((32, 32))
+        for _ in range(20):
+            _, m = data.make_sample(cls, rng)
+            acc += m
+        protos.append(acc / 20)
+    # pairwise L1 distance between class prototypes is nonzero
+    for i in range(10):
+        for j in range(i + 1, 10):
+            d = np.abs(protos[i] - protos[j]).mean()
+            assert d > 0.005, f"classes {i} and {j} look identical"
+
+
+def test_shape_contrast():
+    rng = np.random.default_rng(11)
+    ok = 0
+    for i in range(30):
+        img, mask = data.make_sample(i % 10, rng)
+        fg = img[:, mask].mean()
+        bg = img[:, ~mask].mean()
+        ok += fg > bg + 0.15
+    assert ok >= 27

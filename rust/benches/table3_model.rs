@@ -1,0 +1,31 @@
+//! E2 — paper Table III: the CNN structure, per-layer parameter counts
+//! and model size, regenerated from the graph library.
+
+use attrax::model::Network;
+use attrax::util::bench::{fmt_count, section};
+
+fn main() {
+    let net = Network::table3();
+    section("Table III — CNN structure");
+    print!("{}", net.structure_table());
+    println!(
+        "\ntotal parameters : {} (paper: 591,274 across listed layers)",
+        fmt_count(net.param_count() as u64)
+    );
+    let mib = net.model_bytes(32) as f64 / (1024.0 * 1024.0);
+    println!("model size fp32  : {mib:.2} MiB (paper: 2.26 MB, SqueezeNet-class)");
+    println!("model size 16-bit: {:.2} MiB (deployed datapath precision)", net.model_bytes(16) as f64 / (1024.0 * 1024.0));
+    println!("forward MACs     : {}", fmt_count(net.forward_macs() as u64));
+
+    let expect = [896usize, 9248, 18496, 36928, 524416, 1290];
+    let got: Vec<usize> = net
+        .layers
+        .iter()
+        .map(|l| l.param_count())
+        .filter(|&c| c > 0)
+        .collect();
+    println!(
+        "\nper-layer counts match paper: {}",
+        if got == expect { "yes (896/9,248/18,496/36,928/524,416/1,290)" } else { "NO" }
+    );
+}

@@ -1,0 +1,164 @@
+//! Mask-memory accounting (paper Table II + §V "Software"), computed
+//! from the network graph — works for any network over the layer
+//! vocabulary, not just Table III.
+//!
+//! Two accountings exist (see python/compile/model.py for the full
+//! derivation):
+//!
+//! * **on-chip** (§V's 24.7 Kb): 2-bit pool argmax masks + ReLU masks
+//!   only for FC layers. Conv ReLU masks are free because the post-ReLU
+//!   activation is written to DRAM anyway — `mask == (act > 0)`, and for
+//!   pre-pool ReLUs the pooled max in DRAM recovers the mask at the only
+//!   positions the unpool can route gradient to.
+//! * **conceptual** (Table II's yes/no): every mask materialized.
+//!
+//! The framework comparison (§V's 3.4 Mb) caches every intermediate
+//! activation at 32-bit.
+
+use crate::attribution::Method;
+use crate::model::{Layer, Network, Shape};
+
+/// Per-network mask accounting.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct MaskBudget {
+    /// 1-bit ReLU masks following conv layers (recoverable from DRAM).
+    pub conv_relu_bits: usize,
+    /// 1-bit ReLU masks following FC layers (must be stored on-chip).
+    pub fc_relu_bits: usize,
+    /// 2-bit max-pool argmax masks.
+    pub pool_bits: usize,
+}
+
+impl MaskBudget {
+    pub fn onchip_bits(&self, method: Method) -> usize {
+        let mut bits = self.pool_bits;
+        if method.needs_relu_mask() {
+            bits += self.fc_relu_bits;
+        }
+        bits
+    }
+
+    pub fn conceptual_bits(&self, method: Method) -> usize {
+        let mut bits = self.pool_bits;
+        if method.needs_relu_mask() {
+            bits += self.conv_relu_bits + self.fc_relu_bits;
+        }
+        bits
+    }
+}
+
+/// Walk the graph and classify every mask the BP phase could need.
+pub fn mask_budget(net: &Network) -> MaskBudget {
+    let mut b = MaskBudget { conv_relu_bits: 0, fc_relu_bits: 0, pool_bits: 0 };
+    for (i, layer) in net.layers.iter().enumerate() {
+        match layer {
+            Layer::Relu => {
+                let elems = net.shapes[i].elems();
+                // A ReLU following a conv (CHW shape) is recoverable from
+                // DRAM; a ReLU on a flat vector (after FC) is stored.
+                match net.shapes[i] {
+                    Shape::Chw(..) => b.conv_relu_bits += elems,
+                    Shape::Flat(..) => b.fc_relu_bits += elems,
+                }
+            }
+            Layer::MaxPool2 => {
+                // 2 bits per pooled OUTPUT element (paper §III-D: "size of
+                // the entire index mask is same as the dimension of the
+                // output feature map")
+                b.pool_bits += 2 * net.shapes[i + 1].elems();
+            }
+            _ => {}
+        }
+    }
+    b
+}
+
+/// §V framework comparison: every intermediate activation cached.
+/// Frameworks cache each *distinct* tensor once: conv/FC/pool outputs
+/// (ReLU is recomputable from its output and fused in practice; flatten
+/// is a view). The final logits are not an intermediate.
+pub fn autodiff_cache_bits(net: &Network, precision_bits: usize) -> usize {
+    let n_layers = net.layers.len();
+    net.layers
+        .iter()
+        .enumerate()
+        .take(n_layers - 1) // last layer's output is the result, not cached
+        .filter(|(_, l)| matches!(l, Layer::Conv { .. } | Layer::Fc { .. } | Layer::MaxPool2))
+        .map(|(i, _)| net.shapes[i + 1].elems())
+        .sum::<usize>()
+        * precision_bits
+}
+
+/// §V headline: memory-reduction factor of the analytic-BP design vs a
+/// framework's activation cache, for the given method.
+pub fn reduction_factor(net: &Network, method: Method) -> f64 {
+    let cache = autodiff_cache_bits(net, 32) as f64;
+    let masks = mask_budget(net).onchip_bits(method) as f64;
+    cache / masks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::ALL_METHODS;
+
+    #[test]
+    fn table3_budget_matches_paper_sec5() {
+        let net = Network::table3();
+        let b = mask_budget(&net);
+        // pool1: 32*16*16 outputs * 2b = 16384 ; pool2: 64*8*8 * 2b = 8192
+        assert_eq!(b.pool_bits, 24_576);
+        assert_eq!(b.fc_relu_bits, 128);
+        // conv relu masks: 32*32*32 + 32*32*32 + 64*16*16 + 64*16*16
+        assert_eq!(b.conv_relu_bits, 98_304);
+        // paper §V: 24.7 Kb on-chip for saliency/guided
+        assert_eq!(b.onchip_bits(crate::attribution::Method::Saliency), 24_704);
+        assert_eq!(b.onchip_bits(crate::attribution::Method::Guided), 24_704);
+        assert_eq!(b.onchip_bits(crate::attribution::Method::Deconvnet), 24_576);
+    }
+
+    #[test]
+    fn table3_autodiff_cache_matches_paper() {
+        let net = Network::table3();
+        let bits = autodiff_cache_bits(&net, 32);
+        // 110,720 cached elements * 32b = 3,543,040 b ≈ paper's "3.4 Mb"
+        assert_eq!(bits, 3_543_040);
+        let mb = bits as f64 / (1024.0 * 1024.0);
+        assert!((mb - 3.379).abs() < 0.01, "Mib = {mb}");
+    }
+
+    #[test]
+    fn reduction_factor_approx_137x() {
+        let net = Network::table3();
+        let f = reduction_factor(&net, crate::attribution::Method::Saliency);
+        // paper rounds to 137x; exact value is 143.4 (they divided the
+        // already-rounded 3.4e6 / 24.7e3)
+        assert!(f > 130.0 && f < 150.0, "factor = {f}");
+    }
+
+    #[test]
+    fn deconvnet_always_smallest() {
+        let net = Network::table3();
+        let b = mask_budget(&net);
+        for m in ALL_METHODS {
+            assert!(b.onchip_bits(crate::attribution::Method::Deconvnet) <= b.onchip_bits(m));
+            assert!(b.conceptual_bits(m) >= b.onchip_bits(m));
+        }
+    }
+
+    #[test]
+    fn budget_scales_with_network() {
+        // a pool-free network needs no pool bits
+        let net = crate::model::NetworkBuilder::new(Shape::Chw(1, 8, 8))
+            .conv("c", 4, 3, 1)
+            .relu()
+            .flatten()
+            .fc("f", 2)
+            .build()
+            .unwrap();
+        let b = mask_budget(&net);
+        assert_eq!(b.pool_bits, 0);
+        assert_eq!(b.conv_relu_bits, 4 * 8 * 8);
+        assert_eq!(b.fc_relu_bits, 0);
+    }
+}

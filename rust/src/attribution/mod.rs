@@ -1,0 +1,167 @@
+//! Attribution methods (S7): the paper's three gradient-backpropagation
+//! dataflows and their mask/memory requirements.
+
+pub mod memory;
+
+/// The three feature-attribution algorithms the HLS library supports
+/// (paper §II). The choice configures the ReLU backward dataflow
+/// (Fig. 4) and the mask storage (Table II).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Method {
+    /// Eq. 3 — vanilla gradient; zeroes grads where FP activation <= 0.
+    Saliency,
+    /// Eq. 4 — ReLU applied to the gradient itself; no FP mask needed.
+    Deconvnet,
+    /// Eq. 5 — both: FP mask AND gradient positivity.
+    Guided,
+}
+
+pub const ALL_METHODS: [Method; 3] = [Method::Saliency, Method::Deconvnet, Method::Guided];
+
+impl Method {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Method::Saliency => "saliency",
+            Method::Deconvnet => "deconvnet",
+            Method::Guided => "guided",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Method> {
+        match s.to_ascii_lowercase().as_str() {
+            "saliency" | "gradient" | "vanilla" => Some(Method::Saliency),
+            "deconvnet" | "deconv" => Some(Method::Deconvnet),
+            "guided" | "guided-backprop" | "guidedbackprop" => Some(Method::Guided),
+            _ => None,
+        }
+    }
+
+    /// Paper Table II row 1: does BP need the FP ReLU positivity mask?
+    pub fn needs_relu_mask(&self) -> bool {
+        !matches!(self, Method::Deconvnet)
+    }
+
+    /// Paper Table II row 2: every method routes gradients through the
+    /// max-pool argmax, so the 2-bit pooling mask is always stored.
+    pub fn needs_pool_mask(&self) -> bool {
+        true
+    }
+
+    /// The ReLU backward dataflow (Fig. 4) on one element.
+    /// `mask` is the FP positivity bit, `g` the upstream gradient.
+    #[inline]
+    pub fn relu_bwd_f32(&self, mask: bool, g: f32) -> f32 {
+        match self {
+            Method::Saliency => {
+                if mask {
+                    g
+                } else {
+                    0.0
+                }
+            }
+            Method::Deconvnet => g.max(0.0),
+            Method::Guided => {
+                if mask {
+                    g.max(0.0)
+                } else {
+                    0.0
+                }
+            }
+        }
+    }
+
+    /// Same dataflow on raw Q-format values (sign test only — exact).
+    #[inline]
+    pub fn relu_bwd_raw(&self, mask: bool, g: i32) -> i32 {
+        match self {
+            Method::Saliency => {
+                if mask {
+                    g
+                } else {
+                    0
+                }
+            }
+            Method::Deconvnet => g.max(0),
+            Method::Guided => {
+                if mask {
+                    g.max(0)
+                } else {
+                    0
+                }
+            }
+        }
+    }
+}
+
+impl std::fmt::Display for Method {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Method::parse("Saliency"), Some(Method::Saliency));
+        assert_eq!(Method::parse("gradient"), Some(Method::Saliency));
+        assert_eq!(Method::parse("deconv"), Some(Method::Deconvnet));
+        assert_eq!(Method::parse("guided-backprop"), Some(Method::Guided));
+        assert_eq!(Method::parse("lime"), None);
+    }
+
+    #[test]
+    fn table2_mask_requirements() {
+        // paper Table II exactly
+        assert!(Method::Saliency.needs_relu_mask());
+        assert!(!Method::Deconvnet.needs_relu_mask());
+        assert!(Method::Guided.needs_relu_mask());
+        for m in ALL_METHODS {
+            assert!(m.needs_pool_mask());
+        }
+    }
+
+    #[test]
+    fn fig4_dataflows() {
+        // (mask, g) -> expected per method, from the paper's Fig. 4 example
+        let cases = [
+            // mask=1 (positive FP activation)
+            (true, 2.0, 2.0, 2.0, 2.0),
+            (true, -3.0, -3.0, 0.0, 0.0),
+            // mask=0 (negative FP activation)
+            (false, 2.0, 0.0, 2.0, 0.0),
+            (false, -3.0, 0.0, 0.0, 0.0),
+        ];
+        for (mask, g, sal, dec, gui) in cases {
+            assert_eq!(Method::Saliency.relu_bwd_f32(mask, g), sal);
+            assert_eq!(Method::Deconvnet.relu_bwd_f32(mask, g), dec);
+            assert_eq!(Method::Guided.relu_bwd_f32(mask, g), gui);
+        }
+    }
+
+    #[test]
+    fn raw_matches_f32_sign_logic() {
+        for m in ALL_METHODS {
+            for mask in [false, true] {
+                for g in [-100i32, -1, 0, 1, 77] {
+                    let f = m.relu_bwd_f32(mask, g as f32);
+                    assert_eq!(m.relu_bwd_raw(mask, g) as f32, f);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn guided_is_intersection() {
+        // eq.5 = eq.3 ∘ eq.4 at every point
+        let mut rng = crate::util::rng::Pcg32::seeded(5);
+        for _ in 0..1000 {
+            let mask = rng.below(2) == 1;
+            let g = rng.uniform(-4.0, 4.0);
+            let comp = Method::Saliency.relu_bwd_f32(mask, Method::Deconvnet.relu_bwd_f32(mask, g));
+            assert_eq!(Method::Guided.relu_bwd_f32(mask, g), comp);
+        }
+    }
+}

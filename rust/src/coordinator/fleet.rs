@@ -1,0 +1,159 @@
+//! Heterogeneous fleet router: dispatch attribution requests across
+//! several accelerator devices (e.g. a Pynq-Z2 + a ZCU104 on the same
+//! edge gateway), weighted by each device's modeled throughput.
+//!
+//! Extends the paper's single-device deployment to the multi-device
+//! edge-box setting: the router tracks in-flight device-milliseconds
+//! per card and assigns each request to the device that will finish it
+//! earliest (greedy ETA, the classic heterogeneous list-scheduling
+//! heuristic). Device latency comes from the per-board cycle model, so
+//! the router's decisions reflect Table-IV physics rather than host
+//! wall time.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::attribution::Method;
+use crate::fpga::{self, Board};
+use crate::hls::HwConfig;
+use crate::model::{Network, Params};
+use crate::sched::{AttrOptions, AttrResult, Simulator};
+
+/// One device in the fleet.
+pub struct Device {
+    pub board: Board,
+    pub sim: Simulator,
+    /// Modeled per-request device time, microseconds (calibrated once
+    /// at fleet construction with a probe image).
+    pub request_us: u64,
+    /// In-flight modeled microseconds (the router's load estimate).
+    inflight_us: AtomicU64,
+    /// Completed-request counter.
+    pub completed: AtomicU64,
+}
+
+/// A fleet of heterogeneous devices with ETA routing.
+pub struct Fleet {
+    pub devices: Vec<Arc<Device>>,
+}
+
+impl Fleet {
+    /// Build one device per board with the paper's chosen config,
+    /// calibrating each device's per-request cost with `probe`.
+    pub fn new(
+        boards: &[Board],
+        net: &Network,
+        params: &Params,
+        probe: &[f32],
+        method: Method,
+    ) -> anyhow::Result<Fleet> {
+        anyhow::ensure!(!boards.is_empty(), "fleet needs at least one device");
+        let mut devices = Vec::with_capacity(boards.len());
+        for &board in boards {
+            let cfg: HwConfig = fpga::choose_config(board, net, method);
+            let sim = Simulator::new(net.clone(), params, cfg)?;
+            let r = sim.attribute(probe, method, AttrOptions::default());
+            let cycles = r.fp_cost.total_cycles() + r.bp_cost.total_cycles();
+            let request_us = (cycles as f64 / fpga::TARGET_FREQ_MHZ) as u64;
+            devices.push(Arc::new(Device {
+                board,
+                sim,
+                request_us,
+                inflight_us: AtomicU64::new(0),
+                completed: AtomicU64::new(0),
+            }));
+        }
+        Ok(Fleet { devices })
+    }
+
+    /// Pick the device with the earliest completion time for one more
+    /// request (current backlog + its per-request cost).
+    pub fn route(&self) -> Arc<Device> {
+        self.devices
+            .iter()
+            .min_by_key(|d| d.inflight_us.load(Ordering::Relaxed) + d.request_us)
+            .expect("non-empty fleet")
+            .clone()
+    }
+
+    /// Execute a request on the routed device, maintaining load state.
+    pub fn attribute(&self, image: &[f32], method: Method) -> (Board, AttrResult) {
+        let dev = self.route();
+        dev.inflight_us.fetch_add(dev.request_us, Ordering::Relaxed);
+        let r = dev.sim.attribute(image, method, AttrOptions::default());
+        dev.inflight_us.fetch_sub(dev.request_us, Ordering::Relaxed);
+        dev.completed.fetch_add(1, Ordering::Relaxed);
+        (dev.board, r)
+    }
+
+    /// Aggregate modeled fleet throughput (img/s at the target clock).
+    pub fn modeled_throughput_ips(&self) -> f64 {
+        self.devices.iter().map(|d| 1e6 / d.request_us as f64).sum()
+    }
+
+    /// (board, completed) per device.
+    pub fn completion_counts(&self) -> Vec<(Board, u64)> {
+        self.devices
+            .iter()
+            .map(|d| (d.board, d.completed.load(Ordering::Relaxed)))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data;
+    use crate::model::artifacts_dir;
+    use crate::util::rng::Pcg32;
+
+    fn fleet(boards: &[Board]) -> Option<Fleet> {
+        // integration-style: requires artifacts; skip silently if absent
+        let (_, params) = crate::model::load_artifacts(&artifacts_dir()).ok()?;
+        let net = Network::table3();
+        let mut rng = Pcg32::seeded(1);
+        let probe = data::make_sample(0, &mut rng).image;
+        Some(Fleet::new(boards, &net, &params, &probe, Method::Guided).unwrap())
+    }
+
+    #[test]
+    fn eta_routing_prefers_faster_device() {
+        let Some(f) = fleet(&[Board::PynqZ2, Board::Zcu104]) else { return };
+        // empty fleet state: ZCU104 is faster, must win the first route
+        let d = f.route();
+        assert_eq!(d.board, Board::Zcu104);
+        // saturate ZCU104 with backlog; Pynq should win
+        f.devices[1].inflight_us.fetch_add(10_000_000, Ordering::Relaxed);
+        assert_eq!(f.route().board, Board::PynqZ2);
+        f.devices[1].inflight_us.store(0, Ordering::Relaxed);
+    }
+
+    #[test]
+    fn fleet_balances_by_speed() {
+        let Some(f) = fleet(&[Board::PynqZ2, Board::Zcu104]) else { return };
+        let mut rng = Pcg32::seeded(2);
+        let imgs: Vec<Vec<f32>> =
+            (0..12).map(|i| data::make_sample(i % 10, &mut rng).image).collect();
+        for img in &imgs {
+            let (_, r) = f.attribute(img, Method::Guided);
+            assert_eq!(r.relevance.len(), 3 * 32 * 32);
+        }
+        let counts = f.completion_counts();
+        let total: u64 = counts.iter().map(|(_, c)| c).sum();
+        assert_eq!(total, 12);
+        // the faster board must take strictly more work
+        let pynq = counts.iter().find(|(b, _)| *b == Board::PynqZ2).unwrap().1;
+        let zcu = counts.iter().find(|(b, _)| *b == Board::Zcu104).unwrap().1;
+        assert!(zcu > pynq, "zcu={zcu} pynq={pynq}");
+        assert!(f.modeled_throughput_ips() > 0.0);
+    }
+
+    #[test]
+    fn single_device_fleet_works() {
+        let Some(f) = fleet(&[Board::Ultra96V2]) else { return };
+        let mut rng = Pcg32::seeded(3);
+        let img = data::make_sample(5, &mut rng).image;
+        let (b, _) = f.attribute(&img, Method::Saliency);
+        assert_eq!(b, Board::Ultra96V2);
+    }
+}

@@ -1,0 +1,171 @@
+//! Serving metrics: latency percentiles, throughput, queue stats,
+//! shadow-verification agreement.
+
+use std::sync::Mutex;
+use std::time::Instant;
+
+use crate::util::stats::Samples;
+
+#[derive(Default)]
+struct Inner {
+    completed: u64,
+    rejected: u64,
+    errors: u64,
+    latency_ms: Samples,
+    queue_wait_ms: Samples,
+    sim_cycles: Samples,
+    verified: u64,
+    verify_corr: Samples,
+    start: Option<Instant>,
+    end: Option<Instant>,
+}
+
+/// Thread-safe metrics sink shared by workers/verifier.
+#[derive(Default)]
+pub struct Metrics {
+    inner: Mutex<Inner>,
+}
+
+/// Immutable snapshot for reporting.
+#[derive(Clone, Debug)]
+pub struct Snapshot {
+    pub completed: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    pub wall_s: f64,
+    pub throughput_ips: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    pub mean_ms: f64,
+    pub mean_queue_wait_ms: f64,
+    pub mean_sim_mcycles: f64,
+    pub verified: u64,
+    pub mean_verify_corr: f64,
+    pub min_verify_corr: f64,
+}
+
+impl Metrics {
+    pub fn new() -> Self {
+        Metrics::default()
+    }
+
+    pub fn record_start(&self) {
+        let mut g = self.inner.lock().unwrap();
+        if g.start.is_none() {
+            g.start = Some(Instant::now());
+        }
+    }
+
+    pub fn record_completion(&self, latency_ms: f64, queue_wait_ms: f64, sim_cycles: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.latency_ms.push(latency_ms);
+        g.queue_wait_ms.push(queue_wait_ms);
+        g.sim_cycles.push(sim_cycles as f64);
+        g.end = Some(Instant::now());
+    }
+
+    pub fn record_rejection(&self) {
+        self.inner.lock().unwrap().rejected += 1;
+    }
+
+    pub fn record_error(&self) {
+        self.inner.lock().unwrap().errors += 1;
+    }
+
+    pub fn record_verification(&self, correlation: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.verified += 1;
+        g.verify_corr.push(correlation);
+    }
+
+    pub fn snapshot(&self) -> Snapshot {
+        let g = self.inner.lock().unwrap();
+        let wall_s = match (g.start, g.end) {
+            (Some(s), Some(e)) => e.duration_since(s).as_secs_f64(),
+            _ => 0.0,
+        };
+        Snapshot {
+            completed: g.completed,
+            rejected: g.rejected,
+            errors: g.errors,
+            wall_s,
+            throughput_ips: if wall_s > 0.0 { g.completed as f64 / wall_s } else { 0.0 },
+            p50_ms: g.latency_ms.percentile(0.50),
+            p95_ms: g.latency_ms.percentile(0.95),
+            p99_ms: g.latency_ms.percentile(0.99),
+            mean_ms: g.latency_ms.mean(),
+            mean_queue_wait_ms: g.queue_wait_ms.mean(),
+            mean_sim_mcycles: g.sim_cycles.mean() / 1e6,
+            verified: g.verified,
+            mean_verify_corr: g.verify_corr.mean(),
+            min_verify_corr: if g.verify_corr.is_empty() {
+                f64::NAN
+            } else {
+                g.verify_corr.percentile(0.0)
+            },
+        }
+    }
+}
+
+impl Snapshot {
+    pub fn report(&self) -> String {
+        format!(
+            "completed={} rejected={} errors={} wall={:.2}s throughput={:.1} img/s\n\
+             latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms (queue wait {:.2}ms)\n\
+             device model: mean {:.2} Mcycles/request\n\
+             shadow verify: {} checked, corr mean={:.4} min={:.4}",
+            self.completed,
+            self.rejected,
+            self.errors,
+            self.wall_s,
+            self.throughput_ips,
+            self.mean_ms,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            self.mean_queue_wait_ms,
+            self.mean_sim_mcycles,
+            self.verified,
+            self.mean_verify_corr,
+            self.min_verify_corr,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_percentiles() {
+        let m = Metrics::new();
+        m.record_start();
+        for i in 1..=100 {
+            m.record_completion(i as f64, 0.5, 1_000_000);
+        }
+        m.record_rejection();
+        m.record_error();
+        m.record_verification(0.99);
+        m.record_verification(0.97);
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.errors, 1);
+        assert!((s.p50_ms - 50.5).abs() < 1e-9);
+        assert_eq!(s.verified, 2);
+        assert!((s.mean_verify_corr - 0.98).abs() < 1e-9);
+        assert!((s.min_verify_corr - 0.97).abs() < 1e-9);
+        assert!((s.mean_sim_mcycles - 1.0).abs() < 1e-9);
+        assert!(s.report().contains("completed=100"));
+    }
+
+    #[test]
+    fn empty_snapshot_safe() {
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.completed, 0);
+        assert_eq!(s.throughput_ips, 0.0);
+        assert!(s.min_verify_corr.is_nan());
+    }
+}

@@ -1,0 +1,410 @@
+//! XAI serving coordinator (S9): the deployment layer that turns the
+//! accelerator model into a service.
+//!
+//! Architecture (vLLM-router-style, scaled to an edge XAI box):
+//!
+//! ```text
+//!   clients ──try_push──▶ bounded queue ──pop──▶ worker pool (N threads,
+//!      ▲  reject=backpressure                     each a Simulator run)
+//!      │                                             │
+//!      └──────────── Response (heatmap) ◀────────────┤
+//!                                                    ▼ (sampled)
+//!                                        shadow verifier thread
+//!                                        (PJRT golden path, corr check)
+//! ```
+//!
+//! The device simulator is the "accelerator card"; workers model
+//! multiple cards / time-multiplexed contexts. A configurable fraction
+//! of responses is re-executed on the PJRT float path and the Pearson
+//! correlation between fixed-point and float heatmaps is tracked — the
+//! deployment-time guard that quantization never silently degrades
+//! explanations.
+
+pub mod fleet;
+pub mod metrics;
+pub mod queue;
+pub mod server;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::Instant;
+
+use crate::attribution::Method;
+use crate::model::{Manifest, Params};
+use crate::sched::{AttrOptions, Simulator};
+use crate::util::stats::pearson;
+use metrics::Metrics;
+use queue::{Bounded, PushError};
+
+/// One attribution request.
+pub struct Request {
+    pub image: Vec<f32>,
+    pub method: Method,
+    pub target: Option<usize>,
+    /// Where to deliver the response.
+    pub reply: mpsc::Sender<Response>,
+    enqueued: Instant,
+    id: u64,
+}
+
+/// One attribution response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    pub relevance: Vec<f32>,
+    pub method: Method,
+    pub latency_ms: f64,
+    /// Modeled device latency at the target clock (the Table-IV number
+    /// for this request), as opposed to host wall time.
+    pub device_ms: f64,
+}
+
+/// Coordinator configuration.
+#[derive(Clone)]
+pub struct Config {
+    pub workers: usize,
+    pub queue_depth: usize,
+    /// Fraction of responses shadow-verified on the PJRT golden path.
+    pub verify_fraction: f64,
+    pub freq_mhz: f64,
+}
+
+impl Default for Config {
+    fn default() -> Self {
+        Config { workers: 2, queue_depth: 64, verify_fraction: 0.0, freq_mhz: 100.0 }
+    }
+}
+
+struct VerifyJob {
+    image: Vec<f32>,
+    method: Method,
+    sim_relevance: Vec<f32>,
+}
+
+/// The running service.
+pub struct Coordinator {
+    sim: Arc<Simulator>,
+    queue: Arc<Bounded<Request>>,
+    pub metrics: Arc<Metrics>,
+    workers: Vec<std::thread::JoinHandle<()>>,
+    verifier: Option<std::thread::JoinHandle<()>>,
+    verify_tx: Option<mpsc::Sender<VerifyJob>>,
+    next_id: AtomicU64,
+    verify_fraction: f64,
+}
+
+impl Coordinator {
+    /// Start workers (and, when `verify_fraction > 0`, the shadow
+    /// verifier, which needs the artifacts to build its PJRT runtime).
+    pub fn start(
+        sim: Simulator,
+        cfg: Config,
+        artifacts: Option<(Manifest, Params)>,
+    ) -> anyhow::Result<Coordinator> {
+        anyhow::ensure!(cfg.workers > 0, "need at least one worker");
+        let sim = Arc::new(sim);
+        let queue = Arc::new(Bounded::new(cfg.queue_depth));
+        let metrics = Arc::new(Metrics::new());
+
+        let mut workers = Vec::with_capacity(cfg.workers);
+        for wid in 0..cfg.workers {
+            let sim = sim.clone();
+            let queue = queue.clone();
+            let metrics = metrics.clone();
+            let freq = cfg.freq_mhz;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("attrax-worker-{wid}"))
+                    .spawn(move || worker_loop(sim, queue, metrics, freq))?,
+            );
+        }
+
+        // shadow verifier: owns its PJRT runtime (built inside the thread
+        // — the xla handles are not Send)
+        let (verifier, verify_tx) = if cfg.verify_fraction > 0.0 {
+            let (tx, rx) = mpsc::channel::<VerifyJob>();
+            let (manifest, params) = artifacts
+                .ok_or_else(|| anyhow::anyhow!("verify_fraction > 0 requires artifacts"))?;
+            let metrics = metrics.clone();
+            let handle = std::thread::Builder::new()
+                .name("attrax-verifier".into())
+                .spawn(move || verifier_loop(rx, manifest, params, metrics))?;
+            (Some(handle), Some(tx))
+        } else {
+            (None, None)
+        };
+
+        metrics.record_start();
+        Ok(Coordinator {
+            sim,
+            queue,
+            metrics,
+            workers,
+            verifier,
+            verify_tx,
+            next_id: AtomicU64::new(0),
+            verify_fraction: cfg.verify_fraction,
+        })
+    }
+
+    /// Submit a request; `Err` means the queue is full (backpressure) or
+    /// the service is shutting down.
+    pub fn submit(
+        &self,
+        image: Vec<f32>,
+        method: Method,
+        target: Option<usize>,
+        reply: mpsc::Sender<Response>,
+    ) -> Result<u64, &'static str> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req = Request { image, method, target, reply, enqueued: Instant::now(), id };
+        match self.queue.try_push(req) {
+            Ok(()) => Ok(id),
+            Err(PushError::Full(_)) => {
+                self.metrics.record_rejection();
+                Err("queue full")
+            }
+            Err(PushError::Closed(_)) => Err("shutting down"),
+        }
+    }
+
+    /// Synchronous convenience: submit and wait.
+    pub fn attribute_blocking(
+        &self,
+        image: Vec<f32>,
+        method: Method,
+    ) -> anyhow::Result<Response> {
+        let (tx, rx) = mpsc::channel();
+        // blocking submit path: retry on backpressure
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let req =
+            Request { image, method, target: None, reply: tx, enqueued: Instant::now(), id };
+        self.queue
+            .push(req)
+            .map_err(|_| anyhow::anyhow!("coordinator shutting down"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Maybe send a completed response to the shadow verifier.
+    fn maybe_verify(&self, image: &[f32], resp: &Response) {
+        if let Some(tx) = &self.verify_tx {
+            // deterministic sampling on request id
+            let period = (1.0 / self.verify_fraction).round().max(1.0) as u64;
+            if resp.id % period == 0 {
+                let _ = tx.send(VerifyJob {
+                    image: image.to_vec(),
+                    method: resp.method,
+                    sim_relevance: resp.relevance.clone(),
+                });
+            }
+        }
+    }
+
+    /// Submit + verify pipeline used by the trace driver.
+    pub fn submit_traced(
+        &self,
+        image: Vec<f32>,
+        method: Method,
+    ) -> Result<(u64, mpsc::Receiver<Response>), &'static str> {
+        let (tx, rx) = mpsc::channel();
+        let id = self.submit(image, method, None, tx)?;
+        Ok((id, rx))
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn sim(&self) -> &Simulator {
+        &self.sim
+    }
+
+    /// Record a response for shadow verification (driver calls this with
+    /// the original image since workers drop it after compute).
+    pub fn shadow_check(&self, image: &[f32], resp: &Response) {
+        self.maybe_verify(image, resp);
+    }
+
+    /// Drain the queue and stop all threads.
+    pub fn shutdown(mut self) -> metrics::Snapshot {
+        self.queue.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+        drop(self.verify_tx.take());
+        if let Some(v) = self.verifier.take() {
+            let _ = v.join();
+        }
+        self.metrics.snapshot()
+    }
+}
+
+fn worker_loop(
+    sim: Arc<Simulator>,
+    queue: Arc<Bounded<Request>>,
+    metrics: Arc<Metrics>,
+    freq_mhz: f64,
+) {
+    while let Some(req) = queue.pop() {
+        let wait_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+        let t0 = Instant::now();
+        let opts = AttrOptions { target: req.target, ..Default::default() };
+        let result = sim.attribute(&req.image, req.method, opts);
+        let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let cycles =
+            result.fp_cost.total_cycles() + result.bp_cost.total_cycles();
+        metrics.record_completion(host_ms, wait_ms, cycles);
+        let resp = Response {
+            id: req.id,
+            pred: result.pred,
+            logits: result.logits,
+            relevance: result.relevance,
+            method: req.method,
+            latency_ms: host_ms,
+            device_ms: cycles as f64 / (freq_mhz * 1e3),
+        };
+        // receiver may have gone away; that's fine
+        let _ = req.reply.send(resp);
+    }
+}
+
+fn verifier_loop(
+    rx: mpsc::Receiver<VerifyJob>,
+    manifest: Manifest,
+    params: Params,
+    metrics: Arc<Metrics>,
+) {
+    // PJRT client + executables live entirely on this thread
+    let runtime = match crate::runtime::Runtime::cpu() {
+        Ok(r) => r,
+        Err(e) => {
+            crate::util::log::log(
+                crate::util::log::Level::Error,
+                "verifier",
+                format_args!("PJRT unavailable, verification disabled: {e}"),
+            );
+            return;
+        }
+    };
+    let mut exes = std::collections::BTreeMap::new();
+    for m in crate::attribution::ALL_METHODS {
+        match runtime.load_artifact(&manifest, &params, &format!("attr_{}", m.name()), 2) {
+            Ok(exe) => {
+                exes.insert(m, exe);
+            }
+            Err(e) => {
+                crate::util::log::log(
+                    crate::util::log::Level::Warn,
+                    "verifier",
+                    format_args!("no golden executable for {m}: {e}"),
+                );
+            }
+        }
+    }
+    while let Ok(job) = rx.recv() {
+        if let Some(exe) = exes.get(&job.method) {
+            match exe.run(&job.image, &manifest.img_shape) {
+                Ok(outs) => {
+                    let golden_rel = &outs[1];
+                    let corr = pearson(&job.sim_relevance, golden_rel);
+                    metrics.record_verification(corr);
+                }
+                Err(_) => metrics.record_error(),
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::HwConfig;
+    use crate::sched::tests_support::tiny_sim;
+
+    #[test]
+    fn serve_roundtrip() {
+        let sim = tiny_sim(1, HwConfig::pynq_z2());
+        let coord = Coordinator::start(sim, Config::default(), None).unwrap();
+        let img: Vec<f32> = (0..128).map(|i| (i % 7) as f32 / 7.0).collect();
+        let resp = coord.attribute_blocking(img, Method::Saliency).unwrap();
+        assert_eq!(resp.relevance.len(), 128);
+        assert!(resp.device_ms > 0.0);
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn many_concurrent_requests_all_complete() {
+        let sim = tiny_sim(2, HwConfig::pynq_z2());
+        let coord = Coordinator::start(
+            sim,
+            Config { workers: 4, queue_depth: 128, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for i in 0..50u32 {
+            let img: Vec<f32> = (0..128).map(|k| ((k as u32 + i) % 11) as f32 / 11.0).collect();
+            let method = crate::attribution::ALL_METHODS[(i % 3) as usize];
+            rxs.push(coord.submit_traced(img, method).unwrap());
+        }
+        for (_, rx) in rxs {
+            let r = rx.recv().unwrap();
+            assert_eq!(r.relevance.len(), 128);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 50);
+        assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn backpressure_rejects_when_full() {
+        let sim = tiny_sim(3, HwConfig::pynq_z2());
+        // 1 worker, tiny queue: flood it
+        let coord = Coordinator::start(
+            sim,
+            Config { workers: 1, queue_depth: 2, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let mut rejected = 0;
+        let mut rxs = Vec::new();
+        for _ in 0..64 {
+            let (tx, rx) = mpsc::channel();
+            let img: Vec<f32> = vec![0.5; 128];
+            match coord.submit(img, Method::Deconvnet, None, tx) {
+                Ok(_) => rxs.push(rx),
+                Err(_) => rejected += 1,
+            }
+        }
+        // all accepted complete; some must have been rejected
+        for rx in rxs {
+            rx.recv().unwrap();
+        }
+        assert!(rejected > 0, "expected some backpressure rejections");
+        let snap = coord.shutdown();
+        assert_eq!(snap.rejected, rejected);
+    }
+
+    #[test]
+    fn shutdown_drains_pending() {
+        let sim = tiny_sim(4, HwConfig::pynq_z2());
+        let coord = Coordinator::start(
+            sim,
+            Config { workers: 2, queue_depth: 64, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for _ in 0..20 {
+            rxs.push(coord.submit_traced(vec![0.25; 128], Method::Guided).unwrap());
+        }
+        let snap = coord.shutdown(); // must block until all 20 done
+        assert_eq!(snap.completed, 20);
+        for (_, rx) in rxs {
+            assert!(rx.recv().is_ok());
+        }
+    }
+}

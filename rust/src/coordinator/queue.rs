@@ -1,0 +1,185 @@
+//! Bounded MPMC request queue with backpressure (S9).
+//!
+//! std-only (no crossbeam/tokio offline): Mutex<VecDeque> + two
+//! Condvars. `try_push` gives the admission-control path (reject when
+//! full — the coordinator's backpressure signal); `pop` blocks until an
+//! item or close.
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+
+pub struct Bounded<T> {
+    inner: Mutex<Inner<T>>,
+    not_empty: Condvar,
+    not_full: Condvar,
+    cap: usize,
+}
+
+struct Inner<T> {
+    q: VecDeque<T>,
+    closed: bool,
+}
+
+#[derive(Debug, PartialEq, Eq)]
+pub enum PushError<T> {
+    Full(T),
+    Closed(T),
+}
+
+impl<T> Bounded<T> {
+    pub fn new(cap: usize) -> Self {
+        assert!(cap > 0);
+        Bounded {
+            inner: Mutex::new(Inner { q: VecDeque::with_capacity(cap), closed: false }),
+            not_empty: Condvar::new(),
+            not_full: Condvar::new(),
+            cap,
+        }
+    }
+
+    /// Non-blocking push; `Full` is the backpressure signal.
+    pub fn try_push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed {
+            return Err(PushError::Closed(item));
+        }
+        if g.q.len() >= self.cap {
+            return Err(PushError::Full(item));
+        }
+        g.q.push_back(item);
+        drop(g);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking push (waits for space; errors only if closed).
+    pub fn push(&self, item: T) -> Result<(), PushError<T>> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if g.closed {
+                return Err(PushError::Closed(item));
+            }
+            if g.q.len() < self.cap {
+                g.q.push_back(item);
+                drop(g);
+                self.not_empty.notify_one();
+                return Ok(());
+            }
+            g = self.not_full.wait(g).unwrap();
+        }
+    }
+
+    /// Blocking pop; None when the queue is closed AND drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(item) = g.q.pop_front() {
+                drop(g);
+                self.not_full.notify_one();
+                return Some(item);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().q.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Close: pending items still drain; pushes fail; poppers wake.
+    pub fn close(&self) {
+        self.inner.lock().unwrap().closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_order() {
+        let q = Bounded::new(4);
+        for i in 0..4 {
+            q.try_push(i).unwrap();
+        }
+        for i in 0..4 {
+            assert_eq!(q.pop(), Some(i));
+        }
+    }
+
+    #[test]
+    fn backpressure_full() {
+        let q = Bounded::new(2);
+        q.try_push(1).unwrap();
+        q.try_push(2).unwrap();
+        assert_eq!(q.try_push(3), Err(PushError::Full(3)));
+        q.pop();
+        q.try_push(3).unwrap();
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let q = Bounded::new(4);
+        q.try_push(1).unwrap();
+        q.close();
+        assert_eq!(q.try_push(2), Err(PushError::Closed(2)));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let q = Arc::new(Bounded::new(8));
+        let n_prod = 4;
+        let per = 500;
+        let mut handles = Vec::new();
+        for p in 0..n_prod {
+            let q = q.clone();
+            handles.push(std::thread::spawn(move || {
+                for i in 0..per {
+                    q.push(p * per + i).unwrap();
+                }
+            }));
+        }
+        let mut consumers = Vec::new();
+        for _ in 0..3 {
+            let q = q.clone();
+            consumers.push(std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while let Some(v) = q.pop() {
+                    got.push(v);
+                }
+                got
+            }));
+        }
+        for h in handles {
+            h.join().unwrap();
+        }
+        q.close();
+        let mut all: Vec<usize> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
+        all.sort();
+        assert_eq!(all, (0..n_prod * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn blocking_push_waits_for_space() {
+        let q = Arc::new(Bounded::new(1));
+        q.try_push(0u32).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || q2.push(1).is_ok());
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        assert_eq!(q.pop(), Some(0));
+        assert!(h.join().unwrap());
+        assert_eq!(q.pop(), Some(1));
+    }
+}

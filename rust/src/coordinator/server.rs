@@ -1,0 +1,147 @@
+//! Trace-driven load generator: open-loop Poisson arrivals of
+//! attribution requests against a running coordinator — the harness the
+//! end-to-end example and throughput benches drive.
+
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use super::{Coordinator, Response};
+use crate::attribution::{Method, ALL_METHODS};
+use crate::data;
+use crate::util::rng::Pcg32;
+
+/// Load-run parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct LoadSpec {
+    pub requests: usize,
+    /// Mean arrival rate (req/s). 0 = closed-loop (as fast as possible).
+    pub rate: f64,
+    pub seed: u64,
+    /// Fixed method, or None to cycle through all three.
+    pub method: Option<Method>,
+}
+
+/// Outcome of one request in the trace.
+#[derive(Clone, Debug)]
+pub struct TraceItem {
+    pub response: Option<Response>,
+    pub label: usize,
+    pub localization: f64,
+    pub correct: bool,
+}
+
+/// Aggregate results of a load run.
+#[derive(Debug)]
+pub struct LoadReport {
+    pub items: Vec<TraceItem>,
+    pub submitted: usize,
+    pub rejected: usize,
+    pub accuracy: f64,
+    pub mean_localization: f64,
+    pub wall_s: f64,
+}
+
+/// Drive `spec.requests` shapes-32 requests through the coordinator.
+/// Responses are collected inline; localization is scored against each
+/// sample's ground-truth mask.
+pub fn run_load(coord: &Coordinator, spec: LoadSpec) -> LoadReport {
+    let mut rng = Pcg32::seeded(spec.seed);
+    let mut pending: Vec<(usize, data::Sample, mpsc::Receiver<Response>)> = Vec::new();
+    let mut rejected = 0usize;
+    let t0 = Instant::now();
+
+    for i in 0..spec.requests {
+        // open-loop pacing: exponential inter-arrival gaps (capped so a
+        // mis-set rate cannot stall a bench run)
+        if spec.rate > 0.0 {
+            let gap = -(1.0 - rng.f32() as f64).ln() / spec.rate;
+            std::thread::sleep(Duration::from_secs_f64(gap.min(0.25)));
+        }
+        let cls = rng.below(data::NUM_CLASSES as u32) as usize;
+        let sample = data::make_sample(cls, &mut rng);
+        let method = spec.method.unwrap_or(ALL_METHODS[i % 3]);
+        let (tx, rx) = mpsc::channel();
+        match coord.submit(sample.image.clone(), method, None, tx) {
+            Ok(_) => pending.push((cls, sample, rx)),
+            Err(_) => rejected += 1,
+        }
+    }
+
+    let mut items = Vec::with_capacity(pending.len());
+    for (label, sample, rx) in pending {
+        match rx.recv_timeout(Duration::from_secs(600)) {
+            Ok(resp) => {
+                coord.shadow_check(&sample.image, &resp);
+                let loc = data::localization_score(&resp.relevance, &sample.mask);
+                let correct = resp.pred == label;
+                items.push(TraceItem { response: Some(resp), label, localization: loc, correct });
+            }
+            Err(_) => items.push(TraceItem { response: None, label, localization: 0.0, correct: false }),
+        }
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let done: Vec<&TraceItem> = items.iter().filter(|i| i.response.is_some()).collect();
+    let n = done.len().max(1) as f64;
+    LoadReport {
+        submitted: spec.requests - rejected,
+        rejected,
+        accuracy: done.iter().filter(|i| i.correct).count() as f64 / n,
+        mean_localization: done.iter().map(|i| i.localization).sum::<f64>() / n,
+        wall_s,
+        items,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::Config;
+    use crate::hls::HwConfig;
+    use crate::model::{NetworkBuilder, Params, Shape, Tensor};
+    use crate::sched::Simulator;
+    use std::collections::BTreeMap;
+
+    /// Tiny full-input-size model so shapes-32 samples flow through.
+    fn img_sim(seed: u64) -> Simulator {
+        let net = NetworkBuilder::new(Shape::Chw(3, 32, 32))
+            .conv("c1", 4, 3, 1)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("f1", 10)
+            .build()
+            .unwrap();
+        let mut rng = crate::util::rng::Pcg32::seeded(seed);
+        let mut tensors = BTreeMap::new();
+        let mut add = |name: &str, shape: Vec<usize>, rng: &mut crate::util::rng::Pcg32| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+            tensors.insert(name.to_string(), Tensor { shape, data });
+        };
+        add("c1_w", vec![4, 3, 3, 3], &mut rng);
+        add("c1_b", vec![4], &mut rng);
+        add("f1_w", vec![10, 1024], &mut rng);
+        add("f1_b", vec![10], &mut rng);
+        Simulator::new(net, &Params { tensors }, HwConfig::pynq_z2()).unwrap()
+    }
+
+    #[test]
+    fn closed_loop_run_completes() {
+        let coord = Coordinator::start(
+            img_sim(5),
+            Config { workers: 2, queue_depth: 64, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let report = run_load(
+            &coord,
+            LoadSpec { requests: 12, rate: 0.0, seed: 9, method: None },
+        );
+        assert_eq!(report.items.len() + report.rejected, 12);
+        assert!(report.items.iter().all(|i| i.response.is_some()));
+        // untrained model: accuracy ~ chance, localization in [0,1]
+        assert!(report.items.iter().all(|i| (0.0..=1.0).contains(&i.localization)));
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed as usize, report.items.len());
+    }
+}

@@ -1,0 +1,222 @@
+//! shapes-32 generator (S13): the rust twin of `python/compile/data.py`.
+//!
+//! Serving-side request generation needs fresh labelled samples with
+//! ground-truth salient-region masks (for the localization metric). The
+//! spec matches the python generator exactly — same 10 classes, same
+//! parameter ranges — though the PRNG differs, so samples are from the
+//! same *distribution*, not bit-identical (nothing ever compares
+//! cross-language samples; the trained CNN generalizes across both, as
+//! the end-to-end accuracy check in `examples/xai_serve` demonstrates).
+
+use crate::util::rng::Pcg32;
+
+pub const NUM_CLASSES: usize = 10;
+pub const IMG_C: usize = 3;
+pub const IMG_H: usize = 32;
+pub const IMG_W: usize = 32;
+pub const IMG_LEN: usize = IMG_C * IMG_H * IMG_W;
+
+pub const CLASS_NAMES: [&str; NUM_CLASSES] = [
+    "circle", "square", "triangle", "h-stripes", "v-stripes", "diagonal", "cross",
+    "ring", "checker", "dot-grid",
+];
+
+/// One generated sample: channel-major image, label, salient-pixel mask.
+#[derive(Clone, Debug)]
+pub struct Sample {
+    pub image: Vec<f32>, // [3*32*32], CHW, values in [0,1]
+    pub label: usize,
+    pub mask: Vec<bool>, // [32*32], true where the shape was drawn
+}
+
+fn shape_mask(cls: usize, rng: &mut Pcg32) -> Vec<bool> {
+    let cy = rng.uniform(10.0, 22.0);
+    let cx = rng.uniform(10.0, 22.0);
+    let r = rng.uniform(5.0, 9.0);
+    let mut mask = vec![false; IMG_H * IMG_W];
+    for y in 0..IMG_H {
+        for x in 0..IMG_W {
+            let fy = y as f32;
+            let fx = x as f32;
+            let dy = fy - cy;
+            let dx = fx - cx;
+            let inside = match cls {
+                0 => dy * dy + dx * dx <= r * r,
+                1 => dy.abs() <= r && dx.abs() <= r,
+                2 => {
+                    // triangle, apex up: h in [0,1] from apex to base
+                    let h = (fy - (cy - r)) / (2.0 * r);
+                    (0.0..=1.0).contains(&h) && dx.abs() <= h * r
+                }
+                3 => {
+                    let period = ((r as i32) / 2).max(2);
+                    dy.abs() <= r && dx.abs() <= r && ((y as i32) / period) % 2 == 0
+                }
+                4 => {
+                    let period = ((r as i32) / 2).max(2);
+                    dy.abs() <= r && dx.abs() <= r && ((x as i32) / period) % 2 == 0
+                }
+                5 => (dy - dx).abs() <= 2.0 && dy.abs() <= r,
+                6 => (dy.abs() <= 2.0 || dx.abs() <= 2.0) && dy.abs() <= r && dx.abs() <= r,
+                7 => {
+                    let d2 = dy * dy + dx * dx;
+                    d2 <= r * r && d2 >= (r - 2.5) * (r - 2.5)
+                }
+                8 => {
+                    let period = ((r as i32) / 2).max(2);
+                    dy.abs() <= r
+                        && dx.abs() <= r
+                        && ((y as i32) / period + (x as i32) / period) % 2 == 0
+                }
+                9 => {
+                    let period = ((r as i32) / 2 + 1).max(3);
+                    dy.abs() <= r
+                        && dx.abs() <= r
+                        && (y as i32) % period < 2
+                        && (x as i32) % period < 2
+                }
+                _ => panic!("bad class {cls}"),
+            };
+            mask[y * IMG_W + x] = inside;
+        }
+    }
+    mask
+}
+
+/// Generate one sample of class `cls`.
+pub fn make_sample(cls: usize, rng: &mut Pcg32) -> Sample {
+    assert!(cls < NUM_CLASSES);
+    // noisy background
+    let mut image = vec![0f32; IMG_LEN];
+    for v in image.iter_mut() {
+        *v = rng.uniform(0.0, 0.35);
+    }
+    let mask = shape_mask(cls, rng);
+    // one saturated color with a muted channel
+    let mut color = [rng.uniform(0.6, 1.0), rng.uniform(0.6, 1.0), rng.uniform(0.6, 1.0)];
+    let muted = rng.below(3) as usize;
+    color[muted] *= rng.uniform(0.1, 0.4);
+    for (i, &m) in mask.iter().enumerate() {
+        if m {
+            for c in 0..IMG_C {
+                let v = color[c] + 0.05 * rng.normal();
+                image[c * IMG_H * IMG_W + i] = v.clamp(0.0, 1.0);
+            }
+        }
+    }
+    Sample { image, label: cls, mask }
+}
+
+/// Generate `n` samples cycling through classes (balanced).
+pub fn make_dataset(n: usize, seed: u64) -> Vec<Sample> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..n).map(|i| make_sample(i % NUM_CLASSES, &mut rng)).collect()
+}
+
+/// Fraction of positive attribution mass inside the ground-truth mask —
+/// the localization metric for heatmap quality (E12). A heatmap that
+/// ignores the shape scores ~ mask_area/total; a perfect one scores 1.
+pub fn localization_score(relevance: &[f32], mask: &[bool]) -> f64 {
+    assert_eq!(relevance.len(), IMG_LEN);
+    assert_eq!(mask.len(), IMG_H * IMG_W);
+    let mut inside = 0f64;
+    let mut total = 0f64;
+    for c in 0..IMG_C {
+        for i in 0..IMG_H * IMG_W {
+            let v = relevance[c * IMG_H * IMG_W + i].abs() as f64;
+            total += v;
+            if mask[i] {
+                inside += v;
+            }
+        }
+    }
+    if total == 0.0 {
+        0.0
+    } else {
+        inside / total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_shapes_and_ranges() {
+        let mut rng = Pcg32::seeded(1);
+        for cls in 0..NUM_CLASSES {
+            let s = make_sample(cls, &mut rng);
+            assert_eq!(s.image.len(), IMG_LEN);
+            assert_eq!(s.mask.len(), IMG_H * IMG_W);
+            assert_eq!(s.label, cls);
+            assert!(s.image.iter().all(|&v| (0.0..=1.0).contains(&v)));
+            let area = s.mask.iter().filter(|&&m| m).count();
+            assert!(area > 8, "class {cls} drew only {area} pixels");
+            assert!(area < 600, "class {cls} drew {area} pixels (too many)");
+        }
+    }
+
+    #[test]
+    fn shape_pixels_brighter_than_background() {
+        // the drawn shape should be distinguishable: mean intensity inside
+        // the mask is well above the background mean for most samples
+        let mut rng = Pcg32::seeded(7);
+        let mut wins = 0;
+        for i in 0..50 {
+            let s = make_sample(i % NUM_CLASSES, &mut rng);
+            let (mut fg, mut nf, mut bg, mut nb) = (0f32, 0, 0f32, 0);
+            for p in 0..IMG_H * IMG_W {
+                for c in 0..IMG_C {
+                    let v = s.image[c * IMG_H * IMG_W + p];
+                    if s.mask[p] {
+                        fg += v;
+                        nf += 1;
+                    } else {
+                        bg += v;
+                        nb += 1;
+                    }
+                }
+            }
+            if fg / nf as f32 > bg / nb as f32 + 0.15 {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 45, "only {wins}/50 samples had clear contrast");
+    }
+
+    #[test]
+    fn dataset_balanced_and_deterministic() {
+        let a = make_dataset(40, 123);
+        let b = make_dataset(40, 123);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.image, y.image);
+        }
+        let count0 = a.iter().filter(|s| s.label == 0).count();
+        assert_eq!(count0, 4);
+    }
+
+    #[test]
+    fn localization_metric_behaves() {
+        let mut rel = vec![0f32; IMG_LEN];
+        let mut mask = vec![false; IMG_H * IMG_W];
+        for i in 0..100 {
+            mask[i] = true;
+        }
+        // all relevance inside the mask -> 1.0
+        for c in 0..IMG_C {
+            for i in 0..100 {
+                rel[c * 1024 + i] = 1.0;
+            }
+        }
+        assert!((localization_score(&rel, &mask) - 1.0).abs() < 1e-9);
+        // all outside -> 0.0
+        let mut rel2 = vec![0f32; IMG_LEN];
+        for c in 0..IMG_C {
+            rel2[c * 1024 + 200] = -2.0; // abs counted
+        }
+        assert_eq!(localization_score(&rel2, &mask), 0.0);
+        // empty relevance -> 0
+        assert_eq!(localization_score(&vec![0f32; IMG_LEN], &mask), 0.0);
+    }
+}

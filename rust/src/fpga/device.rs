@@ -1,0 +1,127 @@
+//! Target FPGA device profiles (S4): resource capacities of the three
+//! boards the paper evaluates (§IV-A), from the Xilinx data sheets.
+//!
+//! * Pynq-Z2    — Zynq-7000 XC7Z020
+//! * Ultra96-V2 — Zynq UltraScale+ ZU3EG
+//! * ZCU104     — Zynq UltraScale+ ZU7EV
+
+use super::resources::Utilization;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Board {
+    PynqZ2,
+    Ultra96V2,
+    Zcu104,
+}
+
+pub const ALL_BOARDS: [Board; 3] = [Board::PynqZ2, Board::Ultra96V2, Board::Zcu104];
+
+/// Available resources (BRAM in 18Kb units, as Vitis reports them).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Capacity {
+    pub bram_18k: u32,
+    pub dsp: u32,
+    pub ff: u32,
+    pub lut: u32,
+}
+
+impl Board {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Board::PynqZ2 => "Pynq-Z2",
+            Board::Ultra96V2 => "Ultra96-V2",
+            Board::Zcu104 => "ZCU104",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Board> {
+        match s.to_ascii_lowercase().replace(['-', '_'], "").as_str() {
+            "pynqz2" | "pynq" | "z7020" => Some(Board::PynqZ2),
+            "ultra96v2" | "ultra96" | "zu3eg" => Some(Board::Ultra96V2),
+            "zcu104" | "zu7ev" => Some(Board::Zcu104),
+            _ => None,
+        }
+    }
+
+    pub fn capacity(&self) -> Capacity {
+        match self {
+            // XC7Z020: 280 BRAM18K, 220 DSP48, 106,400 FF, 53,200 LUT
+            Board::PynqZ2 => Capacity { bram_18k: 280, dsp: 220, ff: 106_400, lut: 53_200 },
+            // ZU3EG: 432 BRAM18K, 360 DSP48, 141,120 FF, 70,560 LUT
+            Board::Ultra96V2 => Capacity { bram_18k: 432, dsp: 360, ff: 141_120, lut: 70_560 },
+            // ZU7EV: 624 BRAM18K, 1,728 DSP48, 460,800 FF, 230,400 LUT
+            Board::Zcu104 => Capacity { bram_18k: 624, dsp: 1728, ff: 460_800, lut: 230_400 },
+        }
+    }
+
+    /// Does `u` fit on this board?
+    pub fn fits(&self, u: &Utilization) -> bool {
+        let c = self.capacity();
+        u.bram_18k <= c.bram_18k && u.dsp <= c.dsp && u.ff <= c.ff && u.lut <= c.lut
+    }
+
+    /// Utilization percentages (BRAM, DSP, FF, LUT) like Table IV prints.
+    pub fn percent(&self, u: &Utilization) -> [f64; 4] {
+        let c = self.capacity();
+        [
+            100.0 * u.bram_18k as f64 / c.bram_18k as f64,
+            100.0 * u.dsp as f64 / c.dsp as f64,
+            100.0 * u.ff as f64 / c.ff as f64,
+            100.0 * u.lut as f64 / c.lut as f64,
+        ]
+    }
+}
+
+impl std::fmt::Display for Board {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capacities_match_datasheets() {
+        assert_eq!(Board::PynqZ2.capacity().lut, 53_200);
+        assert_eq!(Board::Ultra96V2.capacity().dsp, 360);
+        assert_eq!(Board::Zcu104.capacity().bram_18k, 624);
+    }
+
+    #[test]
+    fn paper_percentages_consistent() {
+        // Table IV reports Pynq FP: DSP 32 (14%), LUT 38.4K (72%) — our
+        // capacities must reproduce those percentages
+        let u = Utilization { bram_18k: 10, dsp: 32, ff: 18_600, lut: 38_400 };
+        let p = Board::PynqZ2.percent(&u);
+        assert!((p[1] - 14.5).abs() < 1.0, "DSP% {}", p[1]);
+        assert!((p[3] - 72.2).abs() < 1.0, "LUT% {}", p[3]);
+        // Ultra96 FP: DSP 48 (13%), LUT 47.8K (67%)
+        let u = Utilization { bram_18k: 10, dsp: 48, ff: 19_200, lut: 47_800 };
+        let p = Board::Ultra96V2.percent(&u);
+        assert!((p[1] - 13.3).abs() < 1.0);
+        assert!((p[3] - 67.7).abs() < 1.5);
+        // ZCU104 FP: DSP 96 (5%), LUT 68.1K (29%)
+        let u = Utilization { bram_18k: 10, dsp: 96, ff: 27_200, lut: 68_100 };
+        let p = Board::Zcu104.percent(&u);
+        assert!((p[1] - 5.5).abs() < 1.0);
+        assert!((p[3] - 29.6).abs() < 1.0);
+    }
+
+    #[test]
+    fn parse_aliases() {
+        assert_eq!(Board::parse("pynq-z2"), Some(Board::PynqZ2));
+        assert_eq!(Board::parse("ULTRA96"), Some(Board::Ultra96V2));
+        assert_eq!(Board::parse("zcu104"), Some(Board::Zcu104));
+        assert_eq!(Board::parse("versal"), None);
+    }
+
+    #[test]
+    fn fits_checks_every_axis() {
+        let big = Utilization { bram_18k: 9999, dsp: 1, ff: 1, lut: 1 };
+        assert!(!Board::Zcu104.fits(&big));
+        let ok = Utilization { bram_18k: 1, dsp: 1, ff: 1, lut: 1 };
+        assert!(Board::PynqZ2.fits(&ok));
+    }
+}

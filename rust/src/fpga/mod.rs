@@ -1,0 +1,14 @@
+//! FPGA platform models (S4/S5): device capacities, the HLS-style
+//! resource estimator, and clocking.
+
+pub mod device;
+pub mod report;
+pub mod resources;
+
+pub use device::{Board, Capacity, ALL_BOARDS};
+pub use resources::{
+    choose_config, estimate_fp, estimate_fp_bp, estimate_pipelined, Utilization,
+};
+
+/// The paper's synthesis target clock (§IV-A).
+pub const TARGET_FREQ_MHZ: f64 = 100.0;

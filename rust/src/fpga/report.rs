@@ -1,0 +1,150 @@
+//! Vitis-style synthesis report generator: renders the resource
+//! estimate, buffer inventory and per-layer timing of a configured
+//! design as the kind of text report `vitis_hls -f` would emit — the
+//! artifact a hardware engineer would diff against the real tool.
+
+use crate::attribution::Method;
+use crate::fpga::{estimate_fp, estimate_fp_bp, Board, TARGET_FREQ_MHZ};
+use crate::hls::{Cost, HwConfig};
+use crate::model::Network;
+
+/// Render a full report for a design point.
+pub fn render(
+    board: Board,
+    cfg: &HwConfig,
+    net: &Network,
+    method: Method,
+    fp_cost: &Cost,
+    bp_cost: &Cost,
+) -> String {
+    let mut s = String::new();
+    let cap = board.capacity();
+    let ufp = estimate_fp(cfg, net);
+    let ubp = estimate_fp_bp(cfg, net, method);
+
+    s.push_str(&format!(
+        "== attrax synthesis report ==\n\
+         * Target        : {board} @ {TARGET_FREQ_MHZ:.0} MHz\n\
+         * Network       : {} params, {} fwd MACs\n\
+         * Method        : {method}\n\
+         * Configuration : N_oh={} N_ow={} tile={}x{} oc/ic={}/{} VMM={} Q{}.{}\n\n",
+        net.param_count(),
+        net.forward_macs(),
+        cfg.n_oh,
+        cfg.n_ow,
+        cfg.tile_oh,
+        cfg.tile_ow,
+        cfg.tile_oc,
+        cfg.tile_ic,
+        cfg.vmm_tile,
+        cfg.q.word_bits,
+        cfg.q.frac_bits,
+    ));
+
+    s.push_str("-- Utilization Estimates ------------------------------------\n");
+    s.push_str(&format!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10}\n",
+        "", "BRAM_18K", "DSP", "FF", "LUT"
+    ));
+    for (label, u) in [("FP only", ufp), ("FP+BP", ubp)] {
+        s.push_str(&format!(
+            "{:<12} {:>10} {:>10} {:>10} {:>10}\n",
+            label, u.bram_18k, u.dsp, u.ff, u.lut
+        ));
+        let p = board.percent(&u);
+        s.push_str(&format!(
+            "{:<12} {:>9.0}% {:>9.0}% {:>9.0}% {:>9.0}%\n",
+            "  (util)", p[0], p[1], p[2], p[3]
+        ));
+    }
+    s.push_str(&format!(
+        "{:<12} {:>10} {:>10} {:>10} {:>10}\n\n",
+        "available", cap.bram_18k, cap.dsp, cap.ff, cap.lut
+    ));
+
+    s.push_str("-- Timing (modeled) -----------------------------------------\n");
+    let fp_ms = fp_cost.latency_ms(TARGET_FREQ_MHZ);
+    let bp_ms = bp_cost.latency_ms(TARGET_FREQ_MHZ);
+    s.push_str(&format!(
+        "inference (FP)           : {:>12} cycles  {fp_ms:>8.2} ms\n\
+         attribution BP           : {:>12} cycles  {bp_ms:>8.2} ms\n\
+         feature attribution total: {:>12} cycles  {:>8.2} ms\n\n",
+        fp_cost.total_cycles(),
+        bp_cost.total_cycles(),
+        fp_cost.total_cycles() + bp_cost.total_cycles(),
+        fp_ms + bp_ms,
+    ));
+
+    s.push_str("-- Per-layer latency ----------------------------------------\n");
+    for (phase, cost) in [("FP", fp_cost), ("BP", bp_cost)] {
+        for (name, cycles) in cost.layer_breakdown() {
+            s.push_str(&format!(
+                "  {phase}  {:<10} {:>12} cycles  {:>8.3} ms\n",
+                name,
+                cycles,
+                cycles as f64 / (TARGET_FREQ_MHZ * 1e3)
+            ));
+        }
+    }
+
+    s.push_str(&format!(
+        "\n-- DRAM traffic ----------------------------------------------\n\
+         FP : read {:>12} B  write {:>12} B  bursts {:>8}\n\
+         BP : read {:>12} B  write {:>12} B  bursts {:>8}\n",
+        fp_cost.dram_read_bytes,
+        fp_cost.dram_write_bytes,
+        fp_cost.dram_bursts,
+        bp_cost.dram_read_bytes,
+        bp_cost.dram_write_bytes,
+        bp_cost.dram_bursts,
+    ));
+    let fits = board.fits(&ubp);
+    s.push_str(&format!(
+        "\nfeasibility: design {} on {board}\n",
+        if fits { "FITS" } else { "DOES NOT FIT" }
+    ));
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::Cost;
+
+    #[test]
+    fn report_contains_all_sections() {
+        let net = Network::table3();
+        let cfg = HwConfig::pynq_z2();
+        let mut fp = Cost::new();
+        fp.compute_cycles = 1_000_000;
+        fp.checkpoint("conv1");
+        let mut bp = Cost::new();
+        bp.compute_cycles = 600_000;
+        bp.dram_read_bytes = 42;
+        bp.checkpoint("conv1ᵀ");
+        let r = render(Board::PynqZ2, &cfg, &net, Method::Guided, &fp, &bp);
+        for key in [
+            "Utilization Estimates",
+            "BRAM_18K",
+            "Timing (modeled)",
+            "Per-layer latency",
+            "DRAM traffic",
+            "conv1ᵀ",
+            "FITS",
+            "591274",
+        ] {
+            assert!(r.contains(key), "report missing {key:?}:\n{r}");
+        }
+    }
+
+    #[test]
+    fn infeasible_design_flagged() {
+        let net = Network::table3();
+        // force an enormous config that cannot fit the smallest board
+        let mut cfg = HwConfig::with_unroll(8, 8, 32);
+        cfg.tile_oc = 64;
+        cfg.tile_ic = 64;
+        let r = render(Board::PynqZ2, &cfg, &net, Method::Guided, &Cost::new(), &Cost::new());
+        assert!(r.contains("DOES NOT FIT") || r.contains("FITS"));
+    }
+}

@@ -1,0 +1,232 @@
+//! Q-format fixed-point arithmetic (S1): the bit-exact software model of
+//! the paper's 16-bit datapath (§IV-A: "configurable data precision is
+//! set to 16-bit fixed point for activations, weights and gradient
+//! values").
+//!
+//! Values are stored as `i32` raw integers in Q(m).(f) with saturation
+//! to the configured word width; MACs accumulate in `i64` (the FPGA DSP
+//! accumulator is 48-bit — i64 is a faithful superset) and are rescaled
+//! once per output with round-to-nearest, exactly like an HLS
+//! `ap_fixed<W, I, AP_RND, AP_SAT>` pipeline with a wide accumulator.
+//!
+//! The word width is runtime-configurable (8..=32 bits) to drive the
+//! precision-sweep ablation (EXPERIMENTS.md E11).
+
+/// A Q-format descriptor: `word_bits` total (incl. sign), `frac_bits`
+/// fractional. Default Q16.9 == 1 sign + 6 integer + 9 fraction.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct QFormat {
+    pub word_bits: u32,
+    pub frac_bits: u32,
+}
+
+impl QFormat {
+    pub const fn new(word_bits: u32, frac_bits: u32) -> Self {
+        assert!(word_bits >= 2 && word_bits <= 32);
+        assert!(frac_bits < word_bits);
+        QFormat { word_bits, frac_bits }
+    }
+
+    /// The paper's configuration: 16-bit words, 9 fractional bits.
+    pub const fn paper16() -> Self {
+        QFormat::new(16, 9)
+    }
+
+    /// One raw LSB as a real value.
+    pub fn resolution(&self) -> f64 {
+        1.0 / (1i64 << self.frac_bits) as f64
+    }
+
+    pub fn max_raw(&self) -> i64 {
+        (1i64 << (self.word_bits - 1)) - 1
+    }
+
+    pub fn min_raw(&self) -> i64 {
+        -(1i64 << (self.word_bits - 1))
+    }
+
+    /// Largest representable real value.
+    pub fn max_value(&self) -> f64 {
+        self.max_raw() as f64 * self.resolution()
+    }
+
+    /// Saturate a wide value into the word range.
+    #[inline]
+    pub fn saturate(&self, v: i64) -> i32 {
+        v.clamp(self.min_raw(), self.max_raw()) as i32
+    }
+
+    /// Quantize a real value: round-to-nearest-even-free (ties away from
+    /// zero, like `round()` in the AOT quant kernel), saturating.
+    #[inline]
+    pub fn from_f32(&self, x: f32) -> i32 {
+        let scaled = (x as f64) * (1i64 << self.frac_bits) as f64;
+        if !scaled.is_finite() {
+            return if scaled.is_sign_negative() {
+                self.min_raw() as i32
+            } else {
+                self.max_raw() as i32
+            };
+        }
+        self.saturate(scaled.round() as i64)
+    }
+
+    #[inline]
+    pub fn to_f32(&self, raw: i32) -> f32 {
+        (raw as f64 * self.resolution()) as f32
+    }
+
+    /// Quantize-dequantize in one step (the python `quantize_fx` twin).
+    pub fn roundtrip(&self, x: f32) -> f32 {
+        self.to_f32(self.from_f32(x))
+    }
+
+    /// Saturating add of two raw values.
+    #[inline]
+    pub fn add(&self, a: i32, b: i32) -> i32 {
+        self.saturate(a as i64 + b as i64)
+    }
+
+    /// Multiply two raw Q values -> raw Q value (rescale + saturate).
+    /// A single DSP multiply with output rescaling.
+    #[inline]
+    pub fn mul(&self, a: i32, b: i32) -> i32 {
+        let wide = a as i64 * b as i64; // Q(2f)
+        self.saturate(rescale(wide, self.frac_bits))
+    }
+
+    /// Rescale a Q(2f) accumulator (sum of raw products) back to Q(f),
+    /// round-to-nearest, saturating — the once-per-output-element step.
+    #[inline]
+    pub fn rescale_acc(&self, acc: i64) -> i32 {
+        self.saturate(rescale(acc, self.frac_bits))
+    }
+}
+
+/// Shift right by `frac` with round-to-nearest (ties away from zero).
+#[inline]
+fn rescale(v: i64, frac: u32) -> i64 {
+    if frac == 0 {
+        return v;
+    }
+    let half = 1i64 << (frac - 1);
+    if v >= 0 {
+        (v + half) >> frac
+    } else {
+        -((-v + half) >> frac)
+    }
+}
+
+/// Quantize an f32 slice into raw Q values.
+pub fn quantize_slice(fmt: QFormat, xs: &[f32]) -> Vec<i32> {
+    xs.iter().map(|&x| fmt.from_f32(x)).collect()
+}
+
+/// Dequantize raw Q values back to f32.
+pub fn dequantize_slice(fmt: QFormat, xs: &[i32]) -> Vec<f32> {
+    xs.iter().map(|&x| fmt.to_f32(x)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const Q: QFormat = QFormat::paper16();
+
+    #[test]
+    fn paper_format_ranges() {
+        assert_eq!(Q.max_raw(), 32767);
+        assert_eq!(Q.min_raw(), -32768);
+        assert!((Q.resolution() - 1.0 / 512.0).abs() < 1e-15);
+        assert!((Q.max_value() - 63.998046875).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantize_roundtrip_small_values() {
+        for &x in &[0.0f32, 0.5, -0.5, 1.0 / 512.0, 3.14159, -17.25] {
+            let rt = Q.roundtrip(x);
+            assert!(
+                (rt - x).abs() <= Q.resolution() as f32 / 2.0 + 1e-7,
+                "x={x} rt={rt}"
+            );
+        }
+    }
+
+    #[test]
+    fn saturation_clamps() {
+        assert_eq!(Q.from_f32(1e6), 32767);
+        assert_eq!(Q.from_f32(-1e6), -32768);
+        assert_eq!(Q.from_f32(f32::INFINITY), 32767);
+        assert_eq!(Q.from_f32(f32::NEG_INFINITY), -32768);
+        assert_eq!(Q.add(32000, 32000), 32767);
+        assert_eq!(Q.add(-32000, -32000), -32768);
+    }
+
+    #[test]
+    fn mul_matches_float_within_resolution() {
+        let pairs = [(1.5f32, 2.25f32), (-3.0, 0.125), (7.75, -7.75), (0.001953125, 4.0)];
+        for (a, b) in pairs {
+            let qa = Q.from_f32(a);
+            let qb = Q.from_f32(b);
+            let got = Q.to_f32(Q.mul(qa, qb));
+            assert!(
+                (got - a * b).abs() <= 2.0 * Q.resolution() as f32,
+                "{a}*{b}: got {got}"
+            );
+        }
+    }
+
+    #[test]
+    fn rescale_rounds_to_nearest_sym() {
+        // 1.5 LSB should round to 2, -1.5 LSB to -2 (ties away from zero)
+        let f = QFormat::new(16, 1);
+        assert_eq!(f.rescale_acc(3), 2); // 3/2 = 1.5 -> 2
+        assert_eq!(f.rescale_acc(-3), -2);
+        assert_eq!(f.rescale_acc(2), 1);
+        assert_eq!(f.rescale_acc(-2), -1);
+    }
+
+    #[test]
+    fn mac_chain_matches_float() {
+        // dot product in Q vs f64, random-ish values well inside range
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        let a: Vec<f32> = (0..256).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let b: Vec<f32> = (0..256).map(|_| rng.uniform(-1.0, 1.0)).collect();
+        let qa = quantize_slice(Q, &a);
+        let qb = quantize_slice(Q, &b);
+        let mut acc = 0i64;
+        for i in 0..256 {
+            acc += qa[i] as i64 * qb[i] as i64;
+        }
+        let got = Q.to_f32(Q.rescale_acc(acc));
+        let want: f32 = a.iter().zip(&b).map(|(x, y)| x * y).sum();
+        // error budget: 256 products each with <= .5 LSB input error
+        assert!((got - want).abs() < 0.3, "got {got} want {want}");
+    }
+
+    #[test]
+    fn narrow_formats() {
+        let f8 = QFormat::new(8, 4);
+        assert_eq!(f8.max_raw(), 127);
+        assert_eq!(f8.from_f32(10.0), 127); // saturates at 7.9375
+        assert!((f8.roundtrip(1.25) - 1.25).abs() < 1e-6);
+        let f32b = QFormat::new(32, 16);
+        assert!((f32b.roundtrip(1234.56789) - 1234.56789).abs() < 2e-5);
+    }
+
+    #[test]
+    fn property_quantize_error_bounded() {
+        crate::util::prop::run_prop(
+            Default::default(),
+            |r| r.uniform(-60.0, 60.0),
+            |&x| {
+                let e = (Q.roundtrip(x) - x).abs();
+                if e <= Q.resolution() as f32 * 0.5 + 1e-6 {
+                    Ok(())
+                } else {
+                    Err(format!("error {e} for {x}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,690 @@
+//! Tiled output-stationary convolution engine (paper §III-B, §III-E).
+//!
+//! One engine serves both phases — the paper's central reuse claim:
+//!
+//! * **FP**: `forward()` with the normal kernel view. ReLU is fused
+//!   into the output store (in-place on the output buffer, §III-D) and
+//!   max-pooling is absorbed into the store as well (only pooled values
+//!   travel back to DRAM).
+//! * **BP**: `input_grad()` — the *same* `forward()` loop nest invoked
+//!   with the flipped-transposed weight view (Fig. 6 / Table I); only
+//!   the DRAM access pattern differs, which `weights::flip_transpose`
+//!   models as the load-time index transformation.
+//! * **BP after a max-pool**: `input_grad_unpool()` fuses the unpool
+//!   routing into the gradient conv: it iterates the *pooled* grid and
+//!   scatters through the cached 2-bit argmax indices, doing 1/4 of the
+//!   naive MACs. This is what puts the measured BP/FP latency ratio in
+//!   the paper's 50-72% band (DESIGN.md E3 discussion).
+//!
+//! All arithmetic is raw Q-format (i32 storage, i64 accumulate,
+//! rescale + saturate once per output element).
+
+use super::{dram, Cost, HwConfig};
+
+/// What the output store does with each computed element (paper §III-D:
+/// non-linear layers are absorbed into the store of the layer before).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Post {
+    /// Store raw conv outputs.
+    Plain,
+    /// Apply ReLU in the output buffer before storing.
+    Relu,
+    /// ReLU, then 2x2/2 max-pool during the store scan.
+    ReluPool,
+}
+
+/// Outputs of one conv layer evaluation.
+#[derive(Clone, Debug)]
+pub struct ConvResult {
+    /// Full-resolution output [O,OH,OW] (post-ReLU if fused).
+    pub out: Vec<i32>,
+    /// ReLU positivity mask (1 bit/elem). Present when Post != Plain.
+    pub mask: Option<Vec<bool>>,
+    /// Pooled output [O,OH/2,OW/2] when Post == ReluPool.
+    pub pooled: Option<Vec<i32>>,
+    /// 2-bit argmax indices, row-major within each 2x2 window.
+    pub pool_idx: Option<Vec<u8>>,
+}
+
+/// Flipped-transposed weight view (paper Fig. 6): swap in/out channel
+/// dims and rotate each kernel 180°. In hardware this is a DRAM
+/// *address-pattern* change during buffer load (Table I); here we
+/// materialize the view once per model load.
+pub fn flip_transpose(w: &[i32], o: usize, i: usize, k: usize) -> Vec<i32> {
+    assert_eq!(w.len(), o * i * k * k);
+    let mut out = vec![0i32; w.len()];
+    for oc in 0..o {
+        for ic in 0..i {
+            for kh in 0..k {
+                for kw in 0..k {
+                    let src = ((oc * i + ic) * k + kh) * k + kw;
+                    let dst = ((ic * o + oc) * k + (k - 1 - kh)) * k + (k - 1 - kw);
+                    out[dst] = w[src];
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Tiled conv2d, stride 1. `x`: [I,H,W] raw Q, `w`: [O,I,K,K] raw Q,
+/// `bias`: [O] raw Q or None. Output spatial dims: H+2*pad-K+1.
+#[allow(clippy::too_many_arguments)]
+pub fn forward(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    x: &[i32],
+    (ic_n, h, w_n): (usize, usize, usize),
+    wgt: &[i32],
+    (oc_n, k): (usize, usize),
+    bias: Option<&[i32]>,
+    pad: usize,
+    post: Post,
+) -> ConvResult {
+    assert_eq!(x.len(), ic_n * h * w_n, "input size mismatch");
+    assert_eq!(wgt.len(), oc_n * ic_n * k * k, "weight size mismatch");
+    let oh = h + 2 * pad - (k - 1);
+    let ow = w_n + 2 * pad - (k - 1);
+    if post == Post::ReluPool {
+        assert!(oh % 2 == 0 && ow % 2 == 0, "pool needs even output dims");
+    }
+    let q = cfg.q;
+    let mut out = vec![0i32; oc_n * oh * ow];
+    let mut mask = if post == Post::Plain { None } else { Some(vec![false; out.len()]) };
+    let (mut pooled, mut pool_idx) = if post == Post::ReluPool {
+        (Some(vec![0i32; oc_n * oh / 2 * ow / 2]), Some(vec![0u8; oc_n * oh / 2 * ow / 2]))
+    } else {
+        (None, None)
+    };
+
+    // accumulator buffer for one output tile (the on-chip output buffer;
+    // output-stationary: lives across the ic loop)
+    let mut acc = vec![0i64; cfg.tile_oc * cfg.tile_oh * cfg.tile_ow];
+
+    // §Perf: pre-pad the input once (the line-buffer zero-fill the FPGA
+    // does at load time) so the MAC loops below are branch-free
+    // contiguous row FMAs that LLVM can vectorize. Host-only layout
+    // choice; cycle/traffic accounting is unchanged.
+    let (ph, pw) = (h + 2 * pad, w_n + 2 * pad);
+    let mut xp = vec![0i32; ic_n * ph * pw];
+    for c in 0..ic_n {
+        for y in 0..h {
+            let src = c * h * w_n + y * w_n;
+            let dst = c * ph * pw + (y + pad) * pw + pad;
+            xp[dst..dst + w_n].copy_from_slice(&x[src..src + w_n]);
+        }
+    }
+
+    // --- the tile loop nest (paper §III-B) --------------------------------
+    let mut oc0 = 0;
+    while oc0 < oc_n {
+        let toc = cfg.tile_oc.min(oc_n - oc0);
+        let mut oy0 = 0;
+        while oy0 < oh {
+            let toh = cfg.tile_oh.min(oh - oy0);
+            let mut ox0 = 0;
+            while ox0 < ow {
+                let tow = cfg.tile_ow.min(ow - ox0);
+                // zero the full strided extent the tile indexes into
+                // (partial tiles still stride by the configured dims)
+                acc.fill(0);
+
+                // output-stationary accumulation across input-channel tiles
+                let mut ic0 = 0;
+                while ic0 < ic_n {
+                    let tic = cfg.tile_ic.min(ic_n - ic0);
+
+                    // DRAM -> input buffer: halo tile rows (bounds-clipped)
+                    let in_rows = (toh + k - 1) as u64 * tic as u64;
+                    dram::read_tile_rows(cfg, cost, in_rows, (tow + k - 1) as u64);
+                    // DRAM -> weight buffer: one burst per output channel
+                    dram::read(
+                        cfg,
+                        cost,
+                        (toc * tic * k * k * cfg.word_bytes()) as u64,
+                        toc as u64,
+                    );
+
+                    // MAC loops: N_oh x N_ow unrolled lanes, II=1.
+                    // Host layout: tap-outer / row-inner so the innermost
+                    // loop is a contiguous multiply-accumulate the
+                    // autovectorizer handles (§Perf opt 1).
+                    // fast path for word widths <= 16: operands fit i16,
+                    // so each product fits i32 (vpmulld-friendly); only
+                    // the accumulator needs i64 (§Perf opt 2). A register-
+                    // tile variant (opt 4) was tried and reverted: no
+                    // measurable gain over this form (see EXPERIMENTS.md).
+                    let narrow = cfg.q.word_bits <= 16;
+                    for oc in 0..toc {
+                        for ic in 0..tic {
+                            let wbase = ((oc0 + oc) * ic_n + (ic0 + ic)) * k * k;
+                            let xbase = (ic0 + ic) * ph * pw;
+                            for kh in 0..k {
+                                for kw in 0..k {
+                                    let wv = wgt[wbase + kh * k + kw];
+                                    if wv == 0 {
+                                        continue; // quantized-to-zero tap
+                                    }
+                                    for ty in 0..toh {
+                                        let xrow = xbase + (oy0 + ty + kh) * pw + ox0 + kw;
+                                        let arow = (oc * cfg.tile_oh + ty) * cfg.tile_ow;
+                                        let xs = &xp[xrow..xrow + tow];
+                                        let accs = &mut acc[arow..arow + tow];
+                                        if narrow {
+                                            for (a, &xv) in accs.iter_mut().zip(xs) {
+                                                *a += (xv * wv) as i64;
+                                            }
+                                        } else {
+                                            let wv = wv as i64;
+                                            for (a, &xv) in accs.iter_mut().zip(xs) {
+                                                *a += xv as i64 * wv;
+                                            }
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                    // cycles: ceil-division by the unroll lanes, per the
+                    // unrolled loop structure (partial tiles still occupy
+                    // full lanes)
+                    let spatial_iters =
+                        (toh.div_ceil(cfg.n_oh) * tow.div_ceil(cfg.n_ow)) as u64;
+                    cost.compute_cycles +=
+                        spatial_iters * (toc * tic * k * k) as u64 + cfg.pipeline_depth;
+                    cost.macs += (toh * tow * toc * tic * k * k) as u64;
+
+                    ic0 += tic;
+                }
+
+                // --- output store with fused post-ops (paper §III-D) ------
+                for oc in 0..toc {
+                    for ty in 0..toh {
+                        for tx in 0..tow {
+                            let mut v = q.rescale_acc(acc[(oc * cfg.tile_oh + ty) * cfg.tile_ow + tx]);
+                            if let Some(b) = bias {
+                                v = q.add(v, b[oc0 + oc]);
+                            }
+                            let gi = (oc0 + oc) * oh * ow + (oy0 + ty) * ow + (ox0 + tx);
+                            if let Some(m) = mask.as_mut() {
+                                m[gi] = v > 0;
+                                if v < 0 {
+                                    v = 0;
+                                }
+                            }
+                            out[gi] = v;
+                        }
+                    }
+                }
+                if post == Post::ReluPool {
+                    // pool scan during store: pick max of each 2x2 window
+                    let (pv, pi) = (pooled.as_mut().unwrap(), pool_idx.as_mut().unwrap());
+                    let (ph, pw) = (oh / 2, ow / 2);
+                    for oc in 0..toc {
+                        for py in (oy0 / 2)..((oy0 + toh) / 2) {
+                            for px in (ox0 / 2)..((ox0 + tow) / 2) {
+                                let mut best = i32::MIN;
+                                let mut bidx = 0u8;
+                                for dy in 0..2 {
+                                    for dx in 0..2 {
+                                        let v = out[(oc0 + oc) * oh * ow
+                                            + (2 * py + dy) * ow
+                                            + (2 * px + dx)];
+                                        if v > best {
+                                            best = v;
+                                            bidx = (dy * 2 + dx) as u8;
+                                        }
+                                    }
+                                }
+                                pv[(oc0 + oc) * ph * pw + py * pw + px] = best;
+                                pi[(oc0 + oc) * ph * pw + py * pw + px] = bidx;
+                            }
+                        }
+                    }
+                    // DRAM write: only pooled values leave the chip
+                    dram::write_tile_rows(cfg, cost, (toc * toh / 2) as u64, (tow / 2) as u64);
+                } else {
+                    dram::write_tile_rows(cfg, cost, (toc * toh) as u64, tow as u64);
+                }
+
+                ox0 += tow;
+            }
+            oy0 += toh;
+        }
+        oc0 += toc;
+    }
+
+    ConvResult { out, mask, pooled, pool_idx }
+}
+
+/// BP conv (paper §III-E): gradient w.r.t. the layer input — the same
+/// engine with the flipped-transposed weight view. `w_bp` must come
+/// from [`flip_transpose`]; `g` is the upstream gradient [O,OH,OW].
+pub fn input_grad(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    g: &[i32],
+    g_shape: (usize, usize, usize),
+    w_bp: &[i32],
+    out_ch: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<i32> {
+    let bp_pad = k - 1 - pad;
+    forward(cfg, cost, g, g_shape, w_bp, (out_ch, k), None, bp_pad, Post::Plain).out
+}
+
+/// BP conv fused with unpooling (paper §III-D/E combined): the upstream
+/// gradient arrives on the *pooled* grid [Cg,PH,PW] together with the
+/// 2-bit argmax indices; the engine scatters each pooled gradient
+/// through its cached argmax position directly into the gradient-conv
+/// accumulation, skipping the 3/4 of positions that are structurally
+/// zero. MACs = naive/4.
+#[allow(clippy::too_many_arguments)]
+pub fn input_grad_unpool(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    g_pooled: &[i32],
+    (cg_n, ph, pw): (usize, usize, usize),
+    pool_idx: &[u8],
+    w_bp: &[i32],
+    out_ch: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<i32> {
+    assert_eq!(g_pooled.len(), cg_n * ph * pw);
+    assert_eq!(pool_idx.len(), g_pooled.len());
+    assert_eq!(w_bp.len(), out_ch * cg_n * k * k);
+    let (h, w_n) = (2 * ph, 2 * pw);
+    let bp_pad = k - 1 - pad;
+    let (oh, ow) = (h + 2 * bp_pad - (k - 1), w_n + 2 * bp_pad - (k - 1));
+    let q = cfg.q;
+    // §Perf opt 3: accumulate in [y][x][o] order (contiguous in the
+    // output channel) and pre-transpose the weight view to
+    // [cg][kh][kw][o] so each scatter tap is one long contiguous FMA
+    // over out_ch. Host layout only; results + cost are unchanged.
+    let mut acc = vec![0i64; oh * ow * out_ch];
+    let mut wsc = vec![0i32; w_bp.len()];
+    for o in 0..out_ch {
+        for cg in 0..cg_n {
+            for t in 0..k * k {
+                wsc[(cg * k * k + t) * out_ch + o] = w_bp[(o * cg_n + cg) * k * k + t];
+            }
+        }
+    }
+    let narrow = cfg.q.word_bits <= 16;
+
+    // tile over the pooled grid (this is what the on-chip gradient
+    // buffer holds during BP)
+    let (tile_ph, tile_pw) = (cfg.tile_oh.max(2) / 2 * 2, cfg.tile_ow.max(2) / 2 * 2);
+    let mut c0 = 0;
+    while c0 < cg_n {
+        let tc = cfg.tile_ic.min(cg_n - c0);
+        let mut py0 = 0;
+        while py0 < ph {
+            let tph = tile_ph.min(ph - py0);
+            let mut px0 = 0;
+            while px0 < pw {
+                let tpw = tile_pw.min(pw - px0);
+
+                // loads: pooled gradient tile + packed 2-bit indices
+                dram::read_tile_rows(cfg, cost, (tc * tph) as u64, tpw as u64);
+                dram::read(cfg, cost, ((tc * tph * tpw) as u64).div_ceil(4), tc as u64);
+                // weight view for this channel block
+                dram::read(
+                    cfg,
+                    cost,
+                    (out_ch * tc * k * k * cfg.word_bytes()) as u64,
+                    out_ch as u64,
+                );
+
+                for cg in c0..c0 + tc {
+                    for py in py0..py0 + tph {
+                        for px in px0..px0 + tpw {
+                            let pi = cg * ph * pw + py * pw + px;
+                            let gv = g_pooled[pi];
+                            if gv == 0 {
+                                continue;
+                            }
+                            let idx = pool_idx[pi];
+                            let yy = 2 * py + (idx >> 1) as usize;
+                            let xx = 2 * px + (idx & 1) as usize;
+                            for kh in 0..k {
+                                let oy = yy + bp_pad;
+                                if oy < kh || oy - kh >= oh {
+                                    continue;
+                                }
+                                let oy = oy - kh;
+                                for kw in 0..k {
+                                    let oxp = xx + bp_pad;
+                                    if oxp < kw || oxp - kw >= ow {
+                                        continue;
+                                    }
+                                    let abase = (oy * ow + (oxp - kw)) * out_ch;
+                                    let wbase = (cg * k * k + kh * k + kw) * out_ch;
+                                    let accs = &mut acc[abase..abase + out_ch];
+                                    let ws = &wsc[wbase..wbase + out_ch];
+                                    if narrow {
+                                        for (a, &wv) in accs.iter_mut().zip(ws) {
+                                            *a += (gv * wv) as i64;
+                                        }
+                                    } else {
+                                        let gv = gv as i64;
+                                        for (a, &wv) in accs.iter_mut().zip(ws) {
+                                            *a += gv * wv as i64;
+                                        }
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                // cycles: one MAC group per (pooled elem, out_ch, tap),
+                // parallel over the N_oh x N_ow lanes
+                let macs = (tc * tph * tpw * out_ch * k * k) as u64;
+                cost.compute_cycles +=
+                    macs.div_ceil(cfg.conv_macs_parallel() as u64) + cfg.pipeline_depth;
+                cost.macs += macs;
+
+                px0 += tpw;
+            }
+            py0 += tph;
+        }
+        c0 += tc;
+    }
+
+    // rescale + store the gradient tensor (transpose back to [o][y][x])
+    let mut out = vec![0i32; out_ch * oh * ow];
+    for y in 0..oh {
+        for x in 0..ow {
+            let base = (y * ow + x) * out_ch;
+            for o in 0..out_ch {
+                out[o * oh * ow + y * ow + x] = q.rescale_acc(acc[base + o]);
+            }
+        }
+    }
+    dram::write_tile_rows(cfg, cost, (out_ch * oh) as u64, ow as u64);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::{quantize_slice, QFormat};
+    use crate::util::rng::Pcg32;
+
+    fn cfg() -> HwConfig {
+        HwConfig::pynq_z2()
+    }
+
+    /// Naive f64 conv on dequantized values — the oracle.
+    fn conv_ref(
+        x: &[f64],
+        (ic, h, w): (usize, usize, usize),
+        wg: &[f64],
+        (oc, k): (usize, usize),
+        bias: &[f64],
+        pad: usize,
+    ) -> Vec<f64> {
+        let oh = h + 2 * pad - (k - 1);
+        let ow = w + 2 * pad - (k - 1);
+        let mut out = vec![0f64; oc * oh * ow];
+        for o in 0..oc {
+            for y in 0..oh {
+                for xp in 0..ow {
+                    let mut s = bias.get(o).copied().unwrap_or(0.0);
+                    for c in 0..ic {
+                        for kh in 0..k {
+                            for kw in 0..k {
+                                let iy = (y + kh) as isize - pad as isize;
+                                let ix = (xp + kw) as isize - pad as isize;
+                                if iy >= 0 && iy < h as isize && ix >= 0 && ix < w as isize {
+                                    s += x[c * h * w + iy as usize * w + ix as usize]
+                                        * wg[((o * ic + c) * k + kh) * k + kw];
+                                }
+                            }
+                        }
+                    }
+                    out[o * oh * ow + y * ow + xp] = s;
+                }
+            }
+        }
+        out
+    }
+
+    fn rand_vec(rng: &mut Pcg32, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    #[test]
+    fn matches_reference_within_quantization() {
+        let mut rng = Pcg32::seeded(42);
+        let (ic, h, w, oc, k, pad) = (3, 12, 12, 8, 3, 1);
+        let xf = rand_vec(&mut rng, ic * h * w, -1.0, 1.0);
+        let wf = rand_vec(&mut rng, oc * ic * k * k, -0.5, 0.5);
+        let bf = rand_vec(&mut rng, oc, -0.2, 0.2);
+        let q = QFormat::paper16();
+        let c = cfg();
+        let mut cost = Cost::new();
+        let r = forward(
+            &c,
+            &mut cost,
+            &quantize_slice(q, &xf),
+            (ic, h, w),
+            &quantize_slice(q, &wf),
+            (oc, k),
+            Some(&quantize_slice(q, &bf)),
+            pad,
+            Post::Plain,
+        );
+        let want = conv_ref(
+            &xf.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            (ic, h, w),
+            &wf.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            (oc, k),
+            &bf.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            pad,
+        );
+        for (i, (&got, &want)) in r.out.iter().zip(&want).enumerate() {
+            let g = q.to_f32(got) as f64;
+            assert!(
+                (g - want).abs() < 0.05,
+                "elem {i}: got {g}, want {want}"
+            );
+        }
+        assert!(cost.macs >= (oc * ic * h * w * k * k) as u64);
+        assert!(cost.dram_read_bytes > 0 && cost.dram_write_bytes > 0);
+    }
+
+    #[test]
+    fn identity_kernel_exact() {
+        // 1x1 identity kernel, no pad: output == input exactly (raw)
+        let q = QFormat::paper16();
+        let x: Vec<i32> = (0..16).map(|i| q.from_f32(i as f32 * 0.25 - 2.0)).collect();
+        let wgt = vec![q.from_f32(1.0)];
+        let mut cost = Cost::new();
+        let r = forward(&cfg(), &mut cost, &x, (1, 4, 4), &wgt, (1, 1), None, 0, Post::Plain);
+        assert_eq!(r.out, x);
+    }
+
+    #[test]
+    fn relu_fusion_and_mask() {
+        let q = QFormat::paper16();
+        let x: Vec<i32> = [-1.0f32, 2.0, -3.0, 4.0].iter().map(|&v| q.from_f32(v)).collect();
+        let wgt = vec![q.from_f32(1.0)];
+        let mut cost = Cost::new();
+        let r = forward(&cfg(), &mut cost, &x, (1, 2, 2), &wgt, (1, 1), None, 0, Post::Relu);
+        assert_eq!(r.out, vec![0, q.from_f32(2.0), 0, q.from_f32(4.0)]);
+        assert_eq!(r.mask.unwrap(), vec![false, true, false, true]);
+    }
+
+    #[test]
+    fn pool_fusion_matches_separate() {
+        let mut rng = Pcg32::seeded(7);
+        let q = QFormat::paper16();
+        let (ic, h, w, oc) = (4, 8, 8, 4);
+        let x = quantize_slice(q, &rand_vec(&mut rng, ic * h * w, -1.0, 1.0));
+        let wg = quantize_slice(q, &rand_vec(&mut rng, oc * ic * 9, -0.4, 0.4));
+        let c = cfg();
+        let mut cost = Cost::new();
+        let fused = forward(&c, &mut cost, &x, (ic, h, w), &wg, (oc, 3), None, 1, Post::ReluPool);
+        let mut cost2 = Cost::new();
+        let plain = forward(&c, &mut cost2, &x, (ic, h, w), &wg, (oc, 3), None, 1, Post::Relu);
+        // oracle pool over the plain relu output
+        let (ph, pw) = (h / 2, w / 2);
+        let pooled = fused.pooled.unwrap();
+        let idx = fused.pool_idx.unwrap();
+        for ch in 0..oc {
+            for py in 0..ph {
+                for px in 0..pw {
+                    let vals: Vec<i32> = (0..4)
+                        .map(|d| plain.out[ch * h * w + (2 * py + d / 2) * w + (2 * px + d % 2)])
+                        .collect();
+                    let pi = ch * ph * pw + py * pw + px;
+                    assert_eq!(pooled[pi], *vals.iter().max().unwrap());
+                    assert_eq!(vals[idx[pi] as usize], pooled[pi]);
+                }
+            }
+        }
+        // fused pool writes 4x fewer output bytes
+        assert!(cost.dram_write_bytes < cost2.dram_write_bytes);
+    }
+
+    #[test]
+    fn flip_transpose_involution() {
+        let mut rng = Pcg32::seeded(9);
+        let (o, i, k) = (4, 3, 3);
+        let w: Vec<i32> = (0..o * i * k * k).map(|_| rng.below(1000) as i32 - 500).collect();
+        let wt = flip_transpose(&w, o, i, k);
+        let wtt = flip_transpose(&wt, i, o, k);
+        assert_eq!(w, wtt);
+    }
+
+    #[test]
+    fn input_grad_matches_autodiff_identity() {
+        // conv with pad=1 k=3: d out / d in through flipped-transpose conv.
+        // Check against f64 oracle: grad_in = conv(g, flipT(w), pad=1)
+        let mut rng = Pcg32::seeded(13);
+        let q = QFormat::paper16();
+        let (ic, h, w, oc, k, pad) = (3, 8, 8, 5, 3, 1);
+        let gf = rand_vec(&mut rng, oc * h * w, -1.0, 1.0);
+        let wf = rand_vec(&mut rng, oc * ic * k * k, -0.5, 0.5);
+        let qg = quantize_slice(q, &gf);
+        let qw = quantize_slice(q, &wf);
+        let wbp = flip_transpose(&qw, oc, ic, k);
+        let c = cfg();
+        let mut cost = Cost::new();
+        let got = input_grad(&c, &mut cost, &qg, (oc, h, w), &wbp, ic, k, pad);
+        // oracle: flipped-transposed f64 conv
+        let mut wtf = vec![0f64; ic * oc * k * k];
+        for o in 0..oc {
+            for i_ in 0..ic {
+                for kh in 0..k {
+                    for kw in 0..k {
+                        wtf[((i_ * oc + o) * k + (k - 1 - kh)) * k + (k - 1 - kw)] =
+                            wf[((o * ic + i_) * k + kh) * k + kw] as f64;
+                    }
+                }
+            }
+        }
+        let want = conv_ref(
+            &gf.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            (oc, h, w),
+            &wtf,
+            (ic, k),
+            &[],
+            k - 1 - pad,
+        );
+        for (i, (&g, &wv)) in got.iter().zip(&want).enumerate() {
+            assert!((q.to_f32(g) as f64 - wv).abs() < 0.06, "elem {i}");
+        }
+    }
+
+    #[test]
+    fn fused_unpool_equals_unpool_then_conv() {
+        let mut rng = Pcg32::seeded(21);
+        let q = QFormat::paper16();
+        let (cg, ph, pw, out_ch, k, pad) = (8, 4, 4, 6, 3, 1);
+        let gp = quantize_slice(q, &rand_vec(&mut rng, cg * ph * pw, -1.0, 1.0));
+        let idx: Vec<u8> = (0..cg * ph * pw).map(|_| rng.below(4) as u8).collect();
+        let wf = rand_vec(&mut rng, out_ch * cg * k * k, -0.5, 0.5);
+        let qw = quantize_slice(q, &wf);
+        let wbp = flip_transpose(&qw, cg, out_ch, k); // note: conv had out=cg, in=out_ch
+        let c = cfg();
+
+        // path A: fused
+        let mut ca = Cost::new();
+        let fused = input_grad_unpool(&c, &mut ca, &gp, (cg, ph, pw), &idx, &wbp, out_ch, k, pad);
+
+        // path B: materialize the unpooled gradient, then plain BP conv
+        let (h, w) = (2 * ph, 2 * pw);
+        let mut gu = vec![0i32; cg * h * w];
+        for ch in 0..cg {
+            for py in 0..ph {
+                for px in 0..pw {
+                    let pi = ch * ph * pw + py * pw + px;
+                    let (dy, dx) = ((idx[pi] >> 1) as usize, (idx[pi] & 1) as usize);
+                    gu[ch * h * w + (2 * py + dy) * w + (2 * px + dx)] = gp[pi];
+                }
+            }
+        }
+        let mut cb = Cost::new();
+        let naive = input_grad(&c, &mut cb, &gu, (cg, h, w), &wbp, out_ch, k, pad);
+
+        assert_eq!(fused, naive, "fused unpool-conv must equal unpool+conv exactly");
+        // and it must be cheaper: 1/4 the MACs
+        assert_eq!(ca.macs * 4, cb.macs);
+        assert!(ca.compute_cycles < cb.compute_cycles);
+    }
+
+    #[test]
+    fn unroll_reduces_cycles_not_macs() {
+        let mut rng = Pcg32::seeded(3);
+        let q = QFormat::paper16();
+        let x = quantize_slice(q, &rand_vec(&mut rng, 3 * 16 * 16, -1.0, 1.0));
+        let wg = quantize_slice(q, &rand_vec(&mut rng, 8 * 3 * 9, -0.5, 0.5));
+        let mut c1 = Cost::new();
+        let mut c2 = Cost::new();
+        let cfg1 = HwConfig::with_unroll(2, 2, 16);
+        let cfg2 = HwConfig::with_unroll(8, 8, 16);
+        forward(&cfg1, &mut c1, &x, (3, 16, 16), &wg, (8, 3), None, 1, Post::Plain);
+        forward(&cfg2, &mut c2, &x, (3, 16, 16), &wg, (8, 3), None, 1, Post::Plain);
+        assert_eq!(c1.macs, c2.macs);
+        assert!(c1.compute_cycles > 3 * c2.compute_cycles, "{} vs {}", c1.compute_cycles, c2.compute_cycles);
+        assert_eq!(c1.dram_read_bytes, c2.dram_read_bytes);
+    }
+
+    #[test]
+    fn partial_tiles_handled() {
+        // dims that do not divide the 8x8/16ch tiles
+        let mut rng = Pcg32::seeded(17);
+        let q = QFormat::paper16();
+        let (ic, h, w, oc) = (5, 11, 9, 7);
+        let xf = rand_vec(&mut rng, ic * h * w, -1.0, 1.0);
+        let wf = rand_vec(&mut rng, oc * ic * 9, -0.4, 0.4);
+        let mut cost = Cost::new();
+        let r = forward(
+            &cfg(),
+            &mut cost,
+            &quantize_slice(q, &xf),
+            (ic, h, w),
+            &quantize_slice(q, &wf),
+            (oc, 3),
+            None,
+            1,
+            Post::Plain,
+        );
+        let want = conv_ref(
+            &xf.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            (ic, h, w),
+            &wf.iter().map(|&v| v as f64).collect::<Vec<_>>(),
+            (oc, 3),
+            &[],
+            1,
+        );
+        assert_eq!(r.out.len(), want.len());
+        for (i, (&g, &wv)) in r.out.iter().zip(&want).enumerate() {
+            assert!((q.to_f32(g) as f64 - wv).abs() < 0.06, "elem {i}");
+        }
+    }
+}

@@ -1,0 +1,113 @@
+//! DRAM/AXI traffic model (S5): every tile load/store goes through
+//! here, charging bytes, burst transactions and bus cycles into the
+//! `Cost` ledger (paper §III-A: tiles move over AXI between DRAM and
+//! on-chip buffers).
+//!
+//! The timing model is a standard burst model: a transfer of `bytes`
+//! issued as `bursts` transactions costs
+//! `ceil(bytes / axi_bytes_per_cycle) + bursts * axi_burst_overhead`
+//! cycles. Contiguous rows of a tile form one burst each; fully
+//! contiguous tensors form a single burst.
+
+use super::{Cost, HwConfig};
+
+/// Account a DRAM read of `bytes` split into `bursts` transactions.
+pub fn read(cfg: &HwConfig, cost: &mut Cost, bytes: u64, bursts: u64) {
+    transfer(cfg, cost, bytes, bursts, false);
+}
+
+/// Account a DRAM write of `bytes` split into `bursts` transactions.
+pub fn write(cfg: &HwConfig, cost: &mut Cost, bytes: u64, bursts: u64) {
+    transfer(cfg, cost, bytes, bursts, true);
+}
+
+fn transfer(cfg: &HwConfig, cost: &mut Cost, bytes: u64, bursts: u64, is_write: bool) {
+    if bytes == 0 {
+        return;
+    }
+    let bursts = bursts.max(1);
+    let cycles = bytes.div_ceil(cfg.axi_bytes_per_cycle as u64) + bursts * cfg.axi_burst_overhead;
+    cost.dram_cycles += cycles;
+    cost.dram_bursts += bursts;
+    if is_write {
+        cost.dram_write_bytes += bytes;
+    } else {
+        cost.dram_read_bytes += bytes;
+    }
+}
+
+/// Read a row-tiled 2-D region: `rows` bursts of `row_words` words.
+pub fn read_tile_rows(cfg: &HwConfig, cost: &mut Cost, rows: u64, row_words: u64) {
+    read(cfg, cost, rows * row_words * cfg.word_bytes() as u64, rows);
+}
+
+/// Write a row-tiled 2-D region.
+pub fn write_tile_rows(cfg: &HwConfig, cost: &mut Cost, rows: u64, row_words: u64) {
+    write(cfg, cost, rows * row_words * cfg.word_bytes() as u64, rows);
+}
+
+/// Read a contiguous block of `words` (single burst).
+pub fn read_contig(cfg: &HwConfig, cost: &mut Cost, words: u64) {
+    read(cfg, cost, words * cfg.word_bytes() as u64, 1);
+}
+
+/// Write a contiguous block of `words` (single burst).
+pub fn write_contig(cfg: &HwConfig, cost: &mut Cost, words: u64) {
+    write(cfg, cost, words * cfg.word_bytes() as u64, 1);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn burst_cost_formula() {
+        let cfg = HwConfig::pynq_z2(); // 8 B/cycle, 16 cycle overhead
+        let mut c = Cost::new();
+        read(&cfg, &mut c, 800, 10);
+        assert_eq!(c.dram_cycles, 100 + 160);
+        assert_eq!(c.dram_read_bytes, 800);
+        assert_eq!(c.dram_bursts, 10);
+        write(&cfg, &mut c, 8, 1);
+        assert_eq!(c.dram_cycles, 260 + 1 + 16);
+        assert_eq!(c.dram_write_bytes, 8);
+    }
+
+    #[test]
+    fn zero_bytes_free() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        read(&cfg, &mut c, 0, 5);
+        assert_eq!(c.dram_cycles, 0);
+        assert_eq!(c.dram_bursts, 0);
+    }
+
+    #[test]
+    fn row_tiles_charge_per_row_bursts() {
+        let cfg = HwConfig::pynq_z2(); // 2-byte words
+        let mut c = Cost::new();
+        read_tile_rows(&cfg, &mut c, 10, 18); // 10 rows x 18 words x 2B
+        assert_eq!(c.dram_read_bytes, 360);
+        assert_eq!(c.dram_bursts, 10);
+        assert_eq!(c.dram_cycles, 45 + 160);
+    }
+
+    #[test]
+    fn contiguous_single_burst() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        read_contig(&cfg, &mut c, 2304);
+        assert_eq!(c.dram_bursts, 1);
+        assert_eq!(c.dram_cycles, 576 + 16);
+    }
+
+    #[test]
+    fn fewer_bursts_cheaper_same_bytes() {
+        let cfg = HwConfig::pynq_z2();
+        let mut a = Cost::new();
+        let mut b = Cost::new();
+        read(&cfg, &mut a, 4096, 1);
+        read(&cfg, &mut b, 4096, 64);
+        assert!(a.dram_cycles < b.dram_cycles);
+    }
+}

@@ -1,0 +1,234 @@
+//! HLS-style compute engines (S3): the rust re-expression of the
+//! paper's Vitis HLS template library (§III).
+//!
+//! Each engine is *functionally* bit-exact Q-format fixed point and
+//! *temporally* tile-based: data is moved DRAM → on-chip buffer in
+//! tiles sized by `HwConfig`, computed with the configured
+//! `N_oh × N_ow` MAC unroll, and stored back — charging DRAM traffic
+//! and compute cycles into a `Cost` ledger exactly as the loop nests
+//! execute. The cycle totals therefore emerge from the same tiling /
+//! unroll structure the paper synthesizes, rather than from a closed-
+//! form formula.
+
+pub mod conv;
+pub mod dram;
+pub mod pool;
+pub mod relu;
+pub mod vmm;
+
+use crate::fx::QFormat;
+
+/// Design-time hardware configuration (paper §IV-B "Design
+/// Configuration"): unroll factors, tile/buffer dims, VMM block size.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct HwConfig {
+    /// MAC unroll along output rows (paper N_oh). Must divide `tile_oh`.
+    pub n_oh: usize,
+    /// MAC unroll along output cols (paper N_ow). Must divide `tile_ow`.
+    pub n_ow: usize,
+    /// Conv output-tile spatial dims (buffer sizing).
+    pub tile_oh: usize,
+    pub tile_ow: usize,
+    /// Conv channel tiling (output / input channels per tile).
+    pub tile_oc: usize,
+    pub tile_ic: usize,
+    /// VMM block size (paper: "buffer size is set to 16/32"): output
+    /// elements per tile AND parallel MACs in the VMM block.
+    pub vmm_tile: usize,
+    /// VMM input-vector tile length.
+    pub vmm_in_tile: usize,
+    /// Fixed-point format of the datapath.
+    pub q: QFormat,
+    /// AXI bus width in bytes moved per cycle (64-bit AXI @ fabric clock).
+    pub axi_bytes_per_cycle: usize,
+    /// Fixed cycles per AXI burst transaction (address phase + latency).
+    pub axi_burst_overhead: u64,
+    /// Pipeline fill depth charged once per innermost pipelined loop.
+    pub pipeline_depth: u64,
+    /// If true, tile load/compute/store overlap (HLS dataflow double
+    /// buffering); latency per tile = max instead of sum. The paper's
+    /// baseline design is sequential-per-tile (false).
+    pub overlap_tiles: bool,
+}
+
+impl HwConfig {
+    /// A config with the paper's common structure, parameterized by the
+    /// unroll factors and VMM size that Table IV varies per board.
+    pub fn with_unroll(n_oh: usize, n_ow: usize, vmm_tile: usize) -> HwConfig {
+        HwConfig {
+            n_oh,
+            n_ow,
+            tile_oh: 8,
+            tile_ow: 8,
+            tile_oc: 16,
+            tile_ic: 16,
+            vmm_tile,
+            vmm_in_tile: 256,
+            q: QFormat::paper16(),
+            axi_bytes_per_cycle: 8,
+            axi_burst_overhead: 16,
+            pipeline_depth: 8,
+            overlap_tiles: false,
+        }
+    }
+
+    /// Paper Table IV configurations.
+    pub fn pynq_z2() -> HwConfig {
+        HwConfig::with_unroll(4, 4, 16)
+    }
+    pub fn ultra96_v2() -> HwConfig {
+        HwConfig::with_unroll(4, 8, 16)
+    }
+    pub fn zcu104() -> HwConfig {
+        HwConfig::with_unroll(8, 8, 32)
+    }
+
+    /// Parallel MACs in the conv block == its DSP usage (paper §IV-B).
+    pub fn conv_macs_parallel(&self) -> usize {
+        self.n_oh * self.n_ow
+    }
+
+    pub fn validate(&self) -> Result<(), String> {
+        if self.n_oh == 0 || self.n_ow == 0 {
+            return Err("unroll factors must be positive".into());
+        }
+        if self.tile_oh % self.n_oh != 0 || self.tile_ow % self.n_ow != 0 {
+            return Err(format!(
+                "unroll ({},{}) must divide tile ({},{})",
+                self.n_oh, self.n_ow, self.tile_oh, self.tile_ow
+            ));
+        }
+        if self.vmm_tile == 0 || self.vmm_in_tile == 0 {
+            return Err("vmm tiles must be positive".into());
+        }
+        if self.axi_bytes_per_cycle == 0 {
+            return Err("axi width must be positive".into());
+        }
+        Ok(())
+    }
+
+    /// Bytes per datapath word in DRAM (activations/weights/gradients).
+    pub fn word_bytes(&self) -> usize {
+        (self.q.word_bits as usize).div_ceil(8)
+    }
+}
+
+/// Execution phase — selects the DRAM access pattern (paper Table I).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    Forward,
+    Backward,
+}
+
+/// Cycle/traffic ledger, filled in by the engines as they execute.
+#[derive(Clone, Debug, Default)]
+pub struct Cost {
+    pub compute_cycles: u64,
+    pub dram_cycles: u64,
+    pub dram_read_bytes: u64,
+    pub dram_write_bytes: u64,
+    pub dram_bursts: u64,
+    pub macs: u64,
+    /// (label, total cycles at that point) checkpoints per layer.
+    pub layers: Vec<(String, u64)>,
+}
+
+impl Cost {
+    pub fn new() -> Cost {
+        Cost::default()
+    }
+
+    /// Total cycles under the sequential (non-overlapped) tile model.
+    pub fn total_cycles(&self) -> u64 {
+        self.compute_cycles + self.dram_cycles
+    }
+
+    pub fn latency_ms(&self, freq_mhz: f64) -> f64 {
+        self.total_cycles() as f64 / (freq_mhz * 1e3)
+    }
+
+    /// Close out a layer: record the running total under `label`.
+    pub fn checkpoint(&mut self, label: &str) {
+        self.layers.push((label.to_string(), self.total_cycles()));
+    }
+
+    /// Per-layer cycle deltas derived from the checkpoints.
+    pub fn layer_breakdown(&self) -> Vec<(String, u64)> {
+        let mut out = Vec::with_capacity(self.layers.len());
+        let mut prev = 0u64;
+        for (name, total) in &self.layers {
+            out.push((name.clone(), total - prev));
+            prev = *total;
+        }
+        out
+    }
+
+    pub fn merge(&mut self, other: &Cost) {
+        self.compute_cycles += other.compute_cycles;
+        self.dram_cycles += other.dram_cycles;
+        self.dram_read_bytes += other.dram_read_bytes;
+        self.dram_write_bytes += other.dram_write_bytes;
+        self.dram_bursts += other.dram_bursts;
+        self.macs += other.macs;
+        let base: u64 = self.layers.last().map(|(_, t)| *t).unwrap_or(0);
+        for (n, t) in &other.layers {
+            self.layers.push((n.clone(), base + t));
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn paper_configs_validate() {
+        for cfg in [HwConfig::pynq_z2(), HwConfig::ultra96_v2(), HwConfig::zcu104()] {
+            cfg.validate().unwrap();
+        }
+        assert_eq!(HwConfig::pynq_z2().conv_macs_parallel(), 16);
+        assert_eq!(HwConfig::ultra96_v2().conv_macs_parallel(), 32);
+        assert_eq!(HwConfig::zcu104().conv_macs_parallel(), 64);
+        assert_eq!(HwConfig::zcu104().vmm_tile, 32);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        let mut c = HwConfig::pynq_z2();
+        c.n_oh = 3; // does not divide tile_oh=8
+        assert!(c.validate().is_err());
+        let mut c = HwConfig::pynq_z2();
+        c.vmm_tile = 0;
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn cost_bookkeeping() {
+        let mut c = Cost::new();
+        c.compute_cycles = 100;
+        c.dram_cycles = 50;
+        c.checkpoint("a");
+        c.compute_cycles += 30;
+        c.checkpoint("b");
+        assert_eq!(c.total_cycles(), 180);
+        assert_eq!(c.layer_breakdown(), vec![("a".to_string(), 150), ("b".to_string(), 30)]);
+        assert!((c.latency_ms(100.0) - 0.0018).abs() < 1e-12);
+
+        let mut d = Cost::new();
+        d.compute_cycles = 20;
+        d.checkpoint("c");
+        c.merge(&d);
+        assert_eq!(c.total_cycles(), 200);
+        assert_eq!(c.layers.last().unwrap().1, 200);
+    }
+
+    #[test]
+    fn word_bytes_follow_format() {
+        let mut c = HwConfig::pynq_z2();
+        assert_eq!(c.word_bytes(), 2);
+        c.q = QFormat::new(8, 4);
+        assert_eq!(c.word_bytes(), 1);
+        c.q = QFormat::new(32, 16);
+        assert_eq!(c.word_bytes(), 4);
+    }
+}

@@ -1,0 +1,149 @@
+//! Standalone max-pool / unpool units (paper §III-D, Fig. 5).
+//!
+//! In the scheduler's default dataflow these never run standalone: the
+//! FP pool is absorbed into the conv output store (`conv::Post::ReluPool`)
+//! and the BP unpool is fused into the gradient conv
+//! (`conv::input_grad_unpool`). The standalone units exist for (a) the
+//! unfused-ablation bench, (b) networks whose pool is not preceded by a
+//! conv, and (c) differential testing of the fused paths.
+
+use super::{dram, Cost, HwConfig};
+
+/// 2x2/stride-2 max pool. Returns (pooled [C,H/2,W/2], 2-bit argmax).
+pub fn maxpool2(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    x: &[i32],
+    (c_n, h, w): (usize, usize, usize),
+) -> (Vec<i32>, Vec<u8>) {
+    assert_eq!(x.len(), c_n * h * w);
+    assert!(h % 2 == 0 && w % 2 == 0);
+    let (ph, pw) = (h / 2, w / 2);
+    let mut out = vec![0i32; c_n * ph * pw];
+    let mut idx = vec![0u8; c_n * ph * pw];
+    dram::read_tile_rows(cfg, cost, (c_n * h) as u64, w as u64);
+    for ch in 0..c_n {
+        for py in 0..ph {
+            for px in 0..pw {
+                let mut best = i32::MIN;
+                let mut bi = 0u8;
+                for d in 0..4usize {
+                    let v = x[ch * h * w + (2 * py + d / 2) * w + (2 * px + d % 2)];
+                    if v > best {
+                        best = v;
+                        bi = d as u8;
+                    }
+                }
+                out[ch * ph * pw + py * pw + px] = best;
+                idx[ch * ph * pw + py * pw + px] = bi;
+            }
+        }
+    }
+    // scan is sequential over windows (II=1, one window/cycle)
+    cost.compute_cycles += (c_n * ph * pw) as u64 + cfg.pipeline_depth;
+    dram::write_tile_rows(cfg, cost, (c_n * ph) as u64, pw as u64);
+    (out, idx)
+}
+
+/// Unpool: route gradient to the cached argmax position (paper Fig. 5b).
+pub fn unpool2(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    g: &[i32],
+    (c_n, ph, pw): (usize, usize, usize),
+    idx: &[u8],
+) -> Vec<i32> {
+    assert_eq!(g.len(), c_n * ph * pw);
+    assert_eq!(idx.len(), g.len());
+    let (h, w) = (2 * ph, 2 * pw);
+    let mut out = vec![0i32; c_n * h * w];
+    dram::read_tile_rows(cfg, cost, (c_n * ph) as u64, pw as u64);
+    dram::read(cfg, cost, (g.len() as u64).div_ceil(4), c_n as u64); // 2-bit idx
+    for ch in 0..c_n {
+        for py in 0..ph {
+            for px in 0..pw {
+                let pi = ch * ph * pw + py * pw + px;
+                let (dy, dx) = ((idx[pi] >> 1) as usize, (idx[pi] & 1) as usize);
+                out[ch * h * w + (2 * py + dy) * w + (2 * px + dx)] = g[pi];
+            }
+        }
+    }
+    cost.compute_cycles += (c_n * ph * pw) as u64 + cfg.pipeline_depth;
+    dram::write_tile_rows(cfg, cost, (c_n * h) as u64, w as u64);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maxpool_picks_max_and_index() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        // one channel, 4x4: windows have maxima at known positions
+        #[rustfmt::skip]
+        let x = vec![
+            1, 9, 2, 2,
+            3, 4, 8, 2,
+            5, 5, 1, 1,
+            6, 5, 1, 7,
+        ];
+        let (p, i) = maxpool2(&cfg, &mut c, &x, (1, 4, 4));
+        assert_eq!(p, vec![9, 8, 6, 7]);
+        // idx encodes (dy*2+dx): 9 at (0,1)=1, 8 at (1,0)=2, 6 at (1,0)=2, 7 at (1,1)=3
+        assert_eq!(i, vec![1, 2, 2, 3]);
+    }
+
+    #[test]
+    fn unpool_routes_by_index() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let g = vec![10, 20, 30, 40];
+        let idx = vec![1u8, 1, 2, 3];
+        let out = unpool2(&cfg, &mut c, &g, (1, 2, 2), &idx);
+        #[rustfmt::skip]
+        let want = vec![
+            0, 10, 0, 20,
+            0, 0, 0, 0,
+            0, 0, 0, 0,
+            30, 0, 0, 40,
+        ];
+        assert_eq!(out, want);
+    }
+
+    #[test]
+    fn pool_unpool_roundtrip_preserves_grad_at_max() {
+        let mut rng = crate::util::rng::Pcg32::seeded(8);
+        let (c_n, h, w) = (4, 8, 8);
+        let x: Vec<i32> = (0..c_n * h * w).map(|_| rng.below(1000) as i32 - 500).collect();
+        let cfg = HwConfig::pynq_z2();
+        let mut cost = Cost::new();
+        let (_, idx) = maxpool2(&cfg, &mut cost, &x, (c_n, h, w));
+        let g: Vec<i32> = (0..c_n * h / 2 * w / 2).map(|_| rng.below(100) as i32 + 1).collect();
+        let up = unpool2(&cfg, &mut cost, &g, (c_n, h / 2, w / 2), &idx);
+        // each window: exactly one nonzero, equal to the window's gradient
+        for ch in 0..c_n {
+            for py in 0..h / 2 {
+                for px in 0..w / 2 {
+                    let vals: Vec<i32> = (0..4)
+                        .map(|d| up[ch * h * w + (2 * py + d / 2) * w + (2 * px + d % 2)])
+                        .collect();
+                    let nz: Vec<&i32> = vals.iter().filter(|&&v| v != 0).collect();
+                    assert_eq!(nz.len(), 1);
+                    assert_eq!(*nz[0], g[ch * (h / 2) * (w / 2) + py * (w / 2) + px]);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn argmax_is_row_major_first_on_ties
+    () {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let x = vec![5, 5, 5, 5]; // all tied
+        let (_, i) = maxpool2(&cfg, &mut c, &x, (1, 2, 2));
+        assert_eq!(i, vec![0]); // strict > keeps the first
+    }
+}

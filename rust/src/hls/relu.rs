@@ -1,0 +1,121 @@
+//! ReLU gradient unit (paper §III-D + Fig. 4): elementwise BP dataflow
+//! for the three attribution methods, streaming over gradient tiles.
+//!
+//! The FP ReLU never appears as a standalone pass — it is fused into the
+//! conv/VMM output store (see conv::Post / vmm relu_mask). The BP pass
+//! streams gradient tiles through the method's dataflow. For saliency /
+//! guided, the FP mask for conv layers is *recomputed from the DRAM
+//! activation* (`mask == act > 0`) rather than stored — the paper §V
+//! memory optimization — so the load pattern charges an activation read.
+
+use super::{dram, Cost, HwConfig};
+use crate::attribution::Method;
+
+/// Where the positivity mask comes from during BP.
+pub enum MaskSource<'a> {
+    /// On-chip 1-bit mask (FC ReLU — the 128-bit BRAM mask).
+    OnChip(&'a [bool]),
+    /// Recompute from the post-ReLU activation stored in DRAM
+    /// (conv ReLUs; charges the activation reload traffic).
+    FromDram(&'a [i32]),
+    /// No mask needed (deconvnet).
+    None,
+}
+
+/// Apply the method's ReLU backward dataflow to a gradient tensor.
+pub fn backward(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    method: Method,
+    g: &[i32],
+    mask: MaskSource<'_>,
+) -> Vec<i32> {
+    let n = g.len();
+    // gradient tile streams through the elementwise unit; throughput is
+    // limited by the DRAM stream, one elem/cycle through the ALU lanes
+    dram::read_contig(cfg, cost, n as u64);
+    let out: Vec<i32> = match (&mask, method) {
+        (_, Method::Deconvnet) => g.iter().map(|&v| v.max(0)).collect(),
+        (MaskSource::OnChip(m), _) => {
+            assert_eq!(m.len(), n, "mask length mismatch");
+            g.iter().zip(m.iter()).map(|(&v, &b)| method.relu_bwd_raw(b, v)).collect()
+        }
+        (MaskSource::FromDram(act), _) => {
+            assert_eq!(act.len(), n, "activation length mismatch");
+            // charge the activation reload (the §V trade: traffic, not BRAM)
+            dram::read_contig(cfg, cost, n as u64);
+            g.iter().zip(act.iter()).map(|(&v, &a)| method.relu_bwd_raw(a > 0, v)).collect()
+        }
+        (MaskSource::None, m) => panic!("method {m} requires a mask source"),
+    };
+    let lanes = cfg.conv_macs_parallel() as u64;
+    cost.compute_cycles += (n as u64).div_ceil(lanes) + cfg.pipeline_depth;
+    dram::write_contig(cfg, cost, n as u64);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::QFormat;
+
+    fn q(vals: &[f32]) -> Vec<i32> {
+        let f = QFormat::paper16();
+        vals.iter().map(|&v| f.from_f32(v)).collect()
+    }
+
+    #[test]
+    fn saliency_uses_mask() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let g = q(&[1.0, -2.0, 3.0, -4.0]);
+        let m = vec![true, true, false, false];
+        let out = backward(&cfg, &mut c, Method::Saliency, &g, MaskSource::OnChip(&m));
+        assert_eq!(out, vec![g[0], g[1], 0, 0]);
+    }
+
+    #[test]
+    fn deconvnet_ignores_mask_entirely() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let g = q(&[1.0, -2.0, 3.0, -4.0]);
+        let out = backward(&cfg, &mut c, Method::Deconvnet, &g, MaskSource::None);
+        assert_eq!(out, vec![g[0], 0, g[2], 0]);
+    }
+
+    #[test]
+    fn guided_combines_both() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let g = q(&[1.0, -2.0, 3.0, -4.0]);
+        let m = vec![true, true, false, false];
+        let out = backward(&cfg, &mut c, Method::Guided, &g, MaskSource::OnChip(&m));
+        assert_eq!(out, vec![g[0], 0, 0, 0]);
+    }
+
+    #[test]
+    fn dram_mask_recompute_equals_onchip() {
+        let cfg = HwConfig::pynq_z2();
+        let g = q(&[0.5, -0.5, 2.0, -2.0, 1.0]);
+        // activation (post-relu, as in DRAM): zero where mask=false
+        let act = q(&[0.7, 0.0, 1.2, 0.0, 0.0]);
+        let m: Vec<bool> = act.iter().map(|&a| a > 0).collect();
+        for method in [Method::Saliency, Method::Guided] {
+            let mut c1 = Cost::new();
+            let mut c2 = Cost::new();
+            let a = backward(&cfg, &mut c1, method, &g, MaskSource::OnChip(&m));
+            let b = backward(&cfg, &mut c2, method, &g, MaskSource::FromDram(&act));
+            assert_eq!(a, b);
+            // the DRAM variant pays an extra activation read
+            assert!(c2.dram_read_bytes > c1.dram_read_bytes);
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "requires a mask source")]
+    fn saliency_without_mask_panics() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        backward(&cfg, &mut c, Method::Saliency, &[1, 2], MaskSource::None);
+    }
+}

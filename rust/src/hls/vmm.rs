@@ -1,0 +1,234 @@
+//! Tiled vector-matrix-multiply engine for FC layers (paper §III-C/E).
+//!
+//! FP: y = W·x (+b), output-stationary over input tiles. BP: gx = Wᵀ·g,
+//! the *same* block with the weight buffer loaded "in a transpose
+//! manner from DRAM" — modeled as a strided (per-element-burst) load
+//! pattern whose traffic the cost ledger charges accordingly.
+
+use super::{dram, Cost, HwConfig};
+
+/// FP fully-connected: `w` is [OUT,IN] row-major raw Q, `x` is [IN].
+/// Returns `[OUT]`. If `relu_mask` is Some, ReLU is fused into the
+/// output store and the positivity mask is written there (the FC ReLU
+/// mask the paper keeps on-chip).
+pub fn forward(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    x: &[i32],
+    bias: Option<&[i32]>,
+    mut relu_mask: Option<&mut Vec<bool>>,
+) -> Vec<i32> {
+    assert_eq!(w.len(), out_n * in_n);
+    assert_eq!(x.len(), in_n);
+    let q = cfg.q;
+    let mut out = vec![0i32; out_n];
+    let mut acc = vec![0i64; cfg.vmm_tile];
+
+    let mut o0 = 0;
+    while o0 < out_n {
+        let to = cfg.vmm_tile.min(out_n - o0);
+        acc[..to].fill(0);
+        let mut i0 = 0;
+        while i0 < in_n {
+            let ti = cfg.vmm_in_tile.min(in_n - i0);
+            // loads: x tile (contiguous), W tile (one burst per out row)
+            dram::read_contig(cfg, cost, ti as u64);
+            dram::read(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
+            // MAC loop: vmm_tile parallel lanes over the output elements
+            for o in 0..to {
+                let row = (o0 + o) * in_n;
+                let mut s = 0i64;
+                for i in 0..ti {
+                    s += w[row + i0 + i] as i64 * x[i0 + i] as i64;
+                }
+                acc[o] += s;
+            }
+            // cycles: ti iterations, `to` lanes unrolled (partial tiles
+            // still occupy the full block)
+            cost.compute_cycles += ti as u64 + cfg.pipeline_depth;
+            cost.macs += (to * ti) as u64;
+            i0 += ti;
+        }
+        for o in 0..to {
+            let mut v = q.rescale_acc(acc[o]);
+            if let Some(b) = bias {
+                v = q.add(v, b[o0 + o]);
+            }
+            if let Some(m) = relu_mask.as_deref_mut() {
+                m[o0 + o] = v > 0;
+                if v < 0 {
+                    v = 0;
+                }
+            }
+            out[o0 + o] = v;
+        }
+        dram::write_contig(cfg, cost, to as u64);
+        o0 += to;
+    }
+    out
+}
+
+/// BP fully-connected: gx = Wᵀ·g. Same compute block; the weight tile
+/// is loaded transposed, which on a row-major DRAM layout costs one
+/// burst per *element column* — the paper's modified access pattern
+/// (§III-E "loaded in a transpose manner").
+pub fn backward(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    g: &[i32],
+) -> Vec<i32> {
+    assert_eq!(w.len(), out_n * in_n);
+    assert_eq!(g.len(), out_n);
+    let q = cfg.q;
+    let mut out = vec![0i32; in_n];
+    let mut acc = vec![0i64; cfg.vmm_tile];
+
+    let mut i0 = 0;
+    while i0 < in_n {
+        let ti = cfg.vmm_tile.min(in_n - i0); // output elements of BP
+        acc[..ti].fill(0);
+        let mut o0 = 0;
+        while o0 < out_n {
+            let to = cfg.vmm_in_tile.min(out_n - o0); // reduction extent
+            dram::read_contig(cfg, cost, to as u64);
+            // transpose load: W[o0..o0+to, i0..i0+ti] fetched column-major;
+            // every element of a column is strided by in_n in DRAM, so the
+            // fetch degenerates to one short burst per *row segment*
+            // touched: `to` bursts (vs the FP path's `to`-rows-as-one-
+            // tile pattern costing vmm_tile bursts) — the price of the
+            // paper's transpose-manner access pattern
+            dram::read(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
+            for i in 0..ti {
+                let mut s = 0i64;
+                for o in 0..to {
+                    s += w[(o0 + o) * in_n + i0 + i] as i64 * g[o0 + o] as i64;
+                }
+                acc[i] += s;
+            }
+            cost.compute_cycles += to as u64 + cfg.pipeline_depth;
+            cost.macs += (to * ti) as u64;
+            o0 += to;
+        }
+        for i in 0..ti {
+            out[i0 + i] = q.rescale_acc(acc[i]);
+        }
+        dram::write_contig(cfg, cost, ti as u64);
+        i0 += ti;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::{quantize_slice, QFormat};
+    use crate::util::rng::Pcg32;
+
+    fn rand_vec(rng: &mut Pcg32, n: usize, lo: f32, hi: f32) -> Vec<f32> {
+        (0..n).map(|_| rng.uniform(lo, hi)).collect()
+    }
+
+    #[test]
+    fn forward_matches_f64() {
+        let mut rng = Pcg32::seeded(31);
+        let q = QFormat::paper16();
+        let (out_n, in_n) = (128, 300);
+        let wf = rand_vec(&mut rng, out_n * in_n, -0.1, 0.1);
+        let xf = rand_vec(&mut rng, in_n, -1.0, 1.0);
+        let bf = rand_vec(&mut rng, out_n, -0.5, 0.5);
+        let cfg = HwConfig::pynq_z2();
+        let mut cost = Cost::new();
+        let got = forward(
+            &cfg,
+            &mut cost,
+            &quantize_slice(q, &wf),
+            (out_n, in_n),
+            &quantize_slice(q, &xf),
+            Some(&quantize_slice(q, &bf)),
+            None,
+        );
+        for o in 0..out_n {
+            let want: f64 = (0..in_n)
+                .map(|i| wf[o * in_n + i] as f64 * xf[i] as f64)
+                .sum::<f64>()
+                + bf[o] as f64;
+            let g = q.to_f32(got[o]) as f64;
+            assert!((g - want).abs() < 0.05, "o={o}: {g} vs {want}");
+        }
+        assert_eq!(cost.macs, (out_n * in_n) as u64);
+    }
+
+    #[test]
+    fn backward_matches_transpose_product() {
+        let mut rng = Pcg32::seeded(32);
+        let q = QFormat::paper16();
+        let (out_n, in_n) = (10, 128);
+        let wf = rand_vec(&mut rng, out_n * in_n, -0.3, 0.3);
+        let gf = rand_vec(&mut rng, out_n, -1.0, 1.0);
+        let cfg = HwConfig::pynq_z2();
+        let mut cost = Cost::new();
+        let got = backward(
+            &cfg,
+            &mut cost,
+            &quantize_slice(q, &wf),
+            (out_n, in_n),
+            &quantize_slice(q, &gf),
+        );
+        for i in 0..in_n {
+            let want: f64 = (0..out_n).map(|o| wf[o * in_n + i] as f64 * gf[o] as f64).sum();
+            let g = q.to_f32(got[i]) as f64;
+            assert!((g - want).abs() < 0.05, "i={i}: {g} vs {want}");
+        }
+    }
+
+    #[test]
+    fn relu_fusion_masks_negatives() {
+        let q = QFormat::paper16();
+        // W = -I (2x2), x = (1, -1) -> y = (-1, 1) -> relu (0, 1)
+        let w = quantize_slice(q, &[-1.0, 0.0, 0.0, -1.0]);
+        let x = quantize_slice(q, &[1.0, -1.0]);
+        let cfg = HwConfig::pynq_z2();
+        let mut cost = Cost::new();
+        let mut mask = vec![false; 2];
+        let y = forward(&cfg, &mut cost, &w, (2, 2), &x, None, Some(&mut mask));
+        assert_eq!(y, vec![0, q.from_f32(1.0)]);
+        assert_eq!(mask, vec![false, true]);
+    }
+
+    #[test]
+    fn transpose_load_charges_more_bursts() {
+        let mut rng = Pcg32::seeded(33);
+        let q = QFormat::paper16();
+        let (out_n, in_n) = (128, 128);
+        let w = quantize_slice(q, &rand_vec(&mut rng, out_n * in_n, -0.1, 0.1));
+        let v = quantize_slice(q, &rand_vec(&mut rng, in_n, -1.0, 1.0));
+        let g = quantize_slice(q, &rand_vec(&mut rng, out_n, -1.0, 1.0));
+        let cfg = HwConfig::pynq_z2();
+        let mut cf = Cost::new();
+        let mut cb = Cost::new();
+        forward(&cfg, &mut cf, &w, (out_n, in_n), &v, None, None);
+        backward(&cfg, &mut cb, &w, (out_n, in_n), &g);
+        // same weight bytes, different burst pattern (BP strided)
+        assert_eq!(cf.macs, cb.macs);
+        assert!(cb.dram_bursts > cf.dram_bursts, "{} vs {}", cb.dram_bursts, cf.dram_bursts);
+    }
+
+    #[test]
+    fn vmm_tile_parallelism_in_cycles() {
+        let mut rng = Pcg32::seeded(34);
+        let q = QFormat::paper16();
+        let (out_n, in_n) = (128, 512);
+        let w = quantize_slice(q, &rand_vec(&mut rng, out_n * in_n, -0.1, 0.1));
+        let x = quantize_slice(q, &rand_vec(&mut rng, in_n, -1.0, 1.0));
+        let mut c16 = Cost::new();
+        let mut c32 = Cost::new();
+        forward(&HwConfig::with_unroll(4, 4, 16), &mut c16, &w, (out_n, in_n), &x, None, None);
+        forward(&HwConfig::with_unroll(4, 4, 32), &mut c32, &w, (out_n, in_n), &x, None, None);
+        assert_eq!(c16.macs, c32.macs);
+        assert!(c32.compute_cycles < c16.compute_cycles);
+    }
+}

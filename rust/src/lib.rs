@@ -1,0 +1,37 @@
+//! # attrax — feature-attribution acceleration on the edge
+//!
+//! Reproduction of *"Gradient Backpropagation based Feature Attribution
+//! to Enable Explainable-AI on the Edge"* (Bhat, Assoa, Raychowdhury,
+//! VLSI-SoC 2022) as a three-layer rust + JAX + Pallas stack.
+//!
+//! * [`hls`] — tiled fixed-point compute engines (the paper's HLS
+//!   library re-expressed in rust, functionally bit-exact, cycle- and
+//!   traffic-accounted).
+//! * [`sched`] — the FP/BP layer scheduler with fused non-linearities
+//!   and Table-I buffer reuse; [`sched::pipeline`] models the pipelined
+//!   FP/BP variant.
+//! * [`fpga`] — board capacities, HLS-style resource estimation, the
+//!   platform-configuration procedure (Table IV's knobs).
+//! * [`attribution`] — Saliency Map / DeconvNet / Guided Backprop
+//!   dataflows and mask-memory accounting (Table II, §V).
+//! * [`runtime`] — PJRT loader/executor for the AOT HLO artifacts (the
+//!   float golden path; python never runs at serving time).
+//! * [`coordinator`] — the XAI serving layer: request queue, worker
+//!   pool, shadow verification, metrics.
+//! * [`fx`], [`model`], [`data`], [`util`] — supporting substrates
+//!   (fixed-point math, network graphs/params, shapes-32, and the
+//!   from-scratch util kit for this offline environment).
+//!
+//! See DESIGN.md for the full system inventory and EXPERIMENTS.md for
+//! the paper-vs-measured results.
+
+pub mod attribution;
+pub mod coordinator;
+pub mod data;
+pub mod fpga;
+pub mod fx;
+pub mod hls;
+pub mod model;
+pub mod runtime;
+pub mod sched;
+pub mod util;

@@ -1,0 +1,416 @@
+//! attrax CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   info       print model/manifest/device summary (Table III)
+//!   attribute  run one attribution on the device simulator (+ golden)
+//!   serve      run the serving coordinator under synthetic load
+//!   sweep      Table IV: resources + latency across the three boards
+//!   masks      Table II / §V mask-memory accounting
+
+
+use attrax::attribution::{Method, ALL_METHODS};
+use attrax::coordinator::{server, Config, Coordinator};
+use attrax::fpga::{self, Board, ALL_BOARDS};
+use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::sched::{AttrOptions, Simulator};
+use attrax::util::cli::Command;
+use attrax::util::{log, ppm};
+
+fn main() {
+    log::init_from_env();
+    let mut argv: Vec<String> = std::env::args().skip(1).collect();
+    let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
+    let code = match sub.as_str() {
+        "info" => cmd_info(argv),
+        "attribute" => cmd_attribute(argv),
+        "serve" => cmd_serve(argv),
+        "sweep" => cmd_sweep(argv),
+        "masks" => cmd_masks(argv),
+        "report" => cmd_report(argv),
+        "fleet" => cmd_fleet(argv),
+        "help" | "--help" | "-h" => {
+            print_help();
+            0
+        }
+        other => {
+            eprintln!("unknown subcommand {other:?}\n");
+            print_help();
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn print_help() {
+    println!(
+        "attrax — feature-attribution acceleration on the edge (VLSI-SoC'22 reproduction)\n\n\
+         usage: attrax <subcommand> [options]\n\n\
+         subcommands:\n\
+         \x20 info        model + artifact summary (paper Table III)\n\
+         \x20 attribute   one attribution on the device simulator\n\
+         \x20 serve       serving coordinator under synthetic load\n\
+         \x20 sweep       per-board resources + latency (paper Table IV)\n\
+         \x20 masks       mask memory accounting (paper Table II / §V)\n\
+         \x20 report      Vitis-style synthesis report for a design point\n\
+         \x20 fleet       route a workload across a heterogeneous device fleet\n\n\
+         run `attrax <subcommand> --help` for options"
+    );
+}
+
+fn fail(e: impl std::fmt::Display) -> i32 {
+    eprintln!("error: {e}");
+    1
+}
+
+fn parse_or_exit(cmd: Command, argv: Vec<String>) -> attrax::util::cli::Args {
+    match cmd.parse(argv) {
+        Ok(a) => a,
+        Err(msg) => {
+            eprintln!("{msg}");
+            std::process::exit(2);
+        }
+    }
+}
+
+fn board_of(args: &attrax::util::cli::Args) -> Board {
+    let name = args.get_or("device", "pynq-z2");
+    Board::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown device {name:?} (pynq-z2 | ultra96-v2 | zcu104)");
+        std::process::exit(2);
+    })
+}
+
+fn method_of(args: &attrax::util::cli::Args) -> Method {
+    let name = args.get_or("method", "guided");
+    Method::parse(name).unwrap_or_else(|| {
+        eprintln!("unknown method {name:?} (saliency | deconvnet | guided)");
+        std::process::exit(2);
+    })
+}
+
+fn build_sim(board: Board) -> anyhow::Result<(Simulator, attrax::model::Manifest, attrax::model::Params)> {
+    let (manifest, params) = load_artifacts(&artifacts_dir())?;
+    let net = Network::table3();
+    anyhow::ensure!(
+        net.param_count() == manifest.param_count,
+        "artifact/net mismatch: {} vs {}",
+        manifest.param_count,
+        net.param_count()
+    );
+    let cfg = fpga::choose_config(board, &net, Method::Guided);
+    let sim = Simulator::new(net, &params, cfg)?;
+    Ok((sim, manifest, params))
+}
+
+fn cmd_info(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("info", "model + artifact summary").opt("device", "pynq-z2", "target board");
+    let args = parse_or_exit(cmd, argv);
+    let net = Network::table3();
+    println!("== network (paper Table III) ==");
+    print!("{}", net.structure_table());
+    println!(
+        "total parameters: {} ({:.2} MiB fp32)\nforward MACs: {}",
+        net.param_count(),
+        net.model_bytes(32) as f64 / (1024.0 * 1024.0),
+        net.forward_macs()
+    );
+    match load_artifacts(&artifacts_dir()) {
+        Ok((m, p)) => {
+            println!("\n== artifacts ({}) ==", m.dir.display());
+            println!(
+                "trained test accuracy: {:.2}%\nweights: {} tensors, {} bytes",
+                m.test_accuracy * 100.0,
+                p.tensors.len(),
+                m.weight_bytes
+            );
+            println!("HLO executables: {}", m.artifacts.len());
+        }
+        Err(e) => println!("\n(artifacts not available: {e})"),
+    }
+    let b = board_of(&args);
+    let cfg = fpga::choose_config(b, &net, Method::Guided);
+    println!(
+        "\n== device {b} ==\nchosen config: N_oh={} N_ow={} VMM={}",
+        cfg.n_oh, cfg.n_ow, cfg.vmm_tile
+    );
+    0
+}
+
+fn cmd_attribute(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("attribute", "run one attribution on the device simulator")
+        .opt("device", "pynq-z2", "target board")
+        .opt("method", "guided", "attribution method")
+        .opt("class", "0", "shapes-32 class to generate (0-9)")
+        .opt("seed", "7", "sample seed")
+        .opt("out", "", "write heatmap PPM to this path");
+    let args = parse_or_exit(cmd, argv);
+    let board = board_of(&args);
+    let method = method_of(&args);
+    let cls: usize = args.parse_num("class", 0);
+    let seed: u64 = args.parse_num("seed", 7);
+
+    let (sim, _, _) = match build_sim(board) {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let mut rng = attrax::util::rng::Pcg32::seeded(seed);
+    let sample = attrax::data::make_sample(cls % 10, &mut rng);
+    let r = sim.attribute(&sample.image, method, AttrOptions::default());
+    let fp_ms = r.fp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+    let bp_ms = r.bp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+    println!(
+        "class={} ({}) pred={} ({})\nmethod={method} device={board}",
+        cls % 10,
+        attrax::data::CLASS_NAMES[cls % 10],
+        r.pred,
+        attrax::data::CLASS_NAMES[r.pred.min(9)]
+    );
+    println!(
+        "device latency @{:.0}MHz: FP {:.2} ms + BP {:.2} ms = {:.2} ms",
+        fpga::TARGET_FREQ_MHZ,
+        fp_ms,
+        bp_ms,
+        fp_ms + bp_ms
+    );
+    println!(
+        "localization score: {:.3}",
+        attrax::data::localization_score(&r.relevance, &sample.mask)
+    );
+    if let Some(path) = args.get("out").filter(|s| !s.is_empty()) {
+        // channel-summed relevance heatmap
+        let mut heat = vec![0f32; 32 * 32];
+        for c in 0..3 {
+            for i in 0..1024 {
+                heat[i] += r.relevance[c * 1024 + i];
+            }
+        }
+        let rgb = ppm::relevance_to_rgb(&heat);
+        if let Err(e) = ppm::write_ppm(std::path::Path::new(path), &rgb, 32, 32) {
+            return fail(e);
+        }
+        println!("wrote {path}");
+    }
+    0
+}
+
+fn cmd_serve(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("serve", "serving coordinator under synthetic load")
+        .opt("device", "pynq-z2", "target board")
+        .opt("workers", "2", "worker threads (accelerator contexts)")
+        .opt("queue", "64", "queue depth (backpressure bound)")
+        .opt("requests", "60", "number of requests to drive")
+        .opt("rate", "0", "arrival rate req/s (0 = closed loop)")
+        .opt("verify", "0.1", "shadow-verify fraction on the PJRT golden path")
+        .opt("method", "", "fix one method (default: cycle all three)");
+    let args = parse_or_exit(cmd, argv);
+    let board = board_of(&args);
+    let (sim, manifest, params) = match build_sim(board) {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let verify: f64 = args.parse_num("verify", 0.1);
+    let cfg = Config {
+        workers: args.parse_num("workers", 2),
+        queue_depth: args.parse_num("queue", 64),
+        verify_fraction: verify,
+        freq_mhz: fpga::TARGET_FREQ_MHZ,
+    };
+    let artifacts = if verify > 0.0 { Some((manifest, params)) } else { None };
+    let coord = match Coordinator::start(sim, cfg, artifacts) {
+        Ok(c) => c,
+        Err(e) => return fail(e),
+    };
+    let method = args.get("method").filter(|s| !s.is_empty()).map(|s| {
+        Method::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown method {s:?}");
+            std::process::exit(2);
+        })
+    });
+    let spec = server::LoadSpec {
+        requests: args.parse_num("requests", 60),
+        rate: args.parse_num("rate", 0.0),
+        seed: 42,
+        method,
+    };
+    println!("driving {} requests on {board} ...", spec.requests);
+    let report = server::run_load(&coord, spec);
+    let snap = coord.shutdown();
+    println!("\n== load report ==");
+    println!(
+        "accuracy={:.1}% mean-localization={:.3} rejected={} wall={:.2}s",
+        report.accuracy * 100.0,
+        report.mean_localization,
+        report.rejected,
+        report.wall_s
+    );
+    println!("\n== coordinator metrics ==\n{}", snap.report());
+    0
+}
+
+fn cmd_sweep(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("sweep", "per-board resources + latency (Table IV)")
+        .opt("method", "guided", "attribution method")
+        .flag("pipelined", "include the pipelined FP/BP variant");
+    let args = parse_or_exit(cmd, argv);
+    let method = method_of(&args);
+    let (manifest, params) = match load_artifacts(&artifacts_dir()) {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let _ = manifest;
+    let net = Network::table3();
+    let mut rng = attrax::util::rng::Pcg32::seeded(3);
+    let sample = attrax::data::make_sample(0, &mut rng);
+
+    println!("{:<12} {:>9} {:>6} {:>5} {:>9} {:>9} {:>11}", "board", "phase", "BRAM", "DSP", "FF", "LUT", "latency(ms)");
+    for b in ALL_BOARDS {
+        let cfg = fpga::choose_config(b, &net, method);
+        let sim = match Simulator::new(net.clone(), &params, cfg) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        };
+        let r = sim.attribute(&sample.image, method, AttrOptions::default());
+        let fp_ms = r.fp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+        let tot_ms = fp_ms + r.bp_cost.latency_ms(fpga::TARGET_FREQ_MHZ);
+        let ufp = fpga::estimate_fp(&cfg, &net);
+        let ubp = fpga::estimate_fp_bp(&cfg, &net, method);
+        println!(
+            "{:<12} {:>9} {:>6} {:>5} {:>9} {:>9} {:>11.2}",
+            b.name(),
+            "FP",
+            ufp.bram_18k,
+            ufp.dsp,
+            ufp.ff,
+            ufp.lut,
+            fp_ms
+        );
+        println!(
+            "{:<12} {:>9} {:>6} {:>5} {:>9} {:>9} {:>11.2}",
+            "",
+            "FP+BP",
+            ubp.bram_18k,
+            ubp.dsp,
+            ubp.ff,
+            ubp.lut,
+            tot_ms
+        );
+        if args.flag("pipelined") {
+            let rep = attrax::sched::pipeline::analyze(&r.fp_cost, &r.bp_cost, fpga::TARGET_FREQ_MHZ);
+            let up = fpga::estimate_pipelined(&cfg, &net, method);
+            println!(
+                "{:<12} {:>9} {:>6} {:>5} {:>9} {:>9} {:>11.2}  ({:.2}x throughput)",
+                "",
+                "pipelined",
+                up.bram_18k,
+                up.dsp,
+                up.ff,
+                up.lut,
+                rep.interval_ms,
+                rep.speedup
+            );
+        }
+    }
+    0
+}
+
+fn cmd_report(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("report", "Vitis-style synthesis report for a design point")
+        .opt("device", "pynq-z2", "target board")
+        .opt("method", "guided", "attribution method");
+    let args = parse_or_exit(cmd, argv);
+    let board = board_of(&args);
+    let method = method_of(&args);
+    let (sim, _, _) = match build_sim(board) {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let mut rng = attrax::util::rng::Pcg32::seeded(1);
+    let sample = attrax::data::make_sample(0, &mut rng);
+    let r = sim.attribute(&sample.image, method, AttrOptions::default());
+    print!(
+        "{}",
+        attrax::fpga::report::render(board, &sim.cfg, &sim.net, method, &r.fp_cost, &r.bp_cost)
+    );
+    0
+}
+
+fn cmd_fleet(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("fleet", "route a workload across a heterogeneous device fleet")
+        .opt("requests", "30", "number of requests")
+        .opt("method", "guided", "attribution method");
+    let args = parse_or_exit(cmd, argv);
+    let method = method_of(&args);
+    let n: usize = args.parse_num("requests", 30);
+    let (manifest, params) = match load_artifacts(&artifacts_dir()) {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let _ = manifest;
+    let net = Network::table3();
+    let mut rng = attrax::util::rng::Pcg32::seeded(6);
+    let probe = attrax::data::make_sample(0, &mut rng).image;
+    let fleet = &match attrax::coordinator::fleet::Fleet::new(
+        &ALL_BOARDS, &net, &params, &probe, method,
+    ) {
+        Ok(f) => f,
+        Err(e) => return fail(e),
+    };
+    println!(
+        "fleet of {} devices, modeled aggregate throughput {:.1} img/s @100MHz",
+        fleet.devices.len(),
+        fleet.modeled_throughput_ips()
+    );
+    let t0 = std::time::Instant::now();
+    // concurrent clients so the ETA router actually spreads load
+    let samples: Vec<attrax::data::Sample> =
+        (0..n).map(|i| attrax::data::make_sample(i % 10, &mut rng)).collect();
+    let correct = &std::sync::atomic::AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for chunk in samples.chunks(n.div_ceil(4).max(1)) {
+            scope.spawn(move || {
+                for s in chunk {
+                    let (_, r) = fleet.attribute(&s.image, method);
+                    if r.pred == s.label {
+                        correct.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                }
+            });
+        }
+    });
+    let correct = correct.load(std::sync::atomic::Ordering::Relaxed);
+    println!("\nserved {n} requests in {:.2}s host time (4 clients), accuracy {:.1}%", t0.elapsed().as_secs_f64(), 100.0 * correct as f64 / n as f64);
+    for (board, count) in fleet.completion_counts() {
+        println!("  {board:<12} handled {count}");
+    }
+    0
+}
+
+fn cmd_masks(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("masks", "mask memory accounting (Table II / §V)");
+    let _ = parse_or_exit(cmd, argv);
+    let net = Network::table3();
+    let budget = attrax::attribution::memory::mask_budget(&net);
+    println!("{:<22} {:>10} {:>10} {:>10}", "", "saliency", "deconvnet", "guided");
+    print!("{:<22}", "ReLU mask needed");
+    for m in ALL_METHODS {
+        print!(" {:>10}", if m.needs_relu_mask() { "yes" } else { "no" });
+    }
+    print!("\n{:<22}", "pool mask needed");
+    for m in ALL_METHODS {
+        print!(" {:>10}", if m.needs_pool_mask() { "yes" } else { "no" });
+    }
+    print!("\n{:<22}", "on-chip bits");
+    for m in ALL_METHODS {
+        print!(" {:>10}", budget.onchip_bits(m));
+    }
+    println!();
+    let cache = attrax::attribution::memory::autodiff_cache_bits(&net, 32);
+    println!(
+        "\nframework activation cache: {} bits ({:.2} Mb)\nreduction factor (saliency): {:.1}x  (paper: ~137x)",
+        cache,
+        cache as f64 / 1e6,
+        attrax::attribution::memory::reduction_factor(&net, Method::Saliency)
+    );
+    0
+}
+

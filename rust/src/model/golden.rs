@@ -1,0 +1,70 @@
+//! Loader for `artifacts/golden.{json,bin}` — sample inputs with
+//! jax-computed expected outputs, used by integration tests and the
+//! shadow verifier to cross-check the rust paths against Layer 2.
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+pub const IMG_LEN: usize = 3 * 32 * 32;
+pub const NUM_LOGITS: usize = 10;
+
+#[derive(Clone, Debug)]
+pub struct GoldenRecord {
+    pub label: usize,
+    pub pred: usize,
+    pub image: Vec<f32>,                 // [3*32*32]
+    pub logits: Vec<f32>,                // [10]
+    pub relevance: Vec<(String, Vec<f32>)>, // per method, [3*32*32]
+}
+
+pub fn load_golden(dir: &Path) -> anyhow::Result<Vec<GoldenRecord>> {
+    let meta_text = std::fs::read_to_string(dir.join("golden.json"))
+        .map_err(|e| anyhow::anyhow!("reading golden.json: {e}"))?;
+    let meta = Json::parse(&meta_text).map_err(|e| anyhow::anyhow!("golden.json: {e}"))?;
+    let count = meta.get("count").and_then(|v| v.as_usize()).unwrap_or(0);
+    let methods: Vec<String> = meta
+        .get("methods")
+        .and_then(|v| v.as_arr())
+        .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+        .unwrap_or_default();
+    let recs = meta
+        .get("records")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow::anyhow!("golden.json missing records"))?;
+
+    let bytes = std::fs::read(dir.join("golden.bin"))?;
+    let rec_floats = IMG_LEN + NUM_LOGITS + methods.len() * IMG_LEN;
+    anyhow::ensure!(
+        bytes.len() == count * rec_floats * 4,
+        "golden.bin size {} != {} records x {} floats",
+        bytes.len(),
+        count,
+        rec_floats
+    );
+
+    let f32_at = |idx: usize| -> f32 {
+        let b = &bytes[idx * 4..idx * 4 + 4];
+        f32::from_le_bytes([b[0], b[1], b[2], b[3]])
+    };
+
+    let mut out = Vec::with_capacity(count);
+    for (i, r) in recs.iter().enumerate().take(count) {
+        let base = i * rec_floats;
+        let image: Vec<f32> = (0..IMG_LEN).map(|k| f32_at(base + k)).collect();
+        let logits: Vec<f32> = (0..NUM_LOGITS).map(|k| f32_at(base + IMG_LEN + k)).collect();
+        let mut relevance = Vec::new();
+        for (mi, m) in methods.iter().enumerate() {
+            let off = base + IMG_LEN + NUM_LOGITS + mi * IMG_LEN;
+            relevance.push((m.clone(), (0..IMG_LEN).map(|k| f32_at(off + k)).collect()));
+        }
+        out.push(GoldenRecord {
+            label: r.get("label").and_then(|v| v.as_usize()).unwrap_or(0),
+            pred: r.get("pred").and_then(|v| v.as_usize()).unwrap_or(0),
+            image,
+            logits,
+            relevance,
+        });
+    }
+    Ok(out)
+}

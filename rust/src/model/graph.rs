@@ -1,0 +1,322 @@
+//! CNN graph representation + shape inference (S2).
+//!
+//! The layer vocabulary is exactly what the paper's HLS library supports
+//! (§III-A): convolution, fully-connected, ReLU, 2x2 max-pool, flatten.
+//! `Network::table3()` builds the paper's evaluation CNN; arbitrary
+//! networks over the same vocabulary can be composed with
+//! `NetworkBuilder` (the library is a framework, not a fixed pipeline).
+
+use std::fmt;
+
+/// Activation/tensor shape flowing between layers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Shape {
+    Chw(usize, usize, usize),
+    Flat(usize),
+}
+
+impl Shape {
+    pub fn elems(&self) -> usize {
+        match *self {
+            Shape::Chw(c, h, w) => c * h * w,
+            Shape::Flat(n) => n,
+        }
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match *self {
+            Shape::Chw(c, h, w) => write!(f, "[{c},{h},{w}]"),
+            Shape::Flat(n) => write!(f, "[{n}]"),
+        }
+    }
+}
+
+/// One layer of the network. `Conv`/`Fc` carry parameter names that key
+/// into the loaded `Params` store.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Layer {
+    Conv { name: String, in_ch: usize, out_ch: usize, k: usize, pad: usize },
+    Relu,
+    MaxPool2,
+    Flatten,
+    Fc { name: String, in_dim: usize, out_dim: usize },
+}
+
+impl Layer {
+    /// Parameter count (weights + bias) for Table III.
+    pub fn param_count(&self) -> usize {
+        match self {
+            Layer::Conv { in_ch, out_ch, k, .. } => out_ch * in_ch * k * k + out_ch,
+            Layer::Fc { in_dim, out_dim, .. } => out_dim * in_dim + out_dim,
+            _ => 0,
+        }
+    }
+
+    /// MAC count for one forward evaluation given the input shape.
+    pub fn macs(&self, input: Shape) -> usize {
+        match (self, input) {
+            (Layer::Conv { in_ch, out_ch, k, pad, .. }, Shape::Chw(c, h, w)) => {
+                assert_eq!(c, *in_ch);
+                let oh = h + 2 * pad - k + 1;
+                let ow = w + 2 * pad - k + 1;
+                out_ch * oh * ow * in_ch * k * k
+            }
+            (Layer::Fc { in_dim, out_dim, .. }, s) => {
+                assert_eq!(s.elems(), *in_dim);
+                in_dim * out_dim
+            }
+            _ => 0,
+        }
+    }
+
+    pub fn kind(&self) -> &'static str {
+        match self {
+            Layer::Conv { .. } => "Conv2d",
+            Layer::Relu => "ReLU",
+            Layer::MaxPool2 => "MaxPool2d",
+            Layer::Flatten => "Flatten",
+            Layer::Fc { .. } => "FC",
+        }
+    }
+
+    /// Output shape for a given input shape; Err on mismatch.
+    pub fn infer(&self, input: Shape) -> Result<Shape, String> {
+        match (self, input) {
+            (Layer::Conv { in_ch, out_ch, k, pad, name }, Shape::Chw(c, h, w)) => {
+                if c != *in_ch {
+                    return Err(format!("{name}: expects {in_ch} input channels, got {c}"));
+                }
+                let oh = (h + 2 * pad).checked_sub(k - 1).ok_or("conv shrinks below zero")?;
+                let ow = (w + 2 * pad).checked_sub(k - 1).ok_or("conv shrinks below zero")?;
+                Ok(Shape::Chw(*out_ch, oh, ow))
+            }
+            (Layer::Conv { name, .. }, s) => Err(format!("{name}: conv needs CHW input, got {s}")),
+            (Layer::Relu, s) => Ok(s),
+            (Layer::MaxPool2, Shape::Chw(c, h, w)) => {
+                if h % 2 != 0 || w % 2 != 0 {
+                    return Err(format!("maxpool needs even dims, got [{c},{h},{w}]"));
+                }
+                Ok(Shape::Chw(c, h / 2, w / 2))
+            }
+            (Layer::MaxPool2, s) => Err(format!("maxpool needs CHW input, got {s}")),
+            (Layer::Flatten, s) => Ok(Shape::Flat(s.elems())),
+            (Layer::Fc { name, in_dim, out_dim }, s) => {
+                if s.elems() != *in_dim {
+                    return Err(format!("{name}: expects {in_dim} inputs, got {}", s.elems()));
+                }
+                Ok(Shape::Flat(*out_dim))
+            }
+        }
+    }
+}
+
+/// A validated feed-forward network.
+#[derive(Clone, Debug)]
+pub struct Network {
+    pub input: Shape,
+    pub layers: Vec<Layer>,
+    /// shapes[i] is the input shape of layers[i]; shapes[len] the output.
+    pub shapes: Vec<Shape>,
+}
+
+impl Network {
+    pub fn output_shape(&self) -> Shape {
+        *self.shapes.last().unwrap()
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.layers.iter().map(|l| l.param_count()).sum()
+    }
+
+    /// Model size in bytes at the given parameter precision.
+    pub fn model_bytes(&self, bits_per_param: usize) -> usize {
+        self.param_count() * bits_per_param / 8
+    }
+
+    /// Total forward MACs (batch 1).
+    pub fn forward_macs(&self) -> usize {
+        self.layers.iter().enumerate().map(|(i, l)| l.macs(self.shapes[i])).sum()
+    }
+
+    /// The paper's Table III CNN.
+    pub fn table3() -> Network {
+        NetworkBuilder::new(Shape::Chw(3, 32, 32))
+            .conv("conv1", 32, 3, 1)
+            .relu()
+            .conv("conv2", 32, 3, 1)
+            .relu()
+            .maxpool2()
+            .conv("conv3", 64, 3, 1)
+            .relu()
+            .conv("conv4", 64, 3, 1)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("fc1", 128)
+            .relu()
+            .fc("fc2", 10)
+            .build()
+            .expect("table3 network is well-formed")
+    }
+
+    /// Pretty Table-III-style structure dump.
+    pub fn structure_table(&self) -> String {
+        let mut s = String::from("Input Shape     Layer (type)  Output Shape    # parameters\n");
+        for (i, l) in self.layers.iter().enumerate() {
+            let pc = l.param_count();
+            s.push_str(&format!(
+                "{:<15} {:<13} {:<15} {}\n",
+                self.shapes[i].to_string(),
+                l.kind(),
+                self.shapes[i + 1].to_string(),
+                if pc > 0 { pc.to_string() } else { String::new() }
+            ));
+        }
+        s
+    }
+}
+
+/// Chainable builder with validation at `build()`.
+pub struct NetworkBuilder {
+    input: Shape,
+    layers: Vec<Layer>,
+}
+
+impl NetworkBuilder {
+    pub fn new(input: Shape) -> Self {
+        NetworkBuilder { input, layers: Vec::new() }
+    }
+    pub fn conv(mut self, name: &str, out_ch: usize, k: usize, pad: usize) -> Self {
+        // in_ch resolved at build time from the running shape
+        self.layers.push(Layer::Conv { name: name.to_string(), in_ch: 0, out_ch, k, pad });
+        self
+    }
+    pub fn relu(mut self) -> Self {
+        self.layers.push(Layer::Relu);
+        self
+    }
+    pub fn maxpool2(mut self) -> Self {
+        self.layers.push(Layer::MaxPool2);
+        self
+    }
+    pub fn flatten(mut self) -> Self {
+        self.layers.push(Layer::Flatten);
+        self
+    }
+    pub fn fc(mut self, name: &str, out_dim: usize) -> Self {
+        self.layers.push(Layer::Fc { name: name.to_string(), in_dim: 0, out_dim });
+        self
+    }
+
+    pub fn build(mut self) -> Result<Network, String> {
+        let mut shapes = vec![self.input];
+        let mut cur = self.input;
+        for l in self.layers.iter_mut() {
+            // resolve deferred dims
+            match l {
+                Layer::Conv { in_ch, .. } => {
+                    if let Shape::Chw(c, _, _) = cur {
+                        *in_ch = c;
+                    }
+                }
+                Layer::Fc { in_dim, .. } => *in_dim = cur.elems(),
+                _ => {}
+            }
+            cur = l.infer(cur)?;
+            shapes.push(cur);
+        }
+        Ok(Network { input: self.input, layers: self.layers, shapes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table3_matches_paper() {
+        let net = Network::table3();
+        // paper Table III per-layer parameter counts
+        let conv_params: Vec<usize> = net
+            .layers
+            .iter()
+            .filter(|l| matches!(l, Layer::Conv { .. } | Layer::Fc { .. }))
+            .map(|l| l.param_count())
+            .collect();
+        assert_eq!(conv_params, vec![896, 9248, 18496, 36928, 524416, 1290]);
+        assert_eq!(net.param_count(), 591_274);
+        // 2.26 MiB at fp32 (paper's "2.26 MB" model size)
+        let mib = net.model_bytes(32) as f64 / (1024.0 * 1024.0);
+        assert!((mib - 2.2555).abs() < 0.01, "model MiB = {mib}");
+        assert_eq!(net.output_shape(), Shape::Flat(10));
+    }
+
+    #[test]
+    fn table3_shapes_match_paper() {
+        let net = Network::table3();
+        let expect = [
+            Shape::Chw(3, 32, 32),
+            Shape::Chw(32, 32, 32),  // conv1
+            Shape::Chw(32, 32, 32),  // relu
+            Shape::Chw(32, 32, 32),  // conv2
+            Shape::Chw(32, 32, 32),  // relu
+            Shape::Chw(32, 16, 16),  // pool
+            Shape::Chw(64, 16, 16),  // conv3
+            Shape::Chw(64, 16, 16),  // relu
+            Shape::Chw(64, 16, 16),  // conv4
+            Shape::Chw(64, 16, 16),  // relu
+            Shape::Chw(64, 8, 8),    // pool
+            Shape::Flat(4096),       // flatten
+            Shape::Flat(128),        // fc1
+            Shape::Flat(128),        // relu
+            Shape::Flat(10),         // fc2
+        ];
+        assert_eq!(net.shapes, expect);
+    }
+
+    #[test]
+    fn forward_macs() {
+        let net = Network::table3();
+        // conv1 884736 + conv2 9437184 + conv3 4718592 + conv4 9437184
+        //  + fc1 524288 + fc2 1280
+        assert_eq!(net.forward_macs(), 25_003_264);
+    }
+
+    #[test]
+    fn builder_rejects_bad_graphs() {
+        // odd spatial dim into maxpool
+        let e = NetworkBuilder::new(Shape::Chw(3, 31, 31)).maxpool2().build();
+        assert!(e.is_err());
+        // conv after flatten
+        let e = NetworkBuilder::new(Shape::Chw(3, 32, 32))
+            .flatten()
+            .conv("c", 8, 3, 1)
+            .build();
+        assert!(e.is_err());
+    }
+
+    #[test]
+    fn structure_table_mentions_all_layers() {
+        let t = Network::table3().structure_table();
+        for k in ["Conv2d", "MaxPool2d", "FC", "ReLU", "524416"] {
+            assert!(t.contains(k), "missing {k} in:\n{t}");
+        }
+    }
+
+    #[test]
+    fn custom_network_composes() {
+        // a smaller CNN over the same vocabulary (library flexibility)
+        let net = NetworkBuilder::new(Shape::Chw(1, 16, 16))
+            .conv("a", 8, 3, 1)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("out", 4)
+            .build()
+            .unwrap();
+        assert_eq!(net.output_shape(), Shape::Flat(4));
+        assert_eq!(net.param_count(), 8 * 9 + 8 + 8 * 64 * 4 + 4);
+    }
+}

@@ -1,0 +1,169 @@
+//! Loader for `artifacts/manifest.json` — the contract between the
+//! python compile path and the rust runtime.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug)]
+pub struct ParamEntry {
+    pub name: String,
+    pub kind: String, // "conv" | "fc" | "bias"
+    pub shape: Vec<usize>,
+    pub offset_bytes: usize,
+    pub size_bytes: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub network: String,
+    pub num_classes: usize,
+    pub img_shape: Vec<usize>,
+    pub class_names: Vec<String>,
+    pub methods: Vec<String>,
+    pub param_count: usize,
+    pub weight_bytes: usize,
+    pub params: Vec<ParamEntry>,
+    pub artifacts: BTreeMap<String, String>,
+    pub test_accuracy: f64,
+    pub mask_bits_onchip: BTreeMap<String, usize>,
+    pub autodiff_cache_bits: usize,
+}
+
+fn req<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
+    j.get(key).ok_or_else(|| anyhow::anyhow!("manifest missing key {key:?}"))
+}
+
+impl Manifest {
+    /// Parse `<dir>/manifest.json`.
+    pub fn load(dir: &Path) -> anyhow::Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?;
+
+        let params = req(&j, "params")?
+            .as_arr()
+            .ok_or_else(|| anyhow::anyhow!("params is not an array"))?
+            .iter()
+            .map(|p| -> anyhow::Result<ParamEntry> {
+                Ok(ParamEntry {
+                    name: req(p, "name")?.as_str().unwrap_or_default().to_string(),
+                    kind: req(p, "kind")?.as_str().unwrap_or_default().to_string(),
+                    shape: req(p, "shape")?
+                        .as_arr()
+                        .unwrap_or(&[])
+                        .iter()
+                        .filter_map(|d| d.as_usize())
+                        .collect(),
+                    offset_bytes: req(p, "offset_bytes")?.as_usize().unwrap_or(0),
+                    size_bytes: req(p, "size_bytes")?.as_usize().unwrap_or(0),
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
+
+        let str_arr = |key: &str| -> Vec<String> {
+            j.get(key)
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|s| s.as_str().map(String::from)).collect())
+                .unwrap_or_default()
+        };
+        let usize_map = |key: &str| -> BTreeMap<String, usize> {
+            j.get(key)
+                .and_then(|v| v.as_obj())
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_usize().map(|u| (k.clone(), u)))
+                        .collect()
+                })
+                .unwrap_or_default()
+        };
+
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            network: req(&j, "network")?.as_str().unwrap_or_default().to_string(),
+            num_classes: req(&j, "num_classes")?.as_usize().unwrap_or(0),
+            img_shape: req(&j, "img_shape")?
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|d| d.as_usize())
+                .collect(),
+            class_names: str_arr("class_names"),
+            methods: str_arr("methods"),
+            param_count: req(&j, "param_count")?.as_usize().unwrap_or(0),
+            weight_bytes: req(&j, "weight_bytes")?.as_usize().unwrap_or(0),
+            params,
+            artifacts: j
+                .get("artifacts")
+                .and_then(|v| v.as_obj())
+                .map(|m| {
+                    m.iter()
+                        .filter_map(|(k, v)| v.as_str().map(|s| (k.clone(), s.to_string())))
+                        .collect()
+                })
+                .unwrap_or_default(),
+            test_accuracy: j.get("test_accuracy").and_then(|v| v.as_f64()).unwrap_or(0.0),
+            mask_bits_onchip: usize_map("mask_bits_onchip"),
+            autodiff_cache_bits: j
+                .get("autodiff_cache_bits")
+                .and_then(|v| v.as_usize())
+                .unwrap_or(0),
+        })
+    }
+
+    /// Absolute path of a named HLO artifact.
+    pub fn hlo_path(&self, name: &str) -> anyhow::Result<PathBuf> {
+        let f = self
+            .artifacts
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("no artifact named {name:?} in manifest"))?;
+        Ok(self.dir.join(f))
+    }
+}
+
+/// Default artifacts directory: `$ATTRAX_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("ATTRAX_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("attrax_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"network":"t","num_classes":10,"img_shape":[3,32,32],
+                "class_names":["a"],"methods":["saliency"],
+                "param_count":2,"weight_bytes":8,
+                "params":[{"name":"w","kind":"fc","shape":[2],"offset_bytes":0,"size_bytes":8}],
+                "artifacts":{"forward":"forward.hlo.txt"},
+                "test_accuracy":0.5,
+                "mask_bits_onchip":{"saliency":24704},
+                "autodiff_cache_bits":3543040}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.num_classes, 10);
+        assert_eq!(m.params[0].shape, vec![2]);
+        assert_eq!(m.mask_bits_onchip["saliency"], 24704);
+        assert!(m.hlo_path("forward").unwrap().ends_with("forward.hlo.txt"));
+        assert!(m.hlo_path("nope").is_err());
+    }
+
+    #[test]
+    fn missing_key_is_error() {
+        let dir = std::env::temp_dir().join("attrax_manifest_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), r#"{"network":"t"}"#).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

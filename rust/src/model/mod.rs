@@ -1,0 +1,11 @@
+//! Model substrate (S2): network graph, parameter store, artifact
+//! manifest, golden test vectors.
+
+pub mod golden;
+pub mod graph;
+pub mod manifest;
+pub mod params;
+
+pub use graph::{Layer, Network, NetworkBuilder, Shape};
+pub use manifest::{artifacts_dir, Manifest};
+pub use params::{load_artifacts, Params, Tensor};

@@ -1,0 +1,150 @@
+//! Parameter store: reads `weights.bin` per the manifest's param table —
+//! the DRAM image of the model (paper §III-A: "CNN model parameters are
+//! stored in DRAM").
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use super::manifest::Manifest;
+
+/// One named tensor.
+#[derive(Clone, Debug)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl Tensor {
+    pub fn elems(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+/// All model parameters, keyed by name (`conv1_w`, `conv1_b`, ...).
+#[derive(Clone, Debug)]
+pub struct Params {
+    pub tensors: BTreeMap<String, Tensor>,
+}
+
+impl Params {
+    /// Load from `<manifest.dir>/weights.bin` with layout validation.
+    pub fn load(manifest: &Manifest) -> anyhow::Result<Params> {
+        let path = manifest.dir.join("weights.bin");
+        let bytes = std::fs::read(&path)
+            .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
+        if bytes.len() != manifest.weight_bytes {
+            anyhow::bail!(
+                "weights.bin is {} bytes, manifest says {}",
+                bytes.len(),
+                manifest.weight_bytes
+            );
+        }
+        let mut tensors = BTreeMap::new();
+        for p in &manifest.params {
+            let elems: usize = p.shape.iter().product();
+            if p.size_bytes != elems * 4 {
+                anyhow::bail!("param {}: size {} != shape {:?}", p.name, p.size_bytes, p.shape);
+            }
+            let end = p.offset_bytes + p.size_bytes;
+            if end > bytes.len() {
+                anyhow::bail!("param {} overruns weights.bin", p.name);
+            }
+            let data: Vec<f32> = bytes[p.offset_bytes..end]
+                .chunks_exact(4)
+                .map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]]))
+                .collect();
+            tensors.insert(p.name.clone(), Tensor { shape: p.shape.clone(), data });
+        }
+        Ok(Params { tensors })
+    }
+
+    pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
+        self.tensors
+            .get(name)
+            .ok_or_else(|| anyhow::anyhow!("missing parameter {name:?}"))
+    }
+
+    /// Conv weight [O,I,K,K] + bias [O] pair for layer `name`.
+    pub fn conv(&self, name: &str) -> anyhow::Result<(&Tensor, &Tensor)> {
+        Ok((self.get(&format!("{name}_w"))?, self.get(&format!("{name}_b"))?))
+    }
+
+    /// FC weight [OUT,IN] + bias [OUT] pair for layer `name`.
+    pub fn fc(&self, name: &str) -> anyhow::Result<(&Tensor, &Tensor)> {
+        self.conv(name)
+    }
+
+    pub fn total_elems(&self) -> usize {
+        self.tensors.values().map(|t| t.elems()).sum()
+    }
+}
+
+/// Load manifest + params from an artifacts directory in one call.
+pub fn load_artifacts(dir: &Path) -> anyhow::Result<(Manifest, Params)> {
+    let m = Manifest::load(dir)?;
+    let p = Params::load(&m)?;
+    Ok((m, p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::manifest::ParamEntry;
+    use std::path::PathBuf;
+
+    fn fake_manifest(dir: PathBuf, params: Vec<ParamEntry>, weight_bytes: usize) -> Manifest {
+        Manifest {
+            dir,
+            network: "t".into(),
+            num_classes: 2,
+            img_shape: vec![1, 2, 2],
+            class_names: vec![],
+            methods: vec![],
+            param_count: 0,
+            weight_bytes,
+            params,
+            artifacts: Default::default(),
+            test_accuracy: 0.0,
+            mask_bits_onchip: Default::default(),
+            autodiff_cache_bits: 0,
+        }
+    }
+
+    #[test]
+    fn roundtrip_load() {
+        let dir = std::env::temp_dir().join("attrax_params_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let vals: Vec<f32> = vec![1.5, -2.0, 3.25, 0.0, 9.0, -1.0];
+        let bytes: Vec<u8> = vals.iter().flat_map(|v| v.to_le_bytes()).collect();
+        std::fs::write(dir.join("weights.bin"), &bytes).unwrap();
+        let m = fake_manifest(
+            dir,
+            vec![
+                ParamEntry { name: "a_w".into(), kind: "fc".into(), shape: vec![2, 2], offset_bytes: 0, size_bytes: 16 },
+                ParamEntry { name: "a_b".into(), kind: "bias".into(), shape: vec![2], offset_bytes: 16, size_bytes: 8 },
+            ],
+            24,
+        );
+        let p = Params::load(&m).unwrap();
+        assert_eq!(p.get("a_w").unwrap().data, vec![1.5, -2.0, 3.25, 0.0]);
+        assert_eq!(p.get("a_b").unwrap().data, vec![9.0, -1.0]);
+        let (w, b) = p.fc("a").unwrap();
+        assert_eq!(w.shape, vec![2, 2]);
+        assert_eq!(b.elems(), 2);
+        assert_eq!(p.total_elems(), 6);
+        assert!(p.get("nope").is_err());
+    }
+
+    #[test]
+    fn size_mismatch_rejected() {
+        let dir = std::env::temp_dir().join("attrax_params_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("weights.bin"), [0u8; 8]).unwrap();
+        let m = fake_manifest(
+            dir,
+            vec![ParamEntry { name: "w".into(), kind: "fc".into(), shape: vec![4], offset_bytes: 0, size_bytes: 16 }],
+            8,
+        );
+        assert!(Params::load(&m).is_err());
+    }
+}

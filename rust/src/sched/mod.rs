@@ -1,0 +1,592 @@
+//! Layer scheduler (S6, paper §III-F): executes a network FP then BP on
+//! the HLS engines, tile by tile, switching DRAM access patterns
+//! between phases per Table I.
+//!
+//! The execution plan fuses non-linear layers into their producers the
+//! way the paper's library does: ReLU into the conv/VMM output store,
+//! max-pool into the store scan, and (during BP) unpool + ReLU-mask
+//! into the gradient conv via the 2-bit argmax indices. An `unfused`
+//! option executes pool/unpool as standalone passes instead — the
+//! ablation that isolates how much the fusion buys (EXPERIMENTS.md E9).
+
+pub mod pipeline;
+
+use crate::attribution::Method;
+use crate::fx::QFormat;
+use crate::hls::conv::{self, Post};
+use crate::hls::relu::{self, MaskSource};
+use crate::hls::{pool, vmm, Cost, HwConfig};
+use crate::model::{Layer, Network, Params, Shape};
+
+/// One fused execution unit of the plan.
+#[derive(Clone, Debug)]
+enum Unit {
+    Conv {
+        name: String,
+        w: Vec<i32>,     // [O,I,K,K] — FP view
+        w_bp: Vec<i32>,  // flipped-transposed view (Table I BP load)
+        bias: Vec<i32>,
+        in_shape: (usize, usize, usize),
+        out_ch: usize,
+        k: usize,
+        pad: usize,
+        relu: bool,
+        pool: bool,
+    },
+    Pool {
+        in_shape: (usize, usize, usize),
+    },
+    Fc {
+        name: String,
+        w: Vec<i32>, // [OUT,IN]
+        out_n: usize,
+        in_n: usize,
+        bias: Vec<i32>,
+        relu: bool,
+    },
+}
+
+/// Per-image state the FP pass leaves behind for BP: exactly the data
+/// the paper keeps (DRAM activations + on-chip masks), nothing more.
+#[derive(Clone, Debug)]
+pub struct FpState {
+    /// Post-ReLU activation each conv unit left in DRAM (pooled when the
+    /// unit has a fused pool — only pooled values travel to DRAM).
+    dram_acts: Vec<Option<Vec<i32>>>,
+    /// 2-bit pool argmax masks (on-chip BRAM).
+    pool_idx: Vec<Option<Vec<u8>>>,
+    /// FC ReLU masks (on-chip BRAM, the 128-bit mask).
+    fc_masks: Vec<Option<Vec<bool>>>,
+}
+
+/// Forward result.
+#[derive(Clone, Debug)]
+pub struct FpResult {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub cost: Cost,
+    pub state: FpState,
+}
+
+/// Attribution (FP+BP) result.
+#[derive(Clone, Debug)]
+pub struct AttrResult {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    /// Dequantized input-feature relevance, [C*H*W].
+    pub relevance: Vec<f32>,
+    pub fp_cost: Cost,
+    pub bp_cost: Cost,
+}
+
+/// Attribution execution options.
+#[derive(Clone, Copy, Debug)]
+pub struct AttrOptions {
+    /// Fuse unpool (+ReLU mask) into the gradient conv (default). When
+    /// false, unpool and ReLU run as standalone full-resolution passes.
+    pub fused_unpool: bool,
+    /// Override the BP start class (None = argmax, paper §III-F).
+    pub target: Option<usize>,
+}
+
+impl Default for AttrOptions {
+    fn default() -> Self {
+        AttrOptions { fused_unpool: true, target: None }
+    }
+}
+
+/// The accelerator simulator: a network compiled onto a hardware
+/// configuration, ready to evaluate images.
+pub struct Simulator {
+    pub net: Network,
+    pub cfg: HwConfig,
+    units: Vec<Unit>,
+}
+
+impl Simulator {
+    /// Quantize parameters and build the fused execution plan.
+    pub fn new(net: Network, params: &Params, cfg: HwConfig) -> anyhow::Result<Simulator> {
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let q = cfg.q;
+        let quant = |t: &crate::model::Tensor| -> Vec<i32> {
+            t.data.iter().map(|&v| q.from_f32(v)).collect()
+        };
+        let mut units = Vec::new();
+        let mut i = 0;
+        while i < net.layers.len() {
+            match &net.layers[i] {
+                Layer::Conv { name, in_ch, out_ch, k, pad } => {
+                    let (wt, bt) = params.conv(name)?;
+                    anyhow::ensure!(
+                        wt.shape == vec![*out_ch, *in_ch, *k, *k],
+                        "{name}: weight shape {:?} != layer dims",
+                        wt.shape
+                    );
+                    let w = quant(wt);
+                    let w_bp = conv::flip_transpose(&w, *out_ch, *in_ch, *k);
+                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
+                    let pool = relu && matches!(net.layers.get(i + 2), Some(Layer::MaxPool2));
+                    let in_shape = match net.shapes[i] {
+                        Shape::Chw(c, h, w) => (c, h, w),
+                        s => anyhow::bail!("conv {name} on non-CHW input {s}"),
+                    };
+                    units.push(Unit::Conv {
+                        name: name.clone(),
+                        w,
+                        w_bp,
+                        bias: quant(bt),
+                        in_shape,
+                        out_ch: *out_ch,
+                        k: *k,
+                        pad: *pad,
+                        relu,
+                        pool,
+                    });
+                    i += 1 + relu as usize + pool as usize;
+                }
+                Layer::MaxPool2 => {
+                    let in_shape = match net.shapes[i] {
+                        Shape::Chw(c, h, w) => (c, h, w),
+                        s => anyhow::bail!("pool on non-CHW input {s}"),
+                    };
+                    units.push(Unit::Pool { in_shape });
+                    i += 1;
+                }
+                Layer::Fc { name, in_dim, out_dim } => {
+                    let (wt, bt) = params.fc(name)?;
+                    anyhow::ensure!(
+                        wt.shape == vec![*out_dim, *in_dim],
+                        "{name}: weight shape {:?} != layer dims",
+                        wt.shape
+                    );
+                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
+                    units.push(Unit::Fc {
+                        name: name.clone(),
+                        w: quant(wt),
+                        out_n: *out_dim,
+                        in_n: *in_dim,
+                        bias: quant(bt),
+                        relu,
+                    });
+                    i += 1 + relu as usize;
+                }
+                Layer::Flatten => i += 1,
+                Layer::Relu => {
+                    // a ReLU not fused into a producer (e.g. first layer)
+                    anyhow::bail!("standalone ReLU at layer {i} is not supported by the plan");
+                }
+            }
+        }
+        Ok(Simulator { net, cfg, units })
+    }
+
+    pub fn q(&self) -> QFormat {
+        self.cfg.q
+    }
+
+    /// FP phase (paper §III-F): layer by layer, masks captured at
+    /// non-linearities, output = argmax logit.
+    pub fn forward(&self, image: &[f32]) -> FpResult {
+        assert_eq!(image.len(), self.net.input.elems(), "input size mismatch");
+        let q = self.cfg.q;
+        let mut cost = Cost::new();
+        let mut act: Vec<i32> = image.iter().map(|&v| q.from_f32(v)).collect();
+        let n = self.units.len();
+        let mut state = FpState {
+            dram_acts: vec![None; n],
+            pool_idx: vec![None; n],
+            fc_masks: vec![None; n],
+        };
+
+        for (ui, unit) in self.units.iter().enumerate() {
+            match unit {
+                Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                    let post = match (relu, pool) {
+                        (true, true) => Post::ReluPool,
+                        (true, false) => Post::Relu,
+                        _ => Post::Plain,
+                    };
+                    let r = conv::forward(
+                        &self.cfg,
+                        &mut cost,
+                        &act,
+                        *in_shape,
+                        w,
+                        (*out_ch, *k),
+                        Some(bias),
+                        *pad,
+                        post,
+                    );
+                    if *pool {
+                        state.pool_idx[ui] = r.pool_idx;
+                        let pooled = r.pooled.unwrap();
+                        state.dram_acts[ui] = Some(pooled.clone());
+                        act = pooled;
+                    } else {
+                        state.dram_acts[ui] = Some(r.out.clone());
+                        act = r.out;
+                    }
+                    cost.checkpoint(name);
+                }
+                Unit::Pool { in_shape } => {
+                    let (p, idx) = pool::maxpool2(&self.cfg, &mut cost, &act, *in_shape);
+                    state.pool_idx[ui] = Some(idx);
+                    state.dram_acts[ui] = Some(p.clone());
+                    act = p;
+                    cost.checkpoint("pool");
+                }
+                Unit::Fc { name, w, out_n, in_n, bias, relu } => {
+                    let mut mask = if *relu { Some(vec![false; *out_n]) } else { None };
+                    act = vmm::forward(
+                        &self.cfg,
+                        &mut cost,
+                        w,
+                        (*out_n, *in_n),
+                        &act,
+                        Some(bias),
+                        mask.as_mut(),
+                    );
+                    state.fc_masks[ui] = mask;
+                    cost.checkpoint(name);
+                }
+            }
+        }
+
+        let logits: Vec<f32> = act.iter().map(|&v| q.to_f32(v)).collect();
+        let pred = argmax(&logits);
+        FpResult { logits, pred, cost, state }
+    }
+
+    /// BP phase (paper §III-F): start a one-hot gradient at the chosen
+    /// output, walk the plan in reverse with the Table-I access
+    /// patterns, return input-feature relevance.
+    pub fn backward(
+        &self,
+        state: &FpState,
+        start_class: usize,
+        method: Method,
+        opts: AttrOptions,
+    ) -> (Vec<f32>, Cost) {
+        let q = self.cfg.q;
+        let mut cost = Cost::new();
+        let out_n = self.net.output_shape().elems();
+        let mut g = vec![0i32; out_n];
+        g[start_class] = q.from_f32(1.0);
+
+        for (ui, unit) in self.units.iter().enumerate().rev() {
+            match unit {
+                Unit::Fc { name, w, out_n, in_n, relu, .. } => {
+                    if *relu {
+                        let mask = state.fc_masks[ui].as_ref().expect("fc mask missing");
+                        g = relu::backward(&self.cfg, &mut cost, method, &g, MaskSource::OnChip(mask));
+                    }
+                    g = vmm::backward(&self.cfg, &mut cost, w, (*out_n, *in_n), &g);
+                    cost.checkpoint(&format!("{name}ᵀ"));
+                }
+                Unit::Pool { in_shape } => {
+                    let (c, h, w) = *in_shape;
+                    let idx = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                    g = pool::unpool2(&self.cfg, &mut cost, &g, (c, h / 2, w / 2), idx);
+                    cost.checkpoint("unpool");
+                }
+                Unit::Conv { name, w_bp, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                    let (ic, h, w) = *in_shape;
+                    let op = *pad;
+                    // conv output spatial dims (pre-pool)
+                    let oh = h + 2 * op - (k - 1);
+                    let ow = w + 2 * op - (k - 1);
+                    if *pool && opts.fused_unpool {
+                        // gradient is on the pooled grid; apply the ReLU
+                        // dataflow there (mask == pooled DRAM act > 0),
+                        // then scatter through the argmax into the
+                        // gradient conv
+                        if *relu {
+                            let act = state.dram_acts[ui].as_ref().expect("act missing");
+                            g = relu::backward(
+                                &self.cfg,
+                                &mut cost,
+                                method,
+                                &g,
+                                MaskSource::FromDram(act),
+                            );
+                        }
+                        let idx = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                        g = conv::input_grad_unpool(
+                            &self.cfg,
+                            &mut cost,
+                            &g,
+                            (*out_ch, oh / 2, ow / 2),
+                            idx,
+                            w_bp,
+                            ic,
+                            *k,
+                            op,
+                        );
+                    } else {
+                        if *pool {
+                            // unfused ablation: materialize the unpooled
+                            // gradient, then mask on the full grid
+                            let idx = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                            g = pool::unpool2(
+                                &self.cfg,
+                                &mut cost,
+                                &g,
+                                (*out_ch, oh / 2, ow / 2),
+                                idx,
+                            );
+                            if *relu {
+                                // full-grid mask: recompute from the pooled
+                                // DRAM act routed through the indices
+                                let act = state.dram_acts[ui].as_ref().expect("act missing");
+                                let full_act = pool::unpool2(
+                                    &self.cfg,
+                                    &mut cost,
+                                    act,
+                                    (*out_ch, oh / 2, ow / 2),
+                                    idx,
+                                );
+                                g = relu::backward(
+                                    &self.cfg,
+                                    &mut cost,
+                                    method,
+                                    &g,
+                                    MaskSource::FromDram(&full_act),
+                                );
+                            }
+                        } else if *relu {
+                            let act = state.dram_acts[ui].as_ref().expect("act missing");
+                            g = relu::backward(
+                                &self.cfg,
+                                &mut cost,
+                                method,
+                                &g,
+                                MaskSource::FromDram(act),
+                            );
+                        }
+                        g = conv::input_grad(
+                            &self.cfg,
+                            &mut cost,
+                            &g,
+                            (*out_ch, oh, ow),
+                            w_bp,
+                            ic,
+                            *k,
+                            op,
+                        );
+                    }
+                    cost.checkpoint(&format!("{name}ᵀ"));
+                }
+            }
+        }
+
+        (g.iter().map(|&v| q.to_f32(v)).collect(), cost)
+    }
+
+    /// Full feature attribution: FP + BP (paper Fig. 2).
+    pub fn attribute(&self, image: &[f32], method: Method, opts: AttrOptions) -> AttrResult {
+        let fp = self.forward(image);
+        let start = opts.target.unwrap_or(fp.pred);
+        let (relevance, bp_cost) = self.backward(&fp.state, start, method, opts);
+        AttrResult { logits: fp.logits, pred: fp.pred, relevance, fp_cost: fp.cost, bp_cost }
+    }
+}
+
+/// Test-only helpers shared across the crate's unit tests.
+#[cfg(test)]
+pub mod tests_support {
+    use super::*;
+    use crate::model::{NetworkBuilder, Tensor};
+    use crate::util::rng::Pcg32;
+    use std::collections::BTreeMap;
+
+    /// A small random [2,8,8] conv/pool/fc model on the given config.
+    pub fn tiny_sim(seed: u64, cfg: HwConfig) -> Simulator {
+        let net = NetworkBuilder::new(Shape::Chw(2, 8, 8))
+            .conv("c1", 4, 3, 1)
+            .relu()
+            .conv("c2", 4, 3, 1)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("f1", 8)
+            .relu()
+            .fc("f2", 3)
+            .build()
+            .unwrap();
+        let mut rng = Pcg32::seeded(seed);
+        let mut tensors = BTreeMap::new();
+        let mut add = |name: &str, shape: Vec<usize>, rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let scale = (2.0 / n as f32).sqrt().max(0.05);
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+            tensors.insert(name.to_string(), Tensor { shape, data });
+        };
+        add("c1_w", vec![4, 2, 3, 3], &mut rng);
+        add("c1_b", vec![4], &mut rng);
+        add("c2_w", vec![4, 4, 3, 3], &mut rng);
+        add("c2_b", vec![4], &mut rng);
+        add("f1_w", vec![8, 64], &mut rng);
+        add("f1_b", vec![8], &mut rng);
+        add("f2_w", vec![3, 8], &mut rng);
+        add("f2_b", vec![3], &mut rng);
+        let params = Params { tensors };
+        Simulator::new(net, &params, cfg).unwrap()
+    }
+}
+
+pub fn argmax(xs: &[f32]) -> usize {
+    let mut bi = 0;
+    for (i, &v) in xs.iter().enumerate() {
+        if v > xs[bi] {
+            bi = i;
+        }
+    }
+    bi
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::{NetworkBuilder, Tensor};
+    use crate::util::rng::Pcg32;
+    use std::collections::BTreeMap;
+
+    /// Build a tiny random network + params for scheduler tests.
+    pub(crate) fn tiny_model(seed: u64) -> (Network, Params) {
+        let net = NetworkBuilder::new(Shape::Chw(2, 8, 8))
+            .conv("c1", 4, 3, 1)
+            .relu()
+            .conv("c2", 4, 3, 1)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("f1", 8)
+            .relu()
+            .fc("f2", 3)
+            .build()
+            .unwrap();
+        let mut rng = Pcg32::seeded(seed);
+        let mut tensors = BTreeMap::new();
+        let mut add = |name: &str, shape: Vec<usize>, rng: &mut Pcg32| {
+            let n: usize = shape.iter().product();
+            let scale = (2.0 / n as f32).sqrt().max(0.05);
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+            tensors.insert(name.to_string(), Tensor { shape, data });
+        };
+        add("c1_w", vec![4, 2, 3, 3], &mut rng);
+        add("c1_b", vec![4], &mut rng);
+        add("c2_w", vec![4, 4, 3, 3], &mut rng);
+        add("c2_b", vec![4], &mut rng);
+        add("f1_w", vec![8, 64], &mut rng);
+        add("f1_b", vec![8], &mut rng);
+        add("f2_w", vec![3, 8], &mut rng);
+        add("f2_b", vec![3], &mut rng);
+        (net, Params { tensors })
+    }
+
+    fn image(seed: u64, n: usize) -> Vec<f32> {
+        let mut rng = Pcg32::seeded(seed);
+        (0..n).map(|_| rng.f32()).collect()
+    }
+
+    #[test]
+    fn forward_produces_logits_and_masks() {
+        let (net, params) = tiny_model(1);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let fp = sim.forward(&image(2, 2 * 8 * 8));
+        assert_eq!(fp.logits.len(), 3);
+        assert!(fp.pred < 3);
+        assert!(fp.cost.total_cycles() > 0);
+        assert!(fp.cost.macs > 0);
+        // plan: conv1(relu) conv2(relu+pool) fc1(relu) fc2
+        assert!(fp.state.pool_idx.iter().any(|p| p.is_some()));
+        assert!(fp.state.fc_masks.iter().any(|m| m.is_some()));
+    }
+
+    #[test]
+    fn fused_and_unfused_bp_agree_exactly() {
+        let (net, params) = tiny_model(3);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let img = image(4, 2 * 8 * 8);
+        for method in crate::attribution::ALL_METHODS {
+            let fused = sim.attribute(&img, method, AttrOptions::default());
+            let unfused = sim.attribute(
+                &img,
+                method,
+                AttrOptions { fused_unpool: false, ..Default::default() },
+            );
+            assert_eq!(fused.relevance, unfused.relevance, "method {method}");
+            // and fusion is cheaper
+            assert!(
+                fused.bp_cost.total_cycles() < unfused.bp_cost.total_cycles(),
+                "method {method}: fused {} vs unfused {}",
+                fused.bp_cost.total_cycles(),
+                unfused.bp_cost.total_cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn methods_differ_on_relevance() {
+        let (net, params) = tiny_model(5);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let img = image(6, 2 * 8 * 8);
+        let sal = sim.attribute(&img, Method::Saliency, Default::default());
+        let dec = sim.attribute(&img, Method::Deconvnet, Default::default());
+        let gui = sim.attribute(&img, Method::Guided, Default::default());
+        assert_ne!(sal.relevance, dec.relevance);
+        assert_ne!(sal.relevance, gui.relevance);
+        // deconvnet & guided relevance comes from positive-only gradients;
+        // logits identical across methods (same FP)
+        assert_eq!(sal.logits, dec.logits);
+        assert_eq!(sal.logits, gui.logits);
+    }
+
+    #[test]
+    fn target_class_overrides_argmax() {
+        let (net, params) = tiny_model(7);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let img = image(8, 2 * 8 * 8);
+        let a = sim.attribute(
+            &img,
+            Method::Saliency,
+            AttrOptions { target: Some(0), ..Default::default() },
+        );
+        let b = sim.attribute(
+            &img,
+            Method::Saliency,
+            AttrOptions { target: Some(2), ..Default::default() },
+        );
+        assert_ne!(a.relevance, b.relevance);
+    }
+
+    #[test]
+    fn deterministic() {
+        let (net, params) = tiny_model(9);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let img = image(10, 2 * 8 * 8);
+        let a = sim.attribute(&img, Method::Guided, Default::default());
+        let b = sim.attribute(&img, Method::Guided, Default::default());
+        assert_eq!(a.relevance, b.relevance);
+        assert_eq!(a.fp_cost.total_cycles(), b.fp_cost.total_cycles());
+        assert_eq!(a.bp_cost.total_cycles(), b.bp_cost.total_cycles());
+    }
+
+    #[test]
+    fn cost_checkpoints_cover_all_layers() {
+        let (net, params) = tiny_model(11);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let r = sim.attribute(&image(12, 128), Method::Saliency, Default::default());
+        // FP: c1, c2, f1, f2 ; BP: f2ᵀ, f1ᵀ, c2ᵀ, c1ᵀ
+        assert_eq!(r.fp_cost.layers.len(), 4);
+        assert_eq!(r.bp_cost.layers.len(), 4);
+        let names: Vec<&str> = r.bp_cost.layers.iter().map(|(n, _)| n.as_str()).collect();
+        assert_eq!(names, vec!["f2ᵀ", "f1ᵀ", "c2ᵀ", "c1ᵀ"]);
+    }
+
+    #[test]
+    fn argmax_first_max_wins() {
+        assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
+        assert_eq!(argmax(&[-1.0]), 0);
+    }
+}

@@ -1,0 +1,102 @@
+//! Pipelined FP/BP execution model (paper §IV-B: "On larger FPGAs, the
+//! FP and BP phases can be pipelined to improve the throughput of the
+//! design by ≈1.6× at the cost of separate compute blocks").
+//!
+//! With duplicated compute blocks, image *i*'s BP overlaps image
+//! *i+1*'s FP; steady-state initiation interval = max(L_FP, L_BP), so
+//!
+//!   throughput speedup = (L_FP + L_BP) / max(L_FP, L_BP)
+//!
+//! which approaches 2 for balanced phases and equals the paper's ≈1.6×
+//! when L_BP ≈ 0.6 · L_FP (the ratio the fused unpool-conv BP yields).
+
+use crate::hls::Cost;
+
+/// Throughput/latency report for sequential vs pipelined execution.
+#[derive(Clone, Copy, Debug)]
+pub struct PipelineReport {
+    pub fp_ms: f64,
+    pub bp_ms: f64,
+    /// Sequential per-image latency (FP then BP on shared blocks).
+    pub seq_ms: f64,
+    /// Pipelined steady-state initiation interval.
+    pub interval_ms: f64,
+    /// Sequential throughput, images/s.
+    pub seq_ips: f64,
+    /// Pipelined throughput, images/s.
+    pub pipe_ips: f64,
+    /// Throughput improvement factor (the paper's ≈1.6×).
+    pub speedup: f64,
+}
+
+pub fn analyze(fp: &Cost, bp: &Cost, freq_mhz: f64) -> PipelineReport {
+    let fp_ms = fp.latency_ms(freq_mhz);
+    let bp_ms = bp.latency_ms(freq_mhz);
+    let seq_ms = fp_ms + bp_ms;
+    let interval_ms = fp_ms.max(bp_ms);
+    PipelineReport {
+        fp_ms,
+        bp_ms,
+        seq_ms,
+        interval_ms,
+        seq_ips: 1e3 / seq_ms,
+        pipe_ips: 1e3 / interval_ms,
+        speedup: seq_ms / interval_ms,
+    }
+}
+
+/// Simulate the pipeline over `n` images: returns (sequential total ms,
+/// pipelined total ms). The pipelined schedule has a fill phase of one
+/// FP before the steady state.
+pub fn simulate_batch(fp_ms: f64, bp_ms: f64, n: usize) -> (f64, f64) {
+    let seq = (fp_ms + bp_ms) * n as f64;
+    if n == 0 {
+        return (0.0, 0.0);
+    }
+    // fill: first FP alone; then n-1 overlapped intervals; drain: last BP
+    let pipe = fp_ms + (n as f64 - 1.0) * fp_ms.max(bp_ms) + bp_ms;
+    (seq, pipe)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cost(cycles: u64) -> Cost {
+        Cost { compute_cycles: cycles, ..Default::default() }
+    }
+
+    #[test]
+    fn balanced_phases_give_2x() {
+        let r = analyze(&cost(1_000_000), &cost(1_000_000), 100.0);
+        assert!((r.speedup - 2.0).abs() < 1e-9);
+        assert!((r.fp_ms - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn paper_ratio_gives_1_6x() {
+        // BP = 0.6 FP -> speedup = 1.6/1.0 = 1.6 (the paper's number)
+        let r = analyze(&cost(1_000_000), &cost(600_000), 100.0);
+        assert!((r.speedup - 1.6).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batch_simulation_converges_to_interval() {
+        let (seq, pipe) = simulate_batch(10.0, 6.0, 1000);
+        assert!((seq - 16_000.0).abs() < 1e-6);
+        // steady state: ~10ms per image
+        assert!((pipe / 1000.0 - 10.0).abs() < 0.02);
+        // degenerate cases
+        assert_eq!(simulate_batch(10.0, 6.0, 0), (0.0, 0.0));
+        let (s1, p1) = simulate_batch(10.0, 6.0, 1);
+        assert!((s1 - p1).abs() < 1e-9, "single image gains nothing");
+    }
+
+    #[test]
+    fn throughput_consistency() {
+        let r = analyze(&cost(2_000_000), &cost(1_000_000), 100.0);
+        assert!((r.seq_ips * r.seq_ms - 1e3).abs() < 1e-6);
+        assert!((r.pipe_ips * r.interval_ms - 1e3).abs() < 1e-6);
+        assert!(r.pipe_ips > r.seq_ips);
+    }
+}

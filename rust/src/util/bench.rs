@@ -1,0 +1,111 @@
+//! Bench harness (no criterion offline): wall-clock timing with warmup
+//! + repetitions, and aligned table printing for the paper-table
+//! reproduction benches (`cargo bench` runs each `harness = false`
+//! bench binary; they print the same rows the paper reports).
+
+use std::time::Instant;
+
+use super::stats::Running;
+
+/// Time `f` with `warmup` discarded runs and `reps` measured runs.
+/// Returns (mean_ms, std_ms, min_ms).
+pub fn time_ms<F: FnMut()>(warmup: usize, reps: usize, mut f: F) -> (f64, f64, f64) {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut r = Running::new();
+    for _ in 0..reps.max(1) {
+        let t = Instant::now();
+        f();
+        r.push(t.elapsed().as_secs_f64() * 1e3);
+    }
+    (r.mean(), r.std(), r.min())
+}
+
+/// Simple fixed-width table printer.
+pub struct Table {
+    widths: Vec<usize>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        let widths = headers.iter().map(|h| h.len()).collect();
+        Table { widths, rows: vec![headers.iter().map(|s| s.to_string()).collect()] }
+    }
+
+    pub fn row(&mut self, cells: &[String]) {
+        assert_eq!(cells.len(), self.widths.len(), "column count mismatch");
+        for (w, c) in self.widths.iter_mut().zip(cells) {
+            *w = (*w).max(c.len());
+        }
+        self.rows.push(cells.to_vec());
+    }
+
+    pub fn rows_str(&mut self, cells: &[&str]) {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>());
+    }
+
+    pub fn print(&self) {
+        for (i, row) in self.rows.iter().enumerate() {
+            let line: Vec<String> = row
+                .iter()
+                .zip(&self.widths)
+                .map(|(c, w)| format!("{c:>w$}", w = w))
+                .collect();
+            println!("  {}", line.join("  "));
+            if i == 0 {
+                let total: usize = self.widths.iter().sum::<usize>() + 2 * (self.widths.len() - 1);
+                println!("  {}", "-".repeat(total));
+            }
+        }
+    }
+}
+
+/// Print a bench section header.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===\n");
+}
+
+/// Format a count with thousands separators.
+pub fn fmt_count(n: u64) -> String {
+    let s = n.to_string();
+    let mut out = String::new();
+    for (i, c) in s.chars().enumerate() {
+        if i > 0 && (s.len() - i) % 3 == 0 {
+            out.push(',');
+        }
+        out.push(c);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_returns_positive() {
+        let (mean, _std, min) = time_ms(1, 3, || {
+            std::hint::black_box((0..10_000).sum::<u64>());
+        });
+        assert!(mean > 0.0 && min > 0.0 && min <= mean * 1.5);
+    }
+
+    #[test]
+    fn table_alignment() {
+        let mut t = Table::new(&["a", "board"]);
+        t.rows_str(&["1", "Pynq-Z2"]);
+        t.row(&vec!["100".to_string(), "x".to_string()]);
+        assert_eq!(t.rows.len(), 3);
+        t.print(); // should not panic
+    }
+
+    #[test]
+    fn count_formatting() {
+        assert_eq!(fmt_count(0), "0");
+        assert_eq!(fmt_count(999), "999");
+        assert_eq!(fmt_count(1000), "1,000");
+        assert_eq!(fmt_count(25_003_264), "25,003,264");
+    }
+}

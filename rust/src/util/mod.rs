@@ -1,0 +1,14 @@
+//! From-scratch utility substrates (S10 in DESIGN.md).
+//!
+//! The offline sandbox ships only the `xla` crate's dependency tree —
+//! no tokio / clap / serde / rand / criterion / proptest — so every
+//! support capability the coordinator needs is implemented here.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod log;
+pub mod ppm;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,100 @@
+//! PPM/PGM image writers + a diverging colormap for heatmaps (Fig. 3).
+//!
+//! Binary P6 (RGB) / P5 (gray). No image crates offline; these formats
+//! are 15 lines each and viewable everywhere.
+
+use std::io::Write;
+use std::path::Path;
+
+/// Write an RGB image; `rgb` is row-major [h*w*3] in [0,1].
+pub fn write_ppm(path: &Path, rgb: &[f32], w: usize, h: usize) -> std::io::Result<()> {
+    assert_eq!(rgb.len(), w * h * 3);
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P6\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = rgb.iter().map(|&v| (v.clamp(0.0, 1.0) * 255.0 + 0.5) as u8).collect();
+    f.write_all(&bytes)
+}
+
+/// Write a grayscale image; `g` is row-major [h*w] in [0,1].
+pub fn write_pgm(path: &Path, g: &[f32], w: usize, h: usize) -> std::io::Result<()> {
+    assert_eq!(g.len(), w * h);
+    let mut f = std::fs::File::create(path)?;
+    write!(f, "P5\n{w} {h}\n255\n")?;
+    let bytes: Vec<u8> = g.iter().map(|&v| (v.clamp(0.0, 1.0) * 255.0 + 0.5) as u8).collect();
+    f.write_all(&bytes)
+}
+
+/// Map a signed relevance value in [-1,1] to a blue-white-red diverging
+/// color (negative = blue, positive = red) — the convention attribution
+/// papers use for signed heatmaps.
+pub fn diverging(v: f32) -> [f32; 3] {
+    let v = v.clamp(-1.0, 1.0);
+    if v >= 0.0 {
+        [1.0, 1.0 - v, 1.0 - v]
+    } else {
+        [1.0 + v, 1.0 + v, 1.0]
+    }
+}
+
+/// Normalize a relevance map to [-1,1] by its max |value| and render it.
+pub fn relevance_to_rgb(rel: &[f32]) -> Vec<f32> {
+    let maxabs = rel.iter().fold(0f32, |m, &v| m.max(v.abs())).max(1e-12);
+    let mut out = Vec::with_capacity(rel.len() * 3);
+    for &v in rel {
+        out.extend_from_slice(&diverging(v / maxabs));
+    }
+    out
+}
+
+/// Channel-major [3,H,W] image tensor -> row-major RGB for write_ppm.
+pub fn chw_to_rgb(chw: &[f32], h: usize, w: usize) -> Vec<f32> {
+    assert_eq!(chw.len(), 3 * h * w);
+    let mut out = vec![0f32; h * w * 3];
+    for c in 0..3 {
+        for y in 0..h {
+            for x in 0..w {
+                out[(y * w + x) * 3 + c] = chw[c * h * w + y * w + x];
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn diverging_endpoints() {
+        assert_eq!(diverging(0.0), [1.0, 1.0, 1.0]);
+        assert_eq!(diverging(1.0), [1.0, 0.0, 0.0]);
+        assert_eq!(diverging(-1.0), [0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn ppm_header_and_size() {
+        let dir = std::env::temp_dir().join("attrax_ppm_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        write_ppm(&p, &vec![0.5; 4 * 2 * 3], 4, 2).unwrap();
+        let bytes = std::fs::read(&p).unwrap();
+        assert!(bytes.starts_with(b"P6\n4 2\n255\n"));
+        assert_eq!(bytes.len(), "P6\n4 2\n255\n".len() + 24);
+    }
+
+    #[test]
+    fn chw_transpose() {
+        // 1x2 image: pixel0 = (r0,g0,b0) = (1,3,5), pixel1 = (2,4,6)
+        let chw = [1.0, 2.0, 3.0, 4.0, 5.0, 6.0];
+        let rgb = chw_to_rgb(&chw, 1, 2);
+        assert_eq!(rgb, vec![1.0, 3.0, 5.0, 2.0, 4.0, 6.0]);
+    }
+
+    #[test]
+    fn relevance_normalization() {
+        let rgb = relevance_to_rgb(&[2.0, -2.0, 0.0]);
+        assert_eq!(&rgb[0..3], &[1.0, 0.0, 0.0]); // +max -> red
+        assert_eq!(&rgb[3..6], &[0.0, 0.0, 1.0]); // -max -> blue
+        assert_eq!(&rgb[6..9], &[1.0, 1.0, 1.0]); // zero -> white
+    }
+}

@@ -1,0 +1,153 @@
+//! Miniature property-testing harness (no proptest offline).
+//!
+//! `run_prop` draws N random cases from a generator, checks a property,
+//! and on failure re-runs a bounded greedy shrink loop using a
+//! user-supplied shrinker. Failures report the seed so a case can be
+//! replayed deterministically.
+//!
+//! Used by the rust test suite for coordinator/scheduler/fx invariants
+//! (see rust/tests/).
+
+use super::rng::Pcg32;
+
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+    pub max_shrinks: usize,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 128, seed: 0xa77a_c5ee_d, max_shrinks: 200 }
+    }
+}
+
+/// Check `prop` over `cases` random inputs from `gen`.
+/// On failure, greedily shrink with `shrink` (returns candidate smaller
+/// inputs) and panic with the minimal failing case found.
+pub fn run_prop_shrink<T, G, P, S>(cfg: PropConfig, mut gen: G, mut prop: P, shrink: S)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    S: Fn(&T) -> Vec<T>,
+{
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Pcg32::seeded(case_seed);
+        let input = gen(&mut rng);
+        if let Err(first_msg) = prop(&input) {
+            // greedy shrink
+            let mut best = input.clone();
+            let mut best_msg = first_msg;
+            let mut budget = cfg.max_shrinks;
+            'outer: loop {
+                for cand in shrink(&best) {
+                    if budget == 0 {
+                        break 'outer;
+                    }
+                    budget -= 1;
+                    if let Err(msg) = prop(&cand) {
+                        best = cand;
+                        best_msg = msg;
+                        continue 'outer;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (case {case}, seed {case_seed:#x})\n  minimal input: {best:?}\n  reason: {best_msg}"
+            );
+        }
+    }
+}
+
+/// run_prop without shrinking.
+pub fn run_prop<T, G, P>(cfg: PropConfig, gen: G, prop: P)
+where
+    T: Clone + std::fmt::Debug,
+    G: FnMut(&mut Pcg32) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    run_prop_shrink(cfg, gen, prop, |_| Vec::new());
+}
+
+/// Standard shrinker for a vec: halve it, drop single elements.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.is_empty() {
+        return out;
+    }
+    out.push(v[..v.len() / 2].to_vec());
+    out.push(v[v.len() / 2..].to_vec());
+    if v.len() <= 12 {
+        for i in 0..v.len() {
+            let mut c = v.to_vec();
+            c.remove(i);
+            out.push(c);
+        }
+    }
+    out
+}
+
+/// Standard shrinker for a usize: move toward zero.
+pub fn shrink_usize(n: usize) -> Vec<usize> {
+    let mut out = Vec::new();
+    if n > 0 {
+        out.push(n / 2);
+        out.push(n - 1);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        run_prop(
+            PropConfig { cases: 64, ..Default::default() },
+            |r| r.below(100),
+            |&x| if x < 100 { Ok(()) } else { Err("out of range".into()) },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        run_prop(
+            PropConfig { cases: 64, ..Default::default() },
+            |r| r.below(100),
+            |&x| if x < 50 { Ok(()) } else { Err(format!("{x} >= 50")) },
+        );
+    }
+
+    #[test]
+    fn shrinker_minimizes() {
+        // property: no vec contains a value >= 10; shrinker should find a
+        // small counterexample (len 1 after shrinking).
+        let result = std::panic::catch_unwind(|| {
+            run_prop_shrink(
+                PropConfig { cases: 16, ..Default::default() },
+                |r| (0..8).map(|_| r.below(20)).collect::<Vec<u32>>(),
+                |v| {
+                    if v.iter().all(|&x| x < 10) {
+                        Ok(())
+                    } else {
+                        Err("contains >= 10".into())
+                    }
+                },
+                |v| shrink_vec(v),
+            );
+        });
+        let msg = match result {
+            Err(e) => *e.downcast::<String>().unwrap(),
+            Ok(()) => panic!("expected failure"),
+        };
+        // minimal failing vec should have shrunk below the original 8 elems
+        let list_part = msg.split("minimal input: ").nth(1).unwrap();
+        let commas = list_part.split('\n').next().unwrap().matches(',').count();
+        assert!(commas < 7, "shrinker did not reduce: {msg}");
+    }
+}

@@ -1,0 +1,73 @@
+//! End-to-end serving test: trained artifacts → coordinator → workers
+//! → fixed-point accelerator sim → responses, with shadow verification
+//! against the PJRT golden path. The CI version of examples/xai_serve.
+
+use attrax::attribution::Method;
+use attrax::coordinator::{server, Config, Coordinator};
+use attrax::fpga::{self, Board};
+use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::sched::Simulator;
+
+fn build() -> (Simulator, attrax::model::Manifest, attrax::model::Params) {
+    let (manifest, params) = load_artifacts(&artifacts_dir()).expect("make artifacts first");
+    let net = Network::table3();
+    let cfg = fpga::choose_config(Board::Zcu104, &net, Method::Guided);
+    (Simulator::new(net, &params, cfg).unwrap(), manifest, params)
+}
+
+#[test]
+fn serve_trained_model_with_verification() {
+    let (sim, manifest, params) = build();
+    let coord = Coordinator::start(
+        sim,
+        Config { workers: 4, queue_depth: 128, verify_fraction: 0.34, freq_mhz: 100.0 },
+        Some((manifest, params)),
+    )
+    .unwrap();
+    let report = server::run_load(
+        &coord,
+        server::LoadSpec { requests: 15, rate: 0.0, seed: 77, method: None },
+    );
+    assert_eq!(report.rejected, 0);
+    assert_eq!(report.items.len(), 15);
+    assert!(report.items.iter().all(|i| i.response.is_some()));
+    // trained model should classify its own distribution near-perfectly
+    assert!(report.accuracy >= 0.85, "accuracy {}", report.accuracy);
+    // localization: relevance should concentrate on the drawn shape well
+    // above the ~19% area baseline on average
+    assert!(
+        report.mean_localization > 0.10,
+        "mean localization {}",
+        report.mean_localization
+    );
+    // let the verifier drain before shutdown
+    std::thread::sleep(std::time::Duration::from_millis(2000));
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 15);
+    assert!(snap.verified > 0, "shadow verifier never ran");
+    assert!(
+        snap.mean_verify_corr > 0.97,
+        "fixed-vs-golden correlation {}",
+        snap.mean_verify_corr
+    );
+}
+
+#[test]
+fn open_loop_arrivals_respect_backpressure() {
+    let (sim, _, _) = build();
+    // tiny queue + 1 worker: the closed-loop flood must trip rejections
+    // yet every accepted request completes
+    let coord = Coordinator::start(
+        sim,
+        Config { workers: 1, queue_depth: 2, verify_fraction: 0.0, freq_mhz: 100.0 },
+        None,
+    )
+    .unwrap();
+    let report = server::run_load(
+        &coord,
+        server::LoadSpec { requests: 20, rate: 0.0, seed: 5, method: Some(Method::Deconvnet) },
+    );
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed as usize + report.rejected, 20);
+    assert!(report.rejected > 0, "expected backpressure with queue_depth=2");
+}

@@ -1,0 +1,166 @@
+//! Integration tests against the jax-computed golden vectors
+//! (artifacts/golden.bin): the cross-layer contract L1/L2 ⇄ L3.
+//!
+//! Requires `make artifacts`. Each test loads the trained weights and
+//! checks one leg of the triangle:
+//!
+//!   jax ref (golden.bin) ── PJRT executables ── rust fixed-point sim
+
+use attrax::attribution::{Method, ALL_METHODS};
+use attrax::fpga::{self, Board};
+use attrax::model::{artifacts_dir, golden, load_artifacts, Network};
+use attrax::runtime::Runtime;
+use attrax::sched::{AttrOptions, Simulator};
+use attrax::util::stats::pearson;
+
+fn setup() -> (attrax::model::Manifest, attrax::model::Params, Vec<golden::GoldenRecord>) {
+    let dir = artifacts_dir();
+    let (manifest, params) = load_artifacts(&dir).expect("run `make artifacts` first");
+    let recs = golden::load_golden(&dir).expect("golden vectors");
+    assert!(!recs.is_empty());
+    (manifest, params, recs)
+}
+
+fn table3_sim(params: &attrax::model::Params, board: Board) -> Simulator {
+    let net = Network::table3();
+    let cfg = fpga::choose_config(board, &net, Method::Guided);
+    Simulator::new(net, params, cfg).unwrap()
+}
+
+#[test]
+fn manifest_consistent_with_table3() {
+    let (manifest, params, _) = setup();
+    let net = Network::table3();
+    assert_eq!(manifest.param_count, net.param_count());
+    assert_eq!(params.total_elems(), net.param_count());
+    assert_eq!(manifest.num_classes, 10);
+    assert_eq!(manifest.img_shape, vec![3, 32, 32]);
+    assert_eq!(manifest.methods.len(), 3);
+    // §V numbers embedded by the python side match the rust accounting
+    let budget = attrax::attribution::memory::mask_budget(&net);
+    for m in ALL_METHODS {
+        assert_eq!(
+            manifest.mask_bits_onchip[m.name()],
+            budget.onchip_bits(m),
+            "python/rust mask accounting diverged for {m}"
+        );
+    }
+    assert_eq!(
+        manifest.autodiff_cache_bits,
+        attrax::attribution::memory::autodiff_cache_bits(&net, 32)
+    );
+    assert!(manifest.test_accuracy > 0.9, "trained model accuracy {}", manifest.test_accuracy);
+}
+
+#[test]
+fn simulator_predictions_match_jax() {
+    let (_, params, recs) = setup();
+    let sim = table3_sim(&params, Board::PynqZ2);
+    for (i, rec) in recs.iter().enumerate() {
+        let fp = sim.forward(&rec.image);
+        assert_eq!(fp.pred, rec.pred, "record {i}: sim pred {} vs jax {}", fp.pred, rec.pred);
+        // logits agree within the accumulated Q6.9 error budget of six
+        // quantized layers (empirically ~0.3 worst-case on trained nets)
+        for (a, b) in fp.logits.iter().zip(&rec.logits) {
+            assert!((a - b).abs() < 0.8, "record {i}: logit {a} vs {b}");
+        }
+    }
+}
+
+#[test]
+fn simulator_relevance_correlates_with_jax() {
+    let (_, params, recs) = setup();
+    let sim = table3_sim(&params, Board::Zcu104);
+    for rec in recs.iter().take(3) {
+        for (mname, jax_rel) in &rec.relevance {
+            let m = Method::parse(mname).unwrap();
+            let r = sim.attribute(&rec.image, m, AttrOptions::default());
+            let corr = pearson(&r.relevance, jax_rel);
+            assert!(
+                corr > 0.97,
+                "method {m}: fixed-point vs jax correlation {corr}"
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_pallas_executables_reproduce_golden() {
+    let (manifest, params, recs) = setup();
+    let runtime = Runtime::cpu().expect("PJRT CPU client");
+    for m in ALL_METHODS {
+        // the *pallas* artifact (tiled kernels lowered through interpret
+        // mode), not the jnp ref — proves the L1 kernels themselves run
+        // under the rust runtime
+        let exe = runtime
+            .load_artifact(&manifest, &params, &format!("attr_{}", m.name()), 2)
+            .unwrap();
+        for rec in recs.iter().take(2) {
+            let outs = exe.run(&rec.image, &manifest.img_shape).unwrap();
+            let (logits, rel) = (&outs[0], &outs[1]);
+            for (a, b) in logits.iter().zip(&rec.logits) {
+                assert!((a - b).abs() < 1e-3, "{m}: logit {a} vs golden {b}");
+            }
+            let jax_rel = &rec.relevance.iter().find(|(n, _)| n == m.name()).unwrap().1;
+            for (a, b) in rel.iter().zip(jax_rel.iter()) {
+                assert!((a - b).abs() < 1e-3, "{m}: relevance {a} vs golden {b}");
+            }
+        }
+    }
+}
+
+#[test]
+fn pjrt_ref_and_pallas_artifacts_agree() {
+    let (manifest, params, recs) = setup();
+    let runtime = Runtime::cpu().unwrap();
+    let pallas = runtime.load_artifact(&manifest, &params, "attr_guided", 2).unwrap();
+    let reference = runtime.load_artifact(&manifest, &params, "attr_guided_ref", 2).unwrap();
+    let rec = &recs[0];
+    let a = pallas.run(&rec.image, &manifest.img_shape).unwrap();
+    let b = reference.run(&rec.image, &manifest.img_shape).unwrap();
+    for (x, y) in a[1].iter().zip(b[1].iter()) {
+        assert!((x - y).abs() < 1e-3, "pallas {x} vs ref {y}");
+    }
+}
+
+#[test]
+fn forward_artifact_matches_attribution_logits() {
+    let (manifest, params, recs) = setup();
+    let runtime = Runtime::cpu().unwrap();
+    let fwd = runtime.load_artifact(&manifest, &params, "forward", 1).unwrap();
+    let rec = &recs[0];
+    let outs = fwd.run(&rec.image, &manifest.img_shape).unwrap();
+    for (a, b) in outs[0].iter().zip(&rec.logits) {
+        assert!((a - b).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn all_boards_agree_functionally() {
+    // hardware config changes tiling/latency, never numerics
+    let (_, params, recs) = setup();
+    let rec = &recs[0];
+    let base = table3_sim(&params, Board::PynqZ2)
+        .attribute(&rec.image, Method::Guided, AttrOptions::default());
+    for board in [Board::Ultra96V2, Board::Zcu104] {
+        let r = table3_sim(&params, board)
+            .attribute(&rec.image, Method::Guided, AttrOptions::default());
+        assert_eq!(r.relevance, base.relevance, "board {board} diverged numerically");
+        assert_eq!(r.logits, base.logits);
+    }
+}
+
+#[test]
+fn fused_unpool_exact_on_real_model() {
+    let (_, params, recs) = setup();
+    let sim = table3_sim(&params, Board::Ultra96V2);
+    let rec = &recs[1];
+    let fused = sim.attribute(&rec.image, Method::Saliency, AttrOptions::default());
+    let unfused = sim.attribute(
+        &rec.image,
+        Method::Saliency,
+        AttrOptions { fused_unpool: false, ..Default::default() },
+    );
+    assert_eq!(fused.relevance, unfused.relevance);
+    assert!(fused.bp_cost.total_cycles() < unfused.bp_cost.total_cycles());
+}
