@@ -2,7 +2,7 @@
 //! workload, proving all layers compose.
 //!
 //!     make artifacts && cargo run --release --example xai_serve -- \
-//!         [requests] [workers] [verify_fraction]
+//!         [requests] [workers] [verify_fraction] [max_batch] [max_wait_ms]
 //!
 //! Pipeline exercised per request:
 //!   shapes-32 generator (rust)  →  bounded queue + worker pool (L3)
@@ -27,6 +27,8 @@ fn main() -> anyhow::Result<()> {
     let requests: usize = args.first().and_then(|s| s.parse().ok()).unwrap_or(60);
     let workers: usize = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(4);
     let verify: f64 = args.get(2).and_then(|s| s.parse().ok()).unwrap_or(0.2);
+    let max_batch: usize = args.get(3).and_then(|s| s.parse().ok()).unwrap_or(8);
+    let max_wait_ms: u64 = args.get(4).and_then(|s| s.parse().ok()).unwrap_or(3);
 
     let (manifest, params) = load_artifacts(&artifacts_dir())?;
     let net = Network::table3();
@@ -34,7 +36,8 @@ fn main() -> anyhow::Result<()> {
     let cfg = fpga::choose_config(board, &net, Method::Guided);
     let sim = Simulator::new(net.clone(), &params, cfg)?;
     println!(
-        "== xai_serve: {requests} requests, {workers} workers, verify {:.0}%, board {board} ==",
+        "== xai_serve: {requests} requests, {workers} workers, verify {:.0}%, board {board}, \
+         micro-batch ≤{max_batch} (wait {max_wait_ms}ms) ==",
         verify * 100.0
     );
     println!(
@@ -50,6 +53,8 @@ fn main() -> anyhow::Result<()> {
             queue_depth: 256,
             verify_fraction: verify,
             freq_mhz: fpga::TARGET_FREQ_MHZ,
+            max_batch,
+            max_wait_ms,
         },
         Some((manifest, params)),
     )?;

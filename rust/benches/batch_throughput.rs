@@ -1,0 +1,157 @@
+//! E13 — batch-N micro-batching: modeled DRAM traffic and host
+//! throughput at batch = 1 / 4 / 16 on the paper's Table-III CIFAR-10
+//! CNN (random weights — traffic and cycle accounting are
+//! weight-value-independent, so no trained artifacts are needed).
+//!
+//! Acceptance check (ISSUE 1): batch=16 must reduce modeled *weight*
+//! DRAM words per image by ≥ 4× versus batch=1 (it lands at ~16×: each
+//! weight tile is fetched once per batch), while the property suite
+//! proves the batched outputs are bit-exact with the single-image path.
+//!
+//!     cargo bench --bench batch_throughput
+
+use attrax::attribution::Method;
+use attrax::fpga;
+use attrax::hls::HwConfig;
+use attrax::model::{Network, Params, Shape, Tensor};
+use attrax::sched::{AttrOptions, Simulator};
+use attrax::util::bench::{fmt_count, section, Table};
+use attrax::util::rng::Pcg32;
+use std::collections::BTreeMap;
+
+/// Table-III network with random (untrained) parameters.
+fn table3_random_sim(cfg: HwConfig) -> Simulator {
+    let net = Network::table3();
+    let mut rng = Pcg32::seeded(42);
+    let mut tensors = BTreeMap::new();
+    for layer in &net.layers {
+        match layer {
+            attrax::model::Layer::Conv { name, in_ch, out_ch, k, .. } => {
+                let wn = out_ch * in_ch * k * k;
+                let scale = (2.0 / wn as f32).sqrt();
+                tensors.insert(
+                    format!("{name}_w"),
+                    Tensor {
+                        shape: vec![*out_ch, *in_ch, *k, *k],
+                        data: (0..wn).map(|_| rng.normal() * scale).collect(),
+                    },
+                );
+                tensors.insert(
+                    format!("{name}_b"),
+                    Tensor {
+                        shape: vec![*out_ch],
+                        data: (0..*out_ch).map(|_| rng.normal() * 0.05).collect(),
+                    },
+                );
+            }
+            attrax::model::Layer::Fc { name, in_dim, out_dim } => {
+                let wn = out_dim * in_dim;
+                let scale = (2.0 / *in_dim as f32).sqrt();
+                tensors.insert(
+                    format!("{name}_w"),
+                    Tensor {
+                        shape: vec![*out_dim, *in_dim],
+                        data: (0..wn).map(|_| rng.normal() * scale).collect(),
+                    },
+                );
+                tensors.insert(
+                    format!("{name}_b"),
+                    Tensor {
+                        shape: vec![*out_dim],
+                        data: (0..*out_dim).map(|_| rng.normal() * 0.05).collect(),
+                    },
+                );
+            }
+            _ => {}
+        }
+    }
+    Simulator::new(net, &Params { tensors }, cfg).unwrap()
+}
+
+fn main() {
+    let cfg = HwConfig::zcu104();
+    let sim = table3_random_sim(cfg);
+    let word = cfg.word_bytes() as u64;
+    assert_eq!(sim.net.input, Shape::Chw(3, 32, 32));
+
+    let mut rng = Pcg32::seeded(7);
+    let imgs: Vec<Vec<f32>> = (0..16)
+        .map(|_| (0..3 * 32 * 32).map(|_| rng.f32()).collect())
+        .collect();
+
+    section("E13 — micro-batched attribution: modeled DRAM traffic per image (ZCU104, guided)");
+    let mut table = Table::new(&[
+        "batch",
+        "wgt words/img",
+        "total words/img",
+        "Mcycles/img",
+        "host ms/img",
+        "wgt reduction",
+    ]);
+
+    let mut base_weight_words_per_img = 0u64;
+    let mut b16_weight_words_per_img = 0u64;
+    for &nb in &[1usize, 4, 16] {
+        let refs: Vec<&[f32]> = imgs[..nb].iter().map(|v| v.as_slice()).collect();
+
+        // modeled traffic/cycles (one pass is enough: deterministic)
+        let r = sim.attribute_batch(&refs, Method::Guided, AttrOptions::default());
+        let weight_bytes = r.fp_cost.dram_weight_bytes + r.bp_cost.dram_weight_bytes;
+        let total_bytes = r.fp_cost.dram_read_bytes
+            + r.bp_cost.dram_read_bytes
+            + r.fp_cost.dram_write_bytes
+            + r.bp_cost.dram_write_bytes;
+        let cycles = r.fp_cost.total_cycles() + r.bp_cost.total_cycles();
+        let weight_words_per_img = weight_bytes / word / nb as u64;
+        let total_words_per_img = total_bytes / word / nb as u64;
+        if nb == 1 {
+            base_weight_words_per_img = weight_words_per_img;
+        }
+        if nb == 16 {
+            b16_weight_words_per_img = weight_words_per_img;
+        }
+
+        // host throughput: one timed batched pass (release builds only
+        // take a few hundred ms; warmup skipped deliberately)
+        let t0 = std::time::Instant::now();
+        let _ = sim.attribute_batch(&refs, Method::Guided, AttrOptions::default());
+        let host_ms = t0.elapsed().as_secs_f64() * 1e3 / nb as f64;
+
+        let reduction = base_weight_words_per_img as f64 / weight_words_per_img.max(1) as f64;
+        table.row(&[
+            format!("{nb}"),
+            fmt_count(weight_words_per_img),
+            fmt_count(total_words_per_img),
+            format!("{:.2}", cycles as f64 / 1e6 / nb as f64),
+            format!("{host_ms:.1}"),
+            format!("{reduction:.1}x"),
+        ]);
+    }
+    table.print();
+
+    // modeled device throughput with the paper's clock
+    let single = sim.attribute(&imgs[0], Method::Guided, AttrOptions::default());
+    let refs16: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let b16 = sim.attribute_batch(&refs16, Method::Guided, AttrOptions::default());
+    let c1 = single.fp_cost.total_cycles() + single.bp_cost.total_cycles();
+    let c16 = (b16.fp_cost.total_cycles() + b16.bp_cost.total_cycles()) / 16;
+    println!(
+        "\nmodeled device throughput @{:.0}MHz: batch=1 {:.1} img/s -> batch=16 {:.1} img/s ({:.2}x)",
+        fpga::TARGET_FREQ_MHZ,
+        fpga::TARGET_FREQ_MHZ * 1e6 / c1 as f64,
+        fpga::TARGET_FREQ_MHZ * 1e6 / c16 as f64,
+        c1 as f64 / c16 as f64,
+    );
+
+    let reduction = base_weight_words_per_img as f64 / b16_weight_words_per_img.max(1) as f64;
+    println!(
+        "weight DRAM words/image: batch=1 {} -> batch=16 {} ({reduction:.1}x reduction)",
+        fmt_count(base_weight_words_per_img),
+        fmt_count(b16_weight_words_per_img),
+    );
+    assert!(
+        reduction >= 4.0,
+        "acceptance: batch=16 must cut weight DRAM words/image by >= 4x (got {reduction:.2}x)"
+    );
+    println!("OK: >= 4x weight-traffic reduction criterion met");
+}

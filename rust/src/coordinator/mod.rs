@@ -41,8 +41,8 @@ pub struct Request {
     pub image: Vec<f32>,
     pub method: Method,
     pub target: Option<usize>,
-    /// Where to deliver the response.
-    pub reply: mpsc::Sender<Response>,
+    /// Where to deliver the reply.
+    pub reply: mpsc::Sender<Reply>,
     enqueued: Instant,
     id: u64,
 }
@@ -57,9 +57,24 @@ pub struct Response {
     pub method: Method,
     pub latency_ms: f64,
     /// Modeled device latency at the target clock (the Table-IV number
-    /// for this request), as opposed to host wall time.
+    /// for this request; for micro-batched requests, the batch's device
+    /// time divided evenly across its images), as opposed to host wall
+    /// time.
     pub device_ms: f64,
 }
+
+/// Terminal reply for a request the service shut down before running.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Closed {
+    pub id: u64,
+}
+
+/// What a submitted request's channel eventually delivers: a computed
+/// [`Response`], or [`Closed`] when the coordinator was shut down
+/// abortively while the request was still queued. Every accepted
+/// request receives exactly one `Reply` — pending requests are never
+/// dropped on the floor with a dangling `mpsc::Sender`.
+pub type Reply = Result<Response, Closed>;
 
 /// Coordinator configuration.
 #[derive(Clone)]
@@ -69,11 +84,27 @@ pub struct Config {
     /// Fraction of responses shadow-verified on the PJRT golden path.
     pub verify_fraction: f64,
     pub freq_mhz: f64,
+    /// Micro-batching: a worker pops up to this many same-method queued
+    /// requests and runs them as one batched pass on the simulator,
+    /// amortizing weight DRAM traffic across the batch (paper Table I
+    /// reuse, applied across requests). 1 = no batching.
+    pub max_batch: usize,
+    /// How long a worker lingers (total) for more same-method requests
+    /// to fill its batch once it holds the first one. 0 = take only
+    /// what is already queued.
+    pub max_wait_ms: u64,
 }
 
 impl Default for Config {
     fn default() -> Self {
-        Config { workers: 2, queue_depth: 64, verify_fraction: 0.0, freq_mhz: 100.0 }
+        Config {
+            workers: 2,
+            queue_depth: 64,
+            verify_fraction: 0.0,
+            freq_mhz: 100.0,
+            max_batch: 1,
+            max_wait_ms: 0,
+        }
     }
 }
 
@@ -114,10 +145,12 @@ impl Coordinator {
             let queue = queue.clone();
             let metrics = metrics.clone();
             let freq = cfg.freq_mhz;
+            let max_batch = cfg.max_batch.max(1);
+            let max_wait = std::time::Duration::from_millis(cfg.max_wait_ms);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("attrax-worker-{wid}"))
-                    .spawn(move || worker_loop(sim, queue, metrics, freq))?,
+                    .spawn(move || worker_loop(sim, queue, metrics, freq, max_batch, max_wait))?,
             );
         }
 
@@ -149,15 +182,21 @@ impl Coordinator {
         })
     }
 
-    /// Submit a request; `Err` means the queue is full (backpressure) or
-    /// the service is shutting down.
+    /// Submit a request; `Err` means the image is malformed, the queue
+    /// is full (backpressure), or the service is shutting down.
     pub fn submit(
         &self,
         image: Vec<f32>,
         method: Method,
         target: Option<usize>,
-        reply: mpsc::Sender<Response>,
+        reply: mpsc::Sender<Reply>,
     ) -> Result<u64, &'static str> {
+        // validate at admission: a wrong-size image would panic the
+        // worker mid-batch, killing the thread and dropping every
+        // co-batched request's reply channel
+        if image.len() != self.sim.net.input.elems() {
+            return Err("image size mismatch");
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         let req = Request { image, method, target, reply, enqueued: Instant::now(), id };
         match self.queue.try_push(req) {
@@ -176,6 +215,12 @@ impl Coordinator {
         image: Vec<f32>,
         method: Method,
     ) -> anyhow::Result<Response> {
+        anyhow::ensure!(
+            image.len() == self.sim.net.input.elems(),
+            "image size mismatch: got {}, model wants {}",
+            image.len(),
+            self.sim.net.input.elems()
+        );
         let (tx, rx) = mpsc::channel();
         // blocking submit path: retry on backpressure
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
@@ -184,7 +229,8 @@ impl Coordinator {
         self.queue
             .push(req)
             .map_err(|_| anyhow::anyhow!("coordinator shutting down"))?;
-        Ok(rx.recv()?)
+        rx.recv()?
+            .map_err(|c| anyhow::anyhow!("coordinator closed before request {} ran", c.id))
     }
 
     /// Maybe send a completed response to the shadow verifier.
@@ -207,7 +253,7 @@ impl Coordinator {
         &self,
         image: Vec<f32>,
         method: Method,
-    ) -> Result<(u64, mpsc::Receiver<Response>), &'static str> {
+    ) -> Result<(u64, mpsc::Receiver<Reply>), &'static str> {
         let (tx, rx) = mpsc::channel();
         let id = self.submit(image, method, None, tx)?;
         Ok((id, rx))
@@ -227,9 +273,31 @@ impl Coordinator {
         self.maybe_verify(image, resp);
     }
 
-    /// Drain the queue and stop all threads.
+    /// Graceful shutdown: close the queue, let workers drain every
+    /// pending request, then stop all threads.
     pub fn shutdown(mut self) -> metrics::Snapshot {
         self.queue.close();
+        self.join_threads();
+        self.metrics.snapshot()
+    }
+
+    /// Abortive shutdown: close the queue immediately and send every
+    /// still-queued request an explicit [`Closed`] reply rather than
+    /// dropping its `mpsc::Sender` (the seed's close/join race: a
+    /// client blocked on `recv()` for an in-flight request would get a
+    /// bare channel error with no way to tell "shut down" from "worker
+    /// crashed"). Requests already picked up by a worker still complete
+    /// with a normal response.
+    pub fn shutdown_now(mut self) -> metrics::Snapshot {
+        let pending = self.queue.close_and_drain();
+        for req in pending {
+            let _ = req.reply.send(Err(Closed { id: req.id }));
+        }
+        self.join_threads();
+        self.metrics.snapshot()
+    }
+
+    fn join_threads(&mut self) {
         for w in self.workers.drain(..) {
             let _ = w.join();
         }
@@ -237,7 +305,6 @@ impl Coordinator {
         if let Some(v) = self.verifier.take() {
             let _ = v.join();
         }
-        self.metrics.snapshot()
     }
 }
 
@@ -246,27 +313,42 @@ fn worker_loop(
     queue: Arc<Bounded<Request>>,
     metrics: Arc<Metrics>,
     freq_mhz: f64,
+    max_batch: usize,
+    max_wait: std::time::Duration,
 ) {
-    while let Some(req) = queue.pop() {
-        let wait_ms = req.enqueued.elapsed().as_secs_f64() * 1e3;
+    // batch only requests that can share one device pass: same method
+    // (the BP dataflow is method-configured) and same explicit target
+    let compatible =
+        |a: &Request, b: &Request| a.method == b.method && a.target == b.target;
+    while let Some(batch) = queue.pop_batch(max_batch, max_wait, compatible) {
+        let waits_ms: Vec<f64> =
+            batch.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).collect();
         let t0 = Instant::now();
-        let opts = AttrOptions { target: req.target, ..Default::default() };
-        let result = sim.attribute(&req.image, req.method, opts);
+        // one (possibly 1-image) batched FP+BP pass: the single-image
+        // engines are batch-of-one wrappers over the same cores, so a
+        // batch of 1 is bit- and cost-identical to the unbatched path;
+        // weight tiles are fetched once per batch, responses fan back out
+        let method = batch[0].method;
+        let opts = AttrOptions { target: batch[0].target, ..Default::default() };
+        let imgs: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
+        let result = sim.attribute_batch(&imgs, method, opts);
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let cycles =
-            result.fp_cost.total_cycles() + result.bp_cost.total_cycles();
-        metrics.record_completion(host_ms, wait_ms, cycles);
-        let resp = Response {
-            id: req.id,
-            pred: result.pred,
-            logits: result.logits,
-            relevance: result.relevance,
-            method: req.method,
-            latency_ms: host_ms,
-            device_ms: cycles as f64 / (freq_mhz * 1e3),
-        };
-        // receiver may have gone away; that's fine
-        let _ = req.reply.send(resp);
+        let total_cycles = result.fp_cost.total_cycles() + result.bp_cost.total_cycles();
+        let per_image_cycles = total_cycles / batch.len() as u64;
+        for ((req, item), wait_ms) in batch.into_iter().zip(result.items).zip(waits_ms) {
+            metrics.record_completion(host_ms, wait_ms, per_image_cycles);
+            let resp = Response {
+                id: req.id,
+                pred: item.pred,
+                logits: item.logits,
+                relevance: item.relevance,
+                method,
+                latency_ms: host_ms,
+                device_ms: per_image_cycles as f64 / (freq_mhz * 1e3),
+            };
+            // receiver may have gone away; that's fine
+            let _ = req.reply.send(Ok(resp));
+        }
     }
 }
 
@@ -351,12 +433,88 @@ mod tests {
             rxs.push(coord.submit_traced(img, method).unwrap());
         }
         for (_, rx) in rxs {
-            let r = rx.recv().unwrap();
+            let r = rx.recv().unwrap().expect("graceful path never sends Closed");
             assert_eq!(r.relevance.len(), 128);
         }
         let snap = coord.shutdown();
         assert_eq!(snap.completed, 50);
         assert_eq!(snap.errors, 0);
+    }
+
+    #[test]
+    fn micro_batched_worker_matches_single_path() {
+        // one worker with batching on: identical numerics to the
+        // single-request path, every request answered
+        let sim = tiny_sim(7, HwConfig::pynq_z2());
+        let reference = tiny_sim(7, HwConfig::pynq_z2());
+        let coord = Coordinator::start(
+            sim,
+            Config { workers: 1, queue_depth: 64, max_batch: 8, max_wait_ms: 20, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let imgs: Vec<Vec<f32>> = (0..12)
+            .map(|i| (0..128).map(|k| ((k + i * 13) % 17) as f32 / 17.0).collect())
+            .collect();
+        let mut rxs = Vec::new();
+        for img in &imgs {
+            rxs.push(coord.submit_traced(img.clone(), Method::Guided).unwrap());
+        }
+        for (i, (_, rx)) in rxs.into_iter().enumerate() {
+            let r = rx.recv().unwrap().expect("completed");
+            let want = reference.attribute(
+                &imgs[i],
+                Method::Guided,
+                crate::sched::AttrOptions::default(),
+            );
+            assert_eq!(r.pred, want.pred, "request {i}");
+            assert_eq!(r.relevance, want.relevance, "request {i}: batched serving diverged");
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 12);
+    }
+
+    #[test]
+    fn shutdown_now_sends_closed_replies() {
+        let sim = tiny_sim(8, HwConfig::pynq_z2());
+        let coord = Coordinator::start(
+            sim,
+            Config { workers: 1, queue_depth: 64, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let mut rxs = Vec::new();
+        for _ in 0..16 {
+            rxs.push(coord.submit_traced(vec![0.5; 128], Method::Saliency).unwrap());
+        }
+        let snap = coord.shutdown_now();
+        let (mut done, mut closed) = (0u64, 0u64);
+        for (_, rx) in rxs {
+            // the regression: every accepted request gets exactly one
+            // reply — never a dropped channel
+            match rx.recv().expect("reply channel must not be dropped") {
+                Ok(_) => done += 1,
+                Err(Closed { .. }) => closed += 1,
+            }
+        }
+        assert_eq!(done + closed, 16);
+        assert_eq!(snap.completed, done);
+    }
+
+    #[test]
+    fn malformed_image_rejected_at_admission() {
+        let sim = tiny_sim(9, HwConfig::pynq_z2());
+        let coord = Coordinator::start(sim, Config::default(), None).unwrap();
+        let (tx, _rx) = mpsc::channel();
+        assert_eq!(
+            coord.submit(vec![0.5; 10], Method::Saliency, None, tx),
+            Err("image size mismatch")
+        );
+        assert!(coord.attribute_blocking(vec![0.5; 10], Method::Saliency).is_err());
+        // well-formed requests still flow
+        let ok = coord.attribute_blocking(vec![0.5; 128], Method::Saliency).unwrap();
+        assert_eq!(ok.relevance.len(), 128);
+        coord.shutdown();
     }
 
     #[test]

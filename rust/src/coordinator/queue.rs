@@ -3,10 +3,15 @@
 //! std-only (no crossbeam/tokio offline): Mutex<VecDeque> + two
 //! Condvars. `try_push` gives the admission-control path (reject when
 //! full — the coordinator's backpressure signal); `pop` blocks until an
-//! item or close.
+//! item or close; `pop_batch` is the micro-batching drain (pop up to N
+//! compatible items for one combined execution); `close_and_drain` is
+//! the abortive shutdown that hands pending items back to the caller so
+//! each can receive an explicit `Closed` reply instead of a dropped
+//! channel.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
 
 pub struct Bounded<T> {
     inner: Mutex<Inner<T>>,
@@ -99,6 +104,82 @@ impl<T> Bounded<T> {
         self.not_empty.notify_all();
         self.not_full.notify_all();
     }
+
+    /// Abortive close: mark closed AND return every item still queued,
+    /// so the caller can give each one an explicit terminal reply. After
+    /// this, pushes fail and poppers drain nothing.
+    pub fn close_and_drain(&self) -> Vec<T> {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        let items: Vec<T> = g.q.drain(..).collect();
+        drop(g);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+        items
+    }
+
+    /// Micro-batching pop: block (like [`Bounded::pop`]) for the first
+    /// item, then keep taking items off the queue *front* while
+    /// `compatible(&batch[0], next)` holds, waiting up to `max_wait` for
+    /// more to arrive, until `max` items are gathered. The scan stops at
+    /// the first incompatible head-of-line item so FIFO order across
+    /// kinds is preserved (another worker picks that one up). Returns
+    /// `None` only when the queue is closed and empty.
+    pub fn pop_batch<F>(&self, max: usize, max_wait: Duration, compatible: F) -> Option<Vec<T>>
+    where
+        F: Fn(&T, &T) -> bool,
+    {
+        let max = max.max(1);
+        let mut g = self.inner.lock().unwrap();
+        let first = loop {
+            if let Some(item) = g.q.pop_front() {
+                break item;
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        };
+        let mut batch = Vec::with_capacity(max);
+        batch.push(first);
+        let deadline = Instant::now() + max_wait;
+        'gather: while batch.len() < max {
+            loop {
+                if batch.len() >= max {
+                    break;
+                }
+                let take = match g.q.front() {
+                    Some(next) => compatible(&batch[0], next),
+                    None => break,
+                };
+                if !take {
+                    break 'gather; // head-of-line item needs a different pass
+                }
+                let item = g.q.pop_front().unwrap();
+                batch.push(item);
+            }
+            if batch.len() >= max || g.closed {
+                break;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                break;
+            }
+            let (guard, _timeout) = self.not_empty.wait_timeout(g, deadline - now).unwrap();
+            g = guard;
+        }
+        // this waiter may have consumed not_empty notifications for items
+        // it is NOT taking (incompatible head-of-line, or batch already
+        // full) — pass the wakeup on so an idle worker picks them up
+        let leftover = !g.q.is_empty();
+        drop(g);
+        // the batched pops freed up to `max` slots
+        self.not_full.notify_all();
+        if leftover {
+            self.not_empty.notify_one();
+        }
+        Some(batch)
+    }
 }
 
 #[cfg(test)]
@@ -169,6 +250,61 @@ mod tests {
         let mut all: Vec<usize> = consumers.into_iter().flat_map(|c| c.join().unwrap()).collect();
         all.sort();
         assert_eq!(all, (0..n_prod * per).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn pop_batch_gathers_compatible_front_run() {
+        let q = Bounded::new(16);
+        // (kind, seq): three 'a' then one 'b' then one 'a'
+        for item in [(0u8, 0u32), (0, 1), (0, 2), (1, 3), (0, 4)] {
+            q.try_push(item).unwrap();
+        }
+        let same_kind = |a: &(u8, u32), b: &(u8, u32)| a.0 == b.0;
+        let batch = q.pop_batch(8, Duration::from_millis(0), same_kind).unwrap();
+        // stops at the incompatible head-of-line 'b' without reordering
+        assert_eq!(batch, vec![(0, 0), (0, 1), (0, 2)]);
+        let batch = q.pop_batch(8, Duration::from_millis(0), same_kind).unwrap();
+        assert_eq!(batch, vec![(1, 3)]);
+        let batch = q.pop_batch(8, Duration::from_millis(0), same_kind).unwrap();
+        assert_eq!(batch, vec![(0, 4)]);
+    }
+
+    #[test]
+    fn pop_batch_respects_max() {
+        let q = Bounded::new(16);
+        for i in 0..6u32 {
+            q.try_push(i).unwrap();
+        }
+        let batch = q.pop_batch(4, Duration::from_millis(0), |_, _| true).unwrap();
+        assert_eq!(batch, vec![0, 1, 2, 3]);
+        let batch = q.pop_batch(4, Duration::from_millis(0), |_, _| true).unwrap();
+        assert_eq!(batch, vec![4, 5]);
+    }
+
+    #[test]
+    fn pop_batch_waits_for_late_arrivals() {
+        let q = Arc::new(Bounded::new(8));
+        q.try_push(1u32).unwrap();
+        let q2 = q.clone();
+        let h = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            q2.try_push(2).unwrap();
+        });
+        let batch = q.pop_batch(2, Duration::from_millis(500), |_, _| true).unwrap();
+        h.join().unwrap();
+        assert_eq!(batch, vec![1, 2]);
+    }
+
+    #[test]
+    fn pop_batch_none_after_close_and_drain() {
+        let q = Bounded::new(8);
+        q.try_push(1u32).unwrap();
+        q.try_push(2).unwrap();
+        let drained = q.close_and_drain();
+        assert_eq!(drained, vec![1, 2]);
+        assert_eq!(q.pop_batch(4, Duration::from_millis(0), |_, _| true), None);
+        assert_eq!(q.pop(), None);
+        assert_eq!(q.try_push(3), Err(PushError::Closed(3)));
     }
 
     #[test]

@@ -5,7 +5,7 @@
 use std::sync::mpsc;
 use std::time::{Duration, Instant};
 
-use super::{Coordinator, Response};
+use super::{Coordinator, Reply, Response};
 use crate::attribution::{Method, ALL_METHODS};
 use crate::data;
 use crate::util::rng::Pcg32;
@@ -46,7 +46,7 @@ pub struct LoadReport {
 /// sample's ground-truth mask.
 pub fn run_load(coord: &Coordinator, spec: LoadSpec) -> LoadReport {
     let mut rng = Pcg32::seeded(spec.seed);
-    let mut pending: Vec<(usize, data::Sample, mpsc::Receiver<Response>)> = Vec::new();
+    let mut pending: Vec<(usize, data::Sample, mpsc::Receiver<Reply>)> = Vec::new();
     let mut rejected = 0usize;
     let t0 = Instant::now();
 
@@ -70,13 +70,16 @@ pub fn run_load(coord: &Coordinator, spec: LoadSpec) -> LoadReport {
     let mut items = Vec::with_capacity(pending.len());
     for (label, sample, rx) in pending {
         match rx.recv_timeout(Duration::from_secs(600)) {
-            Ok(resp) => {
+            Ok(Ok(resp)) => {
                 coord.shadow_check(&sample.image, &resp);
                 let loc = data::localization_score(&resp.relevance, &sample.mask);
                 let correct = resp.pred == label;
                 items.push(TraceItem { response: Some(resp), label, localization: loc, correct });
             }
-            Err(_) => items.push(TraceItem { response: None, label, localization: 0.0, correct: false }),
+            // Closed reply (abortive shutdown) or channel error
+            Ok(Err(_)) | Err(_) => {
+                items.push(TraceItem { response: None, label, localization: 0.0, correct: false })
+            }
         }
     }
     let wall_s = t0.elapsed().as_secs_f64();

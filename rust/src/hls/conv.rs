@@ -18,6 +18,14 @@
 //!
 //! All arithmetic is raw Q-format (i32 storage, i64 accumulate,
 //! rescale + saturate once per output element).
+//!
+//! Every engine has a **batch-N entry point** (`forward_batch`,
+//! `input_grad_batch`, `input_grad_unpool_batch`) that loops images
+//! *inside* the per-tile weight load, fetching each weight tile from
+//! DRAM once per batch instead of once per image (DESIGN.md §Batching).
+//! The single-image functions are wrappers over the batch cores with a
+//! batch of one, so batched and single execution are bit-exact by
+//! construction.
 
 use super::{dram, Cost, HwConfig};
 
@@ -69,19 +77,53 @@ pub fn flip_transpose(w: &[i32], o: usize, i: usize, k: usize) -> Vec<i32> {
 
 /// Tiled conv2d, stride 1. `x`: [I,H,W] raw Q, `w`: [O,I,K,K] raw Q,
 /// `bias`: [O] raw Q or None. Output spatial dims: H+2*pad-K+1.
+///
+/// Thin wrapper over [`forward_batch`] with a batch of one — the batch
+/// core is the only implementation, so single and batched execution are
+/// bit-exact by construction.
 #[allow(clippy::too_many_arguments)]
 pub fn forward(
     cfg: &HwConfig,
     cost: &mut Cost,
     x: &[i32],
+    in_shape: (usize, usize, usize),
+    wgt: &[i32],
+    oc_k: (usize, usize),
+    bias: Option<&[i32]>,
+    pad: usize,
+    post: Post,
+) -> ConvResult {
+    forward_batch(cfg, cost, &[x], in_shape, wgt, oc_k, bias, pad, post)
+        .pop()
+        .expect("batch of one")
+}
+
+/// Batch-N tiled conv2d (the tentpole batching path): identical loop
+/// nest to the paper's engine, but the image loop sits *inside* the
+/// per-tile weight load, so each weight tile travels DRAM → on-chip
+/// exactly once per batch instead of once per image. Per-image
+/// arithmetic is fully independent (one accumulator region per image,
+/// same loop order as batch=1), so results are bit-exact with the
+/// single-image path; only the `Cost` ledger shows the amortization
+/// (weight bytes /= batch, one pipeline fill per tile instead of one
+/// per image).
+#[allow(clippy::too_many_arguments)]
+pub fn forward_batch(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    xs: &[&[i32]],
     (ic_n, h, w_n): (usize, usize, usize),
     wgt: &[i32],
     (oc_n, k): (usize, usize),
     bias: Option<&[i32]>,
     pad: usize,
     post: Post,
-) -> ConvResult {
-    assert_eq!(x.len(), ic_n * h * w_n, "input size mismatch");
+) -> Vec<ConvResult> {
+    let nb = xs.len();
+    assert!(nb > 0, "empty batch");
+    for x in xs {
+        assert_eq!(x.len(), ic_n * h * w_n, "input size mismatch");
+    }
     assert_eq!(wgt.len(), oc_n * ic_n * k * k, "weight size mismatch");
     let oh = h + 2 * pad - (k - 1);
     let ow = w_n + 2 * pad - (k - 1);
@@ -89,29 +131,43 @@ pub fn forward(
         assert!(oh % 2 == 0 && ow % 2 == 0, "pool needs even output dims");
     }
     let q = cfg.q;
-    let mut out = vec![0i32; oc_n * oh * ow];
-    let mut mask = if post == Post::Plain { None } else { Some(vec![false; out.len()]) };
-    let (mut pooled, mut pool_idx) = if post == Post::ReluPool {
-        (Some(vec![0i32; oc_n * oh / 2 * ow / 2]), Some(vec![0u8; oc_n * oh / 2 * ow / 2]))
-    } else {
-        (None, None)
-    };
+    let mut res: Vec<ConvResult> = (0..nb)
+        .map(|_| ConvResult {
+            out: vec![0i32; oc_n * oh * ow],
+            mask: if post == Post::Plain { None } else { Some(vec![false; oc_n * oh * ow]) },
+            pooled: if post == Post::ReluPool {
+                Some(vec![0i32; oc_n * (oh / 2) * (ow / 2)])
+            } else {
+                None
+            },
+            pool_idx: if post == Post::ReluPool {
+                Some(vec![0u8; oc_n * (oh / 2) * (ow / 2)])
+            } else {
+                None
+            },
+        })
+        .collect();
 
-    // accumulator buffer for one output tile (the on-chip output buffer;
-    // output-stationary: lives across the ic loop)
-    let mut acc = vec![0i64; cfg.tile_oc * cfg.tile_oh * cfg.tile_ow];
+    // accumulator buffers for one output tile, one region per image (the
+    // on-chip output buffer; output-stationary: lives across the ic loop)
+    let tile_elems = cfg.tile_oc * cfg.tile_oh * cfg.tile_ow;
+    let mut acc = vec![0i64; nb * tile_elems];
 
-    // §Perf: pre-pad the input once (the line-buffer zero-fill the FPGA
+    // §Perf: pre-pad each input once (the line-buffer zero-fill the FPGA
     // does at load time) so the MAC loops below are branch-free
     // contiguous row FMAs that LLVM can vectorize. Host-only layout
     // choice; cycle/traffic accounting is unchanged.
     let (ph, pw) = (h + 2 * pad, w_n + 2 * pad);
-    let mut xp = vec![0i32; ic_n * ph * pw];
-    for c in 0..ic_n {
-        for y in 0..h {
-            let src = c * h * w_n + y * w_n;
-            let dst = c * ph * pw + (y + pad) * pw + pad;
-            xp[dst..dst + w_n].copy_from_slice(&x[src..src + w_n]);
+    let padded_elems = ic_n * ph * pw;
+    let mut xp = vec![0i32; nb * padded_elems];
+    for (b, x) in xs.iter().enumerate() {
+        let base = b * padded_elems;
+        for c in 0..ic_n {
+            for y in 0..h {
+                let src = c * h * w_n + y * w_n;
+                let dst = base + c * ph * pw + (y + pad) * pw + pad;
+                xp[dst..dst + w_n].copy_from_slice(&x[src..src + w_n]);
+            }
         }
     }
 
@@ -125,7 +181,7 @@ pub fn forward(
             let mut ox0 = 0;
             while ox0 < ow {
                 let tow = cfg.tile_ow.min(ow - ox0);
-                // zero the full strided extent the tile indexes into
+                // zero the full strided extent the tiles index into
                 // (partial tiles still stride by the configured dims)
                 acc.fill(0);
 
@@ -134,11 +190,15 @@ pub fn forward(
                 while ic0 < ic_n {
                     let tic = cfg.tile_ic.min(ic_n - ic0);
 
-                    // DRAM -> input buffer: halo tile rows (bounds-clipped)
+                    // DRAM -> input buffer: halo tile rows (bounds-clipped),
+                    // once per image — activation traffic scales with batch
                     let in_rows = (toh + k - 1) as u64 * tic as u64;
-                    dram::read_tile_rows(cfg, cost, in_rows, (tow + k - 1) as u64);
-                    // DRAM -> weight buffer: one burst per output channel
-                    dram::read(
+                    for _ in 0..nb {
+                        dram::read_tile_rows(cfg, cost, in_rows, (tow + k - 1) as u64);
+                    }
+                    // DRAM -> weight buffer: one burst per output channel,
+                    // fetched ONCE for the whole batch (the batching win)
+                    dram::read_weights(
                         cfg,
                         cost,
                         (toc * tic * k * k * cfg.word_bytes()) as u64,
@@ -155,29 +215,33 @@ pub fn forward(
                     // tile variant (opt 4) was tried and reverted: no
                     // measurable gain over this form (see EXPERIMENTS.md).
                     let narrow = cfg.q.word_bits <= 16;
-                    for oc in 0..toc {
-                        for ic in 0..tic {
-                            let wbase = ((oc0 + oc) * ic_n + (ic0 + ic)) * k * k;
-                            let xbase = (ic0 + ic) * ph * pw;
-                            for kh in 0..k {
-                                for kw in 0..k {
-                                    let wv = wgt[wbase + kh * k + kw];
-                                    if wv == 0 {
-                                        continue; // quantized-to-zero tap
-                                    }
-                                    for ty in 0..toh {
-                                        let xrow = xbase + (oy0 + ty + kh) * pw + ox0 + kw;
-                                        let arow = (oc * cfg.tile_oh + ty) * cfg.tile_ow;
-                                        let xs = &xp[xrow..xrow + tow];
-                                        let accs = &mut acc[arow..arow + tow];
-                                        if narrow {
-                                            for (a, &xv) in accs.iter_mut().zip(xs) {
-                                                *a += (xv * wv) as i64;
-                                            }
-                                        } else {
-                                            let wv = wv as i64;
-                                            for (a, &xv) in accs.iter_mut().zip(xs) {
-                                                *a += xv as i64 * wv;
+                    for b in 0..nb {
+                        let xpb = &xp[b * padded_elems..(b + 1) * padded_elems];
+                        let accb = &mut acc[b * tile_elems..(b + 1) * tile_elems];
+                        for oc in 0..toc {
+                            for ic in 0..tic {
+                                let wbase = ((oc0 + oc) * ic_n + (ic0 + ic)) * k * k;
+                                let xbase = (ic0 + ic) * ph * pw;
+                                for kh in 0..k {
+                                    for kw in 0..k {
+                                        let wv = wgt[wbase + kh * k + kw];
+                                        if wv == 0 {
+                                            continue; // quantized-to-zero tap
+                                        }
+                                        for ty in 0..toh {
+                                            let xrow = xbase + (oy0 + ty + kh) * pw + ox0 + kw;
+                                            let arow = (oc * cfg.tile_oh + ty) * cfg.tile_ow;
+                                            let xs_row = &xpb[xrow..xrow + tow];
+                                            let accs = &mut accb[arow..arow + tow];
+                                            if narrow {
+                                                for (a, &xv) in accs.iter_mut().zip(xs_row) {
+                                                    *a += (xv * wv) as i64;
+                                                }
+                                            } else {
+                                                let wv = wv as i64;
+                                                for (a, &xv) in accs.iter_mut().zip(xs_row) {
+                                                    *a += xv as i64 * wv;
+                                                }
                                             }
                                         }
                                     }
@@ -187,64 +251,73 @@ pub fn forward(
                     }
                     // cycles: ceil-division by the unroll lanes, per the
                     // unrolled loop structure (partial tiles still occupy
-                    // full lanes)
+                    // full lanes); one pipeline fill per tile, amortized
+                    // across the batch
                     let spatial_iters =
                         (toh.div_ceil(cfg.n_oh) * tow.div_ceil(cfg.n_ow)) as u64;
                     cost.compute_cycles +=
-                        spatial_iters * (toc * tic * k * k) as u64 + cfg.pipeline_depth;
-                    cost.macs += (toh * tow * toc * tic * k * k) as u64;
+                        nb as u64 * spatial_iters * (toc * tic * k * k) as u64
+                            + cfg.pipeline_depth;
+                    cost.macs += (nb * toh * tow * toc * tic * k * k) as u64;
 
                     ic0 += tic;
                 }
 
                 // --- output store with fused post-ops (paper §III-D) ------
-                for oc in 0..toc {
-                    for ty in 0..toh {
-                        for tx in 0..tow {
-                            let mut v = q.rescale_acc(acc[(oc * cfg.tile_oh + ty) * cfg.tile_ow + tx]);
-                            if let Some(b) = bias {
-                                v = q.add(v, b[oc0 + oc]);
-                            }
-                            let gi = (oc0 + oc) * oh * ow + (oy0 + ty) * ow + (ox0 + tx);
-                            if let Some(m) = mask.as_mut() {
-                                m[gi] = v > 0;
-                                if v < 0 {
-                                    v = 0;
-                                }
-                            }
-                            out[gi] = v;
-                        }
-                    }
-                }
-                if post == Post::ReluPool {
-                    // pool scan during store: pick max of each 2x2 window
-                    let (pv, pi) = (pooled.as_mut().unwrap(), pool_idx.as_mut().unwrap());
-                    let (ph, pw) = (oh / 2, ow / 2);
+                for b in 0..nb {
+                    let accb = &acc[b * tile_elems..(b + 1) * tile_elems];
+                    let r = &mut res[b];
                     for oc in 0..toc {
-                        for py in (oy0 / 2)..((oy0 + toh) / 2) {
-                            for px in (ox0 / 2)..((ox0 + tow) / 2) {
-                                let mut best = i32::MIN;
-                                let mut bidx = 0u8;
-                                for dy in 0..2 {
-                                    for dx in 0..2 {
-                                        let v = out[(oc0 + oc) * oh * ow
-                                            + (2 * py + dy) * ow
-                                            + (2 * px + dx)];
-                                        if v > best {
-                                            best = v;
-                                            bidx = (dy * 2 + dx) as u8;
-                                        }
+                        for ty in 0..toh {
+                            for tx in 0..tow {
+                                let mut v = q
+                                    .rescale_acc(accb[(oc * cfg.tile_oh + ty) * cfg.tile_ow + tx]);
+                                if let Some(bs) = bias {
+                                    v = q.add(v, bs[oc0 + oc]);
+                                }
+                                let gi = (oc0 + oc) * oh * ow + (oy0 + ty) * ow + (ox0 + tx);
+                                if let Some(m) = r.mask.as_mut() {
+                                    m[gi] = v > 0;
+                                    if v < 0 {
+                                        v = 0;
                                     }
                                 }
-                                pv[(oc0 + oc) * ph * pw + py * pw + px] = best;
-                                pi[(oc0 + oc) * ph * pw + py * pw + px] = bidx;
+                                r.out[gi] = v;
                             }
                         }
                     }
-                    // DRAM write: only pooled values leave the chip
-                    dram::write_tile_rows(cfg, cost, (toc * toh / 2) as u64, (tow / 2) as u64);
-                } else {
-                    dram::write_tile_rows(cfg, cost, (toc * toh) as u64, tow as u64);
+                    if post == Post::ReluPool {
+                        // pool scan during store: pick max of each 2x2 window
+                        let ConvResult { out, pooled, pool_idx, .. } = &mut res[b];
+                        let pv = pooled.as_mut().unwrap();
+                        let pi = pool_idx.as_mut().unwrap();
+                        let (pool_h, pool_w) = (oh / 2, ow / 2);
+                        for oc in 0..toc {
+                            for py in (oy0 / 2)..((oy0 + toh) / 2) {
+                                for px in (ox0 / 2)..((ox0 + tow) / 2) {
+                                    let mut best = i32::MIN;
+                                    let mut bidx = 0u8;
+                                    for dy in 0..2 {
+                                        for dx in 0..2 {
+                                            let v = out[(oc0 + oc) * oh * ow
+                                                + (2 * py + dy) * ow
+                                                + (2 * px + dx)];
+                                            if v > best {
+                                                best = v;
+                                                bidx = (dy * 2 + dx) as u8;
+                                            }
+                                        }
+                                    }
+                                    pv[(oc0 + oc) * pool_h * pool_w + py * pool_w + px] = best;
+                                    pi[(oc0 + oc) * pool_h * pool_w + py * pool_w + px] = bidx;
+                                }
+                            }
+                        }
+                        // DRAM write: only pooled values leave the chip
+                        dram::write_tile_rows(cfg, cost, (toc * toh / 2) as u64, (tow / 2) as u64);
+                    } else {
+                        dram::write_tile_rows(cfg, cost, (toc * toh) as u64, tow as u64);
+                    }
                 }
 
                 ox0 += tow;
@@ -254,7 +327,7 @@ pub fn forward(
         oc0 += toc;
     }
 
-    ConvResult { out, mask, pooled, pool_idx }
+    res
 }
 
 /// BP conv (paper §III-E): gradient w.r.t. the layer input — the same
@@ -274,6 +347,27 @@ pub fn input_grad(
     forward(cfg, cost, g, g_shape, w_bp, (out_ch, k), None, bp_pad, Post::Plain).out
 }
 
+/// Batch-N BP conv: [`input_grad`] over a batch of upstream gradients,
+/// sharing each flipped-transposed weight tile across the batch (the
+/// same amortization as [`forward_batch`], which it delegates to).
+#[allow(clippy::too_many_arguments)]
+pub fn input_grad_batch(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    gs: &[&[i32]],
+    g_shape: (usize, usize, usize),
+    w_bp: &[i32],
+    out_ch: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<Vec<i32>> {
+    let bp_pad = k - 1 - pad;
+    forward_batch(cfg, cost, gs, g_shape, w_bp, (out_ch, k), None, bp_pad, Post::Plain)
+        .into_iter()
+        .map(|r| r.out)
+        .collect()
+}
+
 /// BP conv fused with unpooling (paper §III-D/E combined): the upstream
 /// gradient arrives on the *pooled* grid [Cg,PH,PW] together with the
 /// 2-bit argmax indices; the engine scatters each pooled gradient
@@ -285,15 +379,42 @@ pub fn input_grad_unpool(
     cfg: &HwConfig,
     cost: &mut Cost,
     g_pooled: &[i32],
-    (cg_n, ph, pw): (usize, usize, usize),
+    shape: (usize, usize, usize),
     pool_idx: &[u8],
     w_bp: &[i32],
     out_ch: usize,
     k: usize,
     pad: usize,
 ) -> Vec<i32> {
-    assert_eq!(g_pooled.len(), cg_n * ph * pw);
-    assert_eq!(pool_idx.len(), g_pooled.len());
+    input_grad_unpool_batch(cfg, cost, &[g_pooled], shape, &[pool_idx], w_bp, out_ch, k, pad)
+        .pop()
+        .expect("batch of one")
+}
+
+/// Batch-N fused unpool + gradient conv: the image loop sits inside the
+/// per-tile weight-view load, so the flipped-transposed weights for a
+/// channel block are fetched once per batch. Per-image scatter
+/// arithmetic is independent (one accumulator region per image, same
+/// order as batch=1), so results are bit-exact with [`input_grad_unpool`].
+#[allow(clippy::too_many_arguments)]
+pub fn input_grad_unpool_batch(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    gs_pooled: &[&[i32]],
+    (cg_n, ph, pw): (usize, usize, usize),
+    pool_idxs: &[&[u8]],
+    w_bp: &[i32],
+    out_ch: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<Vec<i32>> {
+    let nb = gs_pooled.len();
+    assert!(nb > 0, "empty batch");
+    assert_eq!(pool_idxs.len(), nb, "one pool-index mask per image");
+    for b in 0..nb {
+        assert_eq!(gs_pooled[b].len(), cg_n * ph * pw);
+        assert_eq!(pool_idxs[b].len(), gs_pooled[b].len());
+    }
     assert_eq!(w_bp.len(), out_ch * cg_n * k * k);
     let (h, w_n) = (2 * ph, 2 * pw);
     let bp_pad = k - 1 - pad;
@@ -303,7 +424,8 @@ pub fn input_grad_unpool(
     // output channel) and pre-transpose the weight view to
     // [cg][kh][kw][o] so each scatter tap is one long contiguous FMA
     // over out_ch. Host layout only; results + cost are unchanged.
-    let mut acc = vec![0i64; oh * ow * out_ch];
+    let grad_elems = oh * ow * out_ch;
+    let mut acc = vec![0i64; nb * grad_elems];
     let mut wsc = vec![0i32; w_bp.len()];
     for o in 0..out_ch {
         for cg in 0..cg_n {
@@ -327,51 +449,59 @@ pub fn input_grad_unpool(
             while px0 < pw {
                 let tpw = tile_pw.min(pw - px0);
 
-                // loads: pooled gradient tile + packed 2-bit indices
-                dram::read_tile_rows(cfg, cost, (tc * tph) as u64, tpw as u64);
-                dram::read(cfg, cost, ((tc * tph * tpw) as u64).div_ceil(4), tc as u64);
-                // weight view for this channel block
-                dram::read(
+                // loads: pooled gradient tile + packed 2-bit indices,
+                // once per image
+                for _ in 0..nb {
+                    dram::read_tile_rows(cfg, cost, (tc * tph) as u64, tpw as u64);
+                    dram::read(cfg, cost, ((tc * tph * tpw) as u64).div_ceil(4), tc as u64);
+                }
+                // weight view for this channel block: ONCE per batch
+                dram::read_weights(
                     cfg,
                     cost,
                     (out_ch * tc * k * k * cfg.word_bytes()) as u64,
                     out_ch as u64,
                 );
 
-                for cg in c0..c0 + tc {
-                    for py in py0..py0 + tph {
-                        for px in px0..px0 + tpw {
-                            let pi = cg * ph * pw + py * pw + px;
-                            let gv = g_pooled[pi];
-                            if gv == 0 {
-                                continue;
-                            }
-                            let idx = pool_idx[pi];
-                            let yy = 2 * py + (idx >> 1) as usize;
-                            let xx = 2 * px + (idx & 1) as usize;
-                            for kh in 0..k {
-                                let oy = yy + bp_pad;
-                                if oy < kh || oy - kh >= oh {
+                for b in 0..nb {
+                    let g_pooled = gs_pooled[b];
+                    let pool_idx = pool_idxs[b];
+                    let accb = &mut acc[b * grad_elems..(b + 1) * grad_elems];
+                    for cg in c0..c0 + tc {
+                        for py in py0..py0 + tph {
+                            for px in px0..px0 + tpw {
+                                let pi = cg * ph * pw + py * pw + px;
+                                let gv = g_pooled[pi];
+                                if gv == 0 {
                                     continue;
                                 }
-                                let oy = oy - kh;
-                                for kw in 0..k {
-                                    let oxp = xx + bp_pad;
-                                    if oxp < kw || oxp - kw >= ow {
+                                let idx = pool_idx[pi];
+                                let yy = 2 * py + (idx >> 1) as usize;
+                                let xx = 2 * px + (idx & 1) as usize;
+                                for kh in 0..k {
+                                    let oy = yy + bp_pad;
+                                    if oy < kh || oy - kh >= oh {
                                         continue;
                                     }
-                                    let abase = (oy * ow + (oxp - kw)) * out_ch;
-                                    let wbase = (cg * k * k + kh * k + kw) * out_ch;
-                                    let accs = &mut acc[abase..abase + out_ch];
-                                    let ws = &wsc[wbase..wbase + out_ch];
-                                    if narrow {
-                                        for (a, &wv) in accs.iter_mut().zip(ws) {
-                                            *a += (gv * wv) as i64;
+                                    let oy = oy - kh;
+                                    for kw in 0..k {
+                                        let oxp = xx + bp_pad;
+                                        if oxp < kw || oxp - kw >= ow {
+                                            continue;
                                         }
-                                    } else {
-                                        let gv = gv as i64;
-                                        for (a, &wv) in accs.iter_mut().zip(ws) {
-                                            *a += gv * wv as i64;
+                                        let abase = (oy * ow + (oxp - kw)) * out_ch;
+                                        let wbase = (cg * k * k + kh * k + kw) * out_ch;
+                                        let accs = &mut accb[abase..abase + out_ch];
+                                        let ws = &wsc[wbase..wbase + out_ch];
+                                        if narrow {
+                                            for (a, &wv) in accs.iter_mut().zip(ws) {
+                                                *a += (gv * wv) as i64;
+                                            }
+                                        } else {
+                                            let gv = gv as i64;
+                                            for (a, &wv) in accs.iter_mut().zip(ws) {
+                                                *a += gv * wv as i64;
+                                            }
                                         }
                                     }
                                 }
@@ -379,9 +509,10 @@ pub fn input_grad_unpool(
                         }
                     }
                 }
-                // cycles: one MAC group per (pooled elem, out_ch, tap),
-                // parallel over the N_oh x N_ow lanes
-                let macs = (tc * tph * tpw * out_ch * k * k) as u64;
+                // cycles: one MAC group per (image, pooled elem, out_ch,
+                // tap), parallel over the N_oh x N_ow lanes; one pipeline
+                // fill per tile, amortized across the batch
+                let macs = (nb * tc * tph * tpw * out_ch * k * k) as u64;
                 cost.compute_cycles +=
                     macs.div_ceil(cfg.conv_macs_parallel() as u64) + cfg.pipeline_depth;
                 cost.macs += macs;
@@ -393,18 +524,23 @@ pub fn input_grad_unpool(
         c0 += tc;
     }
 
-    // rescale + store the gradient tensor (transpose back to [o][y][x])
-    let mut out = vec![0i32; out_ch * oh * ow];
-    for y in 0..oh {
-        for x in 0..ow {
-            let base = (y * ow + x) * out_ch;
-            for o in 0..out_ch {
-                out[o * oh * ow + y * ow + x] = q.rescale_acc(acc[base + o]);
+    // rescale + store the gradient tensors (transpose back to [o][y][x])
+    let mut outs = Vec::with_capacity(nb);
+    for b in 0..nb {
+        let accb = &acc[b * grad_elems..(b + 1) * grad_elems];
+        let mut out = vec![0i32; out_ch * oh * ow];
+        for y in 0..oh {
+            for x in 0..ow {
+                let base = (y * ow + x) * out_ch;
+                for o in 0..out_ch {
+                    out[o * oh * ow + y * ow + x] = q.rescale_acc(accb[base + o]);
+                }
             }
         }
+        dram::write_tile_rows(cfg, cost, (out_ch * oh) as u64, ow as u64);
+        outs.push(out);
     }
-    dram::write_tile_rows(cfg, cost, (out_ch * oh) as u64, ow as u64);
-    out
+    outs
 }
 
 #[cfg(test)]
@@ -635,6 +771,70 @@ mod tests {
         // and it must be cheaper: 1/4 the MACs
         assert_eq!(ca.macs * 4, cb.macs);
         assert!(ca.compute_cycles < cb.compute_cycles);
+    }
+
+    #[test]
+    fn batch_matches_single_and_amortizes_weights() {
+        let mut rng = Pcg32::seeded(29);
+        let q = QFormat::paper16();
+        let (ic, h, w, oc, k, pad) = (3, 12, 12, 8, 3, 1);
+        let imgs: Vec<Vec<i32>> = (0..3)
+            .map(|_| quantize_slice(q, &rand_vec(&mut rng, ic * h * w, -1.0, 1.0)))
+            .collect();
+        let wg = quantize_slice(q, &rand_vec(&mut rng, oc * ic * k * k, -0.5, 0.5));
+        let bf = quantize_slice(q, &rand_vec(&mut rng, oc, -0.2, 0.2));
+        let c = cfg();
+        for post in [Post::Plain, Post::Relu, Post::ReluPool] {
+            let refs: Vec<&[i32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            let mut cb = Cost::new();
+            let batch =
+                forward_batch(&c, &mut cb, &refs, (ic, h, w), &wg, (oc, k), Some(&bf), pad, post);
+            let mut read_single_total = 0;
+            for (i, r) in batch.iter().enumerate() {
+                let mut cs = Cost::new();
+                let single =
+                    forward(&c, &mut cs, &imgs[i], (ic, h, w), &wg, (oc, k), Some(&bf), pad, post);
+                assert_eq!(r.out, single.out, "post {post:?} image {i}: out diverged");
+                assert_eq!(r.mask, single.mask);
+                assert_eq!(r.pooled, single.pooled);
+                assert_eq!(r.pool_idx, single.pool_idx);
+                // weights fetched once per batch == once per single run, so
+                // the batch pays 1x (not 3x) the weight traffic
+                assert_eq!(cb.dram_weight_bytes, cs.dram_weight_bytes, "post {post:?}");
+                read_single_total += cs.dram_read_bytes;
+            }
+            assert!(cb.dram_read_bytes < read_single_total, "post {post:?}");
+        }
+    }
+
+    #[test]
+    fn batch_input_grad_unpool_matches_single() {
+        let mut rng = Pcg32::seeded(31);
+        let q = QFormat::paper16();
+        let (cg, ph, pw, out_ch, k, pad) = (8, 4, 4, 6, 3, 1);
+        let gs: Vec<Vec<i32>> = (0..3)
+            .map(|_| quantize_slice(q, &rand_vec(&mut rng, cg * ph * pw, -1.0, 1.0)))
+            .collect();
+        let idxs: Vec<Vec<u8>> = (0..3)
+            .map(|_| (0..cg * ph * pw).map(|_| rng.below(4) as u8).collect())
+            .collect();
+        let wf = rand_vec(&mut rng, out_ch * cg * k * k, -0.5, 0.5);
+        let wbp = flip_transpose(&quantize_slice(q, &wf), cg, out_ch, k);
+        let c = cfg();
+        let grefs: Vec<&[i32]> = gs.iter().map(|v| v.as_slice()).collect();
+        let irefs: Vec<&[u8]> = idxs.iter().map(|v| v.as_slice()).collect();
+        let mut cb = Cost::new();
+        let batch = input_grad_unpool_batch(
+            &c, &mut cb, &grefs, (cg, ph, pw), &irefs, &wbp, out_ch, k, pad,
+        );
+        for i in 0..3 {
+            let mut cs = Cost::new();
+            let single = input_grad_unpool(
+                &c, &mut cs, &gs[i], (cg, ph, pw), &idxs[i], &wbp, out_ch, k, pad,
+            );
+            assert_eq!(batch[i], single, "image {i} diverged");
+            assert_eq!(cb.dram_weight_bytes, cs.dram_weight_bytes);
+        }
     }
 
     #[test]

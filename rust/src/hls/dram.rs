@@ -36,6 +36,17 @@ fn transfer(cfg: &HwConfig, cost: &mut Cost, bytes: u64, bursts: u64, is_write: 
     }
 }
 
+/// Read a model-weight tile: like [`read`], and additionally tracked in
+/// the `dram_weight_bytes` ledger so weight-reuse optimizations (the
+/// batch-N path amortizing weight fetches across images) are visible
+/// separately from activation/gradient traffic.
+pub fn read_weights(cfg: &HwConfig, cost: &mut Cost, bytes: u64, bursts: u64) {
+    read(cfg, cost, bytes, bursts);
+    if bytes > 0 {
+        cost.dram_weight_bytes += bytes;
+    }
+}
+
 /// Read a row-tiled 2-D region: `rows` bursts of `row_words` words.
 pub fn read_tile_rows(cfg: &HwConfig, cost: &mut Cost, rows: u64, row_words: u64) {
     read(cfg, cost, rows * row_words * cfg.word_bytes() as u64, rows);
@@ -71,6 +82,18 @@ mod tests {
         write(&cfg, &mut c, 8, 1);
         assert_eq!(c.dram_cycles, 260 + 1 + 16);
         assert_eq!(c.dram_write_bytes, 8);
+    }
+
+    #[test]
+    fn weight_reads_tracked_separately() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        read(&cfg, &mut c, 100, 1);
+        read_weights(&cfg, &mut c, 60, 2);
+        assert_eq!(c.dram_read_bytes, 160);
+        assert_eq!(c.dram_weight_bytes, 60);
+        read_weights(&cfg, &mut c, 0, 1);
+        assert_eq!(c.dram_weight_bytes, 60);
     }
 
     #[test]

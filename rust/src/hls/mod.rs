@@ -127,6 +127,10 @@ pub struct Cost {
     pub dram_cycles: u64,
     pub dram_read_bytes: u64,
     pub dram_write_bytes: u64,
+    /// Subset of `dram_read_bytes` that is model-weight traffic — the
+    /// quantity the batch-N execution path amortizes across images
+    /// (each weight tile is fetched once per batch, not once per image).
+    pub dram_weight_bytes: u64,
     pub dram_bursts: u64,
     pub macs: u64,
     /// (label, total cycles at that point) checkpoints per layer.
@@ -168,6 +172,7 @@ impl Cost {
         self.dram_cycles += other.dram_cycles;
         self.dram_read_bytes += other.dram_read_bytes;
         self.dram_write_bytes += other.dram_write_bytes;
+        self.dram_weight_bytes += other.dram_weight_bytes;
         self.dram_bursts += other.dram_bursts;
         self.macs += other.macs;
         let base: u64 = self.layers.last().map(|(_, t)| *t).unwrap_or(0);
@@ -216,10 +221,12 @@ mod tests {
 
         let mut d = Cost::new();
         d.compute_cycles = 20;
+        d.dram_weight_bytes = 64;
         d.checkpoint("c");
         c.merge(&d);
         assert_eq!(c.total_cycles(), 200);
         assert_eq!(c.layers.last().unwrap().1, 200);
+        assert_eq!(c.dram_weight_bytes, 64);
     }
 
     #[test]

@@ -4,6 +4,11 @@
 //! the *same* block with the weight buffer loaded "in a transpose
 //! manner from DRAM" — modeled as a strided (per-element-burst) load
 //! pattern whose traffic the cost ledger charges accordingly.
+//!
+//! Both directions have batch-N entry points (`forward_batch`,
+//! `backward_batch`) that fetch each weight tile once per batch; the
+//! single-image functions are batch-of-one wrappers, so batched and
+//! single execution are bit-exact by construction (DESIGN.md §Batching).
 
 use super::{dram, Cost, HwConfig};
 
@@ -11,63 +16,107 @@ use super::{dram, Cost, HwConfig};
 /// Returns `[OUT]`. If `relu_mask` is Some, ReLU is fused into the
 /// output store and the positivity mask is written there (the FC ReLU
 /// mask the paper keeps on-chip).
+///
+/// Thin wrapper over [`forward_batch`] with a batch of one.
 pub fn forward(
     cfg: &HwConfig,
     cost: &mut Cost,
     w: &[i32],
-    (out_n, in_n): (usize, usize),
+    dims: (usize, usize),
     x: &[i32],
     bias: Option<&[i32]>,
-    mut relu_mask: Option<&mut Vec<bool>>,
+    relu_mask: Option<&mut Vec<bool>>,
 ) -> Vec<i32> {
+    let (out_n, _) = dims;
+    let mut masks = relu_mask.as_ref().map(|_| vec![vec![false; out_n]; 1]);
+    let mut outs = forward_batch(cfg, cost, w, dims, &[x], bias, masks.as_mut());
+    if let (Some(dst), Some(mut src)) = (relu_mask, masks) {
+        *dst = src.pop().expect("batch of one");
+    }
+    outs.pop().expect("batch of one")
+}
+
+/// Batch-N FP fully-connected (the tentpole batching path): each weight
+/// tile is fetched from DRAM once per batch and multiplied against every
+/// image's input tile while it sits in the on-chip buffer. Per-image
+/// arithmetic is independent (one accumulator lane group per image, same
+/// order as batch=1), so results are bit-exact with [`forward`]. When
+/// `relu_masks` is Some it must hold one `vec![false; out_n]` per image.
+pub fn forward_batch(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    xs: &[&[i32]],
+    bias: Option<&[i32]>,
+    mut relu_masks: Option<&mut Vec<Vec<bool>>>,
+) -> Vec<Vec<i32>> {
+    let nb = xs.len();
+    assert!(nb > 0, "empty batch");
     assert_eq!(w.len(), out_n * in_n);
-    assert_eq!(x.len(), in_n);
+    for x in xs {
+        assert_eq!(x.len(), in_n);
+    }
+    if let Some(ms) = relu_masks.as_deref_mut() {
+        assert_eq!(ms.len(), nb, "one relu mask per image");
+        for m in ms.iter() {
+            assert_eq!(m.len(), out_n, "mask length mismatch");
+        }
+    }
     let q = cfg.q;
-    let mut out = vec![0i32; out_n];
-    let mut acc = vec![0i64; cfg.vmm_tile];
+    let mut outs = vec![vec![0i32; out_n]; nb];
+    let mut acc = vec![0i64; nb * cfg.vmm_tile];
 
     let mut o0 = 0;
     while o0 < out_n {
         let to = cfg.vmm_tile.min(out_n - o0);
-        acc[..to].fill(0);
+        acc.fill(0);
         let mut i0 = 0;
         while i0 < in_n {
             let ti = cfg.vmm_in_tile.min(in_n - i0);
-            // loads: x tile (contiguous), W tile (one burst per out row)
-            dram::read_contig(cfg, cost, ti as u64);
-            dram::read(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
-            // MAC loop: vmm_tile parallel lanes over the output elements
-            for o in 0..to {
-                let row = (o0 + o) * in_n;
-                let mut s = 0i64;
-                for i in 0..ti {
-                    s += w[row + i0 + i] as i64 * x[i0 + i] as i64;
-                }
-                acc[o] += s;
+            // loads: x tile (contiguous) per image, W tile (one burst per
+            // out row) ONCE per batch — the batching win
+            for _ in 0..nb {
+                dram::read_contig(cfg, cost, ti as u64);
             }
-            // cycles: ti iterations, `to` lanes unrolled (partial tiles
-            // still occupy the full block)
-            cost.compute_cycles += ti as u64 + cfg.pipeline_depth;
-            cost.macs += (to * ti) as u64;
+            dram::read_weights(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
+            // MAC loop: vmm_tile parallel lanes over the output elements
+            for (b, x) in xs.iter().enumerate() {
+                let accb = &mut acc[b * cfg.vmm_tile..b * cfg.vmm_tile + to];
+                for (o, a) in accb.iter_mut().enumerate() {
+                    let row = (o0 + o) * in_n;
+                    let mut s = 0i64;
+                    for i in 0..ti {
+                        s += w[row + i0 + i] as i64 * x[i0 + i] as i64;
+                    }
+                    *a += s;
+                }
+            }
+            // cycles: ti iterations per image, `to` lanes unrolled (partial
+            // tiles still occupy the full block); one fill per tile
+            cost.compute_cycles += nb as u64 * ti as u64 + cfg.pipeline_depth;
+            cost.macs += (nb * to * ti) as u64;
             i0 += ti;
         }
-        for o in 0..to {
-            let mut v = q.rescale_acc(acc[o]);
-            if let Some(b) = bias {
-                v = q.add(v, b[o0 + o]);
-            }
-            if let Some(m) = relu_mask.as_deref_mut() {
-                m[o0 + o] = v > 0;
-                if v < 0 {
-                    v = 0;
+        for b in 0..nb {
+            for o in 0..to {
+                let mut v = q.rescale_acc(acc[b * cfg.vmm_tile + o]);
+                if let Some(bs) = bias {
+                    v = q.add(v, bs[o0 + o]);
                 }
+                if let Some(ms) = relu_masks.as_deref_mut() {
+                    ms[b][o0 + o] = v > 0;
+                    if v < 0 {
+                        v = 0;
+                    }
+                }
+                outs[b][o0 + o] = v;
             }
-            out[o0 + o] = v;
+            dram::write_contig(cfg, cost, to as u64);
         }
-        dram::write_contig(cfg, cost, to as u64);
         o0 += to;
     }
-    out
+    outs
 }
 
 /// BP fully-connected: gx = Wᵀ·g. Same compute block; the weight tile
@@ -78,48 +127,73 @@ pub fn backward(
     cfg: &HwConfig,
     cost: &mut Cost,
     w: &[i32],
-    (out_n, in_n): (usize, usize),
+    dims: (usize, usize),
     g: &[i32],
 ) -> Vec<i32> {
+    backward_batch(cfg, cost, w, dims, &[g]).pop().expect("batch of one")
+}
+
+/// Batch-N BP fully-connected: gx = Wᵀ·g for every gradient in the
+/// batch, with each (transpose-manner) weight tile fetched once per
+/// batch. Bit-exact with [`backward`] per image.
+pub fn backward_batch(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    gs: &[&[i32]],
+) -> Vec<Vec<i32>> {
+    let nb = gs.len();
+    assert!(nb > 0, "empty batch");
     assert_eq!(w.len(), out_n * in_n);
-    assert_eq!(g.len(), out_n);
+    for g in gs {
+        assert_eq!(g.len(), out_n);
+    }
     let q = cfg.q;
-    let mut out = vec![0i32; in_n];
-    let mut acc = vec![0i64; cfg.vmm_tile];
+    let mut outs = vec![vec![0i32; in_n]; nb];
+    let mut acc = vec![0i64; nb * cfg.vmm_tile];
 
     let mut i0 = 0;
     while i0 < in_n {
         let ti = cfg.vmm_tile.min(in_n - i0); // output elements of BP
-        acc[..ti].fill(0);
+        acc.fill(0);
         let mut o0 = 0;
         while o0 < out_n {
             let to = cfg.vmm_in_tile.min(out_n - o0); // reduction extent
-            dram::read_contig(cfg, cost, to as u64);
+            for _ in 0..nb {
+                dram::read_contig(cfg, cost, to as u64);
+            }
             // transpose load: W[o0..o0+to, i0..i0+ti] fetched column-major;
             // every element of a column is strided by in_n in DRAM, so the
             // fetch degenerates to one short burst per *row segment*
             // touched: `to` bursts (vs the FP path's `to`-rows-as-one-
             // tile pattern costing vmm_tile bursts) — the price of the
-            // paper's transpose-manner access pattern
-            dram::read(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
-            for i in 0..ti {
-                let mut s = 0i64;
-                for o in 0..to {
-                    s += w[(o0 + o) * in_n + i0 + i] as i64 * g[o0 + o] as i64;
+            // paper's transpose-manner access pattern. Fetched once per
+            // batch.
+            dram::read_weights(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
+            for (b, g) in gs.iter().enumerate() {
+                let accb = &mut acc[b * cfg.vmm_tile..b * cfg.vmm_tile + ti];
+                for (i, a) in accb.iter_mut().enumerate() {
+                    let mut s = 0i64;
+                    for o in 0..to {
+                        s += w[(o0 + o) * in_n + i0 + i] as i64 * g[o0 + o] as i64;
+                    }
+                    *a += s;
                 }
-                acc[i] += s;
             }
-            cost.compute_cycles += to as u64 + cfg.pipeline_depth;
-            cost.macs += (to * ti) as u64;
+            cost.compute_cycles += nb as u64 * to as u64 + cfg.pipeline_depth;
+            cost.macs += (nb * to * ti) as u64;
             o0 += to;
         }
-        for i in 0..ti {
-            out[i0 + i] = q.rescale_acc(acc[i]);
+        for (b, out) in outs.iter_mut().enumerate() {
+            for i in 0..ti {
+                out[i0 + i] = q.rescale_acc(acc[b * cfg.vmm_tile + i]);
+            }
+            dram::write_contig(cfg, cost, ti as u64);
         }
-        dram::write_contig(cfg, cost, ti as u64);
         i0 += ti;
     }
-    out
+    outs
 }
 
 #[cfg(test)]
@@ -215,6 +289,54 @@ mod tests {
         // same weight bytes, different burst pattern (BP strided)
         assert_eq!(cf.macs, cb.macs);
         assert!(cb.dram_bursts > cf.dram_bursts, "{} vs {}", cb.dram_bursts, cf.dram_bursts);
+    }
+
+    #[test]
+    fn batch_matches_single_and_amortizes_weights() {
+        let mut rng = Pcg32::seeded(37);
+        let q = QFormat::paper16();
+        let (out_n, in_n) = (40, 300);
+        let wf = quantize_slice(q, &rand_vec(&mut rng, out_n * in_n, -0.1, 0.1));
+        let bf = quantize_slice(q, &rand_vec(&mut rng, out_n, -0.5, 0.5));
+        let xs: Vec<Vec<i32>> = (0..4)
+            .map(|_| quantize_slice(q, &rand_vec(&mut rng, in_n, -1.0, 1.0)))
+            .collect();
+        let cfg = HwConfig::pynq_z2();
+        let refs: Vec<&[i32]> = xs.iter().map(|v| v.as_slice()).collect();
+        let mut cb = Cost::new();
+        let mut batch_masks = vec![vec![false; out_n]; 4];
+        let batch = forward_batch(
+            &cfg,
+            &mut cb,
+            &wf,
+            (out_n, in_n),
+            &refs,
+            Some(&bf),
+            Some(&mut batch_masks),
+        );
+        for (i, x) in xs.iter().enumerate() {
+            let mut cs = Cost::new();
+            let mut mask = vec![false; out_n];
+            let single =
+                forward(&cfg, &mut cs, &wf, (out_n, in_n), x, Some(&bf), Some(&mut mask));
+            assert_eq!(batch[i], single, "image {i} fp diverged");
+            assert_eq!(batch_masks[i], mask, "image {i} mask diverged");
+            assert_eq!(cb.dram_weight_bytes, cs.dram_weight_bytes);
+        }
+
+        // BP duals
+        let gs: Vec<Vec<i32>> = (0..4)
+            .map(|_| quantize_slice(q, &rand_vec(&mut rng, out_n, -1.0, 1.0)))
+            .collect();
+        let grefs: Vec<&[i32]> = gs.iter().map(|v| v.as_slice()).collect();
+        let mut cbb = Cost::new();
+        let bb = backward_batch(&cfg, &mut cbb, &wf, (out_n, in_n), &grefs);
+        for (i, g) in gs.iter().enumerate() {
+            let mut cs = Cost::new();
+            let single = backward(&cfg, &mut cs, &wf, (out_n, in_n), g);
+            assert_eq!(bb[i], single, "image {i} bp diverged");
+            assert_eq!(cbb.dram_weight_bytes, cs.dram_weight_bytes);
+        }
     }
 
     #[test]

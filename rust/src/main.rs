@@ -201,7 +201,9 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("requests", "60", "number of requests to drive")
         .opt("rate", "0", "arrival rate req/s (0 = closed loop)")
         .opt("verify", "0.1", "shadow-verify fraction on the PJRT golden path")
-        .opt("method", "", "fix one method (default: cycle all three)");
+        .opt("method", "", "fix one method (default: cycle all three)")
+        .opt("batch", "1", "micro-batch: max same-method requests per device pass")
+        .opt("batch-wait", "2", "ms a worker lingers to fill its micro-batch");
     let args = parse_or_exit(cmd, argv);
     let board = board_of(&args);
     let (sim, manifest, params) = match build_sim(board) {
@@ -214,6 +216,8 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         queue_depth: args.parse_num("queue", 64),
         verify_fraction: verify,
         freq_mhz: fpga::TARGET_FREQ_MHZ,
+        max_batch: args.parse_num("batch", 1),
+        max_wait_ms: args.parse_num("batch-wait", 2),
     };
     let artifacts = if verify > 0.0 { Some((manifest, params)) } else { None };
     let coord = match Coordinator::start(sim, cfg, artifacts) {

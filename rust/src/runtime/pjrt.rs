@@ -1,0 +1,120 @@
+//! The real PJRT runtime, built only with the `pjrt` cargo feature
+//! (requires the `xla` native crate — xla_extension 0.5.x).
+//!
+//! Interchange is HLO **text** (`HloModuleProto::from_text_file`): the
+//! crate's xla_extension 0.5.1 rejects jax≥0.5 serialized protos
+//! (64-bit instruction ids), while the text parser reassigns ids. See
+//! python/compile/aot.py.
+
+use std::path::Path;
+
+use crate::model::{Manifest, Params};
+
+/// A compiled attribution/forward executable plus its calling convention
+/// (model parameters are runtime arguments, in manifest order, followed
+/// by the image — keeps HLO text small; weights live in weights.bin).
+pub struct Executable {
+    exe: xla::PjRtLoadedExecutable,
+    /// Pre-built parameter literals in call order.
+    param_literals: Vec<xla::Literal>,
+    pub n_outputs: usize,
+}
+
+/// The PJRT golden runtime: one client, one executable per artifact.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        let client = xla::PjRtClient::cpu()
+            .map_err(|e| anyhow::anyhow!("PJRT CPU client: {e}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Compile one HLO-text artifact and bind the model parameters.
+    /// `n_outputs` is the arity of the result tuple (forward: 1,
+    /// attribution: 2).
+    pub fn load(
+        &self,
+        hlo_path: &Path,
+        manifest: &Manifest,
+        params: &Params,
+        n_outputs: usize,
+    ) -> anyhow::Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            hlo_path
+                .to_str()
+                .ok_or_else(|| anyhow::anyhow!("non-utf8 path {hlo_path:?}"))?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", hlo_path.display()))?;
+
+        // parameter literals in manifest (= PARAM_SPEC) order
+        let mut param_literals = Vec::with_capacity(manifest.params.len());
+        for entry in &manifest.params {
+            let t = params.get(&entry.name)?;
+            let dims: Vec<i64> = t.shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .map_err(|e| anyhow::anyhow!("reshaping {}: {e}", entry.name))?;
+            param_literals.push(lit);
+        }
+        Ok(Executable { exe, param_literals, n_outputs })
+    }
+
+    /// Convenience: load a named artifact from the manifest.
+    pub fn load_artifact(
+        &self,
+        manifest: &Manifest,
+        params: &Params,
+        name: &str,
+        n_outputs: usize,
+    ) -> anyhow::Result<Executable> {
+        self.load(&manifest.hlo_path(name)?, manifest, params, n_outputs)
+    }
+}
+
+impl Executable {
+    /// Run with a [3,32,32] (or manifest img_shape) image, returning the
+    /// flattened f32 outputs in tuple order.
+    pub fn run(&self, image: &[f32], img_dims: &[usize]) -> anyhow::Result<Vec<Vec<f32>>> {
+        let dims: Vec<i64> = img_dims.iter().map(|&d| d as i64).collect();
+        let img_lit = xla::Literal::vec1(image)
+            .reshape(&dims)
+            .map_err(|e| anyhow::anyhow!("image reshape: {e}"))?;
+
+        let mut args: Vec<&xla::Literal> = self.param_literals.iter().collect();
+        args.push(&img_lit);
+
+        let result = self
+            .exe
+            .execute::<&xla::Literal>(&args)
+            .map_err(|e| anyhow::anyhow!("execute: {e}"))?;
+        let mut tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetch: {e}"))?;
+        // aot.py lowers with return_tuple=True
+        let elems = tuple
+            .decompose_tuple()
+            .map_err(|e| anyhow::anyhow!("decompose: {e}"))?;
+        anyhow::ensure!(
+            elems.len() == self.n_outputs,
+            "expected {} outputs, got {}",
+            self.n_outputs,
+            elems.len()
+        );
+        elems
+            .into_iter()
+            .map(|l| l.to_vec::<f32>().map_err(|e| anyhow::anyhow!("to_vec: {e}")))
+            .collect()
+    }
+}

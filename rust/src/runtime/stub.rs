@@ -1,0 +1,58 @@
+//! API-identical stand-in for the PJRT runtime, built when the `pjrt`
+//! feature is off (the offline default: the `xla` native crate is not
+//! vendored). Every constructor returns `Err`, so callers that probe
+//! with `Runtime::cpu()` degrade gracefully — the shadow verifier
+//! disables itself, golden-path tests skip.
+
+use std::path::Path;
+
+use crate::model::{Manifest, Params};
+
+const UNAVAILABLE: &str = "PJRT golden runtime unavailable: attrax was built without the \
+     `pjrt` feature (the xla_extension crate is not vendored in this environment)";
+
+/// Stub executable; never constructed (loading always fails).
+pub struct Executable {
+    pub n_outputs: usize,
+}
+
+/// Stub runtime; `cpu()` always fails.
+pub struct Runtime {
+    _private: (),
+}
+
+impl Runtime {
+    pub fn cpu() -> anyhow::Result<Runtime> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+
+    pub fn platform(&self) -> String {
+        "unavailable".to_string()
+    }
+
+    pub fn load(
+        &self,
+        _hlo_path: &Path,
+        _manifest: &Manifest,
+        _params: &Params,
+        _n_outputs: usize,
+    ) -> anyhow::Result<Executable> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+
+    pub fn load_artifact(
+        &self,
+        _manifest: &Manifest,
+        _params: &Params,
+        _name: &str,
+        _n_outputs: usize,
+    ) -> anyhow::Result<Executable> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+}
+
+impl Executable {
+    pub fn run(&self, _image: &[f32], _img_dims: &[usize]) -> anyhow::Result<Vec<Vec<f32>>> {
+        Err(anyhow::anyhow!(UNAVAILABLE))
+    }
+}

@@ -8,6 +8,13 @@
 //! into the gradient conv via the 2-bit argmax indices. An `unfused`
 //! option executes pool/unpool as standalone passes instead — the
 //! ablation that isolates how much the fusion buys (EXPERIMENTS.md E9).
+//!
+//! The batch-N path ([`Simulator::forward_batch`] /
+//! [`Simulator::attribute_batch`]) executes a whole batch layer-major on
+//! the batched engine entry points, so every weight tile is fetched
+//! once per batch, and keeps one FP mask/activation arena
+//! ([`FpBatchState`]) shared across the batch. Per-image results are
+//! bit-exact with the single-image path (property-tested).
 
 pub mod pipeline;
 
@@ -75,6 +82,44 @@ pub struct AttrResult {
     pub pred: usize,
     /// Dequantized input-feature relevance, [C*H*W].
     pub relevance: Vec<f32>,
+    pub fp_cost: Cost,
+    pub bp_cost: Cost,
+}
+
+/// Batched FP state: the mask/activation arena shared by one batch —
+/// per unit, one slab holding every image's masks/activations (exactly
+/// the per-image [`FpState`] data, batch-major).
+pub struct FpBatchState {
+    /// Per unit, per image: post-ReLU activation left in DRAM.
+    dram_acts: Vec<Option<Vec<Vec<i32>>>>,
+    /// Per unit, per image: 2-bit pool argmax masks (on-chip BRAM).
+    pool_idx: Vec<Option<Vec<Vec<u8>>>>,
+    /// Per unit, per image: FC ReLU masks (on-chip BRAM).
+    fc_masks: Vec<Option<Vec<Vec<bool>>>>,
+}
+
+/// Batched forward result.
+pub struct FpBatchResult {
+    pub logits: Vec<Vec<f32>>,
+    pub preds: Vec<usize>,
+    /// Aggregate cost of the whole batched pass (weight traffic is paid
+    /// once per batch — divide by the batch size for per-image numbers).
+    pub cost: Cost,
+    pub state: FpBatchState,
+}
+
+/// One image's slice of a batched attribution.
+#[derive(Clone, Debug)]
+pub struct AttrItem {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub relevance: Vec<f32>,
+}
+
+/// Batched attribution (FP+BP) result.
+pub struct BatchAttrResult {
+    pub items: Vec<AttrItem>,
+    /// Aggregate batch costs (not per image).
     pub fp_cost: Cost,
     pub bp_cost: Cost,
 }
@@ -389,6 +434,287 @@ impl Simulator {
         let (relevance, bp_cost) = self.backward(&fp.state, start, method, opts);
         AttrResult { logits: fp.logits, pred: fp.pred, relevance, fp_cost: fp.cost, bp_cost }
     }
+
+    /// Batch-N FP phase: the whole batch walks the plan layer-major on
+    /// the batched engines, so each layer's weight tiles move DRAM →
+    /// on-chip once per batch. Masks/activations for the batch live in
+    /// one shared [`FpBatchState`] arena. Per-image logits are bit-exact
+    /// with [`Simulator::forward`].
+    pub fn forward_batch(&self, images: &[&[f32]]) -> FpBatchResult {
+        let nb = images.len();
+        assert!(nb > 0, "empty batch");
+        for img in images {
+            assert_eq!(img.len(), self.net.input.elems(), "input size mismatch");
+        }
+        let q = self.cfg.q;
+        let mut cost = Cost::new();
+        let mut acts: Vec<Vec<i32>> = images
+            .iter()
+            .map(|img| img.iter().map(|&v| q.from_f32(v)).collect())
+            .collect();
+        let n = self.units.len();
+        let mut state = FpBatchState {
+            dram_acts: (0..n).map(|_| None).collect(),
+            pool_idx: (0..n).map(|_| None).collect(),
+            fc_masks: (0..n).map(|_| None).collect(),
+        };
+
+        for (ui, unit) in self.units.iter().enumerate() {
+            match unit {
+                Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                    let post = match (relu, pool) {
+                        (true, true) => Post::ReluPool,
+                        (true, false) => Post::Relu,
+                        _ => Post::Plain,
+                    };
+                    let refs: Vec<&[i32]> = acts.iter().map(|a| a.as_slice()).collect();
+                    let rs = conv::forward_batch(
+                        &self.cfg,
+                        &mut cost,
+                        &refs,
+                        *in_shape,
+                        w,
+                        (*out_ch, *k),
+                        Some(bias),
+                        *pad,
+                        post,
+                    );
+                    let mut new_acts = Vec::with_capacity(nb);
+                    let mut dram = Vec::with_capacity(nb);
+                    if *pool {
+                        let mut idxs = Vec::with_capacity(nb);
+                        for r in rs {
+                            idxs.push(r.pool_idx.expect("pool idx"));
+                            let p = r.pooled.expect("pooled");
+                            dram.push(p.clone());
+                            new_acts.push(p);
+                        }
+                        state.pool_idx[ui] = Some(idxs);
+                    } else {
+                        for r in rs {
+                            dram.push(r.out.clone());
+                            new_acts.push(r.out);
+                        }
+                    }
+                    state.dram_acts[ui] = Some(dram);
+                    acts = new_acts;
+                    cost.checkpoint(name);
+                }
+                Unit::Pool { in_shape } => {
+                    let mut ps = Vec::with_capacity(nb);
+                    let mut idxs = Vec::with_capacity(nb);
+                    for a in &acts {
+                        let (p, idx) = pool::maxpool2(&self.cfg, &mut cost, a, *in_shape);
+                        idxs.push(idx);
+                        ps.push(p);
+                    }
+                    state.pool_idx[ui] = Some(idxs);
+                    state.dram_acts[ui] = Some(ps.clone());
+                    acts = ps;
+                    cost.checkpoint("pool");
+                }
+                Unit::Fc { name, w, out_n, in_n, bias, relu } => {
+                    let mut masks =
+                        if *relu { Some(vec![vec![false; *out_n]; nb]) } else { None };
+                    let refs: Vec<&[i32]> = acts.iter().map(|a| a.as_slice()).collect();
+                    acts = vmm::forward_batch(
+                        &self.cfg,
+                        &mut cost,
+                        w,
+                        (*out_n, *in_n),
+                        &refs,
+                        Some(bias),
+                        masks.as_mut(),
+                    );
+                    state.fc_masks[ui] = masks;
+                    cost.checkpoint(name);
+                }
+            }
+        }
+
+        let logits: Vec<Vec<f32>> = acts
+            .iter()
+            .map(|a| a.iter().map(|&v| q.to_f32(v)).collect())
+            .collect();
+        let preds = logits.iter().map(|l| argmax(l)).collect();
+        FpBatchResult { logits, preds, cost, state }
+    }
+
+    /// Batch-N BP phase: one one-hot gradient per image, walked in
+    /// reverse on the batched engines (weight views fetched once per
+    /// batch). Per-image relevance is bit-exact with
+    /// [`Simulator::backward`].
+    pub fn backward_batch(
+        &self,
+        state: &FpBatchState,
+        start_classes: &[usize],
+        method: Method,
+        opts: AttrOptions,
+    ) -> (Vec<Vec<f32>>, Cost) {
+        let nb = start_classes.len();
+        assert!(nb > 0, "empty batch");
+        let q = self.cfg.q;
+        let mut cost = Cost::new();
+        let out_n = self.net.output_shape().elems();
+        let mut gs: Vec<Vec<i32>> = start_classes
+            .iter()
+            .map(|&c| {
+                let mut g = vec![0i32; out_n];
+                g[c] = q.from_f32(1.0);
+                g
+            })
+            .collect();
+
+        for (ui, unit) in self.units.iter().enumerate().rev() {
+            match unit {
+                Unit::Fc { name, w, out_n, in_n, relu, .. } => {
+                    if *relu {
+                        let masks = state.fc_masks[ui].as_ref().expect("fc masks missing");
+                        for (b, g) in gs.iter_mut().enumerate() {
+                            *g = relu::backward(
+                                &self.cfg,
+                                &mut cost,
+                                method,
+                                g,
+                                MaskSource::OnChip(&masks[b]),
+                            );
+                        }
+                    }
+                    let refs: Vec<&[i32]> = gs.iter().map(|g| g.as_slice()).collect();
+                    gs = vmm::backward_batch(&self.cfg, &mut cost, w, (*out_n, *in_n), &refs);
+                    cost.checkpoint(&format!("{name}ᵀ"));
+                }
+                Unit::Pool { in_shape } => {
+                    let (c, h, w) = *in_shape;
+                    let idxs = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                    for (b, g) in gs.iter_mut().enumerate() {
+                        *g = pool::unpool2(&self.cfg, &mut cost, g, (c, h / 2, w / 2), &idxs[b]);
+                    }
+                    cost.checkpoint("unpool");
+                }
+                Unit::Conv { name, w_bp, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                    let (ic, h, w) = *in_shape;
+                    let op = *pad;
+                    // conv output spatial dims (pre-pool)
+                    let oh = h + 2 * op - (k - 1);
+                    let ow = w + 2 * op - (k - 1);
+                    if *pool && opts.fused_unpool {
+                        if *relu {
+                            let acts = state.dram_acts[ui].as_ref().expect("act missing");
+                            for (b, g) in gs.iter_mut().enumerate() {
+                                *g = relu::backward(
+                                    &self.cfg,
+                                    &mut cost,
+                                    method,
+                                    g,
+                                    MaskSource::FromDram(&acts[b]),
+                                );
+                            }
+                        }
+                        let idxs = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                        let grefs: Vec<&[i32]> = gs.iter().map(|g| g.as_slice()).collect();
+                        let irefs: Vec<&[u8]> = idxs.iter().map(|i| i.as_slice()).collect();
+                        gs = conv::input_grad_unpool_batch(
+                            &self.cfg,
+                            &mut cost,
+                            &grefs,
+                            (*out_ch, oh / 2, ow / 2),
+                            &irefs,
+                            w_bp,
+                            ic,
+                            *k,
+                            op,
+                        );
+                    } else {
+                        if *pool {
+                            let idxs = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                            for (b, g) in gs.iter_mut().enumerate() {
+                                *g = pool::unpool2(
+                                    &self.cfg,
+                                    &mut cost,
+                                    g,
+                                    (*out_ch, oh / 2, ow / 2),
+                                    &idxs[b],
+                                );
+                            }
+                            if *relu {
+                                let acts = state.dram_acts[ui].as_ref().expect("act missing");
+                                for (b, g) in gs.iter_mut().enumerate() {
+                                    let full_act = pool::unpool2(
+                                        &self.cfg,
+                                        &mut cost,
+                                        &acts[b],
+                                        (*out_ch, oh / 2, ow / 2),
+                                        &idxs[b],
+                                    );
+                                    *g = relu::backward(
+                                        &self.cfg,
+                                        &mut cost,
+                                        method,
+                                        g,
+                                        MaskSource::FromDram(&full_act),
+                                    );
+                                }
+                            }
+                        } else if *relu {
+                            let acts = state.dram_acts[ui].as_ref().expect("act missing");
+                            for (b, g) in gs.iter_mut().enumerate() {
+                                *g = relu::backward(
+                                    &self.cfg,
+                                    &mut cost,
+                                    method,
+                                    g,
+                                    MaskSource::FromDram(&acts[b]),
+                                );
+                            }
+                        }
+                        let refs: Vec<&[i32]> = gs.iter().map(|g| g.as_slice()).collect();
+                        gs = conv::input_grad_batch(
+                            &self.cfg,
+                            &mut cost,
+                            &refs,
+                            (*out_ch, oh, ow),
+                            w_bp,
+                            ic,
+                            *k,
+                            op,
+                        );
+                    }
+                    cost.checkpoint(&format!("{name}ᵀ"));
+                }
+            }
+        }
+
+        let rel = gs
+            .iter()
+            .map(|g| g.iter().map(|&v| q.to_f32(v)).collect())
+            .collect();
+        (rel, cost)
+    }
+
+    /// Batch-N feature attribution (the micro-batched serving path):
+    /// FP + BP for a whole batch with weight traffic amortized across
+    /// images. `opts.target` (when set) applies to every image;
+    /// otherwise each image backpropagates from its own argmax.
+    pub fn attribute_batch(
+        &self,
+        images: &[&[f32]],
+        method: Method,
+        opts: AttrOptions,
+    ) -> BatchAttrResult {
+        let fp = self.forward_batch(images);
+        let starts: Vec<usize> =
+            fp.preds.iter().map(|&p| opts.target.unwrap_or(p)).collect();
+        let (rels, bp_cost) = self.backward_batch(&fp.state, &starts, method, opts);
+        let items = fp
+            .logits
+            .into_iter()
+            .zip(fp.preds)
+            .zip(rels)
+            .map(|((logits, pred), relevance)| AttrItem { logits, pred, relevance })
+            .collect();
+        BatchAttrResult { items, fp_cost: fp.cost, bp_cost }
+    }
 }
 
 /// Test-only helpers shared across the crate's unit tests.
@@ -582,6 +908,47 @@ mod tests {
         assert_eq!(r.bp_cost.layers.len(), 4);
         let names: Vec<&str> = r.bp_cost.layers.iter().map(|(n, _)| n.as_str()).collect();
         assert_eq!(names, vec!["f2ᵀ", "f1ᵀ", "c2ᵀ", "c1ᵀ"]);
+    }
+
+    #[test]
+    fn batch_matches_single_all_methods() {
+        let (net, params) = tiny_model(13);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let imgs: Vec<Vec<f32>> = (0..3).map(|i| image(20 + i, 2 * 8 * 8)).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        for method in crate::attribution::ALL_METHODS {
+            let batch = sim.attribute_batch(&refs, method, AttrOptions::default());
+            assert_eq!(batch.items.len(), 3);
+            for (i, item) in batch.items.iter().enumerate() {
+                let single = sim.attribute(&imgs[i], method, AttrOptions::default());
+                assert_eq!(item.logits, single.logits, "{method}: image {i} logits");
+                assert_eq!(item.pred, single.pred, "{method}: image {i} pred");
+                assert_eq!(item.relevance, single.relevance, "{method}: image {i} relevance");
+                // weight traffic is batch-invariant: paid once per batch,
+                // i.e. the same bytes a single-image pass pays
+                assert_eq!(batch.fp_cost.dram_weight_bytes, single.fp_cost.dram_weight_bytes);
+                assert_eq!(batch.bp_cost.dram_weight_bytes, single.bp_cost.dram_weight_bytes);
+                // ... while total traffic grows sublinearly with the batch
+                assert!(batch.fp_cost.dram_read_bytes < 3 * single.fp_cost.dram_read_bytes);
+            }
+            // checkpoints cover the plan once per batch
+            assert_eq!(batch.fp_cost.layers.len(), 4);
+            assert_eq!(batch.bp_cost.layers.len(), 4);
+        }
+    }
+
+    #[test]
+    fn batch_respects_target_override() {
+        let (net, params) = tiny_model(15);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let imgs: Vec<Vec<f32>> = (0..2).map(|i| image(30 + i, 2 * 8 * 8)).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let opts = AttrOptions { target: Some(1), ..Default::default() };
+        let batch = sim.attribute_batch(&refs, Method::Saliency, opts);
+        for (i, item) in batch.items.iter().enumerate() {
+            let single = sim.attribute(&imgs[i], Method::Saliency, opts);
+            assert_eq!(item.relevance, single.relevance, "image {i}");
+        }
     }
 
     #[test]

@@ -103,8 +103,25 @@ impl Samples {
 }
 
 /// Pearson correlation between two equal-length slices.
+///
+/// Degenerate-input contract (the shadow verifier gates on this value,
+/// so the edges are defined explicitly rather than left to float
+/// accident):
+///
+/// * any NaN in either input → `NaN` (propagated, never masked as
+///   agreement);
+/// * fewer than two samples → `1.0` (nothing to disagree about);
+/// * both inputs constant → `1.0` iff they are elementwise identical,
+///   else `0.0` (two *different* flat heatmaps are not "perfectly
+///   correlated" — the seed returned 1.0 for any pair of constants
+///   because both variances were 0.0 and `va == vb` held vacuously);
+/// * exactly one input constant → `0.0` (mathematically undefined;
+///   reported as no correlation).
 pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
     assert_eq!(a.len(), b.len());
+    if a.iter().chain(b.iter()).any(|v| v.is_nan()) {
+        return f64::NAN;
+    }
     let n = a.len() as f64;
     if n < 2.0 {
         return 1.0;
@@ -119,8 +136,11 @@ pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
         va += da * da;
         vb += db * db;
     }
+    if va == 0.0 && vb == 0.0 {
+        return if a == b { 1.0 } else { 0.0 };
+    }
     if va == 0.0 || vb == 0.0 {
-        return if va == vb { 1.0 } else { 0.0 };
+        return 0.0;
     }
     cov / (va.sqrt() * vb.sqrt())
 }
@@ -210,7 +230,33 @@ mod tests {
     fn constant_input_degenerate() {
         let a = [1.0f32, 1.0, 1.0];
         let b = [1.0f32, 2.0, 3.0];
+        // identical constants: perfect agreement
         assert_eq!(pearson(&a, &a), 1.0);
+        // constant vs varying: undefined, reported as no correlation
         assert_eq!(pearson(&a, &b), 0.0);
+        assert_eq!(pearson(&b, &a), 0.0);
+        // two DIFFERENT constants must not read as perfect agreement
+        let c = [2.0f32, 2.0, 2.0];
+        assert_eq!(pearson(&a, &c), 0.0);
+        // zero-filled heatmaps on both sides agree
+        let z = [0.0f32, 0.0, 0.0];
+        assert_eq!(pearson(&z, &z), 1.0);
+    }
+
+    #[test]
+    fn short_inputs_trivially_correlated() {
+        assert_eq!(pearson(&[], &[]), 1.0);
+        assert_eq!(pearson(&[3.0], &[7.0]), 1.0);
+    }
+
+    #[test]
+    fn nan_propagates() {
+        let a = [1.0f32, f32::NAN, 3.0];
+        let b = [1.0f32, 2.0, 3.0];
+        assert!(pearson(&a, &b).is_nan());
+        assert!(pearson(&b, &a).is_nan());
+        assert!(pearson(&a, &a).is_nan());
+        // NaN beats the short-input and constant rules
+        assert!(pearson(&[f32::NAN], &[1.0]).is_nan());
     }
 }

@@ -1,26 +1,214 @@
-//! End-to-end serving test: trained artifacts → coordinator → workers
-//! → fixed-point accelerator sim → responses, with shadow verification
-//! against the PJRT golden path. The CI version of examples/xai_serve.
+//! End-to-end serving tests.
+//!
+//! Two tiers:
+//! * artifact-free tests (always run): coordinator lifecycle — the
+//!   shutdown/queue race regression, and the micro-batched drain
+//!   against the single-request path;
+//! * trained-artifact tests (skip with a message when `make artifacts`
+//!   hasn't been run — the offline CI environment): the full system,
+//!   with shadow verification against the PJRT golden path when the
+//!   `pjrt` feature is enabled.
 
 use attrax::attribution::Method;
-use attrax::coordinator::{server, Config, Coordinator};
+use attrax::coordinator::{server, Closed, Config, Coordinator};
 use attrax::fpga::{self, Board};
-use attrax::model::{artifacts_dir, load_artifacts, Network};
-use attrax::sched::Simulator;
+use attrax::hls::HwConfig;
+use attrax::model::{artifacts_dir, load_artifacts, Network, NetworkBuilder, Params, Shape, Tensor};
+use attrax::sched::{AttrOptions, Simulator};
+use attrax::util::rng::Pcg32;
+use std::collections::BTreeMap;
 
-fn build() -> (Simulator, attrax::model::Manifest, attrax::model::Params) {
-    let (manifest, params) = load_artifacts(&artifacts_dir()).expect("make artifacts first");
+// -- artifact-free harness ------------------------------------------------
+
+/// Small random full-input-size model (no trained artifacts needed).
+fn tiny_sim(seed: u64) -> Simulator {
+    let net = NetworkBuilder::new(Shape::Chw(3, 32, 32))
+        .conv("c1", 4, 3, 1)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("f1", 10)
+        .build()
+        .unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    let mut add = |name: &str, shape: Vec<usize>, rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        tensors.insert(name.to_string(), Tensor { shape, data });
+    };
+    add("c1_w", vec![4, 3, 3, 3], &mut rng);
+    add("c1_b", vec![4], &mut rng);
+    add("f1_w", vec![10, 1024], &mut rng);
+    add("f1_b", vec![10], &mut rng);
+    Simulator::new(net, &Params { tensors }, HwConfig::pynq_z2()).unwrap()
+}
+
+fn image(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..3 * 32 * 32).map(|_| rng.f32()).collect()
+}
+
+/// Heavier model (~6M MACs/attribution) so each request takes real
+/// compute time — used by the shutdown-race test to guarantee requests
+/// are still queued when `shutdown_now` fires.
+fn chunky_sim(seed: u64) -> Simulator {
+    let net = NetworkBuilder::new(Shape::Chw(3, 32, 32))
+        .conv("c1", 16, 3, 1)
+        .relu()
+        .conv("c2", 16, 3, 1)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("f1", 10)
+        .build()
+        .unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    let mut add = |name: &str, shape: Vec<usize>, rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * 0.1).collect();
+        tensors.insert(name.to_string(), Tensor { shape, data });
+    };
+    add("c1_w", vec![16, 3, 3, 3], &mut rng);
+    add("c1_b", vec![16], &mut rng);
+    add("c2_w", vec![16, 16, 3, 3], &mut rng);
+    add("c2_b", vec![16], &mut rng);
+    add("f1_w", vec![10, 4096], &mut rng);
+    add("f1_b", vec![10], &mut rng);
+    Simulator::new(net, &Params { tensors }, HwConfig::pynq_z2()).unwrap()
+}
+
+/// Regression (seed bug): `Bounded::close` + worker join used to leave
+/// in-flight requests with a dropped `mpsc::Sender` — a client blocked
+/// on `recv()` saw a bare channel error indistinguishable from a worker
+/// crash. `shutdown_now` must hand every still-queued request an
+/// explicit `Closed` reply, while already-running requests complete.
+#[test]
+fn shutdown_with_requests_in_flight_replies_to_everyone() {
+    // chunky_sim: each attribution takes milliseconds even in release,
+    // and shutdown_now fires microseconds after the last submit, so the
+    // single worker can have started at most a couple of the 32 requests
+    // — the Closed path is exercised deterministically
+    let coord = Coordinator::start(
+        chunky_sim(1),
+        Config { workers: 1, queue_depth: 128, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..32u64 {
+        rxs.push(coord.submit_traced(image(100 + i), Method::Guided).unwrap());
+    }
+    let snap = coord.shutdown_now();
+    let (mut completed, mut closed) = (0u64, 0u64);
+    for (id, rx) in rxs {
+        match rx.recv() {
+            Ok(Ok(resp)) => {
+                assert_eq!(resp.id, id);
+                completed += 1;
+            }
+            Ok(Err(Closed { id: cid })) => {
+                assert_eq!(cid, id);
+                closed += 1;
+            }
+            Err(e) => panic!("request {id}: reply channel dropped ({e}) — the seed race"),
+        }
+    }
+    assert_eq!(completed + closed, 32, "every accepted request gets exactly one reply");
+    assert_eq!(snap.completed, completed);
+    assert!(closed > 0, "expected some pending requests at abortive shutdown");
+}
+
+/// Graceful shutdown still drains everything (no Closed replies).
+#[test]
+fn graceful_shutdown_drains_everything() {
+    let coord = Coordinator::start(
+        tiny_sim(2),
+        Config { workers: 2, queue_depth: 128, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for i in 0..12u64 {
+        rxs.push(coord.submit_traced(image(200 + i), Method::Saliency).unwrap());
+    }
+    let snap = coord.shutdown();
+    assert_eq!(snap.completed, 12);
+    for (_, rx) in rxs {
+        assert!(rx.recv().unwrap().is_ok(), "graceful shutdown never sends Closed");
+    }
+}
+
+/// Tentpole e2e: the micro-batched drain produces bit-identical
+/// responses to an unbatched coordinator over the same request stream,
+/// and the batch path really amortizes weight traffic (checked at the
+/// simulator level).
+#[test]
+fn micro_batched_serving_is_bit_exact() {
+    let imgs: Vec<Vec<f32>> = (0..10).map(|i| image(300 + i)).collect();
+
+    // batched coordinator: single worker so the queue actually batches
+    let coord = Coordinator::start(
+        tiny_sim(3),
+        Config { workers: 1, queue_depth: 64, max_batch: 4, max_wait_ms: 10, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let mut rxs = Vec::new();
+    for img in &imgs {
+        rxs.push(coord.submit_traced(img.clone(), Method::Deconvnet).unwrap());
+    }
+    let batched: Vec<_> = rxs
+        .into_iter()
+        .map(|(_, rx)| rx.recv().unwrap().expect("completed"))
+        .collect();
+    coord.shutdown();
+
+    // reference: same model, plain single-image attribution
+    let reference = tiny_sim(3);
+    for (i, resp) in batched.iter().enumerate() {
+        let want = reference.attribute(&imgs[i], Method::Deconvnet, AttrOptions::default());
+        assert_eq!(resp.pred, want.pred, "request {i}");
+        assert_eq!(resp.logits, want.logits, "request {i}");
+        assert_eq!(resp.relevance, want.relevance, "request {i}: batched serving diverged");
+    }
+
+    // traffic: a batch of 4 pays the weight bytes of ONE pass
+    let refs: Vec<&[f32]> = imgs[..4].iter().map(|v| v.as_slice()).collect();
+    let batch = reference.attribute_batch(&refs, Method::Deconvnet, AttrOptions::default());
+    let single = reference.attribute(&imgs[0], Method::Deconvnet, AttrOptions::default());
+    assert_eq!(batch.fp_cost.dram_weight_bytes, single.fp_cost.dram_weight_bytes);
+    assert_eq!(batch.bp_cost.dram_weight_bytes, single.bp_cost.dram_weight_bytes);
+}
+
+// -- trained-artifact tier ------------------------------------------------
+
+fn build() -> Option<(Simulator, attrax::model::Manifest, attrax::model::Params)> {
+    let (manifest, params) = match load_artifacts(&artifacts_dir()) {
+        Ok(v) => v,
+        Err(e) => {
+            eprintln!("SKIP: artifacts not available ({e}); run `make artifacts` to enable");
+            return None;
+        }
+    };
     let net = Network::table3();
     let cfg = fpga::choose_config(Board::Zcu104, &net, Method::Guided);
-    (Simulator::new(net, &params, cfg).unwrap(), manifest, params)
+    Some((Simulator::new(net, &params, cfg).unwrap(), manifest, params))
 }
 
 #[test]
 fn serve_trained_model_with_verification() {
-    let (sim, manifest, params) = build();
+    let Some((sim, manifest, params)) = build() else { return };
     let coord = Coordinator::start(
         sim,
-        Config { workers: 4, queue_depth: 128, verify_fraction: 0.34, freq_mhz: 100.0 },
+        Config {
+            workers: 4,
+            queue_depth: 128,
+            verify_fraction: 0.34,
+            freq_mhz: 100.0,
+            ..Default::default()
+        },
         Some((manifest, params)),
     )
     .unwrap();
@@ -44,22 +232,31 @@ fn serve_trained_model_with_verification() {
     std::thread::sleep(std::time::Duration::from_millis(2000));
     let snap = coord.shutdown();
     assert_eq!(snap.completed, 15);
-    assert!(snap.verified > 0, "shadow verifier never ran");
-    assert!(
-        snap.mean_verify_corr > 0.97,
-        "fixed-vs-golden correlation {}",
-        snap.mean_verify_corr
-    );
+    // golden-path shadow verification needs the PJRT runtime
+    if cfg!(feature = "pjrt") {
+        assert!(snap.verified > 0, "shadow verifier never ran");
+        assert!(
+            snap.mean_verify_corr > 0.97,
+            "fixed-vs-golden correlation {}",
+            snap.mean_verify_corr
+        );
+    }
 }
 
 #[test]
 fn open_loop_arrivals_respect_backpressure() {
-    let (sim, _, _) = build();
+    let Some((sim, _, _)) = build() else { return };
     // tiny queue + 1 worker: the closed-loop flood must trip rejections
     // yet every accepted request completes
     let coord = Coordinator::start(
         sim,
-        Config { workers: 1, queue_depth: 2, verify_fraction: 0.0, freq_mhz: 100.0 },
+        Config {
+            workers: 1,
+            queue_depth: 2,
+            verify_fraction: 0.0,
+            freq_mhz: 100.0,
+            ..Default::default()
+        },
         None,
     )
     .unwrap();
@@ -70,4 +267,27 @@ fn open_loop_arrivals_respect_backpressure() {
     let snap = coord.shutdown();
     assert_eq!(snap.completed as usize + report.rejected, 20);
     assert!(report.rejected > 0, "expected backpressure with queue_depth=2");
+}
+
+#[test]
+fn micro_batched_serving_on_trained_model() {
+    let Some((sim, _, _)) = build() else { return };
+    let Some((reference, _, _)) = build() else { return };
+    let coord = Coordinator::start(
+        sim,
+        Config { workers: 2, queue_depth: 128, max_batch: 8, max_wait_ms: 5, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let samples = attrax::data::make_dataset(8, 99);
+    let mut rxs = Vec::new();
+    for s in &samples {
+        rxs.push(coord.submit_traced(s.image.clone(), Method::Guided).unwrap());
+    }
+    for (i, (_, rx)) in rxs.into_iter().enumerate() {
+        let resp = rx.recv().unwrap().expect("completed");
+        let want = reference.attribute(&samples[i].image, Method::Guided, AttrOptions::default());
+        assert_eq!(resp.relevance, want.relevance, "request {i}");
+    }
+    coord.shutdown();
 }

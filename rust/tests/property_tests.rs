@@ -216,7 +216,13 @@ fn prop_coordinator_conservation() {
                 .map_err(|e| e.to_string())?;
             let coord = Coordinator::start(
                 sim,
-                Config { workers, queue_depth: depth, verify_fraction: 0.0, freq_mhz: 100.0 },
+                Config {
+                    workers,
+                    queue_depth: depth,
+                    verify_fraction: 0.0,
+                    freq_mhz: 100.0,
+                    ..Default::default()
+                },
                 None,
             )
             .map_err(|e| e.to_string())?;
@@ -240,6 +246,96 @@ fn prop_coordinator_conservation() {
             }
             if snap.rejected != rejected {
                 return Err(format!("rejected {} != {rejected}", snap.rejected));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// P10 (tentpole): batched and single-image execution are bit-exact —
+/// for random tiny networks, configs, batch sizes and all three
+/// methods, `attribute_batch(imgs)[i] == attribute(imgs[i])` on logits,
+/// prediction and relevance.
+#[test]
+fn prop_batch_bit_exact() {
+    run_prop(
+        PropConfig { cases: 10, ..Default::default() },
+        scenario,
+        |s| {
+            let mut rng = Pcg32::seeded(s.seed);
+            let (net, params) = random_model(&mut rng);
+            let n_in = net.input.elems();
+            let sim = Simulator::new(net, &params, s.cfg).map_err(|e| e.to_string())?;
+            let nb = 1 + rng.below(4) as usize; // 1..=4 images
+            let imgs: Vec<Vec<f32>> = (0..nb)
+                .map(|_| (0..n_in).map(|_| rng.f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            for m in ALL_METHODS {
+                for fused in [true, false] {
+                    let opts = AttrOptions { fused_unpool: fused, ..Default::default() };
+                    let batch = sim.attribute_batch(&refs, m, opts);
+                    if batch.items.len() != nb {
+                        return Err(format!("{m}: wrong batch arity"));
+                    }
+                    for (i, item) in batch.items.iter().enumerate() {
+                        let single = sim.attribute(&imgs[i], m, opts);
+                        if item.logits != single.logits || item.pred != single.pred {
+                            return Err(format!("{m} fused={fused}: image {i} FP diverged"));
+                        }
+                        if item.relevance != single.relevance {
+                            return Err(format!(
+                                "{m} fused={fused}: image {i} relevance diverged"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// P11: batching amortizes weight DRAM traffic — a batch pays exactly
+/// the weight bytes of ONE pass (weight loads are image-independent),
+/// so per-image weight traffic is 1/B, while total traffic stays below
+/// B independent passes.
+#[test]
+fn prop_batch_weight_traffic_amortized() {
+    run_prop(
+        PropConfig { cases: 8, ..Default::default() },
+        scenario,
+        |s| {
+            let mut rng = Pcg32::seeded(s.seed);
+            let (net, params) = random_model(&mut rng);
+            let n_in = net.input.elems();
+            let sim = Simulator::new(net, &params, s.cfg).map_err(|e| e.to_string())?;
+            let nb = 2 + rng.below(3) as usize; // 2..=4 images
+            let imgs: Vec<Vec<f32>> = (0..nb)
+                .map(|_| (0..n_in).map(|_| rng.f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            let batch = sim.attribute_batch(&refs, Method::Guided, AttrOptions::default());
+            let single = sim.attribute(&imgs[0], Method::Guided, AttrOptions::default());
+            if single.fp_cost.dram_weight_bytes == 0 {
+                return Err("no weight traffic recorded".into());
+            }
+            if batch.fp_cost.dram_weight_bytes != single.fp_cost.dram_weight_bytes {
+                return Err(format!(
+                    "FP weight bytes {} != single {}",
+                    batch.fp_cost.dram_weight_bytes, single.fp_cost.dram_weight_bytes
+                ));
+            }
+            if batch.bp_cost.dram_weight_bytes != single.bp_cost.dram_weight_bytes {
+                return Err(format!(
+                    "BP weight bytes {} != single {}",
+                    batch.bp_cost.dram_weight_bytes, single.bp_cost.dram_weight_bytes
+                ));
+            }
+            let batch_total = batch.fp_cost.dram_read_bytes + batch.bp_cost.dram_read_bytes;
+            let single_total = single.fp_cost.dram_read_bytes + single.bp_cost.dram_read_bytes;
+            if batch_total >= nb as u64 * single_total {
+                return Err("batching saved no traffic".into());
             }
             Ok(())
         },

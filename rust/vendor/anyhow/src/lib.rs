@@ -1,0 +1,144 @@
+//! Offline drop-in for the subset of the [`anyhow`] crate's API that
+//! attrax uses: [`Error`], [`Result`], and the `anyhow!` / `bail!` /
+//! `ensure!` macros.
+//!
+//! The sandbox this repository builds in has no crates.io access, so
+//! the real `anyhow` cannot be fetched; this crate keeps the call sites
+//! source-compatible. Differences from upstream: no backtraces, no
+//! error chaining/`context`, and `Error` stores only the rendered
+//! message.
+//!
+//! [`anyhow`]: https://docs.rs/anyhow
+
+use std::fmt;
+
+/// A rendered error message (the `anyhow::Error` stand-in).
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like upstream anyhow: any std error converts via `?`. `Error` itself
+// deliberately does not implement `std::error::Error`, which keeps this
+// blanket impl coherent with `impl From<T> for T`.
+impl<E: std::error::Error + Send + Sync + 'static> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error::msg(e)
+    }
+}
+
+/// `Result<T, anyhow::Error>` with the error type defaulted.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Construct an [`Error`] from a format string or any displayable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg(format!("{}", $err))
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::anyhow!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] if the condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return Err($crate::anyhow!("condition failed: {}", stringify!($cond)));
+        }
+    };
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            return Err($crate::anyhow!($($arg)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn display_and_debug_show_message() {
+        let e = anyhow!("bad {} at {}", "value", 7);
+        assert_eq!(e.to_string(), "bad value at 7");
+        assert_eq!(format!("{e:?}"), "bad value at 7");
+    }
+
+    #[test]
+    fn literal_and_expr_forms() {
+        let e = anyhow!("plain");
+        assert_eq!(e.to_string(), "plain");
+        let s = String::from("owned message");
+        let e = anyhow!(s);
+        assert_eq!(e.to_string(), "owned message");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<u64> {
+            let n: u64 = std::result::Result::Err(io_err())?;
+            Ok(n)
+        }
+        fn g() -> Result<u32> {
+            let n = "not a number".parse::<u32>()?;
+            Ok(n)
+        }
+        assert_eq!(f().unwrap_err().to_string(), "disk on fire");
+        assert!(g().unwrap_err().to_string().contains("invalid digit"));
+    }
+
+    #[test]
+    fn bail_and_ensure() {
+        fn b() -> Result<u32> {
+            bail!("nope {}", 1);
+        }
+        fn e(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            Ok(x)
+        }
+        fn bare(x: u32) -> Result<u32> {
+            ensure!(x < 10);
+            Ok(x)
+        }
+        assert_eq!(b().unwrap_err().to_string(), "nope 1");
+        assert_eq!(e(3).unwrap(), 3);
+        assert_eq!(e(30).unwrap_err().to_string(), "x too big: 30");
+        assert!(bare(30).unwrap_err().to_string().contains("x < 10"));
+    }
+}

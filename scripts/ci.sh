@@ -1,0 +1,21 @@
+#!/usr/bin/env bash
+# Canonical pre-merge check (referenced from ROADMAP.md).
+#
+# Tier-1 gate first (must stay green), then style/lint gates. The lint
+# gates cover all targets including the harness=false bench binaries.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+echo "== tier-1: cargo build --release =="
+cargo build --release
+
+echo "== tier-1: cargo test -q =="
+cargo test -q
+
+echo "== style: cargo fmt --check =="
+cargo fmt --check
+
+echo "== lint: cargo clippy -- -D warnings =="
+cargo clippy --all-targets -- -D warnings
+
+echo "== ci.sh: all gates passed =="
