@@ -55,6 +55,7 @@ fn main() -> anyhow::Result<()> {
             freq_mhz: fpga::TARGET_FREQ_MHZ,
             max_batch,
             max_wait_ms,
+            ..Default::default()
         },
         Some((manifest, params)),
     )?;

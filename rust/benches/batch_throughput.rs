@@ -13,59 +13,16 @@
 use attrax::attribution::Method;
 use attrax::fpga;
 use attrax::hls::HwConfig;
-use attrax::model::{Network, Params, Shape, Tensor};
+use attrax::model::{Network, Params, Shape};
 use attrax::sched::{AttrOptions, Simulator};
 use attrax::util::bench::{fmt_count, section, Table};
 use attrax::util::rng::Pcg32;
-use std::collections::BTreeMap;
 
 /// Table-III network with random (untrained) parameters.
 fn table3_random_sim(cfg: HwConfig) -> Simulator {
     let net = Network::table3();
-    let mut rng = Pcg32::seeded(42);
-    let mut tensors = BTreeMap::new();
-    for layer in &net.layers {
-        match layer {
-            attrax::model::Layer::Conv { name, in_ch, out_ch, k, .. } => {
-                let wn = out_ch * in_ch * k * k;
-                let scale = (2.0 / wn as f32).sqrt();
-                tensors.insert(
-                    format!("{name}_w"),
-                    Tensor {
-                        shape: vec![*out_ch, *in_ch, *k, *k],
-                        data: (0..wn).map(|_| rng.normal() * scale).collect(),
-                    },
-                );
-                tensors.insert(
-                    format!("{name}_b"),
-                    Tensor {
-                        shape: vec![*out_ch],
-                        data: (0..*out_ch).map(|_| rng.normal() * 0.05).collect(),
-                    },
-                );
-            }
-            attrax::model::Layer::Fc { name, in_dim, out_dim } => {
-                let wn = out_dim * in_dim;
-                let scale = (2.0 / *in_dim as f32).sqrt();
-                tensors.insert(
-                    format!("{name}_w"),
-                    Tensor {
-                        shape: vec![*out_dim, *in_dim],
-                        data: (0..wn).map(|_| rng.normal() * scale).collect(),
-                    },
-                );
-                tensors.insert(
-                    format!("{name}_b"),
-                    Tensor {
-                        shape: vec![*out_dim],
-                        data: (0..*out_dim).map(|_| rng.normal() * 0.05).collect(),
-                    },
-                );
-            }
-            _ => {}
-        }
-    }
-    Simulator::new(net, &Params { tensors }, cfg).unwrap()
+    let params = Params::synthetic(&net, 42);
+    Simulator::new(net, &params, cfg).unwrap()
 }
 
 fn main() {

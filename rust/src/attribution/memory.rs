@@ -45,6 +45,28 @@ impl MaskBudget {
         }
         bits
     }
+
+    /// §V claim in bytes: the on-chip mask budget at its native density
+    /// (2-bit pool argmax packed 4 per byte, 1-bit ReLU masks packed
+    /// 8 per byte).
+    pub fn onchip_bytes(&self, method: Method) -> usize {
+        self.onchip_bits(method).div_ceil(8)
+    }
+}
+
+/// Host bytes of the packed 2-bit pool-argmax store, summed per pool
+/// with per-pool byte alignment — exactly what
+/// `sched::FpState::pool_mask_bytes` reports for one image, so the
+/// host state provably carries the paper's §V mask-memory density
+/// (4 indices per byte) rather than a byte per index.
+pub fn pool_mask_bytes(net: &Network) -> usize {
+    let mut bytes = 0;
+    for (i, layer) in net.layers.iter().enumerate() {
+        if matches!(layer, Layer::MaxPool2) {
+            bytes += net.shapes[i + 1].elems().div_ceil(4);
+        }
+    }
+    bytes
 }
 
 /// Walk the graph and classify every mask the BP phase could need.
@@ -115,6 +137,12 @@ mod tests {
         assert_eq!(b.onchip_bits(crate::attribution::Method::Saliency), 24_704);
         assert_eq!(b.onchip_bits(crate::attribution::Method::Guided), 24_704);
         assert_eq!(b.onchip_bits(crate::attribution::Method::Deconvnet), 24_576);
+        // ... which is 3,088 bytes at native mask density
+        assert_eq!(b.onchip_bytes(crate::attribution::Method::Saliency), 3_088);
+        // packed host store: pool1 32*16*16/4 + pool2 64*8*8/4 = 3072 B
+        // (== pool_bits / 8: the 2-bit density survives on the host)
+        assert_eq!(pool_mask_bytes(&net), 3_072);
+        assert_eq!(pool_mask_bytes(&net), b.pool_bits / 8);
     }
 
     #[test]
@@ -144,6 +172,17 @@ mod tests {
             assert!(b.onchip_bits(crate::attribution::Method::Deconvnet) <= b.onchip_bits(m));
             assert!(b.conceptual_bits(m) >= b.onchip_bits(m));
         }
+    }
+
+    #[test]
+    fn host_state_matches_packed_accounting() {
+        // the FP pass's actual packed argmax store must weigh exactly
+        // what the graph-level accounting predicts
+        let sim = crate::sched::tests_support::tiny_sim(3, crate::hls::HwConfig::pynq_z2());
+        let img: Vec<f32> = (0..2 * 8 * 8).map(|i| (i % 9) as f32 / 9.0).collect();
+        let fp = sim.forward(&img);
+        assert_eq!(fp.state.pool_mask_bytes(), pool_mask_bytes(&sim.net));
+        assert!(fp.state.pool_mask_bytes() > 0);
     }
 
     #[test]

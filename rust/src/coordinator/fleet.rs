@@ -17,7 +17,7 @@ use crate::attribution::Method;
 use crate::fpga::{self, Board};
 use crate::hls::HwConfig;
 use crate::model::{Network, Params};
-use crate::sched::{AttrOptions, AttrResult, Simulator};
+use crate::sched::{AttrOptions, AttrResult, Plan, Simulator};
 
 /// One device in the fleet.
 pub struct Device {
@@ -40,6 +40,12 @@ pub struct Fleet {
 impl Fleet {
     /// Build one device per board with the paper's chosen config,
     /// calibrating each device's per-request cost with `probe`.
+    ///
+    /// All devices whose chosen configuration shares the plan's
+    /// fixed-point format execute one shared `Arc<Plan>` — the
+    /// quantized model is resident once per gateway, not once per card
+    /// (quantization depends only on the Q format; tiling/unroll live
+    /// in each device's own `HwConfig`).
     pub fn new(
         boards: &[Board],
         net: &Network,
@@ -48,10 +54,21 @@ impl Fleet {
         method: Method,
     ) -> anyhow::Result<Fleet> {
         anyhow::ensure!(!boards.is_empty(), "fleet needs at least one device");
+        // one plan per distinct Q format (quantization is the only
+        // config dependency of the weights) — devices look up by
+        // format, so any board ordering shares maximally
+        let mut plans: Vec<Arc<Plan>> = Vec::new();
         let mut devices = Vec::with_capacity(boards.len());
         for &board in boards {
             let cfg: HwConfig = fpga::choose_config(board, net, method);
-            let sim = Simulator::new(net.clone(), params, cfg)?;
+            let sim = match plans.iter().find(|p| p.cfg.q == cfg.q) {
+                Some(p) => Simulator::with_config(p.clone(), cfg)?,
+                None => {
+                    let p = Arc::new(Plan::new(net.clone(), params, cfg)?);
+                    plans.push(p.clone());
+                    Simulator::from_plan(p)
+                }
+            };
             let r = sim.attribute(probe, method, AttrOptions::default());
             let cycles = r.fp_cost.total_cycles() + r.bp_cost.total_cycles();
             let request_us = (cycles as f64 / fpga::TARGET_FREQ_MHZ) as u64;
@@ -106,6 +123,26 @@ mod tests {
     use crate::data;
     use crate::model::artifacts_dir;
     use crate::util::rng::Pcg32;
+
+    #[test]
+    fn fleet_devices_share_one_plan() {
+        // tiny random model — no trained artifacts needed: all devices
+        // (same Q format, different tilings) must execute one shared
+        // Arc<Plan>, and their results must be bit-identical
+        let (net, params) = crate::sched::tests_support::tiny_net_params(7);
+        let probe: Vec<f32> = (0..2 * 8 * 8).map(|i| (i % 5) as f32 / 5.0).collect();
+        let f =
+            Fleet::new(&[Board::PynqZ2, Board::Zcu104], &net, &params, &probe, Method::Guided)
+                .unwrap();
+        assert_eq!(f.devices.len(), 2);
+        assert!(
+            Arc::ptr_eq(f.devices[0].sim.plan(), f.devices[1].sim.plan()),
+            "devices must share the quantized model"
+        );
+        let a = f.devices[0].sim.attribute(&probe, Method::Guided, AttrOptions::default());
+        let b = f.devices[1].sim.attribute(&probe, Method::Guided, AttrOptions::default());
+        assert_eq!(a.relevance, b.relevance, "config invariance across shared plan");
+    }
 
     fn fleet(boards: &[Board]) -> Option<Fleet> {
         // integration-style: requires artifacts; skip silently if absent

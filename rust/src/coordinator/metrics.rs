@@ -39,6 +39,12 @@ pub struct Snapshot {
     pub p99_ms: f64,
     pub mean_ms: f64,
     pub mean_queue_wait_ms: f64,
+    /// Queue-wait percentiles: where micro-batching/sharding shows up
+    /// at the serving layer (the tail a client actually sees is queue
+    /// wait + compute latency).
+    pub p50_queue_wait_ms: f64,
+    pub p95_queue_wait_ms: f64,
+    pub p99_queue_wait_ms: f64,
     pub mean_sim_mcycles: f64,
     pub verified: u64,
     pub mean_verify_corr: f64,
@@ -97,6 +103,9 @@ impl Metrics {
             p99_ms: g.latency_ms.percentile(0.99),
             mean_ms: g.latency_ms.mean(),
             mean_queue_wait_ms: g.queue_wait_ms.mean(),
+            p50_queue_wait_ms: g.queue_wait_ms.percentile(0.50),
+            p95_queue_wait_ms: g.queue_wait_ms.percentile(0.95),
+            p99_queue_wait_ms: g.queue_wait_ms.percentile(0.99),
             mean_sim_mcycles: g.sim_cycles.mean() / 1e6,
             verified: g.verified,
             mean_verify_corr: g.verify_corr.mean(),
@@ -113,7 +122,8 @@ impl Snapshot {
     pub fn report(&self) -> String {
         format!(
             "completed={} rejected={} errors={} wall={:.2}s throughput={:.1} img/s\n\
-             latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms (queue wait {:.2}ms)\n\
+             latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
+             queue wait: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
              device model: mean {:.2} Mcycles/request\n\
              shadow verify: {} checked, corr mean={:.4} min={:.4}",
             self.completed,
@@ -126,6 +136,9 @@ impl Snapshot {
             self.p95_ms,
             self.p99_ms,
             self.mean_queue_wait_ms,
+            self.p50_queue_wait_ms,
+            self.p95_queue_wait_ms,
+            self.p99_queue_wait_ms,
             self.mean_sim_mcycles,
             self.verified,
             self.mean_verify_corr,
@@ -143,7 +156,7 @@ mod tests {
         let m = Metrics::new();
         m.record_start();
         for i in 1..=100 {
-            m.record_completion(i as f64, 0.5, 1_000_000);
+            m.record_completion(i as f64, i as f64 / 10.0, 1_000_000);
         }
         m.record_rejection();
         m.record_error();
@@ -154,6 +167,10 @@ mod tests {
         assert_eq!(s.rejected, 1);
         assert_eq!(s.errors, 1);
         assert!((s.p50_ms - 50.5).abs() < 1e-9);
+        assert!((s.p50_queue_wait_ms - 5.05).abs() < 1e-9);
+        assert!(s.p95_queue_wait_ms > s.p50_queue_wait_ms);
+        assert!(s.p99_queue_wait_ms >= s.p95_queue_wait_ms);
+        assert!(s.report().contains("queue wait"));
         assert_eq!(s.verified, 2);
         assert!((s.mean_verify_corr - 0.98).abs() < 1e-9);
         assert!((s.min_verify_corr - 0.97).abs() < 1e-9);

@@ -31,7 +31,7 @@ use std::time::Instant;
 
 use crate::attribution::Method;
 use crate::model::{Manifest, Params};
-use crate::sched::{AttrOptions, Simulator};
+use crate::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
 use crate::util::stats::pearson;
 use metrics::Metrics;
 use queue::{Bounded, PushError};
@@ -93,6 +93,12 @@ pub struct Config {
     /// to fill its batch once it holds the first one. 0 = take only
     /// what is already queued.
     pub max_wait_ms: u64,
+    /// Compute threads each worker shards its batch across inside the
+    /// engine compute passes (bit-exact for any value). 0 = auto:
+    /// `available_parallelism / workers`, at least 1 — so the worker
+    /// pool and the shard pool together roughly cover the host without
+    /// oversubscribing.
+    pub shards: usize,
 }
 
 impl Default for Config {
@@ -104,6 +110,7 @@ impl Default for Config {
             freq_mhz: 100.0,
             max_batch: 1,
             max_wait_ms: 0,
+            shards: 0,
         }
     }
 }
@@ -139,6 +146,13 @@ impl Coordinator {
         let queue = Arc::new(Bounded::new(cfg.queue_depth));
         let metrics = Arc::new(Metrics::new());
 
+        // shard budget: split the host's cores across the worker pool
+        // unless the operator pinned an explicit count
+        let shards = if cfg.shards == 0 {
+            (crate::sched::auto_shards() / cfg.workers).max(1)
+        } else {
+            cfg.shards
+        };
         let mut workers = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
             let sim = sim.clone();
@@ -150,7 +164,9 @@ impl Coordinator {
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("attrax-worker-{wid}"))
-                    .spawn(move || worker_loop(sim, queue, metrics, freq, max_batch, max_wait))?,
+                    .spawn(move || {
+                        worker_loop(sim, queue, metrics, freq, max_batch, max_wait, shards)
+                    })?,
             );
         }
 
@@ -315,33 +331,41 @@ fn worker_loop(
     freq_mhz: f64,
     max_batch: usize,
     max_wait: std::time::Duration,
+    shards: usize,
 ) {
     // batch only requests that can share one device pass: same method
     // (the BP dataflow is method-configured) and same explicit target
     let compatible =
         |a: &Request, b: &Request| a.method == b.method && a.target == b.target;
+    // the worker's private arena: every attribute pass runs inside
+    // these reusable slabs (zero steady-state allocations), while the
+    // quantized model itself is the shared Arc<Plan> inside `sim` —
+    // N workers hold one copy of the weights, not N
+    let mut ws = Workspace::with_shards(shards);
+    let mut out = BatchOutput::new();
     while let Some(batch) = queue.pop_batch(max_batch, max_wait, compatible) {
         let waits_ms: Vec<f64> =
             batch.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).collect();
         let t0 = Instant::now();
-        // one (possibly 1-image) batched FP+BP pass: the single-image
-        // engines are batch-of-one wrappers over the same cores, so a
-        // batch of 1 is bit- and cost-identical to the unbatched path;
-        // weight tiles are fetched once per batch, responses fan back out
+        // one (possibly 1-image) batched FP+BP pass: a batch of 1 is
+        // bit- and cost-identical to the unbatched path; weight tiles
+        // are fetched once per batch, responses fan back out. Layer
+        // checkpoints are skipped on the serving path (they are the one
+        // per-call allocation the ledger would make).
         let method = batch[0].method;
         let opts = AttrOptions { target: batch[0].target, ..Default::default() };
         let imgs: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
-        let result = sim.attribute_batch(&imgs, method, opts);
+        sim.attribute_batch_into(&mut ws, &imgs, method, opts, false, &mut out);
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let total_cycles = result.fp_cost.total_cycles() + result.bp_cost.total_cycles();
+        let total_cycles = out.fp_cost.total_cycles() + out.bp_cost.total_cycles();
         let per_image_cycles = total_cycles / batch.len() as u64;
-        for ((req, item), wait_ms) in batch.into_iter().zip(result.items).zip(waits_ms) {
+        for (b, (req, wait_ms)) in batch.into_iter().zip(waits_ms).enumerate() {
             metrics.record_completion(host_ms, wait_ms, per_image_cycles);
             let resp = Response {
                 id: req.id,
-                pred: item.pred,
-                logits: item.logits,
-                relevance: item.relevance,
+                pred: out.preds[b],
+                logits: out.logits_of(b).to_vec(),
+                relevance: out.relevance_of(b).to_vec(),
                 method,
                 latency_ms: host_ms,
                 device_ms: per_image_cycles as f64 / (freq_mhz * 1e3),

@@ -19,15 +19,22 @@
 //! All arithmetic is raw Q-format (i32 storage, i64 accumulate,
 //! rescale + saturate once per output element).
 //!
-//! Every engine has a **batch-N entry point** (`forward_batch`,
-//! `input_grad_batch`, `input_grad_unpool_batch`) that loops images
-//! *inside* the per-tile weight load, fetching each weight tile from
-//! DRAM once per batch instead of once per image (DESIGN.md §Batching).
-//! The single-image functions are wrappers over the batch cores with a
-//! batch of one, so batched and single execution are bit-exact by
-//! construction.
+//! Every engine has a **batch-N `_into` core** ([`forward_batch_into`],
+//! [`input_grad_unpool_batch_into`]) that loops images *inside* the
+//! per-tile weight load (each weight tile fetched from DRAM once per
+//! batch, DESIGN.md §Batching) and works entirely in caller-provided
+//! flat slabs ([`EngineScratch`] + [`ConvBatchOut`]) so a warm steady
+//! state performs **zero heap allocations**. The cores split execution
+//! into a single-threaded *cost pass* (the `Cost` ledger walks the tile
+//! loop nest exactly as before) and a *compute pass* that can be
+//! **sharded across OS threads** by image: every image owns a disjoint
+//! accumulator/output region and runs the identical batch=1 loop order,
+//! so sharding is bit-exact by construction for any thread count and
+//! the ledger is shard-invariant. The older `Vec`-returning signatures
+//! (`forward`, `forward_batch`, `input_grad*`) are thin allocate-and-
+//! call wrappers over the cores.
 
-use super::{dram, Cost, HwConfig};
+use super::{dram, Cost, EngineScratch, HwConfig};
 
 /// What the output store does with each computed element (paper §III-D:
 /// non-linear layers are absorbed into the store of the layer before).
@@ -54,6 +61,29 @@ pub struct ConvResult {
     pub pool_idx: Option<Vec<u8>>,
 }
 
+/// Reusable flat-slab outputs of a batched conv evaluation: image `b`'s
+/// tensor occupies the `b`-th fixed-stride region of each slab. Unused
+/// slabs (mask when `Post::Plain`, pooled/pool_idx unless
+/// `Post::ReluPool`) are resized to zero length. Buffers are resized in
+/// place and keep capacity across calls.
+#[derive(Default)]
+pub struct ConvBatchOut {
+    /// [nb, O, OH, OW] full-resolution output (post-ReLU if fused).
+    pub out: Vec<i32>,
+    /// [nb, O, OH, OW] ReLU positivity mask; empty when Post == Plain.
+    pub mask: Vec<bool>,
+    /// [nb, O, OH/2, OW/2] pooled output; empty unless Post == ReluPool.
+    pub pooled: Vec<i32>,
+    /// Same dims as `pooled`: 2-bit argmax, one index per byte.
+    pub pool_idx: Vec<u8>,
+}
+
+impl ConvBatchOut {
+    pub fn new() -> ConvBatchOut {
+        ConvBatchOut::default()
+    }
+}
+
 /// Flipped-transposed weight view (paper Fig. 6): swap in/out channel
 /// dims and rotate each kernel 180°. In hardware this is a DRAM
 /// *address-pattern* change during buffer load (Table I); here we
@@ -73,6 +103,25 @@ pub fn flip_transpose(w: &[i32], o: usize, i: usize, k: usize) -> Vec<i32> {
         }
     }
     out
+}
+
+/// Scatter-ordered view of a BP weight view for the fused unpool-conv:
+/// `w_bp` is [OUT, CG, K, K] (as produced by [`flip_transpose`]); the
+/// result is [CG, K, K, OUT] so each scatter tap is one long contiguous
+/// FMA over the output channels (§Perf opt 3). Host layout only —
+/// results and cost accounting are unchanged. Precomputed once per plan
+/// so the steady-state BP path never re-materializes it.
+pub fn flip_scatter(w_bp: &[i32], out_ch: usize, cg_n: usize, k: usize) -> Vec<i32> {
+    assert_eq!(w_bp.len(), out_ch * cg_n * k * k);
+    let mut wsc = vec![0i32; w_bp.len()];
+    for o in 0..out_ch {
+        for cg in 0..cg_n {
+            for t in 0..k * k {
+                wsc[(cg * k * k + t) * out_ch + o] = w_bp[(o * cg_n + cg) * k * k + t];
+            }
+        }
+    }
+    wsc
 }
 
 /// Tiled conv2d, stride 1. `x`: [I,H,W] raw Q, `w`: [O,I,K,K] raw Q,
@@ -98,15 +147,10 @@ pub fn forward(
         .expect("batch of one")
 }
 
-/// Batch-N tiled conv2d (the tentpole batching path): identical loop
-/// nest to the paper's engine, but the image loop sits *inside* the
-/// per-tile weight load, so each weight tile travels DRAM → on-chip
-/// exactly once per batch instead of once per image. Per-image
-/// arithmetic is fully independent (one accumulator region per image,
-/// same loop order as batch=1), so results are bit-exact with the
-/// single-image path; only the `Cost` ledger shows the amortization
-/// (weight bytes /= batch, one pipeline fill per tile instead of one
-/// per image).
+/// Batch-N tiled conv2d: allocate-and-call wrapper over
+/// [`forward_batch_into`] (flattens the inputs, splits the slab outputs
+/// back into per-image [`ConvResult`]s). Runs unsharded — the
+/// steady-state serving path uses the `_into` core directly.
 #[allow(clippy::too_many_arguments)]
 pub fn forward_batch(
     cfg: &HwConfig,
@@ -121,37 +165,97 @@ pub fn forward_batch(
 ) -> Vec<ConvResult> {
     let nb = xs.len();
     assert!(nb > 0, "empty batch");
+    let img_elems = ic_n * h * w_n;
+    let mut flat = Vec::with_capacity(nb * img_elems);
     for x in xs {
-        assert_eq!(x.len(), ic_n * h * w_n, "input size mismatch");
+        assert_eq!(x.len(), img_elems, "input size mismatch");
+        flat.extend_from_slice(x);
     }
+    let mut scratch = EngineScratch::new();
+    let mut slab = ConvBatchOut::new();
+    forward_batch_into(
+        cfg,
+        cost,
+        &mut scratch,
+        &flat,
+        nb,
+        (ic_n, h, w_n),
+        wgt,
+        (oc_n, k),
+        bias,
+        pad,
+        post,
+        1,
+        &mut slab,
+    );
+    let oh = h + 2 * pad - (k - 1);
+    let ow = w_n + 2 * pad - (k - 1);
+    let out_elems = oc_n * oh * ow;
+    let pool_elems = if post == Post::ReluPool { oc_n * (oh / 2) * (ow / 2) } else { 0 };
+    (0..nb)
+        .map(|b| ConvResult {
+            out: slab.out[b * out_elems..(b + 1) * out_elems].to_vec(),
+            mask: if post == Post::Plain {
+                None
+            } else {
+                Some(slab.mask[b * out_elems..(b + 1) * out_elems].to_vec())
+            },
+            pooled: if post == Post::ReluPool {
+                Some(slab.pooled[b * pool_elems..(b + 1) * pool_elems].to_vec())
+            } else {
+                None
+            },
+            pool_idx: if post == Post::ReluPool {
+                Some(slab.pool_idx[b * pool_elems..(b + 1) * pool_elems].to_vec())
+            } else {
+                None
+            },
+        })
+        .collect()
+}
+
+/// Batch-N tiled conv2d core: identical loop nest to the paper's
+/// engine, but the image loop sits *inside* the per-tile weight load,
+/// so each weight tile travels DRAM → on-chip exactly once per batch.
+///
+/// `xs` is a flat [nb, I, H, W] slab; results land in the reusable
+/// `out` slabs. The `Cost` ledger is charged by a single-threaded pass
+/// over the tile loop nest (identical totals to the legacy path); the
+/// arithmetic then runs in a compute pass sharded across up to `shards`
+/// scoped threads, each owning a disjoint image range of the
+/// accumulator/output slabs — per-image loop order is exactly the
+/// batch=1 order, so results are bit-exact for any shard count.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_batch_into(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    scratch: &mut EngineScratch,
+    xs: &[i32],
+    nb: usize,
+    (ic_n, h, w_n): (usize, usize, usize),
+    wgt: &[i32],
+    (oc_n, k): (usize, usize),
+    bias: Option<&[i32]>,
+    pad: usize,
+    post: Post,
+    shards: usize,
+    out: &mut ConvBatchOut,
+) {
+    assert!(nb > 0, "empty batch");
+    assert_eq!(xs.len(), nb * ic_n * h * w_n, "input size mismatch");
     assert_eq!(wgt.len(), oc_n * ic_n * k * k, "weight size mismatch");
     let oh = h + 2 * pad - (k - 1);
     let ow = w_n + 2 * pad - (k - 1);
     if post == Post::ReluPool {
         assert!(oh % 2 == 0 && ow % 2 == 0, "pool needs even output dims");
     }
-    let q = cfg.q;
-    let mut res: Vec<ConvResult> = (0..nb)
-        .map(|_| ConvResult {
-            out: vec![0i32; oc_n * oh * ow],
-            mask: if post == Post::Plain { None } else { Some(vec![false; oc_n * oh * ow]) },
-            pooled: if post == Post::ReluPool {
-                Some(vec![0i32; oc_n * (oh / 2) * (ow / 2)])
-            } else {
-                None
-            },
-            pool_idx: if post == Post::ReluPool {
-                Some(vec![0u8; oc_n * (oh / 2) * (ow / 2)])
-            } else {
-                None
-            },
-        })
-        .collect();
-
-    // accumulator buffers for one output tile, one region per image (the
-    // on-chip output buffer; output-stationary: lives across the ic loop)
-    let tile_elems = cfg.tile_oc * cfg.tile_oh * cfg.tile_ow;
-    let mut acc = vec![0i64; nb * tile_elems];
+    let out_elems = oc_n * oh * ow;
+    let mask_elems = if post == Post::Plain { 0 } else { out_elems };
+    let pool_elems = if post == Post::ReluPool { oc_n * (oh / 2) * (ow / 2) } else { 0 };
+    out.out.resize(nb * out_elems, 0);
+    out.mask.resize(nb * mask_elems, false);
+    out.pooled.resize(nb * pool_elems, 0);
+    out.pool_idx.resize(nb * pool_elems, 0);
 
     // §Perf: pre-pad each input once (the line-buffer zero-fill the FPGA
     // does at load time) so the MAC loops below are branch-free
@@ -159,19 +263,24 @@ pub fn forward_batch(
     // choice; cycle/traffic accounting is unchanged.
     let (ph, pw) = (h + 2 * pad, w_n + 2 * pad);
     let padded_elems = ic_n * ph * pw;
-    let mut xp = vec![0i32; nb * padded_elems];
-    for (b, x) in xs.iter().enumerate() {
-        let base = b * padded_elems;
+    scratch.xp.resize(nb * padded_elems, 0);
+    scratch.xp.fill(0);
+    for b in 0..nb {
+        let src_base = b * ic_n * h * w_n;
+        let dst_base = b * padded_elems;
         for c in 0..ic_n {
             for y in 0..h {
-                let src = c * h * w_n + y * w_n;
-                let dst = base + c * ph * pw + (y + pad) * pw + pad;
-                xp[dst..dst + w_n].copy_from_slice(&x[src..src + w_n]);
+                let src = src_base + c * h * w_n + y * w_n;
+                let dst = dst_base + c * ph * pw + (y + pad) * pw + pad;
+                scratch.xp[dst..dst + w_n].copy_from_slice(&xs[src..src + w_n]);
             }
         }
     }
+    let tile_elems = cfg.tile_oc * cfg.tile_oh * cfg.tile_ow;
+    scratch.acc.resize(nb * tile_elems, 0);
 
-    // --- the tile loop nest (paper §III-B) --------------------------------
+    // --- cost pass: the tile loop nest (paper §III-B), charged exactly
+    // as the legacy interleaved execution did --------------------------
     let mut oc0 = 0;
     while oc0 < oc_n {
         let toc = cfg.tile_oc.min(oc_n - oc0);
@@ -181,43 +290,176 @@ pub fn forward_batch(
             let mut ox0 = 0;
             while ox0 < ow {
                 let tow = cfg.tile_ow.min(ow - ox0);
-                // zero the full strided extent the tiles index into
-                // (partial tiles still stride by the configured dims)
-                acc.fill(0);
-
-                // output-stationary accumulation across input-channel tiles
                 let mut ic0 = 0;
                 while ic0 < ic_n {
                     let tic = cfg.tile_ic.min(ic_n - ic0);
-
-                    // DRAM -> input buffer: halo tile rows (bounds-clipped),
-                    // once per image — activation traffic scales with batch
+                    // DRAM -> input buffer: halo tile rows (bounds-
+                    // clipped), once per image — activation traffic
+                    // scales with the batch
                     let in_rows = (toh + k - 1) as u64 * tic as u64;
                     for _ in 0..nb {
                         dram::read_tile_rows(cfg, cost, in_rows, (tow + k - 1) as u64);
                     }
-                    // DRAM -> weight buffer: one burst per output channel,
-                    // fetched ONCE for the whole batch (the batching win)
+                    // DRAM -> weight buffer: one burst per output
+                    // channel, fetched ONCE for the whole batch
                     dram::read_weights(
                         cfg,
                         cost,
                         (toc * tic * k * k * cfg.word_bytes()) as u64,
                         toc as u64,
                     );
+                    // cycles: ceil-division by the unroll lanes (partial
+                    // tiles still occupy full lanes); one pipeline fill
+                    // per tile, amortized across the batch
+                    let spatial_iters =
+                        (toh.div_ceil(cfg.n_oh) * tow.div_ceil(cfg.n_ow)) as u64;
+                    cost.compute_cycles +=
+                        nb as u64 * spatial_iters * (toc * tic * k * k) as u64
+                            + cfg.pipeline_depth;
+                    cost.macs += (nb * toh * tow * toc * tic * k * k) as u64;
+                    ic0 += tic;
+                }
+                // output store (paper §III-D): with a fused pool only
+                // pooled values leave the chip
+                for _ in 0..nb {
+                    if post == Post::ReluPool {
+                        dram::write_tile_rows(cfg, cost, (toc * toh / 2) as u64, (tow / 2) as u64);
+                    } else {
+                        dram::write_tile_rows(cfg, cost, (toc * toh) as u64, tow as u64);
+                    }
+                }
+                ox0 += tow;
+            }
+            oy0 += toh;
+        }
+        oc0 += toc;
+    }
 
-                    // MAC loops: N_oh x N_ow unrolled lanes, II=1.
-                    // Host layout: tap-outer / row-inner so the innermost
-                    // loop is a contiguous multiply-accumulate the
-                    // autovectorizer handles (§Perf opt 1).
-                    // fast path for word widths <= 16: operands fit i16,
-                    // so each product fits i32 (vpmulld-friendly); only
-                    // the accumulator needs i64 (§Perf opt 2). A register-
-                    // tile variant (opt 4) was tried and reverted: no
-                    // measurable gain over this form (see EXPERIMENTS.md).
-                    let narrow = cfg.q.word_bits <= 16;
-                    for b in 0..nb {
-                        let xpb = &xp[b * padded_elems..(b + 1) * padded_elems];
-                        let accb = &mut acc[b * tile_elems..(b + 1) * tile_elems];
+    // --- compute pass: shard the batch across threads -----------------
+    let shards = shards.clamp(1, nb);
+    if shards == 1 {
+        fwd_range(
+            cfg,
+            nb,
+            (ic_n, ph, pw),
+            (oc_n, k),
+            (oh, ow),
+            wgt,
+            bias,
+            post,
+            &scratch.xp,
+            &mut scratch.acc,
+            &mut out.out,
+            &mut out.mask,
+            &mut out.pooled,
+            &mut out.pool_idx,
+        );
+    } else {
+        std::thread::scope(|sc| {
+            let xp = &scratch.xp[..];
+            let mut acc: &mut [i64] = &mut scratch.acc;
+            let mut o: &mut [i32] = &mut out.out;
+            let mut m: &mut [bool] = &mut out.mask;
+            let mut p: &mut [i32] = &mut out.pooled;
+            let mut pi: &mut [u8] = &mut out.pool_idx;
+            let mut lo = 0;
+            for t in 0..shards {
+                let hi = (t + 1) * nb / shards;
+                let n = hi - lo;
+                let tmp = acc;
+                let (acc_t, rest) = tmp.split_at_mut(n * tile_elems);
+                acc = rest;
+                let tmp = o;
+                let (o_t, rest) = tmp.split_at_mut(n * out_elems);
+                o = rest;
+                let tmp = m;
+                let (m_t, rest) = tmp.split_at_mut(n * mask_elems);
+                m = rest;
+                let tmp = p;
+                let (p_t, rest) = tmp.split_at_mut(n * pool_elems);
+                p = rest;
+                let tmp = pi;
+                let (pi_t, rest) = tmp.split_at_mut(n * pool_elems);
+                pi = rest;
+                let xp_t = &xp[lo * padded_elems..hi * padded_elems];
+                sc.spawn(move || {
+                    fwd_range(
+                        cfg,
+                        n,
+                        (ic_n, ph, pw),
+                        (oc_n, k),
+                        (oh, ow),
+                        wgt,
+                        bias,
+                        post,
+                        xp_t,
+                        acc_t,
+                        o_t,
+                        m_t,
+                        p_t,
+                        pi_t,
+                    );
+                });
+                lo = hi;
+            }
+        });
+    }
+}
+
+/// Compute pass over a contiguous image range: the full tile loop nest
+/// for `nb` images whose padded-input / accumulator / output regions
+/// are the given sub-slabs. Loop order per image is identical to
+/// batch=1, so any sharding of the batch is bit-exact.
+#[allow(clippy::too_many_arguments)]
+fn fwd_range(
+    cfg: &HwConfig,
+    nb: usize,
+    (ic_n, ph, pw): (usize, usize, usize),
+    (oc_n, k): (usize, usize),
+    (oh, ow): (usize, usize),
+    wgt: &[i32],
+    bias: Option<&[i32]>,
+    post: Post,
+    xp: &[i32],
+    acc: &mut [i64],
+    out: &mut [i32],
+    mask: &mut [bool],
+    pooled: &mut [i32],
+    pool_idx: &mut [u8],
+) {
+    let q = cfg.q;
+    let tile_elems = cfg.tile_oc * cfg.tile_oh * cfg.tile_ow;
+    let padded_elems = ic_n * ph * pw;
+    let out_elems = oc_n * oh * ow;
+    let (pool_h, pool_w) = (oh / 2, ow / 2);
+    let pool_elems = oc_n * pool_h * pool_w;
+    // fast path for word widths <= 16: operands fit i16, so each
+    // product fits i32 (vpmulld-friendly); only the accumulator needs
+    // i64 (§Perf opt 2)
+    let narrow = cfg.q.word_bits <= 16;
+
+    let mut oc0 = 0;
+    while oc0 < oc_n {
+        let toc = cfg.tile_oc.min(oc_n - oc0);
+        let mut oy0 = 0;
+        while oy0 < oh {
+            let toh = cfg.tile_oh.min(oh - oy0);
+            let mut ox0 = 0;
+            while ox0 < ow {
+                let tow = cfg.tile_ow.min(ow - ox0);
+                // output-stationary accumulation across input-channel
+                // tiles; one accumulator region per image
+                for b in 0..nb {
+                    let xpb = &xp[b * padded_elems..(b + 1) * padded_elems];
+                    let accb = &mut acc[b * tile_elems..(b + 1) * tile_elems];
+                    accb.fill(0);
+                    let mut ic0 = 0;
+                    while ic0 < ic_n {
+                        let tic = cfg.tile_ic.min(ic_n - ic0);
+                        // MAC loops: N_oh x N_ow unrolled lanes, II=1.
+                        // Host layout: tap-outer / row-inner so the
+                        // innermost loop is a contiguous multiply-
+                        // accumulate the autovectorizer handles.
                         for oc in 0..toc {
                             for ic in 0..tic {
                                 let wbase = ((oc0 + oc) * ic_n + (ic0 + ic)) * k * k;
@@ -248,25 +490,16 @@ pub fn forward_batch(
                                 }
                             }
                         }
+                        ic0 += tic;
                     }
-                    // cycles: ceil-division by the unroll lanes, per the
-                    // unrolled loop structure (partial tiles still occupy
-                    // full lanes); one pipeline fill per tile, amortized
-                    // across the batch
-                    let spatial_iters =
-                        (toh.div_ceil(cfg.n_oh) * tow.div_ceil(cfg.n_ow)) as u64;
-                    cost.compute_cycles +=
-                        nb as u64 * spatial_iters * (toc * tic * k * k) as u64
-                            + cfg.pipeline_depth;
-                    cost.macs += (nb * toh * tow * toc * tic * k * k) as u64;
 
-                    ic0 += tic;
-                }
-
-                // --- output store with fused post-ops (paper §III-D) ------
-                for b in 0..nb {
-                    let accb = &acc[b * tile_elems..(b + 1) * tile_elems];
-                    let r = &mut res[b];
+                    // --- output store with fused post-ops (§III-D) ----
+                    let ob = &mut out[b * out_elems..(b + 1) * out_elems];
+                    let mb = if mask.is_empty() {
+                        &mut mask[0..0]
+                    } else {
+                        &mut mask[b * out_elems..(b + 1) * out_elems]
+                    };
                     for oc in 0..toc {
                         for ty in 0..toh {
                             for tx in 0..tow {
@@ -276,22 +509,20 @@ pub fn forward_batch(
                                     v = q.add(v, bs[oc0 + oc]);
                                 }
                                 let gi = (oc0 + oc) * oh * ow + (oy0 + ty) * ow + (ox0 + tx);
-                                if let Some(m) = r.mask.as_mut() {
-                                    m[gi] = v > 0;
+                                if post != Post::Plain {
+                                    mb[gi] = v > 0;
                                     if v < 0 {
                                         v = 0;
                                     }
                                 }
-                                r.out[gi] = v;
+                                ob[gi] = v;
                             }
                         }
                     }
                     if post == Post::ReluPool {
-                        // pool scan during store: pick max of each 2x2 window
-                        let ConvResult { out, pooled, pool_idx, .. } = &mut res[b];
-                        let pv = pooled.as_mut().unwrap();
-                        let pi = pool_idx.as_mut().unwrap();
-                        let (pool_h, pool_w) = (oh / 2, ow / 2);
+                        // pool scan during store: max of each 2x2 window
+                        let pv = &mut pooled[b * pool_elems..(b + 1) * pool_elems];
+                        let pib = &mut pool_idx[b * pool_elems..(b + 1) * pool_elems];
                         for oc in 0..toc {
                             for py in (oy0 / 2)..((oy0 + toh) / 2) {
                                 for px in (ox0 / 2)..((ox0 + tow) / 2) {
@@ -299,7 +530,7 @@ pub fn forward_batch(
                                     let mut bidx = 0u8;
                                     for dy in 0..2 {
                                         for dx in 0..2 {
-                                            let v = out[(oc0 + oc) * oh * ow
+                                            let v = ob[(oc0 + oc) * oh * ow
                                                 + (2 * py + dy) * ow
                                                 + (2 * px + dx)];
                                             if v > best {
@@ -309,25 +540,18 @@ pub fn forward_batch(
                                         }
                                     }
                                     pv[(oc0 + oc) * pool_h * pool_w + py * pool_w + px] = best;
-                                    pi[(oc0 + oc) * pool_h * pool_w + py * pool_w + px] = bidx;
+                                    pib[(oc0 + oc) * pool_h * pool_w + py * pool_w + px] = bidx;
                                 }
                             }
                         }
-                        // DRAM write: only pooled values leave the chip
-                        dram::write_tile_rows(cfg, cost, (toc * toh / 2) as u64, (tow / 2) as u64);
-                    } else {
-                        dram::write_tile_rows(cfg, cost, (toc * toh) as u64, tow as u64);
                     }
                 }
-
                 ox0 += tow;
             }
             oy0 += toh;
         }
         oc0 += toc;
     }
-
-    res
 }
 
 /// BP conv (paper §III-E): gradient w.r.t. the layer input — the same
@@ -391,11 +615,9 @@ pub fn input_grad_unpool(
         .expect("batch of one")
 }
 
-/// Batch-N fused unpool + gradient conv: the image loop sits inside the
-/// per-tile weight-view load, so the flipped-transposed weights for a
-/// channel block are fetched once per batch. Per-image scatter
-/// arithmetic is independent (one accumulator region per image, same
-/// order as batch=1), so results are bit-exact with [`input_grad_unpool`].
+/// Batch-N fused unpool + gradient conv: allocate-and-call wrapper over
+/// [`input_grad_unpool_batch_into`] (materializes the scatter-ordered
+/// weight view per call; the plan-driven serving path precomputes it).
 #[allow(clippy::too_many_arguments)]
 pub fn input_grad_unpool_batch(
     cfg: &HwConfig,
@@ -411,33 +633,78 @@ pub fn input_grad_unpool_batch(
     let nb = gs_pooled.len();
     assert!(nb > 0, "empty batch");
     assert_eq!(pool_idxs.len(), nb, "one pool-index mask per image");
+    let g_elems = cg_n * ph * pw;
+    let mut g_flat = Vec::with_capacity(nb * g_elems);
+    let mut idx_flat = Vec::with_capacity(nb * g_elems);
     for b in 0..nb {
-        assert_eq!(gs_pooled[b].len(), cg_n * ph * pw);
-        assert_eq!(pool_idxs[b].len(), gs_pooled[b].len());
+        assert_eq!(gs_pooled[b].len(), g_elems);
+        assert_eq!(pool_idxs[b].len(), g_elems);
+        g_flat.extend_from_slice(gs_pooled[b]);
+        idx_flat.extend_from_slice(pool_idxs[b]);
     }
-    assert_eq!(w_bp.len(), out_ch * cg_n * k * k);
+    let w_sc = flip_scatter(w_bp, out_ch, cg_n, k);
+    let mut scratch = EngineScratch::new();
+    let mut out = Vec::new();
+    input_grad_unpool_batch_into(
+        cfg,
+        cost,
+        &mut scratch,
+        &g_flat,
+        nb,
+        (cg_n, ph, pw),
+        &idx_flat,
+        &w_sc,
+        out_ch,
+        k,
+        pad,
+        1,
+        &mut out,
+    );
     let (h, w_n) = (2 * ph, 2 * pw);
     let bp_pad = k - 1 - pad;
     let (oh, ow) = (h + 2 * bp_pad - (k - 1), w_n + 2 * bp_pad - (k - 1));
-    let q = cfg.q;
-    // §Perf opt 3: accumulate in [y][x][o] order (contiguous in the
-    // output channel) and pre-transpose the weight view to
-    // [cg][kh][kw][o] so each scatter tap is one long contiguous FMA
-    // over out_ch. Host layout only; results + cost are unchanged.
-    let grad_elems = oh * ow * out_ch;
-    let mut acc = vec![0i64; nb * grad_elems];
-    let mut wsc = vec![0i32; w_bp.len()];
-    for o in 0..out_ch {
-        for cg in 0..cg_n {
-            for t in 0..k * k {
-                wsc[(cg * k * k + t) * out_ch + o] = w_bp[(o * cg_n + cg) * k * k + t];
-            }
-        }
-    }
-    let narrow = cfg.q.word_bits <= 16;
+    let out_elems = out_ch * oh * ow;
+    (0..nb).map(|b| out[b * out_elems..(b + 1) * out_elems].to_vec()).collect()
+}
 
-    // tile over the pooled grid (this is what the on-chip gradient
-    // buffer holds during BP)
+/// Batch-N fused unpool + gradient conv core: the image loop sits
+/// inside the per-tile weight-view load, so the flipped-transposed
+/// weights for a channel block are fetched once per batch. `gs` and
+/// `idx` are flat [nb, Cg, PH, PW] slabs; `w_sc` is the
+/// [`flip_scatter`] view of the BP weights. Cost pass + image-sharded
+/// compute pass as in [`forward_batch_into`] — bit-exact with the
+/// single-image path for any shard count.
+#[allow(clippy::too_many_arguments)]
+pub fn input_grad_unpool_batch_into(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    scratch: &mut EngineScratch,
+    gs: &[i32],
+    nb: usize,
+    (cg_n, ph, pw): (usize, usize, usize),
+    idx: &[u8],
+    w_sc: &[i32],
+    out_ch: usize,
+    k: usize,
+    pad: usize,
+    shards: usize,
+    out: &mut Vec<i32>,
+) {
+    assert!(nb > 0, "empty batch");
+    let g_elems = cg_n * ph * pw;
+    assert_eq!(gs.len(), nb * g_elems);
+    assert_eq!(idx.len(), gs.len());
+    assert_eq!(w_sc.len(), out_ch * cg_n * k * k);
+    let (h, w_n) = (2 * ph, 2 * pw);
+    let bp_pad = k - 1 - pad;
+    let (oh, ow) = (h + 2 * bp_pad - (k - 1), w_n + 2 * bp_pad - (k - 1));
+    let grad_elems = oh * ow * out_ch;
+    let out_elems = out_ch * oh * ow;
+    scratch.acc.resize(nb * grad_elems, 0);
+    out.resize(nb * out_elems, 0);
+
+    // --- cost pass: tile over the pooled grid (what the on-chip
+    // gradient buffer holds during BP) ---------------------------------
     let (tile_ph, tile_pw) = (cfg.tile_oh.max(2) / 2 * 2, cfg.tile_ow.max(2) / 2 * 2);
     let mut c0 = 0;
     while c0 < cg_n {
@@ -448,7 +715,6 @@ pub fn input_grad_unpool_batch(
             let mut px0 = 0;
             while px0 < pw {
                 let tpw = tile_pw.min(pw - px0);
-
                 // loads: pooled gradient tile + packed 2-bit indices,
                 // once per image
                 for _ in 0..nb {
@@ -462,11 +728,119 @@ pub fn input_grad_unpool_batch(
                     (out_ch * tc * k * k * cfg.word_bytes()) as u64,
                     out_ch as u64,
                 );
+                // cycles: one MAC group per (image, pooled elem,
+                // out_ch, tap), parallel over the N_oh x N_ow lanes;
+                // one pipeline fill per tile, amortized across the batch
+                let macs = (nb * tc * tph * tpw * out_ch * k * k) as u64;
+                cost.compute_cycles +=
+                    macs.div_ceil(cfg.conv_macs_parallel() as u64) + cfg.pipeline_depth;
+                cost.macs += macs;
+                px0 += tpw;
+            }
+            py0 += tph;
+        }
+        c0 += tc;
+    }
+    for _ in 0..nb {
+        dram::write_tile_rows(cfg, cost, (out_ch * oh) as u64, ow as u64);
+    }
 
-                for b in 0..nb {
-                    let g_pooled = gs_pooled[b];
-                    let pool_idx = pool_idxs[b];
-                    let accb = &mut acc[b * grad_elems..(b + 1) * grad_elems];
+    // --- compute pass: shard the batch across threads -----------------
+    let shards = shards.clamp(1, nb);
+    if shards == 1 {
+        unpool_grad_range(
+            cfg,
+            nb,
+            (cg_n, ph, pw),
+            w_sc,
+            out_ch,
+            k,
+            bp_pad,
+            (oh, ow),
+            gs,
+            idx,
+            &mut scratch.acc,
+            out,
+        );
+    } else {
+        std::thread::scope(|sc| {
+            let mut acc: &mut [i64] = &mut scratch.acc;
+            let mut o: &mut [i32] = out;
+            let mut lo = 0;
+            for t in 0..shards {
+                let hi = (t + 1) * nb / shards;
+                let n = hi - lo;
+                let tmp = acc;
+                let (acc_t, rest) = tmp.split_at_mut(n * grad_elems);
+                acc = rest;
+                let tmp = o;
+                let (o_t, rest) = tmp.split_at_mut(n * out_elems);
+                o = rest;
+                let gs_t = &gs[lo * g_elems..hi * g_elems];
+                let idx_t = &idx[lo * g_elems..hi * g_elems];
+                sc.spawn(move || {
+                    unpool_grad_range(
+                        cfg,
+                        n,
+                        (cg_n, ph, pw),
+                        w_sc,
+                        out_ch,
+                        k,
+                        bp_pad,
+                        (oh, ow),
+                        gs_t,
+                        idx_t,
+                        acc_t,
+                        o_t,
+                    );
+                });
+                lo = hi;
+            }
+        });
+    }
+}
+
+/// Compute pass of the fused unpool + gradient conv over a contiguous
+/// image range. §Perf opt 3: accumulate in [y][x][o] order (contiguous
+/// in the output channel) against the pre-transposed `w_sc` view so
+/// each scatter tap is one long contiguous FMA over out_ch; transpose
+/// back to [o][y][x] at store time. Host layout only.
+#[allow(clippy::too_many_arguments)]
+fn unpool_grad_range(
+    cfg: &HwConfig,
+    nb: usize,
+    (cg_n, ph, pw): (usize, usize, usize),
+    w_sc: &[i32],
+    out_ch: usize,
+    k: usize,
+    bp_pad: usize,
+    (oh, ow): (usize, usize),
+    gs: &[i32],
+    idx: &[u8],
+    acc: &mut [i64],
+    out: &mut [i32],
+) {
+    let q = cfg.q;
+    let g_elems = cg_n * ph * pw;
+    let grad_elems = oh * ow * out_ch;
+    let out_elems = out_ch * oh * ow;
+    let narrow = cfg.q.word_bits <= 16;
+    let (tile_ph, tile_pw) = (cfg.tile_oh.max(2) / 2 * 2, cfg.tile_ow.max(2) / 2 * 2);
+
+    for b in 0..nb {
+        let g_pooled = &gs[b * g_elems..(b + 1) * g_elems];
+        let pool_idx = &idx[b * g_elems..(b + 1) * g_elems];
+        let accb = &mut acc[b * grad_elems..(b + 1) * grad_elems];
+        accb.fill(0);
+        let mut c0 = 0;
+        while c0 < cg_n {
+            let tc = cfg.tile_ic.min(cg_n - c0);
+            let mut py0 = 0;
+            while py0 < ph {
+                let tph = tile_ph.min(ph - py0);
+                let mut px0 = 0;
+                while px0 < pw {
+                    let tpw = tile_pw.min(pw - px0);
                     for cg in c0..c0 + tc {
                         for py in py0..py0 + tph {
                             for px in px0..px0 + tpw {
@@ -475,9 +849,9 @@ pub fn input_grad_unpool_batch(
                                 if gv == 0 {
                                     continue;
                                 }
-                                let idx = pool_idx[pi];
-                                let yy = 2 * py + (idx >> 1) as usize;
-                                let xx = 2 * px + (idx & 1) as usize;
+                                let pidx = pool_idx[pi];
+                                let yy = 2 * py + (pidx >> 1) as usize;
+                                let xx = 2 * px + (pidx & 1) as usize;
                                 for kh in 0..k {
                                     let oy = yy + bp_pad;
                                     if oy < kh || oy - kh >= oh {
@@ -492,7 +866,7 @@ pub fn input_grad_unpool_batch(
                                         let abase = (oy * ow + (oxp - kw)) * out_ch;
                                         let wbase = (cg * k * k + kh * k + kw) * out_ch;
                                         let accs = &mut accb[abase..abase + out_ch];
-                                        let ws = &wsc[wbase..wbase + out_ch];
+                                        let ws = &w_sc[wbase..wbase + out_ch];
                                         if narrow {
                                             for (a, &wv) in accs.iter_mut().zip(ws) {
                                                 *a += (gv * wv) as i64;
@@ -508,39 +882,23 @@ pub fn input_grad_unpool_batch(
                             }
                         }
                     }
+                    px0 += tpw;
                 }
-                // cycles: one MAC group per (image, pooled elem, out_ch,
-                // tap), parallel over the N_oh x N_ow lanes; one pipeline
-                // fill per tile, amortized across the batch
-                let macs = (nb * tc * tph * tpw * out_ch * k * k) as u64;
-                cost.compute_cycles +=
-                    macs.div_ceil(cfg.conv_macs_parallel() as u64) + cfg.pipeline_depth;
-                cost.macs += macs;
-
-                px0 += tpw;
+                py0 += tph;
             }
-            py0 += tph;
+            c0 += tc;
         }
-        c0 += tc;
-    }
-
-    // rescale + store the gradient tensors (transpose back to [o][y][x])
-    let mut outs = Vec::with_capacity(nb);
-    for b in 0..nb {
-        let accb = &acc[b * grad_elems..(b + 1) * grad_elems];
-        let mut out = vec![0i32; out_ch * oh * ow];
+        // rescale + store the gradient tensor (transpose back to [o][y][x])
+        let ob = &mut out[b * out_elems..(b + 1) * out_elems];
         for y in 0..oh {
             for x in 0..ow {
                 let base = (y * ow + x) * out_ch;
                 for o in 0..out_ch {
-                    out[o * oh * ow + y * ow + x] = q.rescale_acc(accb[base + o]);
+                    ob[o * oh * ow + y * ow + x] = q.rescale_acc(accb[base + o]);
                 }
             }
         }
-        dram::write_tile_rows(cfg, cost, (out_ch * oh) as u64, ow as u64);
-        outs.push(out);
     }
-    outs
 }
 
 #[cfg(test)]
@@ -808,6 +1166,67 @@ mod tests {
     }
 
     #[test]
+    fn sharded_forward_bit_exact_and_cost_invariant() {
+        // any shard count yields the exact same slabs AND the exact same
+        // ledger (the cost pass is shard-independent by construction)
+        let mut rng = Pcg32::seeded(57);
+        let q = QFormat::paper16();
+        let (ic, h, w, oc, k, pad) = (3, 12, 12, 8, 3, 1);
+        let nb = 5;
+        let flat = quantize_slice(q, &rand_vec(&mut rng, nb * ic * h * w, -1.0, 1.0));
+        let wg = quantize_slice(q, &rand_vec(&mut rng, oc * ic * k * k, -0.5, 0.5));
+        let bf = quantize_slice(q, &rand_vec(&mut rng, oc, -0.2, 0.2));
+        let c = cfg();
+        #[allow(clippy::too_many_arguments)]
+        fn run(
+            c: &HwConfig,
+            flat: &[i32],
+            nb: usize,
+            shape: (usize, usize, usize),
+            wg: &[i32],
+            oc_k: (usize, usize),
+            bf: &[i32],
+            pad: usize,
+            post: Post,
+            shards: usize,
+        ) -> (Cost, ConvBatchOut) {
+            let mut cost = Cost::new();
+            let mut out = ConvBatchOut::new();
+            forward_batch_into(
+                c,
+                &mut cost,
+                &mut EngineScratch::new(),
+                flat,
+                nb,
+                shape,
+                wg,
+                oc_k,
+                Some(bf),
+                pad,
+                post,
+                shards,
+                &mut out,
+            );
+            (cost, out)
+        }
+        for post in [Post::Plain, Post::Relu, Post::ReluPool] {
+            let (base_cost, base) =
+                run(&c, &flat, nb, (ic, h, w), &wg, (oc, k), &bf, pad, post, 1);
+            for shards in [2, 3, 5, 8] {
+                let (cost, got) =
+                    run(&c, &flat, nb, (ic, h, w), &wg, (oc, k), &bf, pad, post, shards);
+                assert_eq!(got.out, base.out, "post {post:?} shards {shards}");
+                assert_eq!(got.mask, base.mask, "post {post:?} shards {shards}");
+                assert_eq!(got.pooled, base.pooled, "post {post:?} shards {shards}");
+                assert_eq!(got.pool_idx, base.pool_idx, "post {post:?} shards {shards}");
+                assert_eq!(cost.total_cycles(), base_cost.total_cycles());
+                assert_eq!(cost.dram_read_bytes, base_cost.dram_read_bytes);
+                assert_eq!(cost.dram_weight_bytes, base_cost.dram_weight_bytes);
+            }
+        }
+    }
+
+    #[test]
     fn batch_input_grad_unpool_matches_single() {
         let mut rng = Pcg32::seeded(31);
         let q = QFormat::paper16();
@@ -834,6 +1253,47 @@ mod tests {
             );
             assert_eq!(batch[i], single, "image {i} diverged");
             assert_eq!(cb.dram_weight_bytes, cs.dram_weight_bytes);
+        }
+    }
+
+    #[test]
+    fn sharded_unpool_grad_bit_exact() {
+        let mut rng = Pcg32::seeded(59);
+        let q = QFormat::paper16();
+        let (cg, ph, pw, out_ch, k, pad) = (8, 4, 4, 6, 3, 1);
+        let nb = 4;
+        let g_elems = cg * ph * pw;
+        let flat = quantize_slice(q, &rand_vec(&mut rng, nb * g_elems, -1.0, 1.0));
+        let idx: Vec<u8> = (0..nb * g_elems).map(|_| rng.below(4) as u8).collect();
+        let wf = rand_vec(&mut rng, out_ch * cg * k * k, -0.5, 0.5);
+        let wbp = flip_transpose(&quantize_slice(q, &wf), cg, out_ch, k);
+        let w_sc = flip_scatter(&wbp, out_ch, cg, k);
+        let c = cfg();
+        let run = |shards: usize| -> (Cost, Vec<i32>) {
+            let mut cost = Cost::new();
+            let mut out = Vec::new();
+            input_grad_unpool_batch_into(
+                &c,
+                &mut cost,
+                &mut EngineScratch::new(),
+                &flat,
+                nb,
+                (cg, ph, pw),
+                &idx,
+                &w_sc,
+                out_ch,
+                k,
+                pad,
+                shards,
+                &mut out,
+            );
+            (cost, out)
+        };
+        let (base_cost, base) = run(1);
+        for shards in [2, 4, 7] {
+            let (cost, got) = run(shards);
+            assert_eq!(got, base, "shards {shards}");
+            assert_eq!(cost.total_cycles(), base_cost.total_cycles());
         }
     }
 

@@ -113,6 +113,26 @@ impl HwConfig {
     }
 }
 
+/// Reusable engine scratch memory (the host mirror of the on-chip
+/// buffers): the padded-input slab and the accumulator tiles every
+/// `_into` engine entry point works in. Buffers are resized in place and
+/// keep their capacity across calls, so a warm scratch makes the engine
+/// cores allocation-free (DESIGN.md §Plan/Workspace).
+#[derive(Default)]
+pub struct EngineScratch {
+    /// Padded/line-buffered input slab (conv forward).
+    pub xp: Vec<i32>,
+    /// i64 accumulator slab: output tiles (conv/vmm) or the full
+    /// gradient accumulator (fused unpool-conv), one region per image.
+    pub acc: Vec<i64>,
+}
+
+impl EngineScratch {
+    pub fn new() -> EngineScratch {
+        EngineScratch::default()
+    }
+}
+
 /// Execution phase — selects the DRAM access pattern (paper Table I).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Phase {

@@ -10,17 +10,36 @@
 use super::{dram, Cost, HwConfig};
 
 /// 2x2/stride-2 max pool. Returns (pooled [C,H/2,W/2], 2-bit argmax).
+///
+/// Allocate-and-call wrapper over [`maxpool2_into`].
 pub fn maxpool2(
     cfg: &HwConfig,
     cost: &mut Cost,
     x: &[i32],
     (c_n, h, w): (usize, usize, usize),
 ) -> (Vec<i32>, Vec<u8>) {
-    assert_eq!(x.len(), c_n * h * w);
-    assert!(h % 2 == 0 && w % 2 == 0);
     let (ph, pw) = (h / 2, w / 2);
     let mut out = vec![0i32; c_n * ph * pw];
     let mut idx = vec![0u8; c_n * ph * pw];
+    maxpool2_into(cfg, cost, x, (c_n, h, w), &mut out, &mut idx);
+    (out, idx)
+}
+
+/// 2x2/stride-2 max pool into caller-provided buffers (`out`/`idx` must
+/// be [C, H/2, W/2]) — the zero-allocation entry point.
+pub fn maxpool2_into(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    x: &[i32],
+    (c_n, h, w): (usize, usize, usize),
+    out: &mut [i32],
+    idx: &mut [u8],
+) {
+    assert_eq!(x.len(), c_n * h * w);
+    assert!(h % 2 == 0 && w % 2 == 0);
+    let (ph, pw) = (h / 2, w / 2);
+    assert_eq!(out.len(), c_n * ph * pw);
+    assert_eq!(idx.len(), c_n * ph * pw);
     dram::read_tile_rows(cfg, cost, (c_n * h) as u64, w as u64);
     for ch in 0..c_n {
         for py in 0..ph {
@@ -42,10 +61,11 @@ pub fn maxpool2(
     // scan is sequential over windows (II=1, one window/cycle)
     cost.compute_cycles += (c_n * ph * pw) as u64 + cfg.pipeline_depth;
     dram::write_tile_rows(cfg, cost, (c_n * ph) as u64, pw as u64);
-    (out, idx)
 }
 
 /// Unpool: route gradient to the cached argmax position (paper Fig. 5b).
+///
+/// Allocate-and-call wrapper over [`unpool2_into`].
 pub fn unpool2(
     cfg: &HwConfig,
     cost: &mut Cost,
@@ -53,10 +73,27 @@ pub fn unpool2(
     (c_n, ph, pw): (usize, usize, usize),
     idx: &[u8],
 ) -> Vec<i32> {
+    let mut out = vec![0i32; c_n * 2 * ph * 2 * pw];
+    unpool2_into(cfg, cost, g, (c_n, ph, pw), idx, &mut out);
+    out
+}
+
+/// Unpool into a caller-provided [C, 2*PH, 2*PW] buffer — the
+/// zero-allocation entry point. The buffer is fully overwritten (the
+/// 3/4 structurally-zero positions are cleared here).
+pub fn unpool2_into(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    g: &[i32],
+    (c_n, ph, pw): (usize, usize, usize),
+    idx: &[u8],
+    out: &mut [i32],
+) {
     assert_eq!(g.len(), c_n * ph * pw);
     assert_eq!(idx.len(), g.len());
     let (h, w) = (2 * ph, 2 * pw);
-    let mut out = vec![0i32; c_n * h * w];
+    assert_eq!(out.len(), c_n * h * w);
+    out.fill(0);
     dram::read_tile_rows(cfg, cost, (c_n * ph) as u64, pw as u64);
     dram::read(cfg, cost, (g.len() as u64).div_ceil(4), c_n as u64); // 2-bit idx
     for ch in 0..c_n {
@@ -70,6 +107,65 @@ pub fn unpool2(
     }
     cost.compute_cycles += (c_n * ph * pw) as u64 + cfg.pipeline_depth;
     dram::write_tile_rows(cfg, cost, (c_n * h) as u64, w as u64);
+}
+
+// ---------------------------------------------------------------------------
+// 2-bit argmax packing (paper §III-D / §V): the index mask the hardware
+// keeps on-chip is 2 bits per pooled element. The host state mirrors
+// that density by packing 4 indices per byte; the engines consume the
+// unpacked u8 form (the DRAM-traffic model already charges the packed
+// density via `div_ceil(4)`, unchanged).
+// ---------------------------------------------------------------------------
+
+/// Bytes needed for `elems` packed 2-bit indices.
+pub fn packed2_len(elems: usize) -> usize {
+    elems.div_ceil(4)
+}
+
+/// Pack a flat [nb, elems] slab of 2-bit indices, 4 per byte, into
+/// `out` ([nb, ceil(elems/4)], per-image byte-aligned). Resizes `out`
+/// in place (capacity reused — allocation-free when warm).
+pub fn pack2_slab_into(idx: &[u8], nb: usize, elems: usize, out: &mut Vec<u8>) {
+    assert_eq!(idx.len(), nb * elems);
+    let stride = packed2_len(elems);
+    out.resize(nb * stride, 0);
+    out.fill(0);
+    for b in 0..nb {
+        let src = &idx[b * elems..(b + 1) * elems];
+        let dst = &mut out[b * stride..(b + 1) * stride];
+        for (i, &v) in src.iter().enumerate() {
+            debug_assert!(v < 4, "argmax index out of 2-bit range");
+            dst[i / 4] |= (v & 3) << ((i % 4) * 2);
+        }
+    }
+}
+
+/// Unpack a flat [nb, ceil(elems/4)] packed slab back to one index per
+/// byte ([nb, elems]). Resizes `out` in place.
+pub fn unpack2_slab_into(packed: &[u8], nb: usize, elems: usize, out: &mut Vec<u8>) {
+    let stride = packed2_len(elems);
+    assert_eq!(packed.len(), nb * stride);
+    out.resize(nb * elems, 0);
+    for b in 0..nb {
+        let src = &packed[b * stride..(b + 1) * stride];
+        let dst = &mut out[b * elems..(b + 1) * elems];
+        for (i, d) in dst.iter_mut().enumerate() {
+            *d = (src[i / 4] >> ((i % 4) * 2)) & 3;
+        }
+    }
+}
+
+/// Pack one image's indices (convenience over [`pack2_slab_into`]).
+pub fn pack2(idx: &[u8]) -> Vec<u8> {
+    let mut out = Vec::new();
+    pack2_slab_into(idx, 1, idx.len(), &mut out);
+    out
+}
+
+/// Unpack one image's indices (convenience over [`unpack2_slab_into`]).
+pub fn unpack2(packed: &[u8], elems: usize) -> Vec<u8> {
+    let mut out = Vec::new();
+    unpack2_slab_into(packed, 1, elems, &mut out);
     out
 }
 
@@ -135,6 +231,27 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn pack2_roundtrips_and_is_4x_denser() {
+        let mut rng = crate::util::rng::Pcg32::seeded(11);
+        for elems in [1usize, 3, 4, 5, 16, 63, 64] {
+            for nb in [1usize, 2, 5] {
+                let idx: Vec<u8> = (0..nb * elems).map(|_| rng.below(4) as u8).collect();
+                let mut packed = Vec::new();
+                pack2_slab_into(&idx, nb, elems, &mut packed);
+                assert_eq!(packed.len(), nb * packed2_len(elems));
+                assert!(packed.len() * 4 >= idx.len());
+                let mut back = Vec::new();
+                unpack2_slab_into(&packed, nb, elems, &mut back);
+                assert_eq!(back, idx, "nb={nb} elems={elems}");
+            }
+        }
+        // single-image convenience forms agree with the slab forms
+        let idx: Vec<u8> = (0..13).map(|_| rng.below(4) as u8).collect();
+        assert_eq!(unpack2(&pack2(&idx), idx.len()), idx);
+        assert_eq!(pack2(&idx).len(), packed2_len(13));
     }
 
     #[test]

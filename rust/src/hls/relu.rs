@@ -23,6 +23,8 @@ pub enum MaskSource<'a> {
 }
 
 /// Apply the method's ReLU backward dataflow to a gradient tensor.
+///
+/// Allocate-and-call wrapper over [`backward_in_place`].
 pub fn backward(
     cfg: &HwConfig,
     cost: &mut Cost,
@@ -30,28 +32,51 @@ pub fn backward(
     g: &[i32],
     mask: MaskSource<'_>,
 ) -> Vec<i32> {
+    let mut out = g.to_vec();
+    backward_in_place(cfg, cost, method, &mut out, mask);
+    out
+}
+
+/// The elementwise ReLU backward core, mutating the gradient in place —
+/// the zero-allocation entry point the workspace-driven attribute path
+/// uses (the hardware unit is in-place too: it streams the gradient
+/// tile through the ALU lanes and writes it back).
+pub fn backward_in_place(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    method: Method,
+    g: &mut [i32],
+    mask: MaskSource<'_>,
+) {
     let n = g.len();
     // gradient tile streams through the elementwise unit; throughput is
     // limited by the DRAM stream, one elem/cycle through the ALU lanes
     dram::read_contig(cfg, cost, n as u64);
-    let out: Vec<i32> = match (&mask, method) {
-        (_, Method::Deconvnet) => g.iter().map(|&v| v.max(0)).collect(),
+    match (&mask, method) {
+        (_, Method::Deconvnet) => {
+            for v in g.iter_mut() {
+                *v = (*v).max(0);
+            }
+        }
         (MaskSource::OnChip(m), _) => {
             assert_eq!(m.len(), n, "mask length mismatch");
-            g.iter().zip(m.iter()).map(|(&v, &b)| method.relu_bwd_raw(b, v)).collect()
+            for (v, &b) in g.iter_mut().zip(m.iter()) {
+                *v = method.relu_bwd_raw(b, *v);
+            }
         }
         (MaskSource::FromDram(act), _) => {
             assert_eq!(act.len(), n, "activation length mismatch");
             // charge the activation reload (the §V trade: traffic, not BRAM)
             dram::read_contig(cfg, cost, n as u64);
-            g.iter().zip(act.iter()).map(|(&v, &a)| method.relu_bwd_raw(a > 0, v)).collect()
+            for (v, &a) in g.iter_mut().zip(act.iter()) {
+                *v = method.relu_bwd_raw(a > 0, *v);
+            }
         }
         (MaskSource::None, m) => panic!("method {m} requires a mask source"),
-    };
+    }
     let lanes = cfg.conv_macs_parallel() as u64;
     cost.compute_cycles += (n as u64).div_ceil(lanes) + cfg.pipeline_depth;
     dram::write_contig(cfg, cost, n as u64);
-    out
 }
 
 #[cfg(test)]

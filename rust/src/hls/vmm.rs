@@ -5,12 +5,17 @@
 //! manner from DRAM" — modeled as a strided (per-element-burst) load
 //! pattern whose traffic the cost ledger charges accordingly.
 //!
-//! Both directions have batch-N entry points (`forward_batch`,
-//! `backward_batch`) that fetch each weight tile once per batch; the
-//! single-image functions are batch-of-one wrappers, so batched and
-//! single execution are bit-exact by construction (DESIGN.md §Batching).
+//! Both directions have batch-N `_into` cores ([`forward_batch_into`],
+//! [`backward_batch_into`]) that fetch each weight tile once per batch,
+//! work in caller-provided flat slabs (zero steady-state allocations),
+//! and shard the per-image loops across scoped threads — each image
+//! owns a disjoint accumulator/output region and runs the batch=1 loop
+//! order, so sharding is bit-exact by construction and the `Cost`
+//! ledger (charged by a separate single-threaded pass) is
+//! shard-invariant. The `Vec`-returning signatures are thin
+//! allocate-and-call wrappers (DESIGN.md §Batching, §Plan/Workspace).
 
-use super::{dram, Cost, HwConfig};
+use super::{dram, Cost, EngineScratch, HwConfig};
 
 /// FP fully-connected: `w` is [OUT,IN] row-major raw Q, `x` is [IN].
 /// Returns `[OUT]`. If `relu_mask` is Some, ReLU is fused into the
@@ -36,12 +41,9 @@ pub fn forward(
     outs.pop().expect("batch of one")
 }
 
-/// Batch-N FP fully-connected (the tentpole batching path): each weight
-/// tile is fetched from DRAM once per batch and multiplied against every
-/// image's input tile while it sits in the on-chip buffer. Per-image
-/// arithmetic is independent (one accumulator lane group per image, same
-/// order as batch=1), so results are bit-exact with [`forward`]. When
-/// `relu_masks` is Some it must hold one `vec![false; out_n]` per image.
+/// Batch-N FP fully-connected: allocate-and-call wrapper over
+/// [`forward_batch_into`]. When `relu_masks` is Some it must hold one
+/// `vec![false; out_n]` per image.
 pub fn forward_batch(
     cfg: &HwConfig,
     cost: &mut Cost,
@@ -49,41 +51,162 @@ pub fn forward_batch(
     (out_n, in_n): (usize, usize),
     xs: &[&[i32]],
     bias: Option<&[i32]>,
-    mut relu_masks: Option<&mut Vec<Vec<bool>>>,
+    relu_masks: Option<&mut Vec<Vec<bool>>>,
 ) -> Vec<Vec<i32>> {
     let nb = xs.len();
     assert!(nb > 0, "empty batch");
-    assert_eq!(w.len(), out_n * in_n);
-    for x in xs {
-        assert_eq!(x.len(), in_n);
-    }
-    if let Some(ms) = relu_masks.as_deref_mut() {
+    if let Some(ms) = relu_masks.as_deref() {
         assert_eq!(ms.len(), nb, "one relu mask per image");
         for m in ms.iter() {
             assert_eq!(m.len(), out_n, "mask length mismatch");
         }
     }
-    let q = cfg.q;
-    let mut outs = vec![vec![0i32; out_n]; nb];
-    let mut acc = vec![0i64; nb * cfg.vmm_tile];
+    let mut flat = Vec::with_capacity(nb * in_n);
+    for x in xs {
+        assert_eq!(x.len(), in_n);
+        flat.extend_from_slice(x);
+    }
+    let mut scratch = EngineScratch::new();
+    let mut outs = Vec::new();
+    let mut mask_flat = relu_masks.as_ref().map(|_| vec![false; nb * out_n]);
+    forward_batch_into(
+        cfg,
+        cost,
+        &mut scratch,
+        w,
+        (out_n, in_n),
+        &flat,
+        nb,
+        bias,
+        mask_flat.as_deref_mut(),
+        1,
+        &mut outs,
+    );
+    if let (Some(ms), Some(flat_m)) = (relu_masks, mask_flat) {
+        for (b, m) in ms.iter_mut().enumerate() {
+            m.copy_from_slice(&flat_m[b * out_n..(b + 1) * out_n]);
+        }
+    }
+    (0..nb).map(|b| outs[b * out_n..(b + 1) * out_n].to_vec()).collect()
+}
 
+/// Batch-N FP fully-connected core: each weight tile is fetched from
+/// DRAM once per batch and multiplied against every image's input tile
+/// while it sits in the on-chip buffer. `xs` is a flat [nb, IN] slab;
+/// outputs land in the reusable `outs` slab ([nb, OUT]); `masks`, when
+/// present, is a flat [nb, OUT] slab. Cost pass + image-sharded compute
+/// pass — bit-exact with [`forward`] for any shard count.
+#[allow(clippy::too_many_arguments)]
+pub fn forward_batch_into(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    scratch: &mut EngineScratch,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    xs: &[i32],
+    nb: usize,
+    bias: Option<&[i32]>,
+    masks: Option<&mut [bool]>,
+    shards: usize,
+    outs: &mut Vec<i32>,
+) {
+    assert!(nb > 0, "empty batch");
+    assert_eq!(w.len(), out_n * in_n);
+    assert_eq!(xs.len(), nb * in_n);
+    if let Some(ms) = masks.as_deref() {
+        assert_eq!(ms.len(), nb * out_n, "mask slab length mismatch");
+    }
+    outs.resize(nb * out_n, 0);
+    scratch.acc.resize(nb * cfg.vmm_tile, 0);
+
+    // --- cost pass ----------------------------------------------------
     let mut o0 = 0;
     while o0 < out_n {
         let to = cfg.vmm_tile.min(out_n - o0);
-        acc.fill(0);
         let mut i0 = 0;
         while i0 < in_n {
             let ti = cfg.vmm_in_tile.min(in_n - i0);
-            // loads: x tile (contiguous) per image, W tile (one burst per
-            // out row) ONCE per batch — the batching win
+            // loads: x tile (contiguous) per image, W tile (one burst
+            // per out row) ONCE per batch — the batching win
             for _ in 0..nb {
                 dram::read_contig(cfg, cost, ti as u64);
             }
             dram::read_weights(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
-            // MAC loop: vmm_tile parallel lanes over the output elements
-            for (b, x) in xs.iter().enumerate() {
-                let accb = &mut acc[b * cfg.vmm_tile..b * cfg.vmm_tile + to];
-                for (o, a) in accb.iter_mut().enumerate() {
+            // cycles: ti iterations per image, `to` lanes unrolled
+            // (partial tiles still occupy the full block); one fill per
+            // tile
+            cost.compute_cycles += nb as u64 * ti as u64 + cfg.pipeline_depth;
+            cost.macs += (nb * to * ti) as u64;
+            i0 += ti;
+        }
+        for _ in 0..nb {
+            dram::write_contig(cfg, cost, to as u64);
+        }
+        o0 += to;
+    }
+
+    // --- compute pass: shard the batch across threads -----------------
+    let shards = shards.clamp(1, nb);
+    let masks: &mut [bool] = masks.unwrap_or(&mut []);
+    if shards == 1 {
+        fwd_range(cfg, nb, w, (out_n, in_n), xs, bias, &mut scratch.acc, outs, masks);
+    } else {
+        std::thread::scope(|sc| {
+            let mut acc: &mut [i64] = &mut scratch.acc;
+            let mut o: &mut [i32] = outs;
+            let mut m: &mut [bool] = masks;
+            let mask_stride = if m.is_empty() { 0 } else { out_n };
+            let mut lo = 0;
+            for t in 0..shards {
+                let hi = (t + 1) * nb / shards;
+                let n = hi - lo;
+                let tmp = acc;
+                let (acc_t, rest) = tmp.split_at_mut(n * cfg.vmm_tile);
+                acc = rest;
+                let tmp = o;
+                let (o_t, rest) = tmp.split_at_mut(n * out_n);
+                o = rest;
+                let tmp = m;
+                let (m_t, rest) = tmp.split_at_mut(n * mask_stride);
+                m = rest;
+                let xs_t = &xs[lo * in_n..hi * in_n];
+                sc.spawn(move || {
+                    fwd_range(cfg, n, w, (out_n, in_n), xs_t, bias, acc_t, o_t, m_t);
+                });
+                lo = hi;
+            }
+        });
+    }
+}
+
+/// FP compute pass over a contiguous image range (per-image loop order
+/// identical to batch=1 — sharding is bit-exact).
+#[allow(clippy::too_many_arguments)]
+fn fwd_range(
+    cfg: &HwConfig,
+    nb: usize,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    xs: &[i32],
+    bias: Option<&[i32]>,
+    acc: &mut [i64],
+    outs: &mut [i32],
+    masks: &mut [bool],
+) {
+    let q = cfg.q;
+    for b in 0..nb {
+        let x = &xs[b * in_n..(b + 1) * in_n];
+        let accb = &mut acc[b * cfg.vmm_tile..(b + 1) * cfg.vmm_tile];
+        let ob = &mut outs[b * out_n..(b + 1) * out_n];
+        let mut o0 = 0;
+        while o0 < out_n {
+            let to = cfg.vmm_tile.min(out_n - o0);
+            accb[..to].fill(0);
+            let mut i0 = 0;
+            while i0 < in_n {
+                let ti = cfg.vmm_in_tile.min(in_n - i0);
+                // MAC loop: vmm_tile parallel lanes over the outputs
+                for (o, a) in accb[..to].iter_mut().enumerate() {
                     let row = (o0 + o) * in_n;
                     let mut s = 0i64;
                     for i in 0..ti {
@@ -91,32 +214,24 @@ pub fn forward_batch(
                     }
                     *a += s;
                 }
+                i0 += ti;
             }
-            // cycles: ti iterations per image, `to` lanes unrolled (partial
-            // tiles still occupy the full block); one fill per tile
-            cost.compute_cycles += nb as u64 * ti as u64 + cfg.pipeline_depth;
-            cost.macs += (nb * to * ti) as u64;
-            i0 += ti;
-        }
-        for b in 0..nb {
             for o in 0..to {
-                let mut v = q.rescale_acc(acc[b * cfg.vmm_tile + o]);
+                let mut v = q.rescale_acc(accb[o]);
                 if let Some(bs) = bias {
                     v = q.add(v, bs[o0 + o]);
                 }
-                if let Some(ms) = relu_masks.as_deref_mut() {
-                    ms[b][o0 + o] = v > 0;
+                if !masks.is_empty() {
+                    masks[b * out_n + o0 + o] = v > 0;
                     if v < 0 {
                         v = 0;
                     }
                 }
-                outs[b][o0 + o] = v;
+                ob[o0 + o] = v;
             }
-            dram::write_contig(cfg, cost, to as u64);
+            o0 += to;
         }
-        o0 += to;
     }
-    outs
 }
 
 /// BP fully-connected: gx = Wᵀ·g. Same compute block; the weight tile
@@ -133,9 +248,8 @@ pub fn backward(
     backward_batch(cfg, cost, w, dims, &[g]).pop().expect("batch of one")
 }
 
-/// Batch-N BP fully-connected: gx = Wᵀ·g for every gradient in the
-/// batch, with each (transpose-manner) weight tile fetched once per
-/// batch. Bit-exact with [`backward`] per image.
+/// Batch-N BP fully-connected: allocate-and-call wrapper over
+/// [`backward_batch_into`]. Bit-exact with [`backward`] per image.
 pub fn backward_batch(
     cfg: &HwConfig,
     cost: &mut Cost,
@@ -145,55 +259,133 @@ pub fn backward_batch(
 ) -> Vec<Vec<i32>> {
     let nb = gs.len();
     assert!(nb > 0, "empty batch");
-    assert_eq!(w.len(), out_n * in_n);
+    let mut flat = Vec::with_capacity(nb * out_n);
     for g in gs {
         assert_eq!(g.len(), out_n);
+        flat.extend_from_slice(g);
     }
-    let q = cfg.q;
-    let mut outs = vec![vec![0i32; in_n]; nb];
-    let mut acc = vec![0i64; nb * cfg.vmm_tile];
+    let mut scratch = EngineScratch::new();
+    let mut outs = Vec::new();
+    backward_batch_into(cfg, cost, &mut scratch, w, (out_n, in_n), &flat, nb, 1, &mut outs);
+    (0..nb).map(|b| outs[b * in_n..(b + 1) * in_n].to_vec()).collect()
+}
 
+/// Batch-N BP fully-connected core: gx = Wᵀ·g for every gradient in
+/// the flat [nb, OUT] slab, with each (transpose-manner) weight tile
+/// fetched once per batch; results land in the reusable [nb, IN] slab.
+/// Cost pass + image-sharded compute pass — bit-exact with
+/// [`backward`] for any shard count.
+#[allow(clippy::too_many_arguments)]
+pub fn backward_batch_into(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    scratch: &mut EngineScratch,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    gs: &[i32],
+    nb: usize,
+    shards: usize,
+    outs: &mut Vec<i32>,
+) {
+    assert!(nb > 0, "empty batch");
+    assert_eq!(w.len(), out_n * in_n);
+    assert_eq!(gs.len(), nb * out_n);
+    outs.resize(nb * in_n, 0);
+    scratch.acc.resize(nb * cfg.vmm_tile, 0);
+
+    // --- cost pass ----------------------------------------------------
     let mut i0 = 0;
     while i0 < in_n {
         let ti = cfg.vmm_tile.min(in_n - i0); // output elements of BP
-        acc.fill(0);
         let mut o0 = 0;
         while o0 < out_n {
             let to = cfg.vmm_in_tile.min(out_n - o0); // reduction extent
             for _ in 0..nb {
                 dram::read_contig(cfg, cost, to as u64);
             }
-            // transpose load: W[o0..o0+to, i0..i0+ti] fetched column-major;
-            // every element of a column is strided by in_n in DRAM, so the
-            // fetch degenerates to one short burst per *row segment*
-            // touched: `to` bursts (vs the FP path's `to`-rows-as-one-
-            // tile pattern costing vmm_tile bursts) — the price of the
-            // paper's transpose-manner access pattern. Fetched once per
-            // batch.
+            // transpose load: W[o0..o0+to, i0..i0+ti] fetched column-
+            // major; every element of a column is strided by in_n in
+            // DRAM, so the fetch degenerates to one short burst per
+            // *row segment* touched: `to` bursts (vs the FP path's
+            // `to`-rows-as-one-tile pattern costing vmm_tile bursts) —
+            // the price of the paper's transpose-manner access pattern.
+            // Fetched once per batch.
             dram::read_weights(cfg, cost, (to * ti * cfg.word_bytes()) as u64, to as u64);
-            for (b, g) in gs.iter().enumerate() {
-                let accb = &mut acc[b * cfg.vmm_tile..b * cfg.vmm_tile + ti];
-                for (i, a) in accb.iter_mut().enumerate() {
+            cost.compute_cycles += nb as u64 * to as u64 + cfg.pipeline_depth;
+            cost.macs += (nb * to * ti) as u64;
+            o0 += to;
+        }
+        for _ in 0..nb {
+            dram::write_contig(cfg, cost, ti as u64);
+        }
+        i0 += ti;
+    }
+
+    // --- compute pass: shard the batch across threads -----------------
+    let shards = shards.clamp(1, nb);
+    if shards == 1 {
+        bwd_range(cfg, nb, w, (out_n, in_n), gs, &mut scratch.acc, outs);
+    } else {
+        std::thread::scope(|sc| {
+            let mut acc: &mut [i64] = &mut scratch.acc;
+            let mut o: &mut [i32] = outs;
+            let mut lo = 0;
+            for t in 0..shards {
+                let hi = (t + 1) * nb / shards;
+                let n = hi - lo;
+                let tmp = acc;
+                let (acc_t, rest) = tmp.split_at_mut(n * cfg.vmm_tile);
+                acc = rest;
+                let tmp = o;
+                let (o_t, rest) = tmp.split_at_mut(n * in_n);
+                o = rest;
+                let gs_t = &gs[lo * out_n..hi * out_n];
+                sc.spawn(move || {
+                    bwd_range(cfg, n, w, (out_n, in_n), gs_t, acc_t, o_t);
+                });
+                lo = hi;
+            }
+        });
+    }
+}
+
+/// BP compute pass over a contiguous image range.
+fn bwd_range(
+    cfg: &HwConfig,
+    nb: usize,
+    w: &[i32],
+    (out_n, in_n): (usize, usize),
+    gs: &[i32],
+    acc: &mut [i64],
+    outs: &mut [i32],
+) {
+    let q = cfg.q;
+    for b in 0..nb {
+        let g = &gs[b * out_n..(b + 1) * out_n];
+        let accb = &mut acc[b * cfg.vmm_tile..(b + 1) * cfg.vmm_tile];
+        let ob = &mut outs[b * in_n..(b + 1) * in_n];
+        let mut i0 = 0;
+        while i0 < in_n {
+            let ti = cfg.vmm_tile.min(in_n - i0);
+            accb[..ti].fill(0);
+            let mut o0 = 0;
+            while o0 < out_n {
+                let to = cfg.vmm_in_tile.min(out_n - o0);
+                for (i, a) in accb[..ti].iter_mut().enumerate() {
                     let mut s = 0i64;
                     for o in 0..to {
                         s += w[(o0 + o) * in_n + i0 + i] as i64 * g[o0 + o] as i64;
                     }
                     *a += s;
                 }
+                o0 += to;
             }
-            cost.compute_cycles += nb as u64 * to as u64 + cfg.pipeline_depth;
-            cost.macs += (nb * to * ti) as u64;
-            o0 += to;
-        }
-        for (b, out) in outs.iter_mut().enumerate() {
             for i in 0..ti {
-                out[i0 + i] = q.rescale_acc(acc[b * cfg.vmm_tile + i]);
+                ob[i0 + i] = q.rescale_acc(accb[i]);
             }
-            dram::write_contig(cfg, cost, ti as u64);
+            i0 += ti;
         }
-        i0 += ti;
     }
-    outs
 }
 
 #[cfg(test)]
@@ -336,6 +528,68 @@ mod tests {
             let single = backward(&cfg, &mut cs, &wf, (out_n, in_n), g);
             assert_eq!(bb[i], single, "image {i} bp diverged");
             assert_eq!(cbb.dram_weight_bytes, cs.dram_weight_bytes);
+        }
+    }
+
+    #[test]
+    fn sharded_vmm_bit_exact_and_cost_invariant() {
+        let mut rng = Pcg32::seeded(61);
+        let q = QFormat::paper16();
+        let (out_n, in_n) = (40, 300);
+        let nb = 5;
+        let w = quantize_slice(q, &rand_vec(&mut rng, out_n * in_n, -0.1, 0.1));
+        let b = quantize_slice(q, &rand_vec(&mut rng, out_n, -0.5, 0.5));
+        let xs = quantize_slice(q, &rand_vec(&mut rng, nb * in_n, -1.0, 1.0));
+        let gs = quantize_slice(q, &rand_vec(&mut rng, nb * out_n, -1.0, 1.0));
+        let cfg = HwConfig::pynq_z2();
+
+        let fwd = |shards: usize| -> (Cost, Vec<i32>, Vec<bool>) {
+            let mut cost = Cost::new();
+            let mut out = Vec::new();
+            let mut mask = vec![false; nb * out_n];
+            forward_batch_into(
+                &cfg,
+                &mut cost,
+                &mut EngineScratch::new(),
+                &w,
+                (out_n, in_n),
+                &xs,
+                nb,
+                Some(&b),
+                Some(&mut mask),
+                shards,
+                &mut out,
+            );
+            (cost, out, mask)
+        };
+        let bwd = |shards: usize| -> (Cost, Vec<i32>) {
+            let mut cost = Cost::new();
+            let mut out = Vec::new();
+            backward_batch_into(
+                &cfg,
+                &mut cost,
+                &mut EngineScratch::new(),
+                &w,
+                (out_n, in_n),
+                &gs,
+                nb,
+                shards,
+                &mut out,
+            );
+            (cost, out)
+        };
+        let (base_cost, base, base_mask) = fwd(1);
+        let (bb_cost, bb) = bwd(1);
+        for shards in [2, 3, 5, 9] {
+            let (cost, got, mask) = fwd(shards);
+            assert_eq!(got, base, "fp shards {shards}");
+            assert_eq!(mask, base_mask, "fp mask shards {shards}");
+            assert_eq!(cost.total_cycles(), base_cost.total_cycles());
+            assert_eq!(cost.dram_bursts, base_cost.dram_bursts);
+
+            let (cost, got) = bwd(shards);
+            assert_eq!(got, bb, "bp shards {shards}");
+            assert_eq!(cost.total_cycles(), bb_cost.total_cycles());
         }
     }
 

@@ -203,7 +203,8 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("verify", "0.1", "shadow-verify fraction on the PJRT golden path")
         .opt("method", "", "fix one method (default: cycle all three)")
         .opt("batch", "1", "micro-batch: max same-method requests per device pass")
-        .opt("batch-wait", "2", "ms a worker lingers to fill its micro-batch");
+        .opt("batch-wait", "2", "ms a worker lingers to fill its micro-batch")
+        .opt("shards", "0", "compute threads per worker batch pass (0 = auto)");
     let args = parse_or_exit(cmd, argv);
     let board = board_of(&args);
     let (sim, manifest, params) = match build_sim(board) {
@@ -218,6 +219,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         freq_mhz: fpga::TARGET_FREQ_MHZ,
         max_batch: args.parse_num("batch", 1),
         max_wait_ms: args.parse_num("batch-wait", 2),
+        shards: args.parse_num("shards", 0),
     };
     let artifacts = if verify > 0.0 { Some((manifest, params)) } else { None };
     let coord = match Coordinator::start(sim, cfg, artifacts) {

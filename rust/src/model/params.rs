@@ -58,6 +58,40 @@ impl Params {
         Ok(Params { tensors })
     }
 
+    /// Synthetic He-initialized parameters for any network over the
+    /// layer vocabulary (seeded PRNG — fully deterministic). Benches
+    /// and tests use this when trained artifacts are absent: DRAM
+    /// traffic and cycle accounting are weight-value-independent, so
+    /// perf numbers on synthetic weights equal those on trained ones.
+    pub fn synthetic(net: &crate::model::Network, seed: u64) -> Params {
+        use crate::model::Layer;
+        use crate::util::rng::Pcg32;
+        let mut rng = Pcg32::seeded(seed);
+        let mut tensors = BTreeMap::new();
+        let mut add = |name: String, shape: Vec<usize>, rng: &mut Pcg32, scale: f32| {
+            let n: usize = shape.iter().product();
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+            tensors.insert(name, Tensor { shape, data });
+        };
+        for layer in &net.layers {
+            match layer {
+                Layer::Conv { name, in_ch, out_ch, k, .. } => {
+                    let wn = out_ch * in_ch * k * k;
+                    let scale = (2.0 / wn as f32).sqrt();
+                    add(format!("{name}_w"), vec![*out_ch, *in_ch, *k, *k], &mut rng, scale);
+                    add(format!("{name}_b"), vec![*out_ch], &mut rng, 0.05);
+                }
+                Layer::Fc { name, in_dim, out_dim } => {
+                    let scale = (2.0 / *in_dim as f32).sqrt();
+                    add(format!("{name}_w"), vec![*out_dim, *in_dim], &mut rng, scale);
+                    add(format!("{name}_b"), vec![*out_dim], &mut rng, 0.05);
+                }
+                _ => {}
+            }
+        }
+        Params { tensors }
+    }
+
     pub fn get(&self, name: &str) -> anyhow::Result<&Tensor> {
         self.tensors
             .get(name)

@@ -9,49 +9,33 @@
 //! option executes pool/unpool as standalone passes instead — the
 //! ablation that isolates how much the fusion buys (EXPERIMENTS.md E9).
 //!
-//! The batch-N path ([`Simulator::forward_batch`] /
-//! [`Simulator::attribute_batch`]) executes a whole batch layer-major on
-//! the batched engine entry points, so every weight tile is fetched
-//! once per batch, and keeps one FP mask/activation arena
-//! ([`FpBatchState`]) shared across the batch. Per-image results are
-//! bit-exact with the single-image path (property-tested).
+//! Since the Plan/Workspace refactor (DESIGN.md §Plan/Workspace memory
+//! architecture) the compiled model lives in an immutable [`Plan`]
+//! shared behind an `Arc` — a [`Simulator`] is a cheap handle (plan +
+//! execution config) that clones without duplicating weights. The one
+//! true execution path is [`Simulator::attribute_batch_into`]: it walks
+//! the plan on the flat-slab engine cores inside a reusable
+//! [`Workspace`] arena (zero heap allocations once warm) and shards the
+//! per-image engine loops across `Workspace::shards` threads,
+//! bit-exactly for any shard count. `attribute` / `attribute_batch`
+//! are allocate-and-call wrappers over that core; the stepwise
+//! `forward`/`backward` pair remains for callers that need the FP
+//! state between phases and delegates to the same engine cores.
 
 pub mod pipeline;
+pub mod plan;
+
+pub use plan::{auto_shards, BatchOutput, Plan, Workspace};
+
+use std::sync::Arc;
 
 use crate::attribution::Method;
 use crate::fx::QFormat;
 use crate::hls::conv::{self, Post};
 use crate::hls::relu::{self, MaskSource};
 use crate::hls::{pool, vmm, Cost, HwConfig};
-use crate::model::{Layer, Network, Params, Shape};
-
-/// One fused execution unit of the plan.
-#[derive(Clone, Debug)]
-enum Unit {
-    Conv {
-        name: String,
-        w: Vec<i32>,     // [O,I,K,K] — FP view
-        w_bp: Vec<i32>,  // flipped-transposed view (Table I BP load)
-        bias: Vec<i32>,
-        in_shape: (usize, usize, usize),
-        out_ch: usize,
-        k: usize,
-        pad: usize,
-        relu: bool,
-        pool: bool,
-    },
-    Pool {
-        in_shape: (usize, usize, usize),
-    },
-    Fc {
-        name: String,
-        w: Vec<i32>, // [OUT,IN]
-        out_n: usize,
-        in_n: usize,
-        bias: Vec<i32>,
-        relu: bool,
-    },
-}
+use crate::model::{Network, Params};
+use plan::Unit;
 
 /// Per-image state the FP pass leaves behind for BP: exactly the data
 /// the paper keeps (DRAM activations + on-chip masks), nothing more.
@@ -60,10 +44,19 @@ pub struct FpState {
     /// Post-ReLU activation each conv unit left in DRAM (pooled when the
     /// unit has a fused pool — only pooled values travel to DRAM).
     dram_acts: Vec<Option<Vec<i32>>>,
-    /// 2-bit pool argmax masks (on-chip BRAM).
+    /// 2-bit pool argmax masks (on-chip BRAM), packed 4 per byte —
+    /// the §V mask-memory density.
     pool_idx: Vec<Option<Vec<u8>>>,
     /// FC ReLU masks (on-chip BRAM, the 128-bit mask).
     fc_masks: Vec<Option<Vec<bool>>>,
+}
+
+impl FpState {
+    /// Host bytes of the packed 2-bit pool argmax store (4 indices per
+    /// byte — matches `attribution::memory::pool_mask_bytes`).
+    pub fn pool_mask_bytes(&self) -> usize {
+        self.pool_idx.iter().flatten().map(|v| v.len()).sum()
+    }
 }
 
 /// Forward result.
@@ -92,10 +85,23 @@ pub struct AttrResult {
 pub struct FpBatchState {
     /// Per unit, per image: post-ReLU activation left in DRAM.
     dram_acts: Vec<Option<Vec<Vec<i32>>>>,
-    /// Per unit, per image: 2-bit pool argmax masks (on-chip BRAM).
+    /// Per unit, per image: 2-bit pool argmax masks, packed 4 per byte.
     pool_idx: Vec<Option<Vec<Vec<u8>>>>,
     /// Per unit, per image: FC ReLU masks (on-chip BRAM).
     fc_masks: Vec<Option<Vec<Vec<bool>>>>,
+}
+
+impl FpBatchState {
+    /// Host bytes of the packed 2-bit pool argmax store for the whole
+    /// batch.
+    pub fn pool_mask_bytes(&self) -> usize {
+        self.pool_idx
+            .iter()
+            .flatten()
+            .flat_map(|per_img| per_img.iter())
+            .map(|v| v.len())
+            .sum()
+    }
 }
 
 /// Batched forward result.
@@ -140,89 +146,52 @@ impl Default for AttrOptions {
     }
 }
 
-/// The accelerator simulator: a network compiled onto a hardware
-/// configuration, ready to evaluate images.
+/// The accelerator simulator: a shared execution [`Plan`] plus the
+/// hardware configuration to run it under. Cloning is cheap (an `Arc`
+/// bump) — workers and devices share one copy of the quantized model.
+#[derive(Clone)]
 pub struct Simulator {
-    pub net: Network,
+    plan: Arc<Plan>,
     pub cfg: HwConfig,
-    units: Vec<Unit>,
+}
+
+impl std::ops::Deref for Simulator {
+    type Target = Plan;
+    fn deref(&self) -> &Plan {
+        &self.plan
+    }
 }
 
 impl Simulator {
-    /// Quantize parameters and build the fused execution plan.
+    /// Quantize parameters and build a fresh (unshared) plan.
     pub fn new(net: Network, params: &Params, cfg: HwConfig) -> anyhow::Result<Simulator> {
+        Ok(Simulator::from_plan(Arc::new(Plan::new(net, params, cfg)?)))
+    }
+
+    /// A simulator over an existing shared plan, executing under the
+    /// plan's own configuration.
+    pub fn from_plan(plan: Arc<Plan>) -> Simulator {
+        let cfg = plan.cfg;
+        Simulator { plan, cfg }
+    }
+
+    /// A simulator over an existing shared plan under a *different*
+    /// tiling/unroll configuration. The fixed-point format must match
+    /// the plan's (quantized weights depend only on `q`); results are
+    /// bit-identical across configurations (property P2), only the
+    /// cycle model changes.
+    pub fn with_config(plan: Arc<Plan>, cfg: HwConfig) -> anyhow::Result<Simulator> {
         cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
-        let q = cfg.q;
-        let quant = |t: &crate::model::Tensor| -> Vec<i32> {
-            t.data.iter().map(|&v| q.from_f32(v)).collect()
-        };
-        let mut units = Vec::new();
-        let mut i = 0;
-        while i < net.layers.len() {
-            match &net.layers[i] {
-                Layer::Conv { name, in_ch, out_ch, k, pad } => {
-                    let (wt, bt) = params.conv(name)?;
-                    anyhow::ensure!(
-                        wt.shape == vec![*out_ch, *in_ch, *k, *k],
-                        "{name}: weight shape {:?} != layer dims",
-                        wt.shape
-                    );
-                    let w = quant(wt);
-                    let w_bp = conv::flip_transpose(&w, *out_ch, *in_ch, *k);
-                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
-                    let pool = relu && matches!(net.layers.get(i + 2), Some(Layer::MaxPool2));
-                    let in_shape = match net.shapes[i] {
-                        Shape::Chw(c, h, w) => (c, h, w),
-                        s => anyhow::bail!("conv {name} on non-CHW input {s}"),
-                    };
-                    units.push(Unit::Conv {
-                        name: name.clone(),
-                        w,
-                        w_bp,
-                        bias: quant(bt),
-                        in_shape,
-                        out_ch: *out_ch,
-                        k: *k,
-                        pad: *pad,
-                        relu,
-                        pool,
-                    });
-                    i += 1 + relu as usize + pool as usize;
-                }
-                Layer::MaxPool2 => {
-                    let in_shape = match net.shapes[i] {
-                        Shape::Chw(c, h, w) => (c, h, w),
-                        s => anyhow::bail!("pool on non-CHW input {s}"),
-                    };
-                    units.push(Unit::Pool { in_shape });
-                    i += 1;
-                }
-                Layer::Fc { name, in_dim, out_dim } => {
-                    let (wt, bt) = params.fc(name)?;
-                    anyhow::ensure!(
-                        wt.shape == vec![*out_dim, *in_dim],
-                        "{name}: weight shape {:?} != layer dims",
-                        wt.shape
-                    );
-                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
-                    units.push(Unit::Fc {
-                        name: name.clone(),
-                        w: quant(wt),
-                        out_n: *out_dim,
-                        in_n: *in_dim,
-                        bias: quant(bt),
-                        relu,
-                    });
-                    i += 1 + relu as usize;
-                }
-                Layer::Flatten => i += 1,
-                Layer::Relu => {
-                    // a ReLU not fused into a producer (e.g. first layer)
-                    anyhow::bail!("standalone ReLU at layer {i} is not supported by the plan");
-                }
-            }
-        }
-        Ok(Simulator { net, cfg, units })
+        anyhow::ensure!(
+            cfg.q == plan.cfg.q,
+            "plan was quantized for a different fixed-point format"
+        );
+        Ok(Simulator { plan, cfg })
+    }
+
+    /// The shared plan handle (e.g. to build more simulators on it).
+    pub fn plan(&self) -> &Arc<Plan> {
+        &self.plan
     }
 
     pub fn q(&self) -> QFormat {
@@ -230,20 +199,22 @@ impl Simulator {
     }
 
     /// FP phase (paper §III-F): layer by layer, masks captured at
-    /// non-linearities, output = argmax logit.
+    /// non-linearities, output = argmax logit. Stepwise path — use it
+    /// when BP needs to start later or from several classes; the fused
+    /// serving path is [`Simulator::attribute_batch_into`].
     pub fn forward(&self, image: &[f32]) -> FpResult {
         assert_eq!(image.len(), self.net.input.elems(), "input size mismatch");
         let q = self.cfg.q;
         let mut cost = Cost::new();
         let mut act: Vec<i32> = image.iter().map(|&v| q.from_f32(v)).collect();
-        let n = self.units.len();
+        let n = self.plan.units.len();
         let mut state = FpState {
             dram_acts: vec![None; n],
             pool_idx: vec![None; n],
             fc_masks: vec![None; n],
         };
 
-        for (ui, unit) in self.units.iter().enumerate() {
+        for (ui, unit) in self.plan.units.iter().enumerate() {
             match unit {
                 Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
                     let post = match (relu, pool) {
@@ -263,7 +234,8 @@ impl Simulator {
                         post,
                     );
                     if *pool {
-                        state.pool_idx[ui] = r.pool_idx;
+                        state.pool_idx[ui] =
+                            r.pool_idx.map(|idx| pool::pack2(&idx));
                         let pooled = r.pooled.unwrap();
                         state.dram_acts[ui] = Some(pooled.clone());
                         act = pooled;
@@ -275,7 +247,7 @@ impl Simulator {
                 }
                 Unit::Pool { in_shape } => {
                     let (p, idx) = pool::maxpool2(&self.cfg, &mut cost, &act, *in_shape);
-                    state.pool_idx[ui] = Some(idx);
+                    state.pool_idx[ui] = Some(pool::pack2(&idx));
                     state.dram_acts[ui] = Some(p.clone());
                     act = p;
                     cost.checkpoint("pool");
@@ -318,7 +290,7 @@ impl Simulator {
         let mut g = vec![0i32; out_n];
         g[start_class] = q.from_f32(1.0);
 
-        for (ui, unit) in self.units.iter().enumerate().rev() {
+        for (ui, unit) in self.plan.units.iter().enumerate().rev() {
             match unit {
                 Unit::Fc { name, w, out_n, in_n, relu, .. } => {
                     if *relu {
@@ -330,8 +302,9 @@ impl Simulator {
                 }
                 Unit::Pool { in_shape } => {
                     let (c, h, w) = *in_shape;
-                    let idx = state.pool_idx[ui].as_ref().expect("pool idx missing");
-                    g = pool::unpool2(&self.cfg, &mut cost, &g, (c, h / 2, w / 2), idx);
+                    let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                    let idx = pool::unpack2(packed, c * (h / 2) * (w / 2));
+                    g = pool::unpool2(&self.cfg, &mut cost, &g, (c, h / 2, w / 2), &idx);
                     cost.checkpoint("unpool");
                 }
                 Unit::Conv { name, w_bp, in_shape, out_ch, k, pad, relu, pool, .. } => {
@@ -355,13 +328,14 @@ impl Simulator {
                                 MaskSource::FromDram(act),
                             );
                         }
-                        let idx = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                        let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                        let idx = pool::unpack2(packed, *out_ch * (oh / 2) * (ow / 2));
                         g = conv::input_grad_unpool(
                             &self.cfg,
                             &mut cost,
                             &g,
                             (*out_ch, oh / 2, ow / 2),
-                            idx,
+                            &idx,
                             w_bp,
                             ic,
                             *k,
@@ -371,13 +345,14 @@ impl Simulator {
                         if *pool {
                             // unfused ablation: materialize the unpooled
                             // gradient, then mask on the full grid
-                            let idx = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                            let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                            let idx = pool::unpack2(packed, *out_ch * (oh / 2) * (ow / 2));
                             g = pool::unpool2(
                                 &self.cfg,
                                 &mut cost,
                                 &g,
                                 (*out_ch, oh / 2, ow / 2),
-                                idx,
+                                &idx,
                             );
                             if *relu {
                                 // full-grid mask: recompute from the pooled
@@ -388,7 +363,7 @@ impl Simulator {
                                     &mut cost,
                                     act,
                                     (*out_ch, oh / 2, ow / 2),
-                                    idx,
+                                    &idx,
                                 );
                                 g = relu::backward(
                                     &self.cfg,
@@ -427,19 +402,28 @@ impl Simulator {
         (g.iter().map(|&v| q.to_f32(v)).collect(), cost)
     }
 
-    /// Full feature attribution: FP + BP (paper Fig. 2).
+    /// Full feature attribution: FP + BP (paper Fig. 2). Wrapper over
+    /// [`Simulator::attribute_batch_into`] with a batch of one,
+    /// single-threaded (sharding is opted into via a [`Workspace`]).
     pub fn attribute(&self, image: &[f32], method: Method, opts: AttrOptions) -> AttrResult {
-        let fp = self.forward(image);
-        let start = opts.target.unwrap_or(fp.pred);
-        let (relevance, bp_cost) = self.backward(&fp.state, start, method, opts);
-        AttrResult { logits: fp.logits, pred: fp.pred, relevance, fp_cost: fp.cost, bp_cost }
+        let mut ws = Workspace::with_shards(1);
+        let mut out = BatchOutput::new();
+        self.attribute_batch_into(&mut ws, &[image], method, opts, true, &mut out);
+        AttrResult {
+            logits: out.logits_of(0).to_vec(),
+            pred: out.preds[0],
+            relevance: out.relevance_of(0).to_vec(),
+            fp_cost: out.fp_cost.clone(),
+            bp_cost: out.bp_cost.clone(),
+        }
     }
 
-    /// Batch-N FP phase: the whole batch walks the plan layer-major on
-    /// the batched engines, so each layer's weight tiles move DRAM →
-    /// on-chip once per batch. Masks/activations for the batch live in
-    /// one shared [`FpBatchState`] arena. Per-image logits are bit-exact
-    /// with [`Simulator::forward`].
+    /// Batch-N FP phase (stepwise twin of the fused core): the whole
+    /// batch walks the plan layer-major on the batched engines, so each
+    /// layer's weight tiles move DRAM → on-chip once per batch.
+    /// Masks/activations for the batch live in one shared
+    /// [`FpBatchState`] arena. Per-image logits are bit-exact with
+    /// [`Simulator::forward`].
     pub fn forward_batch(&self, images: &[&[f32]]) -> FpBatchResult {
         let nb = images.len();
         assert!(nb > 0, "empty batch");
@@ -452,14 +436,14 @@ impl Simulator {
             .iter()
             .map(|img| img.iter().map(|&v| q.from_f32(v)).collect())
             .collect();
-        let n = self.units.len();
+        let n = self.plan.units.len();
         let mut state = FpBatchState {
             dram_acts: (0..n).map(|_| None).collect(),
             pool_idx: (0..n).map(|_| None).collect(),
             fc_masks: (0..n).map(|_| None).collect(),
         };
 
-        for (ui, unit) in self.units.iter().enumerate() {
+        for (ui, unit) in self.plan.units.iter().enumerate() {
             match unit {
                 Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
                     let post = match (relu, pool) {
@@ -484,7 +468,7 @@ impl Simulator {
                     if *pool {
                         let mut idxs = Vec::with_capacity(nb);
                         for r in rs {
-                            idxs.push(r.pool_idx.expect("pool idx"));
+                            idxs.push(pool::pack2(&r.pool_idx.expect("pool idx")));
                             let p = r.pooled.expect("pooled");
                             dram.push(p.clone());
                             new_acts.push(p);
@@ -505,7 +489,7 @@ impl Simulator {
                     let mut idxs = Vec::with_capacity(nb);
                     for a in &acts {
                         let (p, idx) = pool::maxpool2(&self.cfg, &mut cost, a, *in_shape);
-                        idxs.push(idx);
+                        idxs.push(pool::pack2(&idx));
                         ps.push(p);
                     }
                     state.pool_idx[ui] = Some(idxs);
@@ -540,9 +524,9 @@ impl Simulator {
         FpBatchResult { logits, preds, cost, state }
     }
 
-    /// Batch-N BP phase: one one-hot gradient per image, walked in
-    /// reverse on the batched engines (weight views fetched once per
-    /// batch). Per-image relevance is bit-exact with
+    /// Batch-N BP phase (stepwise twin): one one-hot gradient per
+    /// image, walked in reverse on the batched engines (weight views
+    /// fetched once per batch). Per-image relevance is bit-exact with
     /// [`Simulator::backward`].
     pub fn backward_batch(
         &self,
@@ -565,7 +549,7 @@ impl Simulator {
             })
             .collect();
 
-        for (ui, unit) in self.units.iter().enumerate().rev() {
+        for (ui, unit) in self.plan.units.iter().enumerate().rev() {
             match unit {
                 Unit::Fc { name, w, out_n, in_n, relu, .. } => {
                     if *relu {
@@ -586,9 +570,10 @@ impl Simulator {
                 }
                 Unit::Pool { in_shape } => {
                     let (c, h, w) = *in_shape;
-                    let idxs = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                    let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
                     for (b, g) in gs.iter_mut().enumerate() {
-                        *g = pool::unpool2(&self.cfg, &mut cost, g, (c, h / 2, w / 2), &idxs[b]);
+                        let idx = pool::unpack2(&packed[b], c * (h / 2) * (w / 2));
+                        *g = pool::unpool2(&self.cfg, &mut cost, g, (c, h / 2, w / 2), &idx);
                     }
                     cost.checkpoint("unpool");
                 }
@@ -611,7 +596,11 @@ impl Simulator {
                                 );
                             }
                         }
-                        let idxs = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                        let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                        let idxs: Vec<Vec<u8>> = packed
+                            .iter()
+                            .map(|p| pool::unpack2(p, *out_ch * (oh / 2) * (ow / 2)))
+                            .collect();
                         let grefs: Vec<&[i32]> = gs.iter().map(|g| g.as_slice()).collect();
                         let irefs: Vec<&[u8]> = idxs.iter().map(|i| i.as_slice()).collect();
                         gs = conv::input_grad_unpool_batch(
@@ -627,25 +616,29 @@ impl Simulator {
                         );
                     } else {
                         if *pool {
-                            let idxs = state.pool_idx[ui].as_ref().expect("pool idx missing");
+                            let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
                             for (b, g) in gs.iter_mut().enumerate() {
+                                let idx =
+                                    pool::unpack2(&packed[b], *out_ch * (oh / 2) * (ow / 2));
                                 *g = pool::unpool2(
                                     &self.cfg,
                                     &mut cost,
                                     g,
                                     (*out_ch, oh / 2, ow / 2),
-                                    &idxs[b],
+                                    &idx,
                                 );
                             }
                             if *relu {
                                 let acts = state.dram_acts[ui].as_ref().expect("act missing");
                                 for (b, g) in gs.iter_mut().enumerate() {
+                                    let idx =
+                                        pool::unpack2(&packed[b], *out_ch * (oh / 2) * (ow / 2));
                                     let full_act = pool::unpool2(
                                         &self.cfg,
                                         &mut cost,
                                         &acts[b],
                                         (*out_ch, oh / 2, ow / 2),
-                                        &idxs[b],
+                                        &idx,
                                     );
                                     *g = relu::backward(
                                         &self.cfg,
@@ -693,27 +686,414 @@ impl Simulator {
     }
 
     /// Batch-N feature attribution (the micro-batched serving path):
-    /// FP + BP for a whole batch with weight traffic amortized across
-    /// images. `opts.target` (when set) applies to every image;
-    /// otherwise each image backpropagates from its own argmax.
+    /// allocate-and-call wrapper over [`Simulator::attribute_batch_into`]
+    /// with a fresh single-threaded workspace and layer checkpoints
+    /// recorded — deterministically 1 compute thread, so callers that
+    /// parallelize externally (and the E13 batching bench) keep their
+    /// semantics. Multi-core sharding and workspace reuse are opted
+    /// into by calling the core with your own [`Workspace`] (the
+    /// coordinator workers do). `opts.target` (when set) applies to
+    /// every image; otherwise each image backpropagates from its own
+    /// argmax.
     pub fn attribute_batch(
         &self,
         images: &[&[f32]],
         method: Method,
         opts: AttrOptions,
     ) -> BatchAttrResult {
-        let fp = self.forward_batch(images);
-        let starts: Vec<usize> =
-            fp.preds.iter().map(|&p| opts.target.unwrap_or(p)).collect();
-        let (rels, bp_cost) = self.backward_batch(&fp.state, &starts, method, opts);
-        let items = fp
-            .logits
-            .into_iter()
-            .zip(fp.preds)
-            .zip(rels)
-            .map(|((logits, pred), relevance)| AttrItem { logits, pred, relevance })
+        let mut ws = Workspace::with_shards(1);
+        let mut out = BatchOutput::new();
+        self.attribute_batch_into(&mut ws, images, method, opts, true, &mut out);
+        let items = (0..out.nb)
+            .map(|b| AttrItem {
+                logits: out.logits_of(b).to_vec(),
+                pred: out.preds[b],
+                relevance: out.relevance_of(b).to_vec(),
+            })
             .collect();
-        BatchAttrResult { items, fp_cost: fp.cost, bp_cost }
+        BatchAttrResult { items, fp_cost: out.fp_cost.clone(), bp_cost: out.bp_cost.clone() }
+    }
+
+    /// The execution core: batched FP + BP entirely inside the caller's
+    /// [`Workspace`] arena, writing results into the reusable
+    /// [`BatchOutput`] slabs.
+    ///
+    /// * **Zero allocations once warm** — every intermediate lives in a
+    ///   workspace slab that is resized in place; with
+    ///   `record_layers = false` not even checkpoint labels are
+    ///   allocated (asserted by the `alloc_regression` test, shards=1;
+    ///   sharded runs additionally pay only the scoped-thread spawns).
+    /// * **Sharded** — the engine compute passes split the batch across
+    ///   `ws.shards` threads, bit-exactly for any value.
+    /// * **Weight-amortized** — each weight tile is fetched once per
+    ///   batch (DESIGN.md §Batching); `out.fp_cost`/`out.bp_cost` are
+    ///   aggregate batch costs.
+    ///
+    /// `record_layers` controls whether per-layer checkpoint labels are
+    /// pushed into the cost ledgers (the serving path turns them off).
+    pub fn attribute_batch_into(
+        &self,
+        ws: &mut Workspace,
+        images: &[&[f32]],
+        method: Method,
+        opts: AttrOptions,
+        record_layers: bool,
+        out: &mut BatchOutput,
+    ) {
+        let nb = images.len();
+        assert!(nb > 0, "empty batch");
+        let in_elems = self.net.input.elems();
+        for img in images {
+            assert_eq!(img.len(), in_elems, "input size mismatch");
+        }
+        let q = self.cfg.q;
+        let cfg = &self.cfg;
+        let units = &self.plan.units;
+        let n_units = units.len();
+        let out_n = self.net.output_shape().elems();
+        let shards = ws.shards.max(1);
+        if ws.acts.len() < n_units {
+            ws.acts.resize_with(n_units, Vec::new);
+            ws.pool_idx.resize_with(n_units, Vec::new);
+            ws.fc_masks.resize_with(n_units, Vec::new);
+        }
+        let Workspace {
+            scratch,
+            conv_out,
+            qimg,
+            acts,
+            pool_idx,
+            fc_masks,
+            idx_scratch,
+            g_a,
+            g_b,
+            tmp,
+            ..
+        } = ws;
+
+        // ---- FP: walk the plan layer-major --------------------------
+        let mut fp_cost = Cost::new();
+        qimg.resize(nb * in_elems, 0);
+        for (b, img) in images.iter().enumerate() {
+            let dst = &mut qimg[b * in_elems..(b + 1) * in_elems];
+            for (d, &v) in dst.iter_mut().zip(img.iter()) {
+                *d = q.from_f32(v);
+            }
+        }
+
+        for (ui, unit) in units.iter().enumerate() {
+            // every unit writes acts[ui]; its input is the previous
+            // unit's slab (the activation the paper leaves in DRAM —
+            // stored exactly once, not cloned)
+            let (before, rest) = acts.split_at_mut(ui);
+            let cur = &mut rest[0];
+            let input: &[i32] =
+                if ui == 0 { qimg.as_slice() } else { before[ui - 1].as_slice() };
+            match unit {
+                Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                    let post = match (relu, pool) {
+                        (true, true) => Post::ReluPool,
+                        (true, false) => Post::Relu,
+                        _ => Post::Plain,
+                    };
+                    conv::forward_batch_into(
+                        cfg,
+                        &mut fp_cost,
+                        scratch,
+                        input,
+                        nb,
+                        *in_shape,
+                        w,
+                        (*out_ch, *k),
+                        Some(bias),
+                        *pad,
+                        post,
+                        shards,
+                        conv_out,
+                    );
+                    if *pool {
+                        let (_, h, w_n) = *in_shape;
+                        let oh = h + 2 * *pad - (*k - 1);
+                        let ow = w_n + 2 * *pad - (*k - 1);
+                        let pooled_elems = *out_ch * (oh / 2) * (ow / 2);
+                        pool::pack2_slab_into(
+                            &conv_out.pool_idx,
+                            nb,
+                            pooled_elems,
+                            &mut pool_idx[ui],
+                        );
+                        std::mem::swap(cur, &mut conv_out.pooled);
+                    } else {
+                        std::mem::swap(cur, &mut conv_out.out);
+                    }
+                    if record_layers {
+                        fp_cost.checkpoint(name);
+                    }
+                }
+                Unit::Pool { in_shape } => {
+                    let (c, h, w_n) = *in_shape;
+                    let full_elems = c * h * w_n;
+                    let pooled_elems = c * (h / 2) * (w_n / 2);
+                    cur.resize(nb * pooled_elems, 0);
+                    idx_scratch.resize(nb * pooled_elems, 0);
+                    for b in 0..nb {
+                        pool::maxpool2_into(
+                            cfg,
+                            &mut fp_cost,
+                            &input[b * full_elems..(b + 1) * full_elems],
+                            (c, h, w_n),
+                            &mut cur[b * pooled_elems..(b + 1) * pooled_elems],
+                            &mut idx_scratch[b * pooled_elems..(b + 1) * pooled_elems],
+                        );
+                    }
+                    pool::pack2_slab_into(idx_scratch, nb, pooled_elems, &mut pool_idx[ui]);
+                    if record_layers {
+                        fp_cost.checkpoint("pool");
+                    }
+                }
+                Unit::Fc { name, w, out_n, in_n, bias, relu } => {
+                    let mask_opt: Option<&mut [bool]> = if *relu {
+                        let m = &mut fc_masks[ui];
+                        m.resize(nb * *out_n, false);
+                        Some(m.as_mut_slice())
+                    } else {
+                        None
+                    };
+                    vmm::forward_batch_into(
+                        cfg,
+                        &mut fp_cost,
+                        scratch,
+                        w,
+                        (*out_n, *in_n),
+                        input,
+                        nb,
+                        Some(bias),
+                        mask_opt,
+                        shards,
+                        cur,
+                    );
+                    if record_layers {
+                        fp_cost.checkpoint(name);
+                    }
+                }
+            }
+        }
+
+        // logits + predictions from the last unit's slab
+        out.logits.resize(nb * out_n, 0.0);
+        out.preds.resize(nb, 0);
+        {
+            let last = &acts[n_units - 1];
+            for b in 0..nb {
+                let lb = &mut out.logits[b * out_n..(b + 1) * out_n];
+                for (l, &v) in lb.iter_mut().zip(&last[b * out_n..(b + 1) * out_n]) {
+                    *l = q.to_f32(v);
+                }
+                out.preds[b] = argmax(lb);
+            }
+        }
+
+        // ---- BP: one-hot per image, walk the plan in reverse --------
+        let mut bp_cost = Cost::new();
+        g_a.resize(nb * out_n, 0);
+        g_a.fill(0);
+        let one = q.from_f32(1.0);
+        for b in 0..nb {
+            let start = opts.target.unwrap_or(out.preds[b]);
+            g_a[b * out_n + start] = one;
+        }
+        // gradient ping-pong between the two workspace slabs
+        let mut gin: &mut Vec<i32> = g_a;
+        let mut gout: &mut Vec<i32> = g_b;
+        let mut g_len = out_n; // per-image gradient length
+
+        for (ui, unit) in units.iter().enumerate().rev() {
+            match unit {
+                Unit::Fc { name, w, out_n: fo, in_n: fi, relu, .. } => {
+                    if *relu {
+                        let masks = &fc_masks[ui];
+                        for b in 0..nb {
+                            relu::backward_in_place(
+                                cfg,
+                                &mut bp_cost,
+                                method,
+                                &mut gin[b * g_len..(b + 1) * g_len],
+                                MaskSource::OnChip(&masks[b * g_len..(b + 1) * g_len]),
+                            );
+                        }
+                    }
+                    vmm::backward_batch_into(
+                        cfg,
+                        &mut bp_cost,
+                        scratch,
+                        w,
+                        (*fo, *fi),
+                        gin,
+                        nb,
+                        shards,
+                        gout,
+                    );
+                    std::mem::swap(&mut gin, &mut gout);
+                    g_len = *fi;
+                    if record_layers {
+                        bp_cost.checkpoint(&format!("{name}ᵀ"));
+                    }
+                }
+                Unit::Pool { in_shape } => {
+                    let (c, h, w_n) = *in_shape;
+                    let full_elems = c * h * w_n;
+                    pool::unpack2_slab_into(&pool_idx[ui], nb, g_len, idx_scratch);
+                    gout.resize(nb * full_elems, 0);
+                    for b in 0..nb {
+                        pool::unpool2_into(
+                            cfg,
+                            &mut bp_cost,
+                            &gin[b * g_len..(b + 1) * g_len],
+                            (c, h / 2, w_n / 2),
+                            &idx_scratch[b * g_len..(b + 1) * g_len],
+                            &mut gout[b * full_elems..(b + 1) * full_elems],
+                        );
+                    }
+                    std::mem::swap(&mut gin, &mut gout);
+                    g_len = full_elems;
+                    if record_layers {
+                        bp_cost.checkpoint("unpool");
+                    }
+                }
+                Unit::Conv {
+                    name, w_bp, w_sc, in_shape, out_ch, k, pad, relu, pool, ..
+                } => {
+                    let (ic, h, w_n) = *in_shape;
+                    let (k_v, op, oc_v) = (*k, *pad, *out_ch);
+                    let oh = h + 2 * op - (k_v - 1);
+                    let ow = w_n + 2 * op - (k_v - 1);
+                    if *pool && opts.fused_unpool {
+                        // gradient arrives on the pooled grid: g_len ==
+                        // oc_v * (oh/2) * (ow/2)
+                        if *relu {
+                            let acts_u = &acts[ui];
+                            for b in 0..nb {
+                                relu::backward_in_place(
+                                    cfg,
+                                    &mut bp_cost,
+                                    method,
+                                    &mut gin[b * g_len..(b + 1) * g_len],
+                                    MaskSource::FromDram(
+                                        &acts_u[b * g_len..(b + 1) * g_len],
+                                    ),
+                                );
+                            }
+                        }
+                        pool::unpack2_slab_into(&pool_idx[ui], nb, g_len, idx_scratch);
+                        conv::input_grad_unpool_batch_into(
+                            cfg,
+                            &mut bp_cost,
+                            scratch,
+                            gin,
+                            nb,
+                            (oc_v, oh / 2, ow / 2),
+                            idx_scratch,
+                            w_sc,
+                            ic,
+                            k_v,
+                            op,
+                            shards,
+                            gout,
+                        );
+                        std::mem::swap(&mut gin, &mut gout);
+                        g_len = ic * h * w_n;
+                    } else {
+                        if *pool {
+                            // unfused ablation: materialize the unpooled
+                            // gradient, then mask on the full grid
+                            let full = oc_v * oh * ow;
+                            pool::unpack2_slab_into(&pool_idx[ui], nb, g_len, idx_scratch);
+                            gout.resize(nb * full, 0);
+                            for b in 0..nb {
+                                pool::unpool2_into(
+                                    cfg,
+                                    &mut bp_cost,
+                                    &gin[b * g_len..(b + 1) * g_len],
+                                    (oc_v, oh / 2, ow / 2),
+                                    &idx_scratch[b * g_len..(b + 1) * g_len],
+                                    &mut gout[b * full..(b + 1) * full],
+                                );
+                            }
+                            let pooled_len = g_len;
+                            std::mem::swap(&mut gin, &mut gout);
+                            g_len = full;
+                            if *relu {
+                                let acts_u = &acts[ui];
+                                tmp.resize(nb * full, 0);
+                                for b in 0..nb {
+                                    pool::unpool2_into(
+                                        cfg,
+                                        &mut bp_cost,
+                                        &acts_u[b * pooled_len..(b + 1) * pooled_len],
+                                        (oc_v, oh / 2, ow / 2),
+                                        &idx_scratch[b * pooled_len..(b + 1) * pooled_len],
+                                        &mut tmp[b * full..(b + 1) * full],
+                                    );
+                                    relu::backward_in_place(
+                                        cfg,
+                                        &mut bp_cost,
+                                        method,
+                                        &mut gin[b * full..(b + 1) * full],
+                                        MaskSource::FromDram(&tmp[b * full..(b + 1) * full]),
+                                    );
+                                }
+                            }
+                        } else if *relu {
+                            let acts_u = &acts[ui];
+                            for b in 0..nb {
+                                relu::backward_in_place(
+                                    cfg,
+                                    &mut bp_cost,
+                                    method,
+                                    &mut gin[b * g_len..(b + 1) * g_len],
+                                    MaskSource::FromDram(&acts_u[b * g_len..(b + 1) * g_len]),
+                                );
+                            }
+                        }
+                        // plain BP conv: the forward engine with the
+                        // flipped-transposed weight view
+                        let bp_pad = k_v - 1 - op;
+                        conv::forward_batch_into(
+                            cfg,
+                            &mut bp_cost,
+                            scratch,
+                            gin,
+                            nb,
+                            (oc_v, oh, ow),
+                            w_bp,
+                            (ic, k_v),
+                            None,
+                            bp_pad,
+                            Post::Plain,
+                            shards,
+                            conv_out,
+                        );
+                        std::mem::swap(gout, &mut conv_out.out);
+                        std::mem::swap(&mut gin, &mut gout);
+                        g_len = ic * h * w_n;
+                    }
+                    if record_layers {
+                        bp_cost.checkpoint(&format!("{name}ᵀ"));
+                    }
+                }
+            }
+        }
+
+        assert_eq!(g_len, in_elems, "BP must walk back to the input layer");
+        out.relevance.resize(nb * in_elems, 0.0);
+        for (r, &v) in out.relevance.iter_mut().zip(gin.iter()) {
+            *r = q.to_f32(v);
+        }
+        out.nb = nb;
+        out.in_elems = in_elems;
+        out.out_n = out_n;
+        out.fp_cost = fp_cost;
+        out.bp_cost = bp_cost;
     }
 }
 
@@ -721,12 +1101,19 @@ impl Simulator {
 #[cfg(test)]
 pub mod tests_support {
     use super::*;
-    use crate::model::{NetworkBuilder, Tensor};
+    use crate::model::{NetworkBuilder, Shape, Tensor};
     use crate::util::rng::Pcg32;
     use std::collections::BTreeMap;
 
     /// A small random [2,8,8] conv/pool/fc model on the given config.
     pub fn tiny_sim(seed: u64, cfg: HwConfig) -> Simulator {
+        let (net, params) = tiny_net_params(seed);
+        Simulator::new(net, &params, cfg).unwrap()
+    }
+
+    /// The tiny model's graph + random parameters (for tests that need
+    /// to build plans/fleets themselves).
+    pub fn tiny_net_params(seed: u64) -> (Network, Params) {
         let net = NetworkBuilder::new(Shape::Chw(2, 8, 8))
             .conv("c1", 4, 3, 1)
             .relu()
@@ -755,8 +1142,7 @@ pub mod tests_support {
         add("f1_b", vec![8], &mut rng);
         add("f2_w", vec![3, 8], &mut rng);
         add("f2_b", vec![3], &mut rng);
-        let params = Params { tensors };
-        Simulator::new(net, &params, cfg).unwrap()
+        (net, Params { tensors })
     }
 }
 
@@ -773,7 +1159,7 @@ pub fn argmax(xs: &[f32]) -> usize {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::model::{NetworkBuilder, Tensor};
+    use crate::model::{NetworkBuilder, Shape, Tensor};
     use crate::util::rng::Pcg32;
     use std::collections::BTreeMap;
 
@@ -827,6 +1213,37 @@ mod tests {
         // plan: conv1(relu) conv2(relu+pool) fc1(relu) fc2
         assert!(fp.state.pool_idx.iter().any(|p| p.is_some()));
         assert!(fp.state.fc_masks.iter().any(|m| m.is_some()));
+        // packed argmax store: c2 pool grid is 4x4x4 = 64 elems -> 16 B
+        assert_eq!(fp.state.pool_mask_bytes(), 16);
+    }
+
+    #[test]
+    fn stepwise_forward_backward_matches_fused_core() {
+        // the stepwise forward()/backward() pair and the fused
+        // attribute() core are two walks over the same engines — they
+        // must agree bit-for-bit (logits, relevance, total cost)
+        let (net, params) = tiny_model(2);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let img = image(3, 2 * 8 * 8);
+        for method in crate::attribution::ALL_METHODS {
+            let fp = sim.forward(&img);
+            let (rel, bp_cost) =
+                sim.backward(&fp.state, fp.pred, method, AttrOptions::default());
+            let fused = sim.attribute(&img, method, AttrOptions::default());
+            assert_eq!(fused.logits, fp.logits, "{method}: logits");
+            assert_eq!(fused.pred, fp.pred, "{method}: pred");
+            assert_eq!(fused.relevance, rel, "{method}: relevance");
+            assert_eq!(
+                fused.fp_cost.total_cycles(),
+                fp.cost.total_cycles(),
+                "{method}: fp cycles"
+            );
+            assert_eq!(
+                fused.bp_cost.total_cycles(),
+                bp_cost.total_cycles(),
+                "{method}: bp cycles"
+            );
+        }
     }
 
     #[test]
@@ -949,6 +1366,67 @@ mod tests {
             let single = sim.attribute(&imgs[i], Method::Saliency, opts);
             assert_eq!(item.relevance, single.relevance, "image {i}");
         }
+    }
+
+    #[test]
+    fn workspace_reuse_and_shard_counts_are_bit_exact() {
+        let (net, params) = tiny_model(17);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let imgs: Vec<Vec<f32>> = (0..4).map(|i| image(40 + i, 2 * 8 * 8)).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut base = BatchOutput::new();
+        sim.attribute_batch_into(
+            &mut Workspace::with_shards(1),
+            &refs,
+            Method::Guided,
+            AttrOptions::default(),
+            false,
+            &mut base,
+        );
+        // one workspace reused across calls AND different shard counts:
+        // identical slabs every time
+        let mut ws = Workspace::with_shards(2);
+        let mut out = BatchOutput::new();
+        for shards in [2, 3, 4, 1, 4] {
+            ws.shards = shards;
+            sim.attribute_batch_into(
+                &mut ws,
+                &refs,
+                Method::Guided,
+                AttrOptions::default(),
+                false,
+                &mut out,
+            );
+            assert_eq!(out.relevance, base.relevance, "shards {shards}");
+            assert_eq!(out.logits, base.logits, "shards {shards}");
+            assert_eq!(out.preds, base.preds, "shards {shards}");
+            assert_eq!(out.fp_cost.total_cycles(), base.fp_cost.total_cycles());
+            assert_eq!(out.bp_cost.total_cycles(), base.bp_cost.total_cycles());
+        }
+        // no checkpoints were recorded on the serving path
+        assert!(out.fp_cost.layers.is_empty());
+    }
+
+    #[test]
+    fn shared_plan_clones_cheaply() {
+        let (net, params) = tiny_model(19);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        assert!(sim.plan().weight_bytes() > 0);
+        let clone = sim.clone();
+        assert!(Arc::ptr_eq(sim.plan(), clone.plan()), "clone must share the plan");
+        // a different execution config over the same plan: bit-identical
+        // results (P2 config invariance), no reconstruction
+        let fast = Simulator::with_config(sim.plan().clone(), HwConfig::zcu104()).unwrap();
+        assert!(Arc::ptr_eq(sim.plan(), fast.plan()));
+        let img = image(50, 2 * 8 * 8);
+        let a = sim.attribute(&img, Method::Guided, AttrOptions::default());
+        let b = fast.attribute(&img, Method::Guided, AttrOptions::default());
+        assert_eq!(a.relevance, b.relevance);
+        assert_eq!(a.logits, b.logits);
+        // mismatched fixed-point format is rejected
+        let mut bad = HwConfig::pynq_z2();
+        bad.q = crate::fx::QFormat::new(8, 4);
+        assert!(Simulator::with_config(sim.plan().clone(), bad).is_err());
     }
 
     #[test]

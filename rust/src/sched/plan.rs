@@ -1,0 +1,290 @@
+//! Shared execution plan + per-thread workspace arena (the host mirror
+//! of the paper's fixed on-chip resource budget, DESIGN.md
+//! §Plan/Workspace memory architecture).
+//!
+//! A [`Plan`] is the *immutable* compiled model: quantized FP weights,
+//! the flipped-transposed BP views (Table I), the scatter-ordered
+//! unpool-conv views, fused execution units and the hardware
+//! configuration. It is built once and shared behind an `Arc` by every
+//! coordinator worker and fleet device — weights are never cloned per
+//! thread, so N workers cost one copy of the model, not N.
+//!
+//! A [`Workspace`] is the *mutable* per-thread arena: the padded-input
+//! slab, accumulator tiles, activation slabs, packed 2-bit pool-argmax
+//! slabs, FC ReLU mask slabs and the BP gradient ping-pong buffers.
+//! Every buffer is resized in place and keeps its capacity across
+//! calls, so after one warm-up pass the whole
+//! [`Simulator::attribute_batch_into`](super::Simulator::attribute_batch_into)
+//! path performs **zero heap allocations** (asserted by the
+//! `alloc_regression` test). `shards` sets how many scoped threads the
+//! engine compute passes fan the per-image loops across; sharding is
+//! bit-exact for any value because each image owns a disjoint
+//! accumulator/output region and the `Cost` ledger is charged by a
+//! separate single-threaded pass.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use crate::hls::conv::{self, ConvBatchOut};
+use crate::hls::{Cost, EngineScratch, HwConfig};
+use crate::model::{Layer, Network, Params, Shape};
+
+/// One fused execution unit of the plan.
+#[derive(Clone, Debug)]
+pub(crate) enum Unit {
+    Conv {
+        name: String,
+        w: Vec<i32>,    // [O,I,K,K] — FP view
+        w_bp: Vec<i32>, // flipped-transposed view (Table I BP load)
+        /// Scatter-ordered view of `w_bp` ([Cg,K,K,O]) for the fused
+        /// unpool-conv; empty when the unit has no fused pool.
+        w_sc: Vec<i32>,
+        bias: Vec<i32>,
+        in_shape: (usize, usize, usize),
+        out_ch: usize,
+        k: usize,
+        pad: usize,
+        relu: bool,
+        pool: bool,
+    },
+    Pool {
+        in_shape: (usize, usize, usize),
+    },
+    Fc {
+        name: String,
+        w: Vec<i32>, // [OUT,IN]
+        out_n: usize,
+        in_n: usize,
+        bias: Vec<i32>,
+        relu: bool,
+    },
+}
+
+/// The immutable compiled model: network graph, hardware configuration
+/// and the quantized fused execution units. Build once, wrap in an
+/// `Arc`, share across every worker/device that runs the same model.
+pub struct Plan {
+    pub net: Network,
+    /// The configuration the plan was compiled for. A [`Simulator`]
+    /// (see [`Simulator::with_config`](super::Simulator::with_config))
+    /// may execute the plan under a different tiling/unroll as long as
+    /// the fixed-point format matches — quantized weights depend only
+    /// on `cfg.q`.
+    pub cfg: HwConfig,
+    pub(crate) units: Vec<Unit>,
+}
+
+impl Plan {
+    /// Quantize parameters and build the fused execution plan.
+    pub fn new(net: Network, params: &Params, cfg: HwConfig) -> anyhow::Result<Plan> {
+        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        let q = cfg.q;
+        let quant = |t: &crate::model::Tensor| -> Vec<i32> {
+            t.data.iter().map(|&v| q.from_f32(v)).collect()
+        };
+        let mut units = Vec::new();
+        let mut i = 0;
+        while i < net.layers.len() {
+            match &net.layers[i] {
+                Layer::Conv { name, in_ch, out_ch, k, pad } => {
+                    let (wt, bt) = params.conv(name)?;
+                    anyhow::ensure!(
+                        wt.shape == vec![*out_ch, *in_ch, *k, *k],
+                        "{name}: weight shape {:?} != layer dims",
+                        wt.shape
+                    );
+                    let w = quant(wt);
+                    let w_bp = conv::flip_transpose(&w, *out_ch, *in_ch, *k);
+                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
+                    let pool = relu && matches!(net.layers.get(i + 2), Some(Layer::MaxPool2));
+                    // Scatter-ordered BP view, precomputed once so the
+                    // steady-state fused unpool-conv never rebuilds it.
+                    // The BP conv has out=in_ch, in=out_ch.
+                    let w_sc = if pool {
+                        conv::flip_scatter(&w_bp, *in_ch, *out_ch, *k)
+                    } else {
+                        Vec::new()
+                    };
+                    let in_shape = match net.shapes[i] {
+                        Shape::Chw(c, h, w) => (c, h, w),
+                        s => anyhow::bail!("conv {name} on non-CHW input {s}"),
+                    };
+                    units.push(Unit::Conv {
+                        name: name.clone(),
+                        w,
+                        w_bp,
+                        w_sc,
+                        bias: quant(bt),
+                        in_shape,
+                        out_ch: *out_ch,
+                        k: *k,
+                        pad: *pad,
+                        relu,
+                        pool,
+                    });
+                    i += 1 + relu as usize + pool as usize;
+                }
+                Layer::MaxPool2 => {
+                    let in_shape = match net.shapes[i] {
+                        Shape::Chw(c, h, w) => (c, h, w),
+                        s => anyhow::bail!("pool on non-CHW input {s}"),
+                    };
+                    units.push(Unit::Pool { in_shape });
+                    i += 1;
+                }
+                Layer::Fc { name, in_dim, out_dim } => {
+                    let (wt, bt) = params.fc(name)?;
+                    anyhow::ensure!(
+                        wt.shape == vec![*out_dim, *in_dim],
+                        "{name}: weight shape {:?} != layer dims",
+                        wt.shape
+                    );
+                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
+                    units.push(Unit::Fc {
+                        name: name.clone(),
+                        w: quant(wt),
+                        out_n: *out_dim,
+                        in_n: *in_dim,
+                        bias: quant(bt),
+                        relu,
+                    });
+                    i += 1 + relu as usize;
+                }
+                Layer::Flatten => i += 1,
+                Layer::Relu => {
+                    // a ReLU not fused into a producer (e.g. first layer)
+                    anyhow::bail!("standalone ReLU at layer {i} is not supported by the plan");
+                }
+            }
+        }
+        Ok(Plan { net, cfg, units })
+    }
+
+    /// Resident bytes of all quantized weight material (FP + BP +
+    /// scatter views + biases) — the footprint `Arc` sharing avoids
+    /// duplicating per worker.
+    pub fn weight_bytes(&self) -> usize {
+        self.units
+            .iter()
+            .map(|u| match u {
+                Unit::Conv { w, w_bp, w_sc, bias, .. } => {
+                    (w.len() + w_bp.len() + w_sc.len() + bias.len()) * std::mem::size_of::<i32>()
+                }
+                Unit::Fc { w, bias, .. } => {
+                    (w.len() + bias.len()) * std::mem::size_of::<i32>()
+                }
+                Unit::Pool { .. } => 0,
+            })
+            .sum()
+    }
+}
+
+static AUTO_SHARDS: AtomicUsize = AtomicUsize::new(0);
+
+/// Default shard count: the host's available parallelism (cached).
+pub fn auto_shards() -> usize {
+    let v = AUTO_SHARDS.load(Ordering::Relaxed);
+    if v != 0 {
+        return v;
+    }
+    let n = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    AUTO_SHARDS.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Per-thread reusable execution arena for the zero-allocation
+/// attribute path (module docs above). One per worker thread; never
+/// shared — the shared, immutable state lives in the [`Plan`].
+pub struct Workspace {
+    /// Threads the engine compute passes shard per-image loops across
+    /// (1 = fully inline; values above the batch size are clamped).
+    /// Any value is bit-exact.
+    pub shards: usize,
+    pub(crate) scratch: EngineScratch,
+    pub(crate) conv_out: ConvBatchOut,
+    /// Quantized input slab [nb, C*H*W].
+    pub(crate) qimg: Vec<i32>,
+    /// Per unit: flat activation slab [nb, elems] the FP pass leaves in
+    /// "DRAM" (pooled for fused-pool convs) — also the next unit's
+    /// input, so activations are stored exactly once.
+    pub(crate) acts: Vec<Vec<i32>>,
+    /// Per unit: packed 2-bit pool argmax slab [nb, ceil(elems/4)].
+    pub(crate) pool_idx: Vec<Vec<u8>>,
+    /// Per unit: FC ReLU mask slab [nb, out_n].
+    pub(crate) fc_masks: Vec<Vec<bool>>,
+    /// Unpacked-index scratch for the BP unpool engines.
+    pub(crate) idx_scratch: Vec<u8>,
+    /// BP gradient ping-pong slabs.
+    pub(crate) g_a: Vec<i32>,
+    pub(crate) g_b: Vec<i32>,
+    /// Unfused-ablation scratch (materialized full-grid activations).
+    pub(crate) tmp: Vec<i32>,
+}
+
+impl Workspace {
+    /// Workspace with the host's available parallelism as shard count.
+    pub fn new() -> Workspace {
+        Workspace::with_shards(auto_shards())
+    }
+
+    /// Workspace with an explicit shard count (1 = single-threaded).
+    pub fn with_shards(shards: usize) -> Workspace {
+        Workspace {
+            shards: shards.max(1),
+            scratch: EngineScratch::new(),
+            conv_out: ConvBatchOut::new(),
+            qimg: Vec::new(),
+            acts: Vec::new(),
+            pool_idx: Vec::new(),
+            fc_masks: Vec::new(),
+            idx_scratch: Vec::new(),
+            g_a: Vec::new(),
+            g_b: Vec::new(),
+            tmp: Vec::new(),
+        }
+    }
+}
+
+impl Default for Workspace {
+    fn default() -> Workspace {
+        Workspace::new()
+    }
+}
+
+/// Reusable flat-slab result of a batched attribution
+/// ([`Simulator::attribute_batch_into`](super::Simulator::attribute_batch_into)):
+/// image `b`'s logits/relevance occupy the `b`-th fixed-stride region.
+/// Reused across calls without reallocating once warm.
+#[derive(Default)]
+pub struct BatchOutput {
+    pub nb: usize,
+    /// Per-image relevance length (the model's input element count).
+    pub in_elems: usize,
+    /// Per-image logit length (the model's output class count).
+    pub out_n: usize,
+    /// [nb, out_n] dequantized logits.
+    pub logits: Vec<f32>,
+    /// Predicted class per image.
+    pub preds: Vec<usize>,
+    /// [nb, in_elems] dequantized input-feature relevance.
+    pub relevance: Vec<f32>,
+    /// Aggregate batch costs (not per image); layer checkpoints are
+    /// recorded only when the caller asked for them.
+    pub fp_cost: Cost,
+    pub bp_cost: Cost,
+}
+
+impl BatchOutput {
+    pub fn new() -> BatchOutput {
+        BatchOutput::default()
+    }
+
+    /// Image `b`'s logits.
+    pub fn logits_of(&self, b: usize) -> &[f32] {
+        &self.logits[b * self.out_n..(b + 1) * self.out_n]
+    }
+
+    /// Image `b`'s relevance map.
+    pub fn relevance_of(&self, b: usize) -> &[f32] {
+        &self.relevance[b * self.in_elems..(b + 1) * self.in_elems]
+    }
+}

@@ -1,0 +1,162 @@
+//! Allocation-count regression for the workspace-arena execution core
+//! (ISSUE 2 acceptance): once a [`Workspace`]/[`BatchOutput`] pair is
+//! warm, `Simulator::attribute_batch_into` must perform **zero heap
+//! allocations** — every intermediate lives in a reused slab. A
+//! counting global allocator (thread-local counter, so the harness's
+//! other test threads don't pollute the measurement) proves it.
+//!
+//! The guarantee is stated for `shards = 1`: sharded runs are
+//! bit-identical but pay a handful of scoped-thread spawns, which
+//! allocate by nature (OS thread stacks), not per element.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::cell::Cell;
+use std::collections::BTreeMap;
+
+use attrax::attribution::Method;
+use attrax::hls::HwConfig;
+use attrax::model::{Network, NetworkBuilder, Params, Shape, Tensor};
+use attrax::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
+use attrax::util::rng::Pcg32;
+
+thread_local! {
+    static ALLOCS: Cell<u64> = Cell::new(0);
+}
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc(layout)
+    }
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.alloc_zeroed(layout)
+    }
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        let _ = ALLOCS.try_with(|c| c.set(c.get() + 1));
+        System.realloc(ptr, layout, new_size)
+    }
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+}
+
+#[global_allocator]
+static ALLOCATOR: CountingAlloc = CountingAlloc;
+
+fn allocs_now() -> u64 {
+    ALLOCS.try_with(|c| c.get()).unwrap_or(0)
+}
+
+/// Tiny conv/relu/conv/relu+pool/fc/relu/fc model with random params.
+fn tiny_sim(seed: u64) -> Simulator {
+    let net: Network = NetworkBuilder::new(Shape::Chw(2, 8, 8))
+        .conv("c1", 4, 3, 1)
+        .relu()
+        .conv("c2", 4, 3, 1)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("f1", 8)
+        .relu()
+        .fc("f2", 3)
+        .build()
+        .unwrap();
+    let mut rng = Pcg32::seeded(seed);
+    let mut tensors = BTreeMap::new();
+    let mut add = |name: &str, shape: Vec<usize>, rng: &mut Pcg32| {
+        let n: usize = shape.iter().product();
+        let scale = (2.0 / n as f32).sqrt().max(0.05);
+        let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
+        tensors.insert(name.to_string(), Tensor { shape, data });
+    };
+    add("c1_w", vec![4, 2, 3, 3], &mut rng);
+    add("c1_b", vec![4], &mut rng);
+    add("c2_w", vec![4, 4, 3, 3], &mut rng);
+    add("c2_b", vec![4], &mut rng);
+    add("f1_w", vec![8, 64], &mut rng);
+    add("f1_b", vec![8], &mut rng);
+    add("f2_w", vec![3, 8], &mut rng);
+    add("f2_b", vec![3], &mut rng);
+    Simulator::new(net, &Params { tensors }, HwConfig::pynq_z2()).unwrap()
+}
+
+fn images(n: usize, len: usize) -> Vec<Vec<f32>> {
+    let mut rng = Pcg32::seeded(99);
+    (0..n).map(|_| (0..len).map(|_| rng.f32()).collect()).collect()
+}
+
+#[test]
+fn steady_state_attribute_batch_is_allocation_free() {
+    let sim = tiny_sim(42);
+    let imgs = images(4, 2 * 8 * 8);
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let mut ws = Workspace::with_shards(1);
+    let mut out = BatchOutput::new();
+    // warm-up: slabs grow to their steady-state capacities
+    for _ in 0..3 {
+        for m in attrax::attribution::ALL_METHODS {
+            sim.attribute_batch_into(&mut ws, &refs, m, AttrOptions::default(), false, &mut out);
+        }
+    }
+    let before = allocs_now();
+    for _ in 0..5 {
+        for m in attrax::attribution::ALL_METHODS {
+            sim.attribute_batch_into(&mut ws, &refs, m, AttrOptions::default(), false, &mut out);
+        }
+    }
+    let n = allocs_now() - before;
+    assert_eq!(
+        n, 0,
+        "steady-state attribute_batch_into allocated {n} times (workspace reuse regressed)"
+    );
+    // sanity: the counter itself works — a cold workspace must allocate
+    let before = allocs_now();
+    let mut cold_ws = Workspace::with_shards(1);
+    let mut cold_out = BatchOutput::new();
+    sim.attribute_batch_into(
+        &mut cold_ws,
+        &refs,
+        Method::Guided,
+        AttrOptions::default(),
+        false,
+        &mut cold_out,
+    );
+    assert!(allocs_now() - before > 0, "counting allocator is not counting");
+    assert_eq!(cold_out.relevance, out.relevance, "cold and warm runs must agree");
+}
+
+#[test]
+fn steady_state_survives_batch_shrink_and_single_image() {
+    // a smaller batch than the warmed one must not allocate either
+    // (shrinking resizes never grow capacity), and neither must the
+    // batch-of-one serving case
+    let sim = tiny_sim(7);
+    let imgs = images(4, 2 * 8 * 8);
+    let refs4: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let refs2: Vec<&[f32]> = imgs[..2].iter().map(|v| v.as_slice()).collect();
+    let refs1: Vec<&[f32]> = imgs[..1].iter().map(|v| v.as_slice()).collect();
+    let mut ws = Workspace::with_shards(1);
+    let mut out = BatchOutput::new();
+    let opts = AttrOptions::default();
+    for _ in 0..3 {
+        sim.attribute_batch_into(&mut ws, &refs4, Method::Guided, opts, false, &mut out);
+    }
+    let before = allocs_now();
+    sim.attribute_batch_into(&mut ws, &refs2, Method::Guided, opts, false, &mut out);
+    sim.attribute_batch_into(&mut ws, &refs1, Method::Guided, opts, false, &mut out);
+    sim.attribute_batch_into(&mut ws, &refs4, Method::Guided, opts, false, &mut out);
+    let n = allocs_now() - before;
+    assert_eq!(n, 0, "shrunken/single batches allocated {n} times on a warm workspace");
+    // the unfused-ablation path has its own scratch (tmp slab): it must
+    // also reach zero after its own warm-up
+    let unfused = AttrOptions { fused_unpool: false, ..Default::default() };
+    for _ in 0..3 {
+        sim.attribute_batch_into(&mut ws, &refs4, Method::Guided, unfused, false, &mut out);
+    }
+    let before = allocs_now();
+    sim.attribute_batch_into(&mut ws, &refs4, Method::Guided, unfused, false, &mut out);
+    assert_eq!(allocs_now() - before, 0, "unfused ablation allocated on a warm workspace");
+}

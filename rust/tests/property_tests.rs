@@ -7,7 +7,7 @@ use attrax::fpga::{self, Board};
 use attrax::fx::QFormat;
 use attrax::hls::{Cost, HwConfig};
 use attrax::model::{Network, NetworkBuilder, Params, Shape, Tensor};
-use attrax::sched::{AttrOptions, Simulator};
+use attrax::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
 use attrax::util::prop::{run_prop, PropConfig};
 use attrax::util::rng::Pcg32;
 use std::collections::BTreeMap;
@@ -288,6 +288,104 @@ fn prop_batch_bit_exact() {
                                 "{m} fused={fused}: image {i} relevance diverged"
                             ));
                         }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// P12 (tentpole): concurrency determinism — the same batch attributed
+/// with 1/2/4 shard threads on a reused workspace, and via two OS
+/// threads sharing one `Arc<Plan>`, is bit-identical to the
+/// single-threaded single-image path. (Sharding splits the batch into
+/// disjoint accumulator regions and the cost ledger is charged by a
+/// shard-independent pass, so this must hold for ANY thread count.)
+#[test]
+fn prop_shard_and_shared_plan_determinism() {
+    run_prop(
+        PropConfig { cases: 8, ..Default::default() },
+        scenario,
+        |s| {
+            let mut rng = Pcg32::seeded(s.seed);
+            let (net, params) = random_model(&mut rng);
+            let n_in = net.input.elems();
+            let sim = Simulator::new(net, &params, s.cfg).map_err(|e| e.to_string())?;
+            let nb = 1 + rng.below(4) as usize; // 1..=4 images
+            let imgs: Vec<Vec<f32>> = (0..nb)
+                .map(|_| (0..n_in).map(|_| rng.f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            // oracle: the single-threaded single-image path
+            let singles: Vec<_> = imgs
+                .iter()
+                .map(|img| sim.attribute(img, Method::Guided, AttrOptions::default()))
+                .collect();
+            let mut ws = Workspace::with_shards(1);
+            let mut out = BatchOutput::new();
+            let mut baseline_cycles: Option<u64> = None;
+            for shards in [1usize, 2, 4] {
+                ws.shards = shards;
+                sim.attribute_batch_into(
+                    &mut ws,
+                    &refs,
+                    Method::Guided,
+                    AttrOptions::default(),
+                    false,
+                    &mut out,
+                );
+                for (i, single) in singles.iter().enumerate() {
+                    if out.relevance_of(i) != single.relevance.as_slice() {
+                        return Err(format!("shards {shards}: image {i} relevance diverged"));
+                    }
+                    if out.logits_of(i) != single.logits.as_slice() {
+                        return Err(format!("shards {shards}: image {i} logits diverged"));
+                    }
+                }
+                // the Cost ledger is charged by a shard-independent pass
+                let cycles = out.fp_cost.total_cycles() + out.bp_cost.total_cycles();
+                match baseline_cycles {
+                    None => baseline_cycles = Some(cycles),
+                    Some(base) if base != cycles => {
+                        return Err(format!(
+                            "shards {shards}: ledger diverged ({cycles} vs {base} cycles)"
+                        ));
+                    }
+                    Some(_) => {}
+                }
+            }
+            // two workers, one shared Arc<Plan>, running concurrently
+            let worker_results: Vec<(Vec<f32>, Vec<f32>)> = std::thread::scope(|sc| {
+                let refs_ref = &refs;
+                let handles: Vec<_> = (0..2)
+                    .map(|_| {
+                        let sim2 = sim.clone();
+                        sc.spawn(move || {
+                            let mut ws = Workspace::with_shards(2);
+                            let mut out = BatchOutput::new();
+                            sim2.attribute_batch_into(
+                                &mut ws,
+                                refs_ref,
+                                Method::Guided,
+                                AttrOptions::default(),
+                                false,
+                                &mut out,
+                            );
+                            (out.relevance.clone(), out.logits.clone())
+                        })
+                    })
+                    .collect();
+                handles.into_iter().map(|h| h.join().unwrap()).collect()
+            });
+            for (w, (rel, logits)) in worker_results.iter().enumerate() {
+                for (i, single) in singles.iter().enumerate() {
+                    if &rel[i * n_in..(i + 1) * n_in] != single.relevance.as_slice() {
+                        return Err(format!("worker {w}: image {i} relevance diverged"));
+                    }
+                    let n_out = single.logits.len();
+                    if &logits[i * n_out..(i + 1) * n_out] != single.logits.as_slice() {
+                        return Err(format!("worker {w}: image {i} logits diverged"));
                     }
                 }
             }

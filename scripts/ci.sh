@@ -1,16 +1,24 @@
 #!/usr/bin/env bash
 # Canonical pre-merge check (referenced from ROADMAP.md).
 #
-# Tier-1 gate first (must stay green), then style/lint gates. The lint
-# gates cover all targets including the harness=false bench binaries.
+# Tier-1 gate first (must stay green), then style/lint gates. The build
+# gate uses --all-targets so the harness=false bench binaries are
+# compiled in the tier-1 step too (previously they were only reached by
+# clippy, letting bench-only breakage slip past the build gate).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
-echo "== tier-1: cargo build --release =="
-cargo build --release
+echo "== tier-1: cargo build --release --all-targets =="
+cargo build --release --all-targets
 
 echo "== tier-1: cargo test -q =="
 cargo test -q
+
+echo "== perf gate: allocation-count regression (release) =="
+# The zero-allocation steady-state guarantee is a release-mode property
+# the serving path depends on; run its regression test under the same
+# profile the binaries ship with.
+cargo test --release -q --test alloc_regression
 
 echo "== style: cargo fmt --check =="
 cargo fmt --check
