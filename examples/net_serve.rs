@@ -1,0 +1,65 @@
+//! Networked serving demo (E15 companion): the full TCP path in one
+//! process, fully offline — synthetic Table-III weights, loopback
+//! server, client calls, graceful drain.
+//!
+//!     cargo run --release --example net_serve
+//!
+//! Pipeline per request:
+//!   client `attribute_batch` → framed wire protocol (JSON header +
+//!   raw LE f32 payload) → TCP server (bounded pool, deadlines) →
+//!   coordinator micro-batching → shared-plan simulator FP+BP →
+//!   heatmap f32s back over the wire, bit-exact.
+
+use std::time::Duration;
+
+use attrax::attribution::Method;
+use attrax::coordinator::{Config, Coordinator};
+use attrax::fpga::{self, Board};
+use attrax::model::{Network, Params};
+use attrax::sched::Simulator;
+use attrax::serve::{Client, Server, ServerConfig};
+
+fn main() -> anyhow::Result<()> {
+    let net = Network::table3();
+    let params = Params::synthetic(&net, 42);
+    let board = Board::PynqZ2;
+    let hw = fpga::choose_config(board, &net, Method::Guided);
+    let sim = Simulator::new(net, &params, hw)?;
+
+    let coord = Coordinator::start(
+        sim,
+        Config { workers: 2, queue_depth: 64, max_batch: 4, max_wait_ms: 2, ..Default::default() },
+        None,
+    )?;
+    let srv = Server::start("127.0.0.1:0", coord, ServerConfig::default())?;
+    let addr = srv.local_addr();
+    println!("== net_serve: {board} behind {addr} (synthetic weights) ==");
+
+    let mut client = Client::connect(addr)?;
+    client.set_timeout(Some(Duration::from_secs(10)))?;
+
+    // one image
+    let mut rng = attrax::util::rng::Pcg32::seeded(7);
+    let sample = attrax::data::make_sample(3, &mut rng);
+    let one = client.attribute(&sample.image, Method::Guided)?;
+    println!(
+        "single: pred={} device={:.2}ms heatmap[{}] logits[{}]",
+        one.pred,
+        one.device_cycles as f64 / (fpga::TARGET_FREQ_MHZ * 1e3),
+        one.relevance.len(),
+        one.logits.len()
+    );
+
+    // a batched frame: one wire round-trip, one micro-batched device pass
+    let imgs: Vec<Vec<f32>> =
+        (0..4).map(|i| attrax::data::make_sample(i, &mut rng).image).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let batch = client.attribute_batch(&refs, Method::Saliency)?;
+    let preds: Vec<usize> = batch.iter().map(|a| a.pred).collect();
+    println!("batch of {}: preds {:?}", batch.len(), preds);
+
+    let snap = srv.shutdown()?;
+    println!("\n== serving metrics ==\n{}", snap.report());
+    anyhow::ensure!(snap.completed == 5, "expected 5 completed, saw {}", snap.completed);
+    Ok(())
+}

@@ -10,6 +10,10 @@ use crate::util::stats::Samples;
 struct Inner {
     completed: u64,
     rejected: u64,
+    rejected_busy: u64,
+    deadline_exceeded: u64,
+    conns_open: u64,
+    conns_total: u64,
     errors: u64,
     latency_ms: Samples,
     queue_wait_ms: Samples,
@@ -31,6 +35,18 @@ pub struct Metrics {
 pub struct Snapshot {
     pub completed: u64,
     pub rejected: u64,
+    /// Requests shed with a `Busy` frame at the serving layer
+    /// (connection pool or queue full). Not disjoint from `rejected`:
+    /// a queue-full TCP request increments `rejected` at coordinator
+    /// admission AND `rejected_busy` when the frame is shed, so the
+    /// two must not be summed.
+    pub rejected_busy: u64,
+    /// Requests whose deadline elapsed before a response was ready.
+    pub deadline_exceeded: u64,
+    /// TCP connections open when the snapshot was taken (gauge).
+    pub open_conns: u64,
+    /// TCP connections accepted over the server's lifetime.
+    pub total_conns: u64,
     pub errors: u64,
     pub wall_s: f64,
     pub throughput_ips: f64,
@@ -76,6 +92,27 @@ impl Metrics {
         self.inner.lock().unwrap().rejected += 1;
     }
 
+    /// A request (or connection) was shed with a `Busy` error frame.
+    pub fn record_busy(&self) {
+        self.inner.lock().unwrap().rejected_busy += 1;
+    }
+
+    /// A request's deadline elapsed before its response was ready.
+    pub fn record_deadline_exceeded(&self) {
+        self.inner.lock().unwrap().deadline_exceeded += 1;
+    }
+
+    pub fn record_conn_open(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.conns_open += 1;
+        g.conns_total += 1;
+    }
+
+    pub fn record_conn_close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.conns_open = g.conns_open.saturating_sub(1);
+    }
+
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
     }
@@ -95,6 +132,10 @@ impl Metrics {
         Snapshot {
             completed: g.completed,
             rejected: g.rejected,
+            rejected_busy: g.rejected_busy,
+            deadline_exceeded: g.deadline_exceeded,
+            open_conns: g.conns_open,
+            total_conns: g.conns_total,
             errors: g.errors,
             wall_s,
             throughput_ips: if wall_s > 0.0 { g.completed as f64 / wall_s } else { 0.0 },
@@ -122,6 +163,7 @@ impl Snapshot {
     pub fn report(&self) -> String {
         format!(
             "completed={} rejected={} errors={} wall={:.2}s throughput={:.1} img/s\n\
+             serve: busy-shed={} deadline-exceeded={} conns open={} total={}\n\
              latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
              queue wait: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
              device model: mean {:.2} Mcycles/request\n\
@@ -131,6 +173,10 @@ impl Snapshot {
             self.errors,
             self.wall_s,
             self.throughput_ips,
+            self.rejected_busy,
+            self.deadline_exceeded,
+            self.open_conns,
+            self.total_conns,
             self.mean_ms,
             self.p50_ms,
             self.p95_ms,
@@ -176,6 +222,30 @@ mod tests {
         assert!((s.min_verify_corr - 0.97).abs() < 1e-9);
         assert!((s.mean_sim_mcycles - 1.0).abs() < 1e-9);
         assert!(s.report().contains("completed=100"));
+    }
+
+    #[test]
+    fn serve_counters_and_gauges() {
+        let m = Metrics::new();
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_conn_close();
+        m.record_busy();
+        m.record_busy();
+        m.record_busy();
+        m.record_deadline_exceeded();
+        let s = m.snapshot();
+        assert_eq!(s.rejected_busy, 3);
+        assert_eq!(s.deadline_exceeded, 1);
+        assert_eq!(s.open_conns, 1);
+        assert_eq!(s.total_conns, 2);
+        assert!(s.report().contains("busy-shed=3"));
+        assert!(s.report().contains("deadline-exceeded=1"));
+        assert!(s.report().contains("conns open=1 total=2"));
+        // the gauge never underflows
+        m.record_conn_close();
+        m.record_conn_close();
+        assert_eq!(m.snapshot().open_conns, 0);
     }
 
     #[test]

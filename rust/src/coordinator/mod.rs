@@ -61,6 +61,9 @@ pub struct Response {
     /// time divided evenly across its images), as opposed to host wall
     /// time.
     pub device_ms: f64,
+    /// The same quantity in raw modeled cycles (clock-independent; what
+    /// the serve wire protocol reports).
+    pub device_cycles: u64,
 }
 
 /// Terminal reply for a request the service shut down before running.
@@ -369,6 +372,7 @@ fn worker_loop(
                 method,
                 latency_ms: host_ms,
                 device_ms: per_image_cycles as f64 / (freq_mhz * 1e3),
+                device_cycles: per_image_cycles,
             };
             // receiver may have gone away; that's fine
             let _ = req.reply.send(Ok(resp));

@@ -18,6 +18,9 @@
 //!   float golden path; python never runs at serving time).
 //! * [`coordinator`] — the XAI serving layer: request queue, worker
 //!   pool, shadow verification, metrics.
+//! * [`serve`] — the networked front door: framed wire protocol over
+//!   `std::net`, TCP server with admission control and graceful
+//!   drain, blocking client, load generator.
 //! * [`fx`], [`model`], [`data`], [`util`] — supporting substrates
 //!   (fixed-point math, network graphs/params, shapes-32, and the
 //!   from-scratch util kit for this offline environment).
@@ -34,4 +37,5 @@ pub mod hls;
 pub mod model;
 pub mod runtime;
 pub mod sched;
+pub mod serve;
 pub mod util;

@@ -3,7 +3,9 @@
 //! Subcommands:
 //!   info       print model/manifest/device summary (Table III)
 //!   attribute  run one attribution on the device simulator (+ golden)
-//!   serve      run the serving coordinator under synthetic load
+//!   serve      run the serving coordinator (in-process load, or a TCP
+//!              server with --tcp)
+//!   loadgen    hammer a serve --tcp endpoint, emit BENCH_serve.json
 //!   sweep      Table IV: resources + latency across the three boards
 //!   masks      Table II / §V mask-memory accounting
 
@@ -13,6 +15,7 @@ use attrax::coordinator::{server, Config, Coordinator};
 use attrax::fpga::{self, Board, ALL_BOARDS};
 use attrax::model::{artifacts_dir, load_artifacts, Network};
 use attrax::sched::{AttrOptions, Simulator};
+use attrax::serve::{loadgen, Server, ServerConfig};
 use attrax::util::cli::Command;
 use attrax::util::{log, ppm};
 
@@ -24,6 +27,7 @@ fn main() {
         "info" => cmd_info(argv),
         "attribute" => cmd_attribute(argv),
         "serve" => cmd_serve(argv),
+        "loadgen" => cmd_loadgen(argv),
         "sweep" => cmd_sweep(argv),
         "masks" => cmd_masks(argv),
         "report" => cmd_report(argv),
@@ -48,7 +52,8 @@ fn print_help() {
          subcommands:\n\
          \x20 info        model + artifact summary (paper Table III)\n\
          \x20 attribute   one attribution on the device simulator\n\
-         \x20 serve       serving coordinator under synthetic load\n\
+         \x20 serve       serving coordinator (--tcp <addr> for the network front door)\n\
+         \x20 loadgen     drive a serve --tcp endpoint, emit BENCH_serve.json\n\
          \x20 sweep       per-board resources + latency (paper Table IV)\n\
          \x20 masks       mask memory accounting (paper Table II / §V)\n\
          \x20 report      Vitis-style synthesis report for a design point\n\
@@ -193,8 +198,27 @@ fn cmd_attribute(argv: Vec<String>) -> i32 {
     0
 }
 
+/// Like [`build_sim`], but falls back to deterministic synthetic
+/// Table-III weights when trained artifacts are absent, so the TCP
+/// serving path works fully offline. Returns `None` artifacts in the
+/// fallback (shadow verification needs the real ones).
+fn build_sim_or_synthetic(
+    board: Board,
+) -> anyhow::Result<(Simulator, Option<(attrax::model::Manifest, attrax::model::Params)>)> {
+    match build_sim(board) {
+        Ok((sim, m, p)) => Ok((sim, Some((m, p)))),
+        Err(e) => {
+            println!("(artifacts unavailable: {e} — serving synthetic seeded Table-III weights)");
+            let net = Network::table3();
+            let params = attrax::model::Params::synthetic(&net, 42);
+            let cfg = fpga::choose_config(board, &net, Method::Guided);
+            Ok((Simulator::new(net, &params, cfg)?, None))
+        }
+    }
+}
+
 fn cmd_serve(argv: Vec<String>) -> i32 {
-    let cmd = Command::new("serve", "serving coordinator under synthetic load")
+    let cmd = Command::new("serve", "serving coordinator (in-process load, or TCP with --tcp)")
         .opt("device", "pynq-z2", "target board")
         .opt("workers", "2", "worker threads (accelerator contexts)")
         .opt("queue", "64", "queue depth (backpressure bound)")
@@ -204,9 +228,16 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("method", "", "fix one method (default: cycle all three)")
         .opt("batch", "1", "micro-batch: max same-method requests per device pass")
         .opt("batch-wait", "2", "ms a worker lingers to fill its micro-batch")
-        .opt("shards", "0", "compute threads per worker batch pass (0 = auto)");
+        .opt("shards", "0", "compute threads per worker batch pass (0 = auto)")
+        .opt("tcp", "", "serve over TCP on this address (e.g. 127.0.0.1:7878)")
+        .opt("max-conns", "32", "TCP connection pool bound (Busy-shed beyond)")
+        .opt("deadline-ms", "0", "default per-request deadline (0 = none)")
+        .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)");
     let args = parse_or_exit(cmd, argv);
     let board = board_of(&args);
+    if let Some(addr) = args.get("tcp").filter(|a| !a.is_empty()) {
+        return cmd_serve_tcp(addr, &args, board);
+    }
     let (sim, manifest, params) = match build_sim(board) {
         Ok(v) => v,
         Err(e) => return fail(e),
@@ -250,6 +281,165 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         report.wall_s
     );
     println!("\n== coordinator metrics ==\n{}", snap.report());
+    0
+}
+
+/// `serve --tcp <addr>`: the networked front door. Works offline
+/// (synthetic weights when artifacts are absent).
+fn cmd_serve_tcp(addr: &str, args: &attrax::util::cli::Args, board: Board) -> i32 {
+    let (sim, artifacts) = match build_sim_or_synthetic(board) {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    // shadow verification needs the trained artifacts; drop it (with a
+    // warning) rather than silently pretending on the synthetic path
+    let mut verify: f64 = args.parse_num("verify", 0.1);
+    if verify > 0.0 && artifacts.is_none() {
+        eprintln!("warning: --verify {verify} ignored (no artifacts for the golden path)");
+        verify = 0.0;
+    }
+    let cfg = Config {
+        workers: args.parse_num("workers", 2),
+        queue_depth: args.parse_num("queue", 64),
+        verify_fraction: verify,
+        freq_mhz: fpga::TARGET_FREQ_MHZ,
+        max_batch: args.parse_num("batch", 1),
+        max_wait_ms: args.parse_num("batch-wait", 2),
+        shards: args.parse_num("shards", 0),
+    };
+    let artifacts = if verify > 0.0 { artifacts } else { None };
+    let coord = match Coordinator::start(sim, cfg, artifacts) {
+        Ok(c) => c,
+        Err(e) => return fail(e),
+    };
+    let scfg = ServerConfig {
+        max_conns: args.parse_num("max-conns", 32),
+        default_deadline_ms: args.parse_num("deadline-ms", 0),
+    };
+    let srv = match Server::start(addr, coord, scfg) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let duration: u64 = args.parse_num("duration", 0);
+    let dur_txt = if duration == 0 {
+        "until killed".to_string()
+    } else {
+        format!("for {duration}s")
+    };
+    println!("serving {board} on {} ({dur_txt})", srv.local_addr());
+    let t0 = std::time::Instant::now();
+    loop {
+        std::thread::sleep(std::time::Duration::from_millis(200));
+        if duration > 0 && t0.elapsed().as_secs() >= duration {
+            break;
+        }
+    }
+    println!("draining ...");
+    match srv.shutdown() {
+        Ok(snap) => {
+            println!("\n== serving metrics ==\n{}", snap.report());
+            0
+        }
+        Err(e) => fail(e),
+    }
+}
+
+fn cmd_loadgen(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("loadgen", "drive a serve --tcp endpoint, emit BENCH_serve.json")
+        .opt("conns", "4", "concurrent client connections")
+        .opt("requests", "0", "total request frames (0 = no limit, run for --secs)")
+        .opt("secs", "5", "wall-clock cap; first of --requests/--secs ends the run")
+        .opt("rps", "0", "aggregate target frame rate (0 = closed loop)")
+        .opt("batch", "1", "images per request frame")
+        .opt("elems", "3072", "f32s per image (Table-III input = 3*32*32)")
+        .opt("method", "", "fix one method (default: cycle all three)")
+        .opt("timeout-ms", "2000", "per-request deadline")
+        .opt("seed", "42", "workload seed")
+        .opt("out", "BENCH_serve.json", "machine-readable report path")
+        .flag("smoke", "2s self-contained check: spin an in-process loopback server");
+    let args = parse_or_exit(cmd, argv);
+    let method = args.get("method").filter(|s| !s.is_empty()).map(|s| {
+        Method::parse(s).unwrap_or_else(|| {
+            eprintln!("unknown method {s:?}");
+            std::process::exit(2);
+        })
+    });
+    let smoke = args.flag("smoke");
+    let mut spec = loadgen::Spec {
+        addr: String::new(),
+        conns: args.parse_num("conns", 4),
+        requests: args.parse_num("requests", 0),
+        secs: args.parse_num("secs", 5.0),
+        rps: args.parse_num("rps", 0.0),
+        batch: args.parse_num("batch", 1),
+        elems: args.parse_num("elems", 3072),
+        method,
+        timeout_ms: args.parse_num("timeout-ms", 2000),
+        seed: args.parse_num("seed", 42),
+    };
+
+    // --smoke: bring up our own loopback server on an ephemeral port
+    let srv = if smoke {
+        spec.secs = spec.secs.min(2.0);
+        let (sim, _) = match build_sim_or_synthetic(Board::PynqZ2) {
+            Ok(v) => v,
+            Err(e) => return fail(e),
+        };
+        let cfg = Config { workers: 2, queue_depth: 32, max_batch: 4, ..Default::default() };
+        let coord = match Coordinator::start(sim, cfg, None) {
+            Ok(c) => c,
+            Err(e) => return fail(e),
+        };
+        let srv = match Server::start("127.0.0.1:0", coord, ServerConfig::default()) {
+            Ok(s) => s,
+            Err(e) => return fail(e),
+        };
+        spec.addr = srv.local_addr().to_string();
+        Some(srv)
+    } else {
+        match args.positional.first() {
+            Some(a) => spec.addr = a.clone(),
+            None => {
+                eprintln!("usage: attrax loadgen <addr> [options], or attrax loadgen --smoke");
+                return 2;
+            }
+        }
+        None
+    };
+
+    let budget_txt = if spec.requests > 0 {
+        format!("{} frames", spec.requests)
+    } else {
+        format!("{:.1}s", spec.secs)
+    };
+    println!(
+        "loadgen: {} conns x batch {} against {} ({budget_txt} ...)",
+        spec.conns, spec.batch, spec.addr
+    );
+    let report = match loadgen::run(&spec) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    println!("\n== loadgen report ==\n{}", report.render());
+    if let Some(srv) = srv {
+        match srv.shutdown() {
+            Ok(snap) => println!("\n== server metrics ==\n{}", snap.report()),
+            Err(e) => return fail(e),
+        }
+    }
+    let out = args.get_or("out", "BENCH_serve.json");
+    let payload = format!("{}\n", report.to_json(&spec));
+    match std::fs::write(out, &payload) {
+        Ok(()) => println!("\nwrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            return 1;
+        }
+    }
+    if report.ok == 0 {
+        eprintln!("loadgen completed zero requests");
+        return 1;
+    }
     0
 }
 

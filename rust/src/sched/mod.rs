@@ -1097,8 +1097,10 @@ impl Simulator {
     }
 }
 
-/// Test-only helpers shared across the crate's unit tests.
-#[cfg(test)]
+/// Synthetic-model helpers shared by the crate's unit tests,
+/// integration tests (`rust/tests/e2e_net.rs`), and offline demos.
+/// Compiled unconditionally so `#[test]`-gated code outside the crate
+/// can build a tiny deterministic simulator without trained artifacts.
 pub mod tests_support {
     use super::*;
     use crate::model::{NetworkBuilder, Shape, Tensor};

@@ -1,0 +1,156 @@
+//! Blocking client for the serve wire protocol: one reused TCP
+//! connection, `attribute` / `attribute_batch` calls, per-request
+//! deadlines.
+//!
+//! The connection is reused across calls (requests are answered in
+//! order on one stream, so no multiplexing machinery is needed).
+//! Rejections arrive as typed [`ErrCode`]s in
+//! [`ClientError::Rejected`] — `Busy` means retry later, `Closed`
+//! means the server is going away.
+
+use std::fmt;
+use std::io;
+use std::net::{TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use super::proto::{self, ErrCode, Frame, ProtoError, RequestFrame};
+use crate::attribution::Method;
+
+/// One image's worth of a serving response.
+#[derive(Clone, Debug)]
+pub struct Attribution {
+    pub pred: usize,
+    pub logits: Vec<f32>,
+    pub relevance: Vec<f32>,
+    /// Modeled device cycles for this image (the Table-IV number).
+    pub device_cycles: u64,
+}
+
+/// Client-side failure.
+#[derive(Debug)]
+pub enum ClientError {
+    Io(io::Error),
+    Proto(ProtoError),
+    /// The server answered with a typed error frame.
+    Rejected { code: ErrCode, msg: String },
+}
+
+impl fmt::Display for ClientError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ClientError::Io(e) => write!(f, "i/o: {e}"),
+            ClientError::Proto(e) => write!(f, "protocol: {e}"),
+            ClientError::Rejected { code, msg } => write!(f, "rejected ({code}): {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for ClientError {}
+
+impl From<io::Error> for ClientError {
+    fn from(e: io::Error) -> Self {
+        ClientError::Io(e)
+    }
+}
+
+impl From<ProtoError> for ClientError {
+    fn from(e: ProtoError) -> Self {
+        ClientError::Proto(e)
+    }
+}
+
+/// Extra socket-timeout slack over the request deadline, so a
+/// `DeadlineExceeded` error frame can still arrive.
+const TIMEOUT_SLACK: Duration = Duration::from_millis(500);
+
+pub struct Client {
+    stream: TcpStream,
+    next_id: u64,
+    timeout: Option<Duration>,
+}
+
+impl Client {
+    pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
+        let stream = TcpStream::connect(addr)?;
+        let _ = stream.set_nodelay(true);
+        Ok(Client { stream, next_id: 1, timeout: None })
+    }
+
+    /// Per-request deadline: sent to the server in the request header
+    /// and enforced locally as a socket read timeout (with slack so
+    /// the server's `DeadlineExceeded` frame wins the race).
+    pub fn set_timeout(&mut self, timeout: Option<Duration>) -> io::Result<()> {
+        self.timeout = timeout;
+        self.stream.set_read_timeout(timeout.map(|t| t + TIMEOUT_SLACK))
+    }
+
+    /// Attribute one image.
+    pub fn attribute(&mut self, image: &[f32], method: Method) -> Result<Attribution, ClientError> {
+        let mut v = self.attribute_batch(&[image], method)?;
+        v.pop().ok_or_else(|| ClientError::Proto(ProtoError::Malformed("empty response".into())))
+    }
+
+    /// Attribute a batch of same-shape images in one request frame (the
+    /// server fans them into the coordinator, which micro-batches them
+    /// into one device pass). Results are image-ordered.
+    pub fn attribute_batch(
+        &mut self,
+        images: &[&[f32]],
+        method: Method,
+    ) -> Result<Vec<Attribution>, ClientError> {
+        if images.is_empty() {
+            return Ok(Vec::new());
+        }
+        let elems = images[0].len();
+        if images.iter().any(|i| i.len() != elems) {
+            return Err(ClientError::Proto(ProtoError::Malformed(
+                "batch images must share one shape".into(),
+            )));
+        }
+        let id = self.next_id;
+        self.next_id += 1;
+        let mut flat = Vec::with_capacity(images.len() * elems);
+        for img in images {
+            flat.extend_from_slice(img);
+        }
+        let req = RequestFrame {
+            id,
+            method,
+            target: None,
+            n: images.len(),
+            elems,
+            // at least 1: a sub-millisecond timeout must not truncate
+            // to 0, which the server reads as "no deadline"
+            deadline_ms: self.timeout.map(|t| (t.as_millis() as u64).max(1)),
+            images: flat,
+        };
+        proto::write_frame(&mut self.stream, &Frame::Request(req))?;
+        match proto::read_frame(&mut self.stream)? {
+            None => Err(ClientError::Proto(ProtoError::Eof)),
+            Some(Frame::Error(e)) => Err(ClientError::Rejected { code: e.code, msg: e.msg }),
+            Some(Frame::Request(_)) => Err(ClientError::Proto(ProtoError::Malformed(
+                "server sent a request frame".into(),
+            ))),
+            Some(Frame::Response(r)) => {
+                if r.id != id || r.n != images.len() {
+                    return Err(ClientError::Proto(ProtoError::Malformed(format!(
+                        "response for frame {} (n {}), expected frame {id} (n {})",
+                        r.id,
+                        r.n,
+                        images.len()
+                    ))));
+                }
+                let mut out = Vec::with_capacity(r.n);
+                for b in 0..r.n {
+                    out.push(Attribution {
+                        pred: r.preds[b],
+                        logits: r.logits[b * r.out_n..(b + 1) * r.out_n].to_vec(),
+                        relevance: r.relevance[b * r.elems..(b + 1) * r.elems].to_vec(),
+                        device_cycles: r.device_cycles[b],
+                    });
+                }
+                Ok(out)
+            }
+        }
+    }
+}

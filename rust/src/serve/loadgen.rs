@@ -1,0 +1,295 @@
+//! Load generator for a serve endpoint: N persistent connections,
+//! open-loop (target RPS with exponential gaps) or closed-loop
+//! hammering, configurable method mix and frame batch size. Emits the
+//! numbers `BENCH_serve.json` records: sustained RPS, latency
+//! percentiles, shed rate.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::{Duration, Instant};
+
+use super::client::{Client, ClientError};
+use super::proto::ErrCode;
+use crate::attribution::{Method, ALL_METHODS};
+use crate::util::json::{num, obj, s, Json};
+use crate::util::rng::Pcg32;
+use crate::util::stats::Samples;
+
+/// Workload description.
+#[derive(Clone, Debug)]
+pub struct Spec {
+    pub addr: String,
+    /// Concurrent client connections.
+    pub conns: usize,
+    /// Total request frames across all connections (0 = no frame
+    /// limit, run until `secs`).
+    pub requests: usize,
+    /// Wall-clock budget in seconds; whichever of `requests`/`secs`
+    /// hits first ends the run.
+    pub secs: f64,
+    /// Aggregate target arrival rate in frames/s (0 = closed loop).
+    pub rps: f64,
+    /// Images per request frame.
+    pub batch: usize,
+    /// f32s per image (must match the served model's input).
+    pub elems: usize,
+    /// Fixed method, or None to cycle through all three.
+    pub method: Option<Method>,
+    /// Per-request deadline (0 = none).
+    pub timeout_ms: u64,
+    pub seed: u64,
+}
+
+impl Default for Spec {
+    fn default() -> Self {
+        Spec {
+            addr: "127.0.0.1:7878".into(),
+            conns: 4,
+            requests: 0,
+            secs: 5.0,
+            rps: 0.0,
+            batch: 1,
+            elems: 3 * 32 * 32,
+            method: None,
+            timeout_ms: 2000,
+            seed: 42,
+        }
+    }
+}
+
+/// Aggregate outcome of one load run.
+#[derive(Clone, Debug)]
+pub struct Report {
+    pub sent: u64,
+    pub ok: u64,
+    /// `Busy` rejections (connection pool or queue full).
+    pub shed: u64,
+    pub deadline_exceeded: u64,
+    pub closed: u64,
+    pub errors: u64,
+    pub wall_s: f64,
+    /// Completed request frames per second.
+    pub sustained_rps: f64,
+    /// Completed images per second (`sustained_rps * batch`).
+    pub image_rps: f64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+    /// shed / sent.
+    pub shed_rate: f64,
+}
+
+impl Report {
+    pub fn to_json(&self, spec: &Spec) -> Json {
+        obj(vec![
+            ("bench", s("serve_loadgen")),
+            ("addr", s(&spec.addr)),
+            ("conns", num(spec.conns as f64)),
+            ("batch", num(spec.batch as f64)),
+            ("elems", num(spec.elems as f64)),
+            ("rps_target", num(spec.rps)),
+            ("timeout_ms", num(spec.timeout_ms as f64)),
+            ("sent", num(self.sent as f64)),
+            ("ok", num(self.ok as f64)),
+            ("shed", num(self.shed as f64)),
+            ("deadline_exceeded", num(self.deadline_exceeded as f64)),
+            ("closed", num(self.closed as f64)),
+            ("errors", num(self.errors as f64)),
+            ("wall_s", num(self.wall_s)),
+            ("sustained_rps", num(self.sustained_rps)),
+            ("image_rps", num(self.image_rps)),
+            (
+                "latency_ms",
+                obj(vec![
+                    ("mean", num(self.mean_ms)),
+                    ("p50", num(self.p50_ms)),
+                    ("p95", num(self.p95_ms)),
+                    ("p99", num(self.p99_ms)),
+                ]),
+            ),
+            ("shed_rate", num(self.shed_rate)),
+        ])
+    }
+
+    pub fn render(&self) -> String {
+        format!(
+            "sent={} ok={} shed={} deadline-exceeded={} closed={} errors={} wall={:.2}s\n\
+             sustained: {:.1} req/s ({:.1} img/s)\n\
+             latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
+             shed rate: {:.1}%",
+            self.sent,
+            self.ok,
+            self.shed,
+            self.deadline_exceeded,
+            self.closed,
+            self.errors,
+            self.wall_s,
+            self.sustained_rps,
+            self.image_rps,
+            self.mean_ms,
+            self.p50_ms,
+            self.p95_ms,
+            self.p99_ms,
+            100.0 * self.shed_rate,
+        )
+    }
+}
+
+#[derive(Default)]
+struct ConnStats {
+    sent: u64,
+    ok: u64,
+    shed: u64,
+    deadline: u64,
+    closed: u64,
+    errors: u64,
+    lat_ms: Vec<f64>,
+}
+
+/// Run the workload. Errors only when no connection could be
+/// established at all; per-request failures are counted in the report.
+pub fn run(spec: &Spec) -> anyhow::Result<Report> {
+    anyhow::ensure!(spec.conns > 0, "need at least one connection");
+    let max_batch = super::proto::MAX_IMAGES_PER_FRAME;
+    anyhow::ensure!(spec.batch > 0 && spec.batch <= max_batch, "batch must be 1..={max_batch}");
+    anyhow::ensure!(spec.elems > 0, "elems must be positive");
+    let per_conn_rate = spec.rps / spec.conns as f64;
+    // shared frame budget so the total sent honors `requests` exactly
+    let budget = AtomicUsize::new(if spec.requests == 0 { usize::MAX } else { spec.requests });
+    let secs = if spec.secs > 0.0 { spec.secs } else { 3600.0 };
+    let stop_at = Instant::now() + Duration::from_secs_f64(secs);
+    let t0 = Instant::now();
+    let results: Vec<anyhow::Result<ConnStats>> = std::thread::scope(|sc| {
+        let budget = &budget;
+        let handles: Vec<_> = (0..spec.conns)
+            .map(|c| sc.spawn(move || conn_loop(spec, c, per_conn_rate, budget, stop_at)))
+            .collect();
+        let mut out = Vec::with_capacity(handles.len());
+        for h in handles {
+            let joined = h.join();
+            out.push(joined.unwrap_or_else(|_| Err(anyhow::anyhow!("loadgen thread panicked"))));
+        }
+        out
+    });
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut agg = ConnStats::default();
+    let mut first_err = None;
+    let mut ok_conns = 0usize;
+    for r in results {
+        match r {
+            Ok(st) => {
+                ok_conns += 1;
+                agg.sent += st.sent;
+                agg.ok += st.ok;
+                agg.shed += st.shed;
+                agg.deadline += st.deadline;
+                agg.closed += st.closed;
+                agg.errors += st.errors;
+                agg.lat_ms.extend_from_slice(&st.lat_ms);
+            }
+            Err(e) => {
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+        }
+    }
+    if ok_conns == 0 {
+        return Err(first_err.unwrap_or_else(|| anyhow::anyhow!("no connections ran")));
+    }
+    let mut lat = Samples::new();
+    for &x in &agg.lat_ms {
+        lat.push(x);
+    }
+    Ok(Report {
+        sent: agg.sent,
+        ok: agg.ok,
+        shed: agg.shed,
+        deadline_exceeded: agg.deadline,
+        closed: agg.closed,
+        errors: agg.errors,
+        wall_s,
+        sustained_rps: if wall_s > 0.0 { agg.ok as f64 / wall_s } else { 0.0 },
+        image_rps: if wall_s > 0.0 { (agg.ok * spec.batch as u64) as f64 / wall_s } else { 0.0 },
+        mean_ms: lat.mean(),
+        p50_ms: lat.percentile(0.50),
+        p95_ms: lat.percentile(0.95),
+        p99_ms: lat.percentile(0.99),
+        shed_rate: if agg.sent > 0 { agg.shed as f64 / agg.sent as f64 } else { 0.0 },
+    })
+}
+
+fn apply_timeout(client: &mut Client, timeout_ms: u64) -> std::io::Result<()> {
+    if timeout_ms > 0 {
+        client.set_timeout(Some(Duration::from_millis(timeout_ms)))
+    } else {
+        Ok(())
+    }
+}
+
+/// Take one frame ticket from the shared budget (false = exhausted).
+fn take_ticket(budget: &AtomicUsize) -> bool {
+    budget.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| b.checked_sub(1)).is_ok()
+}
+
+fn conn_loop(
+    spec: &Spec,
+    cid: usize,
+    rate: f64,
+    budget: &AtomicUsize,
+    stop_at: Instant,
+) -> anyhow::Result<ConnStats> {
+    let mut client = Client::connect(spec.addr.as_str())?;
+    apply_timeout(&mut client, spec.timeout_ms)?;
+    let mut rng = Pcg32::seeded(spec.seed ^ (cid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let mut st = ConnStats::default();
+    let mut images: Vec<Vec<f32>> = (0..spec.batch).map(|_| vec![0.0f32; spec.elems]).collect();
+    let mut i = 0usize;
+    while Instant::now() < stop_at && take_ticket(budget) {
+        if rate > 0.0 {
+            // open-loop pacing: exponential inter-arrival gaps, capped
+            // by the time left in the run so low rates stay faithful
+            // and a mis-set rate cannot stall the thread
+            let gap = Duration::from_secs_f64(-(1.0 - rng.f32() as f64).ln() / rate);
+            let remaining = stop_at.saturating_duration_since(Instant::now());
+            std::thread::sleep(gap.min(remaining));
+        }
+        for img in &mut images {
+            for px in img.iter_mut() {
+                *px = rng.f32();
+            }
+        }
+        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+        let method = spec.method.unwrap_or(ALL_METHODS[i % ALL_METHODS.len()]);
+        i += 1;
+        let t = Instant::now();
+        st.sent += 1;
+        match client.attribute_batch(&refs, method) {
+            Ok(_) => {
+                st.ok += 1;
+                st.lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+            }
+            Err(ClientError::Rejected { code: ErrCode::Busy, .. }) => st.shed += 1,
+            Err(ClientError::Rejected { code: ErrCode::DeadlineExceeded, .. }) => st.deadline += 1,
+            Err(ClientError::Rejected { code: ErrCode::Closed, .. }) => {
+                st.closed += 1;
+                break;
+            }
+            Err(ClientError::Rejected { .. }) => st.errors += 1,
+            Err(_) => {
+                // connection state unknown after an i/o or framing
+                // error: reconnect once, give up on failure
+                st.errors += 1;
+                match Client::connect(spec.addr.as_str()) {
+                    Ok(c) => {
+                        client = c;
+                        apply_timeout(&mut client, spec.timeout_ms)?;
+                    }
+                    Err(_) => break,
+                }
+            }
+        }
+    }
+    Ok(st)
+}

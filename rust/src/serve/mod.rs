@@ -1,0 +1,35 @@
+//! Networked serving subsystem (S11): the system's front door.
+//!
+//! Everything before this module is in-process: the coordinator
+//! micro-batches requests onto the shared-plan execution core, but
+//! nothing outside the process could reach it. `serve` turns the
+//! library into a *service*, std-only (`std::net`, no async runtime):
+//!
+//! * [`proto`] — length-prefixed framed wire protocol: compact JSON
+//!   header (via [`crate::util::json`]) + raw little-endian f32
+//!   payload, with typed error frames (`Busy`, `Closed`,
+//!   `BadRequest`, `DeadlineExceeded`) and hard frame-size caps.
+//! * [`server`] — `TcpListener` acceptor with a bounded connection
+//!   pool feeding the [`crate::coordinator::Coordinator`]: admission
+//!   control sheds load with `Busy` instead of queueing unboundedly,
+//!   per-request deadlines are enforced server-side, and shutdown
+//!   drains gracefully (in-flight requests answer, idle and new
+//!   connections get `Closed`).
+//! * [`client`] — blocking client with connection reuse,
+//!   `attribute` / `attribute_batch`, and timeout support.
+//! * [`loadgen`] — multi-connection load generator (`attrax loadgen`)
+//!   emitting `BENCH_serve.json`: sustained RPS, p50/p95/p99 latency,
+//!   shed rate.
+//!
+//! Heatmap f32s cross the wire bit-exactly (raw LE payload, no text
+//! floats), so a networked client sees the same numerics as an
+//! in-process caller — asserted end-to-end in `rust/tests/e2e_net.rs`.
+
+pub mod client;
+pub mod loadgen;
+pub mod proto;
+pub mod server;
+
+pub use client::{Attribution, Client, ClientError};
+pub use proto::{ErrCode, Frame, ProtoError};
+pub use server::{Server, ServerConfig};

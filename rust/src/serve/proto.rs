@@ -1,0 +1,558 @@
+//! Wire protocol for the networked serving subsystem (std-only).
+//!
+//! Every message is one *frame*:
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic 0x5841_4901 ("XAI\x01", little-endian)
+//! 4       4     header_len  H (LE u32, 1 ..= 64 KiB)
+//! 8       4     payload_len P (LE u32, 0 ..= 64 MiB)
+//! 12      H     header: compact JSON object, {"t":"req"|"resp"|"err", ...}
+//! 12+H    P     payload: raw little-endian f32s
+//! ```
+//!
+//! The JSON header (produced/consumed by [`crate::util::json`]) carries
+//! the small typed fields; the bulk numerics ride in the raw payload so
+//! image and heatmap f32s round-trip bit-exactly with no text-float
+//! loss. Payload layout per kind:
+//!
+//! * `req`  — `n * elems` input-image f32s.
+//! * `resp` — `n * elems` heatmap f32s, then `n * out_n` logit f32s
+//!   (preds and modeled device cycles are small and ride in the
+//!   header).
+//! * `err`  — empty; the typed code ([`ErrCode`]) is in the header.
+//!
+//! Decoding is defensive: length caps are checked *before* any
+//! allocation, malformed input yields a typed [`ProtoError`] (never a
+//! panic), and a clean EOF between frames is distinguished from a
+//! truncated frame.
+
+use std::fmt;
+use std::io::{Read, Write};
+
+use crate::attribution::Method;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Frame magic: "XAI" + version 1, read as a LE u32.
+pub const MAGIC: u32 = 0x5841_4901;
+/// Fixed preamble: magic + header_len + payload_len.
+pub const PREAMBLE_LEN: usize = 12;
+/// Cap on the JSON header (a request header is ~100 bytes).
+pub const MAX_HEADER_BYTES: usize = 64 * 1024;
+/// Cap on the raw payload: bounds decode-side allocation.
+pub const MAX_PAYLOAD_BYTES: usize = 64 * 1024 * 1024;
+/// Cap on images per request frame (admission checks it too).
+pub const MAX_IMAGES_PER_FRAME: usize = 64;
+
+/// Typed rejection codes carried by error frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Load shed: connection pool or request queue is full. Retry later.
+    Busy,
+    /// The server is draining (shutdown) or the coordinator is gone.
+    Closed,
+    /// The frame was well-formed enough to answer but semantically
+    /// invalid (wrong image size, unknown method, oversized batch).
+    BadRequest,
+    /// The request's deadline elapsed before a response was ready.
+    DeadlineExceeded,
+}
+
+impl ErrCode {
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::Busy => "busy",
+            ErrCode::Closed => "closed",
+            ErrCode::BadRequest => "bad_request",
+            ErrCode::DeadlineExceeded => "deadline_exceeded",
+        }
+    }
+
+    pub fn parse(text: &str) -> Option<ErrCode> {
+        match text {
+            "busy" => Some(ErrCode::Busy),
+            "closed" => Some(ErrCode::Closed),
+            "bad_request" => Some(ErrCode::BadRequest),
+            "deadline_exceeded" => Some(ErrCode::DeadlineExceeded),
+            _ => None,
+        }
+    }
+}
+
+impl fmt::Display for ErrCode {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+/// Attribution request: `n` same-shape images in one frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RequestFrame {
+    /// Client-chosen correlation id, echoed on the response.
+    pub id: u64,
+    pub method: Method,
+    pub target: Option<usize>,
+    /// Images in this frame (1 ..= [`MAX_IMAGES_PER_FRAME`]).
+    pub n: usize,
+    /// f32 elements per image.
+    pub elems: usize,
+    /// Per-request deadline; None = server default.
+    pub deadline_ms: Option<u64>,
+    /// `n * elems` f32s, image-major.
+    pub images: Vec<f32>,
+}
+
+/// Attribution response for one request frame.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ResponseFrame {
+    pub id: u64,
+    pub n: usize,
+    /// Heatmap f32s per image.
+    pub elems: usize,
+    /// Logit f32s per image.
+    pub out_n: usize,
+    /// Predicted class per image.
+    pub preds: Vec<usize>,
+    /// Modeled device cycles per image (the Table-IV number).
+    pub device_cycles: Vec<u64>,
+    /// `n * out_n` f32s, image-major.
+    pub logits: Vec<f32>,
+    /// `n * elems` relevance f32s, image-major.
+    pub relevance: Vec<f32>,
+}
+
+/// Typed rejection.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ErrorFrame {
+    /// Request id this answers, or 0 when no request was decodable.
+    pub id: u64,
+    pub code: ErrCode,
+    pub msg: String,
+}
+
+/// Any frame on the wire.
+#[derive(Clone, Debug, PartialEq)]
+pub enum Frame {
+    Request(RequestFrame),
+    Response(ResponseFrame),
+    Error(ErrorFrame),
+}
+
+/// Decode failure. Every malformed input maps here — decode never
+/// panics and never allocates past the frame caps.
+#[derive(Debug)]
+pub enum ProtoError {
+    /// Clean EOF at a frame boundary (peer closed between frames).
+    Eof,
+    /// Stream ended mid-frame.
+    Truncated,
+    BadMagic(u32),
+    /// A length field exceeds the frame caps (checked pre-allocation).
+    TooLarge { header_len: usize, payload_len: usize },
+    /// Header JSON, field types, or payload-length arithmetic is wrong.
+    Malformed(String),
+    Io(std::io::Error),
+}
+
+impl fmt::Display for ProtoError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            ProtoError::Eof => write!(f, "connection closed"),
+            ProtoError::Truncated => write!(f, "stream ended mid-frame"),
+            ProtoError::BadMagic(m) => write!(f, "bad frame magic {m:#010x}"),
+            ProtoError::TooLarge { header_len, payload_len } => write!(
+                f,
+                "frame too large: header {header_len} B (cap {MAX_HEADER_BYTES}), \
+                 payload {payload_len} B (cap {MAX_PAYLOAD_BYTES})"
+            ),
+            ProtoError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            ProtoError::Io(e) => write!(f, "i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for ProtoError {}
+
+fn malformed(msg: impl Into<String>) -> ProtoError {
+    ProtoError::Malformed(msg.into())
+}
+
+/// Validated frame lengths from the 12-byte preamble.
+#[derive(Clone, Copy, Debug)]
+pub struct Preamble {
+    pub header_len: usize,
+    pub payload_len: usize,
+}
+
+/// Parse + validate the fixed preamble. Rejects bad magic and
+/// over-cap lengths before the caller allocates anything.
+pub fn parse_preamble(pre: &[u8; PREAMBLE_LEN]) -> Result<Preamble, ProtoError> {
+    let magic = u32::from_le_bytes([pre[0], pre[1], pre[2], pre[3]]);
+    if magic != MAGIC {
+        return Err(ProtoError::BadMagic(magic));
+    }
+    let header_len = u32::from_le_bytes([pre[4], pre[5], pre[6], pre[7]]) as usize;
+    let payload_len = u32::from_le_bytes([pre[8], pre[9], pre[10], pre[11]]) as usize;
+    if header_len > MAX_HEADER_BYTES || payload_len > MAX_PAYLOAD_BYTES {
+        return Err(ProtoError::TooLarge { header_len, payload_len });
+    }
+    if header_len == 0 {
+        return Err(malformed("empty header"));
+    }
+    Ok(Preamble { header_len, payload_len })
+}
+
+fn read_full<R: Read>(r: &mut R, buf: &mut [u8]) -> Result<(), ProtoError> {
+    match r.read_exact(buf) {
+        Ok(()) => Ok(()),
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => Err(ProtoError::Truncated),
+        Err(e) => Err(ProtoError::Io(e)),
+    }
+}
+
+/// Read header + payload for an already-validated preamble and decode.
+pub fn read_body<R: Read>(r: &mut R, pre: &Preamble) -> Result<Frame, ProtoError> {
+    let mut header = vec![0u8; pre.header_len];
+    read_full(r, &mut header)?;
+    let mut payload = vec![0u8; pre.payload_len];
+    read_full(r, &mut payload)?;
+    decode(&header, &payload)
+}
+
+/// Read one whole frame. `Ok(None)` is a clean EOF at a frame
+/// boundary; EOF anywhere inside a frame is [`ProtoError::Truncated`].
+pub fn read_frame<R: Read>(r: &mut R) -> Result<Option<Frame>, ProtoError> {
+    let mut pre = [0u8; PREAMBLE_LEN];
+    let mut have = 0usize;
+    while have < PREAMBLE_LEN {
+        match r.read(&mut pre[have..]) {
+            Ok(0) if have == 0 => return Ok(None),
+            Ok(0) => return Err(ProtoError::Truncated),
+            Ok(k) => have += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => continue,
+            Err(e) => return Err(ProtoError::Io(e)),
+        }
+    }
+    let p = parse_preamble(&pre)?;
+    read_body(r, &p).map(Some)
+}
+
+// -- header field helpers ----------------------------------------------------
+
+fn field_u64(j: &Json, key: &str) -> Result<u64, ProtoError> {
+    let v = j
+        .get(key)
+        .and_then(Json::as_f64)
+        .ok_or_else(|| malformed(format!("missing numeric {key:?}")))?;
+    if v < 0.0 || v.fract() != 0.0 {
+        return Err(malformed(format!("{key:?} must be a non-negative integer")));
+    }
+    Ok(v as u64)
+}
+
+fn field_usize(j: &Json, key: &str) -> Result<usize, ProtoError> {
+    Ok(field_u64(j, key)? as usize)
+}
+
+fn opt_field_u64(j: &Json, key: &str) -> Result<Option<u64>, ProtoError> {
+    match j.get(key) {
+        None | Some(Json::Null) => Ok(None),
+        Some(_) => field_u64(j, key).map(Some),
+    }
+}
+
+/// Decode a header + payload pair into a typed frame.
+pub fn decode(header: &[u8], payload: &[u8]) -> Result<Frame, ProtoError> {
+    let text = std::str::from_utf8(header).map_err(|_| malformed("header is not utf-8"))?;
+    let j = Json::parse(text).map_err(|e| malformed(format!("header json: {e}")))?;
+    let kind = j
+        .get("t")
+        .and_then(Json::as_str)
+        .ok_or_else(|| malformed("missing frame kind \"t\""))?;
+    match kind {
+        "req" => decode_request(&j, payload),
+        "resp" => decode_response(&j, payload),
+        "err" => decode_error(&j, payload),
+        other => Err(malformed(format!("unknown frame kind {other:?}"))),
+    }
+}
+
+fn decode_request(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
+    let id = field_u64(j, "id")?;
+    let method = j
+        .get("method")
+        .and_then(Json::as_str)
+        .and_then(Method::parse)
+        .ok_or_else(|| malformed("missing or unknown method"))?;
+    let n = field_usize(j, "n")?;
+    let elems = field_usize(j, "elems")?;
+    if n == 0 || elems == 0 {
+        return Err(malformed("n and elems must be positive"));
+    }
+    if n > MAX_IMAGES_PER_FRAME {
+        return Err(malformed(format!("n {n} exceeds {MAX_IMAGES_PER_FRAME} images per frame")));
+    }
+    let target = match j.get("target") {
+        None | Some(Json::Null) => None,
+        Some(_) => Some(field_usize(j, "target")?),
+    };
+    let deadline_ms = opt_field_u64(j, "deadline_ms")?;
+    let want = n
+        .checked_mul(elems)
+        .and_then(|x| x.checked_mul(4))
+        .ok_or_else(|| malformed("n * elems overflows"))?;
+    if payload.len() != want {
+        return Err(malformed(format!("payload is {} B, n*elems*4 = {want} B", payload.len())));
+    }
+    let images = le_to_f32s(payload);
+    Ok(Frame::Request(RequestFrame { id, method, target, n, elems, deadline_ms, images }))
+}
+
+fn decode_response(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
+    let id = field_u64(j, "id")?;
+    let n = field_usize(j, "n")?;
+    let elems = field_usize(j, "elems")?;
+    let out_n = field_usize(j, "out_n")?;
+    if n == 0 {
+        return Err(malformed("n must be positive"));
+    }
+    let preds_json =
+        j.get("preds").and_then(Json::as_arr).ok_or_else(|| malformed("missing preds"))?;
+    let cycles_json = j
+        .get("device_cycles")
+        .and_then(Json::as_arr)
+        .ok_or_else(|| malformed("missing device_cycles"))?;
+    if preds_json.len() != n || cycles_json.len() != n {
+        return Err(malformed("preds/device_cycles length != n"));
+    }
+    let mut preds = Vec::with_capacity(n);
+    for p in preds_json {
+        preds.push(p.as_usize().ok_or_else(|| malformed("bad pred"))?);
+    }
+    let mut device_cycles = Vec::with_capacity(n);
+    for c in cycles_json {
+        let v = c.as_f64().ok_or_else(|| malformed("bad device cycle count"))?;
+        if v < 0.0 {
+            return Err(malformed("negative device cycle count"));
+        }
+        device_cycles.push(v as u64);
+    }
+    let rel_elems = n.checked_mul(elems).ok_or_else(|| malformed("n * elems overflows"))?;
+    let logit_elems = n.checked_mul(out_n).ok_or_else(|| malformed("n * out_n overflows"))?;
+    let want = rel_elems
+        .checked_add(logit_elems)
+        .and_then(|x| x.checked_mul(4))
+        .ok_or_else(|| malformed("payload size overflows"))?;
+    if payload.len() != want {
+        return Err(malformed(format!(
+            "payload is {} B, n*(elems+out_n)*4 = {want} B",
+            payload.len()
+        )));
+    }
+    // decode the two ranges straight from the payload bytes: no
+    // intermediate full-payload Vec for a frame that can be 64 MiB
+    let relevance = le_to_f32s(&payload[..rel_elems * 4]);
+    let logits = le_to_f32s(&payload[rel_elems * 4..]);
+    Ok(Frame::Response(ResponseFrame {
+        id,
+        n,
+        elems,
+        out_n,
+        preds,
+        device_cycles,
+        logits,
+        relevance,
+    }))
+}
+
+fn decode_error(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
+    if !payload.is_empty() {
+        return Err(malformed("error frames carry no payload"));
+    }
+    let id = field_u64(j, "id")?;
+    let code = j
+        .get("code")
+        .and_then(Json::as_str)
+        .and_then(ErrCode::parse)
+        .ok_or_else(|| malformed("missing or unknown error code"))?;
+    let msg = j.get("msg").and_then(Json::as_str).unwrap_or("").to_string();
+    Ok(Frame::Error(ErrorFrame { id, code, msg }))
+}
+
+// -- encoding ----------------------------------------------------------------
+
+/// Raw little-endian f32 bytes (the payload representation).
+pub fn f32s_to_le(xs: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(xs.len() * 4);
+    for x in xs {
+        out.extend_from_slice(&x.to_le_bytes());
+    }
+    out
+}
+
+/// Inverse of [`f32s_to_le`] (bit-exact; trailing partial chunk dropped).
+pub fn le_to_f32s(bytes: &[u8]) -> Vec<f32> {
+    bytes.chunks_exact(4).map(|c| f32::from_le_bytes([c[0], c[1], c[2], c[3]])).collect()
+}
+
+fn encode_parts(f: &Frame) -> (String, Vec<u8>) {
+    match f {
+        Frame::Request(q) => {
+            let mut pairs = vec![
+                ("t", s("req")),
+                ("id", num(q.id as f64)),
+                ("method", s(q.method.name())),
+                ("n", num(q.n as f64)),
+                ("elems", num(q.elems as f64)),
+            ];
+            if let Some(t) = q.target {
+                pairs.push(("target", num(t as f64)));
+            }
+            if let Some(d) = q.deadline_ms {
+                pairs.push(("deadline_ms", num(d as f64)));
+            }
+            (obj(pairs).to_string(), f32s_to_le(&q.images))
+        }
+        Frame::Response(r) => {
+            let preds = arr(r.preds.iter().map(|&p| num(p as f64)).collect());
+            let cycles = arr(r.device_cycles.iter().map(|&c| num(c as f64)).collect());
+            let header = obj(vec![
+                ("t", s("resp")),
+                ("id", num(r.id as f64)),
+                ("n", num(r.n as f64)),
+                ("elems", num(r.elems as f64)),
+                ("out_n", num(r.out_n as f64)),
+                ("preds", preds),
+                ("device_cycles", cycles),
+            ]);
+            let mut payload = f32s_to_le(&r.relevance);
+            payload.extend_from_slice(&f32s_to_le(&r.logits));
+            (header.to_string(), payload)
+        }
+        Frame::Error(e) => {
+            let header = obj(vec![
+                ("t", s("err")),
+                ("id", num(e.id as f64)),
+                ("code", s(e.code.name())),
+                ("msg", s(&e.msg)),
+            ]);
+            (header.to_string(), Vec::new())
+        }
+    }
+}
+
+/// Encode a frame to bytes (preamble + header + payload).
+pub fn encode(f: &Frame) -> std::io::Result<Vec<u8>> {
+    let (header, payload) = encode_parts(f);
+    if header.len() > MAX_HEADER_BYTES || payload.len() > MAX_PAYLOAD_BYTES {
+        return Err(std::io::Error::new(
+            std::io::ErrorKind::InvalidInput,
+            format!("frame exceeds caps: header {} B, payload {} B", header.len(), payload.len()),
+        ));
+    }
+    let mut buf = Vec::with_capacity(PREAMBLE_LEN + header.len() + payload.len());
+    buf.extend_from_slice(&MAGIC.to_le_bytes());
+    buf.extend_from_slice(&(header.len() as u32).to_le_bytes());
+    buf.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    buf.extend_from_slice(header.as_bytes());
+    buf.extend_from_slice(&payload);
+    Ok(buf)
+}
+
+/// Encode + write + flush one frame as a single write.
+pub fn write_frame<W: Write>(w: &mut W, f: &Frame) -> std::io::Result<()> {
+    let buf = encode(f)?;
+    w.write_all(&buf)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn req() -> Frame {
+        Frame::Request(RequestFrame {
+            id: 7,
+            method: Method::Guided,
+            target: Some(2),
+            n: 2,
+            elems: 3,
+            deadline_ms: Some(1500),
+            images: vec![0.0, -1.5, f32::MIN_POSITIVE, 1.0, 2.5e-3, 1e20],
+        })
+    }
+
+    #[test]
+    fn request_roundtrip_bit_exact() {
+        let f = req();
+        let bytes = encode(&f).unwrap();
+        let back = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn response_roundtrip_bit_exact() {
+        let f = Frame::Response(ResponseFrame {
+            id: 9,
+            n: 2,
+            elems: 2,
+            out_n: 3,
+            preds: vec![1, 0],
+            device_cycles: vec![123_456, 123_456],
+            logits: vec![0.1, -0.2, 0.3, 0.4, 0.5, -0.6],
+            relevance: vec![1.0, -2.0, 3.0, -4.0],
+        });
+        let bytes = encode(&f).unwrap();
+        let back = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn error_roundtrip() {
+        let codes =
+            [ErrCode::Busy, ErrCode::Closed, ErrCode::BadRequest, ErrCode::DeadlineExceeded];
+        for code in codes {
+            let f = Frame::Error(ErrorFrame { id: 3, code, msg: "q \"full\"\n".into() });
+            let bytes = encode(&f).unwrap();
+            let back = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
+            assert_eq!(back, f);
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        assert!(matches!(read_frame(&mut Cursor::new(&[] as &[u8])), Ok(None)));
+    }
+
+    #[test]
+    fn truncation_is_typed() {
+        let bytes = encode(&req()).unwrap();
+        for cut in 1..bytes.len() {
+            let r = read_frame(&mut Cursor::new(&bytes[..cut]));
+            assert!(r.is_err(), "prefix of {cut} bytes must not decode");
+        }
+    }
+
+    #[test]
+    fn oversized_lengths_rejected_before_allocation() {
+        let mut pre = [0u8; PREAMBLE_LEN];
+        pre[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+        pre[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+        pre[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+        assert!(matches!(parse_preamble(&pre), Err(ProtoError::TooLarge { .. })));
+    }
+
+    #[test]
+    fn bad_magic_rejected() {
+        let mut bytes = encode(&req()).unwrap();
+        bytes[0] ^= 0xff;
+        assert!(matches!(read_frame(&mut Cursor::new(&bytes)), Err(ProtoError::BadMagic(_))));
+    }
+
+    #[test]
+    fn payload_size_mismatch_rejected() {
+        let header = br#"{"t":"req","id":1,"method":"guided","n":1,"elems":4}"#;
+        assert!(matches!(decode(header, &[0u8; 12]), Err(ProtoError::Malformed(_))));
+    }
+}

@@ -1,0 +1,390 @@
+//! TCP front door for the coordinator: bounded connection pool,
+//! admission control, per-request deadlines, graceful drain.
+//!
+//! ```text
+//!   TcpListener ──accept──▶ pool slot?  ──no──▶ Busy frame, close
+//!        │                      │yes
+//!        │               conn thread: decode frame ─▶ Coordinator
+//!        │                      │     (queue full ─▶ Busy frame)
+//!        │                      ◀── Response / DeadlineExceeded
+//!        └─ drain: new conns get Closed, in-flight get answers
+//! ```
+//!
+//! Shed policy (never queue unboundedly, never hang a client):
+//! * connection pool at capacity → `Busy` error frame at accept time;
+//! * coordinator queue full → `Busy` error frame for that request;
+//! * request deadline elapsed → `DeadlineExceeded` error frame (the
+//!   device result is discarded);
+//! * draining → `Closed` error frame for new connections and for idle
+//!   connections; requests already being served complete normally;
+//! * undecodable bytes → `BadRequest` error frame, then the connection
+//!   is dropped (framing is unrecoverable); semantically-bad but
+//!   well-framed requests get `BadRequest` and the connection lives on.
+
+use std::io::Read;
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use super::proto::{self, ErrCode, ErrorFrame, Frame, RequestFrame, ResponseFrame};
+use crate::coordinator::{metrics, Coordinator};
+
+/// TCP serving configuration (the coordinator has its own
+/// [`crate::coordinator::Config`] for queueing/batching).
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    /// Bounded connection pool: accepts beyond this are shed with
+    /// `Busy` instead of queueing.
+    pub max_conns: usize,
+    /// Deadline applied to requests that carry none (0 = none).
+    pub default_deadline_ms: u64,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig { max_conns: 32, default_deadline_ms: 0 }
+    }
+}
+
+/// Ceiling used when a request has no deadline at all: nothing blocks
+/// a connection thread forever.
+const NO_DEADLINE: Duration = Duration::from_secs(600);
+/// Idle read timeout: how often a connection thread re-checks drain.
+const IDLE_TICK: Duration = Duration::from_millis(50);
+/// Once the first preamble byte has arrived, the rest of the frame
+/// must follow promptly (slow-loris guard: a stalled partial frame
+/// must not hold a pool slot forever).
+const BODY_TIMEOUT: Duration = Duration::from_secs(20);
+/// Cap on any single response write: a peer that stops reading must
+/// not wedge a connection thread (and with it, shutdown's join).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+/// During drain, how long a connection mid-preamble may stall before
+/// the thread gives up on it (a stalled peer must not wedge shutdown).
+const DRAIN_GRACE: Duration = Duration::from_secs(2);
+
+struct Shared {
+    coord: Coordinator,
+    cfg: ServerConfig,
+    draining: AtomicBool,
+    conns: AtomicUsize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+/// A running TCP server. Owns the coordinator; [`Server::shutdown`]
+/// drains connections, then shuts the coordinator down gracefully.
+pub struct Server {
+    shared: Arc<Shared>,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<std::thread::JoinHandle<()>>,
+    addr: SocketAddr,
+}
+
+impl Server {
+    /// Bind `addr` (port 0 picks an ephemeral port — see
+    /// [`Server::local_addr`]) and start accepting.
+    pub fn start<A: ToSocketAddrs>(
+        addr: A,
+        coord: Coordinator,
+        cfg: ServerConfig,
+    ) -> anyhow::Result<Server> {
+        anyhow::ensure!(cfg.max_conns > 0, "need at least one connection slot");
+        let listener = TcpListener::bind(addr)?;
+        // non-blocking accept so shutdown can stop the loop promptly
+        listener.set_nonblocking(true)?;
+        let bound = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            coord,
+            cfg,
+            draining: AtomicBool::new(false),
+            conns: AtomicUsize::new(0),
+            handles: Mutex::new(Vec::new()),
+        });
+        let stop = Arc::new(AtomicBool::new(false));
+        let acceptor = {
+            let shared = shared.clone();
+            let stop = stop.clone();
+            std::thread::Builder::new()
+                .name("serve-acceptor".into())
+                .spawn(move || accept_loop(listener, &shared, &stop))?
+        };
+        Ok(Server { shared, stop, acceptor: Some(acceptor), addr: bound })
+    }
+
+    /// The actually-bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Open TCP connections right now (the pool gauge).
+    pub fn open_conns(&self) -> usize {
+        self.shared.conns.load(Ordering::Relaxed)
+    }
+
+    /// Graceful drain: idle and new connections get `Closed`, in-flight
+    /// requests get their responses, then the coordinator shuts down
+    /// and the final metrics snapshot is returned.
+    pub fn shutdown(self) -> anyhow::Result<metrics::Snapshot> {
+        let Server { shared, stop, acceptor, .. } = self;
+        shared.draining.store(true, Ordering::Relaxed);
+        join_all(&shared.handles);
+        stop.store(true, Ordering::Relaxed);
+        if let Some(a) = acceptor {
+            let _ = a.join();
+        }
+        // the acceptor is gone, so no new connection threads can spawn;
+        // join any spawned in the drain window
+        join_all(&shared.handles);
+        let shared = Arc::try_unwrap(shared)
+            .map_err(|_| anyhow::anyhow!("connection threads still alive at shutdown"))?;
+        Ok(shared.coord.shutdown())
+    }
+}
+
+fn join_all(handles: &Mutex<Vec<std::thread::JoinHandle<()>>>) {
+    loop {
+        let hs: Vec<_> = handles.lock().unwrap().drain(..).collect();
+        if hs.is_empty() {
+            return;
+        }
+        for h in hs {
+            let _ = h.join();
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: &Arc<Shared>, stop: &AtomicBool) {
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((stream, _peer)) => {
+                let _ = stream.set_nonblocking(false);
+                admit(shared, stream);
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_millis(2));
+            }
+            Err(_) => std::thread::sleep(Duration::from_millis(2)),
+        }
+    }
+}
+
+fn admit(shared: &Arc<Shared>, mut stream: TcpStream) {
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    if shared.draining.load(Ordering::Relaxed) {
+        let _ = write_err(&mut stream, 0, ErrCode::Closed, "server draining");
+        return;
+    }
+    let prev = shared.conns.fetch_add(1, Ordering::AcqRel);
+    if prev >= shared.cfg.max_conns {
+        // bounded pool: shed, don't queue
+        shared.conns.fetch_sub(1, Ordering::AcqRel);
+        shared.coord.metrics.record_busy();
+        let _ = write_err(&mut stream, 0, ErrCode::Busy, "connection pool full");
+        return;
+    }
+    let sh = shared.clone();
+    let spawned = std::thread::Builder::new().name("serve-conn".into()).spawn(move || {
+        handle_conn(&sh, stream);
+        sh.conns.fetch_sub(1, Ordering::AcqRel);
+    });
+    match spawned {
+        Ok(h) => shared.handles.lock().unwrap().push(h),
+        Err(_) => {
+            shared.conns.fetch_sub(1, Ordering::AcqRel);
+        }
+    }
+}
+
+fn write_err(stream: &mut TcpStream, id: u64, code: ErrCode, msg: &str) -> std::io::Result<()> {
+    proto::write_frame(stream, &Frame::Error(ErrorFrame { id, code, msg: msg.to_string() }))
+}
+
+/// Read-timeout/interrupt kinds: the idle tick, not a dead peer.
+fn is_retry_kind(kind: std::io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        std::io::ErrorKind::WouldBlock
+            | std::io::ErrorKind::TimedOut
+            | std::io::ErrorKind::Interrupted
+    )
+}
+
+/// One connection: read frames until EOF, error, or drain. The
+/// preamble is read byte-wise under a short timeout so an idle
+/// connection notices drain without ever splitting a frame.
+fn handle_conn(shared: &Shared, mut stream: TcpStream) {
+    let m = &shared.coord.metrics;
+    m.record_conn_open();
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(Some(IDLE_TICK));
+    let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+    let mut pre = [0u8; proto::PREAMBLE_LEN];
+    let mut have = 0usize;
+    // when the first preamble byte arrived (slow-loris deadline)
+    let mut started: Option<Instant> = None;
+    let mut drain_since: Option<Instant> = None;
+    loop {
+        if shared.draining.load(Ordering::Relaxed) {
+            if have == 0 {
+                let _ = write_err(&mut stream, 0, ErrCode::Closed, "server draining");
+                break;
+            }
+            // mid-preamble during drain: give the bytes a bounded
+            // grace period, then abandon the stalled peer
+            let since = *drain_since.get_or_insert_with(Instant::now);
+            if since.elapsed() > DRAIN_GRACE {
+                break;
+            }
+        }
+        if let Some(t0) = started {
+            // a partial preamble must complete within the body budget,
+            // or the connection is freeing its pool slot
+            if t0.elapsed() > BODY_TIMEOUT {
+                let _ = write_err(&mut stream, 0, ErrCode::BadRequest, "preamble timed out");
+                break;
+            }
+        }
+        match stream.read(&mut pre[have..]) {
+            Ok(0) => break, // peer closed
+            Ok(k) => {
+                have += k;
+                if started.is_none() {
+                    started = Some(Instant::now());
+                }
+            }
+            Err(e) if is_retry_kind(e.kind()) => continue,
+            Err(_) => break,
+        }
+        if have < proto::PREAMBLE_LEN {
+            continue;
+        }
+        have = 0;
+        started = None;
+        let pb = match proto::parse_preamble(&pre) {
+            Ok(p) => p,
+            Err(e) => {
+                // framing is unrecoverable: answer typed, then drop
+                let _ = write_err(&mut stream, 0, ErrCode::BadRequest, &e.to_string());
+                break;
+            }
+        };
+        let _ = stream.set_read_timeout(Some(BODY_TIMEOUT));
+        let frame = proto::read_body(&mut stream, &pb);
+        let _ = stream.set_read_timeout(Some(IDLE_TICK));
+        match frame {
+            Ok(Frame::Request(req)) => {
+                if !serve_request(shared, &mut stream, req) {
+                    break;
+                }
+            }
+            // body bytes were fully consumed, so framing is intact:
+            // answer typed and keep the connection alive
+            Ok(_) => {
+                let ok =
+                    write_err(&mut stream, 0, ErrCode::BadRequest, "expected a request frame");
+                if ok.is_err() {
+                    break;
+                }
+            }
+            Err(proto::ProtoError::Malformed(msg)) => {
+                let ok = write_err(&mut stream, 0, ErrCode::BadRequest, &msg);
+                if ok.is_err() {
+                    break;
+                }
+            }
+            // truncated body / i/o error: the stream is desynced
+            Err(e) => {
+                let _ = write_err(&mut stream, 0, ErrCode::BadRequest, &e.to_string());
+                break;
+            }
+        }
+    }
+    m.record_conn_close();
+}
+
+/// Serve one request frame. Returns false when the connection should
+/// be dropped (write failure).
+fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> bool {
+    let m = &shared.coord.metrics;
+    let elems = shared.coord.sim().net.input.elems();
+    if req.elems != elems {
+        let msg = format!("image has {} elems, model wants {elems}", req.elems);
+        return write_err(stream, req.id, ErrCode::BadRequest, &msg).is_ok();
+    }
+    let t0 = Instant::now();
+    let deadline_ms = req.deadline_ms.unwrap_or(shared.cfg.default_deadline_ms);
+    let budget = if deadline_ms == 0 {
+        NO_DEADLINE
+    } else {
+        Duration::from_millis(deadline_ms)
+    };
+
+    // admit every image of the frame; the coordinator micro-batches
+    // same-method submissions back into one device pass
+    let mut rxs = Vec::with_capacity(req.n);
+    for img in req.images.chunks_exact(elems) {
+        let (tx, rx) = mpsc::channel();
+        match shared.coord.submit(img.to_vec(), req.method, req.target, tx) {
+            Ok(_) => rxs.push(rx),
+            Err(why) => {
+                // shed the whole frame, but wait out the co-submitted
+                // images so their replies don't race the next frame
+                for rx in rxs.drain(..) {
+                    let _ = rx.recv_timeout(budget);
+                }
+                let (code, msg) = match why {
+                    "queue full" => (ErrCode::Busy, "queue full"),
+                    "shutting down" => (ErrCode::Closed, "coordinator shutting down"),
+                    other => (ErrCode::BadRequest, other),
+                };
+                if code == ErrCode::Busy {
+                    m.record_busy();
+                }
+                return write_err(stream, req.id, code, msg).is_ok();
+            }
+        }
+    }
+
+    let mut preds = Vec::with_capacity(req.n);
+    let mut device_cycles = Vec::with_capacity(req.n);
+    let mut relevance = Vec::with_capacity(req.n * elems);
+    let mut logits = Vec::new();
+    let mut out_n = 0usize;
+    for (rx, img) in rxs.iter().zip(req.images.chunks_exact(elems)) {
+        let left = budget.saturating_sub(t0.elapsed());
+        match rx.recv_timeout(left) {
+            Ok(Ok(resp)) => {
+                // sampled PJRT shadow verification (no-op when the
+                // coordinator has no verifier)
+                shared.coord.shadow_check(img, &resp);
+                preds.push(resp.pred);
+                device_cycles.push(resp.device_cycles);
+                out_n = resp.logits.len();
+                logits.extend_from_slice(&resp.logits);
+                relevance.extend_from_slice(&resp.relevance);
+            }
+            Ok(Err(_closed)) => {
+                return write_err(stream, req.id, ErrCode::Closed, "coordinator closed").is_ok();
+            }
+            Err(mpsc::RecvTimeoutError::Timeout) => {
+                m.record_deadline_exceeded();
+                let msg = format!("deadline of {deadline_ms} ms exceeded");
+                return write_err(stream, req.id, ErrCode::DeadlineExceeded, &msg).is_ok();
+            }
+            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                return write_err(stream, req.id, ErrCode::Closed, "worker gone").is_ok();
+            }
+        }
+    }
+    let frame = Frame::Response(ResponseFrame {
+        id: req.id,
+        n: req.n,
+        elems,
+        out_n,
+        preds,
+        device_cycles,
+        logits,
+        relevance,
+    });
+    proto::write_frame(stream, &frame).is_ok()
+}

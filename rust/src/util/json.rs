@@ -329,7 +329,14 @@ impl fmt::Display for Json {
 }
 
 impl Json {
-    fn write(&self, out: &mut String) {
+    /// Serialize into `out` (compact, no whitespace). `to_string()`
+    /// (via `Display`) is the allocating convenience. Integers with
+    /// |n| < 9e15 print without a fraction so they re-parse exactly;
+    /// other finite numbers use Rust's shortest round-trip `f64`
+    /// formatting, so `parse(write(v)) == v` for every finite value
+    /// (property-tested below). Non-finite numbers are not
+    /// representable in JSON and must not be written.
+    pub fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
@@ -439,5 +446,130 @@ mod tests {
     fn whitespace_tolerant() {
         let v = Json::parse(" {\n\t\"a\" :  [ 1 , 2 ] }\r\n").unwrap();
         assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 2);
+    }
+
+    #[test]
+    fn write_public_api() {
+        let mut out = String::new();
+        Json::Arr(vec![Json::Num(1.0), Json::Str("x".into())]).write(&mut out);
+        assert_eq!(out, r#"[1,"x"]"#);
+    }
+
+    #[test]
+    fn float_edge_cases_roundtrip() {
+        let cases = [
+            -0.0,
+            0.1,
+            0.1 + 0.2,
+            1e-308,
+            5e-324, // smallest subnormal
+            1.5e300,
+            -2.5,
+            f32::MAX as f64,
+            f32::MIN_POSITIVE as f64,
+            9_007_199_254_740_992.0, // 2^53
+            -9_007_199_254_740_992.0,
+            123456789.12345679,
+        ];
+        for x in cases {
+            let v = Json::Num(x);
+            let text = v.to_string();
+            let back = Json::parse(&text).unwrap();
+            assert_eq!(back, v, "float {x:e} failed to round-trip via {text:?}");
+        }
+    }
+
+    #[test]
+    fn escape_edge_cases_roundtrip() {
+        // every C0 control char, plus the escapes and some unicode
+        let mut hard = String::new();
+        for b in 0u32..0x20 {
+            hard.push(char::from_u32(b).unwrap());
+        }
+        hard.push_str("\"\\/ é😀\u{7f}\u{2028}");
+        let v = Json::Str(hard);
+        let text = v.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), v);
+    }
+
+    // -- property tests: parse ∘ write == id --------------------------------
+
+    fn gen_string(rng: &mut crate::util::rng::Pcg32) -> String {
+        const POOL: &[char] = &[
+            'a', 'Z', '0', ' ', '"', '\\', '/', '\n', '\r', '\t', '\u{8}', '\u{c}', '\u{1}',
+            '\u{1f}', 'é', 'ß', '中', '😀', '\u{7f}',
+        ];
+        let len = rng.below(8) as usize;
+        (0..len).map(|_| POOL[rng.below(POOL.len() as u32) as usize]).collect()
+    }
+
+    fn gen_num(rng: &mut crate::util::rng::Pcg32) -> f64 {
+        match rng.below(5) {
+            0 => rng.below(2001) as f64 - 1000.0,
+            1 => {
+                let mag = (rng.next_u64() % (1u64 << 53)) as f64;
+                if rng.below(2) == 0 { mag } else { -mag }
+            }
+            2 => rng.f32() as f64,
+            // wide magnitude sweep, always finite
+            3 => (rng.f32() as f64 - 0.5) * 10f64.powi(rng.below(601) as i32 - 300),
+            _ => 0.0,
+        }
+    }
+
+    fn gen_json(rng: &mut crate::util::rng::Pcg32, depth: usize) -> Json {
+        let pick = if depth == 0 { rng.below(4) } else { rng.below(6) };
+        match pick {
+            0 => Json::Null,
+            1 => Json::Bool(rng.below(2) == 0),
+            2 => Json::Num(gen_num(rng)),
+            3 => Json::Str(gen_string(rng)),
+            4 => {
+                let n = rng.below(4) as usize;
+                Json::Arr((0..n).map(|_| gen_json(rng, depth - 1)).collect())
+            }
+            _ => {
+                let n = rng.below(4) as usize;
+                Json::Obj((0..n).map(|_| (gen_string(rng), gen_json(rng, depth - 1))).collect())
+            }
+        }
+    }
+
+    #[test]
+    fn prop_parse_write_roundtrip() {
+        use crate::util::prop::{run_prop, PropConfig};
+        run_prop(
+            PropConfig { cases: 512, ..Default::default() },
+            |rng| gen_json(rng, 3),
+            |v| {
+                let text = v.to_string();
+                let back = Json::parse(&text)
+                    .map_err(|e| format!("writer emitted unparsable {text:?}: {e}"))?;
+                if &back == v {
+                    Ok(())
+                } else {
+                    Err(format!("{back:?} != {v:?} via {text:?}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn prop_write_is_stable() {
+        // write ∘ parse ∘ write == write (serialization is canonical)
+        use crate::util::prop::{run_prop, PropConfig};
+        run_prop(
+            PropConfig { cases: 256, ..Default::default() },
+            |rng| gen_json(rng, 3),
+            |v| {
+                let once = v.to_string();
+                let twice = Json::parse(&once).map_err(|e| e.to_string())?.to_string();
+                if once == twice {
+                    Ok(())
+                } else {
+                    Err(format!("unstable: {once:?} vs {twice:?}"))
+                }
+            },
+        );
     }
 }

@@ -1,0 +1,254 @@
+//! End-to-end networked serving tests, fully offline: synthetic
+//! `sched::tests_support::tiny_sim` weights, loopback TCP, no
+//! artifacts. Cover: wire-level numeric equality with the in-process
+//! path, concurrent connections, Busy shedding (connection pool and
+//! queue), per-request deadlines, graceful drain, and bad-request
+//! handling.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::{Duration, Instant};
+
+use attrax::attribution::Method;
+use attrax::coordinator::{Config, Coordinator};
+use attrax::hls::HwConfig;
+use attrax::sched::tests_support::tiny_sim;
+use attrax::sched::AttrOptions;
+use attrax::serve::{Client, ClientError, ErrCode, Server, ServerConfig};
+use attrax::util::rng::Pcg32;
+
+const ELEMS: usize = 2 * 8 * 8;
+
+fn image(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..ELEMS).map(|_| rng.f32()).collect()
+}
+
+fn start_server(sim_seed: u64, cfg: Config, scfg: ServerConfig) -> Server {
+    let sim = tiny_sim(sim_seed, HwConfig::pynq_z2());
+    let coord = Coordinator::start(sim, cfg, None).unwrap();
+    Server::start("127.0.0.1:0", coord, scfg).unwrap()
+}
+
+#[test]
+fn single_request_matches_in_process_bit_exact() {
+    let srv = start_server(1, Config::default(), ServerConfig::default());
+    let reference = tiny_sim(1, HwConfig::pynq_z2());
+    let mut client = Client::connect(srv.local_addr()).unwrap();
+    let img = image(10);
+    let got = client.attribute(&img, Method::Guided).unwrap();
+    let want = reference.attribute(&img, Method::Guided, AttrOptions::default());
+    assert_eq!(got.pred, want.pred);
+    assert_eq!(got.logits, want.logits, "logits must cross the wire bit-exactly");
+    assert_eq!(got.relevance, want.relevance, "heatmap must cross the wire bit-exactly");
+    assert!(got.device_cycles > 0);
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.total_conns, 1);
+    assert_eq!(snap.open_conns, 0);
+}
+
+#[test]
+fn batch_request_matches_in_process_bit_exact() {
+    let srv = start_server(
+        2,
+        Config { workers: 1, max_batch: 8, max_wait_ms: 20, ..Default::default() },
+        ServerConfig::default(),
+    );
+    let reference = tiny_sim(2, HwConfig::pynq_z2());
+    let mut client = Client::connect(srv.local_addr()).unwrap();
+    let imgs: Vec<Vec<f32>> = (0..6).map(|i| image(100 + i)).collect();
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let got = client.attribute_batch(&refs, Method::Saliency).unwrap();
+    assert_eq!(got.len(), 6);
+    for (i, (g, img)) in got.iter().zip(&imgs).enumerate() {
+        let want = reference.attribute(img, Method::Saliency, AttrOptions::default());
+        assert_eq!(g.pred, want.pred, "image {i}");
+        assert_eq!(g.relevance, want.relevance, "image {i}: networked batch diverged");
+    }
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.completed, 6);
+}
+
+#[test]
+fn concurrent_connections_all_complete() {
+    let srv = start_server(
+        3,
+        Config { workers: 4, queue_depth: 128, max_batch: 4, ..Default::default() },
+        ServerConfig::default(),
+    );
+    let addr = srv.local_addr();
+    let per_conn = 8u64;
+    let conns = 6u64;
+    std::thread::scope(|sc| {
+        for c in 0..conns {
+            sc.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                for r in 0..per_conn {
+                    let img = image(c * 1000 + r);
+                    let method = attrax::attribution::ALL_METHODS[(r % 3) as usize];
+                    let a = client.attribute(&img, method).unwrap();
+                    assert_eq!(a.relevance.len(), ELEMS);
+                }
+            });
+        }
+    });
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.completed, conns * per_conn);
+    assert_eq!(snap.errors, 0);
+    assert_eq!(snap.total_conns, conns);
+    assert_eq!(snap.open_conns, 0);
+}
+
+#[test]
+fn connection_pool_sheds_busy() {
+    let srv = start_server(
+        4,
+        Config::default(),
+        ServerConfig { max_conns: 1, ..Default::default() },
+    );
+    // first connection occupies the only slot (a completed request
+    // proves its handler thread is running)
+    let mut first = Client::connect(srv.local_addr()).unwrap();
+    first.attribute(&image(1), Method::Guided).unwrap();
+    // the second connection must be shed — as a typed Busy frame when
+    // the timing lets it through, as a reset when the kernel races us
+    let mut second = Client::connect(srv.local_addr()).unwrap();
+    std::thread::sleep(Duration::from_millis(100)); // let the acceptor shed it
+    match second.attribute(&image(2), Method::Guided) {
+        Err(ClientError::Rejected { code: ErrCode::Busy, .. }) | Err(ClientError::Io(_)) => {}
+        Err(ClientError::Proto(_)) => {}
+        other => panic!("expected the second connection to be shed, got {other:?}"),
+    }
+    // the slot-holder still works
+    first.attribute(&image(3), Method::Guided).unwrap();
+    let snap = srv.shutdown().unwrap();
+    assert!(snap.rejected_busy >= 1, "pool shed must be counted");
+    assert_eq!(snap.completed, 2);
+}
+
+#[test]
+fn queue_overload_sheds_busy_without_hanging() {
+    // 1 worker that lingers 50ms filling its batch + a depth-1 queue:
+    // concurrent batch-4 frames must overflow admission and get Busy
+    let srv = start_server(
+        5,
+        Config { workers: 1, queue_depth: 1, max_batch: 4, max_wait_ms: 50, ..Default::default() },
+        ServerConfig { max_conns: 16, ..Default::default() },
+    );
+    let addr = srv.local_addr();
+    let busy = AtomicU64::new(0);
+    let ok = AtomicU64::new(0);
+    let deadline = Instant::now() + Duration::from_secs(20);
+    std::thread::scope(|sc| {
+        for c in 0..4u64 {
+            let busy = &busy;
+            let ok = &ok;
+            sc.spawn(move || {
+                let mut client = Client::connect(addr).unwrap();
+                let imgs: Vec<Vec<f32>> = (0..4).map(|i| image(c * 100 + i)).collect();
+                let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+                for _ in 0..200 {
+                    if busy.load(Ordering::Relaxed) > 0 || Instant::now() > deadline {
+                        break;
+                    }
+                    match client.attribute_batch(&refs, Method::Deconvnet) {
+                        Ok(_) => {
+                            ok.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(ClientError::Rejected { code: ErrCode::Busy, .. }) => {
+                            busy.fetch_add(1, Ordering::Relaxed);
+                        }
+                        Err(e) => panic!("unexpected failure under overload: {e}"),
+                    }
+                }
+            });
+        }
+    });
+    assert!(busy.load(Ordering::Relaxed) > 0, "overload never shed Busy");
+    let snap = srv.shutdown().unwrap();
+    assert!(snap.rejected_busy >= 1);
+    assert_eq!(snap.errors, 0);
+}
+
+#[test]
+fn deadline_exceeded_is_typed_and_counted() {
+    // the worker lingers 500ms filling a batch, so a 100ms deadline
+    // deterministically expires while the request is in flight
+    let srv = start_server(
+        6,
+        Config { workers: 1, max_batch: 8, max_wait_ms: 500, ..Default::default() },
+        ServerConfig::default(),
+    );
+    let mut client = Client::connect(srv.local_addr()).unwrap();
+    client.set_timeout(Some(Duration::from_millis(100))).unwrap();
+    match client.attribute(&image(7), Method::Guided) {
+        Err(ClientError::Rejected { code: ErrCode::DeadlineExceeded, .. }) => {}
+        other => panic!("expected DeadlineExceeded, got {other:?}"),
+    }
+    // the connection survives a deadline miss
+    client.set_timeout(None).unwrap();
+    client.attribute(&image(8), Method::Guided).unwrap();
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.deadline_exceeded, 1);
+}
+
+#[test]
+fn graceful_drain_answers_then_closes() {
+    let srv = start_server(8, Config::default(), ServerConfig::default());
+    let addr = srv.local_addr();
+    let mut client = Client::connect(addr).unwrap();
+    client.attribute(&image(20), Method::Saliency).unwrap();
+    // drain with the client idle: the handler sends Closed and exits
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.completed, 1);
+    assert_eq!(snap.open_conns, 0);
+    // the drained connection is dead: typed Closed when the frame wins
+    // the race with the socket teardown, an i/o error otherwise
+    match client.attribute(&image(21), Method::Saliency) {
+        Err(ClientError::Rejected { code: ErrCode::Closed, .. }) => {}
+        Err(_) => {}
+        Ok(_) => panic!("request served after graceful drain"),
+    }
+    // and the listener is gone
+    assert!(Client::connect(addr).is_err(), "listener must be closed after shutdown");
+}
+
+#[test]
+fn bad_request_keeps_connection_alive() {
+    let srv = start_server(9, Config::default(), ServerConfig::default());
+    let mut client = Client::connect(srv.local_addr()).unwrap();
+    // wrong image size: typed BadRequest, stream stays framed
+    let small = vec![0.5f32; 64];
+    match client.attribute(&small, Method::Guided) {
+        Err(ClientError::Rejected { code: ErrCode::BadRequest, .. }) => {}
+        other => panic!("expected BadRequest, got {other:?}"),
+    }
+    // the same connection still serves well-formed requests
+    let a = client.attribute(&image(30), Method::Guided).unwrap();
+    assert_eq!(a.relevance.len(), ELEMS);
+    let snap = srv.shutdown().unwrap();
+    assert_eq!(snap.completed, 1);
+}
+
+#[test]
+fn garbage_bytes_get_typed_error_then_disconnect() {
+    use std::io::Write;
+    let srv = start_server(11, Config::default(), ServerConfig::default());
+    let mut raw = std::net::TcpStream::connect(srv.local_addr()).unwrap();
+    // exactly one preamble's worth of garbage, so the server has no
+    // unread bytes when it drops the connection (clean FIN, no RST)
+    raw.write_all(&[0xffu8; 12]).unwrap();
+    raw.flush().unwrap();
+    // server answers BadRequest (bad magic), then drops the connection
+    match attrax::serve::proto::read_frame(&mut raw) {
+        Ok(Some(attrax::serve::Frame::Error(e))) => {
+            assert_eq!(e.code, ErrCode::BadRequest);
+        }
+        other => panic!("expected a BadRequest frame, got {other:?}"),
+    }
+    match attrax::serve::proto::read_frame(&mut raw) {
+        Ok(None) | Err(_) => {} // disconnected
+        Ok(Some(f)) => panic!("expected EOF after a framing error, got {f:?}"),
+    }
+    srv.shutdown().unwrap();
+}

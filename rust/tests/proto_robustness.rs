@@ -1,0 +1,169 @@
+//! Adversarial-input tests for `serve::proto` decode: truncated,
+//! oversized, and garbage frames must produce typed [`ProtoError`]s —
+//! never a panic, and never an allocation beyond the frame caps.
+
+use std::io::Cursor;
+
+use attrax::attribution::Method;
+use attrax::serve::proto::{
+    self, encode, read_frame, ErrCode, ErrorFrame, Frame, ProtoError, RequestFrame,
+    ResponseFrame, MAGIC, MAX_HEADER_BYTES, MAX_IMAGES_PER_FRAME, MAX_PAYLOAD_BYTES,
+    PREAMBLE_LEN,
+};
+use attrax::util::prop::{run_prop, PropConfig};
+
+fn sample_request() -> Frame {
+    Frame::Request(RequestFrame {
+        id: 42,
+        method: Method::Saliency,
+        target: None,
+        n: 2,
+        elems: 4,
+        deadline_ms: Some(250),
+        images: vec![0.0, 1.5, -2.25, 3.5, -0.125, 0.75, 8.0, -9.5],
+    })
+}
+
+fn sample_response() -> Frame {
+    Frame::Response(ResponseFrame {
+        id: 42,
+        n: 1,
+        elems: 3,
+        out_n: 2,
+        preds: vec![1],
+        device_cycles: vec![987_654],
+        logits: vec![0.25, -0.5],
+        relevance: vec![1.0, 2.0, 3.0],
+    })
+}
+
+#[test]
+fn every_truncation_of_every_frame_kind_is_a_typed_error() {
+    let frames = [
+        sample_request(),
+        sample_response(),
+        Frame::Error(ErrorFrame { id: 1, code: ErrCode::Busy, msg: "full".into() }),
+    ];
+    for f in &frames {
+        let bytes = encode(f).unwrap();
+        // the full stream decodes back to the original
+        assert_eq!(read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap(), *f);
+        // zero bytes is a clean EOF, any proper prefix a typed error
+        assert!(matches!(read_frame(&mut Cursor::new(&bytes[..0])), Ok(None)));
+        for cut in 1..bytes.len() {
+            match read_frame(&mut Cursor::new(&bytes[..cut])) {
+                Err(_) => {}
+                ok => panic!("{cut}-byte prefix decoded as {ok:?}"),
+            }
+        }
+    }
+}
+
+#[test]
+fn oversized_length_fields_are_capped_before_allocation() {
+    // a preamble claiming a 4 GiB header/payload must be rejected from
+    // the 12 fixed bytes alone — no body needed, nothing allocated
+    let mut pre = [0u8; PREAMBLE_LEN];
+    pre[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    pre[4..8].copy_from_slice(&u32::MAX.to_le_bytes());
+    pre[8..12].copy_from_slice(&u32::MAX.to_le_bytes());
+    match read_frame(&mut Cursor::new(&pre)) {
+        Err(ProtoError::TooLarge { header_len, payload_len }) => {
+            assert!(header_len > MAX_HEADER_BYTES);
+            assert!(payload_len > MAX_PAYLOAD_BYTES);
+        }
+        other => panic!("expected TooLarge, got {other:?}"),
+    }
+    // just-over-cap values too
+    let mut pre = [0u8; PREAMBLE_LEN];
+    pre[0..4].copy_from_slice(&MAGIC.to_le_bytes());
+    pre[4..8].copy_from_slice(&((MAX_HEADER_BYTES as u32) + 1).to_le_bytes());
+    assert!(matches!(read_frame(&mut Cursor::new(&pre)), Err(ProtoError::TooLarge { .. })));
+}
+
+#[test]
+fn oversized_request_batch_rejected() {
+    let n = MAX_IMAGES_PER_FRAME + 1;
+    let header = format!(r#"{{"t":"req","id":1,"method":"guided","n":{n},"elems":1}}"#);
+    let payload = vec![0u8; n * 4];
+    assert!(matches!(proto::decode(header.as_bytes(), &payload), Err(ProtoError::Malformed(_))));
+}
+
+#[test]
+fn bad_magic_and_garbage_headers_are_typed() {
+    let mut bytes = encode(&sample_request()).unwrap();
+    bytes[1] = b'Q';
+    assert!(matches!(read_frame(&mut Cursor::new(&bytes)), Err(ProtoError::BadMagic(_))));
+
+    for bad_header in [
+        "not json at all",
+        "{}",
+        r#"{"t":"nope"}"#,
+        r#"{"t":"req"}"#,
+        r#"{"t":"req","id":1,"method":"sorcery","n":1,"elems":4}"#,
+        r#"{"t":"req","id":-3,"method":"guided","n":1,"elems":4}"#,
+        r#"{"t":"req","id":1,"method":"guided","n":0,"elems":4}"#,
+        r#"{"t":"req","id":1,"method":"guided","n":1,"elems":0}"#,
+        r#"{"t":"err","id":1,"code":"not_a_code"}"#,
+        r#"{"t":"resp","id":1,"n":1,"elems":2,"out_n":1,"preds":[0,1],"device_cycles":[1]}"#,
+    ] {
+        match proto::decode(bad_header.as_bytes(), &[]) {
+            Err(ProtoError::Malformed(_)) => {}
+            other => panic!("header {bad_header:?} decoded as {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn payload_length_must_match_header_arithmetic() {
+    let header = br#"{"t":"req","id":1,"method":"guided","n":2,"elems":4}"#;
+    // 2 images * 4 elems = 32 bytes; everything else is malformed
+    for bad_len in [0usize, 4, 31, 33, 64] {
+        let payload = vec![0u8; bad_len];
+        assert!(
+            matches!(proto::decode(header, &payload), Err(ProtoError::Malformed(_))),
+            "payload of {bad_len} B must be rejected"
+        );
+    }
+    let payload = vec![0u8; 32];
+    assert!(proto::decode(header, &payload).is_ok());
+}
+
+#[test]
+fn prop_random_bytes_never_panic_decoder() {
+    // pure fuzz: random byte strings through the frame reader
+    run_prop(
+        PropConfig { cases: 512, ..Default::default() },
+        |rng| {
+            let len = rng.below(96) as usize;
+            (0..len).map(|_| (rng.next_u32() & 0xff) as u8).collect::<Vec<u8>>()
+        },
+        |bytes| {
+            // any outcome but a panic is acceptable; decoded frames can
+            // only come from a valid encoding
+            let _ = read_frame(&mut Cursor::new(bytes));
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_valid_frame_with_flipped_byte_never_panics() {
+    // mutate one byte of a valid frame: decode must stay total
+    let bytes = encode(&sample_request()).unwrap();
+    let blen = bytes.len();
+    run_prop(
+        PropConfig { cases: 512, ..Default::default() },
+        |rng| {
+            let pos = rng.below(blen as u32) as usize;
+            let val = (rng.next_u32() & 0xff) as u8;
+            (pos, val)
+        },
+        |&(pos, val)| {
+            let mut mutated = bytes.clone();
+            mutated[pos] = val;
+            let _ = read_frame(&mut Cursor::new(&mutated));
+            Ok(())
+        },
+    );
+}

@@ -20,6 +20,19 @@ echo "== perf gate: allocation-count regression (release) =="
 # profile the binaries ship with.
 cargo test --release -q --test alloc_regression
 
+echo "== serve gate: loopback e2e + protocol robustness =="
+# The networked serving subsystem's dedicated suites (also part of the
+# plain `cargo test` run above; repeated by name so a serve regression
+# is called out explicitly in CI output).
+cargo test -q --test e2e_net
+cargo test -q --test proto_robustness
+
+echo "== serve gate: loadgen smoke (2s in-process loopback) =="
+# Keeps the binary path green: spins a TCP server on an ephemeral
+# loopback port with synthetic weights and hammers it for ~2 seconds.
+# Fails if zero requests complete.
+cargo run --release -q -- loadgen --smoke --secs 2 --out BENCH_serve_smoke.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
