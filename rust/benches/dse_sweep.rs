@@ -1,0 +1,84 @@
+//! E16 — design-space exploration vs the paper's hand-picked Table-IV
+//! design points (ISSUE-4 tentpole).
+//!
+//! Runs `dse::tune` over the full paper search space on the Table-III
+//! CNN for all three boards and prints tuned-vs-default modeled
+//! attribution latency plus the Pareto frontier sizes. Offline like
+//! every bench: synthetic seeded weights when `make artifacts` hasn't
+//! run — the cycle/traffic ledger is structural, so tuning results are
+//! weight-value-independent. Emits machine-readable `BENCH_dse.json`
+//! at the repo root (byte-identical across reruns for a fixed seed —
+//! the ISSUE-4 reproducibility bar).
+
+use attrax::attribution::Method;
+use attrax::dse::{self, Space, TuneSpec};
+use attrax::fpga::{self, ALL_BOARDS};
+use attrax::model::{artifacts_dir, load_artifacts, Network, Params};
+use attrax::util::bench::{section, Table};
+
+fn main() {
+    let net = Network::table3();
+    let params: Params = match load_artifacts(&artifacts_dir()) {
+        Ok((_, p)) => p,
+        Err(_) => {
+            println!("(artifacts absent — synthetic seeded weights; tuning is weight-independent)");
+            Params::synthetic(&net, 1234)
+        }
+    };
+    let spec = TuneSpec {
+        space: Space::paper(),
+        boards: ALL_BOARDS.to_vec(),
+        method: Method::Guided,
+        seed: 42,
+        budget: 120,
+        beam: 8,
+        threads: 0,
+    };
+
+    section("dse — beam search over the paper space (guided, seed 42)");
+    println!(
+        "  {} raw candidates/board, budget {} cost evaluations/board",
+        spec.space.raw_size(),
+        spec.budget
+    );
+    let t0 = std::time::Instant::now();
+    let report = dse::tune(&net, &params, &spec).expect("tune");
+    let wall = t0.elapsed().as_secs_f64();
+
+    let mut t = Table::new(&[
+        "board",
+        "default ms",
+        "tuned ms",
+        "speedup",
+        "tuned config",
+        "frontier",
+        "pruned",
+    ]);
+    for o in &report.outcomes {
+        let c = &o.best.cfg;
+        t.row(&vec![
+            o.board.name().to_string(),
+            format!("{:.2}", o.default_point.latency_ms(fpga::TARGET_FREQ_MHZ)),
+            format!("{:.2}", o.best.latency_ms(fpga::TARGET_FREQ_MHZ)),
+            format!("{:.2}x", o.speedup),
+            format!(
+                "{}x{} axi{} df={}",
+                c.n_oh, c.n_ow, c.axi_bytes_per_cycle, c.overlap_tiles as u8
+            ),
+            format!("{}", o.frontier.len()),
+            format!("{}", o.pruned_invalid + o.pruned_capacity),
+        ]);
+    }
+    t.print();
+    println!(
+        "  search wall time {wall:.2}s host; every tuned point re-fits its board by construction"
+    );
+    for o in &report.outcomes {
+        assert!(o.board.fits(&o.best.util), "{}: tuned point over capacity", o.board);
+        assert!(o.speedup >= 1.0, "{}: tuner lost to the default", o.board);
+    }
+
+    let out = std::path::Path::new("BENCH_dse.json");
+    dse::tune::write_json(out, &report.to_json(&spec)).expect("write BENCH_dse.json");
+    println!("  wrote {}", out.display());
+}

@@ -70,7 +70,7 @@ impl Fleet {
                 }
             };
             let r = sim.attribute(probe, method, AttrOptions::default());
-            let cycles = r.fp_cost.total_cycles() + r.bp_cost.total_cycles();
+            let cycles = r.fp_cost.cycles_under(&cfg) + r.bp_cost.cycles_under(&cfg);
             let request_us = (cycles as f64 / fpga::TARGET_FREQ_MHZ) as u64;
             devices.push(Arc::new(Device {
                 board,

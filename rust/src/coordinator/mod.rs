@@ -360,7 +360,11 @@ fn worker_loop(
         let imgs: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
         sim.attribute_batch_into(&mut ws, &imgs, method, opts, false, &mut out);
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        let total_cycles = out.fp_cost.total_cycles() + out.bp_cost.total_cycles();
+        // cycles under the tile-latency model the config selects
+        // (dataflow-overlapped configs from `attrax tune` report the
+        // same numbers here as in BENCH_dse.json)
+        let total_cycles =
+            out.fp_cost.cycles_under(&sim.cfg) + out.bp_cost.cycles_under(&sim.cfg);
         let per_image_cycles = total_cycles / batch.len() as u64;
         for (b, (req, wait_ms)) in batch.into_iter().zip(waits_ms).enumerate() {
             metrics.record_completion(host_ms, wait_ms, per_image_cycles);

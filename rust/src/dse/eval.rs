@@ -1,0 +1,258 @@
+//! Candidate evaluation: prune on resources first, pay for the cost
+//! model only on survivors.
+//!
+//! The two-stage shape mirrors how an HLS engineer explores a design
+//! space: a resource estimate (`fpga::resources::feasibility`) costs
+//! microseconds, a full modeled-cycle pass costs milliseconds, so a
+//! candidate that cannot be placed on the board is rejected before the
+//! simulator ever runs. Survivors are scored by executing one probe
+//! attribution on the *existing* cycle model — `Simulator::with_config`
+//! over a shared `Arc<Plan>`, the same engines/ledger the serving path
+//! uses — so a DSE number and a `attrax report` number can never
+//! disagree. The cycle/traffic ledger is structural (tile loop trip
+//! counts, not data values), so one deterministic probe image fully
+//! characterizes a candidate.
+//!
+//! Plans are quantized per fixed-point format: the evaluator builds
+//! one `Plan` per distinct `QFormat` in the space up front, and every
+//! candidate borrows the plan matching its `q` (a config swap is an
+//! `Arc` bump, never a re-quantization).
+
+use std::sync::Arc;
+
+use crate::attribution::Method;
+use crate::fpga::{self, Board, Feasibility, Utilization};
+use crate::fx::QFormat;
+use crate::hls::{ConfigError, HwConfig};
+use crate::model::{Network, Params};
+use crate::sched::{AttrOptions, BatchOutput, Plan, Simulator, Workspace};
+use crate::util::rng::Pcg32;
+
+/// One fully evaluated design point: the candidate configuration, its
+/// estimated FP / FP+BP resource builds and its modeled attribution
+/// cycles (per phase, under the tile-latency model the config selects
+/// — see `Cost::cycles_under`).
+#[derive(Clone, Debug)]
+pub struct DesignPoint {
+    pub cfg: HwConfig,
+    /// Inference-only build estimate.
+    pub fp_util: Utilization,
+    /// Feature-attribution (FP+BP) build estimate — the build that
+    /// must fit the board.
+    pub util: Utilization,
+    pub fp_cycles: u64,
+    pub bp_cycles: u64,
+}
+
+impl DesignPoint {
+    /// Modeled cycles for one full attribution (FP + BP).
+    pub fn cycles(&self) -> u64 {
+        self.fp_cycles + self.bp_cycles
+    }
+
+    pub fn latency_ms(&self, freq_mhz: f64) -> f64 {
+        self.cycles() as f64 / (freq_mhz * 1e3)
+    }
+}
+
+/// Why a candidate never reached the cost model.
+#[derive(Clone, Debug)]
+pub enum Pruned {
+    /// Rejected by the central legality gate ([`HwConfig::validate`]).
+    Invalid(ConfigError),
+    /// Legal, but the FP+BP build exceeds the board (the offending
+    /// utilization estimate is attached).
+    OverCapacity(Utilization),
+}
+
+impl std::fmt::Display for Pruned {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Pruned::Invalid(e) => write!(f, "invalid config: {e}"),
+            Pruned::OverCapacity(u) => write!(
+                f,
+                "over capacity: BRAM {} DSP {} FF {} LUT {}",
+                u.bram_18k, u.dsp, u.ff, u.lut
+            ),
+        }
+    }
+}
+
+/// Shared, read-only candidate evaluator (safe to borrow from scoped
+/// scoring threads): the network, one quantized plan per fixed-point
+/// format, the attribution method under tuning and the probe image.
+pub struct Evaluator {
+    net: Network,
+    method: Method,
+    probe: Vec<f32>,
+    /// One plan per distinct `QFormat` (tiny; linear lookup).
+    plans: Vec<Arc<Plan>>,
+}
+
+impl Evaluator {
+    /// Quantize one plan per distinct format in `qs` and synthesize a
+    /// deterministic probe image. `params` only shapes the plan — the
+    /// cycle ledger is weight-value-independent.
+    pub fn new(
+        net: &Network,
+        params: &Params,
+        qs: &[QFormat],
+        method: Method,
+        probe_seed: u64,
+    ) -> anyhow::Result<Evaluator> {
+        anyhow::ensure!(!qs.is_empty(), "evaluator needs at least one fixed-point format");
+        let mut plans: Vec<Arc<Plan>> = Vec::new();
+        for &q in qs {
+            if plans.iter().any(|p| p.cfg.q == q) {
+                continue;
+            }
+            let mut cfg = HwConfig::with_unroll(1, 1, 16);
+            cfg.q = q;
+            plans.push(Arc::new(Plan::new(net.clone(), params, cfg)?));
+        }
+        let mut rng = Pcg32::seeded(probe_seed);
+        let probe = (0..net.input.elems()).map(|_| rng.f32()).collect();
+        Ok(Evaluator { net: net.clone(), method, probe, plans })
+    }
+
+    pub fn method(&self) -> Method {
+        self.method
+    }
+
+    /// Stage 1 — the cheap gate: legality, then resource estimate
+    /// against the board's capacity. No cycle modeling happens here.
+    pub fn prune(&self, board: Board, cfg: &HwConfig) -> Result<Feasibility, Pruned> {
+        cfg.validate().map_err(Pruned::Invalid)?;
+        let f = fpga::feasibility(board, cfg, &self.net, self.method);
+        if !f.fits {
+            return Err(Pruned::OverCapacity(f.fp_bp));
+        }
+        Ok(f)
+    }
+
+    /// Stage 2 — the cost pass: run one probe attribution under `cfg`
+    /// on the shared plan, reusing the caller's workspace/output slabs
+    /// (scoring threads keep one pair warm across a whole chunk), and
+    /// return per-phase cycles under the tile-latency model `cfg`
+    /// selects. `cfg` must be valid and carry a format the evaluator
+    /// planned.
+    fn probe_cycles(
+        &self,
+        ws: &mut Workspace,
+        out: &mut BatchOutput,
+        cfg: &HwConfig,
+    ) -> (u64, u64) {
+        let plan = self
+            .plans
+            .iter()
+            .find(|p| p.cfg.q == cfg.q)
+            .expect("candidate QFormat was not in the evaluator's space");
+        let sim = Simulator::with_config(plan.clone(), *cfg).expect("pruned candidates are valid");
+        let probe: &[f32] = &self.probe;
+        sim.attribute_batch_into(ws, &[probe], self.method, AttrOptions::default(), false, out);
+        (out.fp_cost.cycles_under(cfg), out.bp_cost.cycles_under(cfg))
+    }
+
+    /// Cost pass reusing the resource estimates the prune gate already
+    /// computed (the driver path: estimates are never paid twice).
+    pub fn score_feasible(
+        &self,
+        ws: &mut Workspace,
+        out: &mut BatchOutput,
+        cfg: &HwConfig,
+        feas: &Feasibility,
+    ) -> DesignPoint {
+        let (fp_cycles, bp_cycles) = self.probe_cycles(ws, out, cfg);
+        DesignPoint { cfg: *cfg, fp_util: feas.fp, util: feas.fp_bp, fp_cycles, bp_cycles }
+    }
+
+    /// Cost pass that estimates resources itself (for callers without
+    /// a prior [`Evaluator::prune`] result).
+    pub fn score_with(
+        &self,
+        ws: &mut Workspace,
+        out: &mut BatchOutput,
+        cfg: &HwConfig,
+    ) -> DesignPoint {
+        let (fp_cycles, bp_cycles) = self.probe_cycles(ws, out, cfg);
+        DesignPoint {
+            cfg: *cfg,
+            fp_util: fpga::estimate_fp(cfg, &self.net),
+            util: fpga::estimate_fp_bp(cfg, &self.net, self.method),
+            fp_cycles,
+            bp_cycles,
+        }
+    }
+
+    /// [`Evaluator::score_with`] with throwaway slabs.
+    pub fn score(&self, cfg: &HwConfig) -> DesignPoint {
+        let mut ws = Workspace::with_shards(1);
+        let mut out = BatchOutput::new();
+        self.score_with(&mut ws, &mut out, cfg)
+    }
+
+    /// Prune, then score: the full per-candidate pipeline.
+    pub fn evaluate(&self, board: Board, cfg: &HwConfig) -> Result<DesignPoint, Pruned> {
+        self.prune(board, cfg)?;
+        Ok(self.score(cfg))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::tests_support::tiny_net_params;
+
+    fn evaluator() -> Evaluator {
+        let (net, params) = tiny_net_params(11);
+        Evaluator::new(&net, &params, &[QFormat::paper16()], Method::Guided, 7).unwrap()
+    }
+
+    #[test]
+    fn prune_rejects_before_cost() {
+        let ev = evaluator();
+        // illegal knob -> typed Invalid
+        let mut bad = HwConfig::pynq_z2();
+        bad.n_oh = 3;
+        assert!(matches!(ev.prune(Board::PynqZ2, &bad), Err(Pruned::Invalid(_))));
+        // legal but too large for the small board -> OverCapacity
+        let big = HwConfig::zcu104();
+        match ev.prune(Board::PynqZ2, &big) {
+            Err(Pruned::OverCapacity(u)) => assert!(!Board::PynqZ2.fits(&u)),
+            other => panic!("expected capacity prune, got {other:?}"),
+        }
+        // the board's own config passes with headroom reported
+        let f = ev.prune(Board::PynqZ2, &HwConfig::pynq_z2()).unwrap();
+        assert!(f.fits);
+    }
+
+    #[test]
+    fn score_is_deterministic_and_structural() {
+        let ev = evaluator();
+        let cfg = HwConfig::pynq_z2();
+        let a = ev.score(&cfg);
+        let b = ev.score(&cfg);
+        assert!(a.cycles() > 0);
+        assert_eq!(a.cycles(), b.cycles());
+        assert_eq!(a.util, b.util);
+        // a wider AXI strictly reduces modeled cycles (same compute)
+        let mut fast = cfg;
+        fast.axi_bytes_per_cycle = 16;
+        assert!(ev.score(&fast).cycles() < a.cycles());
+        // dataflow overlap reduces cycles further but costs BRAM
+        let mut ovl = fast;
+        ovl.overlap_tiles = true;
+        let o = ev.score(&ovl);
+        assert!(o.cycles() < ev.score(&fast).cycles());
+        assert!(o.util.bram_18k > a.util.bram_18k);
+    }
+
+    #[test]
+    fn evaluate_chains_prune_and_score() {
+        let ev = evaluator();
+        let p = ev.evaluate(Board::Zcu104, &HwConfig::zcu104()).unwrap();
+        assert!(p.cycles() > 0);
+        assert!(Board::Zcu104.fits(&p.util));
+        assert!(ev.evaluate(Board::PynqZ2, &HwConfig::zcu104()).is_err());
+    }
+}

@@ -1,0 +1,147 @@
+//! Design-space exploration & autotuning (S12): search the
+//! [`HwConfig`](crate::hls::HwConfig) space under per-board resource
+//! constraints and emit Pareto-optimal tuned configurations.
+//!
+//! The paper's §IV-A configuration step picks tile/unroll parameters
+//! "to maximally use on-chip resources while adhering to the resource
+//! constraints" of each target board — but hand-picks them. This
+//! subsystem derives them:
+//!
+//! * [`space`] — declarative knob-value lists whose cross product is
+//!   the candidate set, addressed by mixed-radix raw indices; legality
+//!   stays centralized in `HwConfig::validate`.
+//! * [`eval`] — two-stage candidate evaluation: microsecond resource
+//!   pruning (`fpga::resources::feasibility`) *before* the
+//!   millisecond modeled-cycle pass (`Simulator::with_config` over a
+//!   shared `Arc<Plan>`, the same ledger the serving path reports).
+//! * [`pareto`] — the latency × BRAM × DSP frontier with fully
+//!   deterministic tie-breaking (same inputs ⇒ same bytes out).
+//! * [`tune`] — the driver: exhaustive for small spaces, seeded
+//!   beam/neighborhood search under an evaluation budget for large
+//!   ones, candidates scored in parallel with `std::thread::scope`
+//!   sharding. Emits `BENCH_dse.json` and the tuned-config artifact
+//!   that `attrax serve --config <path>` runs on.
+//!
+//! See DESIGN.md §"dse: search space, pruning, and Pareto selection"
+//! and EXPERIMENTS.md E16.
+
+pub mod eval;
+pub mod pareto;
+pub mod space;
+pub mod tune;
+
+pub use eval::{DesignPoint, Evaluator, Pruned};
+pub use pareto::Frontier;
+pub use space::Space;
+pub use tune::{load_tuned, tune, TuneReport, TuneSpec, TunedConfigs, TUNED_SCHEMA};
+
+use crate::fx::QFormat;
+use crate::hls::HwConfig;
+use crate::util::json::{self, Json};
+
+/// Serialize every `HwConfig` knob (the tuned-artifact schema — one
+/// flat object, integer-valued except the dataflow flag).
+pub fn cfg_to_json(c: &HwConfig) -> Json {
+    json::obj(vec![
+        ("n_oh", json::num(c.n_oh as f64)),
+        ("n_ow", json::num(c.n_ow as f64)),
+        ("tile_oh", json::num(c.tile_oh as f64)),
+        ("tile_ow", json::num(c.tile_ow as f64)),
+        ("tile_oc", json::num(c.tile_oc as f64)),
+        ("tile_ic", json::num(c.tile_ic as f64)),
+        ("vmm_tile", json::num(c.vmm_tile as f64)),
+        ("vmm_in_tile", json::num(c.vmm_in_tile as f64)),
+        ("axi_bytes_per_cycle", json::num(c.axi_bytes_per_cycle as f64)),
+        ("axi_burst_overhead", json::num(c.axi_burst_overhead as f64)),
+        ("pipeline_depth", json::num(c.pipeline_depth as f64)),
+        ("overlap_tiles", Json::Bool(c.overlap_tiles)),
+        ("q_word_bits", json::num(c.q.word_bits as f64)),
+        ("q_frac_bits", json::num(c.q.frac_bits as f64)),
+    ])
+}
+
+/// Parse a config serialized by [`cfg_to_json`] and run it through the
+/// central legality gate (unknown keys are ignored; missing keys are
+/// an error).
+pub fn cfg_from_json(j: &Json) -> anyhow::Result<HwConfig> {
+    let field = |k: &str| -> anyhow::Result<usize> {
+        let n = j
+            .get(k)
+            .and_then(Json::as_f64)
+            .ok_or_else(|| anyhow::anyhow!("missing field {k}"))?;
+        // exact integers only: `as usize` truncation would silently run
+        // a different design than the file states
+        anyhow::ensure!(
+            n >= 0.0 && n.fract() == 0.0 && n <= u32::MAX as f64,
+            "field {k} must be a non-negative integer, got {n}"
+        );
+        Ok(n as usize)
+    };
+    let q = {
+        let wb = field("q_word_bits")?;
+        let fb = field("q_frac_bits")?;
+        anyhow::ensure!(
+            (2..=32).contains(&wb) && fb < wb,
+            "bad fixed-point format Q{wb}.{fb}"
+        );
+        QFormat::new(wb as u32, fb as u32)
+    };
+    let cfg = HwConfig {
+        n_oh: field("n_oh")?,
+        n_ow: field("n_ow")?,
+        tile_oh: field("tile_oh")?,
+        tile_ow: field("tile_ow")?,
+        tile_oc: field("tile_oc")?,
+        tile_ic: field("tile_ic")?,
+        vmm_tile: field("vmm_tile")?,
+        vmm_in_tile: field("vmm_in_tile")?,
+        q,
+        axi_bytes_per_cycle: field("axi_bytes_per_cycle")?,
+        axi_burst_overhead: field("axi_burst_overhead")? as u64,
+        pipeline_depth: field("pipeline_depth")? as u64,
+        overlap_tiles: j
+            .get("overlap_tiles")
+            .and_then(Json::as_bool)
+            .ok_or_else(|| anyhow::anyhow!("missing field overlap_tiles"))?,
+    };
+    cfg.validate()?;
+    Ok(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cfg_json_roundtrips_every_knob() {
+        let mut c = HwConfig::zcu104();
+        c.overlap_tiles = true;
+        c.axi_bytes_per_cycle = 16;
+        c.pipeline_depth = 4;
+        let j = cfg_to_json(&c);
+        let back = cfg_from_json(&j).unwrap();
+        assert_eq!(back, c);
+        // serialized form reparses from text too
+        let text = j.to_string();
+        assert_eq!(cfg_from_json(&Json::parse(&text).unwrap()).unwrap(), c);
+    }
+
+    #[test]
+    fn cfg_from_json_rejects_missing_and_illegal() {
+        let j = cfg_to_json(&HwConfig::pynq_z2());
+        // drop a field
+        let mut m = j.as_obj().unwrap().clone();
+        m.remove("vmm_tile");
+        assert!(cfg_from_json(&Json::Obj(m)).is_err());
+        // illegal knob value is caught by validate()
+        let mut m = j.as_obj().unwrap().clone();
+        m.insert("n_oh".into(), json::num(3.0));
+        let err = cfg_from_json(&Json::Obj(m)).unwrap_err().to_string();
+        assert!(err.contains("n_oh"), "{err}");
+        // fractional knob values are rejected, not truncated
+        let mut m = j.as_obj().unwrap().clone();
+        m.insert("vmm_tile".into(), json::num(16.5));
+        let err = cfg_from_json(&Json::Obj(m)).unwrap_err().to_string();
+        assert!(err.contains("vmm_tile"), "{err}");
+    }
+}

@@ -1,0 +1,309 @@
+//! Declarative search-space description over [`HwConfig`] knobs.
+//!
+//! A [`Space`] is a list of candidate values per knob; the candidate
+//! set is the cross product, addressed by a mixed-radix **raw index**
+//! in `0..raw_size()`. Indices are the search currency: sampling,
+//! neighborhood moves and dedup all happen in index space, and a
+//! config materializes only when a candidate is actually considered.
+//!
+//! Legality is *not* re-implemented here: every decoded config goes
+//! through the one central gate, [`HwConfig::validate`] — the space
+//! enumerates candidates, the config type owns the constraints
+//! (divisibility, nonzero knobs), so the two can never drift apart.
+//!
+//! `axi_burst_overhead` is deliberately not an axis: it is a property
+//! of the memory controller, not of the accelerator design, so every
+//! candidate inherits the platform constant. The fixed-point format
+//! *is* an axis (the datapath is precision-configurable), but the
+//! predefined spaces pin it to the paper's Q16.9 — precision is an
+//! accuracy contract with the serving layer, not a free latency knob.
+
+use crate::fx::QFormat;
+use crate::hls::{ConfigError, HwConfig};
+use crate::util::rng::Pcg32;
+
+/// Candidate values per `HwConfig` knob (the cross product is the
+/// search space). Empty axes are illegal.
+#[derive(Clone, Debug)]
+pub struct Space {
+    pub n_oh: Vec<usize>,
+    pub n_ow: Vec<usize>,
+    pub tile_oh: Vec<usize>,
+    pub tile_ow: Vec<usize>,
+    pub tile_oc: Vec<usize>,
+    pub tile_ic: Vec<usize>,
+    pub vmm_tile: Vec<usize>,
+    pub vmm_in_tile: Vec<usize>,
+    pub axi_bytes_per_cycle: Vec<usize>,
+    pub pipeline_depth: Vec<u64>,
+    /// The §IV-B dataflow knob (double-buffered tile overlap).
+    pub overlap_tiles: Vec<bool>,
+    pub q: Vec<QFormat>,
+}
+
+pub const N_AXES: usize = 12;
+
+impl Space {
+    /// The board-tuning space: every knob the paper's configuration
+    /// step varies, plus tiling/bus/dataflow dimensions it fixes.
+    /// ~97k raw candidates — beam territory, not exhaustive.
+    pub fn paper() -> Space {
+        Space {
+            n_oh: vec![1, 2, 4, 8, 16],
+            n_ow: vec![1, 2, 4, 8, 16],
+            tile_oh: vec![8, 16],
+            tile_ow: vec![8, 16],
+            tile_oc: vec![8, 16, 32],
+            tile_ic: vec![8, 16, 32],
+            vmm_tile: vec![16, 32, 64],
+            vmm_in_tile: vec![128, 256, 512],
+            axi_bytes_per_cycle: vec![4, 8, 16],
+            pipeline_depth: vec![4, 8],
+            overlap_tiles: vec![false, true],
+            q: vec![QFormat::paper16()],
+        }
+    }
+
+    /// Tiny fully-enumerable space (16 raw candidates, all valid) for
+    /// `attrax tune --smoke`, CI and tests.
+    pub fn smoke() -> Space {
+        Space {
+            n_oh: vec![2, 4],
+            n_ow: vec![4],
+            tile_oh: vec![8],
+            tile_ow: vec![8],
+            tile_oc: vec![16],
+            tile_ic: vec![16],
+            vmm_tile: vec![16, 32],
+            vmm_in_tile: vec![256],
+            axi_bytes_per_cycle: vec![8, 16],
+            pipeline_depth: vec![8],
+            overlap_tiles: vec![false, true],
+            q: vec![QFormat::paper16()],
+        }
+    }
+
+    /// Axis lengths in canonical order (the mixed-radix digits of a
+    /// raw index, least significant first).
+    pub fn axes(&self) -> [usize; N_AXES] {
+        [
+            self.n_oh.len(),
+            self.n_ow.len(),
+            self.tile_oh.len(),
+            self.tile_ow.len(),
+            self.tile_oc.len(),
+            self.tile_ic.len(),
+            self.vmm_tile.len(),
+            self.vmm_in_tile.len(),
+            self.axi_bytes_per_cycle.len(),
+            self.pipeline_depth.len(),
+            self.overlap_tiles.len(),
+            self.q.len(),
+        ]
+    }
+
+    /// Total raw candidates (valid and invalid). Panics on empty axes.
+    pub fn raw_size(&self) -> u64 {
+        self.axes()
+            .iter()
+            .map(|&l| {
+                assert!(l > 0, "empty space axis");
+                l as u64
+            })
+            .product()
+    }
+
+    fn decode(&self, mut idx: u64) -> [usize; N_AXES] {
+        assert!(idx < self.raw_size(), "index {idx} out of space");
+        let mut digits = [0usize; N_AXES];
+        for (d, len) in digits.iter_mut().zip(self.axes()) {
+            *d = (idx % len as u64) as usize;
+            idx /= len as u64;
+        }
+        digits
+    }
+
+    fn encode(&self, digits: &[usize; N_AXES]) -> u64 {
+        let mut idx = 0u64;
+        let mut stride = 1u64;
+        for (&d, len) in digits.iter().zip(self.axes()) {
+            debug_assert!(d < len);
+            idx += d as u64 * stride;
+            stride *= len as u64;
+        }
+        idx
+    }
+
+    /// Materialize the candidate at a raw index (legality NOT checked
+    /// — pair with [`Space::checked_at`] or [`HwConfig::validate`]).
+    pub fn config_at(&self, idx: u64) -> HwConfig {
+        let d = self.decode(idx);
+        let mut cfg = HwConfig::with_unroll(self.n_oh[d[0]], self.n_ow[d[1]], self.vmm_tile[d[6]]);
+        cfg.tile_oh = self.tile_oh[d[2]];
+        cfg.tile_ow = self.tile_ow[d[3]];
+        cfg.tile_oc = self.tile_oc[d[4]];
+        cfg.tile_ic = self.tile_ic[d[5]];
+        cfg.vmm_in_tile = self.vmm_in_tile[d[7]];
+        cfg.axi_bytes_per_cycle = self.axi_bytes_per_cycle[d[8]];
+        cfg.pipeline_depth = self.pipeline_depth[d[9]];
+        cfg.overlap_tiles = self.overlap_tiles[d[10]];
+        cfg.q = self.q[d[11]];
+        cfg
+    }
+
+    /// The candidate at `idx`, run through the central legality gate.
+    pub fn checked_at(&self, idx: u64) -> Result<HwConfig, ConfigError> {
+        let cfg = self.config_at(idx);
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// The raw index of a config whose every knob value appears in
+    /// this space (None otherwise) — used to seed the search with the
+    /// board's default design point.
+    pub fn index_of(&self, cfg: &HwConfig) -> Option<u64> {
+        let pos = |xs: &[usize], v: usize| xs.iter().position(|&x| x == v);
+        let digits = [
+            pos(&self.n_oh, cfg.n_oh)?,
+            pos(&self.n_ow, cfg.n_ow)?,
+            pos(&self.tile_oh, cfg.tile_oh)?,
+            pos(&self.tile_ow, cfg.tile_ow)?,
+            pos(&self.tile_oc, cfg.tile_oc)?,
+            pos(&self.tile_ic, cfg.tile_ic)?,
+            pos(&self.vmm_tile, cfg.vmm_tile)?,
+            pos(&self.vmm_in_tile, cfg.vmm_in_tile)?,
+            self.axi_bytes_per_cycle.iter().position(|&x| x == cfg.axi_bytes_per_cycle)?,
+            self.pipeline_depth.iter().position(|&x| x == cfg.pipeline_depth)?,
+            self.overlap_tiles.iter().position(|&x| x == cfg.overlap_tiles)?,
+            self.q.iter().position(|&x| x == cfg.q)?,
+        ];
+        Some(self.encode(&digits))
+    }
+
+    /// Every valid candidate, ascending by raw index. Materializes the
+    /// whole space — only for spaces the caller knows are small (the
+    /// tuner switches to sampled search beyond its budget).
+    pub fn enumerate(&self) -> Vec<(u64, HwConfig)> {
+        (0..self.raw_size())
+            .filter_map(|idx| self.checked_at(idx).ok().map(|cfg| (idx, cfg)))
+            .collect()
+    }
+
+    /// A uniformly random raw index (one digit per axis, so no modulo
+    /// bias regardless of the space size).
+    pub fn sample(&self, rng: &mut Pcg32) -> u64 {
+        let mut digits = [0usize; N_AXES];
+        for (d, len) in digits.iter_mut().zip(self.axes()) {
+            *d = rng.below(len as u32) as usize;
+        }
+        self.encode(&digits)
+    }
+
+    /// One-step neighbors of `idx`: each axis moved one position up or
+    /// down its value list, all other knobs held. Deterministic order
+    /// (axis-major, -1 before +1); legality is the caller's check.
+    pub fn neighbors(&self, idx: u64) -> Vec<u64> {
+        let digits = self.decode(idx);
+        let axes = self.axes();
+        let mut out = Vec::with_capacity(2 * N_AXES);
+        for ax in 0..N_AXES {
+            for delta in [-1isize, 1] {
+                let d = digits[ax] as isize + delta;
+                if d < 0 || d as usize >= axes[ax] {
+                    continue;
+                }
+                let mut moved = digits;
+                moved[ax] = d as usize;
+                out.push(self.encode(&moved));
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn smoke_space_is_tiny_and_fully_valid() {
+        let s = Space::smoke();
+        assert_eq!(s.raw_size(), 16);
+        let all = s.enumerate();
+        assert_eq!(all.len(), 16, "every smoke candidate is legal");
+        for (idx, cfg) in &all {
+            cfg.validate().unwrap();
+            assert_eq!(s.config_at(*idx), *cfg);
+        }
+    }
+
+    #[test]
+    fn paper_space_counts_and_validity() {
+        let s = Space::paper();
+        assert_eq!(s.raw_size(), 97_200);
+        // spot-check: an index decoding to n_oh=16, tile_oh=8 is
+        // rejected by the central gate, not silently emitted
+        let bad = s
+            .index_of(&{
+                let mut c = HwConfig::with_unroll(16, 1, 16);
+                c.vmm_in_tile = 128;
+                c.axi_bytes_per_cycle = 4;
+                c.pipeline_depth = 4;
+                c
+            })
+            .unwrap();
+        assert!(s.checked_at(bad).is_err());
+    }
+
+    #[test]
+    fn index_roundtrip_and_default_configs_present() {
+        let s = Space::paper();
+        for cfg in [HwConfig::pynq_z2(), HwConfig::ultra96_v2(), HwConfig::zcu104()] {
+            let idx = s.index_of(&cfg).expect("paper defaults live in the paper space");
+            assert_eq!(s.config_at(idx), cfg);
+        }
+        // a config with an off-axis knob is not in the space
+        let mut odd = HwConfig::pynq_z2();
+        odd.vmm_in_tile = 300;
+        assert_eq!(s.index_of(&odd), None);
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_in_range() {
+        let s = Space::paper();
+        let draw = |seed: u64| -> Vec<u64> {
+            let mut rng = Pcg32::seeded(seed);
+            (0..64).map(|_| s.sample(&mut rng)).collect()
+        };
+        let a = draw(9);
+        assert_eq!(a, draw(9));
+        assert_ne!(a, draw(10));
+        assert!(a.iter().all(|&i| i < s.raw_size()));
+    }
+
+    #[test]
+    fn neighbors_move_one_knob_one_step() {
+        let s = Space::smoke();
+        let idx = s.index_of(&{
+            let mut c = HwConfig::with_unroll(2, 4, 16);
+            c.axi_bytes_per_cycle = 8;
+            c
+        })
+        .unwrap();
+        let nbs = s.neighbors(idx);
+        // 4 two-valued axes, each at position 0 -> one move apiece
+        assert_eq!(nbs.len(), 4);
+        for nb in nbs {
+            assert_ne!(nb, idx);
+            let a = s.config_at(idx);
+            let b = s.config_at(nb);
+            let diffs = [
+                a.n_oh != b.n_oh,
+                a.vmm_tile != b.vmm_tile,
+                a.axi_bytes_per_cycle != b.axi_bytes_per_cycle,
+                a.overlap_tiles != b.overlap_tiles,
+            ];
+            assert_eq!(diffs.iter().filter(|&&d| d).count(), 1, "{b:?}");
+        }
+    }
+}

@@ -1,0 +1,602 @@
+//! The DSE driver: exhaustive search for small spaces, seeded
+//! beam/neighborhood search for large ones, parallelized across
+//! candidates with the same `std::thread::scope` sharding pattern the
+//! engine compute passes use.
+//!
+//! Determinism contract: for a fixed (space, spec) the whole run —
+//! candidate order, frontier, winner, serialized artifacts — is
+//! byte-identical across reruns and thread counts. Randomness comes
+//! only from `util::rng` seeded per board, candidate batches are
+//! scored into index-addressed slots (threads never race on order),
+//! and every collection that reaches JSON is either sorted or a
+//! `BTreeMap`.
+//!
+//! Two artifacts come out of a run:
+//! * `BENCH_dse.json` — the full report: per-board prune counters,
+//!   default-vs-tuned design points, speedup, and the Pareto frontier.
+//! * the **tuned-config artifact** (`attrax tune --tuned <path>`) —
+//!   just the winning `HwConfig` per board, the file `attrax serve
+//!   --config` / `attrax loadgen --smoke --config` load at startup.
+
+use std::collections::BTreeSet;
+use std::path::Path;
+
+use super::eval::{DesignPoint, Evaluator, Pruned};
+use super::pareto::{dominates, rank_key, Frontier};
+use super::space::Space;
+use crate::attribution::Method;
+use crate::fpga::{self, Board, Feasibility, Utilization};
+use crate::hls::HwConfig;
+use crate::model::{Network, Params};
+use crate::sched::{auto_shards, BatchOutput, Workspace};
+use crate::util::json::{self, Json};
+use crate::util::rng::Pcg32;
+
+/// Schema tag of the tuned-config artifact.
+pub const TUNED_SCHEMA: &str = "attrax-tuned/v1";
+
+/// What to search and how hard.
+#[derive(Clone, Debug)]
+pub struct TuneSpec {
+    pub space: Space,
+    pub boards: Vec<Board>,
+    pub method: Method,
+    pub seed: u64,
+    /// Max cost-model evaluations per board. Spaces no larger than
+    /// this are searched exhaustively; bigger ones get seeded
+    /// beam/neighborhood search under this cap.
+    pub budget: usize,
+    /// Beam width of the neighborhood-refinement rounds.
+    pub beam: usize,
+    /// Scoring threads (0 = the host's available parallelism).
+    pub threads: usize,
+}
+
+impl Default for TuneSpec {
+    fn default() -> TuneSpec {
+        TuneSpec {
+            space: Space::paper(),
+            boards: fpga::ALL_BOARDS.to_vec(),
+            method: Method::Guided,
+            seed: 42,
+            budget: 160,
+            beam: 8,
+            threads: 0,
+        }
+    }
+}
+
+/// One board's search outcome.
+#[derive(Clone, Debug)]
+pub struct BoardOutcome {
+    pub board: Board,
+    /// Distinct candidates considered (scored + pruned).
+    pub visited: usize,
+    pub pruned_invalid: usize,
+    pub pruned_capacity: usize,
+    pub scored: usize,
+    pub frontier: Frontier,
+    /// The board's current default (`fpga::choose_config`), evaluated
+    /// under the same cost model.
+    pub default_point: DesignPoint,
+    /// The tuned winner (latency-optimal frontier point).
+    pub best: DesignPoint,
+    /// `true` when no explored point Pareto-dominates the default —
+    /// the "default is already Pareto-optimal" verdict. (An
+    /// objective-tied twin may replace the default *on* the frontier
+    /// without dominating it; the default is still optimal then.)
+    pub default_on_frontier: bool,
+    /// default cycles / tuned cycles (>= 1.0 when tuning helped).
+    pub speedup: f64,
+}
+
+/// A full tuning run.
+#[derive(Clone, Debug)]
+pub struct TuneReport {
+    pub seed: u64,
+    pub method: Method,
+    pub outcomes: Vec<BoardOutcome>,
+}
+
+/// A stable per-board RNG stream id, independent of the order boards
+/// were listed in the spec.
+fn board_stream(b: Board) -> u64 {
+    match b {
+        Board::PynqZ2 => 0x70_79_6e_71,
+        Board::Ultra96V2 => 0x75_39_36_76,
+        Board::Zcu104 => 0x7a_63_75_34,
+    }
+}
+
+/// Candidate admission bookkeeping: dedup + prune counters.
+struct Admission {
+    seen: BTreeSet<u64>,
+    invalid: usize,
+    capacity: usize,
+}
+
+impl Admission {
+    fn new() -> Admission {
+        Admission { seen: BTreeSet::new(), invalid: 0, capacity: 0 }
+    }
+
+    /// Consider raw index `idx`: dedup, legality-check, capacity-prune.
+    /// Returns the config (with the prune gate's resource estimates,
+    /// so scoring never pays for them twice) only when it deserves a
+    /// cost pass.
+    fn admit(
+        &mut self,
+        ev: &Evaluator,
+        space: &Space,
+        board: Board,
+        idx: u64,
+    ) -> Option<(HwConfig, Feasibility)> {
+        if !self.seen.insert(idx) {
+            return None;
+        }
+        let cfg = space.config_at(idx);
+        match ev.prune(board, &cfg) {
+            Ok(feas) => Some((cfg, feas)),
+            Err(Pruned::Invalid(_)) => {
+                self.invalid += 1;
+                None
+            }
+            Err(Pruned::OverCapacity(_)) => {
+                self.capacity += 1;
+                None
+            }
+        }
+    }
+}
+
+/// Score a batch of already-admitted candidates, sharded across
+/// `threads` scoped threads. Results land in index-addressed slots, so
+/// the output order equals the input order for any thread count; each
+/// thread keeps one warm `Workspace`/`BatchOutput` pair for its whole
+/// chunk (the same arena-reuse discipline as the coordinator workers).
+fn score_batch(
+    ev: &Evaluator,
+    cands: &[(HwConfig, Feasibility)],
+    threads: usize,
+) -> Vec<DesignPoint> {
+    if cands.is_empty() {
+        return Vec::new();
+    }
+    let threads = threads.clamp(1, cands.len());
+    let chunk = cands.len().div_ceil(threads);
+    let mut out: Vec<Option<DesignPoint>> = vec![None; cands.len()];
+    std::thread::scope(|scope| {
+        for (cs, os) in cands.chunks(chunk).zip(out.chunks_mut(chunk)) {
+            scope.spawn(move || {
+                let mut ws = Workspace::with_shards(1);
+                let mut bo = BatchOutput::new();
+                for ((c, f), o) in cs.iter().zip(os.iter_mut()) {
+                    *o = Some(ev.score_feasible(&mut ws, &mut bo, c, f));
+                }
+            });
+        }
+    });
+    out.into_iter().map(|o| o.expect("every slot scored")).collect()
+}
+
+/// Search one board: exhaustive when the space fits the budget, else
+/// seeded sampling + beam/neighborhood refinement. Returns every
+/// scored `(raw index, point)` plus the admission counters.
+fn search_board(
+    ev: &Evaluator,
+    spec: &TuneSpec,
+    board: Board,
+    default_seed: Option<(u64, DesignPoint)>,
+    threads: usize,
+) -> (Vec<(u64, DesignPoint)>, Admission) {
+    let space = &spec.space;
+    let mut adm = Admission::new();
+    let mut scored: Vec<(u64, DesignPoint)> = Vec::new();
+    // the default design point is already scored by the caller; when it
+    // lives in the space, seed the search with it (it anchors the beam
+    // and is never cost-evaluated a second time)
+    if let Some((didx, dpt)) = default_seed {
+        adm.seen.insert(didx);
+        scored.push((didx, dpt));
+    }
+
+    if space.raw_size() <= spec.budget as u64 {
+        // exhaustive: every raw index, ascending
+        let mut batch: Vec<(u64, (HwConfig, Feasibility))> = Vec::new();
+        for idx in 0..space.raw_size() {
+            if let Some(cand) = adm.admit(ev, space, board, idx) {
+                batch.push((idx, cand));
+            }
+        }
+        let cands: Vec<(HwConfig, Feasibility)> = batch.iter().map(|(_, c)| *c).collect();
+        let pts = score_batch(ev, &cands, threads);
+        scored.extend(batch.iter().map(|(i, _)| *i).zip(pts));
+        return (scored, adm);
+    }
+
+    // --- seeded phase: uniform samples, up to half the budget (the
+    // default design point, when in-space, is already seeded above) ---
+    let mut rng = Pcg32::new(spec.seed, board_stream(board));
+    let target = (spec.budget / 2).max(spec.beam).max(1).min(spec.budget);
+    let mut batch: Vec<(u64, (HwConfig, Feasibility))> = Vec::new();
+    let mut attempts = 0usize;
+    let max_attempts = spec.budget.saturating_mul(64).max(1024);
+    while batch.len() < target && attempts < max_attempts {
+        attempts += 1;
+        let idx = space.sample(&mut rng);
+        if let Some(cand) = adm.admit(ev, space, board, idx) {
+            batch.push((idx, cand));
+        }
+    }
+    let cands: Vec<(HwConfig, Feasibility)> = batch.iter().map(|(_, c)| *c).collect();
+    let pts = score_batch(ev, &cands, threads);
+    scored.extend(batch.iter().map(|(i, _)| *i).zip(pts));
+
+    // --- beam rounds: expand the neighborhoods of the current best
+    // points until the budget is spent or the frontier region is dry --
+    while scored.len() < spec.budget {
+        let mut order: Vec<usize> = (0..scored.len()).collect();
+        order.sort_by_key(|&i| rank_key(&scored[i].1));
+        let mut batch: Vec<(u64, (HwConfig, Feasibility))> = Vec::new();
+        'expand: for &i in order.iter().take(spec.beam) {
+            for nb in space.neighbors(scored[i].0) {
+                if scored.len() + batch.len() >= spec.budget {
+                    break 'expand;
+                }
+                if let Some(cand) = adm.admit(ev, space, board, nb) {
+                    batch.push((nb, cand));
+                }
+            }
+        }
+        if batch.is_empty() {
+            break; // every beam neighborhood explored
+        }
+        let cands: Vec<(HwConfig, Feasibility)> = batch.iter().map(|(_, c)| *c).collect();
+        let pts = score_batch(ev, &cands, threads);
+        scored.extend(batch.iter().map(|(i, _)| *i).zip(pts));
+    }
+    (scored, adm)
+}
+
+/// Run the full design-space exploration: per board, prune the space
+/// against the board's capacity, score survivors on the modeled-cycle
+/// cost model, and reduce to the Pareto frontier + tuned winner.
+pub fn tune(net: &Network, params: &Params, spec: &TuneSpec) -> anyhow::Result<TuneReport> {
+    anyhow::ensure!(!spec.boards.is_empty(), "tune needs at least one board");
+    anyhow::ensure!(spec.budget >= 1, "tune budget must be at least 1");
+    let threads = if spec.threads == 0 { auto_shards() } else { spec.threads };
+    // plan the space's formats plus the default config's (choose_config
+    // always picks the paper datapath; the evaluator dedupes)
+    let mut qs = spec.space.q.clone();
+    qs.push(crate::fx::QFormat::paper16());
+    let ev = Evaluator::new(net, params, &qs, spec.method, spec.seed)?;
+
+    let mut outcomes = Vec::with_capacity(spec.boards.len());
+    for &board in &spec.boards {
+        let default_cfg = fpga::choose_config(board, net, spec.method);
+        let default_point = ev.score(&default_cfg);
+        let default_seed =
+            spec.space.index_of(&default_cfg).map(|idx| (idx, default_point.clone()));
+        let (scored, adm) = search_board(&ev, spec, board, default_seed, threads);
+
+        let mut frontier = Frontier::new();
+        frontier.insert(default_point.clone());
+        for (_, p) in &scored {
+            frontier.insert(p.clone());
+        }
+        let best = frontier.best().expect("frontier holds at least the default").clone();
+        let speedup = default_point.cycles() as f64 / best.cycles() as f64;
+        // Pareto-optimality of the default is a dominance question, not
+        // frontier membership: an objective-tied twin with a smaller
+        // config key replaces the default on the frontier without
+        // actually beating it.
+        let default_dominated = scored.iter().any(|(_, p)| dominates(p, &default_point));
+        outcomes.push(BoardOutcome {
+            board,
+            visited: adm.seen.len(),
+            pruned_invalid: adm.invalid,
+            pruned_capacity: adm.capacity,
+            scored: scored.len(),
+            default_on_frontier: !default_dominated,
+            frontier,
+            default_point,
+            best,
+            speedup,
+        });
+    }
+    Ok(TuneReport { seed: spec.seed, method: spec.method, outcomes })
+}
+
+// ---------------------------------------------------------------------------
+// Rendering + artifacts
+// ---------------------------------------------------------------------------
+
+fn util_json(u: &Utilization) -> Json {
+    json::obj(vec![
+        ("bram_18k", json::num(u.bram_18k as f64)),
+        ("dsp", json::num(u.dsp as f64)),
+        ("ff", json::num(u.ff as f64)),
+        ("lut", json::num(u.lut as f64)),
+    ])
+}
+
+fn point_json(p: &DesignPoint) -> Json {
+    json::obj(vec![
+        ("config", super::cfg_to_json(&p.cfg)),
+        ("fp_cycles", json::num(p.fp_cycles as f64)),
+        ("bp_cycles", json::num(p.bp_cycles as f64)),
+        ("cycles", json::num(p.cycles() as f64)),
+        ("latency_ms", json::num(p.latency_ms(fpga::TARGET_FREQ_MHZ))),
+        ("fp_util", util_json(&p.fp_util)),
+        ("util", util_json(&p.util)),
+    ])
+}
+
+impl TuneReport {
+    /// The `BENCH_dse.json` payload. Deterministic for a fixed
+    /// (space, spec): board keys are a `BTreeMap`, frontiers are
+    /// rank-sorted.
+    pub fn to_json(&self, spec: &TuneSpec) -> Json {
+        let boards = self
+            .outcomes
+            .iter()
+            .map(|o| {
+                let frontier: Vec<Json> =
+                    o.frontier.entries().into_iter().map(point_json).collect();
+                let max_util = o
+                    .frontier
+                    .max_utilization(o.board)
+                    .map(point_json)
+                    .unwrap_or(Json::Null);
+                (
+                    o.board.name(),
+                    json::obj(vec![
+                        ("visited", json::num(o.visited as f64)),
+                        ("pruned_invalid", json::num(o.pruned_invalid as f64)),
+                        ("pruned_capacity", json::num(o.pruned_capacity as f64)),
+                        ("scored", json::num(o.scored as f64)),
+                        ("default", point_json(&o.default_point)),
+                        ("best", point_json(&o.best)),
+                        ("max_utilization", max_util),
+                        ("speedup", json::num(o.speedup)),
+                        ("default_on_frontier", Json::Bool(o.default_on_frontier)),
+                        ("frontier", json::arr(frontier)),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("bench", json::s("dse")),
+            // decimal string: u64 seeds above 2^53 don't survive the
+            // f64-backed JSON number representation
+            ("seed", json::s(&self.seed.to_string())),
+            ("method", json::s(self.method.name())),
+            ("budget", json::num(spec.budget as f64)),
+            ("beam", json::num(spec.beam as f64)),
+            ("raw_space", json::num(spec.space.raw_size() as f64)),
+            ("boards", json::obj(boards)),
+        ])
+    }
+
+    /// The tuned-config artifact: just the winning config per board
+    /// (what `attrax serve --config` consumes), plus provenance.
+    pub fn tuned_json(&self) -> Json {
+        let configs = self
+            .outcomes
+            .iter()
+            .map(|o| (o.board.name(), super::cfg_to_json(&o.best.cfg)))
+            .collect();
+        json::obj(vec![
+            ("schema", json::s(TUNED_SCHEMA)),
+            ("seed", json::s(&self.seed.to_string())),
+            ("method", json::s(self.method.name())),
+            ("configs", json::obj(configs)),
+        ])
+    }
+
+    /// Human summary table.
+    pub fn render(&self) -> String {
+        let mut s = format!(
+            "{:<12} {:>9} {:>9} {:>8} {:>9} {:>9} {:>8} {:>9}\n",
+            "board", "visited", "pruned", "scored", "default", "tuned", "speedup", "frontier"
+        );
+        for o in &self.outcomes {
+            s.push_str(&format!(
+                "{:<12} {:>9} {:>9} {:>8} {:>9} {:>9} {:>7.2}x {:>9}\n",
+                o.board.name(),
+                o.visited,
+                o.pruned_invalid + o.pruned_capacity,
+                o.scored,
+                o.default_point.cycles(),
+                o.best.cycles(),
+                o.speedup,
+                o.frontier.len(),
+            ));
+            let c = &o.best.cfg;
+            s.push_str(&format!(
+                "             tuned: N_oh={} N_ow={} tile={}x{} oc/ic={}/{} vmm={}/{} axi={}B dataflow={}{}\n",
+                c.n_oh,
+                c.n_ow,
+                c.tile_oh,
+                c.tile_ow,
+                c.tile_oc,
+                c.tile_ic,
+                c.vmm_tile,
+                c.vmm_in_tile,
+                c.axi_bytes_per_cycle,
+                c.overlap_tiles,
+                if o.default_on_frontier { " (default on frontier)" } else { "" },
+            ));
+        }
+        s
+    }
+}
+
+/// Tuned configs loaded back from an artifact (keyed by board name).
+#[derive(Clone, Debug)]
+pub struct TunedConfigs {
+    pub seed: u64,
+    pub method: Method,
+    pub configs: std::collections::BTreeMap<String, HwConfig>,
+}
+
+impl TunedConfigs {
+    pub fn for_board(&self, board: Board) -> Option<HwConfig> {
+        self.configs.get(board.name()).copied()
+    }
+
+    pub fn board_names(&self) -> Vec<&str> {
+        self.configs.keys().map(|k| k.as_str()).collect()
+    }
+}
+
+/// Parse a tuned-config artifact; every config re-passes the central
+/// legality gate, so a hand-edited file cannot smuggle an illegal
+/// design into the server.
+pub fn parse_tuned(text: &str) -> anyhow::Result<TunedConfigs> {
+    let j = Json::parse(text).map_err(|e| anyhow::anyhow!("tuned artifact: {e}"))?;
+    let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+    anyhow::ensure!(
+        schema == TUNED_SCHEMA,
+        "tuned artifact schema {schema:?} (expected {TUNED_SCHEMA:?})"
+    );
+    let method = j
+        .get("method")
+        .and_then(Json::as_str)
+        .and_then(Method::parse)
+        .ok_or_else(|| anyhow::anyhow!("tuned artifact: missing/unknown method"))?;
+    let seed = j
+        .get("seed")
+        .and_then(Json::as_str)
+        .and_then(|s| s.parse::<u64>().ok())
+        .unwrap_or(0);
+    let obj = j
+        .get("configs")
+        .and_then(Json::as_obj)
+        .ok_or_else(|| anyhow::anyhow!("tuned artifact: missing configs object"))?;
+    let mut configs = std::collections::BTreeMap::new();
+    for (name, cj) in obj {
+        let cfg = super::cfg_from_json(cj)
+            .map_err(|e| anyhow::anyhow!("tuned artifact, board {name}: {e}"))?;
+        configs.insert(name.clone(), cfg);
+    }
+    anyhow::ensure!(!configs.is_empty(), "tuned artifact holds no configs");
+    Ok(TunedConfigs { seed, method, configs })
+}
+
+/// Load a tuned-config artifact from disk.
+pub fn load_tuned(path: &Path) -> anyhow::Result<TunedConfigs> {
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+    parse_tuned(&text)
+}
+
+/// Write a JSON value to disk with a trailing newline.
+pub fn write_json(path: &Path, j: &Json) -> anyhow::Result<()> {
+    std::fs::write(path, format!("{j}\n"))
+        .map_err(|e| anyhow::anyhow!("write {}: {e}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::tests_support::tiny_net_params;
+
+    fn smoke_spec(seed: u64) -> TuneSpec {
+        TuneSpec {
+            space: Space::smoke(),
+            boards: vec![Board::PynqZ2, Board::Zcu104],
+            seed,
+            budget: 32,
+            threads: 2,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn exhaustive_tune_visits_the_whole_smoke_space() {
+        let (net, params) = tiny_net_params(3);
+        let r = tune(&net, &params, &smoke_spec(1)).unwrap();
+        assert_eq!(r.outcomes.len(), 2);
+        for o in &r.outcomes {
+            // every smoke candidate is legal; capacity may prune some
+            assert_eq!(o.visited, 16);
+            assert_eq!(o.pruned_invalid, 0);
+            assert_eq!(o.scored + o.pruned_capacity, 16);
+            assert!(o.speedup >= 1.0, "{}: tuned can never lose", o.board);
+            assert!(!o.frontier.is_empty());
+        }
+    }
+
+    #[test]
+    fn tuned_beats_or_matches_default_and_fits() {
+        let (net, params) = tiny_net_params(5);
+        let r = tune(&net, &params, &smoke_spec(2)).unwrap();
+        for o in &r.outcomes {
+            assert!(o.best.cfg.validate().is_ok());
+            assert!(o.board.fits(&o.best.util));
+            // the smoke space contains a wider AXI + dataflow overlap,
+            // both strictly faster than the sequential default
+            assert!(
+                o.best.cycles() < o.default_point.cycles() || o.default_on_frontier,
+                "{}: tuned {} vs default {}",
+                o.board,
+                o.best.cycles(),
+                o.default_point.cycles()
+            );
+        }
+    }
+
+    #[test]
+    fn same_seed_same_bytes() {
+        let (net, params) = tiny_net_params(7);
+        let spec = smoke_spec(9);
+        let a = tune(&net, &params, &spec).unwrap().to_json(&spec).to_string();
+        let mut spec_mt = spec.clone();
+        spec_mt.threads = 4; // thread count must not leak into results
+        let b = tune(&net, &params, &spec_mt).unwrap().to_json(&spec_mt).to_string();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn tuned_artifact_roundtrips_and_validates() {
+        let (net, params) = tiny_net_params(9);
+        let r = tune(&net, &params, &smoke_spec(4)).unwrap();
+        let text = r.tuned_json().to_string();
+        let back = parse_tuned(&text).unwrap();
+        assert_eq!(back.method, Method::Guided);
+        assert_eq!(back.seed, 4, "seed survives the string round-trip");
+        for o in &r.outcomes {
+            assert_eq!(back.for_board(o.board), Some(o.best.cfg));
+        }
+        assert_eq!(back.for_board(Board::Ultra96V2), None);
+        // tampering with a knob is caught by the legality gate on load
+        let bad = text.replace("\"n_oh\":", "\"n_oh\":0,\"was_n_oh\":");
+        assert!(parse_tuned(&bad).is_err());
+        // wrong schema rejected
+        assert!(parse_tuned("{\"schema\":\"nope\"}").is_err());
+    }
+
+    #[test]
+    fn beam_search_respects_budget_on_large_spaces() {
+        let (net, params) = tiny_net_params(11);
+        let spec = TuneSpec {
+            space: Space::paper(),
+            boards: vec![Board::Ultra96V2],
+            seed: 5,
+            budget: 24,
+            beam: 4,
+            threads: 2,
+            ..Default::default()
+        };
+        let r = tune(&net, &params, &spec).unwrap();
+        let o = &r.outcomes[0];
+        assert!(o.scored <= 24, "budget blown: {}", o.scored);
+        assert!(o.scored > 0);
+        assert!(o.visited >= o.scored);
+        // reruns are byte-identical here too
+        let a = r.to_json(&spec).to_string();
+        let b = tune(&net, &params, &spec).unwrap().to_json(&spec).to_string();
+        assert_eq!(a, b);
+    }
+}

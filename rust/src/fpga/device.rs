@@ -60,6 +60,19 @@ impl Board {
         u.bram_18k <= c.bram_18k && u.dsp <= c.dsp && u.ff <= c.ff && u.lut <= c.lut
     }
 
+    /// Capacity left after placing `u`, saturating at zero per axis
+    /// (an over-capacity build reports zero headroom there, it does
+    /// not wrap).
+    pub fn headroom(&self, u: &Utilization) -> Utilization {
+        let c = self.capacity();
+        Utilization {
+            bram_18k: c.bram_18k.saturating_sub(u.bram_18k),
+            dsp: c.dsp.saturating_sub(u.dsp),
+            ff: c.ff.saturating_sub(u.ff),
+            lut: c.lut.saturating_sub(u.lut),
+        }
+    }
+
     /// Utilization percentages (BRAM, DSP, FF, LUT) like Table IV prints.
     pub fn percent(&self, u: &Utilization) -> [f64; 4] {
         let c = self.capacity();

@@ -7,7 +7,8 @@ pub mod resources;
 
 pub use device::{Board, Capacity, ALL_BOARDS};
 pub use resources::{
-    choose_config, estimate_fp, estimate_fp_bp, estimate_pipelined, Utilization,
+    choose_config, estimate_fp, estimate_fp_bp, estimate_pipelined, feasibility, Feasibility,
+    Utilization,
 };
 
 /// The paper's synthesis target clock (§IV-A).

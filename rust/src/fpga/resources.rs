@@ -29,12 +29,16 @@ pub struct Utilization {
 }
 
 impl Utilization {
+    /// Per-axis overhead of `self` relative to `base`, saturating at
+    /// zero. DSE compares arbitrary config pairs, so `base` may exceed
+    /// `self` on some axis — raw `u32` subtraction would panic in
+    /// debug builds there (regression-tested below).
     pub fn delta(&self, base: &Utilization) -> Utilization {
         Utilization {
-            bram_18k: self.bram_18k - base.bram_18k,
-            dsp: self.dsp - base.dsp,
-            ff: self.ff - base.ff,
-            lut: self.lut - base.lut,
+            bram_18k: self.bram_18k.saturating_sub(base.bram_18k),
+            dsp: self.dsp.saturating_sub(base.dsp),
+            ff: self.ff.saturating_sub(base.ff),
+            lut: self.lut.saturating_sub(base.lut),
         }
     }
 }
@@ -76,6 +80,15 @@ fn buffer_costs(cfg: &HwConfig) -> (u32, u32) {
     bram += bram_units(cfg.vmm_tile * cfg.vmm_in_tile, bits);
     // VMM input/output vectors — LUTRAM
     lutram += (((cfg.vmm_in_tile + cfg.vmm_tile) * bits) / 64) as u32;
+
+    // HLS dataflow double buffering (§IV-B): overlapping tile
+    // load/compute/store needs ping-pong copies of every tile buffer.
+    // The cycle model credits the overlap (`Cost::overlapped_cycles`);
+    // this is the memory bill, so DSE cannot pick the knob for free.
+    if cfg.overlap_tiles {
+        bram *= 2;
+        lutram *= 2;
+    }
 
     (bram, lutram)
 }
@@ -139,6 +152,32 @@ pub fn estimate_pipelined(cfg: &HwConfig, net: &Network, method: Method) -> Util
         ff: fp.ff + fpbp.ff,
         lut: fp.lut + fpbp.lut,
     }
+}
+
+/// One candidate's pre-cost feasibility picture: the FP and FP+BP
+/// utilization estimates, whether the FP+BP build (the one that must
+/// be placed) fits the board, and the per-axis headroom left under the
+/// capacity cap.
+///
+/// This is the DSE prune gate: estimating resources costs microseconds
+/// while a cycle-model pass costs milliseconds, so capacity-infeasible
+/// candidates are rejected *before* any cost evaluation
+/// (`dse::eval::Evaluator::prune`).
+#[derive(Clone, Copy, Debug)]
+pub struct Feasibility {
+    pub fp: Utilization,
+    pub fp_bp: Utilization,
+    pub fits: bool,
+    /// Capacity minus the FP+BP build, saturating per axis.
+    pub headroom: Utilization,
+}
+
+/// Estimate a candidate's resources and check them against `board`
+/// (the capacity/utilization pruning entry point — no cycle modeling).
+pub fn feasibility(board: Board, cfg: &HwConfig, net: &Network, method: Method) -> Feasibility {
+    let fp = estimate_fp(cfg, net);
+    let fp_bp = estimate_fp_bp(cfg, net, method);
+    Feasibility { fp, fp_bp, fits: board.fits(&fp_bp), headroom: board.headroom(&fp_bp) }
 }
 
 /// The paper's platform-configuration step (§IV-A: "hardware
@@ -251,6 +290,49 @@ mod tests {
         let pipe = estimate_pipelined(&cfg, &net(), Method::Guided);
         assert!(pipe.dsp > seq.dsp + estimate_fp(&cfg, &net()).dsp - 2);
         assert!(pipe.lut > seq.lut);
+    }
+
+    #[test]
+    fn delta_saturates_instead_of_underflowing() {
+        // DSE compares arbitrary pairs: base bigger than self on some
+        // axes must clamp to zero, not panic in debug builds
+        let small = Utilization { bram_18k: 3, dsp: 40, ff: 10_000, lut: 50_000 };
+        let big = Utilization { bram_18k: 10, dsp: 20, ff: 20_000, lut: 30_000 };
+        let d = small.delta(&big);
+        assert_eq!(d, Utilization { bram_18k: 0, dsp: 20, ff: 0, lut: 20_000 });
+        // the ordinary direction still reports the true overhead
+        let d = big.delta(&small);
+        assert_eq!(d, Utilization { bram_18k: 7, dsp: 0, ff: 10_000, lut: 0 });
+        // identical inputs are a zero delta both ways
+        assert_eq!(small.delta(&small), Utilization::default());
+    }
+
+    #[test]
+    fn overlap_tiles_pays_double_buffers() {
+        let mut cfg = HwConfig::pynq_z2();
+        let seq = estimate_fp_bp(&cfg, &net(), Method::Guided);
+        cfg.overlap_tiles = true;
+        let ovl = estimate_fp_bp(&cfg, &net(), Method::Guided);
+        // ping-pong buffers: strictly more BRAM, unchanged DSP (the
+        // datapath is not duplicated, only the tile memories)
+        assert!(ovl.bram_18k > seq.bram_18k, "{} vs {}", ovl.bram_18k, seq.bram_18k);
+        assert_eq!(ovl.dsp, seq.dsp);
+    }
+
+    #[test]
+    fn feasibility_agrees_with_fits_and_headroom() {
+        let n = net();
+        let f = feasibility(Board::PynqZ2, &HwConfig::pynq_z2(), &n, Method::Guided);
+        assert!(f.fits);
+        assert_eq!(f.fp_bp, estimate_fp_bp(&HwConfig::pynq_z2(), &n, Method::Guided));
+        let cap = Board::PynqZ2.capacity();
+        assert_eq!(f.headroom.dsp, cap.dsp - f.fp_bp.dsp);
+        // the ZCU104 design point is too large for the small board,
+        // with zero (saturated) headroom on the exhausted axis
+        let big = HwConfig::zcu104();
+        let f = feasibility(Board::PynqZ2, &big, &n, Method::Guided);
+        assert!(!f.fits);
+        assert_eq!(f.headroom.dsp.min(f.headroom.lut), 0);
     }
 
     #[test]

@@ -18,6 +18,45 @@ pub mod vmm;
 
 use crate::fx::QFormat;
 
+/// Why a [`HwConfig`] is illegal (returned by [`HwConfig::validate`],
+/// the single legality gate: `sched::Plan` construction,
+/// `Simulator::with_config` and the `dse::space` enumerator all go
+/// through it, so no other layer re-checks knob consistency).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ConfigError {
+    /// A structural knob that must be at least 1 is zero.
+    ZeroKnob(&'static str),
+    /// The row unroll must divide the row tile (each of the `n_oh`
+    /// MAC lanes owns an equal slice of the output-tile rows).
+    UnrollRows { n_oh: usize, tile_oh: usize },
+    /// The column unroll must divide the column tile.
+    UnrollCols { n_ow: usize, tile_ow: usize },
+    /// The VMM block size must divide the input-vector tile: the BP
+    /// pass reuses the `[vmm_tile][vmm_in_tile]` weight buffer with
+    /// the roles swapped, so an indivisible pair would leave
+    /// partially-filled banks.
+    VmmIndivisible { vmm_tile: usize, vmm_in_tile: usize },
+}
+
+impl std::fmt::Display for ConfigError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ConfigError::ZeroKnob(knob) => write!(f, "config knob {knob} must be positive"),
+            ConfigError::UnrollRows { n_oh, tile_oh } => {
+                write!(f, "row unroll n_oh={n_oh} must divide tile_oh={tile_oh}")
+            }
+            ConfigError::UnrollCols { n_ow, tile_ow } => {
+                write!(f, "col unroll n_ow={n_ow} must divide tile_ow={tile_ow}")
+            }
+            ConfigError::VmmIndivisible { vmm_tile, vmm_in_tile } => {
+                write!(f, "vmm_tile={vmm_tile} must divide vmm_in_tile={vmm_in_tile}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for ConfigError {}
+
 /// Design-time hardware configuration (paper §IV-B "Design
 /// Configuration"): unroll factors, tile/buffer dims, VMM block size.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -88,21 +127,40 @@ impl HwConfig {
         self.n_oh * self.n_ow
     }
 
-    pub fn validate(&self) -> Result<(), String> {
-        if self.n_oh == 0 || self.n_ow == 0 {
-            return Err("unroll factors must be positive".into());
+    /// The single legality check for a configuration. Every knob that
+    /// sizes a loop or a buffer must be positive (a zero tile would
+    /// turn the engine tile loops into zero-step iterators), the
+    /// unrolls must divide their tiles, and the VMM block must divide
+    /// the input-vector tile (see [`ConfigError`] for each arm).
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        let positives = [
+            ("n_oh", self.n_oh),
+            ("n_ow", self.n_ow),
+            ("tile_oh", self.tile_oh),
+            ("tile_ow", self.tile_ow),
+            ("tile_oc", self.tile_oc),
+            ("tile_ic", self.tile_ic),
+            ("vmm_tile", self.vmm_tile),
+            ("vmm_in_tile", self.vmm_in_tile),
+            ("axi_bytes_per_cycle", self.axi_bytes_per_cycle),
+            ("pipeline_depth", self.pipeline_depth as usize),
+        ];
+        for (knob, v) in positives {
+            if v == 0 {
+                return Err(ConfigError::ZeroKnob(knob));
+            }
         }
-        if self.tile_oh % self.n_oh != 0 || self.tile_ow % self.n_ow != 0 {
-            return Err(format!(
-                "unroll ({},{}) must divide tile ({},{})",
-                self.n_oh, self.n_ow, self.tile_oh, self.tile_ow
-            ));
+        if self.tile_oh % self.n_oh != 0 {
+            return Err(ConfigError::UnrollRows { n_oh: self.n_oh, tile_oh: self.tile_oh });
         }
-        if self.vmm_tile == 0 || self.vmm_in_tile == 0 {
-            return Err("vmm tiles must be positive".into());
+        if self.tile_ow % self.n_ow != 0 {
+            return Err(ConfigError::UnrollCols { n_ow: self.n_ow, tile_ow: self.tile_ow });
         }
-        if self.axi_bytes_per_cycle == 0 {
-            return Err("axi width must be positive".into());
+        if self.vmm_in_tile % self.vmm_tile != 0 {
+            return Err(ConfigError::VmmIndivisible {
+                vmm_tile: self.vmm_tile,
+                vmm_in_tile: self.vmm_in_tile,
+            });
         }
         Ok(())
     }
@@ -167,6 +225,30 @@ impl Cost {
         self.compute_cycles + self.dram_cycles
     }
 
+    /// Total cycles under the HLS dataflow (double-buffered) model:
+    /// tile load/compute/store overlap, so the longer of the compute
+    /// and DRAM streams bounds the phase. This whole-phase bound is the
+    /// optimistic twin of [`Cost::total_cycles`] — the same granularity
+    /// `sched::pipeline` uses for the FP/BP overlap — and is what the
+    /// DSE scores when a candidate sets `HwConfig::overlap_tiles`
+    /// (which in turn pays the doubled ping-pong buffers in
+    /// `fpga::resources`).
+    pub fn overlapped_cycles(&self) -> u64 {
+        self.compute_cycles.max(self.dram_cycles)
+    }
+
+    /// Modeled cycles under the tile-latency model `cfg` selects:
+    /// [`Cost::overlapped_cycles`] when `overlap_tiles` is set,
+    /// [`Cost::total_cycles`] (the paper's sequential baseline)
+    /// otherwise.
+    pub fn cycles_under(&self, cfg: &HwConfig) -> u64 {
+        if cfg.overlap_tiles {
+            self.overlapped_cycles()
+        } else {
+            self.total_cycles()
+        }
+    }
+
     pub fn latency_ms(&self, freq_mhz: f64) -> f64 {
         self.total_cycles() as f64 / (freq_mhz * 1e3)
     }
@@ -225,6 +307,59 @@ mod tests {
         let mut c = HwConfig::pynq_z2();
         c.vmm_tile = 0;
         assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn every_rejection_arm_is_typed() {
+        let base = HwConfig::pynq_z2();
+        // each zero-able knob reports itself by name
+        let zeros: [(&str, fn(&mut HwConfig)); 10] = [
+            ("n_oh", |c| c.n_oh = 0),
+            ("n_ow", |c| c.n_ow = 0),
+            ("tile_oh", |c| c.tile_oh = 0),
+            ("tile_ow", |c| c.tile_ow = 0),
+            ("tile_oc", |c| c.tile_oc = 0),
+            ("tile_ic", |c| c.tile_ic = 0),
+            ("vmm_tile", |c| c.vmm_tile = 0),
+            ("vmm_in_tile", |c| c.vmm_in_tile = 0),
+            ("axi_bytes_per_cycle", |c| c.axi_bytes_per_cycle = 0),
+            ("pipeline_depth", |c| c.pipeline_depth = 0),
+        ];
+        for (knob, poke) in zeros {
+            let mut c = base;
+            poke(&mut c);
+            assert_eq!(c.validate(), Err(ConfigError::ZeroKnob(knob)), "{knob}");
+        }
+        let mut c = base;
+        c.n_oh = 3;
+        assert_eq!(c.validate(), Err(ConfigError::UnrollRows { n_oh: 3, tile_oh: 8 }));
+        let mut c = base;
+        c.n_ow = 5;
+        assert_eq!(c.validate(), Err(ConfigError::UnrollCols { n_ow: 5, tile_ow: 8 }));
+        let mut c = base;
+        c.vmm_tile = 24; // 256 % 24 != 0
+        assert_eq!(
+            c.validate(),
+            Err(ConfigError::VmmIndivisible { vmm_tile: 24, vmm_in_tile: 256 })
+        );
+        // errors render a human-readable reason
+        assert!(c.validate().unwrap_err().to_string().contains("vmm_tile=24"));
+    }
+
+    #[test]
+    fn overlapped_cycles_bound_the_sequential_model() {
+        let mut c = Cost::new();
+        c.compute_cycles = 70;
+        c.dram_cycles = 50;
+        assert_eq!(c.overlapped_cycles(), 70);
+        assert_eq!(c.total_cycles(), 120);
+        let mut seq = HwConfig::pynq_z2();
+        assert_eq!(c.cycles_under(&seq), 120);
+        seq.overlap_tiles = true;
+        assert_eq!(c.cycles_under(&seq), 70);
+        // the dataflow bound is never worse and never better than 2x
+        assert!(c.overlapped_cycles() <= c.total_cycles());
+        assert!(c.total_cycles() <= 2 * c.overlapped_cycles());
     }
 
     #[test]

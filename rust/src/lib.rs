@@ -21,6 +21,11 @@
 //! * [`serve`] — the networked front door: framed wire protocol over
 //!   `std::net`, TCP server with admission control and graceful
 //!   drain, blocking client, load generator.
+//! * [`dse`] — design-space exploration & autotuning: searches the
+//!   `HwConfig` space under board resource constraints
+//!   (prune-before-cost), keeps the latency × BRAM × DSP Pareto
+//!   frontier, and emits tuned-config artifacts the serving layer
+//!   loads with `--config`.
 //! * [`fx`], [`model`], [`data`], [`util`] — supporting substrates
 //!   (fixed-point math, network graphs/params, shapes-32, and the
 //!   from-scratch util kit for this offline environment).
@@ -31,6 +36,7 @@
 pub mod attribution;
 pub mod coordinator;
 pub mod data;
+pub mod dse;
 pub mod fpga;
 pub mod fx;
 pub mod hls;

@@ -4,15 +4,19 @@
 //!   info       print model/manifest/device summary (Table III)
 //!   attribute  run one attribution on the device simulator (+ golden)
 //!   serve      run the serving coordinator (in-process load, or a TCP
-//!              server with --tcp)
+//!              server with --tcp); --config runs a tuned design point
 //!   loadgen    hammer a serve --tcp endpoint, emit BENCH_serve.json
+//!   tune       design-space exploration: emit BENCH_dse.json + a
+//!              tuned-config artifact per board
 //!   sweep      Table IV: resources + latency across the three boards
 //!   masks      Table II / §V mask-memory accounting
 
 
 use attrax::attribution::{Method, ALL_METHODS};
 use attrax::coordinator::{server, Config, Coordinator};
+use attrax::dse;
 use attrax::fpga::{self, Board, ALL_BOARDS};
+use attrax::hls::HwConfig;
 use attrax::model::{artifacts_dir, load_artifacts, Network};
 use attrax::sched::{AttrOptions, Simulator};
 use attrax::serve::{loadgen, Server, ServerConfig};
@@ -28,6 +32,7 @@ fn main() {
         "attribute" => cmd_attribute(argv),
         "serve" => cmd_serve(argv),
         "loadgen" => cmd_loadgen(argv),
+        "tune" => cmd_tune(argv),
         "sweep" => cmd_sweep(argv),
         "masks" => cmd_masks(argv),
         "report" => cmd_report(argv),
@@ -54,6 +59,7 @@ fn print_help() {
          \x20 attribute   one attribution on the device simulator\n\
          \x20 serve       serving coordinator (--tcp <addr> for the network front door)\n\
          \x20 loadgen     drive a serve --tcp endpoint, emit BENCH_serve.json\n\
+         \x20 tune        design-space exploration: BENCH_dse.json + tuned configs\n\
          \x20 sweep       per-board resources + latency (paper Table IV)\n\
          \x20 masks       mask memory accounting (paper Table II / §V)\n\
          \x20 report      Vitis-style synthesis report for a design point\n\
@@ -93,7 +99,42 @@ fn method_of(args: &attrax::util::cli::Args) -> Method {
     })
 }
 
-fn build_sim(board: Board) -> anyhow::Result<(Simulator, attrax::model::Manifest, attrax::model::Params)> {
+/// The board's design point: a tuned config from `--config <artifact>`
+/// when given (must hold an entry for this board), else the default
+/// `fpga::choose_config` pick. Exits on a bad/incomplete artifact.
+fn resolve_cfg(args: &attrax::util::cli::Args, board: Board, net: &Network) -> HwConfig {
+    let Some(path) = args.get("config").filter(|s| !s.is_empty()) else {
+        return fpga::choose_config(board, net, Method::Guided);
+    };
+    let tuned = match dse::load_tuned(std::path::Path::new(path)) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {e}");
+            std::process::exit(2);
+        }
+    };
+    match tuned.for_board(board) {
+        Some(cfg) => {
+            println!(
+                "running tuned config for {board} from {path} (N_oh={} N_ow={} axi={}B dataflow={})",
+                cfg.n_oh, cfg.n_ow, cfg.axi_bytes_per_cycle, cfg.overlap_tiles
+            );
+            cfg
+        }
+        None => {
+            eprintln!(
+                "error: {path} has no config for {board} (boards: {})",
+                tuned.board_names().join(", ")
+            );
+            std::process::exit(2);
+        }
+    }
+}
+
+fn build_sim(
+    board: Board,
+    cfg_override: Option<HwConfig>,
+) -> anyhow::Result<(Simulator, attrax::model::Manifest, attrax::model::Params)> {
     let (manifest, params) = load_artifacts(&artifacts_dir())?;
     let net = Network::table3();
     anyhow::ensure!(
@@ -102,7 +143,7 @@ fn build_sim(board: Board) -> anyhow::Result<(Simulator, attrax::model::Manifest
         manifest.param_count,
         net.param_count()
     );
-    let cfg = fpga::choose_config(board, &net, Method::Guided);
+    let cfg = cfg_override.unwrap_or_else(|| fpga::choose_config(board, &net, Method::Guided));
     let sim = Simulator::new(net, &params, cfg)?;
     Ok((sim, manifest, params))
 }
@@ -154,7 +195,7 @@ fn cmd_attribute(argv: Vec<String>) -> i32 {
     let cls: usize = args.parse_num("class", 0);
     let seed: u64 = args.parse_num("seed", 7);
 
-    let (sim, _, _) = match build_sim(board) {
+    let (sim, _, _) = match build_sim(board, None) {
         Ok(v) => v,
         Err(e) => return fail(e),
     };
@@ -204,14 +245,16 @@ fn cmd_attribute(argv: Vec<String>) -> i32 {
 /// fallback (shadow verification needs the real ones).
 fn build_sim_or_synthetic(
     board: Board,
+    cfg_override: Option<HwConfig>,
 ) -> anyhow::Result<(Simulator, Option<(attrax::model::Manifest, attrax::model::Params)>)> {
-    match build_sim(board) {
+    match build_sim(board, cfg_override) {
         Ok((sim, m, p)) => Ok((sim, Some((m, p)))),
         Err(e) => {
             println!("(artifacts unavailable: {e} — serving synthetic seeded Table-III weights)");
             let net = Network::table3();
             let params = attrax::model::Params::synthetic(&net, 42);
-            let cfg = fpga::choose_config(board, &net, Method::Guided);
+            let cfg =
+                cfg_override.unwrap_or_else(|| fpga::choose_config(board, &net, Method::Guided));
             Ok((Simulator::new(net, &params, cfg)?, None))
         }
     }
@@ -232,28 +275,15 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("tcp", "", "serve over TCP on this address (e.g. 127.0.0.1:7878)")
         .opt("max-conns", "32", "TCP connection pool bound (Busy-shed beyond)")
         .opt("deadline-ms", "0", "default per-request deadline (0 = none)")
-        .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)");
+        .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)")
+        .opt("config", "", "tuned-config artifact (attrax tune) to run this board on");
     let args = parse_or_exit(cmd, argv);
     let board = board_of(&args);
+    let hw_cfg = resolve_cfg(&args, board, &Network::table3());
     if let Some(addr) = args.get("tcp").filter(|a| !a.is_empty()) {
-        return cmd_serve_tcp(addr, &args, board);
+        return cmd_serve_tcp(addr, &args, board, hw_cfg);
     }
-    let (sim, manifest, params) = match build_sim(board) {
-        Ok(v) => v,
-        Err(e) => return fail(e),
-    };
-    let verify: f64 = args.parse_num("verify", 0.1);
-    let cfg = Config {
-        workers: args.parse_num("workers", 2),
-        queue_depth: args.parse_num("queue", 64),
-        verify_fraction: verify,
-        freq_mhz: fpga::TARGET_FREQ_MHZ,
-        max_batch: args.parse_num("batch", 1),
-        max_wait_ms: args.parse_num("batch-wait", 2),
-        shards: args.parse_num("shards", 0),
-    };
-    let artifacts = if verify > 0.0 { Some((manifest, params)) } else { None };
-    let coord = match Coordinator::start(sim, cfg, artifacts) {
+    let coord = match start_coordinator(&args, board, hw_cfg) {
         Ok(c) => c,
         Err(e) => return fail(e),
     };
@@ -284,13 +314,15 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     0
 }
 
-/// `serve --tcp <addr>`: the networked front door. Works offline
-/// (synthetic weights when artifacts are absent).
-fn cmd_serve_tcp(addr: &str, args: &attrax::util::cli::Args, board: Board) -> i32 {
-    let (sim, artifacts) = match build_sim_or_synthetic(board) {
-        Ok(v) => v,
-        Err(e) => return fail(e),
-    };
+/// Build the simulator (synthetic-weight fallback) and start the
+/// coordinator from the serve options — the block shared by the
+/// in-process and TCP serving paths.
+fn start_coordinator(
+    args: &attrax::util::cli::Args,
+    board: Board,
+    hw_cfg: HwConfig,
+) -> anyhow::Result<Coordinator> {
+    let (sim, artifacts) = build_sim_or_synthetic(board, Some(hw_cfg))?;
     // shadow verification needs the trained artifacts; drop it (with a
     // warning) rather than silently pretending on the synthetic path
     let mut verify: f64 = args.parse_num("verify", 0.1);
@@ -308,7 +340,18 @@ fn cmd_serve_tcp(addr: &str, args: &attrax::util::cli::Args, board: Board) -> i3
         shards: args.parse_num("shards", 0),
     };
     let artifacts = if verify > 0.0 { artifacts } else { None };
-    let coord = match Coordinator::start(sim, cfg, artifacts) {
+    Coordinator::start(sim, cfg, artifacts)
+}
+
+/// `serve --tcp <addr>`: the networked front door. Works offline
+/// (synthetic weights when artifacts are absent).
+fn cmd_serve_tcp(
+    addr: &str,
+    args: &attrax::util::cli::Args,
+    board: Board,
+    hw_cfg: HwConfig,
+) -> i32 {
+    let coord = match start_coordinator(args, board, hw_cfg) {
         Ok(c) => c,
         Err(e) => return fail(e),
     };
@@ -356,6 +399,7 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         .opt("timeout-ms", "2000", "per-request deadline")
         .opt("seed", "42", "workload seed")
         .opt("out", "BENCH_serve.json", "machine-readable report path")
+        .opt("config", "", "tuned-config artifact for the --smoke loopback server")
         .flag("smoke", "2s self-contained check: spin an in-process loopback server");
     let args = parse_or_exit(cmd, argv);
     let method = args.get("method").filter(|s| !s.is_empty()).map(|s| {
@@ -381,7 +425,8 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
     // --smoke: bring up our own loopback server on an ephemeral port
     let srv = if smoke {
         spec.secs = spec.secs.min(2.0);
-        let (sim, _) = match build_sim_or_synthetic(Board::PynqZ2) {
+        let hw_cfg = resolve_cfg(&args, Board::PynqZ2, &Network::table3());
+        let (sim, _) = match build_sim_or_synthetic(Board::PynqZ2, Some(hw_cfg)) {
             Ok(v) => v,
             Err(e) => return fail(e),
         };
@@ -440,6 +485,87 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         eprintln!("loadgen completed zero requests");
         return 1;
     }
+    0
+}
+
+fn cmd_tune(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("tune", "design-space exploration over the HwConfig space")
+        .opt("device", "all", "board, or comma list, or 'all'")
+        .opt("method", "guided", "attribution method to tune for")
+        .opt("seed", "42", "search seed (reruns are byte-identical)")
+        .opt("budget", "160", "max cost-model evaluations per board")
+        .opt("beam", "8", "beam width of the neighborhood refinement")
+        .opt("threads", "0", "parallel scoring threads (0 = auto)")
+        .opt("out", "BENCH_dse.json", "machine-readable report path")
+        .opt("tuned", "tuned_configs.json", "tuned-config artifact path (for serve --config)")
+        .flag("smoke", "tiny exhaustive space + synthetic weights, fully offline");
+    let args = parse_or_exit(cmd, argv);
+    let method = method_of(&args);
+    let smoke = args.flag("smoke");
+
+    let boards: Vec<Board> = match args.get_or("device", "all") {
+        "all" => ALL_BOARDS.to_vec(),
+        list => list
+            .split(',')
+            .map(|name| {
+                Board::parse(name.trim()).unwrap_or_else(|| {
+                    eprintln!("unknown device {name:?} (pynq-z2 | ultra96-v2 | zcu104)");
+                    std::process::exit(2);
+                })
+            })
+            .collect(),
+    };
+
+    // Weights only shape the plan — the cycle/traffic ledger is
+    // structural — so the tuner is fully usable offline.
+    let net = Network::table3();
+    let params = match load_artifacts(&artifacts_dir()) {
+        Ok((_, p)) if !smoke => p,
+        _ => {
+            println!("(tuning on synthetic seeded Table-III weights — cycle model is weight-independent)");
+            attrax::model::Params::synthetic(&net, 42)
+        }
+    };
+
+    let budget: usize = args.parse_num("budget", 160);
+    let spec = dse::TuneSpec {
+        space: if smoke { dse::Space::smoke() } else { dse::Space::paper() },
+        boards,
+        method,
+        seed: args.parse_num("seed", 42),
+        budget: if smoke { budget.min(32) } else { budget },
+        beam: args.parse_num("beam", 8),
+        threads: args.parse_num("threads", 0),
+    };
+    println!(
+        "tuning {} board(s), {} raw candidates, budget {} evals/board ...",
+        spec.boards.len(),
+        spec.space.raw_size(),
+        spec.budget
+    );
+    let t0 = std::time::Instant::now();
+    let report = match dse::tune(&net, &params, &spec) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    println!("\n== tuning report ({wall:.2}s host time) ==\n{}", report.render());
+
+    let out = args.get_or("out", "BENCH_dse.json");
+    if let Err(e) = dse::tune::write_json(std::path::Path::new(out), &report.to_json(&spec)) {
+        return fail(e);
+    }
+    println!("wrote {out}");
+    let tuned_path = args.get_or("tuned", "tuned_configs.json");
+    if let Err(e) = dse::tune::write_json(std::path::Path::new(tuned_path), &report.tuned_json()) {
+        return fail(e);
+    }
+    // read-back check: the artifact we just wrote must load and pass
+    // the legality gate (the contract `serve --config` relies on)
+    if let Err(e) = dse::load_tuned(std::path::Path::new(tuned_path)) {
+        return fail(format!("tuned artifact failed its read-back check: {e}"));
+    }
+    println!("wrote {tuned_path} (run it: attrax serve --config {tuned_path})");
     0
 }
 
@@ -516,7 +642,7 @@ fn cmd_report(argv: Vec<String>) -> i32 {
     let args = parse_or_exit(cmd, argv);
     let board = board_of(&args);
     let method = method_of(&args);
-    let (sim, _, _) = match build_sim(board) {
+    let (sim, _, _) = match build_sim(board, None) {
         Ok(v) => v,
         Err(e) => return fail(e),
     };

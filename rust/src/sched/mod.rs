@@ -181,7 +181,7 @@ impl Simulator {
     /// bit-identical across configurations (property P2), only the
     /// cycle model changes.
     pub fn with_config(plan: Arc<Plan>, cfg: HwConfig) -> anyhow::Result<Simulator> {
-        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        cfg.validate()?;
         anyhow::ensure!(
             cfg.q == plan.cfg.q,
             "plan was quantized for a different fixed-point format"

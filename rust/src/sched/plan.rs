@@ -76,7 +76,7 @@ pub struct Plan {
 impl Plan {
     /// Quantize parameters and build the fused execution plan.
     pub fn new(net: Network, params: &Params, cfg: HwConfig) -> anyhow::Result<Plan> {
-        cfg.validate().map_err(|e| anyhow::anyhow!(e))?;
+        cfg.validate()?;
         let q = cfg.q;
         let quant = |t: &crate::model::Tensor| -> Vec<i32> {
             t.data.iter().map(|&v| q.from_f32(v)).collect()

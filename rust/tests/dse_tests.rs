@@ -1,0 +1,132 @@
+//! End-to-end tests of the DSE subsystem (ISSUE-4): determinism,
+//! legality/capacity of everything the tuner emits, artifact
+//! round-trips through the serving entry points, and the
+//! tuned-vs-default bit-exactness contract.
+
+use attrax::attribution::Method;
+use attrax::dse::{self, Space, TuneSpec};
+use attrax::fpga::{Board, ALL_BOARDS};
+use attrax::sched::tests_support::tiny_net_params;
+use attrax::sched::{AttrOptions, Plan, Simulator};
+use attrax::util::rng::Pcg32;
+use std::sync::Arc;
+
+fn smoke_spec(seed: u64) -> TuneSpec {
+    TuneSpec {
+        space: Space::smoke(),
+        boards: ALL_BOARDS.to_vec(),
+        method: Method::Guided,
+        seed,
+        budget: 32,
+        beam: 4,
+        threads: 2,
+    }
+}
+
+#[test]
+fn frontier_and_winner_are_byte_identical_across_reruns() {
+    let (net, params) = tiny_net_params(21);
+    let spec = smoke_spec(3);
+    let a = dse::tune(&net, &params, &spec).unwrap();
+    let b = dse::tune(&net, &params, &spec).unwrap();
+    assert_eq!(a.to_json(&spec).to_string(), b.to_json(&spec).to_string());
+    assert_eq!(a.tuned_json().to_string(), b.tuned_json().to_string());
+    // a different seed still converges to the same result on an
+    // exhaustively-searched space (the seed only matters for sampling)
+    let c = dse::tune(&net, &params, &smoke_spec(4)).unwrap();
+    let a_reseeded = a.tuned_json().to_string().replace("\"seed\":\"3\"", "\"seed\":\"4\"");
+    assert_eq!(a_reseeded, c.tuned_json().to_string());
+}
+
+#[test]
+fn everything_emitted_validates_and_fits() {
+    let (net, params) = tiny_net_params(23);
+    let r = dse::tune(&net, &params, &smoke_spec(5)).unwrap();
+    assert_eq!(r.outcomes.len(), 3);
+    for o in &r.outcomes {
+        for p in o.frontier.entries() {
+            p.cfg.validate().unwrap();
+            assert!(o.board.fits(&p.util), "{}: frontier point over capacity", o.board);
+            assert!(p.cycles() > 0);
+        }
+        o.best.cfg.validate().unwrap();
+        assert!(o.board.fits(&o.best.util));
+        assert!(o.speedup >= 1.0);
+    }
+}
+
+#[test]
+fn tune_beats_default_on_at_least_two_boards() {
+    // the ISSUE-4 acceptance bar, on the offline tiny model: a
+    // capacity-feasible tuned config with strictly fewer modeled
+    // attribution cycles than the board's default HwConfig (or the
+    // default proven Pareto-optimal) — and the strict win must land on
+    // at least two boards.
+    let (net, params) = tiny_net_params(25);
+    let r = dse::tune(&net, &params, &smoke_spec(6)).unwrap();
+    let mut strict_wins = 0;
+    for o in &r.outcomes {
+        if o.best.cycles() < o.default_point.cycles() {
+            strict_wins += 1;
+        } else {
+            assert!(o.default_on_frontier, "{}: no win and default off-frontier", o.board);
+        }
+    }
+    assert!(strict_wins >= 2, "tuner beat the default on only {strict_wins} board(s)");
+}
+
+#[test]
+fn tuned_config_is_bit_exact_with_default_heatmaps() {
+    // a tuned config changes the cycle/resource model, never the
+    // arithmetic: running the emitted winner through attribute() must
+    // reproduce the default config's heatmap bit for bit (P2 config
+    // invariance, here asserted on the tuner's actual output).
+    let (net, params) = tiny_net_params(27);
+    let r = dse::tune(&net, &params, &smoke_spec(7)).unwrap();
+    let text = r.tuned_json().to_string();
+    let tuned = dse::tune::parse_tuned(&text).unwrap();
+    let mut rng = Pcg32::seeded(31);
+    let img: Vec<f32> = (0..net.input.elems()).map(|_| rng.f32()).collect();
+    for o in &r.outcomes {
+        let tuned_cfg = tuned.for_board(o.board).expect("artifact covers every tuned board");
+        assert_eq!(tuned_cfg, o.best.cfg);
+        let plan = Arc::new(Plan::new(net.clone(), &params, o.default_point.cfg).unwrap());
+        let default_sim = Simulator::from_plan(plan.clone());
+        let tuned_sim = Simulator::with_config(plan.clone(), tuned_cfg).unwrap();
+        for method in attrax::attribution::ALL_METHODS {
+            let d = default_sim.attribute(&img, method, AttrOptions::default());
+            let t = tuned_sim.attribute(&img, method, AttrOptions::default());
+            assert_eq!(d.logits, t.logits, "{}/{method}: logits drifted", o.board);
+            assert_eq!(d.pred, t.pred, "{}/{method}", o.board);
+            assert_eq!(d.relevance, t.relevance, "{}/{method}: heatmap drifted", o.board);
+            assert_eq!(d.relevance.len(), net.input.elems(), "heatmap shape contract");
+        }
+    }
+}
+
+#[test]
+fn large_space_beam_search_is_deterministic_and_budgeted() {
+    let (net, params) = tiny_net_params(29);
+    let spec = TuneSpec {
+        space: Space::paper(),
+        boards: vec![Board::PynqZ2, Board::Zcu104],
+        method: Method::Saliency,
+        seed: 11,
+        budget: 20,
+        beam: 4,
+        threads: 3,
+    };
+    let a = dse::tune(&net, &params, &spec).unwrap();
+    for o in &a.outcomes {
+        assert!(o.scored <= spec.budget, "{}: {} scored", o.board, o.scored);
+        assert!(o.visited >= o.scored);
+        for p in o.frontier.entries() {
+            p.cfg.validate().unwrap();
+            assert!(o.board.fits(&p.util));
+        }
+    }
+    let mut spec2 = spec.clone();
+    spec2.threads = 1;
+    let b = dse::tune(&net, &params, &spec2).unwrap();
+    assert_eq!(a.to_json(&spec).to_string(), b.to_json(&spec2).to_string());
+}

@@ -440,6 +440,68 @@ fn prop_batch_weight_traffic_amortized() {
     );
 }
 
+/// P13 (ISSUE-4): the autotuner's emissions are safe and honest — for
+/// random tiny models, methods and seeds, every config the tuner emits
+/// passes `HwConfig::validate()` and fits its board's `Capacity`; the
+/// tuned winner never models more cycles than the default; a rerun
+/// with the same seed/space produces a byte-identical frontier; and
+/// running an emitted config through `attribute` reproduces the
+/// default config's heatmap bit for bit (shape/contract included) —
+/// tuning changes the cycle model, never the arithmetic.
+#[test]
+fn prop_dse_emissions_legal_feasible_bit_exact() {
+    use attrax::dse::{self, Space, TuneSpec};
+    run_prop(
+        PropConfig { cases: 5, ..Default::default() },
+        |r| r.next_u64(),
+        |&seed| {
+            let mut rng = Pcg32::seeded(seed);
+            let (net, params) = random_model(&mut rng);
+            let method = ALL_METHODS[rng.below(3) as usize];
+            let spec = TuneSpec {
+                space: Space::smoke(),
+                boards: vec![Board::PynqZ2, Board::Zcu104],
+                method,
+                seed: rng.next_u64(),
+                budget: 32,
+                beam: 4,
+                threads: 1 + rng.below(3) as usize,
+            };
+            let report = dse::tune(&net, &params, &spec).map_err(|e| e.to_string())?;
+            let rerun = dse::tune(&net, &params, &spec).map_err(|e| e.to_string())?;
+            if report.to_json(&spec).to_string() != rerun.to_json(&spec).to_string() {
+                return Err("same seed + same space produced different frontiers".into());
+            }
+            let n_in = net.input.elems();
+            let img: Vec<f32> = (0..n_in).map(|_| rng.f32()).collect();
+            for o in &report.outcomes {
+                for p in o.frontier.entries() {
+                    p.cfg.validate().map_err(|e| format!("{}: emitted invalid: {e}", o.board))?;
+                    if !o.board.fits(&p.util) {
+                        return Err(format!("{}: emitted over-capacity config", o.board));
+                    }
+                }
+                if o.best.cycles() > o.default_point.cycles() {
+                    return Err(format!("{}: tuned slower than default", o.board));
+                }
+                let d = Simulator::new(net.clone(), &params, o.default_point.cfg)
+                    .map_err(|e| e.to_string())?
+                    .attribute(&img, method, AttrOptions::default());
+                let t = Simulator::new(net.clone(), &params, o.best.cfg)
+                    .map_err(|e| e.to_string())?
+                    .attribute(&img, method, AttrOptions::default());
+                if d.relevance.len() != n_in || t.relevance.len() != n_in {
+                    return Err(format!("{}: heatmap shape contract broken", o.board));
+                }
+                if d.logits != t.logits || d.pred != t.pred || d.relevance != t.relevance {
+                    return Err(format!("{}: tuned config not bit-exact with default", o.board));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
 /// P6: quantization error of the whole attribution pipeline shrinks as
 /// word width grows (8 -> 16 -> 24 bits, against the 32-bit run).
 #[test]

@@ -33,6 +33,16 @@ echo "== serve gate: loadgen smoke (2s in-process loopback) =="
 # Fails if zero requests complete.
 cargo run --release -q -- loadgen --smoke --secs 2 --out BENCH_serve_smoke.json
 
+echo "== dse gate: tune --smoke emits an artifact that serve --config accepts =="
+# Tiny exhaustive space on synthetic Table-III weights, fully offline.
+# The tuned-config artifact must be parseable (schema-tagged JSON) and
+# must boot the serving coordinator via --config.
+cargo run --release -q -- tune --smoke --out BENCH_dse_smoke.json --tuned tuned_smoke.json
+grep -q '"schema":"attrax-tuned/v1"' tuned_smoke.json
+grep -q '"bench":"dse"' BENCH_dse_smoke.json
+cargo run --release -q -- serve --config tuned_smoke.json --requests 4 --workers 1 --verify 0
+rm -f tuned_smoke.json BENCH_dse_smoke.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
