@@ -33,6 +33,7 @@ fn main() {
         budget: 120,
         beam: 8,
         threads: 0,
+        quality: false,
     };
 
     section("dse — beam search over the paper space (guided, seed 42)");

@@ -93,6 +93,22 @@ impl Method {
     }
 }
 
+/// Sum a `[C,H,W]` relevance map over channels into one `[H*W]`
+/// spatial heatmap — the form heatmap renderers and the
+/// deletion/insertion faithfulness metrics rank pixels in (a pixel is
+/// masked across all of its channels at once).
+pub fn channel_sum(relevance: &[f32], (c, h, w): (usize, usize, usize)) -> Vec<f32> {
+    let hw = h * w;
+    assert_eq!(relevance.len(), c * hw, "relevance/shape mismatch");
+    let mut out = vec![0f32; hw];
+    for ch in 0..c {
+        for (o, &r) in out.iter_mut().zip(&relevance[ch * hw..(ch + 1) * hw]) {
+            *o += r;
+        }
+    }
+    out
+}
+
 impl std::fmt::Display for Method {
     fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
         f.write_str(self.name())
@@ -151,6 +167,15 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn channel_sum_collapses_channels() {
+        // [2,2,2]: channel 1 is channel 0 shifted by 10
+        let rel = [1.0f32, 2.0, 3.0, 4.0, 11.0, 12.0, 13.0, 14.0];
+        assert_eq!(channel_sum(&rel, (2, 2, 2)), vec![12.0, 14.0, 16.0, 18.0]);
+        // single channel is the identity
+        assert_eq!(channel_sum(&rel[..4], (1, 2, 2)), vec![1.0, 2.0, 3.0, 4.0]);
     }
 
     #[test]

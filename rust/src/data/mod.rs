@@ -1,4 +1,4 @@
-//! shapes-32 generator (S13): the rust twin of `python/compile/data.py`.
+//! shapes-32 generator (S14): the rust twin of `python/compile/data.py`.
 //!
 //! Serving-side request generation needs fresh labelled samples with
 //! ground-truth salient-region masks (for the localization metric). The

@@ -29,9 +29,10 @@ use crate::sched::{AttrOptions, BatchOutput, Plan, Simulator, Workspace};
 use crate::util::rng::Pcg32;
 
 /// One fully evaluated design point: the candidate configuration, its
-/// estimated FP / FP+BP resource builds and its modeled attribution
+/// estimated FP / FP+BP resource builds, its modeled attribution
 /// cycles (per phase, under the tile-latency model the config selects
-/// — see `Cost::cycles_under`).
+/// — see `Cost::cycles_under`) and, when the quality probe is enabled,
+/// the heatmap infidelity against the unquantized reference oracle.
 #[derive(Clone, Debug)]
 pub struct DesignPoint {
     pub cfg: HwConfig,
@@ -42,6 +43,11 @@ pub struct DesignPoint {
     pub util: Utilization,
     pub fp_cycles: u64,
     pub bp_cycles: u64,
+    /// `(1 − Pearson(probe heatmap, oracle heatmap))` in
+    /// parts-per-million (`xeval::fidelity::infidelity_ppm`); `0` when
+    /// the evaluator runs quality-blind, so the frontier degenerates
+    /// to the latency × BRAM × DSP behavior of the quality-off tuner.
+    pub infidelity_ppm: u64,
 }
 
 impl DesignPoint {
@@ -52,6 +58,12 @@ impl DesignPoint {
 
     pub fn latency_ms(&self, freq_mhz: f64) -> f64 {
         self.cycles() as f64 / (freq_mhz * 1e3)
+    }
+
+    /// Probe-heatmap fidelity as a Pearson correlation (1.0 = exact or
+    /// quality probe disabled).
+    pub fn fidelity(&self) -> f64 {
+        1.0 - self.infidelity_ppm as f64 / 1e6
     }
 }
 
@@ -78,6 +90,13 @@ impl std::fmt::Display for Pruned {
     }
 }
 
+/// The quality probe's reference: the unquantized oracle heatmap for
+/// the probe image, and the class it explains.
+struct QualityRef {
+    target: usize,
+    reference: Vec<f32>,
+}
+
 /// Shared, read-only candidate evaluator (safe to borrow from scoped
 /// scoring threads): the network, one quantized plan per fixed-point
 /// format, the attribution method under tuning and the probe image.
@@ -87,6 +106,9 @@ pub struct Evaluator {
     probe: Vec<f32>,
     /// One plan per distinct `QFormat` (tiny; linear lookup).
     plans: Vec<Arc<Plan>>,
+    /// `Some` when every scored candidate also pays for a fidelity
+    /// probe against the oracle reference ([`Evaluator::enable_quality`]).
+    quality: Option<QualityRef>,
 }
 
 impl Evaluator {
@@ -112,11 +134,28 @@ impl Evaluator {
         }
         let mut rng = Pcg32::seeded(probe_seed);
         let probe = (0..net.input.elems()).map(|_| rng.f32()).collect();
-        Ok(Evaluator { net: net.clone(), method, probe, plans })
+        Ok(Evaluator { net: net.clone(), method, probe, plans, quality: None })
     }
 
     pub fn method(&self) -> Method {
         self.method
+    }
+
+    /// Turn on the fidelity probe: compute the unquantized oracle
+    /// heatmap for the probe image once; every scored candidate is
+    /// then compared against it (`DesignPoint::infidelity_ppm`). Both
+    /// paths explain the oracle's predicted class, so a prediction
+    /// flip under quantization registers as infidelity rather than as
+    /// two heatmaps faithfully explaining different classes.
+    pub fn enable_quality(&mut self, params: &Params) -> anyhow::Result<()> {
+        let oracle = crate::xeval::Oracle::new(&self.net, params)?;
+        let r = oracle.attribute(&self.probe, self.method, None);
+        self.quality = Some(QualityRef { target: r.pred, reference: r.relevance });
+        Ok(())
+    }
+
+    pub fn quality_enabled(&self) -> bool {
+        self.quality.is_some()
     }
 
     /// Stage 1 — the cheap gate: legality, then resource estimate
@@ -134,14 +173,16 @@ impl Evaluator {
     /// on the shared plan, reusing the caller's workspace/output slabs
     /// (scoring threads keep one pair warm across a whole chunk), and
     /// return per-phase cycles under the tile-latency model `cfg`
-    /// selects. `cfg` must be valid and carry a format the evaluator
-    /// planned.
-    fn probe_cycles(
+    /// selects plus the fidelity-probe infidelity (0 when quality is
+    /// off; the heatmap is already in `out`, so the probe costs one
+    /// correlation, never a second attribution). `cfg` must be valid
+    /// and carry a format the evaluator planned.
+    fn probe_point(
         &self,
         ws: &mut Workspace,
         out: &mut BatchOutput,
         cfg: &HwConfig,
-    ) -> (u64, u64) {
+    ) -> (u64, u64, u64) {
         let plan = self
             .plans
             .iter()
@@ -149,8 +190,19 @@ impl Evaluator {
             .expect("candidate QFormat was not in the evaluator's space");
         let sim = Simulator::with_config(plan.clone(), *cfg).expect("pruned candidates are valid");
         let probe: &[f32] = &self.probe;
-        sim.attribute_batch_into(ws, &[probe], self.method, AttrOptions::default(), false, out);
-        (out.fp_cost.cycles_under(cfg), out.bp_cost.cycles_under(cfg))
+        // the BP start class is structural noise for the ledger (every
+        // layer is walked regardless), so pinning it to the oracle's
+        // prediction changes nothing for quality-blind runs
+        let opts = match &self.quality {
+            Some(qr) => AttrOptions { target: Some(qr.target), ..Default::default() },
+            None => AttrOptions::default(),
+        };
+        sim.attribute_batch_into(ws, &[probe], self.method, opts, false, out);
+        let infidelity_ppm = match &self.quality {
+            Some(qr) => crate::xeval::fidelity::infidelity_ppm(out.relevance_of(0), &qr.reference),
+            None => 0,
+        };
+        (out.fp_cost.cycles_under(cfg), out.bp_cost.cycles_under(cfg), infidelity_ppm)
     }
 
     /// Cost pass reusing the resource estimates the prune gate already
@@ -162,8 +214,15 @@ impl Evaluator {
         cfg: &HwConfig,
         feas: &Feasibility,
     ) -> DesignPoint {
-        let (fp_cycles, bp_cycles) = self.probe_cycles(ws, out, cfg);
-        DesignPoint { cfg: *cfg, fp_util: feas.fp, util: feas.fp_bp, fp_cycles, bp_cycles }
+        let (fp_cycles, bp_cycles, infidelity_ppm) = self.probe_point(ws, out, cfg);
+        DesignPoint {
+            cfg: *cfg,
+            fp_util: feas.fp,
+            util: feas.fp_bp,
+            fp_cycles,
+            bp_cycles,
+            infidelity_ppm,
+        }
     }
 
     /// Cost pass that estimates resources itself (for callers without
@@ -174,13 +233,14 @@ impl Evaluator {
         out: &mut BatchOutput,
         cfg: &HwConfig,
     ) -> DesignPoint {
-        let (fp_cycles, bp_cycles) = self.probe_cycles(ws, out, cfg);
+        let (fp_cycles, bp_cycles, infidelity_ppm) = self.probe_point(ws, out, cfg);
         DesignPoint {
             cfg: *cfg,
             fp_util: fpga::estimate_fp(cfg, &self.net),
             util: fpga::estimate_fp_bp(cfg, &self.net, self.method),
             fp_cycles,
             bp_cycles,
+            infidelity_ppm,
         }
     }
 
@@ -245,6 +305,37 @@ mod tests {
         let o = ev.score(&ovl);
         assert!(o.cycles() < ev.score(&fast).cycles());
         assert!(o.util.bram_18k > a.util.bram_18k);
+    }
+
+    #[test]
+    fn quality_probe_scores_formats_apart() {
+        let (net, params) = tiny_net_params(11);
+        let q_lo = QFormat::new(16, 2);
+        let mut ev =
+            Evaluator::new(&net, &params, &[QFormat::paper16(), q_lo], Method::Guided, 7).unwrap();
+        // quality off: every point reports zero infidelity
+        let hi_cfg = HwConfig::pynq_z2();
+        let mut lo_cfg = hi_cfg;
+        lo_cfg.q = q_lo;
+        assert_eq!(ev.score(&hi_cfg).infidelity_ppm, 0);
+        assert!(!ev.quality_enabled());
+        // quality on: the paper format tracks the oracle, the 2-bit
+        // fraction format does not — same cycles, same resources
+        ev.enable_quality(&params).unwrap();
+        assert!(ev.quality_enabled());
+        let hi = ev.score(&hi_cfg);
+        let lo = ev.score(&lo_cfg);
+        assert!(
+            hi.infidelity_ppm < lo.infidelity_ppm,
+            "Q16.9 {} vs Q16.2 {}",
+            hi.infidelity_ppm,
+            lo.infidelity_ppm
+        );
+        assert!(hi.fidelity() > 0.8, "paper-format probe fidelity {}", hi.fidelity());
+        assert_eq!(hi.cycles(), lo.cycles(), "word width unchanged => same cycle model");
+        assert_eq!(hi.util, lo.util);
+        // deterministic: same probe, same score
+        assert_eq!(ev.score(&lo_cfg).infidelity_ppm, lo.infidelity_ppm);
     }
 
     #[test]

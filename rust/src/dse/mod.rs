@@ -14,8 +14,10 @@
 //!   pruning (`fpga::resources::feasibility`) *before* the
 //!   millisecond modeled-cycle pass (`Simulator::with_config` over a
 //!   shared `Arc<Plan>`, the same ledger the serving path reports).
-//! * [`pareto`] — the latency × BRAM × DSP frontier with fully
-//!   deterministic tie-breaking (same inputs ⇒ same bytes out).
+//! * [`pareto`] — the latency × infidelity × BRAM × DSP frontier with
+//!   fully deterministic tie-breaking (same inputs ⇒ same bytes out);
+//!   the infidelity axis is identically zero unless the tuner runs
+//!   with the xeval quality probe (`TuneSpec::quality`).
 //! * [`tune`] — the driver: exhaustive for small spaces, seeded
 //!   beam/neighborhood search under an evaluation budget for large
 //!   ones, candidates scored in parallel with `std::thread::scope`

@@ -1,11 +1,14 @@
 //! Pareto frontier over evaluated design points.
 //!
-//! Objectives (all minimized): modeled attribution **cycles**, FP+BP
-//! **BRAM** banks, FP+BP **DSP** slices — the latency/resource
-//! tradeoff the related XAI-acceleration work frames the problem as.
-//! FF/LUT participate only as deterministic tie-breakers: the affine
-//! fabric model makes them near-collinear with the DSP axis, so adding
-//! them as objectives would only pad the frontier with noise points.
+//! Objectives (all minimized): modeled attribution **cycles**, probe
+//! **infidelity** (ppm vs the unquantized oracle — identically 0 when
+//! the tuner runs quality-blind, collapsing the frontier to the
+//! legacy latency × resource behavior), FP+BP **BRAM** banks, FP+BP
+//! **DSP** slices — the latency/quality/resource tradeoff the
+//! ApproXAI line of work frames XAI acceleration as. FF/LUT
+//! participate only as deterministic tie-breakers: the affine fabric
+//! model makes them near-collinear with the DSP axis, so adding them
+//! as objectives would only pad the frontier with noise points.
 //!
 //! Everything here is order-independent and totally ordered: the same
 //! set of points produces the same frontier (and the same serialized
@@ -37,14 +40,17 @@ pub fn cfg_key(
     )
 }
 
-/// Deterministic ranking key: fastest first, then frugal (BRAM, DSP,
-/// LUT, FF), then the full config key. `entries()[0]` under this key
-/// is the tuned winner — the latency-optimal point, cheapest among
+/// Deterministic ranking key: fastest first, then faithful (probe
+/// infidelity — 0 everywhere on quality-blind runs, so the legacy
+/// order is untouched), then frugal (BRAM, DSP, LUT, FF), then the
+/// full config key. `entries()[0]` under this key is the tuned winner
+/// — the latency-optimal point, most faithful then cheapest among
 /// equals.
 #[allow(clippy::type_complexity)]
 pub fn rank_key(
     p: &DesignPoint,
 ) -> (
+    u64,
     u64,
     u32,
     u32,
@@ -52,19 +58,31 @@ pub fn rank_key(
     u32,
     (usize, usize, usize, usize, usize, usize, usize, usize, usize, u64, (bool, u32, u32, u64)),
 ) {
-    (p.cycles(), p.util.bram_18k, p.util.dsp, p.util.lut, p.util.ff, cfg_key(&p.cfg))
+    (
+        p.cycles(),
+        p.infidelity_ppm,
+        p.util.bram_18k,
+        p.util.dsp,
+        p.util.lut,
+        p.util.ff,
+        cfg_key(&p.cfg),
+    )
 }
 
-fn objectives(p: &DesignPoint) -> (u64, u32, u32) {
-    (p.cycles(), p.util.bram_18k, p.util.dsp)
+fn objectives(p: &DesignPoint) -> (u64, u64, u32, u32) {
+    (p.cycles(), p.infidelity_ppm, p.util.bram_18k, p.util.dsp)
 }
 
 /// Does `a` Pareto-dominate `b` (no worse on every objective, strictly
 /// better on at least one)?
 pub fn dominates(a: &DesignPoint, b: &DesignPoint) -> bool {
-    let (ac, ab, ad) = objectives(a);
-    let (bc, bb, bd) = objectives(b);
-    ac <= bc && ab <= bb && ad <= bd && (ac < bc || ab < bb || ad < bd)
+    let (ac, af, ab, ad) = objectives(a);
+    let (bc, bf, bb, bd) = objectives(b);
+    ac <= bc
+        && af <= bf
+        && ab <= bb
+        && ad <= bd
+        && (ac < bc || af < bf || ab < bb || ad < bd)
 }
 
 /// The set of non-dominated design points seen so far.
@@ -153,7 +171,7 @@ mod tests {
             c
         };
         let util = Utilization { bram_18k: bram, dsp, ff: 1000, lut: 2000 };
-        DesignPoint { cfg, fp_util: util, util, fp_cycles: cycles, bp_cycles: 0 }
+        DesignPoint { cfg, fp_util: util, util, fp_cycles: cycles, bp_cycles: 0, infidelity_ppm: 0 }
     }
 
     #[test]
@@ -202,6 +220,37 @@ mod tests {
         };
         assert!(f.contains_cfg(&pts[0].cfg));
         assert!(!f.contains_cfg(&pts[1].cfg));
+    }
+
+    #[test]
+    fn quality_axis_breaks_objective_ties_and_dominates() {
+        // two candidates identical on cycles/BRAM/DSP but not fidelity:
+        // quality-blind they tie (one survives by config key); with the
+        // probe on, the faithful one strictly dominates the other
+        let faithful = point(100, 10, 10, 1);
+        let mut garbage = point(100, 10, 10, 2);
+        garbage.infidelity_ppm = 900_000;
+        assert!(dominates(&faithful, &garbage));
+        assert!(!dominates(&garbage, &faithful));
+        let mut f = Frontier::new();
+        assert!(f.insert(garbage.clone()));
+        assert!(f.insert(faithful.clone()));
+        assert_eq!(f.len(), 1, "the low-fidelity twin must be evicted");
+        assert!(f.contains_cfg(&faithful.cfg));
+        assert!(!f.contains_cfg(&garbage.cfg));
+        // insertion order must not matter
+        let mut g = Frontier::new();
+        g.insert(faithful.clone());
+        g.insert(garbage.clone());
+        assert!(g.contains_cfg(&faithful.cfg) && !g.contains_cfg(&garbage.cfg));
+        // a faster-but-unfaithful point still coexists: quality is a
+        // tradeoff axis, not a filter
+        let mut fast_garbage = point(50, 10, 10, 4);
+        fast_garbage.infidelity_ppm = 900_000;
+        assert!(f.insert(fast_garbage));
+        assert_eq!(f.len(), 2);
+        // the winner prefers faithful among equal-latency points
+        assert_eq!(f.best().unwrap().cycles(), 50);
     }
 
     #[test]

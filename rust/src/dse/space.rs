@@ -83,6 +83,16 @@ impl Space {
         }
     }
 
+    /// The [`Space::smoke`] space with the fixed-point format opened as
+    /// a real axis (32 raw candidates): the paper's Q16.9 plus a
+    /// same-width, 2-fraction-bit format. Both cost identical cycles,
+    /// traffic and resources (the models see only the word *width*),
+    /// so a quality-blind tuner cannot tell them apart — the ISSUE-5
+    /// demonstration space for `attrax tune --smoke --quality`.
+    pub fn smoke_quality() -> Space {
+        Space { q: vec![QFormat::paper16(), QFormat::new(16, 2)], ..Space::smoke() }
+    }
+
     /// Axis lengths in canonical order (the mixed-radix digits of a
     /// raw index, least significant first).
     pub fn axes(&self) -> [usize; N_AXES] {
@@ -235,6 +245,19 @@ mod tests {
             cfg.validate().unwrap();
             assert_eq!(s.config_at(*idx), *cfg);
         }
+    }
+
+    #[test]
+    fn smoke_quality_space_opens_the_format_axis() {
+        let s = Space::smoke_quality();
+        assert_eq!(s.raw_size(), 32);
+        assert_eq!(s.enumerate().len(), 32, "every candidate is legal");
+        // every knob tuple appears once per format
+        let with_q = |q: QFormat| {
+            s.enumerate().into_iter().filter(|(_, c)| c.q == q).count()
+        };
+        assert_eq!(with_q(QFormat::paper16()), 16);
+        assert_eq!(with_q(QFormat::new(16, 2)), 16);
     }
 
     #[test]

@@ -50,6 +50,11 @@ pub struct TuneSpec {
     pub beam: usize,
     /// Scoring threads (0 = the host's available parallelism).
     pub threads: usize,
+    /// Run the xeval fidelity probe on every scored candidate and add
+    /// the infidelity objective to the frontier (`attrax tune
+    /// --quality`). Off by default: quality-blind runs keep the legacy
+    /// latency × BRAM × DSP behavior bit for bit.
+    pub quality: bool,
 }
 
 impl Default for TuneSpec {
@@ -62,6 +67,7 @@ impl Default for TuneSpec {
             budget: 160,
             beam: 8,
             threads: 0,
+            quality: false,
         }
     }
 }
@@ -95,6 +101,10 @@ pub struct BoardOutcome {
 pub struct TuneReport {
     pub seed: u64,
     pub method: Method,
+    /// Whether the xeval fidelity probe scored every candidate
+    /// (distinguishes "measured perfect fidelity" from "never
+    /// measured" in [`TuneReport::render`]).
+    pub quality: bool,
     pub outcomes: Vec<BoardOutcome>,
 }
 
@@ -269,7 +279,11 @@ pub fn tune(net: &Network, params: &Params, spec: &TuneSpec) -> anyhow::Result<T
     // always picks the paper datapath; the evaluator dedupes)
     let mut qs = spec.space.q.clone();
     qs.push(crate::fx::QFormat::paper16());
-    let ev = Evaluator::new(net, params, &qs, spec.method, spec.seed)?;
+    let mut ev = Evaluator::new(net, params, &qs, spec.method, spec.seed)?;
+    if spec.quality {
+        ev.enable_quality(params)?;
+    }
+    let ev = ev;
 
     let mut outcomes = Vec::with_capacity(spec.boards.len());
     for &board in &spec.boards {
@@ -304,7 +318,7 @@ pub fn tune(net: &Network, params: &Params, spec: &TuneSpec) -> anyhow::Result<T
             speedup,
         });
     }
-    Ok(TuneReport { seed: spec.seed, method: spec.method, outcomes })
+    Ok(TuneReport { seed: spec.seed, method: spec.method, quality: spec.quality, outcomes })
 }
 
 // ---------------------------------------------------------------------------
@@ -327,6 +341,8 @@ fn point_json(p: &DesignPoint) -> Json {
         ("bp_cycles", json::num(p.bp_cycles as f64)),
         ("cycles", json::num(p.cycles() as f64)),
         ("latency_ms", json::num(p.latency_ms(fpga::TARGET_FREQ_MHZ))),
+        ("infidelity_ppm", json::num(p.infidelity_ppm as f64)),
+        ("fidelity", json::num(p.fidelity())),
         ("fp_util", util_json(&p.fp_util)),
         ("util", util_json(&p.util)),
     ])
@@ -373,6 +389,7 @@ impl TuneReport {
             ("method", json::s(self.method.name())),
             ("budget", json::num(spec.budget as f64)),
             ("beam", json::num(spec.beam as f64)),
+            ("quality", Json::Bool(spec.quality)),
             ("raw_space", json::num(spec.space.raw_size() as f64)),
             ("boards", json::obj(boards)),
         ])
@@ -427,6 +444,14 @@ impl TuneReport {
                 c.overlap_tiles,
                 if o.default_on_frontier { " (default on frontier)" } else { "" },
             ));
+            if self.quality {
+                s.push_str(&format!(
+                    "             tuned probe fidelity: {:.4} (Q{}.{})\n",
+                    o.best.fidelity(),
+                    c.q.word_bits,
+                    c.q.frac_bits
+                ));
+            }
         }
         s
     }

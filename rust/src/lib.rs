@@ -23,9 +23,15 @@
 //!   drain, blocking client, load generator.
 //! * [`dse`] — design-space exploration & autotuning: searches the
 //!   `HwConfig` space under board resource constraints
-//!   (prune-before-cost), keeps the latency × BRAM × DSP Pareto
-//!   frontier, and emits tuned-config artifacts the serving layer
-//!   loads with `--config`.
+//!   (prune-before-cost), keeps the latency × infidelity × BRAM × DSP
+//!   Pareto frontier, and emits tuned-config artifacts the serving
+//!   layer loads with `--config`.
+//! * [`xeval`] — attribution-quality evaluation: quantized-vs-oracle
+//!   fidelity (Pearson/Spearman/top-k/SNR against an unquantized
+//!   reference), deletion/insertion faithfulness curves, the
+//!   parameter-randomization sanity check, and the `attrax eval`
+//!   artifact (`BENCH_xeval.json`); supplies the quality objective the
+//!   tuner runs under `--quality`.
 //! * [`fx`], [`model`], [`data`], [`util`] — supporting substrates
 //!   (fixed-point math, network graphs/params, shapes-32, and the
 //!   from-scratch util kit for this offline environment).
@@ -45,3 +51,4 @@ pub mod runtime;
 pub mod sched;
 pub mod serve;
 pub mod util;
+pub mod xeval;

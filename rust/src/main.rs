@@ -7,12 +7,14 @@
 //!              server with --tcp); --config runs a tuned design point
 //!   loadgen    hammer a serve --tcp endpoint, emit BENCH_serve.json
 //!   tune       design-space exploration: emit BENCH_dse.json + a
-//!              tuned-config artifact per board
+//!              tuned-config artifact per board (--quality adds the
+//!              xeval fidelity objective)
+//!   eval       attribution-quality evaluation: emit BENCH_xeval.json
 //!   sweep      Table IV: resources + latency across the three boards
 //!   masks      Table II / §V mask-memory accounting
 
 
-use attrax::attribution::{Method, ALL_METHODS};
+use attrax::attribution::{channel_sum, Method, ALL_METHODS};
 use attrax::coordinator::{server, Config, Coordinator};
 use attrax::dse;
 use attrax::fpga::{self, Board, ALL_BOARDS};
@@ -23,49 +25,61 @@ use attrax::serve::{loadgen, Server, ServerConfig};
 use attrax::util::cli::Command;
 use attrax::util::{log, ppm};
 
+/// The dispatch table: one row per subcommand. `main` dispatches from
+/// this table and the usage test below asserts every name appears in
+/// the (hand-maintained) help text, so neither can drift from it.
+const SUBCOMMANDS: &[(&str, fn(Vec<String>) -> i32)] = &[
+    ("info", cmd_info),
+    ("attribute", cmd_attribute),
+    ("serve", cmd_serve),
+    ("loadgen", cmd_loadgen),
+    ("tune", cmd_tune),
+    ("eval", cmd_eval),
+    ("sweep", cmd_sweep),
+    ("masks", cmd_masks),
+    ("report", cmd_report),
+    ("fleet", cmd_fleet),
+];
+
 fn main() {
     log::init_from_env();
     let mut argv: Vec<String> = std::env::args().skip(1).collect();
     let sub = if argv.is_empty() { "help".to_string() } else { argv.remove(0) };
     let code = match sub.as_str() {
-        "info" => cmd_info(argv),
-        "attribute" => cmd_attribute(argv),
-        "serve" => cmd_serve(argv),
-        "loadgen" => cmd_loadgen(argv),
-        "tune" => cmd_tune(argv),
-        "sweep" => cmd_sweep(argv),
-        "masks" => cmd_masks(argv),
-        "report" => cmd_report(argv),
-        "fleet" => cmd_fleet(argv),
         "help" | "--help" | "-h" => {
-            print_help();
+            print!("{}", usage());
             0
         }
-        other => {
-            eprintln!("unknown subcommand {other:?}\n");
-            print_help();
-            2
-        }
+        name => match SUBCOMMANDS.iter().find(|(n, _)| *n == name) {
+            Some((_, cmd)) => cmd(argv),
+            None => {
+                eprintln!("unknown subcommand {name:?}\n");
+                print!("{}", usage());
+                2
+            }
+        },
     };
     std::process::exit(code);
 }
 
-fn print_help() {
-    println!(
-        "attrax — feature-attribution acceleration on the edge (VLSI-SoC'22 reproduction)\n\n\
-         usage: attrax <subcommand> [options]\n\n\
-         subcommands:\n\
-         \x20 info        model + artifact summary (paper Table III)\n\
-         \x20 attribute   one attribution on the device simulator\n\
-         \x20 serve       serving coordinator (--tcp <addr> for the network front door)\n\
-         \x20 loadgen     drive a serve --tcp endpoint, emit BENCH_serve.json\n\
-         \x20 tune        design-space exploration: BENCH_dse.json + tuned configs\n\
-         \x20 sweep       per-board resources + latency (paper Table IV)\n\
-         \x20 masks       mask memory accounting (paper Table II / §V)\n\
-         \x20 report      Vitis-style synthesis report for a design point\n\
-         \x20 fleet       route a workload across a heterogeneous device fleet\n\n\
-         run `attrax <subcommand> --help` for options"
-    );
+fn usage() -> String {
+    "attrax — feature-attribution acceleration on the edge (VLSI-SoC'22 reproduction)\n\n\
+     usage: attrax <subcommand> [options]\n\n\
+     subcommands:\n\
+     \x20 info        model + artifact summary (paper Table III)\n\
+     \x20 attribute   one attribution on the device simulator\n\
+     \x20 serve       serving coordinator (--tcp <addr> for the network front door)\n\
+     \x20 loadgen     drive a serve --tcp endpoint, emit BENCH_serve.json\n\
+     \x20 tune        design-space exploration: BENCH_dse.json + tuned configs\n\
+     \x20             (--quality adds the xeval fidelity objective)\n\
+     \x20 eval        attribution quality: fidelity vs the exact oracle,\n\
+     \x20             deletion/insertion faithfulness, sanity checks (BENCH_xeval.json)\n\
+     \x20 sweep       per-board resources + latency (paper Table IV)\n\
+     \x20 masks       mask memory accounting (paper Table II / §V)\n\
+     \x20 report      Vitis-style synthesis report for a design point\n\
+     \x20 fleet       route a workload across a heterogeneous device fleet\n\n\
+     run `attrax <subcommand> --help` for options\n"
+        .to_string()
 }
 
 fn fail(e: impl std::fmt::Display) -> i32 {
@@ -223,13 +237,7 @@ fn cmd_attribute(argv: Vec<String>) -> i32 {
         attrax::data::localization_score(&r.relevance, &sample.mask)
     );
     if let Some(path) = args.get("out").filter(|s| !s.is_empty()) {
-        // channel-summed relevance heatmap
-        let mut heat = vec![0f32; 32 * 32];
-        for c in 0..3 {
-            for i in 0..1024 {
-                heat[i] += r.relevance[c * 1024 + i];
-            }
-        }
+        let heat = channel_sum(&r.relevance, (3, 32, 32));
         let rgb = ppm::relevance_to_rgb(&heat);
         if let Err(e) = ppm::write_ppm(std::path::Path::new(path), &rgb, 32, 32) {
             return fail(e);
@@ -498,10 +506,12 @@ fn cmd_tune(argv: Vec<String>) -> i32 {
         .opt("threads", "0", "parallel scoring threads (0 = auto)")
         .opt("out", "BENCH_dse.json", "machine-readable report path")
         .opt("tuned", "tuned_configs.json", "tuned-config artifact path (for serve --config)")
-        .flag("smoke", "tiny exhaustive space + synthetic weights, fully offline");
+        .flag("smoke", "tiny exhaustive space + synthetic weights, fully offline")
+        .flag("quality", "probe heatmap fidelity per candidate (xeval) as a frontier objective");
     let args = parse_or_exit(cmd, argv);
     let method = method_of(&args);
     let smoke = args.flag("smoke");
+    let quality = args.flag("quality");
 
     let boards: Vec<Board> = match args.get_or("device", "all") {
         "all" => ALL_BOARDS.to_vec(),
@@ -528,14 +538,26 @@ fn cmd_tune(argv: Vec<String>) -> i32 {
     };
 
     let budget: usize = args.parse_num("budget", 160);
+    // --smoke --quality opens the Q-format axis so the fidelity
+    // objective has something to discriminate (32 candidates, still
+    // exhaustive and offline)
+    let space = match (smoke, quality) {
+        (true, true) => dse::Space::smoke_quality(),
+        (true, false) => dse::Space::smoke(),
+        _ => dse::Space::paper(),
+    };
+    // smoke mode caps the budget at the tiny space's size (exhaustive
+    // by default) but still honors an explicit smaller --budget
+    let smoke_budget = budget.min(space.raw_size() as usize);
     let spec = dse::TuneSpec {
-        space: if smoke { dse::Space::smoke() } else { dse::Space::paper() },
+        space,
         boards,
         method,
         seed: args.parse_num("seed", 42),
-        budget: if smoke { budget.min(32) } else { budget },
+        budget: if smoke { smoke_budget } else { budget },
         beam: args.parse_num("beam", 8),
         threads: args.parse_num("threads", 0),
+        quality,
     };
     println!(
         "tuning {} board(s), {} raw candidates, budget {} evals/board ...",
@@ -566,6 +588,92 @@ fn cmd_tune(argv: Vec<String>) -> i32 {
         return fail(format!("tuned artifact failed its read-back check: {e}"));
     }
     println!("wrote {tuned_path} (run it: attrax serve --config {tuned_path})");
+    0
+}
+
+/// Parse a fixed-point format label (`16.9` or `Q16.9`).
+fn parse_qformat(s: &str) -> Option<attrax::fx::QFormat> {
+    let s = s.strip_prefix(&['Q', 'q'][..]).unwrap_or(s);
+    let (w, f) = s.split_once('.')?;
+    let (w, f) = (w.parse::<u32>().ok()?, f.parse::<u32>().ok()?);
+    if !(2..=32).contains(&w) || f >= w {
+        return None;
+    }
+    Some(attrax::fx::QFormat::new(w, f))
+}
+
+fn cmd_eval(argv: Vec<String>) -> i32 {
+    let cmd = Command::new(
+        "eval",
+        "attribution quality: fidelity vs the exact oracle, faithfulness curves, sanity checks",
+    )
+    .opt("images", "", "seeded evaluation images [default: 4; smoke: 2]")
+    .opt("seed", "42", "image/shuffle seed (reruns are byte-identical)")
+    .opt("qformats", "", "comma list of formats, e.g. 16.9,12.6,8.4 (first = serving format)")
+    .opt("steps", "", "points per deletion/insertion curve [default: 6; smoke: 5]")
+    .opt("topk", "0.1", "top-k fraction for the pixel-intersection metric")
+    .opt("out", "BENCH_xeval.json", "machine-readable report path")
+    .flag("smoke", "offline smoke spec on synthetic Table-III weights (deterministic)");
+    let args = parse_or_exit(cmd, argv);
+    let smoke = args.flag("smoke");
+    let mut spec =
+        if smoke { attrax::xeval::EvalSpec::smoke() } else { attrax::xeval::EvalSpec::default() };
+    spec.seed = args.parse_num("seed", spec.seed);
+    spec.images = args.parse_num("images", spec.images);
+    spec.steps = args.parse_num("steps", spec.steps);
+    spec.topk_frac = args.parse_num("topk", spec.topk_frac);
+    if let Some(list) = args.get("qformats").filter(|s| !s.is_empty()) {
+        let mut qs = Vec::new();
+        for item in list.split(',') {
+            match parse_qformat(item.trim()) {
+                Some(q) => qs.push(q),
+                None => {
+                    eprintln!(
+                        "error: bad fixed-point format {item:?} (expected e.g. 16.9 or Q16.9)"
+                    );
+                    return 2;
+                }
+            }
+        }
+        spec.qformats = qs;
+    }
+
+    // quality metrics are weight-dependent, but the evaluation is
+    // meaningful on any deterministic weights — synthetic Table-III
+    // parameters keep the whole run offline (and are what --smoke pins)
+    let net = Network::table3();
+    let params = match load_artifacts(&artifacts_dir()) {
+        Ok((_, p)) if !smoke => p,
+        _ => {
+            println!("(evaluating on synthetic seeded Table-III weights — fully offline)");
+            attrax::model::Params::synthetic(&net, 42)
+        }
+    };
+    println!(
+        "evaluating {} methods x {} formats x {} images (seed {}) ...",
+        ALL_METHODS.len(),
+        spec.qformats.len(),
+        spec.images,
+        spec.seed
+    );
+    let report = match attrax::xeval::run_eval(&net, &params, &spec) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    println!("\n== attribution quality ==\n{}", report.render());
+    let out = args.get_or("out", "BENCH_xeval.json");
+    if let Err(e) = dse::tune::write_json(std::path::Path::new(out), &report.to_json()) {
+        return fail(e);
+    }
+    println!("wrote {out}");
+    if !report.all_checks_pass() {
+        eprintln!(
+            "error: xeval self-checks failed (identity fidelity must be exact and \
+             randomized weights must decorrelate below |rho| {})",
+            attrax::xeval::SANITY_RHO_MAX
+        );
+        return 1;
+    }
     0
 }
 
@@ -734,5 +842,45 @@ fn cmd_masks(argv: Vec<String>) -> i32 {
         attrax::attribution::memory::reduction_factor(&net, Method::Saliency)
     );
     0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_dispatched_subcommand_is_documented_in_usage() {
+        // the usage block is hand-maintained; this pins it to the
+        // dispatch table so a new subcommand cannot ship undocumented
+        let text = usage();
+        for (name, _) in SUBCOMMANDS {
+            let documented = text
+                .lines()
+                .any(|l| l.trim_start().split_whitespace().next() == Some(*name));
+            assert!(documented, "subcommand {name:?} missing from the usage text");
+        }
+    }
+
+    #[test]
+    fn dispatch_table_names_are_unique() {
+        for (i, (a, _)) in SUBCOMMANDS.iter().enumerate() {
+            assert!(
+                !SUBCOMMANDS[..i].iter().any(|(b, _)| b == a),
+                "duplicate subcommand {a:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn parse_qformat_accepts_labels_and_rejects_garbage() {
+        assert_eq!(parse_qformat("16.9"), Some(attrax::fx::QFormat::paper16()));
+        assert_eq!(parse_qformat("Q8.4"), Some(attrax::fx::QFormat::new(8, 4)));
+        assert_eq!(parse_qformat("q12.6"), Some(attrax::fx::QFormat::new(12, 6)));
+        assert_eq!(parse_qformat("16"), None);
+        assert_eq!(parse_qformat("33.1"), None, "word width over 32");
+        assert_eq!(parse_qformat("8.8"), None, "fraction must leave a sign bit");
+        assert_eq!(parse_qformat("nope"), None);
+        assert_eq!(parse_qformat("16.x"), None);
+    }
 }
 

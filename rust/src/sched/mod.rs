@@ -524,6 +524,18 @@ impl Simulator {
         FpBatchResult { logits, preds, cost, state }
     }
 
+    /// Forward-only batch entry point for callers that need just the
+    /// dequantized logits — the xeval deletion/insertion curves re-run
+    /// dozens of masked input variants per heatmap. The per-image
+    /// mask/activation arenas [`Simulator::forward_batch`] builds for a
+    /// later BP phase are still materialized underneath and dropped
+    /// here (a few hundred KB of memcpy per Table-III variant — cheap
+    /// next to the forward compute, so no state-free walk is
+    /// duplicated for it).
+    pub fn logits_batch(&self, images: &[&[f32]]) -> Vec<Vec<f32>> {
+        self.forward_batch(images).logits
+    }
+
     /// Batch-N BP phase (stepwise twin): one one-hot gradient per
     /// image, walked in reverse on the batched engines (weight views
     /// fetched once per batch). Per-image relevance is bit-exact with

@@ -146,11 +146,63 @@ pub fn pearson(a: &[f32], b: &[f32]) -> f64 {
 }
 
 /// Spearman rank correlation — the attribution-fidelity metric used by
-/// the precision sweep (heatmaps are rank-ordered relevance).
+/// the precision sweep and `xeval` (heatmaps are rank-ordered
+/// relevance). Ties receive the average of the ranks they span.
+///
+/// Degenerate-input contract, mirroring [`pearson`]:
+///
+/// * any NaN in either input → `NaN` (the seed's rank sort would have
+///   panicked on NaN instead of propagating it);
+/// * either input constant → the *value-level* [`pearson`] rules apply
+///   (both constant → `1.0` iff elementwise identical else `0.0`; one
+///   constant → `0.0`). A constant input has a degenerate rank vector
+///   — every element ties at the same average rank — so ranking it
+///   would report vacuous perfect agreement between two heatmaps that
+///   share no ordering information at all.
 pub fn spearman(a: &[f32], b: &[f32]) -> f64 {
-    let ra = ranks(a);
-    let rb = ranks(b);
-    pearson(&ra, &rb)
+    assert_eq!(a.len(), b.len());
+    if a.iter().chain(b.iter()).any(|v| v.is_nan()) {
+        return f64::NAN;
+    }
+    let const_a = a.windows(2).all(|w| w[0] == w[1]);
+    let const_b = b.windows(2).all(|w| w[0] == w[1]);
+    if const_a || const_b {
+        return pearson(a, b);
+    }
+    pearson(&ranks(a), &ranks(b))
+}
+
+/// Trapezoidal area under the curve `ys` sampled at `xs` — the
+/// deletion/insertion faithfulness scalar (`xeval::faithfulness`).
+///
+/// Degenerate contract (documented and tested, like [`pearson`]):
+///
+/// * fewer than two points → `NaN` (a curve with no extent has no
+///   area; returning 0.0 would read as a perfect deletion score);
+/// * `xs` must be non-decreasing — the function **panics** on a
+///   descending step (a shuffled domain is a caller bug; silently
+///   sorting would pair ys with the wrong xs);
+/// * NaN anywhere in either slice propagates to the result.
+pub fn auc(xs: &[f64], ys: &[f64]) -> f64 {
+    assert_eq!(xs.len(), ys.len(), "auc: domain/range length mismatch");
+    if xs.len() < 2 {
+        return f64::NAN;
+    }
+    let mut area = 0.0;
+    for i in 1..xs.len() {
+        let dx = xs[i] - xs[i - 1];
+        // a NaN dx is let through the assert and propagates via the sum
+        assert!(
+            dx >= 0.0 || dx.is_nan(),
+            "auc: xs must be non-decreasing (xs[{}]={} after xs[{}]={})",
+            i,
+            xs[i],
+            i - 1,
+            xs[i - 1]
+        );
+        area += dx * 0.5 * (ys[i] + ys[i - 1]);
+    }
+    area
 }
 
 fn ranks(xs: &[f32]) -> Vec<f32> {
@@ -224,6 +276,76 @@ mod tests {
         let a = [1.0f32, 1.0, 2.0, 3.0];
         let b = [1.0f32, 1.0, 2.0, 3.0];
         assert!((spearman(&a, &b) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn spearman_tied_ranks_are_averaged() {
+        // a ranks: [0.5, 0.5, 2]; b ranks: [0, 1.5, 1.5]
+        // pearson of those rank vectors is exactly 0.5 — only true when
+        // ties get the average rank (min- or max-ranking gives 0.655/0.18)
+        let a = [1.0f32, 1.0, 2.0];
+        let b = [1.0f32, 2.0, 2.0];
+        assert!((spearman(&a, &b) - 0.5).abs() < 1e-9, "{}", spearman(&a, &b));
+        // tie-heavy but identically-ordered inputs agree
+        let c = [5.0f32, 5.0, 5.0, 7.0, 7.0, 9.0];
+        let d = [1.0f32, 1.0, 1.0, 2.0, 2.0, 3.0];
+        assert!((spearman(&c, &d) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn spearman_constant_inputs_mirror_pearson_contract() {
+        let k = [2.0f32, 2.0, 2.0];
+        let v = [1.0f32, 2.0, 3.0];
+        // constant vs varying: no ordering information, not agreement
+        assert_eq!(spearman(&k, &v), 0.0);
+        assert_eq!(spearman(&v, &k), 0.0);
+        // identical constants agree; different constants do not
+        assert_eq!(spearman(&k, &k), 1.0);
+        let k2 = [3.0f32, 3.0, 3.0];
+        assert_eq!(spearman(&k, &k2), 0.0);
+        // zero-filled heatmaps on both sides agree
+        let z = [0.0f32, 0.0, 0.0];
+        assert_eq!(spearman(&z, &z), 1.0);
+    }
+
+    #[test]
+    fn spearman_nan_propagates() {
+        let a = [1.0f32, f32::NAN, 3.0];
+        let b = [1.0f32, 2.0, 3.0];
+        // the seed's rank sort panicked on NaN; now it propagates like
+        // pearson's contract demands
+        assert!(spearman(&a, &b).is_nan());
+        assert!(spearman(&b, &a).is_nan());
+        assert!(spearman(&a, &a).is_nan());
+        assert!(spearman(&[f32::NAN], &[1.0]).is_nan());
+    }
+
+    #[test]
+    fn auc_trapezoid_closed_forms() {
+        // flat line: area = height * width
+        assert!((auc(&[0.0, 1.0], &[3.0, 3.0]) - 3.0).abs() < 1e-12);
+        // triangle under y = x on [0, 1]
+        let xs: Vec<f64> = (0..=10).map(|i| i as f64 / 10.0).collect();
+        let ys = xs.clone();
+        assert!((auc(&xs, &ys) - 0.5).abs() < 1e-12);
+        // uneven spacing is weighted by dx
+        assert!((auc(&[0.0, 0.5, 2.0], &[1.0, 1.0, 1.0]) - 2.0).abs() < 1e-12);
+        // repeated x (zero-width step) contributes nothing
+        assert!((auc(&[0.0, 1.0, 1.0], &[1.0, 1.0, 5.0]) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn auc_degenerate_contract() {
+        assert!(auc(&[], &[]).is_nan());
+        assert!(auc(&[0.5], &[2.0]).is_nan());
+        assert!(auc(&[0.0, 1.0], &[f64::NAN, 1.0]).is_nan());
+        assert!(auc(&[0.0, f64::NAN], &[1.0, 1.0]).is_nan());
+    }
+
+    #[test]
+    #[should_panic(expected = "non-decreasing")]
+    fn auc_panics_on_unsorted_domain() {
+        auc(&[0.0, 2.0, 1.0], &[1.0, 1.0, 1.0]);
     }
 
     #[test]

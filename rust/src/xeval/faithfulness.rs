@@ -1,0 +1,178 @@
+//! Deletion/insertion faithfulness curves: a heatmap is scored by
+//! whether the pixels it nominates are the ones the network actually
+//! relies on.
+//!
+//! **Deletion**: rank pixels by attributed relevance (channel-summed,
+//! value-descending, index-ascending ties), progressively replace the
+//! top-ranked pixels with the masking baseline, re-run the forward
+//! pass and watch the target logit. A faithful heatmap makes the logit
+//! collapse quickly → *low* deletion AUC is good.
+//!
+//! **Insertion**: the dual — start from the fully-masked baseline and
+//! progressively reveal the top-ranked pixels. A faithful heatmap
+//! recovers the logit quickly → *high* insertion AUC is good.
+//!
+//! **Masking policy** (documented contract, DESIGN.md §xeval): the
+//! baseline is the *per-channel mean* of the image under evaluation —
+//! masking destroys spatial information without moving the input off
+//! its per-channel operating point (a zero baseline would conflate
+//! "pixel removed" with "pixel painted black", a legal input value).
+//! A masked pixel is replaced across **all** channels at once; the
+//! per-pixel rank is the channel-summed relevance
+//! ([`attribution::channel_sum`]).
+//!
+//! The curve samples `steps` fractions uniformly in `[0, 1]`
+//! (endpoints included: step 0 is the untouched image for deletion /
+//! the pure baseline for insertion, step `steps−1` the reverse), and
+//! the AUC is [`util::stats::auc`] over the raw target logit (this
+//! stack has no softmax; logits are the device's native output). All
+//! `2·steps − 2` distinct masked variants (the two endpoint inputs are
+//! shared between the curves) run through one
+//! [`Simulator::logits_batch`] pass, so the model weights stream from
+//! DRAM once per curve pair.
+
+use crate::attribution::channel_sum;
+use crate::model::Shape;
+use crate::sched::Simulator;
+use crate::util::stats::auc;
+
+use super::top_k_indices;
+
+/// One image's deletion/insertion curve pair.
+#[derive(Clone, Debug)]
+pub struct Curves {
+    /// Masked-pixel fractions (the shared x axis), `0.0 ..= 1.0`.
+    pub fractions: Vec<f64>,
+    /// Target logit with the top `fᵢ` pixels mean-filled.
+    pub deletion: Vec<f64>,
+    /// Target logit with only the top `fᵢ` pixels revealed.
+    pub insertion: Vec<f64>,
+    pub deletion_auc: f64,
+    pub insertion_auc: f64,
+}
+
+/// Compute the curve pair for one (image, heatmap, target class)
+/// triple on the quantized simulator. `steps >= 2` (the endpoints).
+pub fn curves(
+    sim: &Simulator,
+    image: &[f32],
+    heatmap: &[f32],
+    target: usize,
+    steps: usize,
+) -> Curves {
+    assert!(steps >= 2, "a curve needs at least its two endpoints");
+    let (c, h, w) = match sim.net.input {
+        Shape::Chw(c, h, w) => (c, h, w),
+        Shape::Flat(n) => (1, 1, n),
+    };
+    let hw = h * w;
+    assert_eq!(image.len(), c * hw, "image/shape mismatch");
+    let site_rel = channel_sum(heatmap, (c, h, w));
+    let order = top_k_indices(&site_rel, hw);
+
+    let ch_mean: Vec<f32> =
+        (0..c).map(|ch| image[ch * hw..(ch + 1) * hw].iter().sum::<f32>() / hw as f32).collect();
+    let baseline: Vec<f32> = (0..c * hw).map(|i| ch_mean[i / hw]).collect();
+
+    let fractions: Vec<f64> = (0..steps).map(|i| i as f64 / (steps - 1) as f64).collect();
+    // variant layout: one deletion variant per fraction (indices
+    // 0..steps), then insertion variants for the *interior* fractions
+    // only — the endpoints are shared (deletion f=0 == insertion f=1
+    // == the untouched image; deletion f=1 == insertion f=0 == the
+    // pure baseline), so a curve pair costs 2·steps − 2 forward
+    // passes, not 2·steps.
+    let mut variants: Vec<Vec<f32>> = Vec::with_capacity(2 * steps - 2);
+    for &f in &fractions {
+        let n_mask = (f * hw as f64).round() as usize;
+        let mut del = image.to_vec();
+        for &site in &order[..n_mask] {
+            for ch in 0..c {
+                del[ch * hw + site] = ch_mean[ch];
+            }
+        }
+        variants.push(del);
+    }
+    for &f in &fractions[1..steps - 1] {
+        let n_mask = (f * hw as f64).round() as usize;
+        let mut ins = baseline.clone();
+        for &site in &order[..n_mask] {
+            for ch in 0..c {
+                ins[ch * hw + site] = image[ch * hw + site];
+            }
+        }
+        variants.push(ins);
+    }
+    let refs: Vec<&[f32]> = variants.iter().map(|v| v.as_slice()).collect();
+    let logits = sim.logits_batch(&refs);
+    let deletion: Vec<f64> = (0..steps).map(|i| logits[i][target] as f64).collect();
+    let insertion: Vec<f64> = (0..steps)
+        .map(|i| {
+            if i == 0 {
+                deletion[steps - 1] // pure baseline
+            } else if i == steps - 1 {
+                deletion[0] // untouched image
+            } else {
+                logits[steps + (i - 1)][target] as f64
+            }
+        })
+        .collect();
+    let deletion_auc = auc(&fractions, &deletion);
+    let insertion_auc = auc(&fractions, &insertion);
+    Curves { fractions, deletion, insertion, deletion_auc, insertion_auc }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::Method;
+    use crate::hls::HwConfig;
+    use crate::sched::tests_support::tiny_sim;
+    use crate::sched::AttrOptions;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn curve_endpoints_pin_the_masking_semantics() {
+        let sim = tiny_sim(51, HwConfig::pynq_z2());
+        let n_in = sim.net.input.elems();
+        let mut rng = Pcg32::seeded(52);
+        let img: Vec<f32> = (0..n_in).map(|_| rng.f32()).collect();
+        let r = sim.attribute(&img, Method::Guided, AttrOptions::default());
+        let cv = curves(&sim, &img, &r.relevance, r.pred, 5);
+        assert_eq!(cv.fractions, vec![0.0, 0.25, 0.5, 0.75, 1.0]);
+        // fraction 0: deletion is the untouched image, insertion the
+        // pure baseline; fraction 1: exactly swapped
+        let orig = r.logits[r.pred] as f64;
+        assert_eq!(cv.deletion[0], orig);
+        assert_eq!(cv.insertion[4], orig);
+        assert_eq!(cv.deletion[4], cv.insertion[0], "full mask == pure baseline");
+        // both AUCs are finite trapezoid sums over these points
+        assert!(cv.deletion_auc.is_finite() && cv.insertion_auc.is_finite());
+    }
+
+    #[test]
+    fn curves_are_deterministic_and_heatmap_sensitive() {
+        let sim = tiny_sim(53, HwConfig::pynq_z2());
+        let n_in = sim.net.input.elems();
+        let mut rng = Pcg32::seeded(54);
+        let img: Vec<f32> = (0..n_in).map(|_| rng.f32()).collect();
+        let r = sim.attribute(&img, Method::Saliency, AttrOptions::default());
+        let a = curves(&sim, &img, &r.relevance, r.pred, 4);
+        let b = curves(&sim, &img, &r.relevance, r.pred, 4);
+        assert_eq!(a.deletion, b.deletion);
+        assert_eq!(a.insertion, b.insertion);
+        // positive scaling of the heatmap never changes the ranking,
+        // hence never the curves
+        let scaled: Vec<f32> = r.relevance.iter().map(|v| v * 3.5).collect();
+        let c = curves(&sim, &img, &scaled, r.pred, 4);
+        assert_eq!(a.deletion, c.deletion);
+        assert_eq!(a.insertion, c.insertion);
+        // a reversed heatmap masks different pixels first (interior
+        // points differ; endpoints are rank-independent by definition)
+        let rev: Vec<f32> = r.relevance.iter().map(|v| -v).collect();
+        let d = curves(&sim, &img, &rev, r.pred, 4);
+        assert!(
+            a.deletion[1..3] != d.deletion[1..3] || a.insertion[1..3] != d.insertion[1..3],
+            "reversed ranking produced identical curves"
+        );
+    }
+}

@@ -1,0 +1,549 @@
+//! Fixed-point fidelity: quantized heatmaps scored against an
+//! unquantized reference oracle.
+//!
+//! The [`Oracle`] is the straight-line functional twin of the device
+//! simulator: the same layer semantics (cross-correlation conv with
+//! the engines' padding convention, `v > 0` ReLU masks, first-max 2×2
+//! pool argmax, Fig.-4 ReLU-backward dataflows via
+//! [`Method::relu_bwd_f32`]) with none of the device machinery — f32
+//! storage, f64 accumulation, no tiling, no `QFormat`, no cost ledger.
+//! Everything the two paths disagree on is therefore quantization, and
+//! [`score_pair`] measures exactly that disagreement.
+
+use crate::attribution::Method;
+use crate::model::{Layer, Network, Params, Shape};
+use crate::sched::argmax;
+use crate::util::stats::{pearson, spearman};
+
+use super::top_k_indices;
+
+/// SNR values are clamped to ±this many dB so a bit-exact (or
+/// completely degenerate) comparison still serializes as finite JSON.
+pub const SNR_CAP_DB: f64 = 300.0;
+
+/// Worst-case infidelity (see [`infidelity_ppm`]): Pearson −1 → 2e6.
+pub const INFIDELITY_WORST_PPM: u64 = 2_000_000;
+
+/// Per-heatmap agreement between a quantized attribution and its
+/// unquantized reference.
+#[derive(Clone, Copy, Debug)]
+pub struct FidelityScore {
+    /// Pearson correlation of the raw heatmap values.
+    pub pearson: f64,
+    /// Spearman rank correlation (what a human reading the heatmap
+    /// perceives: the relevance *ordering*).
+    pub spearman: f64,
+    /// |top-k(quant) ∩ top-k(ref)| / k — do the two paths nominate the
+    /// same most-relevant pixels?
+    pub topk: f64,
+    /// 10·log10(Σ ref² / Σ (ref − quant)²), clamped to ±[`SNR_CAP_DB`].
+    pub snr_db: f64,
+}
+
+/// Score a quantized heatmap against its reference with top-`k`
+/// intersection. Identical inputs score exactly
+/// `(1.0, 1.0, 1.0, SNR_CAP_DB)` by definition — short-circuited
+/// before the correlation arithmetic, so the identity comparison is
+/// not exposed to `sqrt` round-off.
+pub fn score_pair(quant: &[f32], reference: &[f32], k: usize) -> FidelityScore {
+    assert_eq!(quant.len(), reference.len(), "heatmap length mismatch");
+    assert!(k >= 1, "top-k needs k >= 1");
+    if quant == reference {
+        return FidelityScore { pearson: 1.0, spearman: 1.0, topk: 1.0, snr_db: SNR_CAP_DB };
+    }
+    let k = k.min(quant.len());
+    let top_q = top_k_indices(quant, k);
+    let mut in_ref = vec![false; reference.len()];
+    for &i in &top_k_indices(reference, k) {
+        in_ref[i] = true;
+    }
+    let hits = top_q.iter().filter(|&&i| in_ref[i]).count();
+    let (mut sig, mut err) = (0f64, 0f64);
+    for (&q, &r) in quant.iter().zip(reference.iter()) {
+        sig += r as f64 * r as f64;
+        err += (r as f64 - q as f64) * (r as f64 - q as f64);
+    }
+    let snr_db = if err == 0.0 {
+        SNR_CAP_DB
+    } else if sig == 0.0 {
+        -SNR_CAP_DB
+    } else {
+        (10.0 * (sig / err).log10()).clamp(-SNR_CAP_DB, SNR_CAP_DB)
+    };
+    FidelityScore {
+        pearson: pearson(quant, reference),
+        spearman: spearman(quant, reference),
+        topk: hits as f64 / k as f64,
+        snr_db,
+    }
+}
+
+/// The scalar the autotuner minimizes: `(1 − Pearson)` in
+/// parts-per-million, clamped to `[0, 2e6]`, with degenerate (NaN)
+/// correlations mapped to the worst score. Integer-valued so the
+/// Pareto order stays total and the serialized frontier stays
+/// byte-identical across reruns.
+pub fn infidelity_ppm(quant: &[f32], reference: &[f32]) -> u64 {
+    if quant == reference {
+        return 0;
+    }
+    let rho = pearson(quant, reference);
+    if !rho.is_finite() {
+        return INFIDELITY_WORST_PPM;
+    }
+    ((1.0 - rho).clamp(0.0, 2.0) * 1e6).round() as u64
+}
+
+// ---------------------------------------------------------------------------
+// The reference oracle
+// ---------------------------------------------------------------------------
+
+/// One resolved layer of the reference network (f32 parameters,
+/// pre-validated shapes — no per-call `Result` plumbing).
+enum RefLayer {
+    Conv {
+        w: Vec<f32>, // [O,I,K,K]
+        b: Vec<f32>,
+        in_shape: (usize, usize, usize),
+        out_ch: usize,
+        k: usize,
+        pad: usize,
+    },
+    Relu,
+    Pool {
+        in_shape: (usize, usize, usize),
+    },
+    Flatten,
+    Fc {
+        w: Vec<f32>, // [OUT,IN]
+        b: Vec<f32>,
+        out_n: usize,
+        in_n: usize,
+    },
+}
+
+/// Result of one reference attribution.
+#[derive(Clone, Debug)]
+pub struct RefAttr {
+    pub logits: Vec<f32>,
+    pub pred: usize,
+    pub relevance: Vec<f32>,
+}
+
+/// The unquantized reference: straight-line forward + backward over
+/// the same layer vocabulary the device plan executes.
+pub struct Oracle {
+    in_elems: usize,
+    out_n: usize,
+    layers: Vec<RefLayer>,
+}
+
+impl Oracle {
+    /// Resolve a network + f32 parameter store into the reference
+    /// form. Shape validation mirrors `Plan::new`.
+    pub fn new(net: &Network, params: &Params) -> anyhow::Result<Oracle> {
+        let mut layers = Vec::with_capacity(net.layers.len());
+        for (i, layer) in net.layers.iter().enumerate() {
+            match layer {
+                Layer::Conv { name, in_ch, out_ch, k, pad } => {
+                    let (wt, bt) = params.conv(name)?;
+                    anyhow::ensure!(
+                        wt.shape == vec![*out_ch, *in_ch, *k, *k],
+                        "{name}: weight shape {:?} != layer dims",
+                        wt.shape
+                    );
+                    let in_shape = match net.shapes[i] {
+                        Shape::Chw(c, h, w) => (c, h, w),
+                        s => anyhow::bail!("conv {name} on non-CHW input {s}"),
+                    };
+                    layers.push(RefLayer::Conv {
+                        w: wt.data.clone(),
+                        b: bt.data.clone(),
+                        in_shape,
+                        out_ch: *out_ch,
+                        k: *k,
+                        pad: *pad,
+                    });
+                }
+                Layer::Relu => layers.push(RefLayer::Relu),
+                Layer::MaxPool2 => {
+                    let in_shape = match net.shapes[i] {
+                        Shape::Chw(c, h, w) => (c, h, w),
+                        s => anyhow::bail!("pool on non-CHW input {s}"),
+                    };
+                    layers.push(RefLayer::Pool { in_shape });
+                }
+                Layer::Flatten => layers.push(RefLayer::Flatten),
+                Layer::Fc { name, in_dim, out_dim } => {
+                    let (wt, bt) = params.fc(name)?;
+                    anyhow::ensure!(
+                        wt.shape == vec![*out_dim, *in_dim],
+                        "{name}: weight shape {:?} != layer dims",
+                        wt.shape
+                    );
+                    layers.push(RefLayer::Fc {
+                        w: wt.data.clone(),
+                        b: bt.data.clone(),
+                        out_n: *out_dim,
+                        in_n: *in_dim,
+                    });
+                }
+            }
+        }
+        Ok(Oracle { in_elems: net.input.elems(), out_n: net.output_shape().elems(), layers })
+    }
+
+    /// One reference attribution: forward with mask/argmax capture,
+    /// then the method's gradient backpropagation from `target` (the
+    /// forward argmax when `None`).
+    pub fn attribute(&self, image: &[f32], method: Method, target: Option<usize>) -> RefAttr {
+        assert_eq!(image.len(), self.in_elems, "input size mismatch");
+        let n = self.layers.len();
+        let mut relu_masks: Vec<Option<Vec<bool>>> = (0..n).map(|_| None).collect();
+        let mut pool_idx: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
+
+        // ---- forward -------------------------------------------------
+        let mut act: Vec<f32> = image.to_vec();
+        for (i, layer) in self.layers.iter().enumerate() {
+            match layer {
+                RefLayer::Conv { w, b, in_shape, out_ch, k, pad } => {
+                    act = conv_forward(&act, *in_shape, w, b, *out_ch, *k, *pad);
+                }
+                RefLayer::Relu => {
+                    // mask convention matches the engines: strictly
+                    // positive pre-activation
+                    let mask: Vec<bool> = act.iter().map(|&v| v > 0.0).collect();
+                    for (v, &m) in act.iter_mut().zip(&mask) {
+                        if !m {
+                            *v = 0.0;
+                        }
+                    }
+                    relu_masks[i] = Some(mask);
+                }
+                RefLayer::Pool { in_shape } => {
+                    let (p, idx) = maxpool2(&act, *in_shape);
+                    pool_idx[i] = Some(idx);
+                    act = p;
+                }
+                RefLayer::Flatten => {}
+                RefLayer::Fc { w, b, out_n, in_n } => {
+                    act = fc_forward(w, *out_n, *in_n, &act, b);
+                }
+            }
+        }
+        let logits = act;
+        let pred = argmax(&logits);
+
+        // ---- backward ------------------------------------------------
+        let start = target.unwrap_or(pred);
+        assert!(start < self.out_n, "target class out of range");
+        let mut g = vec![0f32; self.out_n];
+        g[start] = 1.0;
+        for (i, layer) in self.layers.iter().enumerate().rev() {
+            match layer {
+                RefLayer::Fc { w, out_n, in_n, .. } => {
+                    g = fc_backward(w, *out_n, *in_n, &g);
+                }
+                RefLayer::Relu => {
+                    let mask = relu_masks[i].as_ref().expect("relu mask missing");
+                    for (v, &m) in g.iter_mut().zip(mask) {
+                        *v = method.relu_bwd_f32(m, *v);
+                    }
+                }
+                RefLayer::Pool { in_shape } => {
+                    let (c, h, w) = *in_shape;
+                    let idx = pool_idx[i].as_ref().expect("pool idx missing");
+                    g = unpool2(&g, (c, h / 2, w / 2), idx);
+                }
+                RefLayer::Flatten => {}
+                RefLayer::Conv { w, in_shape, out_ch, k, pad, .. } => {
+                    g = conv_input_grad(&g, *in_shape, w, *out_ch, *k, *pad);
+                }
+            }
+        }
+        assert_eq!(g.len(), self.in_elems, "BP must walk back to the input");
+        RefAttr { logits, pred, relevance: g }
+    }
+}
+
+/// Cross-correlation conv, the engines' convention:
+/// `out[o][oy][ox] = b[o] + Σ w[o][i][ky][kx] · x[i][oy+ky−pad][ox+kx−pad]`
+/// with zero padding; output is `[O, H+2p−(k−1), W+2p−(k−1)]`.
+fn conv_forward(
+    x: &[f32],
+    (ic, h, w): (usize, usize, usize),
+    wt: &[f32],
+    bias: &[f32],
+    oc: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<f32> {
+    assert_eq!(x.len(), ic * h * w);
+    let oh = h + 2 * pad - (k - 1);
+    let ow = w + 2 * pad - (k - 1);
+    let mut out = vec![0f32; oc * oh * ow];
+    for o in 0..oc {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let mut acc = bias[o] as f64;
+                for i in 0..ic {
+                    for ky in 0..k {
+                        let y = (oy + ky) as isize - pad as isize;
+                        if y < 0 || y >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let xx = (ox + kx) as isize - pad as isize;
+                            if xx < 0 || xx >= w as isize {
+                                continue;
+                            }
+                            acc += wt[((o * ic + i) * k + ky) * k + kx] as f64
+                                * x[(i * h + y as usize) * w + xx as usize] as f64;
+                        }
+                    }
+                }
+                out[(o * oh + oy) * ow + ox] = acc as f32;
+            }
+        }
+    }
+    out
+}
+
+/// Adjoint of [`conv_forward`]: scatter each output gradient through
+/// the taps that produced it.
+fn conv_input_grad(
+    g: &[f32],
+    (ic, h, w): (usize, usize, usize),
+    wt: &[f32],
+    oc: usize,
+    k: usize,
+    pad: usize,
+) -> Vec<f32> {
+    let oh = h + 2 * pad - (k - 1);
+    let ow = w + 2 * pad - (k - 1);
+    assert_eq!(g.len(), oc * oh * ow);
+    let mut acc = vec![0f64; ic * h * w];
+    for o in 0..oc {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let gv = g[(o * oh + oy) * ow + ox] as f64;
+                if gv == 0.0 {
+                    continue;
+                }
+                for i in 0..ic {
+                    for ky in 0..k {
+                        let y = (oy + ky) as isize - pad as isize;
+                        if y < 0 || y >= h as isize {
+                            continue;
+                        }
+                        for kx in 0..k {
+                            let xx = (ox + kx) as isize - pad as isize;
+                            if xx < 0 || xx >= w as isize {
+                                continue;
+                            }
+                            acc[(i * h + y as usize) * w + xx as usize] +=
+                                wt[((o * ic + i) * k + ky) * k + kx] as f64 * gv;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    acc.into_iter().map(|v| v as f32).collect()
+}
+
+/// 2×2/2 max pool with the engines' first-max argmax convention
+/// (row-major window scan, strictly-greater replaces).
+fn maxpool2(x: &[f32], (c, h, w): (usize, usize, usize)) -> (Vec<f32>, Vec<u8>) {
+    assert_eq!(x.len(), c * h * w);
+    assert!(h % 2 == 0 && w % 2 == 0);
+    let (ph, pw) = (h / 2, w / 2);
+    let mut out = vec![0f32; c * ph * pw];
+    let mut idx = vec![0u8; c * ph * pw];
+    for ch in 0..c {
+        for py in 0..ph {
+            for px in 0..pw {
+                let mut best = f32::NEG_INFINITY;
+                let mut bi = 0u8;
+                for d in 0..4usize {
+                    let v = x[ch * h * w + (2 * py + d / 2) * w + (2 * px + d % 2)];
+                    if v > best {
+                        best = v;
+                        bi = d as u8;
+                    }
+                }
+                out[ch * ph * pw + py * pw + px] = best;
+                idx[ch * ph * pw + py * pw + px] = bi;
+            }
+        }
+    }
+    (out, idx)
+}
+
+/// Route each pooled gradient back to its argmax position.
+fn unpool2(g: &[f32], (c, ph, pw): (usize, usize, usize), idx: &[u8]) -> Vec<f32> {
+    assert_eq!(g.len(), c * ph * pw);
+    assert_eq!(idx.len(), g.len());
+    let (h, w) = (2 * ph, 2 * pw);
+    let mut out = vec![0f32; c * h * w];
+    for ch in 0..c {
+        for py in 0..ph {
+            for px in 0..pw {
+                let pi = ch * ph * pw + py * pw + px;
+                let (dy, dx) = ((idx[pi] >> 1) as usize, (idx[pi] & 1) as usize);
+                out[ch * h * w + (2 * py + dy) * w + (2 * px + dx)] = g[pi];
+            }
+        }
+    }
+    out
+}
+
+fn fc_forward(w: &[f32], out_n: usize, in_n: usize, x: &[f32], bias: &[f32]) -> Vec<f32> {
+    assert_eq!(x.len(), in_n);
+    assert_eq!(w.len(), out_n * in_n);
+    (0..out_n)
+        .map(|o| {
+            let mut acc = bias[o] as f64;
+            for i in 0..in_n {
+                acc += w[o * in_n + i] as f64 * x[i] as f64;
+            }
+            acc as f32
+        })
+        .collect()
+}
+
+fn fc_backward(w: &[f32], out_n: usize, in_n: usize, g: &[f32]) -> Vec<f32> {
+    assert_eq!(g.len(), out_n);
+    (0..in_n)
+        .map(|i| {
+            let mut acc = 0f64;
+            for o in 0..out_n {
+                acc += w[o * in_n + i] as f64 * g[o] as f64;
+            }
+            acc as f32
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::ALL_METHODS;
+    use crate::fx::QFormat;
+    use crate::hls::HwConfig;
+    use crate::sched::tests_support::tiny_net_params;
+    use crate::sched::{AttrOptions, Simulator};
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn score_pair_identity_is_exact() {
+        let mut rng = Pcg32::seeded(3);
+        let h: Vec<f32> = (0..64).map(|_| rng.normal()).collect();
+        let s = score_pair(&h, &h, 6);
+        assert_eq!(s.pearson, 1.0);
+        assert_eq!(s.spearman, 1.0);
+        assert_eq!(s.topk, 1.0);
+        assert_eq!(s.snr_db, SNR_CAP_DB);
+        assert_eq!(infidelity_ppm(&h, &h), 0);
+    }
+
+    #[test]
+    fn score_pair_detects_disagreement() {
+        let a = [1.0f32, 2.0, 3.0, 4.0];
+        let anti: Vec<f32> = a.iter().map(|v| -v).collect();
+        let s = score_pair(&anti, &a, 2);
+        assert!((s.pearson + 1.0).abs() < 1e-9);
+        assert!((s.spearman + 1.0).abs() < 1e-9);
+        assert_eq!(s.topk, 0.0, "top-2 of a and -a are disjoint");
+        assert_eq!(infidelity_ppm(&anti, &a), INFIDELITY_WORST_PPM);
+        // degenerate reference: constant vs varying is no correlation,
+        // mapped to a defined (worst-of-range) infidelity, never NaN
+        let flat = [0.0f32; 4];
+        assert_eq!(infidelity_ppm(&flat, &a), 1_000_000);
+        // half-window shift keeps half the top-2
+        let shifted = [4.0f32, 3.0, 2.0, 1.0];
+        let s = score_pair(&shifted, &a, 2);
+        assert_eq!(s.topk, 0.0);
+        let near = [1.0f32, 4.0, 2.0, 3.0];
+        assert_eq!(score_pair(&near, &a, 2).topk, 0.5);
+    }
+
+    #[test]
+    fn snr_scales_with_error() {
+        let r = [1.0f32, -1.0, 1.0, -1.0];
+        let q1: Vec<f32> = r.iter().map(|v| v + 0.1).collect();
+        let q2: Vec<f32> = r.iter().map(|v| v + 0.01).collect();
+        let s1 = score_pair(&q1, &r, 1).snr_db;
+        let s2 = score_pair(&q2, &r, 1).snr_db;
+        assert!((s1 - 20.0).abs() < 1e-6, "{s1}");
+        assert!(s2 > s1 + 19.0, "10x smaller error ≈ +20 dB, got {s1} vs {s2}");
+    }
+
+    #[test]
+    fn oracle_matches_quantized_path_at_high_precision() {
+        // the one test that pins the oracle to the engines' conventions:
+        // at Q24.16 (resolution ≈ 1.5e-5) the fixed-point path is a
+        // fine-grained approximation of the oracle, so the two heatmaps
+        // must correlate near-perfectly for every method
+        let (net, params) = tiny_net_params(41);
+        let oracle = Oracle::new(&net, &params).unwrap();
+        let mut cfg = HwConfig::with_unroll(1, 1, 16);
+        cfg.q = QFormat::new(24, 16);
+        let sim = Simulator::new(net.clone(), &params, cfg).unwrap();
+        let mut rng = Pcg32::seeded(42);
+        let img: Vec<f32> = (0..net.input.elems()).map(|_| rng.f32()).collect();
+        for method in ALL_METHODS {
+            let r = oracle.attribute(&img, method, None);
+            assert_eq!(r.logits.len(), 3);
+            let q = sim.attribute(
+                &img,
+                method,
+                AttrOptions { target: Some(r.pred), ..Default::default() },
+            );
+            let rho = pearson(&q.relevance, &r.relevance);
+            assert!(rho > 0.99, "{method}: high-precision path diverged, rho={rho}");
+            // logits agree closely too (same prediction)
+            assert_eq!(q.pred, r.pred, "{method}");
+            for (a, b) in q.logits.iter().zip(&r.logits) {
+                assert!((a - b).abs() < 0.01, "{method}: logits {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn oracle_is_deterministic_and_target_sensitive() {
+        let (net, params) = tiny_net_params(43);
+        let oracle = Oracle::new(&net, &params).unwrap();
+        let mut rng = Pcg32::seeded(44);
+        let img: Vec<f32> = (0..net.input.elems()).map(|_| rng.f32()).collect();
+        let a = oracle.attribute(&img, Method::Guided, None);
+        let b = oracle.attribute(&img, Method::Guided, None);
+        assert_eq!(a.relevance, b.relevance);
+        assert_eq!(a.logits, b.logits);
+        let c0 = oracle.attribute(&img, Method::Saliency, Some(0));
+        let c2 = oracle.attribute(&img, Method::Saliency, Some(2));
+        assert_ne!(c0.relevance, c2.relevance);
+        // methods disagree on relevance, agree on the forward pass
+        let sal = oracle.attribute(&img, Method::Saliency, None);
+        let dec = oracle.attribute(&img, Method::Deconvnet, None);
+        assert_ne!(sal.relevance, dec.relevance);
+        assert_eq!(sal.logits, dec.logits);
+    }
+
+    #[test]
+    fn conv_adjoint_is_consistent() {
+        // <conv(x), g> == <x, conv_input_grad(g)> — the defining
+        // property of the adjoint, checked on random tensors
+        let mut rng = Pcg32::seeded(7);
+        let (ic, h, w, oc, k, pad) = (2, 6, 6, 3, 3, 1);
+        let x: Vec<f32> = (0..ic * h * w).map(|_| rng.normal()).collect();
+        let wt: Vec<f32> = (0..oc * ic * k * k).map(|_| rng.normal()).collect();
+        let bias = vec![0f32; oc];
+        let y = conv_forward(&x, (ic, h, w), &wt, &bias, oc, k, pad);
+        let g: Vec<f32> = (0..y.len()).map(|_| rng.normal()).collect();
+        let gx = conv_input_grad(&g, (ic, h, w), &wt, oc, k, pad);
+        let lhs: f64 = y.iter().zip(&g).map(|(&a, &b)| a as f64 * b as f64).sum();
+        let rhs: f64 = x.iter().zip(&gx).map(|(&a, &b)| a as f64 * b as f64).sum();
+        assert!((lhs - rhs).abs() < 1e-3 * lhs.abs().max(1.0), "{lhs} vs {rhs}");
+    }
+}

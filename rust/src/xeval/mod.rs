@@ -1,0 +1,77 @@
+//! Attribution-quality evaluation (S13, ISSUE-5): is a fixed-point
+//! heatmap still *right*?
+//!
+//! The paper claims 16-bit fixed-point heatmaps come at "minimal
+//! overhead" — every other subsystem in this repo measures the
+//! overhead (cycles, traffic, BRAM/DSP) and none measures the claim's
+//! other half. `xeval` supplies the quality axis, three ways:
+//!
+//! * [`fidelity`] — quantized-vs-exact agreement: each heatmap is
+//!   computed twice, once through the fixed-point
+//!   [`Simulator`](crate::sched::Simulator) path and once through a
+//!   straight-line unquantized [`fidelity::Oracle`] (f32 storage, f64
+//!   accumulation, no tiling, no Q-format), then scored by Pearson /
+//!   Spearman correlation, top-k pixel intersection and SNR — per
+//!   method and per `QFormat`.
+//! * [`faithfulness`] — does the heatmap identify the pixels the
+//!   network actually relies on? Deletion/insertion curves: rank
+//!   pixels by attributed relevance, progressively mean-fill them,
+//!   re-run the forward pass and integrate the target-logit decay
+//!   (`util::stats::auc`).
+//! * [`sanity`] — the parameter-randomization check: reshuffling the
+//!   layer weights (seeded) must *decorrelate* the attributions. A
+//!   dataflow that survives this check is provably reading gradients,
+//!   not echoing the input.
+//! * [`report`] — the `attrax eval` driver: runs all three over a
+//!   seeded image set and emits the schema-tagged `BENCH_xeval.json`
+//!   artifact (byte-identical across reruns).
+//!
+//! The same fidelity scalar feeds the autotuner: with
+//! `TuneSpec::quality` (CLI `attrax tune --quality`) every scored
+//! candidate carries `DesignPoint::infidelity_ppm` and the Pareto
+//! frontier grows a fidelity objective, so a Q-format that produces
+//! garbage heatmaps can no longer win on latency ties.
+//!
+//! See DESIGN.md §"xeval: quality metrics and the reference oracle"
+//! and EXPERIMENTS.md E17.
+
+pub mod faithfulness;
+pub mod fidelity;
+pub mod report;
+pub mod sanity;
+
+pub use faithfulness::Curves;
+pub use fidelity::{FidelityScore, Oracle};
+pub use report::{run_eval, EvalReport, EvalSpec, XEVAL_SCHEMA};
+pub use sanity::{shuffle_params, SanityOutcome, SANITY_RHO_MAX};
+
+/// Indices of the `k` largest values, ordered value-descending with
+/// index-ascending tie-breaks — the one deterministic pixel ranking
+/// every xeval metric shares (top-k intersection, deletion/insertion
+/// masking order). Ranks by *signed* value: attribution methods put
+/// evidence-for at the top, and the deletion curve must remove exactly
+/// what the method claims matters most. Panics on NaN (heatmaps are
+/// finite by construction).
+pub fn top_k_indices(xs: &[f32], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..xs.len()).collect();
+    idx.sort_by(|&i, &j| xs[j].partial_cmp(&xs[i]).expect("NaN in heatmap").then(i.cmp(&j)));
+    idx.truncate(k.min(xs.len()));
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn top_k_is_deterministic_value_desc_index_asc() {
+        let xs = [1.0f32, 5.0, 5.0, -2.0, 3.0];
+        assert_eq!(top_k_indices(&xs, 3), vec![1, 2, 4]);
+        // k larger than the input clamps
+        assert_eq!(top_k_indices(&xs, 99).len(), 5);
+        assert_eq!(top_k_indices(&[], 4), Vec::<usize>::new());
+        // positive scaling never reorders
+        let scaled: Vec<f32> = xs.iter().map(|v| v * 17.5).collect();
+        assert_eq!(top_k_indices(&xs, 5), top_k_indices(&scaled, 5));
+    }
+}

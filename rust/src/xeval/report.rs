@@ -1,0 +1,494 @@
+//! The `attrax eval` driver: run fidelity, faithfulness and the
+//! sanity check over a seeded image set and emit the schema-tagged
+//! `BENCH_xeval.json` artifact.
+//!
+//! Everything is deterministic for a fixed [`EvalSpec`]: images come
+//! from `util::rng`, the randomized twin is seeded, no wall-clock
+//! value reaches the artifact — two consecutive runs emit
+//! byte-identical JSON (the reproducibility bar `BENCH_dse.json` set).
+//!
+//! Quality metrics are *configuration-invariant* (P2: tiling/unroll
+//! never change the arithmetic), so unlike the DSE report there is no
+//! board axis here — the sweep axis is the fixed-point format, the
+//! only knob that moves heatmap values.
+
+use crate::attribution::{Method, ALL_METHODS};
+use crate::fx::QFormat;
+use crate::hls::HwConfig;
+use crate::model::{Network, Params};
+use crate::sched::{AttrOptions, Simulator};
+use crate::util::json::{self, Json};
+use crate::util::rng::Pcg32;
+
+use super::faithfulness::{self, Curves};
+use super::fidelity::{score_pair, FidelityScore, Oracle};
+use super::sanity::{self, SanityOutcome, SANITY_RHO_MAX};
+
+/// Schema tag of the `BENCH_xeval.json` artifact.
+pub const XEVAL_SCHEMA: &str = "attrax-xeval/v1";
+
+/// Seed offset of the randomized-weights twin, so the sanity shuffle
+/// never reuses the image stream.
+const SANITY_SEED_XOR: u64 = 0x5a_5a_11_7e;
+
+/// What to evaluate and how hard.
+#[derive(Clone, Debug)]
+pub struct EvalSpec {
+    /// Fixed-point formats to sweep, all distinct. The **first** entry
+    /// is the serving format: faithfulness, sanity and the identity
+    /// self-check run there.
+    pub qformats: Vec<QFormat>,
+    /// Seeded evaluation images (uniform in `[0,1)` — structureless on
+    /// purpose: the sanity check must not be gifted input structure a
+    /// randomized model could echo).
+    pub images: usize,
+    pub seed: u64,
+    /// Top-k fraction of the input size for the pixel-intersection
+    /// metric (`k = clamp(round(frac · n), 1, n)`).
+    pub topk_frac: f64,
+    /// Points per deletion/insertion curve (endpoints included).
+    pub steps: usize,
+}
+
+impl Default for EvalSpec {
+    fn default() -> EvalSpec {
+        EvalSpec {
+            qformats: vec![
+                QFormat::paper16(),
+                QFormat::new(12, 6),
+                QFormat::new(8, 4),
+                QFormat::new(16, 2),
+            ],
+            images: 4,
+            seed: 42,
+            topk_frac: 0.1,
+            steps: 6,
+        }
+    }
+}
+
+impl EvalSpec {
+    /// The CI/offline smoke spec: 2 images, 3 formats, short curves.
+    pub fn smoke() -> EvalSpec {
+        EvalSpec {
+            qformats: vec![QFormat::paper16(), QFormat::new(8, 4), QFormat::new(16, 2)],
+            images: 2,
+            steps: 5,
+            ..Default::default()
+        }
+    }
+}
+
+/// Canonical Q-format label (`Q16.9` = 16-bit word, 9 fraction bits).
+pub fn qname(q: QFormat) -> String {
+    format!("Q{}.{}", q.word_bits, q.frac_bits)
+}
+
+/// Per-(method, format) fidelity: the image mean plus per-image scores.
+#[derive(Clone, Debug)]
+pub struct FidelitySummary {
+    pub q: QFormat,
+    pub mean: FidelityScore,
+    pub per_image: Vec<FidelityScore>,
+}
+
+/// One method's full evaluation.
+#[derive(Clone, Debug)]
+pub struct MethodEval {
+    pub method: Method,
+    /// One summary per spec format, in spec order.
+    pub fidelity: Vec<FidelitySummary>,
+    /// Mean deletion/insertion curves over the image set (serving
+    /// format); AUCs are the matching trapezoid integrals.
+    pub curves: Curves,
+    pub sanity: SanityOutcome,
+    /// Identity comparison (serving-format heatmap vs itself): must be
+    /// exactly `(1.0, 1.0, 1.0, cap)` — the acceptance self-check.
+    /// `score_pair` short-circuits elementwise-equal inputs, so this
+    /// alone would be a tautology; see `self_check_raw`.
+    pub self_check: FidelityScore,
+    /// The same identity comparison pushed through the *full* metric
+    /// arithmetic (`util::stats::pearson`/`spearman` directly, no
+    /// equality shortcut): must land within float round-off of 1.0, so
+    /// a bug in the correlation/ranking code fails the gate instead of
+    /// hiding behind the shortcut.
+    pub self_check_raw: (f64, f64),
+}
+
+/// A full evaluation run.
+#[derive(Clone, Debug)]
+pub struct EvalReport {
+    pub seed: u64,
+    pub images: usize,
+    pub topk: usize,
+    pub steps: usize,
+    pub qformats: Vec<QFormat>,
+    pub methods: Vec<MethodEval>,
+}
+
+fn mean_scores(scores: &[FidelityScore]) -> FidelityScore {
+    let n = scores.len() as f64;
+    FidelityScore {
+        pearson: scores.iter().map(|s| s.pearson).sum::<f64>() / n,
+        spearman: scores.iter().map(|s| s.spearman).sum::<f64>() / n,
+        topk: scores.iter().map(|s| s.topk).sum::<f64>() / n,
+        snr_db: scores.iter().map(|s| s.snr_db).sum::<f64>() / n,
+    }
+}
+
+/// Run the full evaluation: per method, quantized-vs-oracle fidelity
+/// across the format sweep, deletion/insertion faithfulness and the
+/// parameter-randomization sanity check on the serving format.
+pub fn run_eval(net: &Network, params: &Params, spec: &EvalSpec) -> anyhow::Result<EvalReport> {
+    anyhow::ensure!(!spec.qformats.is_empty(), "eval needs at least one fixed-point format");
+    for (i, a) in spec.qformats.iter().enumerate() {
+        anyhow::ensure!(
+            !spec.qformats[..i].contains(a),
+            "duplicate format {} in the sweep",
+            qname(*a)
+        );
+    }
+    anyhow::ensure!(spec.images >= 1, "eval needs at least one image");
+    anyhow::ensure!(spec.steps >= 2, "curves need at least their two endpoints");
+    anyhow::ensure!(
+        spec.topk_frac > 0.0 && spec.topk_frac <= 1.0,
+        "topk_frac must be in (0, 1]"
+    );
+
+    let oracle = Oracle::new(net, params)?;
+    let mut sims = Vec::with_capacity(spec.qformats.len());
+    for &q in &spec.qformats {
+        // any valid tiling works here: heatmaps are bit-identical
+        // across unroll/tile configs (property P2) — only `q` moves
+        // the arithmetic, so this choice is a speed knob, not part of
+        // the measured reference semantics
+        let mut cfg = HwConfig::with_unroll(1, 1, 16);
+        cfg.q = q;
+        sims.push(Simulator::new(net.clone(), params, cfg)?);
+    }
+    let serving = &sims[0];
+    let rand_sim = Simulator::new(
+        net.clone(),
+        &sanity::shuffle_params(params, spec.seed ^ SANITY_SEED_XOR),
+        serving.cfg,
+    )?;
+
+    let n_in = net.input.elems();
+    let k = ((spec.topk_frac * n_in as f64).round() as usize).clamp(1, n_in);
+    let mut rng = Pcg32::seeded(spec.seed);
+    let images: Vec<Vec<f32>> =
+        (0..spec.images).map(|_| (0..n_in).map(|_| rng.f32()).collect()).collect();
+    let img_refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
+
+    let mut methods = Vec::with_capacity(ALL_METHODS.len());
+    for method in ALL_METHODS {
+        // one unquantized reference per image; its prediction is the
+        // class BOTH paths explain (a prediction flip under
+        // quantization must show up as heatmap infidelity, not as two
+        // heatmaps faithfully explaining different classes)
+        let references: Vec<_> =
+            images.iter().map(|img| oracle.attribute(img, method, None)).collect();
+
+        let mut fidelity = Vec::with_capacity(sims.len());
+        let mut serving_heatmaps: Vec<Vec<f32>> = Vec::new();
+        for (qi, sim) in sims.iter().enumerate() {
+            let mut per_image = Vec::with_capacity(images.len());
+            for (img, r) in images.iter().zip(&references) {
+                let qr = sim.attribute(
+                    img,
+                    method,
+                    AttrOptions { target: Some(r.pred), ..Default::default() },
+                );
+                per_image.push(score_pair(&qr.relevance, &r.relevance, k));
+                if qi == 0 {
+                    serving_heatmaps.push(qr.relevance);
+                }
+            }
+            fidelity.push(FidelitySummary {
+                q: spec.qformats[qi],
+                mean: mean_scores(&per_image),
+                per_image,
+            });
+        }
+
+        // mean faithfulness curves on the serving format
+        let per_image_curves: Vec<Curves> = images
+            .iter()
+            .zip(&serving_heatmaps)
+            .zip(&references)
+            .map(|((img, heat), r)| faithfulness::curves(serving, img, heat, r.pred, spec.steps))
+            .collect();
+        let n = per_image_curves.len() as f64;
+        let mut deletion = vec![0f64; spec.steps];
+        let mut insertion = vec![0f64; spec.steps];
+        for c in &per_image_curves {
+            for i in 0..spec.steps {
+                deletion[i] += c.deletion[i];
+                insertion[i] += c.insertion[i];
+            }
+        }
+        for v in deletion.iter_mut().chain(insertion.iter_mut()) {
+            *v /= n;
+        }
+        let curves = Curves {
+            fractions: per_image_curves[0].fractions.clone(),
+            deletion,
+            insertion,
+            deletion_auc: per_image_curves.iter().map(|c| c.deletion_auc).sum::<f64>() / n,
+            insertion_auc: per_image_curves.iter().map(|c| c.insertion_auc).sum::<f64>() / n,
+        };
+
+        let sanity = sanity::check(serving, &rand_sim, &img_refs, method);
+        let h0 = &serving_heatmaps[0];
+        let self_check = score_pair(h0, h0, k);
+        let self_check_raw =
+            (crate::util::stats::pearson(h0, h0), crate::util::stats::spearman(h0, h0));
+        methods.push(MethodEval { method, fidelity, curves, sanity, self_check, self_check_raw });
+    }
+
+    Ok(EvalReport {
+        seed: spec.seed,
+        images: spec.images,
+        topk: k,
+        steps: spec.steps,
+        qformats: spec.qformats.clone(),
+        methods,
+    })
+}
+
+// ---------------------------------------------------------------------------
+// Rendering + artifact
+// ---------------------------------------------------------------------------
+
+fn score_json(s: &FidelityScore) -> Json {
+    json::obj(vec![
+        ("pearson", json::num(s.pearson)),
+        ("spearman", json::num(s.spearman)),
+        ("topk", json::num(s.topk)),
+        ("snr_db", json::num(s.snr_db)),
+    ])
+}
+
+impl EvalReport {
+    /// Did every method's identity self-check score exact fidelity —
+    /// both through `score_pair`'s equality shortcut AND through the
+    /// raw correlation arithmetic — and its sanity check report
+    /// decorrelation? (The `--smoke` acceptance gate.)
+    pub fn all_checks_pass(&self) -> bool {
+        self.methods.iter().all(|m| {
+            m.self_check.pearson == 1.0
+                && m.self_check.spearman == 1.0
+                && m.self_check.topk == 1.0
+                && (m.self_check_raw.0 - 1.0).abs() < 1e-9
+                && (m.self_check_raw.1 - 1.0).abs() < 1e-9
+                && m.sanity.pass
+        })
+    }
+
+    /// The `BENCH_xeval.json` payload (deterministic: method order is
+    /// `ALL_METHODS`, objects are `BTreeMap`-keyed, no timestamps).
+    pub fn to_json(&self) -> Json {
+        let methods = self
+            .methods
+            .iter()
+            .map(|m| {
+                let fid = m
+                    .fidelity
+                    .iter()
+                    .map(|f| {
+                        let per: Vec<Json> = f.per_image.iter().map(score_json).collect();
+                        let mut o = score_json(&f.mean);
+                        if let Json::Obj(map) = &mut o {
+                            map.insert("per_image".into(), json::arr(per));
+                        }
+                        (qname(f.q), o)
+                    })
+                    .collect::<Vec<_>>();
+                let fid_obj = Json::Obj(fid.into_iter().collect());
+                let curve_arr =
+                    |xs: &[f64]| json::arr(xs.iter().map(|&v| json::num(v)).collect());
+                (
+                    m.method.name(),
+                    json::obj(vec![
+                        ("fidelity", fid_obj),
+                        (
+                            "faithfulness",
+                            json::obj(vec![
+                                ("fractions", curve_arr(&m.curves.fractions)),
+                                ("deletion", curve_arr(&m.curves.deletion)),
+                                ("insertion", curve_arr(&m.curves.insertion)),
+                                ("deletion_auc", json::num(m.curves.deletion_auc)),
+                                ("insertion_auc", json::num(m.curves.insertion_auc)),
+                            ]),
+                        ),
+                        (
+                            "sanity",
+                            json::obj(vec![
+                                ("mean_abs_pearson", json::num(m.sanity.mean_abs_pearson)),
+                                ("mean_abs_spearman", json::num(m.sanity.mean_abs_spearman)),
+                                ("threshold", json::num(SANITY_RHO_MAX)),
+                                ("pass", Json::Bool(m.sanity.pass)),
+                            ]),
+                        ),
+                        ("self_check", {
+                            let mut o = score_json(&m.self_check);
+                            if let Json::Obj(map) = &mut o {
+                                map.insert(
+                                    "raw_pearson".into(),
+                                    json::num(m.self_check_raw.0),
+                                );
+                                map.insert(
+                                    "raw_spearman".into(),
+                                    json::num(m.self_check_raw.1),
+                                );
+                            }
+                            o
+                        }),
+                    ]),
+                )
+            })
+            .collect();
+        json::obj(vec![
+            ("bench", json::s("xeval")),
+            ("schema", json::s(XEVAL_SCHEMA)),
+            // decimal string: u64 seeds above 2^53 don't survive f64
+            ("seed", json::s(&self.seed.to_string())),
+            ("images", json::num(self.images as f64)),
+            ("topk", json::num(self.topk as f64)),
+            ("steps", json::num(self.steps as f64)),
+            (
+                "qformats",
+                json::arr(self.qformats.iter().map(|&q| json::s(&qname(q))).collect()),
+            ),
+            ("methods", json::obj(methods)),
+        ])
+    }
+
+    /// Human summary table.
+    pub fn render(&self) -> String {
+        let mut out = format!(
+            "{:<11} {:<7} {:>8} {:>9} {:>6} {:>8}   {:>8} {:>8}   {:>7}\n",
+            "method", "format", "pearson", "spearman", "top-k", "SNR(dB)", "del-AUC",
+            "ins-AUC", "sanity"
+        );
+        for m in &self.methods {
+            for (i, f) in m.fidelity.iter().enumerate() {
+                let (del, ins, sane) = if i == 0 {
+                    (
+                        format!("{:>8.3}", m.curves.deletion_auc),
+                        format!("{:>8.3}", m.curves.insertion_auc),
+                        format!(
+                            "{:>7}",
+                            if m.sanity.pass { "pass" } else { "FAIL" }
+                        ),
+                    )
+                } else {
+                    (format!("{:>8}", "-"), format!("{:>8}", "-"), format!("{:>7}", "-"))
+                };
+                out.push_str(&format!(
+                    "{:<11} {:<7} {:>8.4} {:>9.4} {:>6.3} {:>8.1}   {del} {ins}   {sane}\n",
+                    if i == 0 { m.method.name() } else { "" },
+                    qname(f.q),
+                    f.mean.pearson,
+                    f.mean.spearman,
+                    f.mean.topk,
+                    f.mean.snr_db,
+                ));
+            }
+            out.push_str(&format!(
+                "{:<11} sanity |ρ|: pearson {:.4} spearman {:.4} (threshold {SANITY_RHO_MAX})\n",
+                "", m.sanity.mean_abs_pearson, m.sanity.mean_abs_spearman
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sched::tests_support::tiny_net_params;
+
+    fn tiny_spec() -> EvalSpec {
+        EvalSpec {
+            qformats: vec![QFormat::paper16(), QFormat::new(16, 2)],
+            images: 2,
+            seed: 9,
+            topk_frac: 0.1,
+            steps: 4,
+        }
+    }
+
+    #[test]
+    fn run_is_deterministic_and_self_checked() {
+        let (net, params) = tiny_net_params(71);
+        let spec = tiny_spec();
+        let a = run_eval(&net, &params, &spec).unwrap();
+        let b = run_eval(&net, &params, &spec).unwrap();
+        assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+        assert_eq!(a.methods.len(), 3);
+        for m in &a.methods {
+            // the identity comparison is exact by contract, and the
+            // raw arithmetic pass (no equality shortcut) lands within
+            // round-off of it
+            assert_eq!(m.self_check.pearson, 1.0, "{}", m.method);
+            assert_eq!(m.self_check.spearman, 1.0, "{}", m.method);
+            assert_eq!(m.self_check.topk, 1.0, "{}", m.method);
+            assert!((m.self_check_raw.0 - 1.0).abs() < 1e-9, "{}", m.method);
+            assert!((m.self_check_raw.1 - 1.0).abs() < 1e-9, "{}", m.method);
+            assert_eq!(m.fidelity.len(), 2);
+            for f in &m.fidelity {
+                assert_eq!(f.per_image.len(), 2);
+                assert!(f.mean.pearson.is_finite());
+            }
+            assert!(m.curves.deletion_auc.is_finite());
+        }
+        // the artifact parses back and carries the schema tag
+        let j = Json::parse(&a.to_json().to_string()).unwrap();
+        assert_eq!(j.get("schema").and_then(Json::as_str), Some(XEVAL_SCHEMA));
+        assert_eq!(j.get("bench").and_then(Json::as_str), Some("xeval"));
+        assert!(j.path(&["methods", "guided", "sanity", "pass"]).is_some());
+    }
+
+    #[test]
+    fn paper_format_beats_q16_2_on_fidelity() {
+        // Q16.2 keeps two fraction bits — heatmap resolution 0.25 —
+        // while Q16.9 resolves 1/512: the paper format must track the
+        // oracle strictly better on every method's mean Pearson
+        let (net, params) = tiny_net_params(73);
+        let r = run_eval(&net, &params, &tiny_spec()).unwrap();
+        for m in &r.methods {
+            let hi = &m.fidelity[0].mean;
+            let lo = &m.fidelity[1].mean;
+            assert!(
+                hi.pearson > lo.pearson,
+                "{}: Q16.9 ρ={} vs Q16.2 ρ={}",
+                m.method,
+                hi.pearson,
+                lo.pearson
+            );
+            assert!(hi.pearson > 0.8, "{}: paper-format fidelity only {}", m.method, hi.pearson);
+            assert!(hi.snr_db > lo.snr_db, "{}", m.method);
+        }
+    }
+
+    #[test]
+    fn spec_validation_rejects_nonsense() {
+        let (net, params) = tiny_net_params(75);
+        let mut s = tiny_spec();
+        s.qformats.clear();
+        assert!(run_eval(&net, &params, &s).is_err());
+        let mut s = tiny_spec();
+        s.qformats.push(QFormat::paper16());
+        assert!(run_eval(&net, &params, &s).is_err(), "duplicate format");
+        let mut s = tiny_spec();
+        s.images = 0;
+        assert!(run_eval(&net, &params, &s).is_err());
+        let mut s = tiny_spec();
+        s.steps = 1;
+        assert!(run_eval(&net, &params, &s).is_err());
+        let mut s = tiny_spec();
+        s.topk_frac = 0.0;
+        assert!(run_eval(&net, &params, &s).is_err());
+    }
+}

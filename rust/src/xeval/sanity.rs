@@ -1,0 +1,143 @@
+//! Parameter-randomization sanity check (the Adebayo-style guard): an
+//! attribution that is genuinely *gradient-dependent* must decorrelate
+//! when the model's weights are destroyed. If reshuffling every
+//! parameter tensor leaves the heatmap looking the same, the dataflow
+//! is echoing the input (an edge detector), not explaining the model.
+//!
+//! The randomization is a seeded Fisher-Yates **reshuffle** of each
+//! tensor's values — the weight *distribution* is preserved exactly
+//! (same values, new positions), so activations keep their scale and
+//! the comparison isolates structure, not magnitude.
+
+use crate::attribution::Method;
+use crate::model::Params;
+use crate::sched::{AttrOptions, Simulator};
+use crate::util::rng::Pcg32;
+use crate::util::stats::{pearson, spearman};
+
+/// Documented decorrelation threshold: the check passes when the mean
+/// |Pearson| and mean |Spearman| between original and
+/// randomized-weight heatmaps both fall below this. Independent
+/// heatmaps of dimension d correlate at O(1/√d) (≈0.02 for the
+/// Table-III input), so 0.5 leaves a wide margin while still failing
+/// any dataflow that substantially survives weight destruction.
+pub const SANITY_RHO_MAX: f64 = 0.5;
+
+/// Outcome of the randomization check for one method.
+#[derive(Clone, Copy, Debug)]
+pub struct SanityOutcome {
+    pub mean_abs_pearson: f64,
+    pub mean_abs_spearman: f64,
+    pub pass: bool,
+}
+
+/// Independently reshuffle every parameter tensor (deterministic for a
+/// fixed seed; tensors are visited in `BTreeMap` name order, so the
+/// result is independent of how the store was built).
+pub fn shuffle_params(params: &Params, seed: u64) -> Params {
+    let mut rng = Pcg32::seeded(seed);
+    let mut out = params.clone();
+    for tensor in out.tensors.values_mut() {
+        rng.shuffle(&mut tensor.data);
+    }
+    out
+}
+
+/// Run the check: attribute `images` on the true-weight simulator and
+/// on the reshuffled-weight twin (both from each image's own argmax —
+/// the two models legitimately disagree on the prediction), and
+/// compare the heatmaps.
+pub fn check(
+    sim: &Simulator,
+    randomized: &Simulator,
+    images: &[&[f32]],
+    method: Method,
+) -> SanityOutcome {
+    assert!(!images.is_empty(), "sanity check needs at least one image");
+    let (mut sum_p, mut sum_s) = (0f64, 0f64);
+    for img in images {
+        let a = sim.attribute(img, method, AttrOptions::default());
+        let b = randomized.attribute(img, method, AttrOptions::default());
+        // degenerate heatmaps (e.g. all-zero after randomization) hit
+        // the pearson/spearman constant-input contract: 0.0 against a
+        // varying heatmap — i.e. they count as decorrelated, never NaN
+        sum_p += pearson(&a.relevance, &b.relevance).abs();
+        sum_s += spearman(&a.relevance, &b.relevance).abs();
+    }
+    let n = images.len() as f64;
+    let (mean_abs_pearson, mean_abs_spearman) = (sum_p / n, sum_s / n);
+    SanityOutcome {
+        mean_abs_pearson,
+        mean_abs_spearman,
+        pass: mean_abs_pearson < SANITY_RHO_MAX && mean_abs_spearman < SANITY_RHO_MAX,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::HwConfig;
+    use crate::sched::tests_support::tiny_net_params;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn shuffle_is_a_seeded_permutation() {
+        let (_, params) = tiny_net_params(61);
+        let a = shuffle_params(&params, 9);
+        let b = shuffle_params(&params, 9);
+        let c = shuffle_params(&params, 10);
+        let mut any_moved = false;
+        for (name, t) in &params.tensors {
+            let (ta, tb, tc) = (&a.tensors[name], &b.tensors[name], &c.tensors[name]);
+            // multiset preserved: same values, possibly new order
+            let mut orig = t.data.clone();
+            let mut shuf = ta.data.clone();
+            orig.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            shuf.sort_by(|x, y| x.partial_cmp(y).unwrap());
+            assert_eq!(orig, shuf, "{name}: shuffle changed the value multiset");
+            assert_eq!(ta.shape, t.shape);
+            assert_eq!(ta.data, tb.data, "{name}: same seed, different shuffle");
+            if ta.data != t.data || ta.data != tc.data {
+                any_moved = true;
+            }
+        }
+        assert!(any_moved, "shuffles changed nothing at all");
+    }
+
+    #[test]
+    fn identity_twin_fails_the_check() {
+        // negative control: "randomizing" with the original weights
+        // correlates perfectly, so the check must NOT pass — the test
+        // that the metric can actually detect a sanity violation
+        let (net, params) = tiny_net_params(63);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let n_in = sim.net.input.elems();
+        let mut rng = Pcg32::seeded(64);
+        let imgs: Vec<Vec<f32>> = (0..2).map(|_| (0..n_in).map(|_| rng.f32()).collect()).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let out = check(&sim, &sim, &refs, Method::Guided);
+        assert!(out.mean_abs_pearson > 0.999_999, "{}", out.mean_abs_pearson);
+        assert!(out.mean_abs_spearman > 0.999_999, "{}", out.mean_abs_spearman);
+        assert!(!out.pass);
+    }
+
+    #[test]
+    fn check_is_deterministic() {
+        let (net, params) = tiny_net_params(65);
+        let rand_params = shuffle_params(&params, 66);
+        let sim = Simulator::new(net.clone(), &params, HwConfig::pynq_z2()).unwrap();
+        let rand_sim = Simulator::new(net, &rand_params, HwConfig::pynq_z2()).unwrap();
+        let n_in = sim.net.input.elems();
+        let mut rng = Pcg32::seeded(67);
+        let imgs: Vec<Vec<f32>> = (0..2).map(|_| (0..n_in).map(|_| rng.f32()).collect()).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        for method in crate::attribution::ALL_METHODS {
+            let a = check(&sim, &rand_sim, &refs, method);
+            let b = check(&sim, &rand_sim, &refs, method);
+            assert_eq!(a.mean_abs_pearson, b.mean_abs_pearson);
+            assert_eq!(a.mean_abs_spearman, b.mean_abs_spearman);
+            assert!(a.mean_abs_pearson.is_finite() && a.mean_abs_spearman.is_finite());
+            assert!(a.mean_abs_pearson >= 0.0 && a.mean_abs_pearson <= 1.0);
+        }
+    }
+}

@@ -20,6 +20,7 @@ fn smoke_spec(seed: u64) -> TuneSpec {
         budget: 32,
         beam: 4,
         threads: 2,
+        quality: false,
     }
 }
 
@@ -105,6 +106,82 @@ fn tuned_config_is_bit_exact_with_default_heatmaps() {
 }
 
 #[test]
+fn quality_tuner_dominates_the_format_a_blind_tuner_accepts() {
+    // ISSUE-5 acceptance: on the smoke_quality space the Q16.2 twins
+    // cost exactly the same cycles/BRAM/DSP as their Q16.9 siblings —
+    // a quality-blind tuner cannot tell them apart and (by the config
+    // tie-break, which orders frac_bits ascending) actually KEEPS the
+    // garbage format on its frontier. With --quality the sibling
+    // dominates it (worse fidelity, no latency/resource win) and every
+    // frontier survivor carries the faithful format.
+    let (net, params) = tiny_net_params(33);
+    let blind_spec = TuneSpec {
+        space: Space::smoke_quality(),
+        boards: vec![Board::PynqZ2, Board::Zcu104],
+        method: Method::Guided,
+        seed: 13,
+        budget: 32,
+        beam: 4,
+        threads: 2,
+        quality: false,
+    };
+    let quality_spec = TuneSpec { quality: true, ..blind_spec.clone() };
+    let q16_2 = attrax::fx::QFormat::new(16, 2);
+    let blind = dse::tune(&net, &params, &blind_spec).unwrap();
+    let qual = dse::tune(&net, &params, &quality_spec).unwrap();
+    // the blind tuner accepted low-fidelity design points somewhere
+    let blind_accepts = blind
+        .outcomes
+        .iter()
+        .flat_map(|o| o.frontier.entries())
+        .filter(|p| p.cfg.q == q16_2)
+        .count();
+    assert!(blind_accepts > 0, "blind frontier never picked the low-fidelity format");
+    for (b, q) in blind.outcomes.iter().zip(&qual.outcomes) {
+        // the quality tuner demonstrably dominates them all: its
+        // frontier is pure Q16.9, and for every blind Q16.2 entry the
+        // same-knob Q16.9 sibling sits on the quality frontier with
+        // identical cycles and resources but strictly better fidelity
+        for p in q.frontier.entries() {
+            assert_eq!(
+                p.cfg.q,
+                attrax::fx::QFormat::paper16(),
+                "{}: low-fidelity format survived the quality frontier",
+                q.board
+            );
+        }
+        for bp in b.frontier.entries().iter().filter(|p| p.cfg.q == q16_2) {
+            let mut sibling = bp.cfg;
+            sibling.q = attrax::fx::QFormat::paper16();
+            let twin = q
+                .frontier
+                .entries()
+                .into_iter()
+                .find(|p| p.cfg == sibling)
+                .unwrap_or_else(|| panic!("{}: faithful sibling missing", q.board))
+                .clone();
+            assert_eq!(twin.cycles(), bp.cycles(), "same cycle model");
+            assert_eq!(twin.util, bp.util, "same resource build");
+            assert!(twin.infidelity_ppm < 500_000, "sibling should track the oracle");
+        }
+        // winner runs the faithful format and never lost latency
+        assert_eq!(q.best.cfg.q, attrax::fx::QFormat::paper16());
+        assert_eq!(q.best.cycles(), b.best.cycles(), "quality never costs latency here");
+    }
+    // determinism holds with the quality objective on: rerun and
+    // thread-count invariance, byte for byte
+    let rerun = dse::tune(&net, &params, &quality_spec).unwrap();
+    assert_eq!(
+        qual.to_json(&quality_spec).to_string(),
+        rerun.to_json(&quality_spec).to_string()
+    );
+    let mut spec_mt = quality_spec.clone();
+    spec_mt.threads = 4;
+    let mt = dse::tune(&net, &params, &spec_mt).unwrap();
+    assert_eq!(qual.to_json(&quality_spec).to_string(), mt.to_json(&spec_mt).to_string());
+}
+
+#[test]
 fn large_space_beam_search_is_deterministic_and_budgeted() {
     let (net, params) = tiny_net_params(29);
     let spec = TuneSpec {
@@ -115,6 +192,7 @@ fn large_space_beam_search_is_deterministic_and_budgeted() {
         budget: 20,
         beam: 4,
         threads: 3,
+        quality: false,
     };
     let a = dse::tune(&net, &params, &spec).unwrap();
     for o in &a.outcomes {

@@ -466,6 +466,7 @@ fn prop_dse_emissions_legal_feasible_bit_exact() {
                 budget: 32,
                 beam: 4,
                 threads: 1 + rng.below(3) as usize,
+                quality: false,
             };
             let report = dse::tune(&net, &params, &spec).map_err(|e| e.to_string())?;
             let rerun = dse::tune(&net, &params, &spec).map_err(|e| e.to_string())?;
@@ -495,6 +496,99 @@ fn prop_dse_emissions_legal_feasible_bit_exact() {
                 }
                 if d.logits != t.logits || d.pred != t.pred || d.relevance != t.relevance {
                     return Err(format!("{}: tuned config not bit-exact with default", o.board));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// P14 (ISSUE-5): the xeval metrics are trustworthy measurements —
+/// for random tiny models, methods and seeds: (a) fidelity scores and
+/// faithfulness curves computed from 1/2/4-shard heatmaps are
+/// bit-identical (the metrics inherit P12's concurrency determinism);
+/// (b) rank-based metrics (Spearman, top-k, curve ordering) are
+/// invariant under positive scaling of either heatmap; (c) the
+/// identity comparison scores exact perfect fidelity.
+#[test]
+fn prop_xeval_metrics_deterministic_scale_invariant_identity_exact() {
+    use attrax::xeval::{self, faithfulness, fidelity};
+    run_prop(
+        PropConfig { cases: 8, ..Default::default() },
+        scenario,
+        |s| {
+            let mut rng = Pcg32::seeded(s.seed);
+            let (net, params) = random_model(&mut rng);
+            let n_in = net.input.elems();
+            let sim = Simulator::new(net.clone(), &params, s.cfg).map_err(|e| e.to_string())?;
+            let oracle = xeval::Oracle::new(&net, &params).map_err(|e| e.to_string())?;
+            let method = ALL_METHODS[rng.below(3) as usize];
+            let img: Vec<f32> = (0..n_in).map(|_| rng.f32()).collect();
+            let reference = oracle.attribute(&img, method, None);
+            let k = (n_in / 10).max(1);
+
+            // (a) shard-count invariance of the metrics
+            let refs = [img.as_slice()];
+            let mut base: Option<(Vec<f32>, f64, f64, Vec<f64>)> = None;
+            for shards in [1usize, 2, 4] {
+                let mut ws = Workspace::with_shards(shards);
+                let mut out = BatchOutput::new();
+                sim.attribute_batch_into(
+                    &mut ws,
+                    &refs,
+                    method,
+                    AttrOptions { target: Some(reference.pred), ..Default::default() },
+                    false,
+                    &mut out,
+                );
+                let heat = out.relevance_of(0).to_vec();
+                let score = fidelity::score_pair(&heat, &reference.relevance, k);
+                let curves = faithfulness::curves(&sim, &img, &heat, reference.pred, 4);
+                match &base {
+                    None => {
+                        base = Some((heat, score.pearson, score.topk, curves.deletion.clone()))
+                    }
+                    Some((h0, p0, t0, d0)) => {
+                        if &heat != h0 {
+                            return Err(format!("shards {shards}: heatmap diverged"));
+                        }
+                        if score.pearson != *p0 || score.topk != *t0 {
+                            return Err(format!("shards {shards}: fidelity diverged"));
+                        }
+                        if &curves.deletion != d0 {
+                            return Err(format!("shards {shards}: deletion curve diverged"));
+                        }
+                    }
+                }
+            }
+            let (heat, _, _, _) = base.unwrap();
+
+            // (b) positive scaling never moves a rank metric: scale by
+            // a power of two so the f32 ordering is exactly preserved
+            let scaled: Vec<f32> = heat.iter().map(|v| v * 4.0).collect();
+            let a = fidelity::score_pair(&heat, &reference.relevance, k);
+            let b = fidelity::score_pair(&scaled, &reference.relevance, k);
+            if a.spearman != b.spearman || a.topk != b.topk {
+                return Err("rank metrics moved under positive scaling".into());
+            }
+            let ca = faithfulness::curves(&sim, &img, &heat, reference.pred, 4);
+            let cb = faithfulness::curves(&sim, &img, &scaled, reference.pred, 4);
+            if ca.deletion != cb.deletion || ca.insertion != cb.insertion {
+                return Err("curves moved under positive scaling".into());
+            }
+
+            // (c) identity is exact, for both the quantized heatmap and
+            // the oracle reference against themselves
+            for h in [&heat, &reference.relevance] {
+                let s = fidelity::score_pair(h, h, k);
+                if s.pearson != 1.0 || s.spearman != 1.0 || s.topk != 1.0 {
+                    return Err(format!(
+                        "identity not exact: rho={} spearman={} topk={}",
+                        s.pearson, s.spearman, s.topk
+                    ));
+                }
+                if fidelity::infidelity_ppm(h, h) != 0 {
+                    return Err("identity infidelity not zero".into());
                 }
             }
             Ok(())

@@ -1,0 +1,129 @@
+//! End-to-end tests of the xeval subsystem (ISSUE-5): artifact
+//! determinism, the identity/self-check and sanity acceptance gates on
+//! a structured mid-size model, and the fidelity-vs-precision ordering
+//! the whole subsystem exists to measure.
+//!
+//! (The CLI twin of these assertions — `attrax eval --smoke` on the
+//! full Table-III network — runs in release mode from `scripts/ci.sh`;
+//! here a 3×16×16 model keeps the debug-mode suite fast.)
+
+use attrax::fx::QFormat;
+use attrax::model::{Network, NetworkBuilder, Params, Shape};
+use attrax::util::json::Json;
+use attrax::xeval::{self, EvalSpec, XEVAL_SCHEMA};
+
+/// A structured mid-size model: 768 input features — big enough that
+/// two unrelated heatmaps decorrelate far below the sanity threshold
+/// (|ρ| ~ 1/√768 ≈ 0.04), small enough for debug-mode tests.
+fn mid_model(seed: u64) -> (Network, Params) {
+    let net = NetworkBuilder::new(Shape::Chw(3, 16, 16))
+        .conv("c1", 8, 3, 1)
+        .relu()
+        .conv("c2", 8, 3, 1)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("f1", 16)
+        .relu()
+        .fc("f2", 4)
+        .build()
+        .unwrap();
+    let params = Params::synthetic(&net, seed);
+    (net, params)
+}
+
+fn spec() -> EvalSpec {
+    EvalSpec {
+        qformats: vec![QFormat::paper16(), QFormat::new(8, 4), QFormat::new(16, 2)],
+        images: 3,
+        seed: 42,
+        topk_frac: 0.1,
+        steps: 5,
+    }
+}
+
+#[test]
+fn eval_is_deterministic_and_passes_its_own_gates() {
+    let (net, params) = mid_model(81);
+    let a = xeval::run_eval(&net, &params, &spec()).unwrap();
+    let b = xeval::run_eval(&net, &params, &spec()).unwrap();
+    // consecutive runs emit byte-identical artifacts
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+    assert_eq!(a.methods.len(), 3);
+    for m in &a.methods {
+        // ISSUE-5 acceptance: the identity comparison is exact, and
+        // the raw-arithmetic identity pass (which a correlation bug
+        // WOULD break, unlike the shortcut) lands within round-off
+        assert_eq!(m.self_check.pearson, 1.0, "{}", m.method);
+        assert_eq!(m.self_check.spearman, 1.0, "{}", m.method);
+        assert_eq!(m.self_check.topk, 1.0, "{}", m.method);
+        assert!((m.self_check_raw.0 - 1.0).abs() < 1e-9, "{}", m.method);
+        assert!((m.self_check_raw.1 - 1.0).abs() < 1e-9, "{}", m.method);
+        // ISSUE-5 acceptance: reshuffled weights decorrelate the
+        // attribution below the documented threshold, for every method
+        assert!(
+            m.sanity.pass,
+            "{}: sanity |rho| pearson={} spearman={} (threshold {})",
+            m.method,
+            m.sanity.mean_abs_pearson,
+            m.sanity.mean_abs_spearman,
+            xeval::SANITY_RHO_MAX
+        );
+        // curves exist and are finite
+        assert_eq!(m.curves.fractions.len(), 5);
+        assert!(m.curves.deletion_auc.is_finite());
+        assert!(m.curves.insertion_auc.is_finite());
+    }
+    assert!(a.all_checks_pass());
+}
+
+#[test]
+fn fidelity_orders_formats_by_precision() {
+    // the subsystem's raison d'être: Q16.9 tracks the oracle, a
+    // 2-fraction-bit format of the same width cannot
+    let (net, params) = mid_model(83);
+    let r = xeval::run_eval(&net, &params, &spec()).unwrap();
+    for m in &r.methods {
+        let paper = &m.fidelity[0].mean;
+        let coarse = &m.fidelity[2].mean;
+        assert!(
+            paper.pearson > coarse.pearson,
+            "{}: Q16.9 rho={} vs Q16.2 rho={}",
+            m.method,
+            paper.pearson,
+            coarse.pearson
+        );
+        assert!(paper.pearson > 0.8, "{}: paper-format fidelity {}", m.method, paper.pearson);
+        assert!(paper.snr_db > coarse.snr_db, "{}", m.method);
+        assert!(
+            paper.topk >= coarse.topk,
+            "{}: top-k {} vs {}",
+            m.method,
+            paper.topk,
+            coarse.topk
+        );
+    }
+}
+
+#[test]
+fn artifact_carries_the_schema_and_structure() {
+    let (net, params) = mid_model(85);
+    let text = xeval::run_eval(&net, &params, &spec()).unwrap().to_json().to_string();
+    let j = Json::parse(&text).unwrap();
+    assert_eq!(j.get("schema").and_then(Json::as_str), Some(XEVAL_SCHEMA));
+    assert_eq!(j.get("bench").and_then(Json::as_str), Some("xeval"));
+    assert_eq!(j.get("images").and_then(Json::as_usize), Some(3));
+    assert_eq!(j.get("qformats").and_then(Json::as_arr).map(|a| a.len()), Some(3));
+    for method in ["saliency", "deconvnet", "guided"] {
+        for leaf in [
+            ["methods", method, "fidelity", "Q16.9"].as_slice(),
+            ["methods", method, "faithfulness", "deletion_auc"].as_slice(),
+            ["methods", method, "sanity", "pass"].as_slice(),
+            ["methods", method, "self_check", "pearson"].as_slice(),
+        ] {
+            assert!(j.path(leaf).is_some(), "missing {leaf:?}");
+        }
+    }
+    // the raw string carries the grep-able tag ci.sh checks for
+    assert!(text.contains("\"schema\":\"attrax-xeval/v1\""), "schema tag not greppable");
+}

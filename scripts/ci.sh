@@ -43,6 +43,21 @@ grep -q '"bench":"dse"' BENCH_dse_smoke.json
 cargo run --release -q -- serve --config tuned_smoke.json --requests 4 --workers 1 --verify 0
 rm -f tuned_smoke.json BENCH_dse_smoke.json
 
+echo "== xeval gate: eval --smoke + tune --smoke --quality =="
+# Attribution-quality smoke: fully offline on synthetic Table-III
+# weights. The binary exits nonzero unless the identity self-check is
+# exact and the parameter-randomization sanity check passes for all
+# three methods; the artifact must carry the schema tag. Then the
+# quality-objective tuner must still emit an artifact that boots
+# `attrax serve --config`.
+cargo run --release -q -- eval --smoke --out BENCH_xeval_smoke.json
+grep -q '"schema":"attrax-xeval/v1"' BENCH_xeval_smoke.json
+cargo run --release -q -- tune --smoke --quality --out BENCH_dse_q_smoke.json --tuned tuned_q_smoke.json
+grep -q '"schema":"attrax-tuned/v1"' tuned_q_smoke.json
+grep -q '"quality":true' BENCH_dse_q_smoke.json
+cargo run --release -q -- serve --config tuned_q_smoke.json --requests 4 --workers 1 --verify 0
+rm -f BENCH_xeval_smoke.json BENCH_dse_q_smoke.json tuned_q_smoke.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
