@@ -19,9 +19,9 @@ fn main() {
 
     let expect = [896usize, 9248, 18496, 36928, 524416, 1290];
     let got: Vec<usize> = net
-        .layers
+        .schedule()
         .iter()
-        .map(|l| l.param_count())
+        .map(|&i| net.node(i).layer.param_count())
         .filter(|&c| c > 0)
         .collect();
     println!(

@@ -61,9 +61,9 @@ impl MaskBudget {
 /// (4 indices per byte) rather than a byte per index.
 pub fn pool_mask_bytes(net: &Network) -> usize {
     let mut bytes = 0;
-    for (i, layer) in net.layers.iter().enumerate() {
-        if matches!(layer, Layer::MaxPool2) {
-            bytes += net.shapes[i + 1].elems().div_ceil(4);
+    for (i, node) in net.nodes().iter().enumerate() {
+        if matches!(node.layer, Layer::MaxPool2) {
+            bytes += net.out_shape(i).elems().div_ceil(4);
         }
     }
     bytes
@@ -72,22 +72,22 @@ pub fn pool_mask_bytes(net: &Network) -> usize {
 /// Walk the graph and classify every mask the BP phase could need.
 pub fn mask_budget(net: &Network) -> MaskBudget {
     let mut b = MaskBudget { conv_relu_bits: 0, fc_relu_bits: 0, pool_bits: 0 };
-    for (i, layer) in net.layers.iter().enumerate() {
-        match layer {
+    for (i, node) in net.nodes().iter().enumerate() {
+        match node.layer {
             Layer::Relu => {
-                let elems = net.shapes[i].elems();
-                // A ReLU following a conv (CHW shape) is recoverable from
+                // A ReLU on a feature map (CHW shape) is recoverable from
                 // DRAM; a ReLU on a flat vector (after FC) is stored.
-                match net.shapes[i] {
-                    Shape::Chw(..) => b.conv_relu_bits += elems,
-                    Shape::Flat(..) => b.fc_relu_bits += elems,
+                // (ReLU preserves shape, so the output shape classifies.)
+                match net.out_shape(i) {
+                    Shape::Chw(..) => b.conv_relu_bits += net.out_shape(i).elems(),
+                    Shape::Flat(..) => b.fc_relu_bits += net.out_shape(i).elems(),
                 }
             }
             Layer::MaxPool2 => {
                 // 2 bits per pooled OUTPUT element (paper §III-D: "size of
                 // the entire index mask is same as the dimension of the
                 // output feature map")
-                b.pool_bits += 2 * net.shapes[i + 1].elems();
+                b.pool_bits += 2 * net.out_shape(i).elems();
             }
             _ => {}
         }
@@ -96,17 +96,22 @@ pub fn mask_budget(net: &Network) -> MaskBudget {
 }
 
 /// §V framework comparison: every intermediate activation cached.
-/// Frameworks cache each *distinct* tensor once: conv/FC/pool outputs
-/// (ReLU is recomputable from its output and fused in practice; flatten
-/// is a view). The final logits are not an intermediate.
+/// Frameworks cache each *distinct* tensor once: conv/FC/pool/add
+/// outputs (ReLU is recomputable from its output and fused in
+/// practice; flatten is a view). The output node's logits are not an
+/// intermediate.
 pub fn autodiff_cache_bits(net: &Network, precision_bits: usize) -> usize {
-    let n_layers = net.layers.len();
-    net.layers
+    let out = net.output_node();
+    net.schedule()
         .iter()
-        .enumerate()
-        .take(n_layers - 1) // last layer's output is the result, not cached
-        .filter(|(_, l)| matches!(l, Layer::Conv { .. } | Layer::Fc { .. } | Layer::MaxPool2))
-        .map(|(i, _)| net.shapes[i + 1].elems())
+        .filter(|&&i| i != out) // the output node's result is not cached
+        .filter(|&&i| {
+            matches!(
+                net.node(i).layer,
+                Layer::Conv { .. } | Layer::Fc { .. } | Layer::MaxPool2 | Layer::Add
+            )
+        })
+        .map(|&i| net.out_shape(i).elems())
         .sum::<usize>()
         * precision_bits
 }
@@ -183,6 +188,26 @@ mod tests {
         let fp = sim.forward(&img);
         assert_eq!(fp.state.pool_mask_bytes(), pool_mask_bytes(&sim.net));
         assert!(fp.state.pool_mask_bytes() > 0);
+    }
+
+    #[test]
+    fn residual_graph_budget_counts_add_and_fork() {
+        let net = Network::from_graph_str(include_str!(
+            "../../../examples/graphs/residual16.graph.json"
+        ))
+        .unwrap();
+        let b = mask_budget(&net);
+        // one pool over [8,8,8]: 512 outputs * 2b
+        assert_eq!(b.pool_bits, 2 * 512);
+        // stem_r, b1_r, res_r each mask an [8,16,16] map
+        assert_eq!(b.conv_relu_bits, 3 * 8 * 16 * 16);
+        assert_eq!(b.fc_relu_bits, 32);
+        // cached tensors: stem, b1, res (the add output is a distinct
+        // tensor), pool, fc1 — not the fc2 logits
+        assert_eq!(
+            autodiff_cache_bits(&net, 32),
+            (2048 + 2048 + 2048 + 512 + 32) * 32
+        );
     }
 
     #[test]

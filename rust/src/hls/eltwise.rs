@@ -1,0 +1,147 @@
+//! Elementwise add unit (the residual/skip join). Forward streams two
+//! same-length DRAM tensors through the ALU lanes as a Q-format
+//! *saturating* add (optionally fusing the following ReLU into the
+//! output store, like conv/VMM do). Backward reuses the same datapath
+//! as [`accumulate`]: at a fan-out fork the BP pass must *sum* the
+//! gradients arriving from each consumer, and that sum is this engine
+//! run in accumulate mode over the partial-gradient slab.
+
+use super::{dram, Cost, HwConfig};
+
+/// `out[i] = sat(a[i] + b[i])`, ReLU-clamped when `relu` is set.
+///
+/// Allocate-and-call wrapper over [`forward_into`].
+pub fn forward(cfg: &HwConfig, cost: &mut Cost, a: &[i32], b: &[i32], relu: bool) -> Vec<i32> {
+    let mut out = Vec::new();
+    forward_into(cfg, cost, a, b, relu, &mut out);
+    out
+}
+
+/// The elementwise-add forward core, writing into a caller slab (the
+/// workspace-driven path). Both operands stream from DRAM, one sum per
+/// ALU lane per cycle, result streams back.
+pub fn forward_into(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    a: &[i32],
+    b: &[i32],
+    relu: bool,
+    out: &mut Vec<i32>,
+) {
+    out.clear();
+    out.resize(a.len(), 0);
+    forward_slice(cfg, cost, a, b, relu, out);
+}
+
+/// Slice-level core of [`forward_into`] for callers that own the output
+/// slab (the workspace-driven batch path writes per-image sub-slices).
+pub fn forward_slice(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    a: &[i32],
+    b: &[i32],
+    relu: bool,
+    out: &mut [i32],
+) {
+    assert_eq!(a.len(), b.len(), "eltwise add operand length mismatch");
+    assert_eq!(out.len(), a.len(), "eltwise add output length mismatch");
+    let n = a.len();
+    dram::read_contig(cfg, cost, n as u64);
+    dram::read_contig(cfg, cost, n as u64);
+    for i in 0..n {
+        let s = cfg.q.saturate(a[i] as i64 + b[i] as i64);
+        out[i] = if relu { s.max(0) } else { s };
+    }
+    let lanes = cfg.conv_macs_parallel() as u64;
+    cost.compute_cycles += (n as u64).div_ceil(lanes) + cfg.pipeline_depth;
+    dram::write_contig(cfg, cost, n as u64);
+}
+
+/// `into[i] = sat(into[i] + g[i])` — gradient accumulation at a fan-out
+/// fork point during BP. Same streaming cost shape as the forward add:
+/// two operand reads, one write.
+pub fn accumulate(cfg: &HwConfig, cost: &mut Cost, g: &[i32], into: &mut [i32]) {
+    assert_eq!(g.len(), into.len(), "eltwise accumulate length mismatch");
+    let n = g.len();
+    dram::read_contig(cfg, cost, n as u64);
+    dram::read_contig(cfg, cost, n as u64);
+    for i in 0..n {
+        into[i] = cfg.q.saturate(into[i] as i64 + g[i] as i64);
+    }
+    let lanes = cfg.conv_macs_parallel() as u64;
+    cost.compute_cycles += (n as u64).div_ceil(lanes) + cfg.pipeline_depth;
+    dram::write_contig(cfg, cost, n as u64);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fx::QFormat;
+
+    fn q(vals: &[f32]) -> Vec<i32> {
+        let f = QFormat::paper16();
+        vals.iter().map(|&v| f.from_f32(v)).collect()
+    }
+
+    #[test]
+    fn add_is_elementwise_and_exact() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let a = q(&[1.0, -2.0, 0.5, 0.0]);
+        let b = q(&[0.25, 1.0, -0.5, -3.0]);
+        let out = forward(&cfg, &mut c, &a, &b, false);
+        assert_eq!(out, q(&[1.25, -1.0, 0.0, -3.0]));
+    }
+
+    #[test]
+    fn fused_relu_clamps_negatives() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let a = q(&[1.0, -2.0]);
+        let b = q(&[0.5, 1.0]);
+        let out = forward(&cfg, &mut c, &a, &b, true);
+        assert_eq!(out, vec![q(&[1.5])[0], 0]);
+    }
+
+    #[test]
+    fn add_saturates_at_word_limits() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let max = (1i32 << (cfg.q.word_bits - 1)) - 1;
+        let min = -(1i32 << (cfg.q.word_bits - 1));
+        assert_eq!(forward(&cfg, &mut c, &[max], &[max], false), vec![max]);
+        assert_eq!(forward(&cfg, &mut c, &[min], &[min], false), vec![min]);
+    }
+
+    #[test]
+    fn accumulate_matches_forward_sum() {
+        let cfg = HwConfig::pynq_z2();
+        let mut c = Cost::new();
+        let g = q(&[0.5, -1.0, 2.0]);
+        let mut into = q(&[1.0, 1.0, -0.5]);
+        accumulate(&cfg, &mut c, &g, &mut into);
+        assert_eq!(into, q(&[1.5, 0.0, 1.5]));
+    }
+
+    #[test]
+    fn cost_accounts_two_reads_one_write() {
+        let cfg = HwConfig::pynq_z2();
+        let n = 1024usize;
+        let a = vec![1i32; n];
+        let b = vec![2i32; n];
+        let mut c = Cost::new();
+        forward(&cfg, &mut c, &a, &b, false);
+        let wb = cfg.word_bytes() as u64;
+        assert_eq!(c.dram_read_bytes, 2 * n as u64 * wb);
+        assert_eq!(c.dram_write_bytes, n as u64 * wb);
+        let lanes = cfg.conv_macs_parallel() as u64;
+        assert_eq!(c.compute_cycles, (n as u64).div_ceil(lanes) + cfg.pipeline_depth);
+        // accumulate charges the same streaming shape
+        let mut c2 = Cost::new();
+        let mut into = b.clone();
+        accumulate(&cfg, &mut c2, &a, &mut into);
+        assert_eq!(c2.dram_read_bytes, c.dram_read_bytes);
+        assert_eq!(c2.dram_write_bytes, c.dram_write_bytes);
+        assert_eq!(c2.compute_cycles, c.compute_cycles);
+    }
+}

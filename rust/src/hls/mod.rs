@@ -12,6 +12,7 @@
 
 pub mod conv;
 pub mod dram;
+pub mod eltwise;
 pub mod pool;
 pub mod relu;
 pub mod vmm;

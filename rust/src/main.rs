@@ -10,6 +10,7 @@
 //!              tuned-config artifact per board (--quality adds the
 //!              xeval fidelity objective)
 //!   eval       attribution-quality evaluation: emit BENCH_xeval.json
+//!   model      load + validate graph-IR model manifests (--dry-run)
 //!   sweep      Table IV: resources + latency across the three boards
 //!   masks      Table II / §V mask-memory accounting
 
@@ -35,6 +36,7 @@ const SUBCOMMANDS: &[(&str, fn(Vec<String>) -> i32)] = &[
     ("loadgen", cmd_loadgen),
     ("tune", cmd_tune),
     ("eval", cmd_eval),
+    ("model", cmd_model),
     ("sweep", cmd_sweep),
     ("masks", cmd_masks),
     ("report", cmd_report),
@@ -74,6 +76,8 @@ fn usage() -> String {
      \x20             (--quality adds the xeval fidelity objective)\n\
      \x20 eval        attribution quality: fidelity vs the exact oracle,\n\
      \x20             deletion/insertion faithfulness, sanity checks (BENCH_xeval.json)\n\
+     \x20 model       load + validate graph-IR manifests (--dry-run for CI gates);\n\
+     \x20             serve/eval take --model <manifest> to run a custom graph\n\
      \x20 sweep       per-board resources + latency (paper Table IV)\n\
      \x20 masks       mask memory accounting (paper Table II / §V)\n\
      \x20 report      Vitis-style synthesis report for a design point\n\
@@ -111,6 +115,28 @@ fn method_of(args: &attrax::util::cli::Args) -> Method {
         eprintln!("unknown method {name:?} (saliency | deconvnet | guided)");
         std::process::exit(2);
     })
+}
+
+/// `--model <manifest>`: load a graph-IR network from a manifest file.
+/// `None` when the option is absent/empty (caller falls back to the
+/// built-in Table III). Exits with a usage error on a bad file so the
+/// message names the offending path.
+fn model_of(args: &attrax::util::cli::Args) -> Option<Network> {
+    let path = args.get("model").filter(|s| !s.is_empty())?;
+    let text = match std::fs::read_to_string(path) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("error: {path}: {e}");
+            std::process::exit(2);
+        }
+    };
+    match Network::from_graph_str(&text) {
+        Ok(net) => Some(net),
+        Err(e) => {
+            eprintln!("error: {path}: {e}");
+            std::process::exit(2);
+        }
+    }
 }
 
 /// The board's design point: a tuned config from `--config <artifact>`
@@ -284,10 +310,12 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("max-conns", "32", "TCP connection pool bound (Busy-shed beyond)")
         .opt("deadline-ms", "0", "default per-request deadline (0 = none)")
         .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)")
-        .opt("config", "", "tuned-config artifact (attrax tune) to run this board on");
+        .opt("config", "", "tuned-config artifact (attrax tune) to run this board on")
+        .opt("model", "", "graph-IR model manifest (default: built-in Table III)");
     let args = parse_or_exit(cmd, argv);
     let board = board_of(&args);
-    let hw_cfg = resolve_cfg(&args, board, &Network::table3());
+    let net = model_of(&args).unwrap_or_else(Network::table3);
+    let hw_cfg = resolve_cfg(&args, board, &net);
     if let Some(addr) = args.get("tcp").filter(|a| !a.is_empty()) {
         return cmd_serve_tcp(addr, &args, board, hw_cfg);
     }
@@ -330,7 +358,16 @@ fn start_coordinator(
     board: Board,
     hw_cfg: HwConfig,
 ) -> anyhow::Result<Coordinator> {
-    let (sim, artifacts) = build_sim_or_synthetic(board, Some(hw_cfg))?;
+    // a custom --model manifest always serves synthetic seeded weights:
+    // the trained artifacts are Table-III-specific
+    let (sim, artifacts) = match model_of(args) {
+        Some(net) => {
+            println!("(serving custom graph model with synthetic seeded weights)");
+            let params = attrax::model::Params::synthetic(&net, 42);
+            (Simulator::new(net, &params, hw_cfg)?, None)
+        }
+        None => build_sim_or_synthetic(board, Some(hw_cfg))?,
+    };
     // shadow verification needs the trained artifacts; drop it (with a
     // warning) rather than silently pretending on the synthetic path
     let mut verify: f64 = args.parse_num("verify", 0.1);
@@ -613,7 +650,8 @@ fn cmd_eval(argv: Vec<String>) -> i32 {
     .opt("steps", "", "points per deletion/insertion curve [default: 6; smoke: 5]")
     .opt("topk", "0.1", "top-k fraction for the pixel-intersection metric")
     .opt("out", "BENCH_xeval.json", "machine-readable report path")
-    .flag("smoke", "offline smoke spec on synthetic Table-III weights (deterministic)");
+    .opt("model", "", "graph-IR model manifest (default: built-in Table III)")
+    .flag("smoke", "offline smoke spec on synthetic weights (deterministic)");
     let args = parse_or_exit(cmd, argv);
     let smoke = args.flag("smoke");
     let mut spec =
@@ -639,13 +677,17 @@ fn cmd_eval(argv: Vec<String>) -> i32 {
     }
 
     // quality metrics are weight-dependent, but the evaluation is
-    // meaningful on any deterministic weights — synthetic Table-III
-    // parameters keep the whole run offline (and are what --smoke pins)
-    let net = Network::table3();
+    // meaningful on any deterministic weights — synthetic seeded
+    // parameters keep the whole run offline (and are what --smoke pins).
+    // A custom --model manifest always evaluates synthetic weights: the
+    // trained artifacts are Table-III-specific.
+    let custom = model_of(&args);
+    let net = custom.unwrap_or_else(Network::table3);
+    let custom_model = args.get("model").filter(|s| !s.is_empty()).is_some();
     let params = match load_artifacts(&artifacts_dir()) {
-        Ok((_, p)) if !smoke => p,
+        Ok((_, p)) if !smoke && !custom_model => p,
         _ => {
-            println!("(evaluating on synthetic seeded Table-III weights — fully offline)");
+            println!("(evaluating on synthetic seeded weights — fully offline)");
             attrax::model::Params::synthetic(&net, 42)
         }
     };
@@ -675,6 +717,78 @@ fn cmd_eval(argv: Vec<String>) -> i32 {
         return 1;
     }
     0
+}
+
+/// `attrax model [--dry-run] <manifest>...` — load + validate graph-IR
+/// manifests. `--dry-run` is the CI gate: one OK/ERROR line per file,
+/// nonzero exit if any fails. Without it, also print the structure
+/// table, parameter/MAC counts and the compiled plan's live-range
+/// accounting (on synthetic weights — validation is weight-independent).
+fn cmd_model(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("model", "load + validate graph-IR model manifests")
+        .opt("device", "pynq-z2", "board whose config the plan compiles against")
+        .flag("dry-run", "validate only: one OK/ERROR line per manifest");
+    let args = parse_or_exit(cmd, argv);
+    if args.positional.is_empty() {
+        eprintln!("usage: attrax model [--dry-run] <manifest.graph.json>...");
+        return 2;
+    }
+    let board = board_of(&args);
+    let dry = args.flag("dry-run");
+    let mut failed = false;
+    for path in &args.positional {
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) => {
+                println!("{path}: ERROR: {e}");
+                failed = true;
+                continue;
+            }
+        };
+        let net = match Network::from_graph_str(&text) {
+            Ok(n) => n,
+            Err(e) => {
+                println!("{path}: ERROR: {e}");
+                failed = true;
+                continue;
+            }
+        };
+        // the loader checks shapes/legality; the plan compiler is the
+        // second gate (fusion + standalone-ReLU rejection), so a "dry
+        // run" exercises the full load-to-schedule path
+        let params = attrax::model::Params::synthetic(&net, 42);
+        let cfg = fpga::choose_config(board, &net, Method::Guided);
+        let plan = match attrax::sched::Plan::new(net.clone(), &params, cfg) {
+            Ok(p) => p,
+            Err(e) => {
+                println!("{path}: ERROR: {e}");
+                failed = true;
+                continue;
+            }
+        };
+        println!(
+            "{path}: OK ({} nodes, {} fused units, {} parameters)",
+            net.nodes().len(),
+            plan.n_units(),
+            net.param_count()
+        );
+        if !dry {
+            print!("{}", net.structure_table());
+            let live = plan.live_report();
+            println!(
+                "forward MACs: {}\nactivation slab: {} elems, gradient workspace: {} elems (peak live {})",
+                net.forward_macs(),
+                live.act_elems,
+                live.grad_elems,
+                live.grad_peak_elems
+            );
+        }
+    }
+    if failed {
+        1
+    } else {
+        0
+    }
 }
 
 fn cmd_sweep(argv: Vec<String>) -> i32 {

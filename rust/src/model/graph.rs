@@ -1,12 +1,24 @@
-//! CNN graph representation + shape inference (S2).
+//! CNN graph IR + shape inference (S2/S15).
 //!
-//! The layer vocabulary is exactly what the paper's HLS library supports
-//! (§III-A): convolution, fully-connected, ReLU, 2x2 max-pool, flatten.
-//! `Network::table3()` builds the paper's evaluation CNN; arbitrary
-//! networks over the same vocabulary can be composed with
-//! `NetworkBuilder` (the library is a framework, not a fixed pipeline).
+//! The layer vocabulary is what the paper's HLS library supports
+//! (§III-A) — convolution, fully-connected, ReLU, 2x2 max-pool,
+//! flatten — plus an elementwise `Add` node for residual/skip
+//! connections (ISSUE-6). Models are a node/edge DAG: each [`Node`]
+//! names its inputs explicitly ([`SrcRef`] — the reserved name
+//! `"image"` or another node), and [`Network`] validation produces a
+//! deterministic topological schedule with per-node shapes, so any
+//! manifest-loaded graph gets the same load-time legality checking
+//! `Network::table3()` does. All validation failures are typed
+//! [`GraphError`]s (the `HwConfig::validate` idiom) — a bad manifest is
+//! a diagnosable `Err`, never a panic.
 
+use std::collections::BTreeMap;
 use std::fmt;
+
+use crate::util::json::Json;
+
+/// Schema tag of `*.graph.json` manifests.
+pub const GRAPH_SCHEMA: &str = "attrax-graph/v1";
 
 /// Activation/tensor shape flowing between layers.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -33,6 +45,98 @@ impl fmt::Display for Shape {
     }
 }
 
+/// Why a graph fails validation (load-time lint). Every arm names the
+/// offending node so a manifest author can find it.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum GraphError {
+    /// Two nodes share a name (or a node claims the reserved `image`).
+    DuplicateName { node: String },
+    /// A node references an input that is neither a node nor `image`.
+    UnknownInput { node: String, input: String },
+    /// The edges contain a cycle through this node.
+    Cycle { node: String },
+    /// Wrong fan-in for the op (`add` wants 2, everything else 1).
+    BadFanIn { node: String, op: &'static str, got: usize, want: usize },
+    /// Conv `in_ch` disagrees with the producing shape.
+    ChannelMismatch { node: String, want: usize, got: usize },
+    /// FC `in_dim` disagrees with the producing shape.
+    InDimMismatch { node: String, want: usize, got: usize },
+    /// Conv/pool applied to a flat vector.
+    NeedsChw { node: String, got: Shape },
+    /// 2x2 max-pool on odd spatial dims.
+    OddPool { node: String, c: usize, h: usize, w: usize },
+    /// Conv kernel larger than the padded input.
+    ConvShrink { node: String },
+    /// `add` inputs have different shapes.
+    AddShapeMismatch { node: String, a: Shape, b: Shape },
+    /// The declared output is not a node.
+    UnknownOutput { name: String },
+    /// A node is not an ancestor of the output (dead subgraph).
+    Unreachable { node: String },
+    /// The manifest JSON is malformed (not graph-shaped).
+    Parse { msg: String },
+}
+
+impl fmt::Display for GraphError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            GraphError::DuplicateName { node } => write!(f, "duplicate node name `{node}`"),
+            GraphError::UnknownInput { node, input } => {
+                write!(f, "node `{node}`: unknown input `{input}`")
+            }
+            GraphError::Cycle { node } => write!(f, "cycle through node `{node}`"),
+            GraphError::BadFanIn { node, op, got, want } => {
+                write!(f, "node `{node}`: {op} expects {want} input(s), got {got}")
+            }
+            GraphError::ChannelMismatch { node, want, got } => {
+                write!(f, "node `{node}`: expects {want} input channels, got {got}")
+            }
+            GraphError::InDimMismatch { node, want, got } => {
+                write!(f, "node `{node}`: expects {want} inputs, got {got}")
+            }
+            GraphError::NeedsChw { node, got } => {
+                write!(f, "node `{node}`: needs CHW input, got {got}")
+            }
+            GraphError::OddPool { node, c, h, w } => {
+                write!(f, "node `{node}`: maxpool needs even dims, got [{c},{h},{w}]")
+            }
+            GraphError::ConvShrink { node } => {
+                write!(f, "node `{node}`: conv shrinks output below zero")
+            }
+            GraphError::AddShapeMismatch { node, a, b } => {
+                write!(f, "node `{node}`: add inputs disagree: {a} vs {b}")
+            }
+            GraphError::UnknownOutput { name } => write!(f, "output `{name}` is not a node"),
+            GraphError::Unreachable { node } => {
+                write!(f, "node `{node}` does not reach the output")
+            }
+            GraphError::Parse { msg } => write!(f, "graph manifest: {msg}"),
+        }
+    }
+}
+
+impl std::error::Error for GraphError {}
+
+/// Index of a node in [`Network::nodes`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct NodeId(pub usize);
+
+/// Where a node reads its input from: the network input image or
+/// another node's output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SrcRef {
+    Image,
+    Node(NodeId),
+}
+
+/// One node of the DAG: a named layer plus its explicit input edges.
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub name: String,
+    pub layer: Layer,
+    pub inputs: Vec<SrcRef>,
+}
+
 /// One layer of the network. `Conv`/`Fc` carry parameter names that key
 /// into the loaded `Params` store.
 #[derive(Clone, Debug, PartialEq)]
@@ -42,6 +146,9 @@ pub enum Layer {
     MaxPool2,
     Flatten,
     Fc { name: String, in_dim: usize, out_dim: usize },
+    /// Elementwise saturating add of two same-shape inputs (the
+    /// residual/skip join; `hls::eltwise` on the device).
+    Add,
 }
 
 impl Layer {
@@ -54,20 +161,49 @@ impl Layer {
         }
     }
 
+    /// Required fan-in for this op.
+    pub fn arity(&self) -> usize {
+        match self {
+            Layer::Add => 2,
+            _ => 1,
+        }
+    }
+
     /// MAC count for one forward evaluation given the input shape.
-    pub fn macs(&self, input: Shape) -> usize {
+    /// Typed error (never a panic) on a shape that doesn't feed this
+    /// layer — `node` names the graph node for the diagnostic.
+    pub fn macs(&self, node: &str, input: Shape) -> Result<usize, GraphError> {
         match (self, input) {
             (Layer::Conv { in_ch, out_ch, k, pad, .. }, Shape::Chw(c, h, w)) => {
-                assert_eq!(c, *in_ch);
-                let oh = h + 2 * pad - k + 1;
-                let ow = w + 2 * pad - k + 1;
-                out_ch * oh * ow * in_ch * k * k
+                if c != *in_ch {
+                    return Err(GraphError::ChannelMismatch {
+                        node: node.to_string(),
+                        want: *in_ch,
+                        got: c,
+                    });
+                }
+                let shrink = || GraphError::ConvShrink { node: node.to_string() };
+                if *k == 0 {
+                    return Err(shrink());
+                }
+                let oh = (h + 2 * pad).checked_sub(k - 1).ok_or_else(shrink)?;
+                let ow = (w + 2 * pad).checked_sub(k - 1).ok_or_else(shrink)?;
+                Ok(out_ch * oh * ow * in_ch * k * k)
+            }
+            (Layer::Conv { .. }, s) => {
+                Err(GraphError::NeedsChw { node: node.to_string(), got: s })
             }
             (Layer::Fc { in_dim, out_dim, .. }, s) => {
-                assert_eq!(s.elems(), *in_dim);
-                in_dim * out_dim
+                if s.elems() != *in_dim {
+                    return Err(GraphError::InDimMismatch {
+                        node: node.to_string(),
+                        want: *in_dim,
+                        got: s.elems(),
+                    });
+                }
+                Ok(in_dim * out_dim)
             }
-            _ => 0,
+            _ => Ok(0),
         }
     }
 
@@ -78,56 +214,148 @@ impl Layer {
             Layer::MaxPool2 => "MaxPool2d",
             Layer::Flatten => "Flatten",
             Layer::Fc { .. } => "FC",
+            Layer::Add => "Add",
         }
     }
 
-    /// Output shape for a given input shape; Err on mismatch.
-    pub fn infer(&self, input: Shape) -> Result<Shape, String> {
-        match (self, input) {
-            (Layer::Conv { in_ch, out_ch, k, pad, name }, Shape::Chw(c, h, w)) => {
+    /// Output shape for the given input shapes; typed error on any
+    /// arity/shape violation. `node` names the graph node.
+    pub fn infer(&self, node: &str, inputs: &[Shape]) -> Result<Shape, GraphError> {
+        if inputs.len() != self.arity() {
+            return Err(GraphError::BadFanIn {
+                node: node.to_string(),
+                op: self.kind(),
+                got: inputs.len(),
+                want: self.arity(),
+            });
+        }
+        match (self, inputs[0]) {
+            (Layer::Conv { in_ch, out_ch, k, pad, .. }, Shape::Chw(c, h, w)) => {
                 if c != *in_ch {
-                    return Err(format!("{name}: expects {in_ch} input channels, got {c}"));
+                    return Err(GraphError::ChannelMismatch {
+                        node: node.to_string(),
+                        want: *in_ch,
+                        got: c,
+                    });
                 }
-                let oh = (h + 2 * pad).checked_sub(k - 1).ok_or("conv shrinks below zero")?;
-                let ow = (w + 2 * pad).checked_sub(k - 1).ok_or("conv shrinks below zero")?;
+                let shrink = || GraphError::ConvShrink { node: node.to_string() };
+                if *k == 0 {
+                    return Err(shrink());
+                }
+                let oh = (h + 2 * pad).checked_sub(k - 1).ok_or_else(shrink)?;
+                let ow = (w + 2 * pad).checked_sub(k - 1).ok_or_else(shrink)?;
+                if oh == 0 || ow == 0 {
+                    return Err(shrink());
+                }
                 Ok(Shape::Chw(*out_ch, oh, ow))
             }
-            (Layer::Conv { name, .. }, s) => Err(format!("{name}: conv needs CHW input, got {s}")),
+            (Layer::Conv { .. }, s) => {
+                Err(GraphError::NeedsChw { node: node.to_string(), got: s })
+            }
             (Layer::Relu, s) => Ok(s),
             (Layer::MaxPool2, Shape::Chw(c, h, w)) => {
                 if h % 2 != 0 || w % 2 != 0 {
-                    return Err(format!("maxpool needs even dims, got [{c},{h},{w}]"));
+                    return Err(GraphError::OddPool { node: node.to_string(), c, h, w });
                 }
                 Ok(Shape::Chw(c, h / 2, w / 2))
             }
-            (Layer::MaxPool2, s) => Err(format!("maxpool needs CHW input, got {s}")),
+            (Layer::MaxPool2, s) => Err(GraphError::NeedsChw { node: node.to_string(), got: s }),
             (Layer::Flatten, s) => Ok(Shape::Flat(s.elems())),
-            (Layer::Fc { name, in_dim, out_dim }, s) => {
+            (Layer::Fc { in_dim, out_dim, .. }, s) => {
                 if s.elems() != *in_dim {
-                    return Err(format!("{name}: expects {in_dim} inputs, got {}", s.elems()));
+                    return Err(GraphError::InDimMismatch {
+                        node: node.to_string(),
+                        want: *in_dim,
+                        got: s.elems(),
+                    });
                 }
                 Ok(Shape::Flat(*out_dim))
+            }
+            (Layer::Add, a) => {
+                if a != inputs[1] {
+                    return Err(GraphError::AddShapeMismatch {
+                        node: node.to_string(),
+                        a,
+                        b: inputs[1],
+                    });
+                }
+                Ok(a)
             }
         }
     }
 }
 
-/// A validated feed-forward network.
+/// A validated feed-forward DAG: nodes, a deterministic topological
+/// schedule, and per-node output shapes. Construction (via
+/// [`GraphBuilder`], [`NetworkBuilder`] or a graph manifest) is the one
+/// place legality is checked; everything downstream (`sched::Plan`,
+/// `xeval::fidelity::Oracle`, the memory accountants) walks the
+/// schedule unconditionally.
 #[derive(Clone, Debug)]
 pub struct Network {
     pub input: Shape,
-    pub layers: Vec<Layer>,
-    /// shapes[i] is the input shape of layers[i]; shapes[len] the output.
-    pub shapes: Vec<Shape>,
+    nodes: Vec<Node>,
+    /// Node indices in execution order (Kahn topological sort with
+    /// smallest-declaration-index-first tie-breaks, so declaration-
+    /// ordered manifests schedule in declaration order).
+    schedule: Vec<usize>,
+    /// out_shapes[i] is the output shape of nodes[i].
+    out_shapes: Vec<Shape>,
+    /// Index of the output node (always last in `schedule`).
+    output: usize,
 }
 
 impl Network {
+    pub fn nodes(&self) -> &[Node] {
+        &self.nodes
+    }
+
+    pub fn node(&self, i: usize) -> &Node {
+        &self.nodes[i]
+    }
+
+    pub fn schedule(&self) -> &[usize] {
+        &self.schedule
+    }
+
+    pub fn output_node(&self) -> usize {
+        self.output
+    }
+
+    /// Output shape of node `i`.
+    pub fn out_shape(&self, i: usize) -> Shape {
+        self.out_shapes[i]
+    }
+
+    /// Shape produced by a source reference.
+    pub fn src_shape(&self, s: SrcRef) -> Shape {
+        match s {
+            SrcRef::Image => self.input,
+            SrcRef::Node(NodeId(j)) => self.out_shapes[j],
+        }
+    }
+
+    /// Per-node consumer lists (node indices that read each node's
+    /// output). Fan-out > 1 marks a fork point: the BP pass must
+    /// *accumulate* gradients there (`hls::eltwise::accumulate`).
+    pub fn consumers(&self) -> Vec<Vec<usize>> {
+        let mut cons = vec![Vec::new(); self.nodes.len()];
+        for (i, nd) in self.nodes.iter().enumerate() {
+            for s in &nd.inputs {
+                if let SrcRef::Node(NodeId(j)) = s {
+                    cons[*j].push(i);
+                }
+            }
+        }
+        cons
+    }
+
     pub fn output_shape(&self) -> Shape {
-        *self.shapes.last().unwrap()
+        self.out_shapes[self.output]
     }
 
     pub fn param_count(&self) -> usize {
-        self.layers.iter().map(|l| l.param_count()).sum()
+        self.nodes.iter().map(|n| n.layer.param_count()).sum()
     }
 
     /// Model size in bytes at the given parameter precision.
@@ -137,40 +365,118 @@ impl Network {
 
     /// Total forward MACs (batch 1).
     pub fn forward_macs(&self) -> usize {
-        self.layers.iter().enumerate().map(|(i, l)| l.macs(self.shapes[i])).sum()
+        self.schedule
+            .iter()
+            .map(|&i| {
+                let nd = &self.nodes[i];
+                nd.layer
+                    .macs(&nd.name, self.src_shape(nd.inputs[0]))
+                    .expect("shapes validated at construction")
+            })
+            .sum()
     }
 
-    /// The paper's Table III CNN.
+    /// The paper's Table III CNN — now just one built-in graph manifest
+    /// (`examples/graphs/table3.graph.json`).
     pub fn table3() -> Network {
-        NetworkBuilder::new(Shape::Chw(3, 32, 32))
-            .conv("conv1", 32, 3, 1)
-            .relu()
-            .conv("conv2", 32, 3, 1)
-            .relu()
-            .maxpool2()
-            .conv("conv3", 64, 3, 1)
-            .relu()
-            .conv("conv4", 64, 3, 1)
-            .relu()
-            .maxpool2()
-            .flatten()
-            .fc("fc1", 128)
-            .relu()
-            .fc("fc2", 10)
-            .build()
-            .expect("table3 network is well-formed")
+        Network::from_graph_str(include_str!("../../../examples/graphs/table3.graph.json"))
+            .expect("built-in table3 graph manifest is well-formed")
     }
 
-    /// Pretty Table-III-style structure dump.
+    /// Parse + validate a `*.graph.json` manifest.
+    pub fn from_graph_str(text: &str) -> Result<Network, GraphError> {
+        let j = Json::parse(text).map_err(|e| GraphError::Parse { msg: e.to_string() })?;
+        Network::from_graph_json(&j)
+    }
+
+    /// Validate an already-parsed graph manifest (also reachable as the
+    /// `graph` section of an artifacts manifest).
+    pub fn from_graph_json(j: &Json) -> Result<Network, GraphError> {
+        let perr = |msg: String| GraphError::Parse { msg };
+        if let Some(schema) = j.get("schema").and_then(|v| v.as_str()) {
+            if schema != GRAPH_SCHEMA {
+                return Err(perr(format!("unsupported graph schema {schema:?}")));
+            }
+        }
+        let input = match j.get("input").and_then(|v| v.as_arr()) {
+            Some(dims) => {
+                let d: Vec<usize> = dims.iter().filter_map(|v| v.as_usize()).collect();
+                match d.as_slice() {
+                    [c, h, w] => Shape::Chw(*c, *h, *w),
+                    [n] => Shape::Flat(*n),
+                    _ => return Err(perr(format!("input must be [c,h,w] or [n], got {dims:?}"))),
+                }
+            }
+            None => return Err(perr("missing `input` shape".to_string())),
+        };
+        let nodes = j
+            .get("nodes")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| perr("missing `nodes` array".to_string()))?;
+
+        let mut gb = GraphBuilder::new(input);
+        for nj in nodes {
+            let name = nj
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| perr("node missing `name`".to_string()))?
+                .to_string();
+            let op = nj
+                .get("op")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| perr(format!("node `{name}` missing `op`")))?;
+            let inputs: Vec<String> = nj
+                .get("in")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| perr(format!("node `{name}` missing `in` edges")))?
+                .iter()
+                .filter_map(|v| v.as_str().map(String::from))
+                .collect();
+            let get_usize = |key: &str| nj.get(key).and_then(|v| v.as_usize());
+            let layer = match op {
+                "conv" => Layer::Conv {
+                    name: name.clone(),
+                    // 0 = inferred from the producing shape at build();
+                    // explicit values are cross-checked (ChannelMismatch)
+                    in_ch: get_usize("in_ch").unwrap_or(0),
+                    out_ch: get_usize("out_ch")
+                        .ok_or_else(|| perr(format!("node `{name}` missing `out_ch`")))?,
+                    k: get_usize("k")
+                        .ok_or_else(|| perr(format!("node `{name}` missing `k`")))?,
+                    pad: get_usize("pad").unwrap_or(0),
+                },
+                "relu" => Layer::Relu,
+                "maxpool2" => Layer::MaxPool2,
+                "flatten" => Layer::Flatten,
+                "fc" => Layer::Fc {
+                    name: name.clone(),
+                    in_dim: get_usize("in_dim").unwrap_or(0),
+                    out_dim: get_usize("out")
+                        .ok_or_else(|| perr(format!("node `{name}` missing `out`")))?,
+                },
+                "add" => Layer::Add,
+                other => return Err(perr(format!("node `{name}`: unknown op {other:?}"))),
+            };
+            gb = gb.node(&name, layer, &inputs);
+        }
+        let output = j
+            .get("output")
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| perr("missing `output` node name".to_string()))?;
+        gb.output(output).build()
+    }
+
+    /// Pretty Table-III-style structure dump (in schedule order).
     pub fn structure_table(&self) -> String {
         let mut s = String::from("Input Shape     Layer (type)  Output Shape    # parameters\n");
-        for (i, l) in self.layers.iter().enumerate() {
-            let pc = l.param_count();
+        for &i in &self.schedule {
+            let nd = &self.nodes[i];
+            let pc = nd.layer.param_count();
             s.push_str(&format!(
                 "{:<15} {:<13} {:<15} {}\n",
-                self.shapes[i].to_string(),
-                l.kind(),
-                self.shapes[i + 1].to_string(),
+                self.src_shape(nd.inputs[0]).to_string(),
+                nd.layer.kind(),
+                self.out_shapes[i].to_string(),
                 if pc > 0 { pc.to_string() } else { String::new() }
             ));
         }
@@ -178,7 +484,155 @@ impl Network {
     }
 }
 
-/// Chainable builder with validation at `build()`.
+/// General DAG builder: named nodes with explicit input edges,
+/// validated at `build()`. [`NetworkBuilder`] lowers onto this; graph
+/// manifests parse onto this.
+pub struct GraphBuilder {
+    input: Shape,
+    nodes: Vec<(String, Layer, Vec<String>)>,
+    output: Option<String>,
+}
+
+impl GraphBuilder {
+    pub fn new(input: Shape) -> GraphBuilder {
+        GraphBuilder { input, nodes: Vec::new(), output: None }
+    }
+
+    /// Add a node reading from named inputs (`"image"` or node names).
+    pub fn node(mut self, name: &str, layer: Layer, inputs: &[String]) -> GraphBuilder {
+        self.nodes.push((name.to_string(), layer, inputs.to_vec()));
+        self
+    }
+
+    /// Declare the output node (default: the last schedulable node).
+    pub fn output(mut self, name: &str) -> GraphBuilder {
+        self.output = Some(name.to_string());
+        self
+    }
+
+    /// Validate: names, edges, fan-in, acyclicity, shapes, reachability.
+    pub fn build(self) -> Result<Network, GraphError> {
+        let n = self.nodes.len();
+        if n == 0 {
+            return Err(GraphError::Parse { msg: "graph has no nodes".to_string() });
+        }
+        // -- names (the input image's name is reserved) -----------------
+        let mut index: BTreeMap<String, usize> = BTreeMap::new();
+        for (i, (name, _, _)) in self.nodes.iter().enumerate() {
+            if name == "image" || index.insert(name.clone(), i).is_some() {
+                return Err(GraphError::DuplicateName { node: name.clone() });
+            }
+        }
+        // -- edge resolution + fan-in -----------------------------------
+        let mut nodes: Vec<Node> = Vec::with_capacity(n);
+        for (name, layer, raw_inputs) in &self.nodes {
+            let mut inputs = Vec::with_capacity(raw_inputs.len());
+            for r in raw_inputs {
+                if r == "image" {
+                    inputs.push(SrcRef::Image);
+                } else {
+                    match index.get(r) {
+                        Some(&j) => inputs.push(SrcRef::Node(NodeId(j))),
+                        None => {
+                            return Err(GraphError::UnknownInput {
+                                node: name.clone(),
+                                input: r.clone(),
+                            })
+                        }
+                    }
+                }
+            }
+            if inputs.len() != layer.arity() {
+                return Err(GraphError::BadFanIn {
+                    node: name.clone(),
+                    op: layer.kind(),
+                    got: inputs.len(),
+                    want: layer.arity(),
+                });
+            }
+            nodes.push(Node { name: name.clone(), layer: layer.clone(), inputs });
+        }
+        // -- deterministic topological schedule (Kahn, min-index) -------
+        let mut indeg = vec![0usize; n];
+        let mut cons: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for (i, nd) in nodes.iter().enumerate() {
+            for s in &nd.inputs {
+                if let SrcRef::Node(NodeId(j)) = s {
+                    indeg[i] += 1;
+                    cons[*j].push(i);
+                }
+            }
+        }
+        let mut scheduled = vec![false; n];
+        let mut schedule = Vec::with_capacity(n);
+        while schedule.len() < n {
+            let next = (0..n).find(|&i| !scheduled[i] && indeg[i] == 0);
+            let Some(i) = next else {
+                let stuck = (0..n).find(|&i| !scheduled[i]).unwrap();
+                return Err(GraphError::Cycle { node: nodes[stuck].name.clone() });
+            };
+            scheduled[i] = true;
+            schedule.push(i);
+            for &c in &cons[i] {
+                indeg[c] -= 1;
+            }
+        }
+        // -- shape inference in schedule order --------------------------
+        let mut out_shapes = vec![self.input; n];
+        for &i in &schedule {
+            let in_shapes: Vec<Shape> = nodes[i]
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    SrcRef::Image => self.input,
+                    SrcRef::Node(NodeId(j)) => out_shapes[*j],
+                })
+                .collect();
+            // resolve deferred conv/fc input dims from the producer
+            match &mut nodes[i].layer {
+                Layer::Conv { in_ch, .. } if *in_ch == 0 => {
+                    if let Shape::Chw(c, _, _) = in_shapes[0] {
+                        *in_ch = c;
+                    }
+                }
+                Layer::Fc { in_dim, .. } if *in_dim == 0 => *in_dim = in_shapes[0].elems(),
+                _ => {}
+            }
+            let name = nodes[i].name.clone();
+            out_shapes[i] = nodes[i].layer.infer(&name, &in_shapes)?;
+        }
+        // -- output + reachability --------------------------------------
+        let output = match &self.output {
+            Some(name) => match index.get(name) {
+                Some(&i) => i,
+                None => return Err(GraphError::UnknownOutput { name: name.clone() }),
+            },
+            None => *schedule.last().unwrap(),
+        };
+        let mut reach = vec![false; n];
+        let mut stack = vec![output];
+        while let Some(i) = stack.pop() {
+            if reach[i] {
+                continue;
+            }
+            reach[i] = true;
+            for s in &nodes[i].inputs {
+                if let SrcRef::Node(NodeId(j)) = s {
+                    stack.push(*j);
+                }
+            }
+        }
+        if let Some(dead) = (0..n).find(|&i| !reach[i]) {
+            return Err(GraphError::Unreachable { node: nodes[dead].name.clone() });
+        }
+        Ok(Network { input: self.input, nodes, schedule, out_shapes, output })
+    }
+}
+
+/// Chainable linear builder (the pre-DAG API, kept for chains): every
+/// layer reads the previous one; `conv`/`fc` input dims resolve at
+/// `build()`. Lowered onto [`GraphBuilder`] — unnamed layers get
+/// hidden `__n{i}` node names.
 pub struct NetworkBuilder {
     input: Shape,
     layers: Vec<Layer>,
@@ -210,24 +664,18 @@ impl NetworkBuilder {
         self
     }
 
-    pub fn build(mut self) -> Result<Network, String> {
-        let mut shapes = vec![self.input];
-        let mut cur = self.input;
-        for l in self.layers.iter_mut() {
-            // resolve deferred dims
-            match l {
-                Layer::Conv { in_ch, .. } => {
-                    if let Shape::Chw(c, _, _) = cur {
-                        *in_ch = c;
-                    }
-                }
-                Layer::Fc { in_dim, .. } => *in_dim = cur.elems(),
-                _ => {}
-            }
-            cur = l.infer(cur)?;
-            shapes.push(cur);
+    pub fn build(self) -> Result<Network, GraphError> {
+        let mut gb = GraphBuilder::new(self.input);
+        let mut prev = "image".to_string();
+        for (i, l) in self.layers.into_iter().enumerate() {
+            let name = match &l {
+                Layer::Conv { name, .. } | Layer::Fc { name, .. } => name.clone(),
+                _ => format!("__n{i}"),
+            };
+            gb = gb.node(&name, l, std::slice::from_ref(&prev));
+            prev = name;
         }
-        Ok(Network { input: self.input, layers: self.layers, shapes })
+        gb.build()
     }
 }
 
@@ -238,10 +686,11 @@ mod tests {
     #[test]
     fn table3_matches_paper() {
         let net = Network::table3();
-        // paper Table III per-layer parameter counts
+        // paper Table III per-layer parameter counts (schedule order)
         let conv_params: Vec<usize> = net
-            .layers
+            .schedule()
             .iter()
+            .map(|&i| &net.node(i).layer)
             .filter(|l| matches!(l, Layer::Conv { .. } | Layer::Fc { .. }))
             .map(|l| l.param_count())
             .collect();
@@ -257,7 +706,6 @@ mod tests {
     fn table3_shapes_match_paper() {
         let net = Network::table3();
         let expect = [
-            Shape::Chw(3, 32, 32),
             Shape::Chw(32, 32, 32),  // conv1
             Shape::Chw(32, 32, 32),  // relu
             Shape::Chw(32, 32, 32),  // conv2
@@ -273,7 +721,9 @@ mod tests {
             Shape::Flat(128),        // relu
             Shape::Flat(10),         // fc2
         ];
-        assert_eq!(net.shapes, expect);
+        assert_eq!(net.input, Shape::Chw(3, 32, 32));
+        let got: Vec<Shape> = net.schedule().iter().map(|&i| net.out_shape(i)).collect();
+        assert_eq!(got, expect);
     }
 
     #[test]
@@ -318,5 +768,235 @@ mod tests {
             .unwrap();
         assert_eq!(net.output_shape(), Shape::Flat(4));
         assert_eq!(net.param_count(), 8 * 9 + 8 + 8 * 64 * 4 + 4);
+    }
+
+    #[test]
+    fn table3_manifest_equals_builder_chain() {
+        // the manifest-loaded Table-III graph is structurally identical
+        // to the same chain assembled through NetworkBuilder
+        let manifest = Network::table3();
+        let chain = NetworkBuilder::new(Shape::Chw(3, 32, 32))
+            .conv("conv1", 32, 3, 1)
+            .relu()
+            .conv("conv2", 32, 3, 1)
+            .relu()
+            .maxpool2()
+            .conv("conv3", 64, 3, 1)
+            .relu()
+            .conv("conv4", 64, 3, 1)
+            .relu()
+            .maxpool2()
+            .flatten()
+            .fc("fc1", 128)
+            .relu()
+            .fc("fc2", 10)
+            .build()
+            .unwrap();
+        assert_eq!(manifest.param_count(), chain.param_count());
+        assert_eq!(manifest.forward_macs(), chain.forward_macs());
+        assert_eq!(manifest.structure_table(), chain.structure_table());
+        assert_eq!(manifest.output_shape(), chain.output_shape());
+    }
+
+    #[test]
+    fn residual_manifest_builds_with_fork() {
+        let net = Network::from_graph_str(include_str!(
+            "../../../examples/graphs/residual16.graph.json"
+        ))
+        .unwrap();
+        assert_eq!(net.output_shape(), Shape::Flat(10));
+        // stem_r feeds both the branch conv and the add: a real fork
+        let cons = net.consumers();
+        let stem_r = net.nodes().iter().position(|n| n.name == "stem_r").unwrap();
+        assert_eq!(cons[stem_r].len(), 2, "skip edge must fan out");
+        // the schedule is a valid topo order: every input precedes its node
+        let pos: BTreeMap<usize, usize> =
+            net.schedule().iter().enumerate().map(|(p, &i)| (i, p)).collect();
+        for (i, nd) in net.nodes().iter().enumerate() {
+            for s in &nd.inputs {
+                if let SrcRef::Node(NodeId(j)) = s {
+                    assert!(pos[j] < pos[&i], "node {} scheduled before input", nd.name);
+                }
+            }
+        }
+        // output is scheduled last
+        assert_eq!(*net.schedule().last().unwrap(), net.output_node());
+    }
+
+    #[test]
+    fn vgg_manifest_builds() {
+        let net = Network::from_graph_str(include_str!(
+            "../../../examples/graphs/vgg11_32.graph.json"
+        ))
+        .unwrap();
+        assert_eq!(net.output_shape(), Shape::Flat(10));
+        assert_eq!(net.src_shape(net.node(net.output_node()).inputs[0]), Shape::Flat(128));
+    }
+
+    #[test]
+    fn graph_error_arms_are_typed_and_named() {
+        let chw = Shape::Chw(3, 8, 8);
+        let n = |name: &str| name.to_string();
+        // duplicate name
+        let e = GraphBuilder::new(chw)
+            .node("c", Layer::Relu, &[n("image")])
+            .node("c", Layer::Relu, &[n("c")])
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::DuplicateName { node: "c".into() });
+        assert!(e.to_string().contains("duplicate node name `c`"));
+        // reserved input name
+        let e = GraphBuilder::new(chw)
+            .node("image", Layer::Relu, &[n("image")])
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::DuplicateName { node: "image".into() });
+        // unknown input
+        let e = GraphBuilder::new(chw)
+            .node("a", Layer::Relu, &[n("ghost")])
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::UnknownInput { node: "a".into(), input: "ghost".into() });
+        assert!(e.to_string().contains("unknown input `ghost`"));
+        // cycle
+        let e = GraphBuilder::new(chw)
+            .node("a", Layer::Relu, &[n("b")])
+            .node("b", Layer::Relu, &[n("a")])
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::Cycle { node: "a".into() });
+        // bad fan-in (add wants 2)
+        let e = GraphBuilder::new(chw)
+            .node("s", Layer::Add, &[n("image")])
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::BadFanIn { node: "s".into(), op: "Add", got: 1, want: 2 });
+        // unknown output
+        let e = GraphBuilder::new(chw)
+            .node("a", Layer::Relu, &[n("image")])
+            .output("zz")
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::UnknownOutput { name: "zz".into() });
+        // unreachable node
+        let e = GraphBuilder::new(chw)
+            .node("a", Layer::Relu, &[n("image")])
+            .node("dead", Layer::Relu, &[n("image")])
+            .output("a")
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::Unreachable { node: "dead".into() });
+        // parse error
+        let e = Network::from_graph_str("{ not json").unwrap_err();
+        assert!(matches!(e, GraphError::Parse { .. }));
+        // explicit in_ch mismatch surfaces as ChannelMismatch
+        let e = GraphBuilder::new(chw)
+            .node(
+                "c1",
+                Layer::Conv { name: "c1".into(), in_ch: 4, out_ch: 4, k: 3, pad: 1 },
+                &[n("image")],
+            )
+            .build()
+            .unwrap_err();
+        assert_eq!(e, GraphError::ChannelMismatch { node: "c1".into(), want: 4, got: 3 });
+    }
+
+    #[test]
+    fn infer_arms_are_typed() {
+        let conv = Layer::Conv { name: "c".into(), in_ch: 3, out_ch: 8, k: 3, pad: 1 };
+        assert_eq!(conv.infer("c", &[Shape::Chw(3, 8, 8)]), Ok(Shape::Chw(8, 8, 8)));
+        assert_eq!(
+            conv.infer("c", &[Shape::Chw(2, 8, 8)]),
+            Err(GraphError::ChannelMismatch { node: "c".into(), want: 3, got: 2 })
+        );
+        assert_eq!(
+            conv.infer("c", &[Shape::Flat(9)]),
+            Err(GraphError::NeedsChw { node: "c".into(), got: Shape::Flat(9) })
+        );
+        let big = Layer::Conv { name: "c".into(), in_ch: 3, out_ch: 8, k: 5, pad: 0 };
+        assert_eq!(
+            big.infer("c", &[Shape::Chw(3, 2, 2)]),
+            Err(GraphError::ConvShrink { node: "c".into() })
+        );
+        assert_eq!(
+            Layer::MaxPool2.infer("p", &[Shape::Chw(3, 7, 8)]),
+            Err(GraphError::OddPool { node: "p".into(), c: 3, h: 7, w: 8 })
+        );
+        assert_eq!(
+            Layer::MaxPool2.infer("p", &[Shape::Flat(4)]),
+            Err(GraphError::NeedsChw { node: "p".into(), got: Shape::Flat(4) })
+        );
+        let fc = Layer::Fc { name: "f".into(), in_dim: 16, out_dim: 4 };
+        assert_eq!(
+            fc.infer("f", &[Shape::Flat(9)]),
+            Err(GraphError::InDimMismatch { node: "f".into(), want: 16, got: 9 })
+        );
+        assert_eq!(
+            Layer::Add.infer("s", &[Shape::Chw(1, 4, 4), Shape::Chw(1, 2, 2)]),
+            Err(GraphError::AddShapeMismatch {
+                node: "s".into(),
+                a: Shape::Chw(1, 4, 4),
+                b: Shape::Chw(1, 2, 2),
+            })
+        );
+        assert_eq!(
+            Layer::Add.infer("s", &[Shape::Flat(4)]),
+            Err(GraphError::BadFanIn { node: "s".into(), op: "Add", got: 1, want: 2 })
+        );
+        assert_eq!(Layer::Relu.infer("r", &[Shape::Flat(4)]), Ok(Shape::Flat(4)));
+    }
+
+    #[test]
+    fn macs_arms_are_typed() {
+        let conv = Layer::Conv { name: "c".into(), in_ch: 3, out_ch: 8, k: 3, pad: 1 };
+        assert_eq!(conv.macs("c", Shape::Chw(3, 8, 8)), Ok(8 * 8 * 8 * 3 * 9));
+        assert_eq!(
+            conv.macs("c", Shape::Chw(2, 8, 8)),
+            Err(GraphError::ChannelMismatch { node: "c".into(), want: 3, got: 2 })
+        );
+        assert_eq!(
+            conv.macs("c", Shape::Flat(9)),
+            Err(GraphError::NeedsChw { node: "c".into(), got: Shape::Flat(9) })
+        );
+        let fc = Layer::Fc { name: "f".into(), in_dim: 16, out_dim: 4 };
+        assert_eq!(fc.macs("f", Shape::Flat(16)), Ok(64));
+        assert_eq!(
+            fc.macs("f", Shape::Flat(8)),
+            Err(GraphError::InDimMismatch { node: "f".into(), want: 16, got: 8 })
+        );
+        assert_eq!(Layer::Add.macs("s", Shape::Chw(1, 4, 4)), Ok(0));
+        assert_eq!(Layer::Relu.macs("r", Shape::Flat(4)), Ok(0));
+    }
+
+    #[test]
+    fn bad_corpus_fails_with_expected_errors() {
+        let cases = [
+            (include_str!("../../../examples/graphs/bad/cycle.graph.json"), "cycle through"),
+            (
+                include_str!("../../../examples/graphs/bad/unknown_input.graph.json"),
+                "unknown input `ghost`",
+            ),
+            (
+                include_str!("../../../examples/graphs/bad/duplicate.graph.json"),
+                "duplicate node name `c1`",
+            ),
+            (
+                include_str!("../../../examples/graphs/bad/odd_pool.graph.json"),
+                "maxpool needs even dims",
+            ),
+            (
+                include_str!("../../../examples/graphs/bad/bad_fanin.graph.json"),
+                "Add expects 2 input(s)",
+            ),
+            (
+                include_str!("../../../examples/graphs/bad/shape_mismatch.graph.json"),
+                "expects 4 input channels, got 3",
+            ),
+        ];
+        for (text, expect) in cases {
+            let e = Network::from_graph_str(text).unwrap_err();
+            let msg = e.to_string();
+            assert!(msg.contains(expect), "expected {expect:?} in {msg:?}");
+        }
     }
 }

@@ -4,6 +4,7 @@
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
 
+use crate::model::graph::Network;
 use crate::util::json::Json;
 
 #[derive(Clone, Debug)]
@@ -30,6 +31,10 @@ pub struct Manifest {
     pub test_accuracy: f64,
     pub mask_bits_onchip: BTreeMap<String, usize>,
     pub autodiff_cache_bits: usize,
+    /// Optional embedded graph IR (`attrax-graph/v1`): manifests that
+    /// carry one describe an arbitrary DAG topology; manifests without
+    /// one implicitly mean the built-in Table-III network.
+    pub graph: Option<Network>,
 }
 
 fn req<'a>(j: &'a Json, key: &str) -> anyhow::Result<&'a Json> {
@@ -111,6 +116,13 @@ impl Manifest {
                 .get("autodiff_cache_bits")
                 .and_then(|v| v.as_usize())
                 .unwrap_or(0),
+            graph: match j.get("graph") {
+                Some(g) => Some(
+                    Network::from_graph_json(g)
+                        .map_err(|e| anyhow::anyhow!("manifest graph: {e}"))?,
+                ),
+                None => None,
+            },
         })
     }
 
@@ -165,5 +177,92 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         std::fs::write(dir.join("manifest.json"), r#"{"network":"t"}"#).unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    // minimal valid manifest body with a caller-supplied graph section
+    fn manifest_with_graph(graph_json: &str) -> String {
+        format!(
+            r#"{{"network":"g","num_classes":4,"img_shape":[1,8,8],
+                "class_names":[],"methods":["saliency"],
+                "param_count":0,"weight_bytes":0,"params":[],
+                "graph":{graph_json}}}"#
+        )
+    }
+
+    fn load_with_graph(tag: &str, graph_json: &str) -> anyhow::Result<Manifest> {
+        let dir = std::env::temp_dir().join(format!("attrax_manifest_{tag}"));
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), manifest_with_graph(graph_json)).unwrap();
+        Manifest::load(&dir)
+    }
+
+    #[test]
+    fn graph_section_round_trips() {
+        let m = load_with_graph(
+            "graph_ok",
+            r#"{"input":[1,8,8],"nodes":[
+                {"name":"c","op":"conv","in":["image"],"out_ch":4,"k":3,"pad":1},
+                {"name":"r","op":"relu","in":["c"]},
+                {"name":"fl","op":"flatten","in":["r"]},
+                {"name":"f","op":"fc","in":["fl"],"out":4}
+              ],"output":"f"}"#,
+        )
+        .unwrap();
+        let net = m.graph.expect("graph section should parse");
+        assert_eq!(net.output_shape(), crate::model::Shape::Flat(4));
+        assert_eq!(net.param_count(), 4 * 9 + 4 + 4 * 256 + 4);
+        assert!(net.structure_table().contains("Conv2d"));
+    }
+
+    #[test]
+    fn graph_section_absent_is_none() {
+        let dir = std::env::temp_dir().join("attrax_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"network":"t","num_classes":10,"img_shape":[3,32,32],
+                "class_names":[],"methods":[],
+                "param_count":0,"weight_bytes":0,"params":[]}"#,
+        )
+        .unwrap();
+        assert!(Manifest::load(&dir).unwrap().graph.is_none());
+    }
+
+    #[test]
+    fn tampered_graph_unknown_edge_names_node() {
+        let e = load_with_graph(
+            "graph_edge",
+            r#"{"input":[1,8,8],"nodes":[
+                {"name":"r","op":"relu","in":["ghost"]}
+              ],"output":"r"}"#,
+        )
+        .unwrap_err();
+        let msg = format!("{e}");
+        assert!(msg.contains("node `r`") && msg.contains("unknown input `ghost`"), "{msg}");
+    }
+
+    #[test]
+    fn tampered_graph_duplicate_name_names_node() {
+        let e = load_with_graph(
+            "graph_dup",
+            r#"{"input":[1,8,8],"nodes":[
+                {"name":"r","op":"relu","in":["image"]},
+                {"name":"r","op":"relu","in":["image"]}
+              ],"output":"r"}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("duplicate node name `r`"), "{e}");
+    }
+
+    #[test]
+    fn tampered_graph_missing_output_node() {
+        let e = load_with_graph(
+            "graph_out",
+            r#"{"input":[1,8,8],"nodes":[
+                {"name":"r","op":"relu","in":["image"]}
+              ],"output":"gone"}"#,
+        )
+        .unwrap_err();
+        assert!(format!("{e}").contains("output `gone` is not a node"), "{e}");
     }
 }

@@ -6,6 +6,8 @@ pub mod graph;
 pub mod manifest;
 pub mod params;
 
-pub use graph::{Layer, Network, NetworkBuilder, Shape};
+pub use graph::{
+    GraphBuilder, GraphError, Layer, Network, NetworkBuilder, Node, NodeId, Shape, SrcRef,
+};
 pub use manifest::{artifacts_dir, Manifest};
 pub use params::{load_artifacts, Params, Tensor};

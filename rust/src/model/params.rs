@@ -8,7 +8,7 @@ use std::path::Path;
 use super::manifest::Manifest;
 
 /// One named tensor.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub struct Tensor {
     pub shape: Vec<usize>,
     pub data: Vec<f32>,
@@ -73,8 +73,12 @@ impl Params {
             let data: Vec<f32> = (0..n).map(|_| rng.normal() * scale).collect();
             tensors.insert(name, Tensor { shape, data });
         };
-        for layer in &net.layers {
-            match layer {
+        // walk the schedule so the RNG draw order is the execution
+        // order (for chains this matches the old per-layer walk
+        // bit-for-bit, keeping seeded weights stable across the IR
+        // refactor)
+        for &i in net.schedule() {
+            match &net.node(i).layer {
                 Layer::Conv { name, in_ch, out_ch, k, .. } => {
                     let wn = out_ch * in_ch * k * k;
                     let scale = (2.0 / wn as f32).sqrt();
@@ -141,6 +145,7 @@ mod tests {
             test_accuracy: 0.0,
             mask_bits_onchip: Default::default(),
             autodiff_cache_bits: 0,
+            graph: None,
         }
     }
 

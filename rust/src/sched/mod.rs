@@ -25,7 +25,7 @@
 pub mod pipeline;
 pub mod plan;
 
-pub use plan::{auto_shards, BatchOutput, Plan, Workspace};
+pub use plan::{auto_shards, BatchOutput, LiveReport, Plan, Workspace};
 
 use std::sync::Arc;
 
@@ -33,9 +33,112 @@ use crate::attribution::Method;
 use crate::fx::QFormat;
 use crate::hls::conv::{self, Post};
 use crate::hls::relu::{self, MaskSource};
-use crate::hls::{pool, vmm, Cost, HwConfig};
+use crate::hls::{eltwise, pool, vmm, Cost, HwConfig};
 use crate::model::{Network, Params};
-use plan::Unit;
+use plan::{Src, Unit};
+
+/// Resolve a unit input source to its activation slab (single image /
+/// flat batch slab).
+fn src_slice<'a>(s: Src, outs: &'a [Vec<i32>], qimg: &'a [i32]) -> &'a [i32] {
+    match s {
+        Src::Image => qimg,
+        Src::Unit(j) => outs[j].as_slice(),
+    }
+}
+
+/// Resolve a unit input source to per-image activation vectors
+/// (the stepwise batch path).
+fn src_batch<'a>(
+    s: Src,
+    outs: &'a [Option<Vec<Vec<i32>>>],
+    qimgs: &'a [Vec<i32>],
+) -> &'a [Vec<i32>] {
+    match s {
+        Src::Image => qimgs,
+        Src::Unit(j) => outs[j].as_ref().expect("schedule order: producer ran first"),
+    }
+}
+
+/// Deposit a unit's input gradient at its source (single image,
+/// stepwise path). The first deposit is free routing (the slab simply
+/// becomes the source's gradient); at a fan-out fork every later
+/// deposit is a charged `hls::eltwise::accumulate` engine pass.
+fn deposit_single(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    src: Src,
+    gi: Vec<i32>,
+    grads: &mut [Option<Vec<i32>>],
+    g_img: &mut Option<Vec<i32>>,
+) {
+    let slot = match src {
+        Src::Image => g_img,
+        Src::Unit(j) => &mut grads[j],
+    };
+    match slot {
+        None => *slot = Some(gi),
+        Some(t) => eltwise::accumulate(cfg, cost, &gi, t),
+    }
+}
+
+/// Batched twin of [`deposit_single`] (per-image accumulation).
+fn deposit_batch(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    src: Src,
+    gis: Vec<Vec<i32>>,
+    grads: &mut [Option<Vec<Vec<i32>>>],
+    g_img: &mut Option<Vec<Vec<i32>>>,
+) {
+    let slot = match src {
+        Src::Image => g_img,
+        Src::Unit(j) => &mut grads[j],
+    };
+    match slot {
+        None => *slot = Some(gis),
+        Some(t) => {
+            for (b, gi) in gis.iter().enumerate() {
+                eltwise::accumulate(cfg, cost, gi, &mut t[b]);
+            }
+        }
+    }
+}
+
+/// Flat-slab deposit for the fused workspace core: copy on first write,
+/// per-image `eltwise::accumulate` on later writes (fan-out forks).
+#[allow(clippy::too_many_arguments)]
+fn deposit_slab(
+    cfg: &HwConfig,
+    cost: &mut Cost,
+    nb: usize,
+    per: usize,
+    data: &[i32],
+    src: Src,
+    grads_before: &mut [Vec<i32>],
+    written_before: &mut [bool],
+    g_img: &mut Vec<i32>,
+    img_written: &mut bool,
+) {
+    debug_assert_eq!(data.len(), nb * per);
+    let (target, written): (&mut Vec<i32>, &mut bool) = match src {
+        Src::Image => (g_img, img_written),
+        Src::Unit(j) => (&mut grads_before[j], &mut written_before[j]),
+    };
+    if !*written {
+        target.clear();
+        target.extend_from_slice(data);
+        *written = true;
+    } else {
+        for b in 0..nb {
+            eltwise::accumulate(
+                cfg,
+                cost,
+                &data[b * per..(b + 1) * per],
+                &mut target[b * per..(b + 1) * per],
+            );
+        }
+    }
+}
 
 /// Per-image state the FP pass leaves behind for BP: exactly the data
 /// the paper keeps (DRAM activations + on-chip masks), nothing more.
@@ -206,26 +309,30 @@ impl Simulator {
         assert_eq!(image.len(), self.net.input.elems(), "input size mismatch");
         let q = self.cfg.q;
         let mut cost = Cost::new();
-        let mut act: Vec<i32> = image.iter().map(|&v| q.from_f32(v)).collect();
+        let qact: Vec<i32> = image.iter().map(|&v| q.from_f32(v)).collect();
         let n = self.plan.units.len();
         let mut state = FpState {
             dram_acts: vec![None; n],
             pool_idx: vec![None; n],
             fc_masks: vec![None; n],
         };
+        // every unit's output, kept for downstream consumers (the DAG
+        // may read any earlier unit, not just the previous one)
+        let mut outs: Vec<Vec<i32>> = Vec::with_capacity(n);
 
         for (ui, unit) in self.plan.units.iter().enumerate() {
-            match unit {
-                Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
+            let out_v: Vec<i32> = match unit {
+                Unit::Conv { name, src, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
                     let post = match (relu, pool) {
                         (true, true) => Post::ReluPool,
                         (true, false) => Post::Relu,
                         _ => Post::Plain,
                     };
+                    let act = src_slice(*src, &outs, &qact);
                     let r = conv::forward(
                         &self.cfg,
                         &mut cost,
-                        &act,
+                        act,
                         *in_shape,
                         w,
                         (*out_ch, *k),
@@ -233,42 +340,54 @@ impl Simulator {
                         *pad,
                         post,
                     );
-                    if *pool {
+                    let out_v = if *pool {
                         state.pool_idx[ui] =
                             r.pool_idx.map(|idx| pool::pack2(&idx));
-                        let pooled = r.pooled.unwrap();
-                        state.dram_acts[ui] = Some(pooled.clone());
-                        act = pooled;
+                        r.pooled.unwrap()
                     } else {
-                        state.dram_acts[ui] = Some(r.out.clone());
-                        act = r.out;
-                    }
+                        r.out
+                    };
+                    state.dram_acts[ui] = Some(out_v.clone());
                     cost.checkpoint(name);
+                    out_v
                 }
-                Unit::Pool { in_shape } => {
-                    let (p, idx) = pool::maxpool2(&self.cfg, &mut cost, &act, *in_shape);
+                Unit::Pool { src, in_shape } => {
+                    let act = src_slice(*src, &outs, &qact);
+                    let (p, idx) = pool::maxpool2(&self.cfg, &mut cost, act, *in_shape);
                     state.pool_idx[ui] = Some(pool::pack2(&idx));
                     state.dram_acts[ui] = Some(p.clone());
-                    act = p;
                     cost.checkpoint("pool");
+                    p
                 }
-                Unit::Fc { name, w, out_n, in_n, bias, relu } => {
+                Unit::Fc { name, src, w, out_n, in_n, bias, relu } => {
                     let mut mask = if *relu { Some(vec![false; *out_n]) } else { None };
-                    act = vmm::forward(
+                    let act = src_slice(*src, &outs, &qact);
+                    let out_v = vmm::forward(
                         &self.cfg,
                         &mut cost,
                         w,
                         (*out_n, *in_n),
-                        &act,
+                        act,
                         Some(bias),
                         mask.as_mut(),
                     );
                     state.fc_masks[ui] = mask;
                     cost.checkpoint(name);
+                    out_v
                 }
-            }
+                Unit::Add { name, a, b, relu, .. } => {
+                    let a_in = src_slice(*a, &outs, &qact);
+                    let b_in = src_slice(*b, &outs, &qact);
+                    let out_v = eltwise::forward(&self.cfg, &mut cost, a_in, b_in, *relu);
+                    state.dram_acts[ui] = Some(out_v.clone());
+                    cost.checkpoint(name);
+                    out_v
+                }
+            };
+            outs.push(out_v);
         }
 
+        let act = outs.last().expect("plan has no units");
         let logits: Vec<f32> = act.iter().map(|&v| q.to_f32(v)).collect();
         let pred = argmax(&logits);
         FpResult { logits, pred, cost, state }
@@ -287,27 +406,54 @@ impl Simulator {
         let q = self.cfg.q;
         let mut cost = Cost::new();
         let out_n = self.net.output_shape().elems();
-        let mut g = vec![0i32; out_n];
-        g[start_class] = q.from_f32(1.0);
+        let n = self.plan.units.len();
+        // per-unit output-gradient slots; deposits at fan-out forks
+        // accumulate (deposit_single)
+        let mut grads: Vec<Option<Vec<i32>>> = vec![None; n];
+        let mut g_img: Option<Vec<i32>> = None;
+        let mut seed = vec![0i32; out_n];
+        seed[start_class] = q.from_f32(1.0);
+        grads[n - 1] = Some(seed);
 
         for (ui, unit) in self.plan.units.iter().enumerate().rev() {
+            let mut g = grads[ui].take().expect("unit gradient never deposited");
             match unit {
-                Unit::Fc { name, w, out_n, in_n, relu, .. } => {
+                Unit::Fc { name, src, w, out_n, in_n, relu, .. } => {
                     if *relu {
                         let mask = state.fc_masks[ui].as_ref().expect("fc mask missing");
                         g = relu::backward(&self.cfg, &mut cost, method, &g, MaskSource::OnChip(mask));
                     }
-                    g = vmm::backward(&self.cfg, &mut cost, w, (*out_n, *in_n), &g);
+                    let gi = vmm::backward(&self.cfg, &mut cost, w, (*out_n, *in_n), &g);
+                    deposit_single(&self.cfg, &mut cost, *src, gi, &mut grads, &mut g_img);
                     cost.checkpoint(&format!("{name}ᵀ"));
                 }
-                Unit::Pool { in_shape } => {
+                Unit::Pool { src, in_shape } => {
                     let (c, h, w) = *in_shape;
                     let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
                     let idx = pool::unpack2(packed, c * (h / 2) * (w / 2));
-                    g = pool::unpool2(&self.cfg, &mut cost, &g, (c, h / 2, w / 2), &idx);
+                    let gi = pool::unpool2(&self.cfg, &mut cost, &g, (c, h / 2, w / 2), &idx);
+                    deposit_single(&self.cfg, &mut cost, *src, gi, &mut grads, &mut g_img);
                     cost.checkpoint("unpool");
                 }
-                Unit::Conv { name, w_bp, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                Unit::Add { name, a, b, relu, .. } => {
+                    if *relu {
+                        let act = state.dram_acts[ui].as_ref().expect("act missing");
+                        g = relu::backward(
+                            &self.cfg,
+                            &mut cost,
+                            method,
+                            &g,
+                            MaskSource::FromDram(act),
+                        );
+                    }
+                    // fan the gradient out to both sources: the routing
+                    // itself is free; a fork's *second* deposit pays the
+                    // eltwise accumulate
+                    deposit_single(&self.cfg, &mut cost, *a, g.clone(), &mut grads, &mut g_img);
+                    deposit_single(&self.cfg, &mut cost, *b, g, &mut grads, &mut g_img);
+                    cost.checkpoint(&format!("{name}ᵀ"));
+                }
+                Unit::Conv { name, src, w_bp, in_shape, out_ch, k, pad, relu, pool, .. } => {
                     let (ic, h, w) = *in_shape;
                     let op = *pad;
                     // conv output spatial dims (pre-pool)
@@ -330,7 +476,7 @@ impl Simulator {
                         }
                         let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
                         let idx = pool::unpack2(packed, *out_ch * (oh / 2) * (ow / 2));
-                        g = conv::input_grad_unpool(
+                        let gi = conv::input_grad_unpool(
                             &self.cfg,
                             &mut cost,
                             &g,
@@ -341,6 +487,7 @@ impl Simulator {
                             *k,
                             op,
                         );
+                        deposit_single(&self.cfg, &mut cost, *src, gi, &mut grads, &mut g_img);
                     } else {
                         if *pool {
                             // unfused ablation: materialize the unpooled
@@ -383,7 +530,7 @@ impl Simulator {
                                 MaskSource::FromDram(act),
                             );
                         }
-                        g = conv::input_grad(
+                        let gi = conv::input_grad(
                             &self.cfg,
                             &mut cost,
                             &g,
@@ -393,12 +540,14 @@ impl Simulator {
                             *k,
                             op,
                         );
+                        deposit_single(&self.cfg, &mut cost, *src, gi, &mut grads, &mut g_img);
                     }
                     cost.checkpoint(&format!("{name}ᵀ"));
                 }
             }
         }
 
+        let g = g_img.expect("BP must walk back to the input layer");
         (g.iter().map(|&v| q.to_f32(v)).collect(), cost)
     }
 
@@ -432,7 +581,7 @@ impl Simulator {
         }
         let q = self.cfg.q;
         let mut cost = Cost::new();
-        let mut acts: Vec<Vec<i32>> = images
+        let qimgs: Vec<Vec<i32>> = images
             .iter()
             .map(|img| img.iter().map(|&v| q.from_f32(v)).collect())
             .collect();
@@ -442,16 +591,19 @@ impl Simulator {
             pool_idx: (0..n).map(|_| None).collect(),
             fc_masks: (0..n).map(|_| None).collect(),
         };
+        // every unit's per-image outputs, kept for downstream consumers
+        let mut outs: Vec<Option<Vec<Vec<i32>>>> = (0..n).map(|_| None).collect();
 
         for (ui, unit) in self.plan.units.iter().enumerate() {
-            match unit {
-                Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
+            let new_acts: Vec<Vec<i32>> = match unit {
+                Unit::Conv { name, src, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
                     let post = match (relu, pool) {
                         (true, true) => Post::ReluPool,
                         (true, false) => Post::Relu,
                         _ => Post::Plain,
                     };
-                    let refs: Vec<&[i32]> = acts.iter().map(|a| a.as_slice()).collect();
+                    let input = src_batch(*src, &outs, &qimgs);
+                    let refs: Vec<&[i32]> = input.iter().map(|a| a.as_slice()).collect();
                     let rs = conv::forward_batch(
                         &self.cfg,
                         &mut cost,
@@ -481,27 +633,29 @@ impl Simulator {
                         }
                     }
                     state.dram_acts[ui] = Some(dram);
-                    acts = new_acts;
                     cost.checkpoint(name);
+                    new_acts
                 }
-                Unit::Pool { in_shape } => {
+                Unit::Pool { src, in_shape } => {
+                    let input = src_batch(*src, &outs, &qimgs);
                     let mut ps = Vec::with_capacity(nb);
                     let mut idxs = Vec::with_capacity(nb);
-                    for a in &acts {
+                    for a in input {
                         let (p, idx) = pool::maxpool2(&self.cfg, &mut cost, a, *in_shape);
                         idxs.push(pool::pack2(&idx));
                         ps.push(p);
                     }
                     state.pool_idx[ui] = Some(idxs);
                     state.dram_acts[ui] = Some(ps.clone());
-                    acts = ps;
                     cost.checkpoint("pool");
+                    ps
                 }
-                Unit::Fc { name, w, out_n, in_n, bias, relu } => {
+                Unit::Fc { name, src, w, out_n, in_n, bias, relu } => {
                     let mut masks =
                         if *relu { Some(vec![vec![false; *out_n]; nb]) } else { None };
-                    let refs: Vec<&[i32]> = acts.iter().map(|a| a.as_slice()).collect();
-                    acts = vmm::forward_batch(
+                    let input = src_batch(*src, &outs, &qimgs);
+                    let refs: Vec<&[i32]> = input.iter().map(|a| a.as_slice()).collect();
+                    let new_acts = vmm::forward_batch(
                         &self.cfg,
                         &mut cost,
                         w,
@@ -512,11 +666,29 @@ impl Simulator {
                     );
                     state.fc_masks[ui] = masks;
                     cost.checkpoint(name);
+                    new_acts
                 }
-            }
+                Unit::Add { name, a, b, relu, .. } => {
+                    let mut new_acts = Vec::with_capacity(nb);
+                    let mut dram = Vec::with_capacity(nb);
+                    for img in 0..nb {
+                        let a_in = &src_batch(*a, &outs, &qimgs)[img];
+                        let b_in = &src_batch(*b, &outs, &qimgs)[img];
+                        let o = eltwise::forward(&self.cfg, &mut cost, a_in, b_in, *relu);
+                        dram.push(o.clone());
+                        new_acts.push(o);
+                    }
+                    state.dram_acts[ui] = Some(dram);
+                    cost.checkpoint(name);
+                    new_acts
+                }
+            };
+            outs[ui] = Some(new_acts);
         }
 
-        let logits: Vec<Vec<f32>> = acts
+        let logits: Vec<Vec<f32>> = outs[n - 1]
+            .as_ref()
+            .expect("plan has no units")
             .iter()
             .map(|a| a.iter().map(|&v| q.to_f32(v)).collect())
             .collect();
@@ -552,7 +724,10 @@ impl Simulator {
         let q = self.cfg.q;
         let mut cost = Cost::new();
         let out_n = self.net.output_shape().elems();
-        let mut gs: Vec<Vec<i32>> = start_classes
+        let n = self.plan.units.len();
+        let mut grads: Vec<Option<Vec<Vec<i32>>>> = vec![None; n];
+        let mut g_img: Option<Vec<Vec<i32>>> = None;
+        let seed: Vec<Vec<i32>> = start_classes
             .iter()
             .map(|&c| {
                 let mut g = vec![0i32; out_n];
@@ -560,10 +735,12 @@ impl Simulator {
                 g
             })
             .collect();
+        grads[n - 1] = Some(seed);
 
         for (ui, unit) in self.plan.units.iter().enumerate().rev() {
+            let mut gs = grads[ui].take().expect("unit gradient never deposited");
             match unit {
-                Unit::Fc { name, w, out_n, in_n, relu, .. } => {
+                Unit::Fc { name, src, w, out_n, in_n, relu, .. } => {
                     if *relu {
                         let masks = state.fc_masks[ui].as_ref().expect("fc masks missing");
                         for (b, g) in gs.iter_mut().enumerate() {
@@ -577,19 +754,39 @@ impl Simulator {
                         }
                     }
                     let refs: Vec<&[i32]> = gs.iter().map(|g| g.as_slice()).collect();
-                    gs = vmm::backward_batch(&self.cfg, &mut cost, w, (*out_n, *in_n), &refs);
+                    let gis = vmm::backward_batch(&self.cfg, &mut cost, w, (*out_n, *in_n), &refs);
+                    deposit_batch(&self.cfg, &mut cost, *src, gis, &mut grads, &mut g_img);
                     cost.checkpoint(&format!("{name}ᵀ"));
                 }
-                Unit::Pool { in_shape } => {
+                Unit::Pool { src, in_shape } => {
                     let (c, h, w) = *in_shape;
                     let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
-                    for (b, g) in gs.iter_mut().enumerate() {
+                    let mut gis = Vec::with_capacity(nb);
+                    for (b, g) in gs.iter().enumerate() {
                         let idx = pool::unpack2(&packed[b], c * (h / 2) * (w / 2));
-                        *g = pool::unpool2(&self.cfg, &mut cost, g, (c, h / 2, w / 2), &idx);
+                        gis.push(pool::unpool2(&self.cfg, &mut cost, g, (c, h / 2, w / 2), &idx));
                     }
+                    deposit_batch(&self.cfg, &mut cost, *src, gis, &mut grads, &mut g_img);
                     cost.checkpoint("unpool");
                 }
-                Unit::Conv { name, w_bp, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                Unit::Add { name, a, b, relu, .. } => {
+                    if *relu {
+                        let acts = state.dram_acts[ui].as_ref().expect("act missing");
+                        for (b_i, g) in gs.iter_mut().enumerate() {
+                            *g = relu::backward(
+                                &self.cfg,
+                                &mut cost,
+                                method,
+                                g,
+                                MaskSource::FromDram(&acts[b_i]),
+                            );
+                        }
+                    }
+                    deposit_batch(&self.cfg, &mut cost, *a, gs.clone(), &mut grads, &mut g_img);
+                    deposit_batch(&self.cfg, &mut cost, *b, gs, &mut grads, &mut g_img);
+                    cost.checkpoint(&format!("{name}ᵀ"));
+                }
+                Unit::Conv { name, src, w_bp, in_shape, out_ch, k, pad, relu, pool, .. } => {
                     let (ic, h, w) = *in_shape;
                     let op = *pad;
                     // conv output spatial dims (pre-pool)
@@ -615,7 +812,7 @@ impl Simulator {
                             .collect();
                         let grefs: Vec<&[i32]> = gs.iter().map(|g| g.as_slice()).collect();
                         let irefs: Vec<&[u8]> = idxs.iter().map(|i| i.as_slice()).collect();
-                        gs = conv::input_grad_unpool_batch(
+                        let gis = conv::input_grad_unpool_batch(
                             &self.cfg,
                             &mut cost,
                             &grefs,
@@ -626,6 +823,7 @@ impl Simulator {
                             *k,
                             op,
                         );
+                        deposit_batch(&self.cfg, &mut cost, *src, gis, &mut grads, &mut g_img);
                     } else {
                         if *pool {
                             let packed = state.pool_idx[ui].as_ref().expect("pool idx missing");
@@ -674,7 +872,7 @@ impl Simulator {
                             }
                         }
                         let refs: Vec<&[i32]> = gs.iter().map(|g| g.as_slice()).collect();
-                        gs = conv::input_grad_batch(
+                        let gis = conv::input_grad_batch(
                             &self.cfg,
                             &mut cost,
                             &refs,
@@ -684,13 +882,15 @@ impl Simulator {
                             *k,
                             op,
                         );
+                        deposit_batch(&self.cfg, &mut cost, *src, gis, &mut grads, &mut g_img);
                     }
                     cost.checkpoint(&format!("{name}ᵀ"));
                 }
             }
         }
 
-        let rel = gs
+        let rel = g_img
+            .expect("BP must walk back to the input layer")
             .iter()
             .map(|g| g.iter().map(|&v| q.to_f32(v)).collect())
             .collect();
@@ -769,6 +969,10 @@ impl Simulator {
             ws.pool_idx.resize_with(n_units, Vec::new);
             ws.fc_masks.resize_with(n_units, Vec::new);
         }
+        if ws.grads.len() < n_units {
+            ws.grads.resize_with(n_units, Vec::new);
+        }
+        ws.grad_written.resize(n_units, false);
         let Workspace {
             scratch,
             conv_out,
@@ -777,8 +981,10 @@ impl Simulator {
             pool_idx,
             fc_masks,
             idx_scratch,
-            g_a,
-            g_b,
+            grads,
+            grad_written,
+            g_img,
+            g_tmp,
             tmp,
             ..
         } = ws;
@@ -794,15 +1000,15 @@ impl Simulator {
         }
 
         for (ui, unit) in units.iter().enumerate() {
-            // every unit writes acts[ui]; its input is the previous
-            // unit's slab (the activation the paper leaves in DRAM —
-            // stored exactly once, not cloned)
+            // every unit writes acts[ui]; its inputs resolve through the
+            // plan's Src wiring to earlier units' slabs (the activations
+            // the paper leaves in DRAM — stored exactly once, not
+            // cloned) or to the quantized image
             let (before, rest) = acts.split_at_mut(ui);
             let cur = &mut rest[0];
-            let input: &[i32] =
-                if ui == 0 { qimg.as_slice() } else { before[ui - 1].as_slice() };
             match unit {
-                Unit::Conv { name, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                Unit::Conv { name, src, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
+                    let input = src_slice(*src, before, qimg);
                     let post = match (relu, pool) {
                         (true, true) => Post::ReluPool,
                         (true, false) => Post::Relu,
@@ -842,7 +1048,8 @@ impl Simulator {
                         fp_cost.checkpoint(name);
                     }
                 }
-                Unit::Pool { in_shape } => {
+                Unit::Pool { src, in_shape } => {
+                    let input = src_slice(*src, before, qimg);
                     let (c, h, w_n) = *in_shape;
                     let full_elems = c * h * w_n;
                     let pooled_elems = c * (h / 2) * (w_n / 2);
@@ -863,7 +1070,8 @@ impl Simulator {
                         fp_cost.checkpoint("pool");
                     }
                 }
-                Unit::Fc { name, w, out_n, in_n, bias, relu } => {
+                Unit::Fc { name, src, w, out_n, in_n, bias, relu } => {
+                    let input = src_slice(*src, before, qimg);
                     let mask_opt: Option<&mut [bool]> = if *relu {
                         let m = &mut fc_masks[ui];
                         m.resize(nb * *out_n, false);
@@ -888,6 +1096,25 @@ impl Simulator {
                         fp_cost.checkpoint(name);
                     }
                 }
+                Unit::Add { name, a, b, elems, relu } => {
+                    let a_in = src_slice(*a, before, qimg);
+                    let b_in = src_slice(*b, before, qimg);
+                    let e = *elems;
+                    cur.resize(nb * e, 0);
+                    for bi in 0..nb {
+                        eltwise::forward_slice(
+                            cfg,
+                            &mut fp_cost,
+                            &a_in[bi * e..(bi + 1) * e],
+                            &b_in[bi * e..(bi + 1) * e],
+                            *relu,
+                            &mut cur[bi * e..(bi + 1) * e],
+                        );
+                    }
+                    if record_layers {
+                        fp_cost.checkpoint(name);
+                    }
+                }
             }
         }
 
@@ -906,22 +1133,33 @@ impl Simulator {
         }
 
         // ---- BP: one-hot per image, walk the plan in reverse --------
+        // Gradients live in per-unit workspace slabs (`ws.grads[ui]` is
+        // the gradient w.r.t. unit ui's output). Chains see exactly one
+        // deposit per slab — a free move, so cost stays bit-identical
+        // to the pre-DAG path. A fan-out fork's second deposit is a
+        // charged per-image `eltwise::accumulate` engine pass.
         let mut bp_cost = Cost::new();
-        g_a.resize(nb * out_n, 0);
-        g_a.fill(0);
-        let one = q.from_f32(1.0);
-        for b in 0..nb {
-            let start = opts.target.unwrap_or(out.preds[b]);
-            g_a[b * out_n + start] = one;
+        grad_written.iter_mut().for_each(|w| *w = false);
+        let mut img_written = false;
+        {
+            let g_last = &mut grads[n_units - 1];
+            g_last.resize(nb * out_n, 0);
+            g_last.fill(0);
+            let one = q.from_f32(1.0);
+            for b in 0..nb {
+                let start = opts.target.unwrap_or(out.preds[b]);
+                g_last[b * out_n + start] = one;
+            }
+            grad_written[n_units - 1] = true;
         }
-        // gradient ping-pong between the two workspace slabs
-        let mut gin: &mut Vec<i32> = g_a;
-        let mut gout: &mut Vec<i32> = g_b;
-        let mut g_len = out_n; // per-image gradient length
 
         for (ui, unit) in units.iter().enumerate().rev() {
+            assert!(grad_written[ui], "unit gradient never deposited");
+            let (gs_before, gs_rest) = grads.split_at_mut(ui);
+            let gcur: &mut Vec<i32> = &mut gs_rest[0];
+            let (w_before, _) = grad_written.split_at_mut(ui);
             match unit {
-                Unit::Fc { name, w, out_n: fo, in_n: fi, relu, .. } => {
+                Unit::Fc { name, src, w, out_n: fo, in_n: fi, relu, .. } => {
                     if *relu {
                         let masks = &fc_masks[ui];
                         for b in 0..nb {
@@ -929,8 +1167,8 @@ impl Simulator {
                                 cfg,
                                 &mut bp_cost,
                                 method,
-                                &mut gin[b * g_len..(b + 1) * g_len],
-                                MaskSource::OnChip(&masks[b * g_len..(b + 1) * g_len]),
+                                &mut gcur[b * *fo..(b + 1) * *fo],
+                                MaskSource::OnChip(&masks[b * *fo..(b + 1) * *fo]),
                             );
                         }
                     }
@@ -940,48 +1178,69 @@ impl Simulator {
                         scratch,
                         w,
                         (*fo, *fi),
-                        gin,
+                        gcur,
                         nb,
                         shards,
-                        gout,
+                        g_tmp,
                     );
-                    std::mem::swap(&mut gin, &mut gout);
-                    g_len = *fi;
+                    deposit_slab(
+                        cfg,
+                        &mut bp_cost,
+                        nb,
+                        *fi,
+                        g_tmp,
+                        *src,
+                        gs_before,
+                        w_before,
+                        g_img,
+                        &mut img_written,
+                    );
                     if record_layers {
                         bp_cost.checkpoint(&format!("{name}ᵀ"));
                     }
                 }
-                Unit::Pool { in_shape } => {
+                Unit::Pool { src, in_shape } => {
                     let (c, h, w_n) = *in_shape;
                     let full_elems = c * h * w_n;
-                    pool::unpack2_slab_into(&pool_idx[ui], nb, g_len, idx_scratch);
-                    gout.resize(nb * full_elems, 0);
+                    let pooled = c * (h / 2) * (w_n / 2);
+                    pool::unpack2_slab_into(&pool_idx[ui], nb, pooled, idx_scratch);
+                    g_tmp.resize(nb * full_elems, 0);
                     for b in 0..nb {
                         pool::unpool2_into(
                             cfg,
                             &mut bp_cost,
-                            &gin[b * g_len..(b + 1) * g_len],
+                            &gcur[b * pooled..(b + 1) * pooled],
                             (c, h / 2, w_n / 2),
-                            &idx_scratch[b * g_len..(b + 1) * g_len],
-                            &mut gout[b * full_elems..(b + 1) * full_elems],
+                            &idx_scratch[b * pooled..(b + 1) * pooled],
+                            &mut g_tmp[b * full_elems..(b + 1) * full_elems],
                         );
                     }
-                    std::mem::swap(&mut gin, &mut gout);
-                    g_len = full_elems;
+                    deposit_slab(
+                        cfg,
+                        &mut bp_cost,
+                        nb,
+                        full_elems,
+                        g_tmp,
+                        *src,
+                        gs_before,
+                        w_before,
+                        g_img,
+                        &mut img_written,
+                    );
                     if record_layers {
                         bp_cost.checkpoint("unpool");
                     }
                 }
                 Unit::Conv {
-                    name, w_bp, w_sc, in_shape, out_ch, k, pad, relu, pool, ..
+                    name, src, w_bp, w_sc, in_shape, out_ch, k, pad, relu, pool, ..
                 } => {
                     let (ic, h, w_n) = *in_shape;
                     let (k_v, op, oc_v) = (*k, *pad, *out_ch);
                     let oh = h + 2 * op - (k_v - 1);
                     let ow = w_n + 2 * op - (k_v - 1);
                     if *pool && opts.fused_unpool {
-                        // gradient arrives on the pooled grid: g_len ==
-                        // oc_v * (oh/2) * (ow/2)
+                        // gradient arrives on the pooled grid
+                        let pooled_len = oc_v * (oh / 2) * (ow / 2);
                         if *relu {
                             let acts_u = &acts[ui];
                             for b in 0..nb {
@@ -989,19 +1248,19 @@ impl Simulator {
                                     cfg,
                                     &mut bp_cost,
                                     method,
-                                    &mut gin[b * g_len..(b + 1) * g_len],
+                                    &mut gcur[b * pooled_len..(b + 1) * pooled_len],
                                     MaskSource::FromDram(
-                                        &acts_u[b * g_len..(b + 1) * g_len],
+                                        &acts_u[b * pooled_len..(b + 1) * pooled_len],
                                     ),
                                 );
                             }
                         }
-                        pool::unpack2_slab_into(&pool_idx[ui], nb, g_len, idx_scratch);
+                        pool::unpack2_slab_into(&pool_idx[ui], nb, pooled_len, idx_scratch);
                         conv::input_grad_unpool_batch_into(
                             cfg,
                             &mut bp_cost,
                             scratch,
-                            gin,
+                            gcur,
                             nb,
                             (oc_v, oh / 2, ow / 2),
                             idx_scratch,
@@ -1010,30 +1269,38 @@ impl Simulator {
                             k_v,
                             op,
                             shards,
-                            gout,
+                            g_tmp,
                         );
-                        std::mem::swap(&mut gin, &mut gout);
-                        g_len = ic * h * w_n;
+                        deposit_slab(
+                            cfg,
+                            &mut bp_cost,
+                            nb,
+                            ic * h * w_n,
+                            g_tmp,
+                            *src,
+                            gs_before,
+                            w_before,
+                            g_img,
+                            &mut img_written,
+                        );
                     } else {
                         if *pool {
                             // unfused ablation: materialize the unpooled
                             // gradient, then mask on the full grid
                             let full = oc_v * oh * ow;
-                            pool::unpack2_slab_into(&pool_idx[ui], nb, g_len, idx_scratch);
-                            gout.resize(nb * full, 0);
+                            let pooled_len = oc_v * (oh / 2) * (ow / 2);
+                            pool::unpack2_slab_into(&pool_idx[ui], nb, pooled_len, idx_scratch);
+                            g_tmp.resize(nb * full, 0);
                             for b in 0..nb {
                                 pool::unpool2_into(
                                     cfg,
                                     &mut bp_cost,
-                                    &gin[b * g_len..(b + 1) * g_len],
+                                    &gcur[b * pooled_len..(b + 1) * pooled_len],
                                     (oc_v, oh / 2, ow / 2),
-                                    &idx_scratch[b * g_len..(b + 1) * g_len],
-                                    &mut gout[b * full..(b + 1) * full],
+                                    &idx_scratch[b * pooled_len..(b + 1) * pooled_len],
+                                    &mut g_tmp[b * full..(b + 1) * full],
                                 );
                             }
-                            let pooled_len = g_len;
-                            std::mem::swap(&mut gin, &mut gout);
-                            g_len = full;
                             if *relu {
                                 let acts_u = &acts[ui];
                                 tmp.resize(nb * full, 0);
@@ -1050,45 +1317,118 @@ impl Simulator {
                                         cfg,
                                         &mut bp_cost,
                                         method,
-                                        &mut gin[b * full..(b + 1) * full],
+                                        &mut g_tmp[b * full..(b + 1) * full],
                                         MaskSource::FromDram(&tmp[b * full..(b + 1) * full]),
                                     );
                                 }
                             }
-                        } else if *relu {
-                            let acts_u = &acts[ui];
-                            for b in 0..nb {
-                                relu::backward_in_place(
-                                    cfg,
-                                    &mut bp_cost,
-                                    method,
-                                    &mut gin[b * g_len..(b + 1) * g_len],
-                                    MaskSource::FromDram(&acts_u[b * g_len..(b + 1) * g_len]),
-                                );
+                            // plain BP conv: the forward engine with the
+                            // flipped-transposed weight view
+                            let bp_pad = k_v - 1 - op;
+                            conv::forward_batch_into(
+                                cfg,
+                                &mut bp_cost,
+                                scratch,
+                                g_tmp,
+                                nb,
+                                (oc_v, oh, ow),
+                                w_bp,
+                                (ic, k_v),
+                                None,
+                                bp_pad,
+                                Post::Plain,
+                                shards,
+                                conv_out,
+                            );
+                        } else {
+                            let full = oc_v * oh * ow;
+                            if *relu {
+                                let acts_u = &acts[ui];
+                                for b in 0..nb {
+                                    relu::backward_in_place(
+                                        cfg,
+                                        &mut bp_cost,
+                                        method,
+                                        &mut gcur[b * full..(b + 1) * full],
+                                        MaskSource::FromDram(&acts_u[b * full..(b + 1) * full]),
+                                    );
+                                }
                             }
+                            // plain BP conv: the forward engine with the
+                            // flipped-transposed weight view
+                            let bp_pad = k_v - 1 - op;
+                            conv::forward_batch_into(
+                                cfg,
+                                &mut bp_cost,
+                                scratch,
+                                gcur,
+                                nb,
+                                (oc_v, oh, ow),
+                                w_bp,
+                                (ic, k_v),
+                                None,
+                                bp_pad,
+                                Post::Plain,
+                                shards,
+                                conv_out,
+                            );
                         }
-                        // plain BP conv: the forward engine with the
-                        // flipped-transposed weight view
-                        let bp_pad = k_v - 1 - op;
-                        conv::forward_batch_into(
+                        deposit_slab(
                             cfg,
                             &mut bp_cost,
-                            scratch,
-                            gin,
                             nb,
-                            (oc_v, oh, ow),
-                            w_bp,
-                            (ic, k_v),
-                            None,
-                            bp_pad,
-                            Post::Plain,
-                            shards,
-                            conv_out,
+                            ic * h * w_n,
+                            &conv_out.out,
+                            *src,
+                            gs_before,
+                            w_before,
+                            g_img,
+                            &mut img_written,
                         );
-                        std::mem::swap(gout, &mut conv_out.out);
-                        std::mem::swap(&mut gin, &mut gout);
-                        g_len = ic * h * w_n;
                     }
+                    if record_layers {
+                        bp_cost.checkpoint(&format!("{name}ᵀ"));
+                    }
+                }
+                Unit::Add { name, a, b: bsrc, elems, relu } => {
+                    let per = *elems;
+                    if *relu {
+                        let acts_u = &acts[ui];
+                        for b_i in 0..nb {
+                            relu::backward_in_place(
+                                cfg,
+                                &mut bp_cost,
+                                method,
+                                &mut gcur[b_i * per..(b_i + 1) * per],
+                                MaskSource::FromDram(&acts_u[b_i * per..(b_i + 1) * per]),
+                            );
+                        }
+                    }
+                    // the add's gradient flows unchanged to both sources
+                    deposit_slab(
+                        cfg,
+                        &mut bp_cost,
+                        nb,
+                        per,
+                        gcur,
+                        *a,
+                        gs_before,
+                        w_before,
+                        g_img,
+                        &mut img_written,
+                    );
+                    deposit_slab(
+                        cfg,
+                        &mut bp_cost,
+                        nb,
+                        per,
+                        gcur,
+                        *bsrc,
+                        gs_before,
+                        w_before,
+                        g_img,
+                        &mut img_written,
+                    );
                     if record_layers {
                         bp_cost.checkpoint(&format!("{name}ᵀ"));
                     }
@@ -1096,9 +1436,9 @@ impl Simulator {
             }
         }
 
-        assert_eq!(g_len, in_elems, "BP must walk back to the input layer");
+        assert!(img_written, "BP must walk back to the input layer");
         out.relevance.resize(nb * in_elems, 0.0);
-        for (r, &v) in out.relevance.iter_mut().zip(gin.iter()) {
+        for (r, &v) in out.relevance.iter_mut().zip(g_img.iter()) {
             *r = q.to_f32(v);
         }
         out.nb = nb;
@@ -1447,5 +1787,140 @@ mod tests {
     fn argmax_first_max_wins() {
         assert_eq!(argmax(&[1.0, 3.0, 3.0, 2.0]), 1);
         assert_eq!(argmax(&[-1.0]), 0);
+    }
+
+    /// The skip-connection example graph ([3,16,16] stem → residual
+    /// block → pool → fc head) with seeded synthetic weights.
+    fn residual_model(seed: u64) -> (Network, Params) {
+        let net = Network::from_graph_str(include_str!(
+            "../../../examples/graphs/residual16.graph.json"
+        ))
+        .unwrap();
+        let params = Params::synthetic(&net, seed);
+        (net, params)
+    }
+
+    #[test]
+    fn residual_plan_fuses_add_relu_and_reports_live_ranges() {
+        let (net, params) = residual_model(60);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        // stem(+relu), b1(+relu), add(+relu), pool, fc1(+relu), fc2
+        assert_eq!(sim.plan().units.len(), 6);
+        assert!(sim
+            .plan()
+            .units
+            .iter()
+            .any(|u| matches!(u, Unit::Add { relu: true, .. })));
+        let lr = sim.plan().live_report();
+        let per_unit: Vec<usize> = sim.plan().units.iter().map(|u| u.out_elems()).collect();
+        assert_eq!(lr.act_elems, per_unit.iter().sum::<usize>());
+        assert_eq!(lr.grad_elems, lr.act_elems);
+        // the fork keeps at least the widest unit's gradient live
+        // alongside another, so the peak sits strictly between the
+        // single widest slab and the full allocation
+        let widest = *per_unit.iter().max().unwrap();
+        assert!(lr.grad_peak_elems >= widest);
+        assert!(lr.grad_peak_elems <= lr.grad_elems);
+    }
+
+    #[test]
+    fn residual_stepwise_matches_fused_core() {
+        // skip connections exercise the fan-out deposit rule: the
+        // stepwise and fused walks must still agree bit-for-bit on
+        // results AND on the cycle ledger (same engine sequence)
+        let (net, params) = residual_model(61);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let img = image(62, 3 * 16 * 16);
+        for method in crate::attribution::ALL_METHODS {
+            let fp = sim.forward(&img);
+            let (rel, bp_cost) =
+                sim.backward(&fp.state, fp.pred, method, AttrOptions::default());
+            let fused = sim.attribute(&img, method, AttrOptions::default());
+            assert_eq!(fused.logits, fp.logits, "{method}: logits");
+            assert_eq!(fused.pred, fp.pred, "{method}: pred");
+            assert_eq!(fused.relevance, rel, "{method}: relevance");
+            assert_eq!(
+                fused.fp_cost.total_cycles(),
+                fp.cost.total_cycles(),
+                "{method}: fp cycles"
+            );
+            assert_eq!(
+                fused.bp_cost.total_cycles(),
+                bp_cost.total_cycles(),
+                "{method}: bp cycles"
+            );
+        }
+    }
+
+    #[test]
+    fn residual_batch_matches_single() {
+        let (net, params) = residual_model(63);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let imgs: Vec<Vec<f32>> = (0..3).map(|i| image(70 + i, 3 * 16 * 16)).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        for method in crate::attribution::ALL_METHODS {
+            let batch = sim.attribute_batch(&refs, method, AttrOptions::default());
+            for (i, item) in batch.items.iter().enumerate() {
+                let single = sim.attribute(&imgs[i], method, AttrOptions::default());
+                assert_eq!(item.logits, single.logits, "{method}: image {i} logits");
+                assert_eq!(item.relevance, single.relevance, "{method}: image {i} relevance");
+            }
+            // the stepwise batch twin agrees as well
+            let fp = sim.forward_batch(&refs);
+            let (rels, _) =
+                sim.backward_batch(&fp.state, &fp.preds, method, AttrOptions::default());
+            for (i, item) in batch.items.iter().enumerate() {
+                assert_eq!(rels[i], item.relevance, "{method}: stepwise batch image {i}");
+            }
+        }
+    }
+
+    #[test]
+    fn residual_shard_counts_are_bit_exact() {
+        let (net, params) = residual_model(64);
+        let sim = Simulator::new(net, &params, HwConfig::pynq_z2()).unwrap();
+        let imgs: Vec<Vec<f32>> = (0..4).map(|i| image(80 + i, 3 * 16 * 16)).collect();
+        let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+        let mut base = BatchOutput::new();
+        sim.attribute_batch_into(
+            &mut Workspace::with_shards(1),
+            &refs,
+            Method::Guided,
+            AttrOptions::default(),
+            false,
+            &mut base,
+        );
+        for shards in [2, 4] {
+            let mut out = BatchOutput::new();
+            sim.attribute_batch_into(
+                &mut Workspace::with_shards(shards),
+                &refs,
+                Method::Guided,
+                AttrOptions::default(),
+                false,
+                &mut out,
+            );
+            assert_eq!(out.relevance, base.relevance, "shards {shards}");
+            assert_eq!(out.logits, base.logits, "shards {shards}");
+            assert_eq!(out.fp_cost.total_cycles(), base.fp_cost.total_cycles());
+            assert_eq!(out.bp_cost.total_cycles(), base.bp_cost.total_cycles());
+        }
+    }
+
+    #[test]
+    fn standalone_relu_is_rejected_by_plan() {
+        // a ReLU that no conv/fc/add producer can absorb has no engine
+        // to run on — the plan compiler says so by name
+        use crate::model::{GraphBuilder, Layer};
+        let net = GraphBuilder::new(Shape::Chw(1, 4, 4))
+            .node("r", Layer::Relu, &["image".into()])
+            .node("flat", Layer::Flatten, &["r".into()])
+            .node("fc", Layer::Fc { name: "fc".into(), in_dim: 16, out_dim: 2 }, &["flat".into()])
+            .output("fc")
+            .build()
+            .unwrap();
+        let params = Params::synthetic(&net, 1);
+        let err = Plan::new(net, &params, HwConfig::pynq_z2()).unwrap_err();
+        assert!(err.to_string().contains("standalone ReLU"), "{err}");
     }
 }

@@ -1,19 +1,25 @@
 //! Shared execution plan + per-thread workspace arena (the host mirror
 //! of the paper's fixed on-chip resource budget, DESIGN.md
-//! §Plan/Workspace memory architecture).
+//! §Plan/Workspace memory architecture and §graph IR).
 //!
 //! A [`Plan`] is the *immutable* compiled model: quantized FP weights,
 //! the flipped-transposed BP views (Table I), the scatter-ordered
 //! unpool-conv views, fused execution units and the hardware
-//! configuration. It is built once and shared behind an `Arc` by every
-//! coordinator worker and fleet device — weights are never cloned per
-//! thread, so N workers cost one copy of the model, not N.
+//! configuration. Compilation walks the network's topological
+//! *schedule* (the graph IR), fusing ReLU/pool into their producer
+//! exactly when the producer's output has no other consumer, and wiring
+//! every unit to its input [`Src`] — so skip-connection DAGs compile
+//! with the same machinery as chains. It is built once and shared
+//! behind an `Arc` by every coordinator worker and fleet device —
+//! weights are never cloned per thread, so N workers cost one copy of
+//! the model, not N.
 //!
 //! A [`Workspace`] is the *mutable* per-thread arena: the padded-input
 //! slab, accumulator tiles, activation slabs, packed 2-bit pool-argmax
-//! slabs, FC ReLU mask slabs and the BP gradient ping-pong buffers.
-//! Every buffer is resized in place and keeps its capacity across
-//! calls, so after one warm-up pass the whole
+//! slabs, FC ReLU mask slabs and the per-unit BP gradient slabs (sized
+//! from the plan's live ranges, not Table-III constants). Every buffer
+//! is resized in place and keeps its capacity across calls, so after
+//! one warm-up pass the whole
 //! [`Simulator::attribute_batch_into`](super::Simulator::attribute_batch_into)
 //! path performs **zero heap allocations** (asserted by the
 //! `alloc_regression` test). `shards` sets how many scoped threads the
@@ -26,13 +32,22 @@ use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::hls::conv::{self, ConvBatchOut};
 use crate::hls::{Cost, EngineScratch, HwConfig};
-use crate::model::{Layer, Network, Params, Shape};
+use crate::model::{Layer, Network, NodeId, Params, Shape, SrcRef};
+
+/// Where a unit reads its input activation from: the quantized input
+/// image or another unit's stored output.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) enum Src {
+    Image,
+    Unit(usize),
+}
 
 /// One fused execution unit of the plan.
 #[derive(Clone, Debug)]
 pub(crate) enum Unit {
     Conv {
         name: String,
+        src: Src,
         w: Vec<i32>,    // [O,I,K,K] — FP view
         w_bp: Vec<i32>, // flipped-transposed view (Table I BP load)
         /// Scatter-ordered view of `w_bp` ([Cg,K,K,O]) for the fused
@@ -47,16 +62,77 @@ pub(crate) enum Unit {
         pool: bool,
     },
     Pool {
+        src: Src,
         in_shape: (usize, usize, usize),
     },
     Fc {
         name: String,
+        src: Src,
         w: Vec<i32>, // [OUT,IN]
         out_n: usize,
         in_n: usize,
         bias: Vec<i32>,
         relu: bool,
     },
+    /// Elementwise saturating add (residual join), optional fused ReLU.
+    /// BP fans the incoming gradient out to both sources.
+    Add {
+        name: String,
+        a: Src,
+        b: Src,
+        elems: usize,
+        relu: bool,
+    },
+}
+
+impl Unit {
+    /// Output element count (batch 1) — the unit's activation slab and
+    /// gradient slab size.
+    pub(crate) fn out_elems(&self) -> usize {
+        match self {
+            Unit::Conv { in_shape: (_, h, w), out_ch, k, pad, pool, .. } => {
+                let oh = h + 2 * pad - (k - 1);
+                let ow = w + 2 * pad - (k - 1);
+                if *pool {
+                    out_ch * (oh / 2) * (ow / 2)
+                } else {
+                    out_ch * oh * ow
+                }
+            }
+            Unit::Pool { in_shape: (c, h, w), .. } => c * (h / 2) * (w / 2),
+            Unit::Fc { out_n, .. } => *out_n,
+            Unit::Add { elems, .. } => *elems,
+        }
+    }
+
+    /// Input sources, in operand order.
+    pub(crate) fn srcs(&self) -> [Option<Src>; 2] {
+        match self {
+            Unit::Conv { src, .. } | Unit::Pool { src, .. } | Unit::Fc { src, .. } => {
+                [Some(*src), None]
+            }
+            Unit::Add { a, b, .. } => [Some(*a), Some(*b)],
+        }
+    }
+}
+
+/// Memory shape of a compiled plan, derived from the schedule's live
+/// ranges (DESIGN.md §graph IR): what the per-thread [`Workspace`]
+/// will hold at batch 1.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct LiveReport {
+    /// Sum of all unit activation slabs (every unit's output is stored
+    /// exactly once in "DRAM").
+    pub act_elems: usize,
+    /// Sum of all per-unit gradient slabs (the workspace allocation).
+    pub grad_elems: usize,
+    /// High-water mark of *live* gradient elements across the reverse
+    /// schedule: a unit's gradient is born when its last-scheduled
+    /// consumer deposits into it and dies once the unit itself has run
+    /// its backward pass. This is the minimum slab budget a
+    /// ping-pong/overlay allocator would need — reported so topology
+    /// cost is visible (`attrax model` prints it).
+    pub grad_peak_elems: usize,
 }
 
 /// The immutable compiled model: network graph, hardware configuration
@@ -74,17 +150,48 @@ pub struct Plan {
 }
 
 impl Plan {
-    /// Quantize parameters and build the fused execution plan.
+    /// Quantize parameters and build the fused execution plan from the
+    /// network's topological schedule.
     pub fn new(net: Network, params: &Params, cfg: HwConfig) -> anyhow::Result<Plan> {
         cfg.validate()?;
         let q = cfg.q;
         let quant = |t: &crate::model::Tensor| -> Vec<i32> {
             t.data.iter().map(|&v| q.from_f32(v)).collect()
         };
+        let consumers = net.consumers();
+        // the sole consumer of node i, if it has exactly one
+        let sole = |i: usize| -> Option<usize> {
+            match consumers[i].as_slice() {
+                [c] => Some(*c),
+                _ => None,
+            }
+        };
+        let n_nodes = net.nodes().len();
+        let mut absorbed = vec![false; n_nodes];
+        // node output -> compiled source (absorbed nodes point at the
+        // unit that fused them; Flatten aliases its producer)
+        let mut src_of: Vec<Option<Src>> = vec![None; n_nodes];
+        let resolve = |s: SrcRef, src_of: &[Option<Src>]| -> Src {
+            match s {
+                SrcRef::Image => Src::Image,
+                SrcRef::Node(NodeId(j)) => {
+                    src_of[j].expect("schedule order: producer compiled before consumer")
+                }
+            }
+        };
+        let chw = |s: Shape, what: &str| -> anyhow::Result<(usize, usize, usize)> {
+            match s {
+                Shape::Chw(c, h, w) => Ok((c, h, w)),
+                s => anyhow::bail!("{what} on non-CHW input {s}"),
+            }
+        };
         let mut units = Vec::new();
-        let mut i = 0;
-        while i < net.layers.len() {
-            match &net.layers[i] {
+        for &i in net.schedule() {
+            if absorbed[i] {
+                continue;
+            }
+            let nd = net.node(i);
+            match &nd.layer {
                 Layer::Conv { name, in_ch, out_ch, k, pad } => {
                     let (wt, bt) = params.conv(name)?;
                     anyhow::ensure!(
@@ -94,8 +201,14 @@ impl Plan {
                     );
                     let w = quant(wt);
                     let w_bp = conv::flip_transpose(&w, *out_ch, *in_ch, *k);
-                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
-                    let pool = relu && matches!(net.layers.get(i + 2), Some(Layer::MaxPool2));
+                    // fuse the ReLU iff it is this conv's sole consumer
+                    // (no one else reads the pre-ReLU output); fuse the
+                    // pool iff it is in turn that ReLU's sole consumer
+                    let r = sole(i).filter(|&r| net.node(r).layer == Layer::Relu);
+                    let p = r
+                        .and_then(sole)
+                        .filter(|&p| net.node(p).layer == Layer::MaxPool2);
+                    let (relu, pool) = (r.is_some(), p.is_some());
                     // Scatter-ordered BP view, precomputed once so the
                     // steady-state fused unpool-conv never rebuilds it.
                     // The BP conv has out=in_ch, in=out_ch.
@@ -104,12 +217,12 @@ impl Plan {
                     } else {
                         Vec::new()
                     };
-                    let in_shape = match net.shapes[i] {
-                        Shape::Chw(c, h, w) => (c, h, w),
-                        s => anyhow::bail!("conv {name} on non-CHW input {s}"),
-                    };
+                    let in_shape =
+                        chw(net.src_shape(nd.inputs[0]), &format!("conv {name}"))?;
+                    let ui = units.len();
                     units.push(Unit::Conv {
                         name: name.clone(),
+                        src: resolve(nd.inputs[0], &src_of),
                         w,
                         w_bp,
                         w_sc,
@@ -121,15 +234,21 @@ impl Plan {
                         relu,
                         pool,
                     });
-                    i += 1 + relu as usize + pool as usize;
+                    src_of[i] = Some(Src::Unit(ui));
+                    if let Some(r) = r {
+                        absorbed[r] = true;
+                        src_of[r] = Some(Src::Unit(ui));
+                    }
+                    if let Some(p) = p {
+                        absorbed[p] = true;
+                        src_of[p] = Some(Src::Unit(ui));
+                    }
                 }
                 Layer::MaxPool2 => {
-                    let in_shape = match net.shapes[i] {
-                        Shape::Chw(c, h, w) => (c, h, w),
-                        s => anyhow::bail!("pool on non-CHW input {s}"),
-                    };
-                    units.push(Unit::Pool { in_shape });
-                    i += 1;
+                    let in_shape = chw(net.src_shape(nd.inputs[0]), "pool")?;
+                    let ui = units.len();
+                    units.push(Unit::Pool { src: resolve(nd.inputs[0], &src_of), in_shape });
+                    src_of[i] = Some(Src::Unit(ui));
                 }
                 Layer::Fc { name, in_dim, out_dim } => {
                     let (wt, bt) = params.fc(name)?;
@@ -138,21 +257,47 @@ impl Plan {
                         "{name}: weight shape {:?} != layer dims",
                         wt.shape
                     );
-                    let relu = matches!(net.layers.get(i + 1), Some(Layer::Relu));
+                    let r = sole(i).filter(|&r| net.node(r).layer == Layer::Relu);
+                    let ui = units.len();
                     units.push(Unit::Fc {
                         name: name.clone(),
+                        src: resolve(nd.inputs[0], &src_of),
                         w: quant(wt),
                         out_n: *out_dim,
                         in_n: *in_dim,
                         bias: quant(bt),
-                        relu,
+                        relu: r.is_some(),
                     });
-                    i += 1 + relu as usize;
+                    src_of[i] = Some(Src::Unit(ui));
+                    if let Some(r) = r {
+                        absorbed[r] = true;
+                        src_of[r] = Some(Src::Unit(ui));
+                    }
                 }
-                Layer::Flatten => i += 1,
+                Layer::Add => {
+                    let r = sole(i).filter(|&r| net.node(r).layer == Layer::Relu);
+                    let ui = units.len();
+                    units.push(Unit::Add {
+                        name: nd.name.clone(),
+                        a: resolve(nd.inputs[0], &src_of),
+                        b: resolve(nd.inputs[1], &src_of),
+                        elems: net.out_shape(i).elems(),
+                        relu: r.is_some(),
+                    });
+                    src_of[i] = Some(Src::Unit(ui));
+                    if let Some(r) = r {
+                        absorbed[r] = true;
+                        src_of[r] = Some(Src::Unit(ui));
+                    }
+                }
+                // Flatten is a pure view change: alias the producer
+                Layer::Flatten => src_of[i] = Some(resolve(nd.inputs[0], &src_of)),
                 Layer::Relu => {
                     // a ReLU not fused into a producer (e.g. first layer)
-                    anyhow::bail!("standalone ReLU at layer {i} is not supported by the plan");
+                    anyhow::bail!(
+                        "standalone ReLU at node `{}` is not supported by the plan",
+                        nd.name
+                    );
                 }
             }
         }
@@ -172,9 +317,53 @@ impl Plan {
                 Unit::Fc { w, bias, .. } => {
                     (w.len() + bias.len()) * std::mem::size_of::<i32>()
                 }
-                Unit::Pool { .. } => 0,
+                Unit::Pool { .. } | Unit::Add { .. } => 0,
             })
             .sum()
+    }
+
+    /// Number of fused execution units the schedule compiled into.
+    pub fn n_units(&self) -> usize {
+        self.units.len()
+    }
+
+    /// Derive the plan's memory shape from the schedule's live ranges
+    /// (batch 1). See [`LiveReport`].
+    pub fn live_report(&self) -> LiveReport {
+        let n = self.units.len();
+        let act_elems: usize = self.units.iter().map(|u| u.out_elems()).sum();
+        // unit u's gradient slab lives over unit indices [u, birth(u)]
+        // where birth(u) is its highest-index consumer (the first to
+        // deposit in the reverse walk); the output unit's gradient is
+        // live from the top of the backward pass (index n-1).
+        let mut birth = vec![0usize; n];
+        for (u, unit) in self.units.iter().enumerate() {
+            birth[u] = u;
+            for s in unit.srcs().into_iter().flatten() {
+                if let Src::Unit(j) = s {
+                    birth[j] = birth[j].max(u);
+                }
+            }
+        }
+        if n > 0 {
+            birth[n - 1] = n - 1;
+        }
+        let mut grad_peak_elems = 0usize;
+        for i in 0..n {
+            let live: usize = self
+                .units
+                .iter()
+                .enumerate()
+                .filter(|&(u, _)| u <= i && i <= birth[u])
+                .map(|(_, unit)| unit.out_elems())
+                .sum();
+            grad_peak_elems = grad_peak_elems.max(live);
+        }
+        LiveReport {
+            act_elems,
+            grad_elems: act_elems,
+            grad_peak_elems,
+        }
     }
 }
 
@@ -204,8 +393,8 @@ pub struct Workspace {
     /// Quantized input slab [nb, C*H*W].
     pub(crate) qimg: Vec<i32>,
     /// Per unit: flat activation slab [nb, elems] the FP pass leaves in
-    /// "DRAM" (pooled for fused-pool convs) — also the next unit's
-    /// input, so activations are stored exactly once.
+    /// "DRAM" (pooled for fused-pool convs) — also read back as the
+    /// consumers' input, so activations are stored exactly once.
     pub(crate) acts: Vec<Vec<i32>>,
     /// Per unit: packed 2-bit pool argmax slab [nb, ceil(elems/4)].
     pub(crate) pool_idx: Vec<Vec<u8>>,
@@ -213,9 +402,17 @@ pub struct Workspace {
     pub(crate) fc_masks: Vec<Vec<bool>>,
     /// Unpacked-index scratch for the BP unpool engines.
     pub(crate) idx_scratch: Vec<u8>,
-    /// BP gradient ping-pong slabs.
-    pub(crate) g_a: Vec<i32>,
-    pub(crate) g_b: Vec<i32>,
+    /// Per unit: output-gradient slab [nb, out_elems]. Sized by the
+    /// plan's live ranges, not Table-III constants; at a fan-out fork
+    /// the second deposit accumulates (`hls::eltwise::accumulate`).
+    pub(crate) grads: Vec<Vec<i32>>,
+    /// Whether each unit's gradient slab has received a deposit yet
+    /// (first deposit moves, later deposits accumulate).
+    pub(crate) grad_written: Vec<bool>,
+    /// Gradient slab for the network input (the relevance map).
+    pub(crate) g_img: Vec<i32>,
+    /// Scratch for a unit's input gradient before it is deposited.
+    pub(crate) g_tmp: Vec<i32>,
     /// Unfused-ablation scratch (materialized full-grid activations).
     pub(crate) tmp: Vec<i32>,
 }
@@ -237,10 +434,30 @@ impl Workspace {
             pool_idx: Vec::new(),
             fc_masks: Vec::new(),
             idx_scratch: Vec::new(),
-            g_a: Vec::new(),
-            g_b: Vec::new(),
+            grads: Vec::new(),
+            grad_written: Vec::new(),
+            g_img: Vec::new(),
+            g_tmp: Vec::new(),
             tmp: Vec::new(),
         }
+    }
+
+    /// Workspace pre-sized for a plan at the given batch size: every
+    /// per-unit slab reserves its live-range capacity up front so the
+    /// first pass is already allocation-stable.
+    pub fn for_plan(plan: &Plan, nb: usize) -> Workspace {
+        let mut ws = Workspace::new();
+        let nu = plan.units.len();
+        ws.acts.resize_with(nu, Vec::new);
+        ws.grads.resize_with(nu, Vec::new);
+        ws.grad_written.resize(nu, false);
+        for (u, unit) in plan.units.iter().enumerate() {
+            ws.acts[u].reserve(nb * unit.out_elems());
+            ws.grads[u].reserve(nb * unit.out_elems());
+        }
+        ws.qimg.reserve(nb * plan.net.input.elems());
+        ws.g_img.reserve(nb * plan.net.input.elems());
+        ws
     }
 }
 

@@ -11,7 +11,7 @@
 //! [`score_pair`] measures exactly that disagreement.
 
 use crate::attribution::Method;
-use crate::model::{Layer, Network, Params, Shape};
+use crate::model::{Layer, Network, NodeId, Params, Shape, SrcRef};
 use crate::sched::argmax;
 use crate::util::stats::{pearson, spearman};
 
@@ -120,6 +120,52 @@ enum RefLayer {
         out_n: usize,
         in_n: usize,
     },
+    /// Elementwise skip-connection join; backward fans the gradient
+    /// out to both operands (summing at forks, like the device path's
+    /// `eltwise::accumulate` — but in f32).
+    Add,
+}
+
+/// A step's resolved input: the image or an earlier step's output.
+#[derive(Clone, Copy)]
+enum RefSrc {
+    Image,
+    Step(usize),
+}
+
+/// One scheduled node of the reference network.
+struct RefStep {
+    layer: RefLayer,
+    inputs: Vec<RefSrc>,
+}
+
+fn ref_src<'a>(s: RefSrc, outs: &'a [Vec<f32>], image: &'a [f32]) -> &'a [f32] {
+    match s {
+        RefSrc::Image => image,
+        RefSrc::Step(j) => &outs[j],
+    }
+}
+
+/// Deposit a step's input gradient at its source, summing when the
+/// source fans out to several consumers.
+fn ref_deposit(
+    src: RefSrc,
+    gi: Vec<f32>,
+    grads: &mut [Option<Vec<f32>>],
+    g_img: &mut Option<Vec<f32>>,
+) {
+    let slot = match src {
+        RefSrc::Image => g_img,
+        RefSrc::Step(j) => &mut grads[j],
+    };
+    match slot {
+        None => *slot = Some(gi),
+        Some(t) => {
+            for (t, g) in t.iter_mut().zip(&gi) {
+                *t += g;
+            }
+        }
+    }
 }
 
 /// Result of one reference attribution.
@@ -131,20 +177,39 @@ pub struct RefAttr {
 }
 
 /// The unquantized reference: straight-line forward + backward over
-/// the same layer vocabulary the device plan executes.
+/// the same node schedule the device plan executes (DAGs included —
+/// a fork's gradients are summed at the deposit, an add node fans its
+/// gradient out to both operands).
 pub struct Oracle {
     in_elems: usize,
     out_n: usize,
-    layers: Vec<RefLayer>,
+    steps: Vec<RefStep>,
 }
 
 impl Oracle {
     /// Resolve a network + f32 parameter store into the reference
-    /// form. Shape validation mirrors `Plan::new`.
+    /// form. Shape validation mirrors `Plan::new`; the walk order is
+    /// the network's own topological schedule.
     pub fn new(net: &Network, params: &Params) -> anyhow::Result<Oracle> {
-        let mut layers = Vec::with_capacity(net.layers.len());
-        for (i, layer) in net.layers.iter().enumerate() {
-            match layer {
+        let mut step_of = vec![usize::MAX; net.nodes().len()];
+        let mut steps = Vec::with_capacity(net.schedule().len());
+        for (si, &ni) in net.schedule().iter().enumerate() {
+            let nd = net.node(ni);
+            let inputs: Vec<RefSrc> = nd
+                .inputs
+                .iter()
+                .map(|s| match s {
+                    SrcRef::Image => RefSrc::Image,
+                    SrcRef::Node(NodeId(j)) => RefSrc::Step(step_of[*j]),
+                })
+                .collect();
+            let chw = |what: &str| -> anyhow::Result<(usize, usize, usize)> {
+                match net.src_shape(nd.inputs[0]) {
+                    Shape::Chw(c, h, w) => Ok((c, h, w)),
+                    s => anyhow::bail!("{what} on non-CHW input {s}"),
+                }
+            };
+            let layer = match &nd.layer {
                 Layer::Conv { name, in_ch, out_ch, k, pad } => {
                     let (wt, bt) = params.conv(name)?;
                     anyhow::ensure!(
@@ -152,28 +217,18 @@ impl Oracle {
                         "{name}: weight shape {:?} != layer dims",
                         wt.shape
                     );
-                    let in_shape = match net.shapes[i] {
-                        Shape::Chw(c, h, w) => (c, h, w),
-                        s => anyhow::bail!("conv {name} on non-CHW input {s}"),
-                    };
-                    layers.push(RefLayer::Conv {
+                    RefLayer::Conv {
                         w: wt.data.clone(),
                         b: bt.data.clone(),
-                        in_shape,
+                        in_shape: chw(&format!("conv {name}"))?,
                         out_ch: *out_ch,
                         k: *k,
                         pad: *pad,
-                    });
+                    }
                 }
-                Layer::Relu => layers.push(RefLayer::Relu),
-                Layer::MaxPool2 => {
-                    let in_shape = match net.shapes[i] {
-                        Shape::Chw(c, h, w) => (c, h, w),
-                        s => anyhow::bail!("pool on non-CHW input {s}"),
-                    };
-                    layers.push(RefLayer::Pool { in_shape });
-                }
-                Layer::Flatten => layers.push(RefLayer::Flatten),
+                Layer::Relu => RefLayer::Relu,
+                Layer::MaxPool2 => RefLayer::Pool { in_shape: chw("pool")? },
+                Layer::Flatten => RefLayer::Flatten,
                 Layer::Fc { name, in_dim, out_dim } => {
                     let (wt, bt) = params.fc(name)?;
                     anyhow::ensure!(
@@ -181,16 +236,19 @@ impl Oracle {
                         "{name}: weight shape {:?} != layer dims",
                         wt.shape
                     );
-                    layers.push(RefLayer::Fc {
+                    RefLayer::Fc {
                         w: wt.data.clone(),
                         b: bt.data.clone(),
                         out_n: *out_dim,
                         in_n: *in_dim,
-                    });
+                    }
                 }
-            }
+                Layer::Add => RefLayer::Add,
+            };
+            steps.push(RefStep { layer, inputs });
+            step_of[ni] = si;
         }
-        Ok(Oracle { in_elems: net.input.elems(), out_n: net.output_shape().elems(), layers })
+        Ok(Oracle { in_elems: net.input.elems(), out_n: net.output_shape().elems(), steps })
     }
 
     /// One reference attribution: forward with mask/argmax capture,
@@ -198,69 +256,92 @@ impl Oracle {
     /// forward argmax when `None`).
     pub fn attribute(&self, image: &[f32], method: Method, target: Option<usize>) -> RefAttr {
         assert_eq!(image.len(), self.in_elems, "input size mismatch");
-        let n = self.layers.len();
+        let n = self.steps.len();
         let mut relu_masks: Vec<Option<Vec<bool>>> = (0..n).map(|_| None).collect();
         let mut pool_idx: Vec<Option<Vec<u8>>> = (0..n).map(|_| None).collect();
 
         // ---- forward -------------------------------------------------
-        let mut act: Vec<f32> = image.to_vec();
-        for (i, layer) in self.layers.iter().enumerate() {
-            match layer {
+        let mut outs: Vec<Vec<f32>> = Vec::with_capacity(n);
+        for (i, step) in self.steps.iter().enumerate() {
+            let out = match &step.layer {
                 RefLayer::Conv { w, b, in_shape, out_ch, k, pad } => {
-                    act = conv_forward(&act, *in_shape, w, b, *out_ch, *k, *pad);
+                    let x = ref_src(step.inputs[0], &outs, image);
+                    conv_forward(x, *in_shape, w, b, *out_ch, *k, *pad)
                 }
                 RefLayer::Relu => {
                     // mask convention matches the engines: strictly
                     // positive pre-activation
-                    let mask: Vec<bool> = act.iter().map(|&v| v > 0.0).collect();
-                    for (v, &m) in act.iter_mut().zip(&mask) {
-                        if !m {
-                            *v = 0.0;
-                        }
-                    }
+                    let x = ref_src(step.inputs[0], &outs, image);
+                    let mask: Vec<bool> = x.iter().map(|&v| v > 0.0).collect();
+                    let out: Vec<f32> =
+                        x.iter().zip(&mask).map(|(&v, &m)| if m { v } else { 0.0 }).collect();
                     relu_masks[i] = Some(mask);
+                    out
                 }
                 RefLayer::Pool { in_shape } => {
-                    let (p, idx) = maxpool2(&act, *in_shape);
+                    let x = ref_src(step.inputs[0], &outs, image);
+                    let (p, idx) = maxpool2(x, *in_shape);
                     pool_idx[i] = Some(idx);
-                    act = p;
+                    p
                 }
-                RefLayer::Flatten => {}
+                RefLayer::Flatten => ref_src(step.inputs[0], &outs, image).to_vec(),
                 RefLayer::Fc { w, b, out_n, in_n } => {
-                    act = fc_forward(w, *out_n, *in_n, &act, b);
+                    let x = ref_src(step.inputs[0], &outs, image);
+                    fc_forward(w, *out_n, *in_n, x, b)
                 }
-            }
+                RefLayer::Add => {
+                    let a = ref_src(step.inputs[0], &outs, image);
+                    let b = ref_src(step.inputs[1], &outs, image);
+                    a.iter().zip(b).map(|(&x, &y)| x + y).collect()
+                }
+            };
+            outs.push(out);
         }
-        let logits = act;
+        let logits = outs.last().expect("empty network").clone();
         let pred = argmax(&logits);
 
         // ---- backward ------------------------------------------------
         let start = target.unwrap_or(pred);
         assert!(start < self.out_n, "target class out of range");
-        let mut g = vec![0f32; self.out_n];
-        g[start] = 1.0;
-        for (i, layer) in self.layers.iter().enumerate().rev() {
-            match layer {
+        let mut grads: Vec<Option<Vec<f32>>> = vec![None; n];
+        let mut g_img: Option<Vec<f32>> = None;
+        let mut seed = vec![0f32; self.out_n];
+        seed[start] = 1.0;
+        grads[n - 1] = Some(seed);
+        for (i, step) in self.steps.iter().enumerate().rev() {
+            let mut g = grads[i].take().expect("step gradient never deposited");
+            match &step.layer {
                 RefLayer::Fc { w, out_n, in_n, .. } => {
-                    g = fc_backward(w, *out_n, *in_n, &g);
+                    let gi = fc_backward(w, *out_n, *in_n, &g);
+                    ref_deposit(step.inputs[0], gi, &mut grads, &mut g_img);
                 }
                 RefLayer::Relu => {
                     let mask = relu_masks[i].as_ref().expect("relu mask missing");
                     for (v, &m) in g.iter_mut().zip(mask) {
                         *v = method.relu_bwd_f32(m, *v);
                     }
+                    ref_deposit(step.inputs[0], g, &mut grads, &mut g_img);
                 }
                 RefLayer::Pool { in_shape } => {
                     let (c, h, w) = *in_shape;
                     let idx = pool_idx[i].as_ref().expect("pool idx missing");
-                    g = unpool2(&g, (c, h / 2, w / 2), idx);
+                    let gi = unpool2(&g, (c, h / 2, w / 2), idx);
+                    ref_deposit(step.inputs[0], gi, &mut grads, &mut g_img);
                 }
-                RefLayer::Flatten => {}
+                RefLayer::Flatten => {
+                    ref_deposit(step.inputs[0], g, &mut grads, &mut g_img);
+                }
                 RefLayer::Conv { w, in_shape, out_ch, k, pad, .. } => {
-                    g = conv_input_grad(&g, *in_shape, w, *out_ch, *k, *pad);
+                    let gi = conv_input_grad(&g, *in_shape, w, *out_ch, *k, *pad);
+                    ref_deposit(step.inputs[0], gi, &mut grads, &mut g_img);
+                }
+                RefLayer::Add => {
+                    ref_deposit(step.inputs[0], g.clone(), &mut grads, &mut g_img);
+                    ref_deposit(step.inputs[1], g, &mut grads, &mut g_img);
                 }
             }
         }
+        let g = g_img.expect("BP must walk back to the input");
         assert_eq!(g.len(), self.in_elems, "BP must walk back to the input");
         RefAttr { logits, pred, relevance: g }
     }
@@ -507,6 +588,35 @@ mod tests {
             for (a, b) in q.logits.iter().zip(&r.logits) {
                 assert!((a - b).abs() < 0.01, "{method}: logits {a} vs {b}");
             }
+        }
+    }
+
+    #[test]
+    fn oracle_walks_residual_graphs() {
+        // the oracle follows the same schedule as the plan, so the
+        // fork/join (gradient fan-out summation) must line up with the
+        // device path's eltwise accumulate at high precision
+        let net = Network::from_graph_str(include_str!(
+            "../../../examples/graphs/residual16.graph.json"
+        ))
+        .unwrap();
+        let params = Params::synthetic(&net, 45);
+        let oracle = Oracle::new(&net, &params).unwrap();
+        let mut cfg = HwConfig::with_unroll(1, 1, 16);
+        cfg.q = QFormat::new(24, 16);
+        let sim = Simulator::new(net.clone(), &params, cfg).unwrap();
+        let mut rng = Pcg32::seeded(46);
+        let img: Vec<f32> = (0..net.input.elems()).map(|_| rng.f32()).collect();
+        for method in ALL_METHODS {
+            let r = oracle.attribute(&img, method, None);
+            let q = sim.attribute(
+                &img,
+                method,
+                AttrOptions { target: Some(r.pred), ..Default::default() },
+            );
+            assert_eq!(q.pred, r.pred, "{method}");
+            let rho = pearson(&q.relevance, &r.relevance);
+            assert!(rho > 0.99, "{method}: residual path diverged, rho={rho}");
         }
     }
 

@@ -646,11 +646,11 @@ fn prop_mask_budget_graph_driven() {
             let mut rng = Pcg32::seeded(seed);
             let (net, _) = random_model(&mut rng);
             let b = attrax::attribution::memory::mask_budget(&net);
-            // recompute pool bits independently
+            // recompute pool bits independently over the node graph
             let mut pool_bits = 0usize;
-            for (i, l) in net.layers.iter().enumerate() {
-                if matches!(l, attrax::model::Layer::MaxPool2) {
-                    pool_bits += 2 * net.shapes[i + 1].elems();
+            for (i, nd) in net.nodes().iter().enumerate() {
+                if matches!(nd.layer, attrax::model::Layer::MaxPool2) {
+                    pool_bits += 2 * net.out_shape(i).elems();
                 }
             }
             if b.pool_bits != pool_bits {
@@ -667,6 +667,149 @@ fn prop_mask_budget_graph_driven() {
             Ok(())
         },
     );
+}
+
+/// Random graph-IR manifest text: a conv stem, then either a straight
+/// chain or a residual skip block (conv+relu forked into a second
+/// shape-preserving conv+relu and re-joined by `add`), then
+/// pool/flatten/fc head. Exercises the manifest loader + DAG schedule
+/// end to end, not just the builder API.
+fn random_graph_json(rng: &mut Pcg32) -> String {
+    let ch0 = 1 + rng.below(3) as usize;
+    let side = 8 * (1 + rng.below(2) as usize); // 8 or 16
+    let ch = [4usize, 8][rng.below(2) as usize];
+    let skip = rng.below(2) == 1;
+    let hidden = 4 + rng.below(8) as usize;
+    let mut nodes = vec![
+        format!(
+            r#"{{"name": "stem", "op": "conv", "in": ["image"], "out_ch": {ch}, "k": 3, "pad": 1}}"#
+        ),
+        r#"{"name": "stem_r", "op": "relu", "in": ["stem"]}"#.to_string(),
+    ];
+    // the head pools once, so its input is the last feature-map node
+    let body_out = if skip {
+        nodes.push(format!(
+            r#"{{"name": "b1", "op": "conv", "in": ["stem_r"], "out_ch": {ch}, "k": 3, "pad": 1}}"#
+        ));
+        nodes.push(r#"{"name": "b1_r", "op": "relu", "in": ["b1"]}"#.to_string());
+        nodes.push(r#"{"name": "res", "op": "add", "in": ["stem_r", "b1_r"]}"#.to_string());
+        nodes.push(r#"{"name": "res_r", "op": "relu", "in": ["res"]}"#.to_string());
+        "res_r"
+    } else {
+        nodes.push(format!(
+            r#"{{"name": "c1", "op": "conv", "in": ["stem_r"], "out_ch": {ch}, "k": 3, "pad": 1}}"#
+        ));
+        nodes.push(r#"{"name": "c1_r", "op": "relu", "in": ["c1"]}"#.to_string());
+        "c1_r"
+    };
+    nodes.push(format!(r#"{{"name": "pool", "op": "maxpool2", "in": ["{body_out}"]}}"#));
+    nodes.push(r#"{"name": "flat", "op": "flatten", "in": ["pool"]}"#.to_string());
+    nodes.push(format!(
+        r#"{{"name": "fc1", "op": "fc", "in": ["flat"], "out": {hidden}}}"#
+    ));
+    nodes.push(r#"{"name": "fc1_r", "op": "relu", "in": ["fc1"]}"#.to_string());
+    nodes.push(r#"{"name": "fc2", "op": "fc", "in": ["fc1_r"], "out": 3}"#.to_string());
+    format!(
+        r#"{{"schema": "attrax-graph/v1", "name": "prop", "input": [{ch0}, {side}, {side}], "nodes": [{}], "output": "fc2"}}"#,
+        nodes.join(", ")
+    )
+}
+
+/// P15 (ISSUE-6): graph-IR execution is deterministic and faithful —
+/// random manifest-loaded chain/skip graphs attribute bit-identically
+/// across 1/2/4 shard threads vs the single-image path, and the
+/// manifest-loaded Table-III graph reproduces the builder-chain
+/// network's heatmap bit for bit on the same synthetic weights.
+#[test]
+fn prop_graph_models_shard_invariant_and_table3_manifest_bit_exact() {
+    run_prop(
+        PropConfig { cases: 10, ..Default::default() },
+        scenario,
+        |s| {
+            let mut rng = Pcg32::seeded(s.seed);
+            let text = random_graph_json(&mut rng);
+            let net = Network::from_graph_str(&text).map_err(|e| e.to_string())?;
+            let params = Params::synthetic(&net, s.seed);
+            let n_in = net.input.elems();
+            let sim = Simulator::new(net, &params, s.cfg).map_err(|e| e.to_string())?;
+            let nb = 2 + rng.below(3) as usize; // 2..=4 images
+            let imgs: Vec<Vec<f32>> = (0..nb)
+                .map(|_| (0..n_in).map(|_| rng.f32()).collect())
+                .collect();
+            let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+            for m in ALL_METHODS {
+                let singles: Vec<_> = imgs
+                    .iter()
+                    .map(|img| sim.attribute(img, m, AttrOptions::default()))
+                    .collect();
+                for shards in [1usize, 2, 4] {
+                    let mut ws = Workspace::with_shards(shards);
+                    let mut out = BatchOutput::new();
+                    sim.attribute_batch_into(
+                        &mut ws,
+                        &refs,
+                        m,
+                        AttrOptions::default(),
+                        false,
+                        &mut out,
+                    );
+                    for (i, single) in singles.iter().enumerate() {
+                        if out.relevance_of(i) != single.relevance.as_slice() {
+                            return Err(format!("{m} shards {shards}: image {i} diverged"));
+                        }
+                        if out.logits_of(i) != single.logits.as_slice() {
+                            return Err(format!("{m} shards {shards}: image {i} FP diverged"));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+
+    // the Table-III manifest path must be bit-exact with the same chain
+    // assembled through the pre-refactor NetworkBuilder constructor
+    let manifest = Network::table3();
+    let chain = NetworkBuilder::new(Shape::Chw(3, 32, 32))
+        .conv("conv1", 32, 3, 1)
+        .relu()
+        .conv("conv2", 32, 3, 1)
+        .relu()
+        .maxpool2()
+        .conv("conv3", 64, 3, 1)
+        .relu()
+        .conv("conv4", 64, 3, 1)
+        .relu()
+        .maxpool2()
+        .flatten()
+        .fc("fc1", 128)
+        .relu()
+        .fc("fc2", 10)
+        .build()
+        .unwrap();
+    let params = Params::synthetic(&manifest, 42);
+    assert_eq!(
+        Params::synthetic(&chain, 42).tensors,
+        params.tensors,
+        "synthetic weights must not move under the manifest refactor"
+    );
+    let cfg = HwConfig::with_unroll(4, 4, 16);
+    let sm = Simulator::new(manifest, &params, cfg).unwrap();
+    let sc = Simulator::new(chain, &params, cfg).unwrap();
+    let mut rng = Pcg32::seeded(99);
+    let img: Vec<f32> = (0..3 * 32 * 32).map(|_| rng.f32()).collect();
+    for m in ALL_METHODS {
+        let a = sm.attribute(&img, m, AttrOptions::default());
+        let b = sc.attribute(&img, m, AttrOptions::default());
+        assert_eq!(a.logits, b.logits, "{m}: manifest logits diverged from builder chain");
+        assert_eq!(a.pred, b.pred);
+        assert_eq!(a.relevance, b.relevance, "{m}: manifest heatmap diverged from builder chain");
+        assert_eq!(
+            a.fp_cost.total_cycles() + a.bp_cost.total_cycles(),
+            b.fp_cost.total_cycles() + b.bp_cost.total_cycles(),
+            "{m}: manifest cycle ledger diverged from builder chain"
+        );
+    }
 }
 
 /// P8: resource estimates are monotone in unroll and the chosen config

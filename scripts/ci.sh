@@ -58,6 +58,40 @@ grep -q '"quality":true' BENCH_dse_q_smoke.json
 cargo run --release -q -- serve --config tuned_q_smoke.json --requests 4 --workers 1 --verify 0
 rm -f BENCH_xeval_smoke.json BENCH_dse_q_smoke.json tuned_q_smoke.json
 
+echo "== graph gate: model --dry-run + bad-corpus messages + residual eval smoke =="
+# The graph-IR path end to end, fully offline. Every good manifest must
+# validate (load -> schedule -> plan compile); every known-bad manifest
+# must be rejected with its documented error message (the messages are
+# part of the validator's contract — DESIGN.md §graph IR); and the
+# residual topology must survive the full attribution-quality smoke,
+# which exercises the skip fork/join through FP, BP and the oracle.
+cargo run --release -q -- model --dry-run \
+    examples/graphs/table3.graph.json \
+    examples/graphs/vgg11_32.graph.json \
+    examples/graphs/residual16.graph.json
+check_bad_manifest() {
+    # $1 = manifest path, $2 = expected error substring
+    if out=$(cargo run --release -q -- model --dry-run "$1" 2>&1); then
+        echo "ERROR: $1 validated but must be rejected"
+        exit 1
+    fi
+    if ! echo "$out" | grep -qF "$2"; then
+        echo "ERROR: $1 rejection message missing \"$2\":"
+        echo "$out"
+        exit 1
+    fi
+}
+check_bad_manifest examples/graphs/bad/cycle.graph.json          "cycle through"
+check_bad_manifest examples/graphs/bad/unknown_input.graph.json  "unknown input"
+check_bad_manifest examples/graphs/bad/duplicate.graph.json      "duplicate node name"
+check_bad_manifest examples/graphs/bad/odd_pool.graph.json       "maxpool needs even dims"
+check_bad_manifest examples/graphs/bad/bad_fanin.graph.json      "expects 2 input"
+check_bad_manifest examples/graphs/bad/shape_mismatch.graph.json "input channels, got"
+cargo run --release -q -- eval --smoke --model examples/graphs/residual16.graph.json \
+    --out BENCH_graph_smoke.json
+grep -q '"schema":"attrax-xeval/v1"' BENCH_graph_smoke.json
+rm -f BENCH_graph_smoke.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
