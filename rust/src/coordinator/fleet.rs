@@ -10,14 +10,147 @@
 //! the router's decisions reflect Table-IV physics rather than host
 //! wall time.
 
+use std::fmt;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use crate::attribution::Method;
+use crate::faults::device::DeviceInjector;
+use crate::faults::FaultHooks;
 use crate::fpga::{self, Board};
 use crate::hls::HwConfig;
 use crate::model::{Network, Params};
-use crate::sched::{AttrOptions, AttrResult, Plan, Simulator};
+use crate::sched::{
+    AttrOptions, AttrResult, BatchOutput, IntegrityError, Plan, Simulator, Workspace,
+};
+
+/// Typed device-execution failure — what the supervision layer retries
+/// on and the breaker counts. Every variant is a *detected* fault: the
+/// caller never receives corrupt output alongside one of these.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum DeviceFault {
+    /// Weight memory failed its pre-execution checksum scrub (SEU
+    /// caught before execution); the device reloaded its view from the
+    /// pristine plan, so a retry on the same device can succeed.
+    WeightCorruption(IntegrityError),
+    /// Dual-modular-redundancy re-execution diverged: a transient
+    /// compute or gradient-slab fault perturbed one pass.
+    OutputDivergence,
+    /// The device stopped responding (crashed); permanent until the
+    /// fleet replaces it.
+    Crash,
+}
+
+impl fmt::Display for DeviceFault {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            DeviceFault::WeightCorruption(e) => write!(f, "weight corruption: {e}"),
+            DeviceFault::OutputDivergence => write!(f, "DMR output divergence"),
+            DeviceFault::Crash => write!(f, "device crashed"),
+        }
+    }
+}
+
+/// Consecutive-failure circuit breaker with half-open probing.
+///
+/// Deliberately counter-based (no wall clock): an open breaker skips
+/// the device for `cooldown` *routing decisions*, then admits one
+/// probe (half-open). A probe success closes the breaker; a probe
+/// failure re-opens it. Counting in requests rather than seconds keeps
+/// breaker behavior bit-reproducible under the chaos harness.
+pub struct Breaker {
+    threshold: u32,
+    cooldown: u32,
+    state: Mutex<BreakerState>,
+    trips: AtomicU64,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BreakerState {
+    Closed { fails: u32 },
+    Open { skipped: u32 },
+    HalfOpen,
+}
+
+impl Breaker {
+    /// `threshold` consecutive failures open the breaker; while open,
+    /// `cooldown` refused routing decisions earn one half-open probe.
+    pub fn new(threshold: u32, cooldown: u32) -> Breaker {
+        Breaker {
+            threshold: threshold.max(1),
+            cooldown: cooldown.max(1),
+            state: Mutex::new(BreakerState::Closed { fails: 0 }),
+            trips: AtomicU64::new(0),
+        }
+    }
+
+    /// May this device take a request right now? Open breakers count
+    /// the refusal toward their cooldown and eventually admit a single
+    /// half-open probe.
+    pub fn admit(&self) -> bool {
+        let mut g = self.state.lock().unwrap();
+        match *g {
+            BreakerState::Closed { .. } => true,
+            BreakerState::Open { skipped } => {
+                if skipped + 1 >= self.cooldown {
+                    *g = BreakerState::HalfOpen;
+                    true // this caller is the probe
+                } else {
+                    *g = BreakerState::Open { skipped: skipped + 1 };
+                    false
+                }
+            }
+            // one probe in flight; everyone else keeps waiting
+            BreakerState::HalfOpen => false,
+        }
+    }
+
+    /// A request completed on this device: close (re-admit).
+    pub fn record_success(&self) {
+        *self.state.lock().unwrap() = BreakerState::Closed { fails: 0 };
+    }
+
+    /// A request failed on this device. Returns `true` when this
+    /// failure tripped the breaker open (quarantine).
+    pub fn record_failure(&self) -> bool {
+        let mut g = self.state.lock().unwrap();
+        match *g {
+            BreakerState::Closed { fails } => {
+                if fails + 1 >= self.threshold {
+                    *g = BreakerState::Open { skipped: 0 };
+                    self.trips.fetch_add(1, Ordering::Relaxed);
+                    true
+                } else {
+                    *g = BreakerState::Closed { fails: fails + 1 };
+                    false
+                }
+            }
+            BreakerState::HalfOpen => {
+                // failed probe: straight back to quarantine
+                *g = BreakerState::Open { skipped: 0 };
+                self.trips.fetch_add(1, Ordering::Relaxed);
+                true
+            }
+            BreakerState::Open { .. } => false,
+        }
+    }
+
+    /// Open transitions over this breaker's lifetime.
+    pub fn trips(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    pub fn is_open(&self) -> bool {
+        matches!(*self.state.lock().unwrap(), BreakerState::Open { .. })
+    }
+}
+
+impl Default for Breaker {
+    /// 3 consecutive failures to open, 8 skipped routes per probe.
+    fn default() -> Breaker {
+        Breaker::new(3, 8)
+    }
+}
 
 /// One device in the fleet.
 pub struct Device {
@@ -30,6 +163,71 @@ pub struct Device {
     inflight_us: AtomicU64,
     /// Completed-request counter.
     pub completed: AtomicU64,
+    /// Health state: consecutive-failure breaker with half-open probes.
+    pub breaker: Breaker,
+    /// Fault injector (None = perfect device; the protected execution
+    /// path then has zero overhead and bit-identical results).
+    injector: Option<Arc<DeviceInjector>>,
+}
+
+impl Device {
+    /// Lightweight single-device constructor for the default serving
+    /// path (no probe calibration: `request_us` is a nominal constant,
+    /// which only matters for ETA *ties* across heterogeneous fleets).
+    pub fn from_sim(sim: Simulator, board: Board) -> Device {
+        Device {
+            board,
+            sim,
+            request_us: 1000,
+            inflight_us: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            breaker: Breaker::default(),
+            injector: None,
+        }
+    }
+
+    /// Attach a fault injector (builder style). A [`FaultPlan::none`]
+    /// plan attaches nothing — the device stays on the perfect-device
+    /// fast path.
+    ///
+    /// [`FaultPlan::none`]: crate::faults::FaultPlan::none
+    pub fn with_faults(mut self, hooks: &FaultHooks, instance: u64) -> Device {
+        if !hooks.plan.is_none() {
+            self.injector =
+                Some(Arc::new(DeviceInjector::new(hooks, instance, self.sim.clone())));
+        }
+        self
+    }
+
+    /// Execute one batched pass with integrity protection, maintaining
+    /// load state. Without an injector this is exactly the plain
+    /// simulator call (bit-identical, zero overhead); with one, the
+    /// request runs the full scrub → execute → DMR pipeline and every
+    /// injected fault surfaces as a typed [`DeviceFault`] instead of
+    /// corrupt output. On `Err` the contents of `ws`/`out` are
+    /// unspecified — retry on a healthy device.
+    pub fn try_attribute_batch_into(
+        &self,
+        ws: &mut Workspace,
+        imgs: &[&[f32]],
+        method: Method,
+        opts: AttrOptions,
+        out: &mut BatchOutput,
+    ) -> Result<(), DeviceFault> {
+        self.inflight_us.fetch_add(self.request_us, Ordering::Relaxed);
+        let r = match &self.injector {
+            None => {
+                self.sim.attribute_batch_into(ws, imgs, method, opts, false, out);
+                Ok(())
+            }
+            Some(inj) => inj.execute(ws, imgs, method, opts, out),
+        };
+        self.inflight_us.fetch_sub(self.request_us, Ordering::Relaxed);
+        if r.is_ok() {
+            self.completed.fetch_add(1, Ordering::Relaxed);
+        }
+        r
+    }
 }
 
 /// A fleet of heterogeneous devices with ETA routing.
@@ -78,6 +276,8 @@ impl Fleet {
                 request_us,
                 inflight_us: AtomicU64::new(0),
                 completed: AtomicU64::new(0),
+                breaker: Breaker::default(),
+                injector: None,
             }));
         }
         Ok(Fleet { devices })
@@ -103,6 +303,38 @@ impl Fleet {
         (dev.board, r)
     }
 
+    /// ETA-order the devices and return the first whose breaker admits
+    /// a request. `None` = every device is quarantined right now (the
+    /// refusals still advance open breakers toward their half-open
+    /// probes, so a later call can succeed). Deterministic: stable
+    /// sort, ties broken by device order.
+    pub fn route_healthy(devices: &[Arc<Device>]) -> Option<Arc<Device>> {
+        Fleet::route_healthy_avoiding(devices, None)
+    }
+
+    /// [`Fleet::route_healthy`] that prefers any admitted device other
+    /// than `avoid` (the one that just failed this request) — a retry
+    /// should land on different hardware when different hardware
+    /// exists. The failed device itself is the fallback of last resort,
+    /// and only if its breaker still admits.
+    pub fn route_healthy_avoiding(
+        devices: &[Arc<Device>],
+        avoid: Option<&Arc<Device>>,
+    ) -> Option<Arc<Device>> {
+        let mut order: Vec<&Arc<Device>> = devices.iter().collect();
+        order.sort_by_key(|d| d.inflight_us.load(Ordering::Relaxed) + d.request_us);
+        let Some(a) = avoid else {
+            return order.into_iter().find(|d| d.breaker.admit()).cloned();
+        };
+        if let Some(d) = order.iter().find(|d| !Arc::ptr_eq(d, a) && d.breaker.admit()) {
+            return Some((*d).clone());
+        }
+        if a.breaker.admit() {
+            return Some(a.clone());
+        }
+        None
+    }
+
     /// Aggregate modeled fleet throughput (img/s at the target clock).
     pub fn modeled_throughput_ips(&self) -> f64 {
         self.devices.iter().map(|d| 1e6 / d.request_us as f64).sum()
@@ -123,6 +355,83 @@ mod tests {
     use crate::data;
     use crate::model::artifacts_dir;
     use crate::util::rng::Pcg32;
+
+    #[test]
+    fn breaker_state_machine() {
+        let b = Breaker::new(3, 4);
+        // closed: admits, failures accumulate, success resets
+        assert!(b.admit());
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        b.record_success();
+        assert!(!b.record_failure());
+        assert!(!b.record_failure());
+        // third consecutive failure trips it open
+        assert!(b.record_failure());
+        assert_eq!(b.trips(), 1);
+        assert!(b.is_open());
+        // open: refused for `cooldown` routing decisions...
+        assert!(!b.admit());
+        assert!(!b.admit());
+        assert!(!b.admit());
+        // ...then one half-open probe is admitted, and nobody else
+        assert!(b.admit());
+        assert!(!b.admit());
+        // failed probe -> straight back to open (counts as a trip)
+        assert!(b.record_failure());
+        assert_eq!(b.trips(), 2);
+        for _ in 0..3 {
+            assert!(!b.admit());
+        }
+        assert!(b.admit());
+        // successful probe closes the breaker for good
+        b.record_success();
+        assert!(b.admit());
+        assert!(!b.is_open());
+    }
+
+    #[test]
+    fn route_healthy_skips_quarantined_devices() {
+        let sim = crate::sched::tests_support::tiny_sim(21, HwConfig::pynq_z2());
+        let devices: Vec<Arc<Device>> = (0..2)
+            .map(|_| Arc::new(Device::from_sim(sim.clone(), Board::PynqZ2)))
+            .collect();
+        // trip device 0's breaker
+        while !devices[0].breaker.record_failure() {}
+        let d = Fleet::route_healthy(&devices).expect("device 1 is healthy");
+        assert!(Arc::ptr_eq(&d, &devices[1]));
+        // trip device 1 as well: nothing admits until a cooldown elapses
+        while !devices[1].breaker.record_failure() {}
+        let mut admitted = 0;
+        for _ in 0..32 {
+            if Fleet::route_healthy(&devices).is_some() {
+                admitted += 1;
+            }
+        }
+        assert!(admitted > 0, "half-open probes must eventually be admitted");
+    }
+
+    #[test]
+    fn perfect_device_execution_matches_plain_sim() {
+        use crate::sched::{BatchOutput, Workspace};
+        let sim = crate::sched::tests_support::tiny_sim(22, HwConfig::pynq_z2());
+        let dev = Device::from_sim(sim.clone(), Board::PynqZ2);
+        let img: Vec<f32> = (0..128).map(|i| (i % 9) as f32 / 9.0).collect();
+        let mut ws = Workspace::with_shards(1);
+        let mut out = BatchOutput::new();
+        dev.try_attribute_batch_into(
+            &mut ws,
+            &[&img],
+            Method::Guided,
+            AttrOptions::default(),
+            &mut out,
+        )
+        .expect("perfect device never faults");
+        let want = sim.attribute(&img, Method::Guided, AttrOptions::default());
+        assert_eq!(out.preds[0], want.pred);
+        assert_eq!(out.relevance_of(0), want.relevance.as_slice());
+        assert_eq!(dev.completed.load(Ordering::Relaxed), 1);
+    }
 
     #[test]
     fn fleet_devices_share_one_plan() {

@@ -15,6 +15,10 @@ struct Inner {
     conns_open: u64,
     conns_total: u64,
     errors: u64,
+    retries: u64,
+    breaker_trips: u64,
+    integrity_failures: u64,
+    reconnects: u64,
     latency_ms: Samples,
     queue_wait_ms: Samples,
     sim_cycles: Samples,
@@ -48,6 +52,18 @@ pub struct Snapshot {
     /// TCP connections accepted over the server's lifetime.
     pub total_conns: u64,
     pub errors: u64,
+    /// Requests re-executed on another (or the same, recovered) device
+    /// after a device failure — recovery, not client-visible errors.
+    pub retries: u64,
+    /// Circuit-breaker open transitions across the fleet: a device
+    /// crossed its consecutive-failure threshold and was quarantined.
+    pub breaker_trips: u64,
+    /// Detected integrity violations (wire CRC mismatches, weight-slab
+    /// checksum failures, DMR output divergences). Every one of these
+    /// is a fault that did *not* escape as corrupt data.
+    pub integrity_failures: u64,
+    /// Client-side transport reconnects (broken-stream recovery).
+    pub reconnects: u64,
     pub wall_s: f64,
     pub throughput_ips: f64,
     pub p50_ms: f64,
@@ -117,6 +133,26 @@ impl Metrics {
         self.inner.lock().unwrap().errors += 1;
     }
 
+    /// A failed request was re-executed on a healthy device.
+    pub fn record_retry(&self) {
+        self.inner.lock().unwrap().retries += 1;
+    }
+
+    /// A device's circuit breaker opened (quarantine).
+    pub fn record_breaker_trip(&self) {
+        self.inner.lock().unwrap().breaker_trips += 1;
+    }
+
+    /// An integrity check caught corrupted data (CRC / checksum / DMR).
+    pub fn record_integrity_failure(&self) {
+        self.inner.lock().unwrap().integrity_failures += 1;
+    }
+
+    /// A client re-established a broken transport connection.
+    pub fn record_reconnect(&self) {
+        self.inner.lock().unwrap().reconnects += 1;
+    }
+
     pub fn record_verification(&self, correlation: f64) {
         let mut g = self.inner.lock().unwrap();
         g.verified += 1;
@@ -137,6 +173,10 @@ impl Metrics {
             open_conns: g.conns_open,
             total_conns: g.conns_total,
             errors: g.errors,
+            retries: g.retries,
+            breaker_trips: g.breaker_trips,
+            integrity_failures: g.integrity_failures,
+            reconnects: g.reconnects,
             wall_s,
             throughput_ips: if wall_s > 0.0 { g.completed as f64 / wall_s } else { 0.0 },
             p50_ms: g.latency_ms.percentile(0.50),
@@ -164,6 +204,7 @@ impl Snapshot {
         format!(
             "completed={} rejected={} errors={} wall={:.2}s throughput={:.1} img/s\n\
              serve: busy-shed={} deadline-exceeded={} conns open={} total={}\n\
+             recovery: retries={} breaker-trips={} integrity-failures={} reconnects={}\n\
              latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
              queue wait: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
              device model: mean {:.2} Mcycles/request\n\
@@ -177,6 +218,10 @@ impl Snapshot {
             self.deadline_exceeded,
             self.open_conns,
             self.total_conns,
+            self.retries,
+            self.breaker_trips,
+            self.integrity_failures,
+            self.reconnects,
             self.mean_ms,
             self.p50_ms,
             self.p95_ms,
@@ -242,6 +287,19 @@ mod tests {
         assert!(s.report().contains("busy-shed=3"));
         assert!(s.report().contains("deadline-exceeded=1"));
         assert!(s.report().contains("conns open=1 total=2"));
+        m.record_retry();
+        m.record_retry();
+        m.record_breaker_trip();
+        m.record_integrity_failure();
+        m.record_reconnect();
+        let s = m.snapshot();
+        assert_eq!(s.retries, 2);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.integrity_failures, 1);
+        assert_eq!(s.reconnects, 1);
+        assert!(s
+            .report()
+            .contains("retries=2 breaker-trips=1 integrity-failures=1 reconnects=1"));
         // the gauge never underflows
         m.record_conn_close();
         m.record_conn_close();

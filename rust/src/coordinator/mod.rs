@@ -30,9 +30,11 @@ use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
 use crate::attribution::Method;
+use crate::fpga::Board;
 use crate::model::{Manifest, Params};
 use crate::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
 use crate::util::stats::pearson;
+use fleet::{Device, DeviceFault, Fleet};
 use metrics::Metrics;
 use queue::{Bounded, PushError};
 
@@ -44,6 +46,9 @@ pub struct Request {
     /// Where to deliver the reply.
     pub reply: mpsc::Sender<Reply>,
     enqueued: Instant,
+    /// Hard completion deadline: the worker will not start another
+    /// retry attempt past this instant.
+    deadline: Option<Instant>,
     id: u64,
 }
 
@@ -66,18 +71,33 @@ pub struct Response {
     pub device_cycles: u64,
 }
 
-/// Terminal reply for a request the service shut down before running.
+/// Why a request terminated without a [`Response`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FailKind {
+    /// The coordinator was shut down abortively before the request ran.
+    Closed,
+    /// Every permitted attempt was stopped by an integrity detection
+    /// (weight-checksum scrub or DMR divergence) — the service refused
+    /// to return output it could not trust.
+    Integrity,
+    /// No healthy device completed the request within its retry and
+    /// deadline budget (crashes, quarantined fleet).
+    Unavailable,
+}
+
+/// Terminal reply for a request that did not produce a response.
 #[derive(Clone, Debug, PartialEq, Eq)]
-pub struct Closed {
+pub struct Failure {
     pub id: u64,
+    pub kind: FailKind,
 }
 
 /// What a submitted request's channel eventually delivers: a computed
-/// [`Response`], or [`Closed`] when the coordinator was shut down
-/// abortively while the request was still queued. Every accepted
-/// request receives exactly one `Reply` — pending requests are never
-/// dropped on the floor with a dangling `mpsc::Sender`.
-pub type Reply = Result<Response, Closed>;
+/// [`Response`], or a typed [`Failure`] (shutdown, integrity,
+/// exhaustion). Every accepted request receives exactly one `Reply` —
+/// pending requests are never dropped on the floor with a dangling
+/// `mpsc::Sender`.
+pub type Reply = Result<Response, Failure>;
 
 /// Coordinator configuration.
 #[derive(Clone)]
@@ -102,6 +122,11 @@ pub struct Config {
     /// pool and the shard pool together roughly cover the host without
     /// oversubscribing.
     pub shards: usize,
+    /// How many times a failed device execution is re-attempted on a
+    /// healthy device before the request fails with a typed
+    /// [`Failure`]. Retries respect the request deadline and never
+    /// start past it.
+    pub max_retries: usize,
 }
 
 impl Default for Config {
@@ -114,6 +139,7 @@ impl Default for Config {
             max_batch: 1,
             max_wait_ms: 0,
             shards: 0,
+            max_retries: 2,
         }
     }
 }
@@ -127,6 +153,9 @@ struct VerifyJob {
 /// The running service.
 pub struct Coordinator {
     sim: Arc<Simulator>,
+    /// The devices workers execute on (1 for the classic single-card
+    /// path). Shared with the workers' routing decisions.
+    devices: Vec<Arc<Device>>,
     queue: Arc<Bounded<Request>>,
     pub metrics: Arc<Metrics>,
     workers: Vec<std::thread::JoinHandle<()>>,
@@ -137,15 +166,30 @@ pub struct Coordinator {
 }
 
 impl Coordinator {
-    /// Start workers (and, when `verify_fraction > 0`, the shadow
-    /// verifier, which needs the artifacts to build its PJRT runtime).
+    /// Start workers over a single perfect device (and, when
+    /// `verify_fraction > 0`, the shadow verifier, which needs the
+    /// artifacts to build its PJRT runtime).
     pub fn start(
         sim: Simulator,
         cfg: Config,
         artifacts: Option<(Manifest, Params)>,
     ) -> anyhow::Result<Coordinator> {
+        let device = Arc::new(Device::from_sim(sim, Board::PynqZ2));
+        Coordinator::start_fleet(vec![device], cfg, artifacts)
+    }
+
+    /// Start workers over an explicit device fleet (possibly carrying
+    /// fault injectors). Every device must run the same model; workers
+    /// route each batch to the healthiest least-loaded device and
+    /// retry on failure per [`Config::max_retries`].
+    pub fn start_fleet(
+        devices: Vec<Arc<Device>>,
+        cfg: Config,
+        artifacts: Option<(Manifest, Params)>,
+    ) -> anyhow::Result<Coordinator> {
         anyhow::ensure!(cfg.workers > 0, "need at least one worker");
-        let sim = Arc::new(sim);
+        anyhow::ensure!(!devices.is_empty(), "need at least one device");
+        let sim = Arc::new(devices[0].sim.clone());
         let queue = Arc::new(Bounded::new(cfg.queue_depth));
         let metrics = Arc::new(Metrics::new());
 
@@ -158,18 +202,20 @@ impl Coordinator {
         };
         let mut workers = Vec::with_capacity(cfg.workers);
         for wid in 0..cfg.workers {
-            let sim = sim.clone();
+            let ctx = WorkerCtx {
+                devices: devices.clone(),
+                metrics: metrics.clone(),
+                freq_mhz: cfg.freq_mhz,
+                max_batch: cfg.max_batch.max(1),
+                max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
+                shards,
+                max_retries: cfg.max_retries,
+            };
             let queue = queue.clone();
-            let metrics = metrics.clone();
-            let freq = cfg.freq_mhz;
-            let max_batch = cfg.max_batch.max(1);
-            let max_wait = std::time::Duration::from_millis(cfg.max_wait_ms);
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("attrax-worker-{wid}"))
-                    .spawn(move || {
-                        worker_loop(sim, queue, metrics, freq, max_batch, max_wait, shards)
-                    })?,
+                    .spawn(move || worker_loop(ctx, queue))?,
             );
         }
 
@@ -191,6 +237,7 @@ impl Coordinator {
         metrics.record_start();
         Ok(Coordinator {
             sim,
+            devices,
             queue,
             metrics,
             workers,
@@ -210,6 +257,21 @@ impl Coordinator {
         target: Option<usize>,
         reply: mpsc::Sender<Reply>,
     ) -> Result<u64, &'static str> {
+        self.submit_deadline(image, method, target, None, reply)
+    }
+
+    /// [`Coordinator::submit`] with a hard completion deadline: the
+    /// worker will not start a retry attempt past it (the serving layer
+    /// maps the resulting [`FailKind::Unavailable`] / its own timeout
+    /// to a `DeadlineExceeded` frame).
+    pub fn submit_deadline(
+        &self,
+        image: Vec<f32>,
+        method: Method,
+        target: Option<usize>,
+        deadline: Option<Instant>,
+        reply: mpsc::Sender<Reply>,
+    ) -> Result<u64, &'static str> {
         // validate at admission: a wrong-size image would panic the
         // worker mid-batch, killing the thread and dropping every
         // co-batched request's reply channel
@@ -217,7 +279,8 @@ impl Coordinator {
             return Err("image size mismatch");
         }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req = Request { image, method, target, reply, enqueued: Instant::now(), id };
+        let req =
+            Request { image, method, target, reply, enqueued: Instant::now(), deadline, id };
         match self.queue.try_push(req) {
             Ok(()) => Ok(id),
             Err(PushError::Full(_)) => {
@@ -243,13 +306,20 @@ impl Coordinator {
         let (tx, rx) = mpsc::channel();
         // blocking submit path: retry on backpressure
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let req =
-            Request { image, method, target: None, reply: tx, enqueued: Instant::now(), id };
+        let req = Request {
+            image,
+            method,
+            target: None,
+            reply: tx,
+            enqueued: Instant::now(),
+            deadline: None,
+            id,
+        };
         self.queue
             .push(req)
             .map_err(|_| anyhow::anyhow!("coordinator shutting down"))?;
         rx.recv()?
-            .map_err(|c| anyhow::anyhow!("coordinator closed before request {} ran", c.id))
+            .map_err(|f| anyhow::anyhow!("request {} failed: {:?}", f.id, f.kind))
     }
 
     /// Maybe send a completed response to the shadow verifier.
@@ -286,6 +356,11 @@ impl Coordinator {
         &self.sim
     }
 
+    /// The device fleet workers execute on (breaker state inspection).
+    pub fn devices(&self) -> &[Arc<Device>] {
+        &self.devices
+    }
+
     /// Record a response for shadow verification (driver calls this with
     /// the original image since workers drop it after compute).
     pub fn shadow_check(&self, image: &[f32], resp: &Response) {
@@ -301,16 +376,16 @@ impl Coordinator {
     }
 
     /// Abortive shutdown: close the queue immediately and send every
-    /// still-queued request an explicit [`Closed`] reply rather than
-    /// dropping its `mpsc::Sender` (the seed's close/join race: a
-    /// client blocked on `recv()` for an in-flight request would get a
-    /// bare channel error with no way to tell "shut down" from "worker
-    /// crashed"). Requests already picked up by a worker still complete
-    /// with a normal response.
+    /// still-queued request an explicit [`FailKind::Closed`] reply
+    /// rather than dropping its `mpsc::Sender` (the seed's close/join
+    /// race: a client blocked on `recv()` for an in-flight request
+    /// would get a bare channel error with no way to tell "shut down"
+    /// from "worker crashed"). Requests already picked up by a worker
+    /// still complete with a normal response.
     pub fn shutdown_now(mut self) -> metrics::Snapshot {
         let pending = self.queue.close_and_drain();
         for req in pending {
-            let _ = req.reply.send(Err(Closed { id: req.id }));
+            let _ = req.reply.send(Err(Failure { id: req.id, kind: FailKind::Closed }));
         }
         self.join_threads();
         self.metrics.snapshot()
@@ -327,26 +402,30 @@ impl Coordinator {
     }
 }
 
-fn worker_loop(
-    sim: Arc<Simulator>,
-    queue: Arc<Bounded<Request>>,
+/// Everything one worker thread needs (bundled so the spawn site stays
+/// readable as supervision knobs accumulate).
+struct WorkerCtx {
+    devices: Vec<Arc<Device>>,
     metrics: Arc<Metrics>,
     freq_mhz: f64,
     max_batch: usize,
     max_wait: std::time::Duration,
     shards: usize,
-) {
+    max_retries: usize,
+}
+
+fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
     // batch only requests that can share one device pass: same method
     // (the BP dataflow is method-configured) and same explicit target
     let compatible =
         |a: &Request, b: &Request| a.method == b.method && a.target == b.target;
     // the worker's private arena: every attribute pass runs inside
     // these reusable slabs (zero steady-state allocations), while the
-    // quantized model itself is the shared Arc<Plan> inside `sim` —
-    // N workers hold one copy of the weights, not N
-    let mut ws = Workspace::with_shards(shards);
+    // quantized model itself is the shared Arc<Plan> inside each
+    // device's sim — N workers hold one copy of the weights, not N
+    let mut ws = Workspace::with_shards(ctx.shards);
     let mut out = BatchOutput::new();
-    while let Some(batch) = queue.pop_batch(max_batch, max_wait, compatible) {
+    while let Some(batch) = queue.pop_batch(ctx.max_batch, ctx.max_wait, compatible) {
         let waits_ms: Vec<f64> =
             batch.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).collect();
         let t0 = Instant::now();
@@ -358,16 +437,67 @@ fn worker_loop(
         let method = batch[0].method;
         let opts = AttrOptions { target: batch[0].target, ..Default::default() };
         let imgs: Vec<&[f32]> = batch.iter().map(|r| r.image.as_slice()).collect();
-        sim.attribute_batch_into(&mut ws, &imgs, method, opts, false, &mut out);
+
+        // supervision: route to the healthiest least-loaded device,
+        // retry (on different hardware when it exists) up to
+        // max_retries times, never starting an attempt past the
+        // batch's earliest deadline
+        let deadline = batch.iter().filter_map(|r| r.deadline).min();
+        let mut won: Result<Arc<Device>, FailKind> = Err(FailKind::Unavailable);
+        let mut failed_on: Option<Arc<Device>> = None;
+        for attempt in 0..=ctx.max_retries {
+            if attempt > 0 {
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    break; // out of time: the deadline beats the retry
+                }
+                ctx.metrics.record_retry();
+            }
+            let Some(dev) = Fleet::route_healthy_avoiding(&ctx.devices, failed_on.as_ref())
+            else {
+                won = Err(FailKind::Unavailable);
+                break; // whole fleet quarantined right now
+            };
+            match dev.try_attribute_batch_into(&mut ws, &imgs, method, opts, &mut out) {
+                Ok(()) => {
+                    dev.breaker.record_success();
+                    won = Ok(dev);
+                    break;
+                }
+                Err(fault) => {
+                    if dev.breaker.record_failure() {
+                        ctx.metrics.record_breaker_trip();
+                    }
+                    won = Err(match fault {
+                        DeviceFault::WeightCorruption(_) | DeviceFault::OutputDivergence => {
+                            ctx.metrics.record_integrity_failure();
+                            FailKind::Integrity
+                        }
+                        DeviceFault::Crash => FailKind::Unavailable,
+                    });
+                    failed_on = Some(dev);
+                }
+            }
+        }
+        let dev = match won {
+            Ok(dev) => dev,
+            Err(kind) => {
+                for req in batch {
+                    ctx.metrics.record_error();
+                    let _ = req.reply.send(Err(Failure { id: req.id, kind }));
+                }
+                continue;
+            }
+        };
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
-        // cycles under the tile-latency model the config selects
-        // (dataflow-overlapped configs from `attrax tune` report the
-        // same numbers here as in BENCH_dse.json)
+        // cycles under the tile-latency model of the device that
+        // actually ran the batch (dataflow-overlapped configs from
+        // `attrax tune` report the same numbers here as in
+        // BENCH_dse.json)
         let total_cycles =
-            out.fp_cost.cycles_under(&sim.cfg) + out.bp_cost.cycles_under(&sim.cfg);
+            out.fp_cost.cycles_under(&dev.sim.cfg) + out.bp_cost.cycles_under(&dev.sim.cfg);
         let per_image_cycles = total_cycles / batch.len() as u64;
         for (b, (req, wait_ms)) in batch.into_iter().zip(waits_ms).enumerate() {
-            metrics.record_completion(host_ms, wait_ms, per_image_cycles);
+            ctx.metrics.record_completion(host_ms, wait_ms, per_image_cycles);
             let resp = Response {
                 id: req.id,
                 pred: out.preds[b],
@@ -375,7 +505,7 @@ fn worker_loop(
                 relevance: out.relevance_of(b).to_vec(),
                 method,
                 latency_ms: host_ms,
-                device_ms: per_image_cycles as f64 / (freq_mhz * 1e3),
+                device_ms: per_image_cycles as f64 / (ctx.freq_mhz * 1e3),
                 device_cycles: per_image_cycles,
             };
             // receiver may have gone away; that's fine
@@ -434,8 +564,85 @@ fn verifier_loop(
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::faults::{FaultHooks, FaultPlan, SiteSpec};
     use crate::hls::HwConfig;
     use crate::sched::tests_support::tiny_sim;
+
+    #[test]
+    fn faulty_device_retries_recover_on_the_healthy_one() {
+        let sim = tiny_sim(21, HwConfig::pynq_z2());
+        let reference = tiny_sim(21, HwConfig::pynq_z2());
+        let mut plan = FaultPlan::none();
+        plan.seed = 3;
+        plan.device.wrong = SiteSpec::rate(1.0); // always-diverging device
+        let hooks = FaultHooks::new(plan);
+        let bad = Arc::new(Device::from_sim(sim.clone(), Board::PynqZ2).with_faults(&hooks, 0));
+        let good = Arc::new(Device::from_sim(sim, Board::PynqZ2));
+        let coord = Coordinator::start_fleet(
+            vec![bad, good],
+            Config { workers: 1, max_retries: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let img: Vec<f32> = (0..128).map(|i| (i % 5) as f32 / 5.0).collect();
+        let resp = coord.attribute_blocking(img.clone(), Method::Saliency).unwrap();
+        let want = reference.attribute(&img, Method::Saliency, AttrOptions::default());
+        assert_eq!(resp.pred, want.pred);
+        assert_eq!(resp.relevance, want.relevance, "retry output must stay bit-exact");
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 1);
+        assert_eq!(snap.retries, 1, "one retry onto the healthy device");
+        assert_eq!(snap.integrity_failures, 1, "the DMR detection is counted");
+        assert_eq!(snap.errors, 0, "the client never saw the fault");
+    }
+
+    #[test]
+    fn crashed_device_trips_breaker_and_requests_fail_typed() {
+        let sim = tiny_sim(22, HwConfig::pynq_z2());
+        let mut plan = FaultPlan::none();
+        plan.device.crash_every = 1; // dead on arrival
+        let hooks = FaultHooks::new(plan);
+        let dev = Arc::new(Device::from_sim(sim, Board::PynqZ2).with_faults(&hooks, 0));
+        let coord = Coordinator::start_fleet(
+            vec![dev],
+            Config { workers: 1, max_retries: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        for _ in 0..4 {
+            let (_, rx) = coord.submit_traced(vec![0.5; 128], Method::Saliency).unwrap();
+            let f = rx.recv().unwrap().expect_err("a crashed device cannot answer");
+            assert_eq!(f.kind, FailKind::Unavailable);
+        }
+        let snap = coord.shutdown();
+        assert_eq!(snap.completed, 0);
+        assert_eq!(snap.errors, 4);
+        assert!(snap.breaker_trips >= 1, "repeated crashes must quarantine the device");
+    }
+
+    #[test]
+    fn expired_deadline_stops_retries() {
+        let sim = tiny_sim(23, HwConfig::pynq_z2());
+        let mut plan = FaultPlan::none();
+        plan.device.wrong = SiteSpec::rate(1.0);
+        let hooks = FaultHooks::new(plan);
+        let dev = Arc::new(Device::from_sim(sim, Board::PynqZ2).with_faults(&hooks, 0));
+        let coord = Coordinator::start_fleet(
+            vec![dev],
+            Config { workers: 1, max_retries: 8, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let (tx, rx) = mpsc::channel();
+        coord
+            .submit_deadline(vec![0.5; 128], Method::Saliency, None, Some(Instant::now()), tx)
+            .unwrap();
+        let f = rx.recv().unwrap().expect_err("always-diverging device cannot succeed");
+        assert_eq!(f.kind, FailKind::Integrity);
+        let snap = coord.shutdown();
+        assert_eq!(snap.retries, 0, "no retry may start past the deadline");
+        assert_eq!(snap.integrity_failures, 1);
+    }
 
     #[test]
     fn serve_roundtrip() {
@@ -526,7 +733,10 @@ mod tests {
             // reply — never a dropped channel
             match rx.recv().expect("reply channel must not be dropped") {
                 Ok(_) => done += 1,
-                Err(Closed { .. }) => closed += 1,
+                Err(f) => {
+                    assert_eq!(f.kind, FailKind::Closed);
+                    closed += 1;
+                }
             }
         }
         assert_eq!(done + closed, 16);

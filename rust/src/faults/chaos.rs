@@ -1,0 +1,336 @@
+//! The `attrax chaos` harness: drive the full serving stack — client →
+//! wire proxy → TCP server → coordinator → device fleet — under a
+//! seeded [`FaultPlan`] and account for every fault's fate.
+//!
+//! The harness owns a ground-truth oracle: each request's attribution
+//! is precomputed on a pristine simulator, and every served response is
+//! compared bitwise against it. A fault can then end exactly one of
+//! three ways:
+//!
+//! * **recovered** — the request succeeded with bit-exact output even
+//!   though at least one fault fired while it was in flight (retry,
+//!   reconnect, resubmit, scrub-reload, or DMR re-execution did its
+//!   job);
+//! * **failed** — the request surfaced a typed error to the client
+//!   (detected and refused: honest, but unavailable);
+//! * **escaped** — the client accepted output that differs from the
+//!   oracle. This is the integrity failure mode the stack exists to
+//!   prevent; the CI gate asserts it is zero.
+//!
+//! Determinism: the harness uses one client connection and one
+//! coordinator worker, so every injection site sees a reproducible
+//! sequence number stream and `BENCH_chaos.json` is byte-identical
+//! across reruns of the same spec. No wall-clock value enters the
+//! report — the latency figure is the modeled device-cycle p99.
+
+use std::time::Duration;
+
+use crate::attribution::ALL_METHODS;
+use crate::coordinator::fleet::Device;
+use crate::coordinator::{Config, Coordinator};
+use crate::fpga::Board;
+use crate::hls::HwConfig;
+use crate::sched::tests_support::tiny_sim;
+use crate::sched::AttrOptions;
+use crate::serve::{Client, Server, ServerConfig};
+use crate::util::json::{num, obj, s};
+
+use super::wire::WireProxy;
+use super::{splitmix64, unit_f64, FaultHooks, FaultPlan, SiteSpec};
+
+/// Schema tag carried by `BENCH_chaos.json`.
+pub const REPORT_SCHEMA: &str = "attrax-chaos/v1";
+
+/// One chaos campaign: a request count, a fault schedule, and the
+/// recovery machinery's knobs.
+#[derive(Clone, Debug)]
+pub struct ChaosSpec {
+    /// Requests the client issues (sequentially, one connection).
+    pub requests: usize,
+    /// Seed for the tiny model's parameters and the request images.
+    pub model_seed: u64,
+    pub plan: FaultPlan,
+    /// CRC-protect payloads in both directions. Without it, wire
+    /// corruption is *undetectable* and will show up as escaped.
+    pub with_crc: bool,
+    /// Client-side transparent retries per request.
+    pub client_retries: u32,
+    /// Client backoff base between retries.
+    pub backoff: Duration,
+    /// Devices in the fleet (failover needs at least 2).
+    pub devices: usize,
+}
+
+impl ChaosSpec {
+    /// The fixed `--smoke` campaign: every fault site armed at a
+    /// modest rate, two devices, CRC on. Small enough for CI, busy
+    /// enough that every detection and recovery path fires.
+    pub fn smoke() -> ChaosSpec {
+        let mut plan = FaultPlan::none();
+        plan.seed = 7;
+        plan.wire.corrupt = SiteSpec::rate(0.08);
+        plan.wire.truncate = SiteSpec::rate(0.04);
+        plan.wire.delay = SiteSpec::rate(0.05);
+        plan.wire.delay_ms = 1;
+        plan.admission.busy = SiteSpec::rate(0.06);
+        plan.admission.deadline = SiteSpec::rate(0.02);
+        plan.device.stall = SiteSpec::rate(0.05);
+        plan.device.stall_ms = 1;
+        plan.device.wrong = SiteSpec::rate(0.08);
+        plan.device.crash_every = 25;
+        plan.memory.weight_flip = SiteSpec::rate(0.05);
+        plan.memory.grad_flip = SiteSpec::rate(0.05);
+        ChaosSpec {
+            requests: 60,
+            model_seed: 11,
+            plan,
+            with_crc: true,
+            client_retries: 5,
+            backoff: Duration::from_millis(1),
+            devices: 2,
+        }
+    }
+}
+
+/// Outcome accounting for one campaign. All counts; the only derived
+/// floats (`availability`, `p99_device_mcycles`) are pure functions of
+/// deterministic inputs, so the JSON is byte-stable across reruns.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ChaosReport {
+    pub seed: u64,
+    pub requests: u64,
+    /// Bit-exact successes (includes `recovered`).
+    pub ok: u64,
+    /// Typed errors surfaced to the client after retries ran out.
+    pub failed: u64,
+    /// Accepted-but-wrong responses. Must be zero with CRC on.
+    pub escaped: u64,
+    /// Bit-exact successes during which at least one fault fired.
+    pub recovered: u64,
+    /// Injected-fault counts by site, canonical order.
+    pub injected: Vec<(&'static str, u64)>,
+    pub detected_crc: u64,
+    pub detected_checksum: u64,
+    pub detected_dmr: u64,
+    pub retries: u64,
+    pub breaker_trips: u64,
+    pub integrity_failures: u64,
+    pub reconnects: u64,
+    /// `ok / requests`.
+    pub availability: f64,
+    /// p99 of modeled device cycles over successful requests, in
+    /// megacycles (the "latency under faults" figure — modeled, so it
+    /// is reproducible; wall time is not).
+    pub p99_device_mcycles: f64,
+}
+
+impl ChaosReport {
+    /// Canonical `BENCH_chaos.json` body.
+    pub fn to_json(&self) -> String {
+        let injected =
+            self.injected.iter().map(|&(name, c)| (name, num(c as f64))).collect::<Vec<_>>();
+        obj(vec![
+            ("schema", s(REPORT_SCHEMA)),
+            ("seed", num(self.seed as f64)),
+            (
+                "requests",
+                obj(vec![
+                    ("total", num(self.requests as f64)),
+                    ("ok", num(self.ok as f64)),
+                    ("failed", num(self.failed as f64)),
+                    ("escaped", num(self.escaped as f64)),
+                    ("recovered", num(self.recovered as f64)),
+                ]),
+            ),
+            ("availability", num(self.availability)),
+            ("p99_device_mcycles", num(self.p99_device_mcycles)),
+            ("injected", obj(injected)),
+            (
+                "detected",
+                obj(vec![
+                    ("crc", num(self.detected_crc as f64)),
+                    ("checksum", num(self.detected_checksum as f64)),
+                    ("dmr", num(self.detected_dmr as f64)),
+                ]),
+            ),
+            (
+                "recovery",
+                obj(vec![
+                    ("retries", num(self.retries as f64)),
+                    ("breaker_trips", num(self.breaker_trips as f64)),
+                    ("integrity_failures", num(self.integrity_failures as f64)),
+                    ("reconnects", num(self.reconnects as f64)),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+}
+
+/// A deterministic request image: `elems` floats in `[0, 1)` hashed
+/// from `(seed, request index)`.
+fn request_image(seed: u64, q: u64, elems: usize) -> Vec<f32> {
+    (0..elems)
+        .map(|i| {
+            let h = splitmix64(seed ^ q.rotate_left(23) ^ (i as u64).wrapping_mul(0x9e37));
+            unit_f64(h) as f32
+        })
+        .collect()
+}
+
+/// Run one campaign end to end and account for every request.
+pub fn run(spec: &ChaosSpec) -> anyhow::Result<ChaosReport> {
+    anyhow::ensure!(spec.requests > 0, "chaos needs at least one request");
+    anyhow::ensure!(spec.devices > 0, "chaos needs at least one device");
+    let sim = tiny_sim(spec.model_seed, HwConfig::pynq_z2());
+    let elems = sim.net.input.elems();
+    let oracle = sim.clone();
+
+    let hooks = FaultHooks::new(spec.plan);
+    let devices = (0..spec.devices)
+        .map(|i| {
+            let d = Device::from_sim(sim.clone(), Board::PynqZ2).with_faults(&hooks, i as u64);
+            std::sync::Arc::new(d)
+        })
+        .collect::<Vec<_>>();
+    // one worker: device/admission sequence numbers then depend only on
+    // the (deterministic) request + retry stream, not thread timing
+    let coord = Coordinator::start_fleet(
+        devices,
+        Config { workers: 1, max_batch: 1, ..Config::default() },
+        None,
+    )?;
+    let metrics = coord.metrics.clone();
+    let server = Server::start(
+        "127.0.0.1:0",
+        coord,
+        ServerConfig { max_conns: 4, default_deadline_ms: 0, faults: Some(hooks.clone()) },
+    )?;
+    let mut proxy = WireProxy::start(server.local_addr(), hooks.clone())?;
+
+    let mut client = Client::connect(proxy.addr())?;
+    client.set_crc(spec.with_crc);
+    client.set_recovery(spec.client_retries, spec.backoff, spec.plan.seed);
+
+    let (mut ok, mut failed, mut escaped, mut recovered) = (0u64, 0u64, 0u64, 0u64);
+    let mut ok_cycles: Vec<u64> = Vec::with_capacity(spec.requests);
+    for q in 0..spec.requests as u64 {
+        let image = request_image(spec.model_seed, q, elems);
+        let method = ALL_METHODS[(q % 3) as usize];
+        let want = oracle.attribute(&image, method, AttrOptions::default());
+        let fired_before = hooks.stats.total_injected();
+        match client.attribute(&image, method) {
+            Ok(got) => {
+                let exact = got.pred == want.pred
+                    && got.relevance.len() == want.relevance.len()
+                    && got
+                        .relevance
+                        .iter()
+                        .zip(&want.relevance)
+                        .all(|(a, b)| a.to_bits() == b.to_bits());
+                if exact {
+                    ok += 1;
+                    ok_cycles.push(got.device_cycles);
+                    if hooks.stats.total_injected() > fired_before {
+                        recovered += 1;
+                    }
+                } else {
+                    escaped += 1;
+                }
+            }
+            Err(_) => failed += 1,
+        }
+    }
+    // fold client-side transport recovery into the one metrics record
+    for _ in 0..client.reconnects() {
+        metrics.record_reconnect();
+    }
+    drop(client);
+    proxy.stop();
+    let snap = server.shutdown()?;
+
+    ok_cycles.sort_unstable();
+    let p99 = if ok_cycles.is_empty() {
+        0.0
+    } else {
+        let idx = ((ok_cycles.len() as f64) * 0.99).ceil() as usize;
+        ok_cycles[idx.clamp(1, ok_cycles.len()) - 1] as f64 / 1.0e6
+    };
+    Ok(ChaosReport {
+        seed: spec.plan.seed,
+        requests: spec.requests as u64,
+        ok,
+        failed,
+        escaped,
+        recovered,
+        injected: hooks.stats.rows(),
+        detected_crc: hooks.stats.detected_crc.load(std::sync::atomic::Ordering::Relaxed),
+        detected_checksum: hooks
+            .stats
+            .detected_checksum
+            .load(std::sync::atomic::Ordering::Relaxed),
+        detected_dmr: hooks.stats.detected_dmr.load(std::sync::atomic::Ordering::Relaxed),
+        retries: snap.retries,
+        breaker_trips: snap.breaker_trips,
+        integrity_failures: snap.integrity_failures,
+        reconnects: snap.reconnects,
+        availability: ok as f64 / spec.requests as f64,
+        p99_device_mcycles: p99,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clean_plan_serves_everything_bit_exactly() {
+        let spec = ChaosSpec {
+            requests: 9,
+            model_seed: 3,
+            plan: FaultPlan::none(),
+            with_crc: false,
+            client_retries: 0,
+            backoff: Duration::ZERO,
+            devices: 1,
+        };
+        let r = run(&spec).unwrap();
+        assert_eq!(r.ok, 9);
+        assert_eq!(r.failed, 0);
+        assert_eq!(r.escaped, 0);
+        assert_eq!(r.recovered, 0);
+        assert_eq!(r.injected.iter().map(|(_, c)| c).sum::<u64>(), 0);
+        assert_eq!(r.availability, 1.0);
+        assert!(r.p99_device_mcycles > 0.0);
+    }
+
+    #[test]
+    fn smoke_campaign_recovers_everything_and_is_deterministic() {
+        let a = run(&ChaosSpec::smoke()).unwrap();
+        // the CI contract: faults fired, none escaped, recovery ran
+        assert!(a.injected.iter().map(|(_, c)| c).sum::<u64>() > 0, "no faults fired");
+        assert_eq!(a.escaped, 0, "corrupt output escaped to the client");
+        assert!(a.recovered > 0, "no request needed recovery");
+        assert!(a.ok + a.failed == a.requests);
+        // byte-identical across reruns (same spec, fresh stack)
+        let b = run(&ChaosSpec::smoke()).unwrap();
+        assert_eq!(a.to_json(), b.to_json());
+    }
+
+    #[test]
+    fn report_json_is_schema_tagged() {
+        let spec = ChaosSpec {
+            requests: 3,
+            model_seed: 5,
+            plan: FaultPlan::none(),
+            with_crc: true,
+            client_retries: 1,
+            backoff: Duration::ZERO,
+            devices: 1,
+        };
+        let r = run(&spec).unwrap();
+        let text = r.to_json();
+        assert!(text.contains("\"schema\":\"attrax-chaos/v1\""));
+        assert!(text.contains("\"availability\":1"));
+    }
+}

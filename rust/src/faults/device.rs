@@ -1,0 +1,255 @@
+//! Per-device fault injector: stall, wrong-answer, crash-on-Nth, and
+//! memory bit flips — plus the detection machinery that keeps every
+//! one of them from escaping as corrupt output.
+//!
+//! Detection is *honest*: the injector never "self-reports" a wrong
+//! answer. Weight flips land in a copy-on-inject view and are caught
+//! by the checksum-manifest scrub that runs before every protected
+//! execution; transient faults (wrong-answer, gradient-slab flips)
+//! perturb only the first of two executions and are caught by
+//! bit-exact dual-modular-redundancy comparison — the classic SEU
+//! mitigation on edge FPGAs, where a second pass is cheaper than a
+//! corrupted explanation. DMR runs only when an injector is attached,
+//! so the no-faults serving path keeps its exact performance and
+//! numerics.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use super::memory::CorruptibleView;
+use super::{salt, splitmix64, FaultHooks, FaultStats};
+use crate::attribution::Method;
+use crate::coordinator::fleet::DeviceFault;
+use crate::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
+use std::sync::Arc;
+
+/// Fault injector attached to one device.
+pub struct DeviceInjector {
+    plan: Arc<super::FaultPlan>,
+    stats: Arc<FaultStats>,
+    /// Per-device salt: two devices under one plan draw independent
+    /// fault schedules.
+    instance: u64,
+    /// This device's execution sequence counter (the injection clock).
+    seq: AtomicU64,
+    /// Crash-on-Nth is permanent once it fires.
+    crashed: AtomicBool,
+    /// The device's corruptible model-memory view.
+    view: CorruptibleView,
+    /// Scratch for the DMR second pass.
+    dmr: Mutex<(Workspace, BatchOutput)>,
+}
+
+impl DeviceInjector {
+    pub fn new(hooks: &FaultHooks, instance: u64, pristine: Simulator) -> DeviceInjector {
+        DeviceInjector {
+            plan: hooks.plan.clone(),
+            stats: hooks.stats.clone(),
+            instance,
+            seq: AtomicU64::new(0),
+            crashed: AtomicBool::new(false),
+            view: CorruptibleView::new(pristine),
+            dmr: Mutex::new((Workspace::with_shards(1), BatchOutput::new())),
+        }
+    }
+
+    /// Requests this injector has seen.
+    pub fn seq(&self) -> u64 {
+        self.seq.load(Ordering::Relaxed)
+    }
+
+    pub fn is_crashed(&self) -> bool {
+        self.crashed.load(Ordering::Relaxed)
+    }
+
+    /// The protected execution pipeline: inject per-site faults, scrub
+    /// model memory, execute, DMR-compare. Every injected fault either
+    /// has no observable effect (stall/delay) or surfaces as a typed
+    /// [`DeviceFault`] — never as silently corrupt output.
+    pub fn execute(
+        &self,
+        ws: &mut Workspace,
+        imgs: &[&[f32]],
+        method: Method,
+        opts: AttrOptions,
+        out: &mut BatchOutput,
+    ) -> Result<(), DeviceFault> {
+        if self.crashed.load(Ordering::Relaxed) {
+            return Err(DeviceFault::Crash);
+        }
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        let p = &*self.plan;
+        let seed = p.seed ^ self.instance.wrapping_mul(0xa076_1d64_78bd_642f);
+
+        // crash-on-Nth request: permanent device death
+        if p.device.crash_every > 0 && seq + 1 >= p.device.crash_every {
+            if !self.crashed.swap(true, Ordering::Relaxed) {
+                FaultStats::bump(&self.stats.injected_device_crash);
+            }
+            return Err(DeviceFault::Crash);
+        }
+
+        // stall: the request is answered, late (deadline pressure)
+        if p.device.stall.decide(seed, salt::DEVICE_STALL, seq) {
+            FaultStats::bump(&self.stats.injected_device_stall);
+            if p.device.stall_ms > 0 {
+                std::thread::sleep(Duration::from_millis(p.device.stall_ms));
+            }
+        }
+
+        // memory fault: SEU in a weight slab (copy-on-inject — the
+        // shared pristine Arc<Plan> is never touched)
+        if p.memory.weight_flip.decide(seed, salt::MEM_WEIGHT, seq) {
+            FaultStats::bump(&self.stats.injected_mem_weight_flip);
+            self.view.flip_weight_bit(splitmix64(seed ^ salt::MEM_WEIGHT ^ seq));
+        }
+
+        // scrub before trusting model memory; a detected flip reloads
+        // the view from the pristine plan (recovery on next attempt)
+        if let Err(e) = self.view.scrub() {
+            FaultStats::bump(&self.stats.detected_checksum);
+            return Err(DeviceFault::WeightCorruption(e));
+        }
+        let sim = self.view.current();
+
+        // first pass
+        sim.attribute_batch_into(ws, imgs, method, opts, false, out);
+
+        // transient faults perturb the first pass's observable output:
+        // `wrong` models a compute upset, `grad_flip` an SEU in the
+        // gradient slab that propagates to the relevance map
+        if p.device.wrong.decide(seed, salt::DEVICE_WRONG, seq) {
+            FaultStats::bump(&self.stats.injected_device_wrong);
+            perturb(out, seed ^ salt::DEVICE_WRONG, seq);
+        }
+        if p.memory.grad_flip.decide(seed, salt::MEM_GRAD, seq) {
+            FaultStats::bump(&self.stats.injected_mem_grad_flip);
+            perturb(out, seed ^ salt::MEM_GRAD, seq);
+        }
+
+        // DMR: re-execute and compare bit-exactly (P12 guarantees the
+        // clean path is deterministic, so any divergence is a fault)
+        let mut g = self.dmr.lock().unwrap();
+        let (ws2, out2) = &mut *g;
+        sim.attribute_batch_into(ws2, imgs, method, opts, false, out2);
+        if !outputs_equal(out, out2) {
+            FaultStats::bump(&self.stats.detected_dmr);
+            return Err(DeviceFault::OutputDivergence);
+        }
+        Ok(())
+    }
+}
+
+/// Flip one mantissa bit of one seed-chosen relevance element — the
+/// injected transient corruption.
+fn perturb(out: &mut BatchOutput, seed: u64, seq: u64) {
+    if out.relevance.is_empty() {
+        return;
+    }
+    let h = splitmix64(seed ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+    let idx = (h % out.relevance.len() as u64) as usize;
+    let bit = ((h >> 40) % 23) as u32; // stay in the f32 mantissa
+    out.relevance[idx] = f32::from_bits(out.relevance[idx].to_bits() ^ (1u32 << bit));
+}
+
+/// Bit-exact output comparison (NaN-safe: compares representations).
+fn outputs_equal(a: &BatchOutput, b: &BatchOutput) -> bool {
+    a.preds == b.preds
+        && a.logits.len() == b.logits.len()
+        && a.logits.iter().zip(&b.logits).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.relevance.len() == b.relevance.len()
+        && a.relevance.iter().zip(&b.relevance).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{FaultPlan, SiteSpec};
+    use super::*;
+    use crate::hls::HwConfig;
+    use crate::sched::tests_support::tiny_sim;
+
+    fn img() -> Vec<f32> {
+        (0..128).map(|i| (i % 13) as f32 / 13.0).collect()
+    }
+
+    fn run_one(inj: &DeviceInjector) -> Result<(), DeviceFault> {
+        let image = img();
+        let mut ws = Workspace::with_shards(1);
+        let mut out = BatchOutput::new();
+        inj.execute(&mut ws, &[&image], Method::Saliency, AttrOptions::default(), &mut out)
+    }
+
+    #[test]
+    fn zero_plan_injector_is_never_built_but_executes_cleanly() {
+        // even if constructed directly with an all-zero plan, the
+        // pipeline passes every request
+        let hooks = FaultHooks::new(FaultPlan::none());
+        let inj = DeviceInjector::new(&hooks, 0, tiny_sim(31, HwConfig::pynq_z2()));
+        for _ in 0..4 {
+            run_one(&inj).expect("no sites armed");
+        }
+        assert_eq!(hooks.stats.total_injected(), 0);
+    }
+
+    #[test]
+    fn wrong_answer_is_caught_by_dmr() {
+        let mut p = FaultPlan::none();
+        p.seed = 5;
+        p.device.wrong = SiteSpec::rate(1.0);
+        let hooks = FaultHooks::new(p);
+        let inj = DeviceInjector::new(&hooks, 0, tiny_sim(32, HwConfig::pynq_z2()));
+        assert_eq!(run_one(&inj), Err(DeviceFault::OutputDivergence));
+        assert_eq!(hooks.stats.injected_device_wrong.load(Ordering::Relaxed), 1);
+        assert_eq!(hooks.stats.detected_dmr.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn weight_flip_is_caught_by_scrub_and_recovers() {
+        let mut p = FaultPlan::none();
+        p.seed = 6;
+        p.memory.weight_flip = SiteSpec { rate: 1.0, from: 0, until: 1 }; // first request only
+        let hooks = FaultHooks::new(p);
+        let inj = DeviceInjector::new(&hooks, 0, tiny_sim(33, HwConfig::pynq_z2()));
+        match run_one(&inj) {
+            Err(DeviceFault::WeightCorruption(e)) => assert!(!e.slab.is_empty()),
+            other => panic!("expected WeightCorruption, got {other:?}"),
+        }
+        // recovery: the view reloaded from the pristine plan
+        run_one(&inj).expect("second request runs on the recovered view");
+        assert_eq!(hooks.stats.detected_checksum.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn crash_on_nth_is_permanent() {
+        let mut p = FaultPlan::none();
+        p.device.crash_every = 3;
+        let hooks = FaultHooks::new(p);
+        let inj = DeviceInjector::new(&hooks, 0, tiny_sim(34, HwConfig::pynq_z2()));
+        run_one(&inj).expect("request 1 fine");
+        run_one(&inj).expect("request 2 fine");
+        assert_eq!(run_one(&inj), Err(DeviceFault::Crash));
+        assert!(inj.is_crashed());
+        assert_eq!(run_one(&inj), Err(DeviceFault::Crash), "crashes are permanent");
+        assert_eq!(hooks.stats.injected_device_crash.load(Ordering::Relaxed), 1);
+    }
+
+    #[test]
+    fn clean_requests_match_plain_simulator_bit_exactly() {
+        let mut p = FaultPlan::none();
+        p.seed = 7;
+        // sites armed but never firing in the window we use
+        p.device.wrong = SiteSpec { rate: 1.0, from: 1000, until: 2000 };
+        let hooks = FaultHooks::new(p);
+        let sim = tiny_sim(35, HwConfig::pynq_z2());
+        let inj = DeviceInjector::new(&hooks, 0, sim.clone());
+        let image = img();
+        let mut ws = Workspace::with_shards(1);
+        let mut out = BatchOutput::new();
+        inj.execute(&mut ws, &[&image], Method::Guided, AttrOptions::default(), &mut out)
+            .expect("not in the arm window");
+        let want = sim.attribute(&image, Method::Guided, AttrOptions::default());
+        assert_eq!(out.preds[0], want.pred);
+        assert_eq!(out.relevance_of(0), want.relevance.as_slice());
+    }
+}

@@ -1,0 +1,123 @@
+//! Copy-on-inject model-memory view: SEU bit flips in weight slabs
+//! without ever touching the shared pristine `Arc<Plan>`.
+//!
+//! A device's "BRAM contents" are modeled as a view over the plan: by
+//! default it *is* the shared pristine plan (no copy, no overhead);
+//! when the injector fires a weight flip, the view becomes a private
+//! corrupted clone ([`Plan::with_flipped_weight_bit`]) carrying the
+//! original build-time checksum manifest. The pre-execution scrub
+//! ([`Simulator::verify_integrity`]) then detects the flip, and
+//! recovery reloads the view from the pristine plan — the DRAM golden
+//! copy, in hardware terms.
+
+use std::sync::Arc;
+use std::sync::Mutex;
+
+use crate::sched::{IntegrityError, Plan, Simulator};
+
+/// A device's corruptible model-memory view.
+pub struct CorruptibleView {
+    /// The golden copy (shared, never mutated).
+    pristine: Simulator,
+    /// The corrupted private copy, when a flip has been injected and
+    /// not yet scrubbed. Holds the only strong reference to its plan.
+    corrupted: Mutex<Option<Simulator>>,
+}
+
+impl CorruptibleView {
+    pub fn new(pristine: Simulator) -> CorruptibleView {
+        CorruptibleView { pristine, corrupted: Mutex::new(None) }
+    }
+
+    /// The pristine simulator (for oracle / recovery callers).
+    pub fn pristine(&self) -> &Simulator {
+        &self.pristine
+    }
+
+    /// Inject: flip one seed-chosen bit in a private clone of the
+    /// plan's weight slabs. Returns the flipped slab's name; `None` if
+    /// the model has no weights (nothing to corrupt). Idempotent under
+    /// repeated injections before a scrub — the newest flip wins.
+    pub fn flip_weight_bit(&self, seed: u64) -> Option<String> {
+        let (corrupt, slab) = self.pristine.plan().with_flipped_weight_bit(seed)?;
+        let sim = Simulator::with_config(Arc::new(corrupt), self.pristine.cfg)
+            .expect("clone keeps the plan's own Q format");
+        *self.corrupted.lock().unwrap() = Some(sim);
+        Some(slab)
+    }
+
+    /// Scrub model memory before trusting it: re-checksum the current
+    /// view against the build-time manifest. On a detected flip the
+    /// view is reloaded from the pristine plan (recovery) and the
+    /// violation is returned so the caller can fail the request
+    /// typed-ly and count the detection.
+    pub fn scrub(&self) -> Result<(), IntegrityError> {
+        let mut g = self.corrupted.lock().unwrap();
+        let Some(view) = g.as_ref() else {
+            // pristine fast path: the manifest was computed from these
+            // exact slabs at build, no fault can have been injected
+            return Ok(());
+        };
+        match view.verify_integrity() {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                *g = None; // reload from the DRAM golden copy
+                Err(e)
+            }
+        }
+    }
+
+    /// The simulator to execute with right now: the corrupted view if
+    /// one is installed (callers scrub first on protected paths).
+    pub fn current(&self) -> Simulator {
+        self.corrupted.lock().unwrap().clone().unwrap_or_else(|| self.pristine.clone())
+    }
+
+    /// Whether a corrupted view is currently installed.
+    pub fn is_corrupted(&self) -> bool {
+        self.corrupted.lock().unwrap().is_some()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::HwConfig;
+    use crate::sched::tests_support::tiny_sim;
+
+    #[test]
+    fn scrub_detects_flip_and_recovers() {
+        let view = CorruptibleView::new(tiny_sim(11, HwConfig::pynq_z2()));
+        assert!(view.scrub().is_ok(), "pristine view always passes");
+        let slab = view.flip_weight_bit(0xdead_beef).expect("tiny net has weights");
+        assert!(view.is_corrupted());
+        let err = view.scrub().expect_err("flip must be detected");
+        assert_eq!(err.slab, slab, "the violated slab is named");
+        assert_ne!(err.expected, err.got);
+        // recovery: the view reloaded from the pristine plan
+        assert!(!view.is_corrupted());
+        assert!(view.scrub().is_ok());
+    }
+
+    #[test]
+    fn pristine_plan_is_never_mutated() {
+        let sim = tiny_sim(12, HwConfig::pynq_z2());
+        let view = CorruptibleView::new(sim.clone());
+        for seed in 0..8u64 {
+            view.flip_weight_bit(seed * 0x9e37_79b9);
+            let _ = view.scrub();
+        }
+        assert!(sim.verify_integrity().is_ok(), "shared Arc<Plan> must stay pristine");
+    }
+
+    #[test]
+    fn different_seeds_hit_different_slabs_eventually() {
+        let view = CorruptibleView::new(tiny_sim(13, HwConfig::pynq_z2()));
+        let mut slabs = std::collections::BTreeSet::new();
+        for seed in 0..64u64 {
+            slabs.insert(view.flip_weight_bit(seed.wrapping_mul(0x2545_f491_4f6c_dd1d)).unwrap());
+            let _ = view.scrub();
+        }
+        assert!(slabs.len() > 1, "bit picker should cover more than one slab: {slabs:?}");
+    }
+}

@@ -1,0 +1,468 @@
+//! Deterministic fault injection for the serving stack (DESIGN.md
+//! §fault model and recovery matrix).
+//!
+//! Edge FPGAs live with transient faults — SEU bit flips in BRAM
+//! weight tiles, stalled AXI transfers, flaky links — so the serving
+//! layers must *detect or recover from* injected faults rather than
+//! ship corrupt heatmaps or hang. This module is the injection plane:
+//!
+//! * [`FaultPlan`] — a seeded, schema-tagged (`attrax-faults/v1`)
+//!   description of per-site fault rates and arm windows. Decisions
+//!   are pure functions of `(seed, site, sequence number)`, so a run
+//!   with one client connection and one worker is bit-reproducible
+//!   regardless of thread scheduling.
+//! * [`wire::WireProxy`] — a frame-aware TCP proxy that truncates,
+//!   corrupts, or delays frames in flight (detected by the protocol's
+//!   CRC-32 payload field and typed truncation errors).
+//! * Admission faults — forced `Busy`/`DeadlineExceeded` at the
+//!   server's front door (exercises client retry policies).
+//! * [`device::DeviceInjector`] — per-device stall, wrong-answer,
+//!   crash-on-Nth-request, and memory bit flips in a copy-on-inject
+//!   view of the plan's weight slabs ([`memory::CorruptibleView`] —
+//!   the shared `Arc<Plan>` is never mutated). Wrong answers are
+//!   caught by dual-modular-redundancy re-execution, weight flips by
+//!   the plan's build-time checksum manifest.
+//! * [`chaos`] — the `attrax chaos` harness: drive an in-process
+//!   server under a `FaultPlan` and emit `BENCH_chaos.json` with
+//!   fault/detection/recovery accounting and an escaped-fault oracle.
+//!
+//! An all-zero plan ([`FaultPlan::none`]) injects nothing and the
+//! protected paths take their fast branches — heatmaps, cycle ledgers
+//! and metrics stay bit-identical to a build without this module
+//! (property P16).
+
+pub mod chaos;
+pub mod device;
+pub mod memory;
+pub mod wire;
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+use crate::util::json::{num, obj, s, Json};
+
+/// Schema tag carried by `*.faults.json` configs.
+pub const SCHEMA: &str = "attrax-faults/v1";
+
+/// Site salts: every injection site hashes under its own constant so
+/// rates are independent across sites at the same sequence number.
+pub mod salt {
+    pub const WIRE_CORRUPT: u64 = 0x7749_5243_0000_0001;
+    pub const WIRE_TRUNCATE: u64 = 0x7749_5254_0000_0002;
+    pub const WIRE_DELAY: u64 = 0x7749_5244_0000_0003;
+    pub const ADMISSION_BUSY: u64 = 0x4144_4d42_0000_0004;
+    pub const ADMISSION_DEADLINE: u64 = 0x4144_4d44_0000_0005;
+    pub const DEVICE_STALL: u64 = 0x4445_5653_0000_0006;
+    pub const DEVICE_WRONG: u64 = 0x4445_5657_0000_0007;
+    pub const MEM_WEIGHT: u64 = 0x4d45_4d57_0000_0008;
+    pub const MEM_GRAD: u64 = 0x4d45_4d47_0000_0009;
+}
+
+/// SplitMix64 finalizer: the deterministic per-decision hash. Public
+/// so other layers (client backoff jitter, perturbation indices) can
+/// derive seeded values without a stateful RNG.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Map a hash to a uniform f64 in `[0, 1)` (top 53 bits).
+pub fn unit_f64(h: u64) -> f64 {
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+/// One injection site: a fault probability plus an arm window over the
+/// site's sequence counter (`[from, until)` — fire only inside it).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SiteSpec {
+    pub rate: f64,
+    pub from: u64,
+    pub until: u64,
+}
+
+impl SiteSpec {
+    /// Never fires.
+    pub const OFF: SiteSpec = SiteSpec { rate: 0.0, from: 0, until: u64::MAX };
+
+    /// Armed for every sequence number at probability `rate`.
+    pub fn rate(rate: f64) -> SiteSpec {
+        SiteSpec { rate, from: 0, until: u64::MAX }
+    }
+
+    pub fn is_off(&self) -> bool {
+        self.rate <= 0.0
+    }
+
+    /// Deterministic decision for this site at sequence number `seq`:
+    /// a pure hash of `(seed, salt, seq)`, independent of thread
+    /// interleaving and wall clock.
+    pub fn decide(&self, seed: u64, salt: u64, seq: u64) -> bool {
+        if self.rate <= 0.0 || seq < self.from || seq >= self.until {
+            return false;
+        }
+        if self.rate >= 1.0 {
+            return true;
+        }
+        unit_f64(splitmix64(seed ^ salt ^ seq.wrapping_mul(0x2545_f491_4f6c_dd1d))) < self.rate
+    }
+}
+
+/// Wire-layer faults, applied per frame by the proxy.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WireSpec {
+    /// Flip one payload bit of a forwarded frame.
+    pub corrupt: SiteSpec,
+    /// Forward only a prefix of the frame, then kill the connection.
+    pub truncate: SiteSpec,
+    /// Hold the frame for `delay_ms` before forwarding.
+    pub delay: SiteSpec,
+    pub delay_ms: u64,
+}
+
+/// Admission-layer faults: forced typed rejections at the server's
+/// front door, before the request reaches the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdmissionSpec {
+    pub busy: SiteSpec,
+    pub deadline: SiteSpec,
+}
+
+/// Device-layer faults, applied per device execution.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeviceSpec {
+    /// Stall the device for `stall_ms` before it answers.
+    pub stall: SiteSpec,
+    pub stall_ms: u64,
+    /// Perturb the first execution pass's output (caught by DMR).
+    pub wrong: SiteSpec,
+    /// Crash the device permanently on its Nth request (0 = never).
+    pub crash_every: u64,
+}
+
+/// Memory faults: SEU-style bit flips.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemorySpec {
+    /// Flip one bit in a copy-on-inject view of the plan's weight
+    /// slabs (caught by the checksum-manifest scrub).
+    pub weight_flip: SiteSpec,
+    /// Flip one bit in the gradient/relevance slab of the first DMR
+    /// pass (caught by the re-execution compare).
+    pub grad_flip: SiteSpec,
+}
+
+/// A complete seeded fault schedule. `FaultPlan::none()` is the
+/// all-zero plan: nothing fires, protected paths take their fast
+/// branches, results are bit-identical to an uninstrumented build.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub wire: WireSpec,
+    pub admission: AdmissionSpec,
+    pub device: DeviceSpec,
+    pub memory: MemorySpec,
+}
+
+impl FaultPlan {
+    pub fn none() -> FaultPlan {
+        FaultPlan {
+            seed: 0,
+            wire: WireSpec {
+                corrupt: SiteSpec::OFF,
+                truncate: SiteSpec::OFF,
+                delay: SiteSpec::OFF,
+                delay_ms: 0,
+            },
+            admission: AdmissionSpec { busy: SiteSpec::OFF, deadline: SiteSpec::OFF },
+            device: DeviceSpec {
+                stall: SiteSpec::OFF,
+                stall_ms: 0,
+                wrong: SiteSpec::OFF,
+                crash_every: 0,
+            },
+            memory: MemorySpec { weight_flip: SiteSpec::OFF, grad_flip: SiteSpec::OFF },
+        }
+    }
+
+    /// True when no site can ever fire.
+    pub fn is_none(&self) -> bool {
+        self.wire.corrupt.is_off()
+            && self.wire.truncate.is_off()
+            && self.wire.delay.is_off()
+            && self.admission.busy.is_off()
+            && self.admission.deadline.is_off()
+            && self.device.stall.is_off()
+            && self.device.wrong.is_off()
+            && self.device.crash_every == 0
+            && self.memory.weight_flip.is_off()
+            && self.memory.grad_flip.is_off()
+    }
+
+    /// Schema-tagged canonical JSON (`attrax-faults/v1`).
+    pub fn to_json(&self) -> String {
+        let site = |sp: &SiteSpec| {
+            if sp.from == 0 && sp.until == u64::MAX {
+                num(sp.rate)
+            } else {
+                obj(vec![
+                    ("rate", num(sp.rate)),
+                    ("from", num(sp.from as f64)),
+                    ("until", num(sp.until as f64)),
+                ])
+            }
+        };
+        obj(vec![
+            ("schema", s(SCHEMA)),
+            ("seed", num(self.seed as f64)),
+            (
+                "wire",
+                obj(vec![
+                    ("corrupt", site(&self.wire.corrupt)),
+                    ("truncate", site(&self.wire.truncate)),
+                    ("delay", site(&self.wire.delay)),
+                    ("delay_ms", num(self.wire.delay_ms as f64)),
+                ]),
+            ),
+            (
+                "admission",
+                obj(vec![
+                    ("busy", site(&self.admission.busy)),
+                    ("deadline", site(&self.admission.deadline)),
+                ]),
+            ),
+            (
+                "device",
+                obj(vec![
+                    ("stall", site(&self.device.stall)),
+                    ("stall_ms", num(self.device.stall_ms as f64)),
+                    ("wrong", site(&self.device.wrong)),
+                    ("crash_every", num(self.device.crash_every as f64)),
+                ]),
+            ),
+            (
+                "memory",
+                obj(vec![
+                    ("weight_flip", site(&self.memory.weight_flip)),
+                    ("grad_flip", site(&self.memory.grad_flip)),
+                ]),
+            ),
+        ])
+        .to_string()
+    }
+
+    /// Parse a `*.faults.json` config (absent sites default to off).
+    pub fn from_json(text: &str) -> anyhow::Result<FaultPlan> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("faults json: {e}"))?;
+        let tag = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(tag == SCHEMA, "not a fault plan: schema {tag:?}, want {SCHEMA:?}");
+        let site = |j: Option<&Json>, what: &str| -> anyhow::Result<SiteSpec> {
+            match j {
+                None | Some(Json::Null) => Ok(SiteSpec::OFF),
+                Some(v) => {
+                    if let Some(rate) = v.as_f64() {
+                        anyhow::ensure!(
+                            (0.0..=1.0).contains(&rate),
+                            "{what}: rate {rate} outside [0, 1]"
+                        );
+                        return Ok(SiteSpec::rate(rate));
+                    }
+                    let rate = v
+                        .get("rate")
+                        .and_then(Json::as_f64)
+                        .ok_or_else(|| anyhow::anyhow!("{what}: missing rate"))?;
+                    anyhow::ensure!(
+                        (0.0..=1.0).contains(&rate),
+                        "{what}: rate {rate} outside [0, 1]"
+                    );
+                    let from = v.get("from").and_then(Json::as_f64).unwrap_or(0.0) as u64;
+                    let until = match v.get("until").and_then(Json::as_f64) {
+                        Some(u) => u as u64,
+                        None => u64::MAX,
+                    };
+                    anyhow::ensure!(from < until, "{what}: empty arm window");
+                    Ok(SiteSpec { rate, from, until })
+                }
+            }
+        };
+        let u = |j: Option<&Json>, default: u64| -> u64 {
+            j.and_then(Json::as_f64).map(|v| v as u64).unwrap_or(default)
+        };
+        let mut p = FaultPlan::none();
+        p.seed = u(j.get("seed"), 0);
+        if let Some(w) = j.get("wire") {
+            p.wire.corrupt = site(w.get("corrupt"), "wire.corrupt")?;
+            p.wire.truncate = site(w.get("truncate"), "wire.truncate")?;
+            p.wire.delay = site(w.get("delay"), "wire.delay")?;
+            p.wire.delay_ms = u(w.get("delay_ms"), 0);
+        }
+        if let Some(a) = j.get("admission") {
+            p.admission.busy = site(a.get("busy"), "admission.busy")?;
+            p.admission.deadline = site(a.get("deadline"), "admission.deadline")?;
+        }
+        if let Some(d) = j.get("device") {
+            p.device.stall = site(d.get("stall"), "device.stall")?;
+            p.device.stall_ms = u(d.get("stall_ms"), 0);
+            p.device.wrong = site(d.get("wrong"), "device.wrong")?;
+            p.device.crash_every = u(d.get("crash_every"), 0);
+        }
+        if let Some(m) = j.get("memory") {
+            p.memory.weight_flip = site(m.get("weight_flip"), "memory.weight_flip")?;
+            p.memory.grad_flip = site(m.get("grad_flip"), "memory.grad_flip")?;
+        }
+        Ok(p)
+    }
+
+    /// Load a `*.faults.json` file.
+    pub fn load(path: &std::path::Path) -> anyhow::Result<FaultPlan> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        FaultPlan::from_json(&text)
+    }
+}
+
+/// Shared injection/detection accounting, updated lock-free from every
+/// layer. `injected_*` count faults that actually fired; `detected_*`
+/// count the integrity machinery catching them.
+#[derive(Debug, Default)]
+pub struct FaultStats {
+    pub injected_wire_corrupt: AtomicU64,
+    pub injected_wire_truncate: AtomicU64,
+    pub injected_wire_delay: AtomicU64,
+    pub injected_admission_busy: AtomicU64,
+    pub injected_admission_deadline: AtomicU64,
+    pub injected_device_stall: AtomicU64,
+    pub injected_device_wrong: AtomicU64,
+    pub injected_device_crash: AtomicU64,
+    pub injected_mem_weight_flip: AtomicU64,
+    pub injected_mem_grad_flip: AtomicU64,
+    /// Wire CRC mismatches caught at decode (server or client side).
+    pub detected_crc: AtomicU64,
+    /// Weight-slab checksum violations caught by the pre-execution scrub.
+    pub detected_checksum: AtomicU64,
+    /// DMR re-execution divergences.
+    pub detected_dmr: AtomicU64,
+}
+
+impl FaultStats {
+    pub fn new() -> Arc<FaultStats> {
+        Arc::new(FaultStats::default())
+    }
+
+    pub fn bump(counter: &AtomicU64) {
+        counter.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// `(name, count)` rows in canonical order, for reports and JSON.
+    pub fn rows(&self) -> Vec<(&'static str, u64)> {
+        let g = |c: &AtomicU64| c.load(Ordering::Relaxed);
+        vec![
+            ("wire_corrupt", g(&self.injected_wire_corrupt)),
+            ("wire_truncate", g(&self.injected_wire_truncate)),
+            ("wire_delay", g(&self.injected_wire_delay)),
+            ("admission_busy", g(&self.injected_admission_busy)),
+            ("admission_deadline", g(&self.injected_admission_deadline)),
+            ("device_stall", g(&self.injected_device_stall)),
+            ("device_wrong", g(&self.injected_device_wrong)),
+            ("device_crash", g(&self.injected_device_crash)),
+            ("mem_weight_flip", g(&self.injected_mem_weight_flip)),
+            ("mem_grad_flip", g(&self.injected_mem_grad_flip)),
+        ]
+    }
+
+    /// Total injected faults across every site.
+    pub fn total_injected(&self) -> u64 {
+        self.rows().iter().map(|(_, c)| c).sum()
+    }
+
+    /// Total detections by the integrity machinery.
+    pub fn total_detected(&self) -> u64 {
+        self.detected_crc.load(Ordering::Relaxed)
+            + self.detected_checksum.load(Ordering::Relaxed)
+            + self.detected_dmr.load(Ordering::Relaxed)
+    }
+}
+
+/// The (plan, stats) pair a fault-aware component hangs on to.
+#[derive(Clone, Debug)]
+pub struct FaultHooks {
+    pub plan: Arc<FaultPlan>,
+    pub stats: Arc<FaultStats>,
+}
+
+impl FaultHooks {
+    pub fn new(plan: FaultPlan) -> FaultHooks {
+        FaultHooks { plan: Arc::new(plan), stats: FaultStats::new() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let site = SiteSpec::rate(0.25);
+        let run = |seed: u64, slt: u64| -> Vec<bool> {
+            (0..4000).map(|q| site.decide(seed, slt, q)).collect()
+        };
+        let fires = run(42, salt::WIRE_CORRUPT);
+        let again = run(42, salt::WIRE_CORRUPT);
+        assert_eq!(fires, again, "same (seed, site, seq) must decide identically");
+        let hits = fires.iter().filter(|&&b| b).count();
+        assert!((800..1200).contains(&hits), "rate 0.25 over 4000: got {hits}");
+        // different salt => different pattern; different seed too
+        assert_ne!(fires, run(42, salt::DEVICE_WRONG));
+        assert_ne!(fires, run(43, salt::WIRE_CORRUPT));
+    }
+
+    #[test]
+    fn arm_window_gates_decisions() {
+        let site = SiteSpec { rate: 1.0, from: 10, until: 20 };
+        for q in 0..30 {
+            assert_eq!(site.decide(7, 1, q), (10..20).contains(&q));
+        }
+        assert!(!SiteSpec::OFF.decide(7, 1, 5));
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut p = FaultPlan::none();
+        p.seed = 99;
+        p.wire.corrupt = SiteSpec::rate(0.125);
+        p.wire.truncate = SiteSpec { rate: 0.5, from: 3, until: 17 };
+        p.wire.delay_ms = 4;
+        p.admission.busy = SiteSpec::rate(0.0625);
+        p.device.stall = SiteSpec::rate(0.25);
+        p.device.stall_ms = 2;
+        p.device.wrong = SiteSpec::rate(0.03125);
+        p.device.crash_every = 40;
+        p.memory.weight_flip = SiteSpec::rate(0.015625);
+        p.memory.grad_flip = SiteSpec::rate(0.015625);
+        let text = p.to_json();
+        assert!(text.contains("\"schema\":\"attrax-faults/v1\""));
+        let back = FaultPlan::from_json(&text).unwrap();
+        assert_eq!(back, p);
+        // canonical serialization is stable
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn bad_configs_rejected() {
+        assert!(FaultPlan::from_json("{}").is_err(), "missing schema tag");
+        let bad_rate = format!("{{\"schema\":\"{SCHEMA}\",\"wire\":{{\"corrupt\":1.5}}}}");
+        assert!(FaultPlan::from_json(&bad_rate).is_err(), "rate outside [0,1]");
+        let empty_window = format!(
+            "{{\"schema\":\"{SCHEMA}\",\"wire\":{{\"corrupt\":{{\"rate\":0.5,\"from\":9,\"until\":9}}}}}}"
+        );
+        assert!(FaultPlan::from_json(&empty_window).is_err(), "empty arm window");
+    }
+
+    #[test]
+    fn none_plan_is_none() {
+        assert!(FaultPlan::none().is_none());
+        let mut p = FaultPlan::none();
+        p.device.crash_every = 1;
+        assert!(!p.is_none());
+    }
+}

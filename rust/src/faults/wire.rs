@@ -1,0 +1,311 @@
+//! Wire-level fault injection: a frame-aware TCP proxy that sits
+//! between client and server and corrupts, truncates, or delays
+//! protocol frames according to the [`FaultPlan`]'s wire sites.
+//!
+//! The proxy understands just enough of the wire format — the 12-byte
+//! preamble — to inject at *frame* granularity, which is what makes
+//! the faults meaningful: a flipped payload bit exercises the CRC
+//! path, a truncated frame exercises the client's broken-stream
+//! reconnect, a delay exercises deadline handling. Decisions are drawn
+//! from the same counter-based hash as every other site (per
+//! connection, per direction, per frame), so a chaos run replays
+//! bit-identically regardless of thread scheduling.
+
+use std::io::{self, Read, Write};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::Duration;
+
+use super::{salt, splitmix64, FaultHooks, FaultPlan, FaultStats};
+use crate::serve::proto::{self, PREAMBLE_LEN};
+
+/// How long a pump blocks on a read before re-checking the stop flag.
+const POLL: Duration = Duration::from_millis(20);
+
+/// A fault-injecting proxy listener. Clients connect to
+/// [`WireProxy::addr`]; every byte is forwarded to the upstream server
+/// with per-frame faults applied in both directions.
+pub struct WireProxy {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    accept: Option<thread::JoinHandle<()>>,
+}
+
+impl WireProxy {
+    /// Start proxying `127.0.0.1:0` → `upstream` with the given fault
+    /// hooks. An all-zero plan makes this a transparent relay.
+    pub fn start(upstream: SocketAddr, hooks: FaultHooks) -> io::Result<WireProxy> {
+        let listener = TcpListener::bind("127.0.0.1:0")?;
+        listener.set_nonblocking(true)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let accept = thread::spawn(move || accept_loop(listener, upstream, hooks, stop2));
+        Ok(WireProxy { addr, stop, accept: Some(accept) })
+    }
+
+    /// The address clients should connect to.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and wind down all pumps.
+    pub fn stop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for WireProxy {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    upstream: SocketAddr,
+    hooks: FaultHooks,
+    stop: Arc<AtomicBool>,
+) {
+    let mut conns: Vec<thread::JoinHandle<()>> = Vec::new();
+    let mut conn_id = 0u64;
+    while !stop.load(Ordering::Relaxed) {
+        match listener.accept() {
+            Ok((down, _)) => {
+                let hooks = hooks.clone();
+                let stop = stop.clone();
+                let id = conn_id;
+                conn_id += 1;
+                conns.push(thread::spawn(move || relay_conn(down, upstream, hooks, id, stop)));
+            }
+            Err(e) if e.kind() == io::ErrorKind::WouldBlock => thread::sleep(POLL),
+            Err(_) => break,
+        }
+    }
+    for h in conns {
+        let _ = h.join();
+    }
+}
+
+/// Bridge one downstream connection to a fresh upstream connection,
+/// pumping frames independently in both directions.
+fn relay_conn(
+    down: TcpStream,
+    upstream: SocketAddr,
+    hooks: FaultHooks,
+    id: u64,
+    stop: Arc<AtomicBool>,
+) {
+    let Ok(up) = TcpStream::connect(upstream) else {
+        let _ = down.shutdown(Shutdown::Both);
+        return;
+    };
+    let (Ok(down2), Ok(up2)) = (down.try_clone(), up.try_clone()) else {
+        return;
+    };
+    // direction 0: client → server, direction 1: server → client
+    let h2 = hooks.clone();
+    let stop2 = stop.clone();
+    let c2s = thread::spawn(move || pump(down, up, &h2, id, 0, &stop2));
+    pump(up2, down2, &hooks, id, 1, &stop);
+    let _ = c2s.join();
+}
+
+/// Forward frames from `from` to `to`, applying wire faults. Runs
+/// until EOF, error, an injected truncation, or proxy stop.
+fn pump(
+    mut from: TcpStream,
+    mut to: TcpStream,
+    hooks: &FaultHooks,
+    conn_id: u64,
+    dir: u64,
+    stop: &AtomicBool,
+) {
+    let _ = from.set_read_timeout(Some(POLL));
+    let plan: &FaultPlan = &hooks.plan;
+    // per-connection, per-direction decision stream
+    let seed = plan.seed.wrapping_add(conn_id.wrapping_mul(0xbf58_476d_1ce4_e5b9));
+    let seed = seed ^ dir.wrapping_mul(0x94d0_49bb_1331_11eb);
+    let mut seq = 0u64;
+    loop {
+        let mut pre = [0u8; PREAMBLE_LEN];
+        match read_full(&mut from, &mut pre, stop) {
+            ReadEnd::Full => {}
+            ReadEnd::CleanEof => break,
+            ReadEnd::Broken | ReadEnd::Stopped => {
+                let _ = to.shutdown(Shutdown::Both);
+                let _ = from.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+        let Ok(p) = proto::parse_preamble(&pre) else {
+            // not a frame we understand: hand the bytes on and fall
+            // back to a dumb byte relay for the rest of the stream
+            if to.write_all(&pre).is_ok() {
+                let _ = io::copy(&mut from, &mut to);
+            }
+            break;
+        };
+        let mut body = vec![0u8; p.header_len + p.payload_len];
+        match read_full(&mut from, &mut body, stop) {
+            ReadEnd::Full => {}
+            _ => {
+                let _ = to.shutdown(Shutdown::Both);
+                let _ = from.shutdown(Shutdown::Both);
+                return;
+            }
+        }
+
+        if plan.wire.delay.decide(seed, salt::WIRE_DELAY, seq) {
+            FaultStats::bump(&hooks.stats.injected_wire_delay);
+            if plan.wire.delay_ms > 0 {
+                thread::sleep(Duration::from_millis(plan.wire.delay_ms));
+            }
+        }
+        if plan.wire.truncate.decide(seed, salt::WIRE_TRUNCATE, seq) {
+            FaultStats::bump(&hooks.stats.injected_wire_truncate);
+            // forward the preamble plus half the body, then kill the
+            // connection mid-frame — the receiver sees `Truncated`
+            let _ = to.write_all(&pre);
+            let _ = to.write_all(&body[..body.len() / 2]);
+            let _ = to.shutdown(Shutdown::Both);
+            let _ = from.shutdown(Shutdown::Both);
+            return;
+        }
+        if p.payload_len > 0 && plan.wire.corrupt.decide(seed, salt::WIRE_CORRUPT, seq) {
+            FaultStats::bump(&hooks.stats.injected_wire_corrupt);
+            let h = splitmix64(seed ^ salt::WIRE_CORRUPT ^ seq.wrapping_mul(0x9e37_79b9_7f4a_7c15));
+            let bit = h % (p.payload_len as u64 * 8);
+            body[p.header_len + (bit / 8) as usize] ^= 1u8 << (bit % 8);
+        }
+
+        if to.write_all(&pre).is_err() || to.write_all(&body).is_err() {
+            let _ = from.shutdown(Shutdown::Both);
+            return;
+        }
+        seq += 1;
+    }
+    // clean EOF at a frame boundary: half-close so the peer sees it
+    let _ = to.shutdown(Shutdown::Write);
+}
+
+enum ReadEnd {
+    Full,
+    /// EOF before the first byte of this read (frame boundary).
+    CleanEof,
+    /// EOF or error partway through.
+    Broken,
+    Stopped,
+}
+
+/// Fill `buf`, polling the stop flag across read timeouts.
+fn read_full(from: &mut TcpStream, buf: &mut [u8], stop: &AtomicBool) -> ReadEnd {
+    let mut have = 0usize;
+    while have < buf.len() {
+        if stop.load(Ordering::Relaxed) {
+            return ReadEnd::Stopped;
+        }
+        match from.read(&mut buf[have..]) {
+            Ok(0) if have == 0 => return ReadEnd::CleanEof,
+            Ok(0) => return ReadEnd::Broken,
+            Ok(n) => have += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut
+                    || e.kind() == io::ErrorKind::Interrupted =>
+            {
+                continue
+            }
+            Err(_) => return ReadEnd::Broken,
+        }
+    }
+    ReadEnd::Full
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::SiteSpec;
+    use super::*;
+    use crate::attribution::Method;
+    use crate::serve::proto::{read_frame, write_frame, Frame, ProtoError, RequestFrame};
+    use std::sync::mpsc;
+
+    fn sample_req(with_crc: bool) -> Frame {
+        Frame::Request(RequestFrame {
+            id: 7,
+            method: Method::Saliency,
+            target: None,
+            n: 1,
+            elems: 8,
+            deadline_ms: None,
+            with_crc,
+            images: vec![0.25; 8],
+        })
+    }
+
+    /// Upstream that reads one frame per connection and reports the
+    /// decode outcome over a channel.
+    fn one_shot_upstream() -> (SocketAddr, mpsc::Receiver<Result<Option<Frame>, ProtoError>>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let (tx, rx) = mpsc::channel();
+        thread::spawn(move || {
+            while let Ok((mut conn, _)) = listener.accept() {
+                let _ = tx.send(read_frame(&mut conn));
+            }
+        });
+        (addr, rx)
+    }
+
+    #[test]
+    fn transparent_when_plan_is_zero() {
+        let (addr, rx) = one_shot_upstream();
+        let mut proxy = WireProxy::start(addr, FaultHooks::new(FaultPlan::none())).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        write_frame(&mut c, &sample_req(true)).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert_eq!(got.unwrap(), Some(sample_req(true)));
+        proxy.stop();
+    }
+
+    #[test]
+    fn corrupted_payload_is_caught_by_crc() {
+        let (addr, rx) = one_shot_upstream();
+        let mut plan = FaultPlan::none();
+        plan.wire.corrupt = SiteSpec::rate(1.0);
+        let hooks = FaultHooks::new(plan);
+        let mut proxy = WireProxy::start(addr, hooks.clone()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        write_frame(&mut c, &sample_req(true)).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(
+            matches!(got, Err(ProtoError::Integrity { .. })),
+            "flip must surface as Integrity, got {got:?}"
+        );
+        assert_eq!(hooks.stats.injected_wire_corrupt.load(Ordering::Relaxed), 1);
+        proxy.stop();
+    }
+
+    #[test]
+    fn truncation_breaks_the_stream_mid_frame() {
+        let (addr, rx) = one_shot_upstream();
+        let mut plan = FaultPlan::none();
+        plan.wire.truncate = SiteSpec::rate(1.0);
+        let hooks = FaultHooks::new(plan);
+        let mut proxy = WireProxy::start(addr, hooks.clone()).unwrap();
+        let mut c = TcpStream::connect(proxy.addr()).unwrap();
+        write_frame(&mut c, &sample_req(false)).unwrap();
+        let got = rx.recv_timeout(Duration::from_secs(5)).unwrap();
+        assert!(
+            matches!(got, Err(ProtoError::Truncated)),
+            "receiver must see a mid-frame EOF, got {got:?}"
+        );
+        assert_eq!(hooks.stats.injected_wire_truncate.load(Ordering::Relaxed), 1);
+        proxy.stop();
+    }
+}

@@ -26,6 +26,11 @@
 //!   (prune-before-cost), keeps the latency × infidelity × BRAM × DSP
 //!   Pareto frontier, and emits tuned-config artifacts the serving
 //!   layer loads with `--config`.
+//! * [`faults`] — deterministic fault injection and end-to-end
+//!   integrity: seeded fault plans over wire / admission / device /
+//!   memory sites, CRC-protected payloads, per-tensor weight
+//!   checksums with scrub-and-reload recovery, DMR execution, and the
+//!   `attrax chaos` harness (`BENCH_chaos.json`).
 //! * [`xeval`] — attribution-quality evaluation: quantized-vs-oracle
 //!   fidelity (Pearson/Spearman/top-k/SNR against an unquantized
 //!   reference), deletion/insertion faithfulness curves, the
@@ -43,6 +48,7 @@ pub mod attribution;
 pub mod coordinator;
 pub mod data;
 pub mod dse;
+pub mod faults;
 pub mod fpga;
 pub mod fx;
 pub mod hls;

@@ -6,6 +6,9 @@
 //!   serve      run the serving coordinator (in-process load, or a TCP
 //!              server with --tcp); --config runs a tuned design point
 //!   loadgen    hammer a serve --tcp endpoint, emit BENCH_serve.json
+//!   chaos      fault-injection campaign over the full serving stack,
+//!              emit BENCH_chaos.json (--smoke = the deterministic CI
+//!              campaign; nonzero exit if any fault escaped)
 //!   tune       design-space exploration: emit BENCH_dse.json + a
 //!              tuned-config artifact per board (--quality adds the
 //!              xeval fidelity objective)
@@ -18,6 +21,7 @@
 use attrax::attribution::{channel_sum, Method, ALL_METHODS};
 use attrax::coordinator::{server, Config, Coordinator};
 use attrax::dse;
+use attrax::faults::{chaos, FaultHooks, FaultPlan};
 use attrax::fpga::{self, Board, ALL_BOARDS};
 use attrax::hls::HwConfig;
 use attrax::model::{artifacts_dir, load_artifacts, Network};
@@ -34,6 +38,7 @@ const SUBCOMMANDS: &[(&str, fn(Vec<String>) -> i32)] = &[
     ("attribute", cmd_attribute),
     ("serve", cmd_serve),
     ("loadgen", cmd_loadgen),
+    ("chaos", cmd_chaos),
     ("tune", cmd_tune),
     ("eval", cmd_eval),
     ("model", cmd_model),
@@ -72,6 +77,8 @@ fn usage() -> String {
      \x20 attribute   one attribution on the device simulator\n\
      \x20 serve       serving coordinator (--tcp <addr> for the network front door)\n\
      \x20 loadgen     drive a serve --tcp endpoint, emit BENCH_serve.json\n\
+     \x20 chaos       fault-injection campaign over the serving stack, emit\n\
+     \x20             BENCH_chaos.json (--smoke = deterministic CI campaign)\n\
      \x20 tune        design-space exploration: BENCH_dse.json + tuned configs\n\
      \x20             (--quality adds the xeval fidelity objective)\n\
      \x20 eval        attribution quality: fidelity vs the exact oracle,\n\
@@ -306,9 +313,11 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("batch", "1", "micro-batch: max same-method requests per device pass")
         .opt("batch-wait", "2", "ms a worker lingers to fill its micro-batch")
         .opt("shards", "0", "compute threads per worker batch pass (0 = auto)")
+        .opt("retries", "2", "device-failure retries per request (on a healthy device)")
         .opt("tcp", "", "serve over TCP on this address (e.g. 127.0.0.1:7878)")
         .opt("max-conns", "32", "TCP connection pool bound (Busy-shed beyond)")
         .opt("deadline-ms", "0", "default per-request deadline (0 = none)")
+        .opt("faults", "", "fault plan (*.faults.json) to inject at the TCP admission site")
         .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)")
         .opt("config", "", "tuned-config artifact (attrax tune) to run this board on")
         .opt("model", "", "graph-IR model manifest (default: built-in Table III)");
@@ -383,6 +392,7 @@ fn start_coordinator(
         max_batch: args.parse_num("batch", 1),
         max_wait_ms: args.parse_num("batch-wait", 2),
         shards: args.parse_num("shards", 0),
+        max_retries: args.parse_num("retries", 2),
     };
     let artifacts = if verify > 0.0 { artifacts } else { None };
     Coordinator::start(sim, cfg, artifacts)
@@ -400,9 +410,17 @@ fn cmd_serve_tcp(
         Ok(c) => c,
         Err(e) => return fail(e),
     };
+    let faults = match args.get("faults").filter(|p| !p.is_empty()) {
+        None => None,
+        Some(path) => match FaultPlan::load(std::path::Path::new(path)) {
+            Ok(plan) => Some(FaultHooks::new(plan)),
+            Err(e) => return fail(e),
+        },
+    };
     let scfg = ServerConfig {
         max_conns: args.parse_num("max-conns", 32),
         default_deadline_ms: args.parse_num("deadline-ms", 0),
+        faults,
     };
     let srv = match Server::start(addr, coord, scfg) {
         Ok(s) => s,
@@ -528,6 +546,82 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
     }
     if report.ok == 0 {
         eprintln!("loadgen completed zero requests");
+        return 1;
+    }
+    0
+}
+
+fn cmd_chaos(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("chaos", "fault-injection campaign over the full serving stack")
+        .opt("requests", "60", "requests the chaos client issues (one connection)")
+        .opt("seed", "7", "fault-plan seed (ignored when --faults is given)")
+        .opt("faults", "", "fault plan (*.faults.json; default: the built-in smoke plan)")
+        .opt("retries", "5", "client-side transparent retries per request")
+        .opt("devices", "2", "fleet size (crash failover needs at least 2)")
+        .opt("out", "BENCH_chaos.json", "machine-readable report path")
+        .flag("no-crc", "disable wire CRC (wire corruption then escapes — for demos)")
+        .flag("smoke", "the fixed CI campaign: byte-identical reruns, every site armed");
+    let args = parse_or_exit(cmd, argv);
+    let mut spec = chaos::ChaosSpec::smoke();
+    if !args.flag("smoke") {
+        spec.requests = args.parse_num("requests", 60);
+        spec.plan.seed = args.parse_num("seed", 7);
+        spec.client_retries = args.parse_num("retries", 5);
+        spec.devices = args.parse_num("devices", 2);
+        spec.with_crc = !args.flag("no-crc");
+        if let Some(path) = args.get("faults").filter(|p| !p.is_empty()) {
+            match FaultPlan::load(std::path::Path::new(path)) {
+                Ok(plan) => spec.plan = plan,
+                Err(e) => return fail(e),
+            }
+        }
+    }
+    println!(
+        "chaos: {} requests, {} devices, crc {}, client retries {}",
+        spec.requests,
+        spec.devices,
+        if spec.with_crc { "on" } else { "OFF" },
+        spec.client_retries
+    );
+    let report = match chaos::run(&spec) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    println!("\n== chaos report ==");
+    println!(
+        "requests: {} ok / {} failed / {} escaped ({} recovered)",
+        report.ok, report.failed, report.escaped, report.recovered
+    );
+    println!(
+        "availability: {:.1}%  p99 device: {:.3} Mcycles",
+        report.availability * 100.0,
+        report.p99_device_mcycles
+    );
+    let injected = report
+        .injected
+        .iter()
+        .filter(|(_, c)| *c > 0)
+        .map(|(n, c)| format!("{n}={c}"))
+        .collect::<Vec<_>>()
+        .join(" ");
+    println!("injected: {}", if injected.is_empty() { "none".to_string() } else { injected });
+    println!(
+        "detected: crc={} checksum={} dmr={}",
+        report.detected_crc, report.detected_checksum, report.detected_dmr
+    );
+    println!(
+        "recovery: retries={} breaker-trips={} integrity-failures={} reconnects={}",
+        report.retries, report.breaker_trips, report.integrity_failures, report.reconnects
+    );
+    let out = args.get_or("out", "BENCH_chaos.json");
+    let payload = format!("{}\n", report.to_json());
+    if let Err(e) = std::fs::write(out, &payload) {
+        eprintln!("failed to write {out}: {e}");
+        return 1;
+    }
+    println!("\nwrote {out}");
+    if report.escaped > 0 {
+        eprintln!("{} corrupt responses escaped the integrity machinery", report.escaped);
         return 1;
     }
     0

@@ -25,7 +25,9 @@
 pub mod pipeline;
 pub mod plan;
 
-pub use plan::{auto_shards, BatchOutput, LiveReport, Plan, Workspace};
+pub use plan::{
+    auto_shards, BatchOutput, ChecksumEntry, IntegrityError, LiveReport, Plan, Workspace,
+};
 
 use std::sync::Arc;
 
@@ -299,6 +301,14 @@ impl Simulator {
 
     pub fn q(&self) -> QFormat {
         self.cfg.q
+    }
+
+    /// Scrub the plan's weight memory against its build-time checksum
+    /// manifest (see [`Plan::verify_integrity`]). Always `Ok` on the
+    /// shared pristine plan; a fault-injected copy-on-inject view
+    /// reports the flipped slab.
+    pub fn verify_integrity(&self) -> Result<(), IntegrityError> {
+        self.plan.verify_integrity()
     }
 
     /// FP phase (paper §III-F): layer by layer, masks captured at

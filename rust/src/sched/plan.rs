@@ -28,11 +28,13 @@
 //! accumulator/output region and the `Cost` ledger is charged by a
 //! separate single-threaded pass.
 
+use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
 
 use crate::hls::conv::{self, ConvBatchOut};
 use crate::hls::{Cost, EngineScratch, HwConfig};
 use crate::model::{Layer, Network, NodeId, Params, Shape, SrcRef};
+use crate::util::crc::crc32_i32s;
 
 /// Where a unit reads its input activation from: the quantized input
 /// image or another unit's stored output.
@@ -135,9 +137,44 @@ pub struct LiveReport {
     pub grad_peak_elems: usize,
 }
 
+/// One entry of the plan's integrity manifest: a named weight slab
+/// and the CRC-32 it had when the plan was built.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ChecksumEntry {
+    /// `<unit name>.<slab>`, e.g. `c1.w_bp` or `f2.bias`.
+    pub slab: String,
+    pub crc: u32,
+}
+
+/// A weight slab whose bytes no longer match the build-time manifest —
+/// an SEU-style bit flip (or any other corruption) in model memory.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct IntegrityError {
+    pub slab: String,
+    pub expected: u32,
+    pub got: u32,
+}
+
+impl fmt::Display for IntegrityError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "weight slab `{}` fails its checksum: manifest {:#010x}, memory {:#010x}",
+            self.slab, self.expected, self.got
+        )
+    }
+}
+
+impl std::error::Error for IntegrityError {}
+
 /// The immutable compiled model: network graph, hardware configuration
 /// and the quantized fused execution units. Build once, wrap in an
 /// `Arc`, share across every worker/device that runs the same model.
+///
+/// `Clone` exists for the fault injector's copy-on-inject memory view
+/// ([`Plan::with_flipped_weight_bit`]) — live sharing should stay
+/// `Arc`-based so N workers cost one copy of the weights.
+#[derive(Clone)]
 pub struct Plan {
     pub net: Network,
     /// The configuration the plan was compiled for. A [`Simulator`]
@@ -147,6 +184,10 @@ pub struct Plan {
     /// on `cfg.q`.
     pub cfg: HwConfig,
     pub(crate) units: Vec<Unit>,
+    /// Build-time CRC-32 of every weight slab, in unit order; cloned
+    /// verbatim by copy-on-inject views so a post-build flip is
+    /// detectable by [`Plan::verify_integrity`].
+    checksums: Vec<ChecksumEntry>,
 }
 
 impl Plan {
@@ -301,7 +342,70 @@ impl Plan {
                 }
             }
         }
-        Ok(Plan { net, cfg, units })
+        let checksums = checksum_manifest(&units);
+        Ok(Plan { net, cfg, units, checksums })
+    }
+
+    /// The build-time integrity manifest: one CRC-32 per weight slab.
+    pub fn checksum_manifest(&self) -> &[ChecksumEntry] {
+        &self.checksums
+    }
+
+    /// Re-checksum every weight slab against the build-time manifest.
+    /// On the shared pristine plan this always passes; on a
+    /// fault-injected copy-on-inject view it pinpoints the flipped
+    /// slab. O(weight words) — this is the scrub a device runs before
+    /// trusting its model memory.
+    pub fn verify_integrity(&self) -> Result<(), IntegrityError> {
+        let now = checksum_manifest(&self.units);
+        for (want, got) in self.checksums.iter().zip(now.iter()) {
+            if want.crc != got.crc {
+                return Err(IntegrityError {
+                    slab: want.slab.clone(),
+                    expected: want.crc,
+                    got: got.crc,
+                });
+            }
+        }
+        Ok(())
+    }
+
+    /// Copy-on-inject memory-fault view: clone the plan and flip one
+    /// deterministic bit (chosen by `seed`) in one weight slab. The
+    /// shared original is untouched; the clone keeps the original
+    /// build-time manifest, so [`Plan::verify_integrity`] detects the
+    /// flip and names the slab. Returns the corrupted clone and the
+    /// flipped slab's name; `None` if the plan has no weight words.
+    pub fn with_flipped_weight_bit(&self, seed: u64) -> Option<(Plan, String)> {
+        let total_bits: u64 = self
+            .units
+            .iter()
+            .flat_map(unit_slabs)
+            .map(|(_, w)| w.len() as u64 * 32)
+            .sum();
+        if total_bits == 0 {
+            return None;
+        }
+        let mut target = seed % total_bits;
+        // Locate (unit, slab ordinal, word, bit) on the immutable
+        // view, then mutate the clone.
+        let mut loc = None;
+        'outer: for (ui, unit) in self.units.iter().enumerate() {
+            for (si, (slab, words)) in unit_slabs(unit).into_iter().enumerate() {
+                let bits = words.len() as u64 * 32;
+                if target < bits {
+                    loc = Some((ui, si, (target / 32) as usize, (target % 32) as u32, slab));
+                    break 'outer;
+                }
+                target -= bits;
+            }
+        }
+        let (ui, si, word, bit, slab) = loc.expect("target bit is within total_bits");
+        let mut corrupt = self.clone();
+        let mut slabs = unit_slabs_mut(&mut corrupt.units[ui]);
+        slabs[si].1[word] ^= 1i32 << bit;
+        drop(slabs);
+        Some((corrupt, slab))
     }
 
     /// Resident bytes of all quantized weight material (FP + BP +
@@ -365,6 +469,60 @@ impl Plan {
             grad_peak_elems,
         }
     }
+}
+
+/// Named weight slabs of a unit, in manifest order. Pool and Add
+/// units have no weight memory.
+fn unit_slabs(u: &Unit) -> Vec<(String, &[i32])> {
+    match u {
+        Unit::Conv { name, w, w_bp, w_sc, bias, .. } => {
+            let mut v = vec![
+                (format!("{name}.w"), w.as_slice()),
+                (format!("{name}.w_bp"), w_bp.as_slice()),
+            ];
+            if !w_sc.is_empty() {
+                v.push((format!("{name}.w_sc"), w_sc.as_slice()));
+            }
+            v.push((format!("{name}.bias"), bias.as_slice()));
+            v
+        }
+        Unit::Fc { name, w, bias, .. } => vec![
+            (format!("{name}.w"), w.as_slice()),
+            (format!("{name}.bias"), bias.as_slice()),
+        ],
+        Unit::Pool { .. } | Unit::Add { .. } => Vec::new(),
+    }
+}
+
+/// Mutable twin of [`unit_slabs`], for the copy-on-inject bit flip.
+fn unit_slabs_mut(u: &mut Unit) -> Vec<(String, &mut [i32])> {
+    match u {
+        Unit::Conv { name, w, w_bp, w_sc, bias, .. } => {
+            let mut v = vec![
+                (format!("{name}.w"), w.as_mut_slice()),
+                (format!("{name}.w_bp"), w_bp.as_mut_slice()),
+            ];
+            if !w_sc.is_empty() {
+                v.push((format!("{name}.w_sc"), w_sc.as_mut_slice()));
+            }
+            v.push((format!("{name}.bias"), bias.as_mut_slice()));
+            v
+        }
+        Unit::Fc { name, w, bias, .. } => vec![
+            (format!("{name}.w"), w.as_mut_slice()),
+            (format!("{name}.bias"), bias.as_mut_slice()),
+        ],
+        Unit::Pool { .. } | Unit::Add { .. } => Vec::new(),
+    }
+}
+
+/// CRC-32 every weight slab of every unit, in unit/slab order.
+fn checksum_manifest(units: &[Unit]) -> Vec<ChecksumEntry> {
+    units
+        .iter()
+        .flat_map(unit_slabs)
+        .map(|(slab, words)| ChecksumEntry { slab, crc: crc32_i32s(words) })
+        .collect()
 }
 
 static AUTO_SHARDS: AtomicUsize = AtomicUsize::new(0);

@@ -1,20 +1,31 @@
 //! Blocking client for the serve wire protocol: one reused TCP
 //! connection, `attribute` / `attribute_batch` calls, per-request
-//! deadlines.
+//! deadlines, and transport recovery.
 //!
 //! The connection is reused across calls (requests are answered in
-//! order on one stream, so no multiplexing machinery is needed).
+//! order on one stream, so no multiplexing machinery is needed). A
+//! mid-frame I/O or framing error marks the connection broken, so the
+//! next call transparently reconnects instead of writing into a
+//! desynced stream. With [`Client::set_recovery`], transient failures
+//! (broken stream, `Busy`, `Integrity`) are retried in place with
+//! jittered exponential backoff; resubmission reuses the same request
+//! id, and because one stream carries one request at a time, a
+//! resubmitted request is idempotent — the server computes it afresh
+//! and at most one response is consumed per attempt.
+//!
 //! Rejections arrive as typed [`ErrCode`]s in
 //! [`ClientError::Rejected`] — `Busy` means retry later, `Closed`
-//! means the server is going away.
+//! means the server is going away, `Integrity` means a payload was
+//! corrupted in flight (resubmit).
 
 use std::fmt;
 use std::io;
-use std::net::{TcpStream, ToSocketAddrs};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
 use super::proto::{self, ErrCode, Frame, ProtoError, RequestFrame};
 use crate::attribution::Method;
+use crate::faults::{splitmix64, unit_f64};
 
 /// One image's worth of a serving response.
 #[derive(Clone, Debug)]
@@ -62,18 +73,40 @@ impl From<ProtoError> for ClientError {
 /// Extra socket-timeout slack over the request deadline, so a
 /// `DeadlineExceeded` error frame can still arrive.
 const TIMEOUT_SLACK: Duration = Duration::from_millis(500);
+/// Ceiling on any single backoff sleep.
+const MAX_BACKOFF: Duration = Duration::from_millis(500);
 
 pub struct Client {
-    stream: TcpStream,
+    addr: SocketAddr,
+    /// `None` = known broken; the next call reconnects.
+    stream: Option<TcpStream>,
     next_id: u64,
     timeout: Option<Duration>,
+    /// Ask for CRC-protected payloads in both directions.
+    with_crc: bool,
+    /// Transparent retries of transient failures (0 = fail fast).
+    retries: u32,
+    backoff: Duration,
+    seed: u64,
+    reconnects: u64,
 }
 
 impl Client {
     pub fn connect<A: ToSocketAddrs>(addr: A) -> io::Result<Client> {
         let stream = TcpStream::connect(addr)?;
         let _ = stream.set_nodelay(true);
-        Ok(Client { stream, next_id: 1, timeout: None })
+        let addr = stream.peer_addr()?;
+        Ok(Client {
+            addr,
+            stream: Some(stream),
+            next_id: 1,
+            timeout: None,
+            with_crc: false,
+            retries: 0,
+            backoff: Duration::from_millis(2),
+            seed: 0,
+            reconnects: 0,
+        })
     }
 
     /// Per-request deadline: sent to the server in the request header
@@ -81,7 +114,38 @@ impl Client {
     /// the server's `DeadlineExceeded` frame wins the race).
     pub fn set_timeout(&mut self, timeout: Option<Duration>) -> io::Result<()> {
         self.timeout = timeout;
-        self.stream.set_read_timeout(timeout.map(|t| t + TIMEOUT_SLACK))
+        match &self.stream {
+            Some(s) => s.set_read_timeout(timeout.map(|t| t + TIMEOUT_SLACK)),
+            None => Ok(()),
+        }
+    }
+
+    /// Protect request payloads with a CRC-32 header field and ask the
+    /// server to protect responses the same way (version-negotiated:
+    /// old servers ignore the field and answer unprotected).
+    pub fn set_crc(&mut self, on: bool) {
+        self.with_crc = on;
+    }
+
+    /// Enable transparent recovery: up to `retries` re-attempts of a
+    /// call after a transient failure (broken stream → reconnect,
+    /// `Busy` shed, `Integrity` corruption), sleeping a jittered
+    /// exponential backoff (seeded — reruns sleep identically) between
+    /// attempts.
+    pub fn set_recovery(&mut self, retries: u32, backoff: Duration, seed: u64) {
+        self.retries = retries;
+        self.backoff = backoff;
+        self.seed = seed;
+    }
+
+    /// Transport reconnects performed so far (broken-stream recovery).
+    pub fn reconnects(&self) -> u64 {
+        self.reconnects
+    }
+
+    /// Whether the connection is currently marked broken.
+    pub fn is_broken(&self) -> bool {
+        self.stream.is_none()
     }
 
     /// Attribute one image.
@@ -113,7 +177,9 @@ impl Client {
         for img in images {
             flat.extend_from_slice(img);
         }
-        let req = RequestFrame {
+        // built once: resubmits reuse the identical frame (same id —
+        // idempotent, since this stream carries one request at a time)
+        let frame = Frame::Request(RequestFrame {
             id,
             method,
             target: None,
@@ -122,22 +188,48 @@ impl Client {
             // at least 1: a sub-millisecond timeout must not truncate
             // to 0, which the server reads as "no deadline"
             deadline_ms: self.timeout.map(|t| (t.as_millis() as u64).max(1)),
+            with_crc: self.with_crc,
             images: flat,
-        };
-        proto::write_frame(&mut self.stream, &Frame::Request(req))?;
-        match proto::read_frame(&mut self.stream)? {
+        });
+        let mut attempt = 0u32;
+        loop {
+            let err = match self.roundtrip(&frame, id, images.len()) {
+                Ok(v) => return Ok(v),
+                Err(e) => e,
+            };
+            if breaks_stream(&err) {
+                // satellite of the fault model: a mid-frame failure
+                // leaves the stream desynced — never write into it
+                // again; the next attempt (or call) reconnects
+                self.stream = None;
+            }
+            if attempt >= self.retries || !is_transient(&err) {
+                return Err(err);
+            }
+            self.sleep_backoff(id, attempt);
+            attempt += 1;
+        }
+    }
+
+    fn roundtrip(
+        &mut self,
+        frame: &Frame,
+        id: u64,
+        n: usize,
+    ) -> Result<Vec<Attribution>, ClientError> {
+        let stream = self.ensure_stream()?;
+        proto::write_frame(stream, frame)?;
+        match proto::read_frame(stream)? {
             None => Err(ClientError::Proto(ProtoError::Eof)),
             Some(Frame::Error(e)) => Err(ClientError::Rejected { code: e.code, msg: e.msg }),
             Some(Frame::Request(_)) => Err(ClientError::Proto(ProtoError::Malformed(
                 "server sent a request frame".into(),
             ))),
             Some(Frame::Response(r)) => {
-                if r.id != id || r.n != images.len() {
+                if r.id != id || r.n != n {
                     return Err(ClientError::Proto(ProtoError::Malformed(format!(
-                        "response for frame {} (n {}), expected frame {id} (n {})",
-                        r.id,
-                        r.n,
-                        images.len()
+                        "response for frame {} (n {}), expected frame {id} (n {n})",
+                        r.id, r.n,
                     ))));
                 }
                 let mut out = Vec::with_capacity(r.n);
@@ -151,6 +243,52 @@ impl Client {
                 }
                 Ok(out)
             }
+        }
+    }
+
+    /// The live stream, reconnecting if the last call broke it.
+    fn ensure_stream(&mut self) -> io::Result<&mut TcpStream> {
+        if self.stream.is_none() {
+            let s = TcpStream::connect(self.addr)?;
+            let _ = s.set_nodelay(true);
+            s.set_read_timeout(self.timeout.map(|t| t + TIMEOUT_SLACK))?;
+            self.stream = Some(s);
+            self.reconnects += 1;
+        }
+        Ok(self.stream.as_mut().expect("just ensured"))
+    }
+
+    /// Jittered exponential backoff, deterministic under a fixed seed.
+    fn sleep_backoff(&self, id: u64, attempt: u32) {
+        let h = splitmix64(self.seed ^ id.rotate_left(17) ^ attempt as u64);
+        let factor = 0.5 + unit_f64(h); // [0.5, 1.5): desynchronizes herds
+        let base = self.backoff.as_secs_f64() * (1u64 << attempt.min(6)) as f64;
+        let dur = Duration::from_secs_f64((base * factor).min(MAX_BACKOFF.as_secs_f64()));
+        if !dur.is_zero() {
+            std::thread::sleep(dur);
+        }
+    }
+}
+
+/// After this error, is the stream unusable (reconnect before the next
+/// write)? A typed error frame or a response-CRC mismatch consumed a
+/// whole frame, so the stream stays synced; everything else desyncs.
+fn breaks_stream(e: &ClientError) -> bool {
+    match e {
+        ClientError::Io(_) => true,
+        ClientError::Proto(ProtoError::Integrity { .. }) => false,
+        ClientError::Proto(_) => true,
+        ClientError::Rejected { .. } => false,
+    }
+}
+
+/// May a retry succeed? Broken streams and shed/corrupted requests are
+/// transient; `Closed` and `DeadlineExceeded` are terminal.
+fn is_transient(e: &ClientError) -> bool {
+    match e {
+        ClientError::Io(_) | ClientError::Proto(_) => true,
+        ClientError::Rejected { code, .. } => {
+            matches!(code, ErrCode::Busy | ErrCode::Integrity)
         }
     }
 }

@@ -8,15 +8,21 @@
 //! * [`proto`] — length-prefixed framed wire protocol: compact JSON
 //!   header (via [`crate::util::json`]) + raw little-endian f32
 //!   payload, with typed error frames (`Busy`, `Closed`,
-//!   `BadRequest`, `DeadlineExceeded`) and hard frame-size caps.
+//!   `BadRequest`, `DeadlineExceeded`, `Integrity`), hard frame-size
+//!   caps, and an optional version-negotiated CRC-32 over the payload
+//!   (`with_crc` — servers echo protection iff the request carried it).
 //! * [`server`] — `TcpListener` acceptor with a bounded connection
 //!   pool feeding the [`crate::coordinator::Coordinator`]: admission
 //!   control sheds load with `Busy` instead of queueing unboundedly,
-//!   per-request deadlines are enforced server-side, and shutdown
-//!   drains gracefully (in-flight requests answer, idle and new
-//!   connections get `Closed`).
+//!   per-request deadlines are enforced server-side, shutdown drains
+//!   gracefully (in-flight requests answer, idle and new connections
+//!   get `Closed`), and an optional [`crate::faults`] hook injects
+//!   admission-site faults for chaos testing.
 //! * [`client`] — blocking client with connection reuse,
-//!   `attribute` / `attribute_batch`, and timeout support.
+//!   `attribute` / `attribute_batch`, timeout support, and opt-in
+//!   recovery: a mid-frame I/O error marks the stream broken, and the
+//!   next attempt reconnects with jittered backoff and resubmits the
+//!   identical frame (same id — idempotent on the server side).
 //! * [`loadgen`] — multi-connection load generator (`attrax loadgen`)
 //!   emitting `BENCH_serve.json`: sustained RPS, p50/p95/p99 latency,
 //!   shed rate.

@@ -26,6 +26,17 @@
 //! allocation, malformed input yields a typed [`ProtoError`] (never a
 //! panic), and a clean EOF between frames is distinguished from a
 //! truncated frame.
+//!
+//! **Payload integrity (optional, version-negotiated).** A frame may
+//! carry a `"crc"` header field: the IEEE CRC-32 of its payload bytes.
+//! Decoders that predate the field ignore it (unknown header fields
+//! are skipped), so old clients and servers interoperate unchanged; a
+//! decoder that *does* see it verifies the payload and reports a
+//! mismatch as the typed [`ProtoError::Integrity`] — a corrupted
+//! heatmap or image is detected on the wire instead of shipped as
+//! plausible-looking data. Requests opt in by setting
+//! [`RequestFrame::with_crc`]; the server echoes the protection on the
+//! response iff the request carried it.
 
 use std::fmt;
 use std::io::{Read, Write};
@@ -44,6 +55,10 @@ pub const MAX_PAYLOAD_BYTES: usize = 64 * 1024 * 1024;
 /// Cap on images per request frame (admission checks it too).
 pub const MAX_IMAGES_PER_FRAME: usize = 64;
 
+/// IEEE CRC-32 over payload bytes (shared with the plan's weight-slab
+/// integrity manifest — [`crate::util::crc`]).
+pub use crate::util::crc::crc32;
+
 /// Typed rejection codes carried by error frames.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ErrCode {
@@ -56,6 +71,10 @@ pub enum ErrCode {
     BadRequest,
     /// The request's deadline elapsed before a response was ready.
     DeadlineExceeded,
+    /// An integrity check failed (payload CRC mismatch on the wire, or
+    /// a weight/gradient checksum violation on the device) and the
+    /// result could not be recovered. Safe to resubmit.
+    Integrity,
 }
 
 impl ErrCode {
@@ -65,6 +84,7 @@ impl ErrCode {
             ErrCode::Closed => "closed",
             ErrCode::BadRequest => "bad_request",
             ErrCode::DeadlineExceeded => "deadline_exceeded",
+            ErrCode::Integrity => "integrity",
         }
     }
 
@@ -74,6 +94,7 @@ impl ErrCode {
             "closed" => Some(ErrCode::Closed),
             "bad_request" => Some(ErrCode::BadRequest),
             "deadline_exceeded" => Some(ErrCode::DeadlineExceeded),
+            "integrity" => Some(ErrCode::Integrity),
             _ => None,
         }
     }
@@ -98,6 +119,10 @@ pub struct RequestFrame {
     pub elems: usize,
     /// Per-request deadline; None = server default.
     pub deadline_ms: Option<u64>,
+    /// Attach a payload CRC-32 and ask the server to do the same on
+    /// the response. Decode sets this iff the frame carried a `"crc"`
+    /// field (and the check passed).
+    pub with_crc: bool,
     /// `n * elems` f32s, image-major.
     pub images: Vec<f32>,
 }
@@ -115,6 +140,10 @@ pub struct ResponseFrame {
     pub preds: Vec<usize>,
     /// Modeled device cycles per image (the Table-IV number).
     pub device_cycles: Vec<u64>,
+    /// Payload protected by a CRC-32 header field (see
+    /// [`RequestFrame::with_crc`]); set by the server iff the request
+    /// asked for it.
+    pub with_crc: bool,
     /// `n * out_n` f32s, image-major.
     pub logits: Vec<f32>,
     /// `n * elems` relevance f32s, image-major.
@@ -151,6 +180,9 @@ pub enum ProtoError {
     TooLarge { header_len: usize, payload_len: usize },
     /// Header JSON, field types, or payload-length arithmetic is wrong.
     Malformed(String),
+    /// The header's `"crc"` field does not match the payload bytes:
+    /// the payload was corrupted in flight (or by the fault injector).
+    Integrity { expected: u32, got: u32 },
     Io(std::io::Error),
 }
 
@@ -166,6 +198,10 @@ impl fmt::Display for ProtoError {
                  payload {payload_len} B (cap {MAX_PAYLOAD_BYTES})"
             ),
             ProtoError::Malformed(msg) => write!(f, "malformed frame: {msg}"),
+            ProtoError::Integrity { expected, got } => write!(
+                f,
+                "payload crc mismatch: header says {expected:#010x}, payload is {got:#010x}"
+            ),
             ProtoError::Io(e) => write!(f, "i/o error: {e}"),
         }
     }
@@ -261,6 +297,26 @@ fn opt_field_u64(j: &Json, key: &str) -> Result<Option<u64>, ProtoError> {
     }
 }
 
+/// Verify the optional `"crc"` header field against the payload.
+/// Returns whether the field was present; a present-but-wrong CRC is
+/// the typed [`ProtoError::Integrity`].
+fn check_crc(j: &Json, payload: &[u8]) -> Result<bool, ProtoError> {
+    match opt_field_u64(j, "crc")? {
+        None => Ok(false),
+        Some(v) => {
+            if v > u32::MAX as u64 {
+                return Err(malformed("crc exceeds 32 bits"));
+            }
+            let expected = v as u32;
+            let got = crc32(payload);
+            if got != expected {
+                return Err(ProtoError::Integrity { expected, got });
+            }
+            Ok(true)
+        }
+    }
+}
+
 /// Decode a header + payload pair into a typed frame.
 pub fn decode(header: &[u8], payload: &[u8]) -> Result<Frame, ProtoError> {
     let text = std::str::from_utf8(header).map_err(|_| malformed("header is not utf-8"))?;
@@ -304,8 +360,9 @@ fn decode_request(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
     if payload.len() != want {
         return Err(malformed(format!("payload is {} B, n*elems*4 = {want} B", payload.len())));
     }
+    let with_crc = check_crc(j, payload)?;
     let images = le_to_f32s(payload);
-    Ok(Frame::Request(RequestFrame { id, method, target, n, elems, deadline_ms, images }))
+    Ok(Frame::Request(RequestFrame { id, method, target, n, elems, deadline_ms, with_crc, images }))
 }
 
 fn decode_response(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
@@ -315,6 +372,12 @@ fn decode_response(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
     let out_n = field_usize(j, "out_n")?;
     if n == 0 {
         return Err(malformed("n must be positive"));
+    }
+    // A response claiming n images but zero data per image would
+    // decode to an empty-but-"valid" frame; reject it like the
+    // request-side n/elems check does.
+    if elems == 0 || out_n == 0 {
+        return Err(malformed("elems and out_n must be positive"));
     }
     let preds_json =
         j.get("preds").and_then(Json::as_arr).ok_or_else(|| malformed("missing preds"))?;
@@ -349,6 +412,7 @@ fn decode_response(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
             payload.len()
         )));
     }
+    let with_crc = check_crc(j, payload)?;
     // decode the two ranges straight from the payload bytes: no
     // intermediate full-payload Vec for a frame that can be 64 MiB
     let relevance = le_to_f32s(&payload[..rel_elems * 4]);
@@ -360,6 +424,7 @@ fn decode_response(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
         out_n,
         preds,
         device_cycles,
+        with_crc,
         logits,
         relevance,
     }))
@@ -411,12 +476,18 @@ fn encode_parts(f: &Frame) -> (String, Vec<u8>) {
             if let Some(d) = q.deadline_ms {
                 pairs.push(("deadline_ms", num(d as f64)));
             }
-            (obj(pairs).to_string(), f32s_to_le(&q.images))
+            let payload = f32s_to_le(&q.images);
+            if q.with_crc {
+                pairs.push(("crc", num(crc32(&payload) as f64)));
+            }
+            (obj(pairs).to_string(), payload)
         }
         Frame::Response(r) => {
             let preds = arr(r.preds.iter().map(|&p| num(p as f64)).collect());
             let cycles = arr(r.device_cycles.iter().map(|&c| num(c as f64)).collect());
-            let header = obj(vec![
+            let mut payload = f32s_to_le(&r.relevance);
+            payload.extend_from_slice(&f32s_to_le(&r.logits));
+            let mut pairs = vec![
                 ("t", s("resp")),
                 ("id", num(r.id as f64)),
                 ("n", num(r.n as f64)),
@@ -424,10 +495,11 @@ fn encode_parts(f: &Frame) -> (String, Vec<u8>) {
                 ("out_n", num(r.out_n as f64)),
                 ("preds", preds),
                 ("device_cycles", cycles),
-            ]);
-            let mut payload = f32s_to_le(&r.relevance);
-            payload.extend_from_slice(&f32s_to_le(&r.logits));
-            (header.to_string(), payload)
+            ];
+            if r.with_crc {
+                pairs.push(("crc", num(crc32(&payload) as f64)));
+            }
+            (obj(pairs).to_string(), payload)
         }
         Frame::Error(e) => {
             let header = obj(vec![
@@ -479,7 +551,22 @@ mod tests {
             n: 2,
             elems: 3,
             deadline_ms: Some(1500),
+            with_crc: false,
             images: vec![0.0, -1.5, f32::MIN_POSITIVE, 1.0, 2.5e-3, 1e20],
+        })
+    }
+
+    fn resp() -> Frame {
+        Frame::Response(ResponseFrame {
+            id: 9,
+            n: 2,
+            elems: 2,
+            out_n: 3,
+            preds: vec![1, 0],
+            device_cycles: vec![123_456, 123_456],
+            with_crc: false,
+            logits: vec![0.1, -0.2, 0.3, 0.4, 0.5, -0.6],
+            relevance: vec![1.0, -2.0, 3.0, -4.0],
         })
     }
 
@@ -493,16 +580,7 @@ mod tests {
 
     #[test]
     fn response_roundtrip_bit_exact() {
-        let f = Frame::Response(ResponseFrame {
-            id: 9,
-            n: 2,
-            elems: 2,
-            out_n: 3,
-            preds: vec![1, 0],
-            device_cycles: vec![123_456, 123_456],
-            logits: vec![0.1, -0.2, 0.3, 0.4, 0.5, -0.6],
-            relevance: vec![1.0, -2.0, 3.0, -4.0],
-        });
+        let f = resp();
         let bytes = encode(&f).unwrap();
         let back = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
         assert_eq!(back, f);
@@ -510,8 +588,13 @@ mod tests {
 
     #[test]
     fn error_roundtrip() {
-        let codes =
-            [ErrCode::Busy, ErrCode::Closed, ErrCode::BadRequest, ErrCode::DeadlineExceeded];
+        let codes = [
+            ErrCode::Busy,
+            ErrCode::Closed,
+            ErrCode::BadRequest,
+            ErrCode::DeadlineExceeded,
+            ErrCode::Integrity,
+        ];
         for code in codes {
             let f = Frame::Error(ErrorFrame { id: 3, code, msg: "q \"full\"\n".into() });
             let bytes = encode(&f).unwrap();
@@ -554,5 +637,69 @@ mod tests {
     fn payload_size_mismatch_rejected() {
         let header = br#"{"t":"req","id":1,"method":"guided","n":1,"elems":4}"#;
         assert!(matches!(decode(header, &[0u8; 12]), Err(ProtoError::Malformed(_))));
+    }
+
+    #[test]
+    fn crc_roundtrip_both_kinds() {
+        for f in [req(), resp()] {
+            let f = match f {
+                Frame::Request(mut q) => {
+                    q.with_crc = true;
+                    Frame::Request(q)
+                }
+                Frame::Response(mut r) => {
+                    r.with_crc = true;
+                    Frame::Response(r)
+                }
+                e => e,
+            };
+            let bytes = encode(&f).unwrap();
+            let back = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
+            assert_eq!(back, f, "crc-protected frame must round-trip with with_crc set");
+        }
+    }
+
+    #[test]
+    fn flipped_payload_byte_is_typed_integrity_error_with_crc() {
+        let f = match req() {
+            Frame::Request(mut q) => {
+                q.with_crc = true;
+                Frame::Request(q)
+            }
+            other => other,
+        };
+        let mut bytes = encode(&f).unwrap();
+        let last = bytes.len() - 1; // payload trails the frame
+        bytes[last] ^= 0x40;
+        match read_frame(&mut Cursor::new(&bytes)) {
+            Err(ProtoError::Integrity { expected, got }) => assert_ne!(expected, got),
+            other => panic!("corrupted crc frame must yield Integrity, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn flipped_payload_byte_undetected_without_crc() {
+        // Documents *why* the crc field exists: without it a payload
+        // flip decodes as a different-but-valid frame.
+        let mut bytes = encode(&req()).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x40;
+        let back = read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap();
+        assert_ne!(back, req());
+        assert!(matches!(back, Frame::Request(_)));
+    }
+
+    #[test]
+    fn zero_data_response_rejected() {
+        for (elems, out_n) in [(0usize, 3usize), (4, 0), (0, 0)] {
+            let header = format!(
+                "{{\"t\":\"resp\",\"id\":1,\"n\":1,\"elems\":{elems},\"out_n\":{out_n},\
+                 \"preds\":[0],\"device_cycles\":[1]}}"
+            );
+            assert!(
+                matches!(decode(header.as_bytes(), &[]), Err(ProtoError::Malformed(_))),
+                "response with elems={elems} out_n={out_n} must be rejected"
+            );
+        }
     }
 }

@@ -23,12 +23,13 @@
 
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
-use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use super::proto::{self, ErrCode, ErrorFrame, Frame, RequestFrame, ResponseFrame};
-use crate::coordinator::{metrics, Coordinator};
+use crate::coordinator::{metrics, Coordinator, FailKind};
+use crate::faults::{salt, FaultHooks, FaultStats};
 
 /// TCP serving configuration (the coordinator has its own
 /// [`crate::coordinator::Config`] for queueing/batching).
@@ -39,11 +40,14 @@ pub struct ServerConfig {
     pub max_conns: usize,
     /// Deadline applied to requests that carry none (0 = none).
     pub default_deadline_ms: u64,
+    /// Fault hooks for the admission injection site and wire-CRC
+    /// detection accounting. `None` = production serving.
+    pub faults: Option<FaultHooks>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_conns: 32, default_deadline_ms: 0 }
+        ServerConfig { max_conns: 32, default_deadline_ms: 0, faults: None }
     }
 }
 
@@ -69,6 +73,9 @@ struct Shared {
     draining: AtomicBool,
     conns: AtomicUsize,
     handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
+    /// Admission-site fault clock: one tick per served request frame,
+    /// shared across connections so injection schedules are stable.
+    admission_seq: AtomicU64,
 }
 
 /// A running TCP server. Owns the coordinator; [`Server::shutdown`]
@@ -99,6 +106,7 @@ impl Server {
             draining: AtomicBool::new(false),
             conns: AtomicUsize::new(0),
             handles: Mutex::new(Vec::new()),
+            admission_seq: AtomicU64::new(0),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let acceptor = {
@@ -143,7 +151,12 @@ impl Server {
 
 fn join_all(handles: &Mutex<Vec<std::thread::JoinHandle<()>>>) {
     loop {
-        let hs: Vec<_> = handles.lock().unwrap().drain(..).collect();
+        // a connection thread that panicked (handler bug, injected
+        // fault) poisons nothing we care about: the Vec of handles is
+        // still valid, and shutdown must keep draining rather than
+        // double-panic on `PoisonError`
+        let hs: Vec<_> =
+            handles.lock().unwrap_or_else(|e| e.into_inner()).drain(..).collect();
         if hs.is_empty() {
             return;
         }
@@ -188,7 +201,9 @@ fn admit(shared: &Arc<Shared>, mut stream: TcpStream) {
         sh.conns.fetch_sub(1, Ordering::AcqRel);
     });
     match spawned {
-        Ok(h) => shared.handles.lock().unwrap().push(h),
+        // tolerate a poisoned handle list (see `join_all`): accepting
+        // new connections must survive one crashed handler thread
+        Ok(h) => shared.handles.lock().unwrap_or_else(|e| e.into_inner()).push(h),
         Err(_) => {
             shared.conns.fetch_sub(1, Ordering::AcqRel);
         }
@@ -292,6 +307,19 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) {
                     break;
                 }
             }
+            // the CRC caught a corrupted payload, but every body byte
+            // was consumed — framing is intact, so answer typed and
+            // keep the connection: the client resubmits idempotently
+            Err(e @ proto::ProtoError::Integrity { .. }) => {
+                m.record_integrity_failure();
+                if let Some(hooks) = &shared.cfg.faults {
+                    FaultStats::bump(&hooks.stats.detected_crc);
+                }
+                let ok = write_err(&mut stream, 0, ErrCode::Integrity, &e.to_string());
+                if ok.is_err() {
+                    break;
+                }
+            }
             // truncated body / i/o error: the stream is desynced
             Err(e) => {
                 let _ = write_err(&mut stream, 0, ErrCode::BadRequest, &e.to_string());
@@ -319,12 +347,31 @@ fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> 
         Duration::from_millis(deadline_ms)
     };
 
+    // admission fault site: forced sheds exercise the client's
+    // retry-on-Busy / deadline handling without real overload
+    if let Some(hooks) = &shared.cfg.faults {
+        let seq = shared.admission_seq.fetch_add(1, Ordering::Relaxed);
+        let p = &hooks.plan;
+        if p.admission.busy.decide(p.seed, salt::ADMISSION_BUSY, seq) {
+            FaultStats::bump(&hooks.stats.injected_admission_busy);
+            m.record_busy();
+            return write_err(stream, req.id, ErrCode::Busy, "injected: admission shed").is_ok();
+        }
+        if p.admission.deadline.decide(p.seed, salt::ADMISSION_DEADLINE, seq) {
+            FaultStats::bump(&hooks.stats.injected_admission_deadline);
+            m.record_deadline_exceeded();
+            let msg = "injected: admission deadline";
+            return write_err(stream, req.id, ErrCode::DeadlineExceeded, msg).is_ok();
+        }
+    }
+
     // admit every image of the frame; the coordinator micro-batches
     // same-method submissions back into one device pass
+    let deadline = Some(t0 + budget);
     let mut rxs = Vec::with_capacity(req.n);
     for img in req.images.chunks_exact(elems) {
         let (tx, rx) = mpsc::channel();
-        match shared.coord.submit(img.to_vec(), req.method, req.target, tx) {
+        match shared.coord.submit_deadline(img.to_vec(), req.method, req.target, deadline, tx) {
             Ok(_) => rxs.push(rx),
             Err(why) => {
                 // shed the whole frame, but wait out the co-submitted
@@ -363,8 +410,20 @@ fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> 
                 logits.extend_from_slice(&resp.logits);
                 relevance.extend_from_slice(&resp.relevance);
             }
-            Ok(Err(_closed)) => {
-                return write_err(stream, req.id, ErrCode::Closed, "coordinator closed").is_ok();
+            Ok(Err(failure)) => {
+                let (code, msg) = match failure.kind {
+                    FailKind::Closed => (ErrCode::Closed, "coordinator closed"),
+                    // detected-but-unrecoverable corruption: the
+                    // service refuses to ship untrusted output
+                    FailKind::Integrity => {
+                        (ErrCode::Integrity, "integrity checks failed on every attempt")
+                    }
+                    FailKind::Unavailable => (ErrCode::Busy, "no healthy device"),
+                };
+                if code == ErrCode::Busy {
+                    m.record_busy();
+                }
+                return write_err(stream, req.id, code, msg).is_ok();
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 m.record_deadline_exceeded();
@@ -383,8 +442,51 @@ fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> 
         out_n,
         preds,
         device_cycles,
+        // version-negotiated: protect the response payload iff the
+        // client protected (and thereby requested) it
+        with_crc: req.with_crc,
         logits,
         relevance,
     });
     proto::write_frame(stream, &frame).is_ok()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::Method;
+    use crate::coordinator::Config;
+    use crate::hls::HwConfig;
+    use crate::sched::tests_support::tiny_sim;
+    use crate::serve::client::Client;
+
+    #[test]
+    fn server_survives_a_poisoned_handle_mutex() {
+        let coord = Coordinator::start(
+            tiny_sim(41, HwConfig::pynq_z2()),
+            Config { workers: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let server = Server::start("127.0.0.1:0", coord, ServerConfig::default()).unwrap();
+        // a thread that panics while holding the handle-list lock
+        // poisons the mutex — the seed's failure mode when a handler
+        // crashed: `shutdown` and `admit` would then panic on
+        // `unwrap()` instead of draining
+        let sh = server.shared.clone();
+        let _ = std::thread::spawn(move || {
+            let _g = sh.handles.lock().unwrap();
+            panic!("deliberate handler crash");
+        })
+        .join();
+        assert!(server.shared.handles.is_poisoned());
+        // new connections are still admitted after the poison...
+        let mut c = Client::connect(server.local_addr()).unwrap();
+        let img = vec![0.5f32; 128];
+        let a = c.attribute(&img, Method::Saliency).unwrap();
+        assert_eq!(a.relevance.len(), 128);
+        // ...and graceful shutdown completes with a snapshot
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.completed, 1);
+    }
 }

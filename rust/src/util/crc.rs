@@ -1,0 +1,106 @@
+//! IEEE CRC-32 (reflected polynomial 0xEDB88320 — the zlib/Ethernet
+//! one), table-driven and std-only. Shared by the wire protocol (the
+//! optional per-frame payload `"crc"` field) and the plan integrity
+//! manifest (weight-slab checksums that catch SEU bit flips before a
+//! corrupted model ships a plausible-looking heatmap).
+
+/// 256-entry lookup table, built at compile time.
+const TABLE: [u32; 256] = {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xedb8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+};
+
+/// Streaming CRC-32 state, for checksumming without materializing a
+/// contiguous byte buffer.
+#[derive(Clone, Copy, Debug)]
+pub struct Crc32 {
+    state: u32,
+}
+
+impl Crc32 {
+    pub fn new() -> Crc32 {
+        Crc32 { state: !0 }
+    }
+
+    pub fn update(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.state = TABLE[((self.state ^ b as u32) & 0xff) as usize] ^ (self.state >> 8);
+        }
+    }
+
+    pub fn finish(self) -> u32 {
+        !self.state
+    }
+}
+
+impl Default for Crc32 {
+    fn default() -> Crc32 {
+        Crc32::new()
+    }
+}
+
+/// One-shot CRC-32 of a byte slice.
+pub fn crc32(bytes: &[u8]) -> u32 {
+    let mut c = Crc32::new();
+    c.update(bytes);
+    c.finish()
+}
+
+/// CRC-32 of an `i32` slab, each word as its little-endian bytes —
+/// the representation the plan's quantized weight slabs checksum
+/// under, allocation-free.
+pub fn crc32_i32s(words: &[i32]) -> u32 {
+    let mut c = Crc32::new();
+    for &w in words {
+        c.update(&w.to_le_bytes());
+    }
+    c.finish()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_check_value() {
+        // The standard CRC-32/IEEE check vector.
+        assert_eq!(crc32(b"123456789"), 0xcbf4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn streaming_matches_one_shot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut c = Crc32::new();
+        for chunk in data.chunks(7) {
+            c.update(chunk);
+        }
+        assert_eq!(c.finish(), crc32(data));
+    }
+
+    #[test]
+    fn i32_slab_matches_le_bytes() {
+        let words = [0i32, -1, 42, i32::MIN, i32::MAX];
+        let bytes: Vec<u8> = words.iter().flat_map(|w| w.to_le_bytes()).collect();
+        assert_eq!(crc32_i32s(&words), crc32(&bytes));
+    }
+
+    #[test]
+    fn single_bit_flip_changes_crc() {
+        let mut words = vec![7i32; 64];
+        let before = crc32_i32s(&words);
+        words[13] ^= 1 << 5;
+        assert_ne!(crc32_i32s(&words), before);
+    }
+}

@@ -6,6 +6,7 @@
 
 pub mod bench;
 pub mod cli;
+pub mod crc;
 pub mod json;
 pub mod log;
 pub mod ppm;

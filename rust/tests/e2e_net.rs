@@ -214,6 +214,179 @@ fn graceful_drain_answers_then_closes() {
 }
 
 #[test]
+fn client_marks_stream_broken_and_reconnects_after_mid_frame_break() {
+    use attrax::serve::proto::{read_frame, ResponseFrame};
+    use attrax::serve::Frame;
+    use std::io::Write;
+
+    // hand-rolled server: the first connection answers with HALF a
+    // response frame then dies mid-frame; the second serves properly.
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        let respond_to = |req: &Frame| -> Vec<u8> {
+            let Frame::Request(q) = req else { panic!("expected a request, got {req:?}") };
+            attrax::serve::proto::encode(&Frame::Response(ResponseFrame {
+                id: q.id,
+                n: q.n,
+                elems: q.elems,
+                out_n: 2,
+                preds: vec![0; q.n],
+                device_cycles: vec![1; q.n],
+                with_crc: false,
+                logits: vec![0.5; q.n * 2],
+                relevance: vec![1.0; q.n * q.elems],
+            }))
+            .unwrap()
+        };
+        // conn 1: stall the response mid-frame, then kill the socket
+        let (mut s, _) = listener.accept().unwrap();
+        let req1 = read_frame(&mut s).unwrap().unwrap();
+        let bytes = respond_to(&req1);
+        s.write_all(&bytes[..bytes.len() / 2]).unwrap();
+        drop(s);
+        // conn 2: the client reconnected and resubmitted — same frame id
+        let (mut s, _) = listener.accept().unwrap();
+        let req2 = read_frame(&mut s).unwrap().unwrap();
+        assert_eq!(req2, req1, "resubmit must be the identical (idempotent) frame");
+        s.write_all(&respond_to(&req2)).unwrap();
+    });
+
+    let mut client = Client::connect(addr).unwrap();
+    client.set_recovery(1, Duration::from_millis(1), 5);
+    let a = client.attribute(&image(40), Method::Guided).unwrap();
+    assert_eq!(a.relevance.len(), ELEMS);
+    assert_eq!(client.reconnects(), 1, "the broken stream must trigger exactly one reconnect");
+    assert!(!client.is_broken(), "the reconnected stream is live");
+    server.join().unwrap();
+}
+
+#[test]
+fn mid_frame_break_without_retries_fails_typed_then_next_call_reconnects() {
+    use attrax::serve::proto::{read_frame, write_frame, ResponseFrame};
+    use attrax::serve::Frame;
+    use std::io::Write;
+
+    let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let server = std::thread::spawn(move || {
+        // conn 1: half a frame, then die
+        let (mut s, _) = listener.accept().unwrap();
+        let req = read_frame(&mut s).unwrap().unwrap();
+        let Frame::Request(q) = &req else { panic!() };
+        let bytes = attrax::serve::proto::encode(&Frame::Response(ResponseFrame {
+            id: q.id,
+            n: q.n,
+            elems: q.elems,
+            out_n: 2,
+            preds: vec![0; q.n],
+            device_cycles: vec![1; q.n],
+            with_crc: false,
+            logits: vec![0.5; q.n * 2],
+            relevance: vec![1.0; q.n * q.elems],
+        }))
+        .unwrap();
+        s.write_all(&bytes[..bytes.len() - 3]).unwrap();
+        drop(s);
+        // conn 2: echo back a proper error frame so the client's second
+        // call proves it reconnected (writing into the dead first
+        // stream would never reach us)
+        let (mut s, _) = listener.accept().unwrap();
+        let req = read_frame(&mut s).unwrap().unwrap();
+        let Frame::Request(q) = &req else { panic!() };
+        write_frame(
+            &mut s,
+            &Frame::Error(attrax::serve::proto::ErrorFrame {
+                id: q.id,
+                code: ErrCode::Busy,
+                msg: "probe".into(),
+            }),
+        )
+        .unwrap();
+    });
+
+    let mut client = Client::connect(addr).unwrap();
+    // no recovery configured: the torn stream is a hard (typed) error
+    match client.attribute(&image(41), Method::Guided) {
+        Err(ClientError::Proto(_)) | Err(ClientError::Io(_)) => {}
+        other => panic!("expected a transport error, got {other:?}"),
+    }
+    assert!(client.is_broken(), "mid-frame failure must mark the stream broken");
+    // next call transparently reconnects instead of writing into the
+    // desynced stream
+    match client.attribute(&image(42), Method::Guided) {
+        Err(ClientError::Rejected { code: ErrCode::Busy, .. }) => {}
+        other => panic!("expected the second connection's Busy probe, got {other:?}"),
+    }
+    assert_eq!(client.reconnects(), 1);
+    server.join().unwrap();
+}
+
+#[test]
+fn drain_under_load_answers_in_flight_and_reconciles_counts() {
+    // depth-1 queue + 1 worker: at any instant at most one request is
+    // executing and at most one is queued, so the drain decision for
+    // every other request is deterministic (Busy before drain, Closed
+    // after). Every client thread counts what it saw; the metrics
+    // snapshot must reconcile exactly.
+    let srv = start_server(
+        12,
+        Config { workers: 1, queue_depth: 1, max_batch: 1, ..Default::default() },
+        ServerConfig::default(),
+    );
+    let addr = srv.local_addr();
+    let (mut ok_total, mut busy_total) = (0u64, 0u64);
+    let mut refused_total = 0u64;
+    let snap = std::thread::scope(|sc| {
+        let handles: Vec<_> = (0..3u64)
+            .map(|c| {
+                sc.spawn(move || {
+                    let mut client = Client::connect(addr).unwrap();
+                    let (mut ok, mut busy, mut refused) = (0u64, 0u64, 0u64);
+                    loop {
+                        match client.attribute(&image(500 + c), Method::Saliency) {
+                            Ok(a) => {
+                                assert_eq!(a.relevance.len(), ELEMS, "drained reply is complete");
+                                ok += 1;
+                            }
+                            Err(ClientError::Rejected { code: ErrCode::Busy, .. }) => busy += 1,
+                            Err(ClientError::Rejected { code: ErrCode::Closed, .. }) => {
+                                refused += 1;
+                                break;
+                            }
+                            // socket torn down mid-drain: also a clean end
+                            Err(_) => break,
+                        }
+                    }
+                    (ok, busy, refused)
+                })
+            })
+            .collect();
+        // shut down while all three connections are mid-burst
+        std::thread::sleep(Duration::from_millis(150));
+        let snap = srv.shutdown().unwrap();
+        for h in handles {
+            let (ok, busy, refused) = h.join().unwrap();
+            ok_total += ok;
+            busy_total += busy;
+            refused_total += refused;
+        }
+        snap
+    });
+    assert!(ok_total > 0, "the burst must complete some requests before the drain");
+    assert_eq!(
+        snap.completed, ok_total,
+        "every response the clients saw is counted exactly once — nothing in flight was dropped"
+    );
+    assert_eq!(
+        snap.rejected_busy, busy_total,
+        "the shed/answered split must reconcile with the snapshot"
+    );
+    assert_eq!(snap.open_conns, 0);
+    let _ = refused_total; // Closed refusals race socket teardown; either end is clean
+}
+
+#[test]
 fn bad_request_keeps_connection_alive() {
     let srv = start_server(9, Config::default(), ServerConfig::default());
     let mut client = Client::connect(srv.local_addr()).unwrap();

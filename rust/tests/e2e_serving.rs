@@ -10,7 +10,7 @@
 //!   `pjrt` feature is enabled.
 
 use attrax::attribution::Method;
-use attrax::coordinator::{server, Closed, Config, Coordinator};
+use attrax::coordinator::{server, Config, Coordinator, FailKind};
 use attrax::fpga::{self, Board};
 use attrax::hls::HwConfig;
 use attrax::model::{artifacts_dir, load_artifacts, Network, NetworkBuilder, Params, Shape, Tensor};
@@ -108,8 +108,9 @@ fn shutdown_with_requests_in_flight_replies_to_everyone() {
                 assert_eq!(resp.id, id);
                 completed += 1;
             }
-            Ok(Err(Closed { id: cid })) => {
-                assert_eq!(cid, id);
+            Ok(Err(f)) => {
+                assert_eq!(f.id, id);
+                assert_eq!(f.kind, FailKind::Closed, "abortive shutdown sends Closed");
                 closed += 1;
             }
             Err(e) => panic!("request {id}: reply channel dropped ({e}) — the seed race"),

@@ -874,3 +874,70 @@ fn prop_cost_ledger_arithmetic() {
         },
     );
 }
+
+/// P16 (ISSUE-7): the all-zero fault plan is invisible — a fleet whose
+/// devices carry zero-plan fault hooks serves bit-identical heatmaps,
+/// logits, predictions and device-cycle ledgers to the plain
+/// single-device coordinator on arbitrary models/configs, and every
+/// injection, detection and recovery counter stays at zero.
+#[test]
+fn prop_zero_fault_plan_is_bit_invisible() {
+    use attrax::coordinator::fleet::Device;
+    use attrax::faults::{FaultHooks, FaultPlan};
+    use std::sync::Arc;
+    run_prop(
+        PropConfig { cases: 8, ..Default::default() },
+        scenario,
+        |s| {
+            let mut rng = Pcg32::seeded(s.seed);
+            let (net, params) = random_model(&mut rng);
+            let n_in = net.input.elems();
+            let sim = Simulator::new(net, &params, s.cfg).map_err(|e| e.to_string())?;
+            let hooks = FaultHooks::new(FaultPlan::none());
+            let devices = (0..2u64)
+                .map(|i| {
+                    Arc::new(Device::from_sim(sim.clone(), Board::PynqZ2).with_faults(&hooks, i))
+                })
+                .collect::<Vec<_>>();
+            let cfg = Config { workers: 1, ..Config::default() };
+            let faulted = Coordinator::start_fleet(devices, cfg.clone(), None)
+                .map_err(|e| e.to_string())?;
+            let plain = Coordinator::start(sim, cfg, None).map_err(|e| e.to_string())?;
+            for (k, m) in ALL_METHODS.into_iter().enumerate() {
+                let img: Vec<f32> = (0..n_in).map(|_| rng.f32()).collect();
+                let a = faulted
+                    .attribute_blocking(img.clone(), m)
+                    .map_err(|e| e.to_string())?;
+                let b = plain.attribute_blocking(img, m).map_err(|e| e.to_string())?;
+                if a.relevance != b.relevance || a.logits != b.logits || a.pred != b.pred {
+                    return Err(format!("{m}: request {k} diverged under zero-plan hooks"));
+                }
+                if a.device_cycles != b.device_cycles {
+                    return Err(format!("{m}: request {k} cycle ledger diverged"));
+                }
+            }
+            if hooks.stats.total_injected() != 0 || hooks.stats.total_detected() != 0 {
+                return Err("zero plan injected or detected something".into());
+            }
+            let sa = faulted.shutdown();
+            let sb = plain.shutdown();
+            if sa.completed != 3 || sb.completed != 3 {
+                return Err(format!(
+                    "completed {} vs {} (want 3 each)",
+                    sa.completed, sb.completed
+                ));
+            }
+            for (name, snap) in [("faulted", &sa), ("plain", &sb)] {
+                if snap.retries != 0
+                    || snap.breaker_trips != 0
+                    || snap.integrity_failures != 0
+                    || snap.reconnects != 0
+                    || snap.errors != 0
+                {
+                    return Err(format!("{name}: recovery counters moved under zero faults"));
+                }
+            }
+            Ok(())
+        },
+    );
+}

@@ -20,6 +20,7 @@ fn sample_request() -> Frame {
         n: 2,
         elems: 4,
         deadline_ms: Some(250),
+        with_crc: false,
         images: vec![0.0, 1.5, -2.25, 3.5, -0.125, 0.75, 8.0, -9.5],
     })
 }
@@ -32,9 +33,20 @@ fn sample_response() -> Frame {
         out_n: 2,
         preds: vec![1],
         device_cycles: vec![987_654],
+        with_crc: false,
         logits: vec![0.25, -0.5],
         relevance: vec![1.0, 2.0, 3.0],
     })
+}
+
+fn crc_request() -> Frame {
+    match sample_request() {
+        Frame::Request(mut q) => {
+            q.with_crc = true;
+            Frame::Request(q)
+        }
+        _ => unreachable!(),
+    }
 }
 
 #[test]
@@ -127,6 +139,62 @@ fn payload_length_must_match_header_arithmetic() {
     }
     let payload = vec![0u8; 32];
     assert!(proto::decode(header, &payload).is_ok());
+}
+
+#[test]
+fn trailing_garbage_after_a_valid_frame_is_a_typed_error_not_a_panic() {
+    // a stream with one good frame then junk: the first read succeeds,
+    // the next must surface a typed error (BadMagic/Eof/Truncated),
+    // never a panic or a phantom frame
+    for junk in [
+        &b"\x00"[..],
+        &b"garbage bytes here"[..],
+        &[0xff; PREAMBLE_LEN][..],
+        &MAGIC.to_le_bytes()[..2], // half a preamble, then EOF
+    ] {
+        let mut bytes = encode(&sample_request()).unwrap();
+        bytes.extend_from_slice(junk);
+        let mut cur = Cursor::new(&bytes);
+        assert_eq!(read_frame(&mut cur).unwrap().unwrap(), sample_request());
+        assert!(
+            read_frame(&mut cur).is_err(),
+            "trailing {junk:?} must yield a typed error, not a frame"
+        );
+    }
+}
+
+#[test]
+fn zero_length_preamble_fields_are_rejected() {
+    // header_len == 0 can never carry a valid frame type; a preamble
+    // claiming it (with or without trailing payload bytes) is typed
+    for payload_len in [0u32, 8] {
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(&MAGIC.to_le_bytes());
+        bytes.extend_from_slice(&0u32.to_le_bytes());
+        bytes.extend_from_slice(&payload_len.to_le_bytes());
+        bytes.extend_from_slice(&[0xAB; 8]);
+        assert!(
+            read_frame(&mut Cursor::new(&bytes)).is_err(),
+            "empty header with payload_len {payload_len} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn crc_protected_stream_catches_every_payload_byte_flip() {
+    let clean = encode(&crc_request()).unwrap();
+    assert_eq!(read_frame(&mut Cursor::new(&clean)).unwrap().unwrap(), crc_request());
+    // flip each payload byte in turn: every one must surface as the
+    // typed Integrity error (the payload is the trailing 32 bytes)
+    let payload_start = clean.len() - 32;
+    for pos in payload_start..clean.len() {
+        let mut corrupt = clean.clone();
+        corrupt[pos] ^= 0x10;
+        match read_frame(&mut Cursor::new(&corrupt)) {
+            Err(ProtoError::Integrity { expected, got }) => assert_ne!(expected, got),
+            other => panic!("flipped byte {pos} decoded as {other:?}"),
+        }
+    }
 }
 
 #[test]

@@ -92,6 +92,19 @@ cargo run --release -q -- eval --smoke --model examples/graphs/residual16.graph.
 grep -q '"schema":"attrax-xeval/v1"' BENCH_graph_smoke.json
 rm -f BENCH_graph_smoke.json
 
+echo "== chaos gate: deterministic fault campaign, zero escaped faults =="
+# Seeded fault-injection smoke through the whole serving stack (wire
+# proxy + admission + device + memory sites). The binary exits nonzero
+# if any injected fault escapes as a wrong answer; two runs must be
+# byte-identical (the report carries no wall-clock fields) and the
+# artifact must be schema-tagged with an explicit escaped:0.
+cargo run --release -q -- chaos --smoke --out BENCH_chaos_a.json
+cargo run --release -q -- chaos --smoke --out BENCH_chaos_b.json
+cmp BENCH_chaos_a.json BENCH_chaos_b.json
+grep -q '"schema":"attrax-chaos/v1"' BENCH_chaos_a.json
+grep -q '"escaped":0' BENCH_chaos_a.json
+rm -f BENCH_chaos_a.json BENCH_chaos_b.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
