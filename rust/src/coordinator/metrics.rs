@@ -201,6 +201,16 @@ impl Metrics {
 
 impl Snapshot {
     pub fn report(&self) -> String {
+        // with zero verified requests the corr aggregates are undefined
+        // (min is NaN by construction); say so instead of printing NaN
+        let verify = if self.verified == 0 {
+            "shadow verify: 0 checked".to_string()
+        } else {
+            format!(
+                "shadow verify: {} checked, corr mean={:.4} min={:.4}",
+                self.verified, self.mean_verify_corr, self.min_verify_corr,
+            )
+        };
         format!(
             "completed={} rejected={} errors={} wall={:.2}s throughput={:.1} img/s\n\
              serve: busy-shed={} deadline-exceeded={} conns open={} total={}\n\
@@ -208,7 +218,7 @@ impl Snapshot {
              latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
              queue wait: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
              device model: mean {:.2} Mcycles/request\n\
-             shadow verify: {} checked, corr mean={:.4} min={:.4}",
+             {}",
             self.completed,
             self.rejected,
             self.errors,
@@ -231,9 +241,7 @@ impl Snapshot {
             self.p95_queue_wait_ms,
             self.p99_queue_wait_ms,
             self.mean_sim_mcycles,
-            self.verified,
-            self.mean_verify_corr,
-            self.min_verify_corr,
+            verify,
         )
     }
 }
@@ -312,5 +320,137 @@ mod tests {
         assert_eq!(s.completed, 0);
         assert_eq!(s.throughput_ips, 0.0);
         assert!(s.min_verify_corr.is_nan());
+    }
+
+    #[test]
+    fn empty_window_report_is_nan_free() {
+        // a snapshot taken before any traffic must render cleanly:
+        // zeroed aggregates, and never the string "NaN" (the one NaN
+        // field, min_verify_corr, is elided when nothing was verified)
+        let s = Metrics::new().snapshot();
+        assert_eq!(s.p50_ms, 0.0);
+        assert_eq!(s.p99_ms, 0.0);
+        assert_eq!(s.mean_ms, 0.0);
+        assert_eq!(s.p99_queue_wait_ms, 0.0);
+        assert_eq!(s.mean_sim_mcycles, 0.0);
+        assert_eq!(s.wall_s, 0.0);
+        let out = s.report();
+        assert!(!out.contains("NaN"), "empty-window report prints NaN:\n{out}");
+        assert!(out.contains("shadow verify: 0 checked"));
+        assert!(!out.contains("corr mean"));
+    }
+
+    #[test]
+    fn one_sample_window_percentiles_collapse_to_the_sample() {
+        let m = Metrics::new();
+        m.record_start();
+        m.record_completion(7.5, 1.25, 2_000_000);
+        m.record_verification(0.5);
+        let s = m.snapshot();
+        assert_eq!(s.p50_ms, 7.5);
+        assert_eq!(s.p95_ms, 7.5);
+        assert_eq!(s.p99_ms, 7.5);
+        assert_eq!(s.mean_ms, 7.5);
+        assert_eq!(s.p50_queue_wait_ms, 1.25);
+        assert_eq!(s.p95_queue_wait_ms, 1.25);
+        assert_eq!(s.p99_queue_wait_ms, 1.25);
+        assert!((s.mean_sim_mcycles - 2.0).abs() < 1e-12);
+        assert_eq!(s.mean_verify_corr, 0.5);
+        assert_eq!(s.min_verify_corr, 0.5);
+        assert!(!s.report().contains("NaN"));
+    }
+
+    #[test]
+    fn every_snapshot_field_appears_in_report() {
+        // the destructuring below is deliberately exhaustive (no `..`):
+        // adding a Snapshot field without teaching report() about it
+        // fails this test at compile time
+        let snap = Snapshot {
+            completed: 101,
+            rejected: 102,
+            rejected_busy: 103,
+            deadline_exceeded: 104,
+            open_conns: 105,
+            total_conns: 106,
+            errors: 107,
+            retries: 108,
+            breaker_trips: 109,
+            integrity_failures: 110,
+            reconnects: 111,
+            wall_s: 1.12,
+            throughput_ips: 113.5,
+            p50_ms: 1.14,
+            p95_ms: 1.15,
+            p99_ms: 1.16,
+            mean_ms: 1.17,
+            mean_queue_wait_ms: 1.18,
+            p50_queue_wait_ms: 1.19,
+            p95_queue_wait_ms: 1.21,
+            p99_queue_wait_ms: 1.22,
+            mean_sim_mcycles: 1.23,
+            verified: 124,
+            mean_verify_corr: 0.1251,
+            min_verify_corr: 0.1262,
+        };
+        let out = snap.report();
+        let Snapshot {
+            completed,
+            rejected,
+            rejected_busy,
+            deadline_exceeded,
+            open_conns,
+            total_conns,
+            errors,
+            retries,
+            breaker_trips,
+            integrity_failures,
+            reconnects,
+            wall_s,
+            throughput_ips,
+            p50_ms,
+            p95_ms,
+            p99_ms,
+            mean_ms,
+            mean_queue_wait_ms,
+            p50_queue_wait_ms,
+            p95_queue_wait_ms,
+            p99_queue_wait_ms,
+            mean_sim_mcycles,
+            verified,
+            mean_verify_corr,
+            min_verify_corr,
+        } = snap;
+        for (name, rendered) in [
+            ("completed", format!("{completed}")),
+            ("rejected", format!("{rejected}")),
+            ("rejected_busy", format!("{rejected_busy}")),
+            ("deadline_exceeded", format!("{deadline_exceeded}")),
+            ("open_conns", format!("{open_conns}")),
+            ("total_conns", format!("{total_conns}")),
+            ("errors", format!("{errors}")),
+            ("retries", format!("{retries}")),
+            ("breaker_trips", format!("{breaker_trips}")),
+            ("integrity_failures", format!("{integrity_failures}")),
+            ("reconnects", format!("{reconnects}")),
+            ("wall_s", format!("{wall_s:.2}")),
+            ("throughput_ips", format!("{throughput_ips:.1}")),
+            ("p50_ms", format!("{p50_ms:.2}")),
+            ("p95_ms", format!("{p95_ms:.2}")),
+            ("p99_ms", format!("{p99_ms:.2}")),
+            ("mean_ms", format!("{mean_ms:.2}")),
+            ("mean_queue_wait_ms", format!("{mean_queue_wait_ms:.2}")),
+            ("p50_queue_wait_ms", format!("{p50_queue_wait_ms:.2}")),
+            ("p95_queue_wait_ms", format!("{p95_queue_wait_ms:.2}")),
+            ("p99_queue_wait_ms", format!("{p99_queue_wait_ms:.2}")),
+            ("mean_sim_mcycles", format!("{mean_sim_mcycles:.2}")),
+            ("verified", format!("{verified}")),
+            ("mean_verify_corr", format!("{mean_verify_corr:.4}")),
+            ("min_verify_corr", format!("{min_verify_corr:.4}")),
+        ] {
+            assert!(
+                out.contains(&rendered),
+                "Snapshot field {name} (rendered {rendered:?}) missing from report():\n{out}"
+            );
+        }
     }
 }

@@ -69,6 +69,26 @@ pub struct Response {
     /// The same quantity in raw modeled cycles (clock-independent; what
     /// the serve wire protocol reports).
     pub device_cycles: u64,
+    /// Coordinator-side micro-batch id (process-monotonic, 1-based) —
+    /// every request served by the same device pass shares it.
+    pub batch_id: u64,
+    /// Size of that micro-batch.
+    pub batch_size: u32,
+    /// Fleet index of the device that ran the batch (u32::MAX when the
+    /// winning device is not in the coordinator's fleet list).
+    pub device_index: u32,
+    /// Device executions attempted for the batch (1 = first try won).
+    pub attempts: u32,
+    /// A breaker trip was recorded while serving this batch.
+    pub breaker_tripped: bool,
+    /// `obs::span` epoch timestamps (ns; 0 = unknown): when this
+    /// request entered the queue, when its batch closed, when the
+    /// batch was dispatched to the device, and when the device pass
+    /// completed. Plain `Copy` fields — stamping them costs no heap.
+    pub enqueue_ns: u64,
+    pub batch_form_ns: u64,
+    pub dispatch_ns: u64,
+    pub complete_ns: u64,
 }
 
 /// Why a request terminated without a [`Response`].
@@ -426,8 +446,16 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
     let mut ws = Workspace::with_shards(ctx.shards);
     let mut out = BatchOutput::new();
     while let Some(batch) = queue.pop_batch(ctx.max_batch, ctx.max_wait, compatible) {
-        let waits_ms: Vec<f64> =
-            batch.iter().map(|r| r.enqueued.elapsed().as_secs_f64() * 1e3).collect();
+        // queue-wait stat + obs enqueue stamp in one pass (one Vec per
+        // batch, same as before the span fields existed)
+        let waits: Vec<(f64, u64)> = batch
+            .iter()
+            .map(|r| {
+                (r.enqueued.elapsed().as_secs_f64() * 1e3, crate::obs::span::ns_of(r.enqueued))
+            })
+            .collect();
+        let batch_id = BATCH_SEQ.fetch_add(1, Ordering::Relaxed) + 1;
+        let batch_form_ns = crate::obs::span::now_ns();
         let t0 = Instant::now();
         // one (possibly 1-image) batched FP+BP pass: a batch of 1 is
         // bit- and cost-identical to the unbatched path; weight tiles
@@ -443,6 +471,9 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
         // max_retries times, never starting an attempt past the
         // batch's earliest deadline
         let deadline = batch.iter().filter_map(|r| r.deadline).min();
+        let dispatch_ns = crate::obs::span::now_ns();
+        let mut attempts_used: u32 = 0;
+        let mut breaker_tripped = false;
         let mut won: Result<Arc<Device>, FailKind> = Err(FailKind::Unavailable);
         let mut failed_on: Option<Arc<Device>> = None;
         for attempt in 0..=ctx.max_retries {
@@ -457,6 +488,7 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
                 won = Err(FailKind::Unavailable);
                 break; // whole fleet quarantined right now
             };
+            attempts_used += 1;
             match dev.try_attribute_batch_into(&mut ws, &imgs, method, opts, &mut out) {
                 Ok(()) => {
                     dev.breaker.record_success();
@@ -466,6 +498,7 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
                 Err(fault) => {
                     if dev.breaker.record_failure() {
                         ctx.metrics.record_breaker_trip();
+                        breaker_tripped = true;
                     }
                     won = Err(match fault {
                         DeviceFault::WeightCorruption(_) | DeviceFault::OutputDivergence => {
@@ -488,7 +521,13 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
                 continue;
             }
         };
+        let complete_ns = crate::obs::span::now_ns();
         let host_ms = t0.elapsed().as_secs_f64() * 1e3;
+        let device_index = ctx
+            .devices
+            .iter()
+            .position(|d| Arc::ptr_eq(d, &dev))
+            .map_or(u32::MAX, |i| i as u32);
         // cycles under the tile-latency model of the device that
         // actually ran the batch (dataflow-overlapped configs from
         // `attrax tune` report the same numbers here as in
@@ -496,7 +535,8 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
         let total_cycles =
             out.fp_cost.cycles_under(&dev.sim.cfg) + out.bp_cost.cycles_under(&dev.sim.cfg);
         let per_image_cycles = total_cycles / batch.len() as u64;
-        for (b, (req, wait_ms)) in batch.into_iter().zip(waits_ms).enumerate() {
+        let batch_size = batch.len() as u32;
+        for (b, (req, (wait_ms, enqueue_ns))) in batch.into_iter().zip(waits).enumerate() {
             ctx.metrics.record_completion(host_ms, wait_ms, per_image_cycles);
             let resp = Response {
                 id: req.id,
@@ -507,12 +547,24 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
                 latency_ms: host_ms,
                 device_ms: per_image_cycles as f64 / (ctx.freq_mhz * 1e3),
                 device_cycles: per_image_cycles,
+                batch_id,
+                batch_size,
+                device_index,
+                attempts: attempts_used,
+                breaker_tripped,
+                enqueue_ns,
+                batch_form_ns,
+                dispatch_ns,
+                complete_ns,
             };
             // receiver may have gone away; that's fine
             let _ = req.reply.send(Ok(resp));
         }
     }
 }
+
+/// Process-monotonic micro-batch id source (1-based in responses).
+static BATCH_SEQ: AtomicU64 = AtomicU64::new(0);
 
 fn verifier_loop(
     rx: mpsc::Receiver<VerifyJob>,

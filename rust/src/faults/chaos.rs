@@ -204,7 +204,12 @@ pub fn run(spec: &ChaosSpec) -> anyhow::Result<ChaosReport> {
     let server = Server::start(
         "127.0.0.1:0",
         coord,
-        ServerConfig { max_conns: 4, default_deadline_ms: 0, faults: Some(hooks.clone()) },
+        ServerConfig {
+            max_conns: 4,
+            default_deadline_ms: 0,
+            faults: Some(hooks.clone()),
+            recorder: None,
+        },
     )?;
     let mut proxy = WireProxy::start(server.local_addr(), hooks.clone())?;
 

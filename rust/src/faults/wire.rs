@@ -244,6 +244,7 @@ mod tests {
             elems: 8,
             deadline_ms: None,
             with_crc,
+            trace_seq: None,
             images: vec![0.25; 8],
         })
     }

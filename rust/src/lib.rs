@@ -37,6 +37,10 @@
 //!   parameter-randomization sanity check, and the `attrax eval`
 //!   artifact (`BENCH_xeval.json`); supplies the quality objective the
 //!   tuner runs under `--quality`.
+//! * [`obs`] — observability: heap-free per-request spans, the
+//!   CRC-protected `attrax-trace/v1` capture artifact, deterministic
+//!   bitwise replay (`attrax replay`), and the offline fleet audit
+//!   (`attrax doctor`, `BENCH_doctor.json`).
 //! * [`fx`], [`model`], [`data`], [`util`] — supporting substrates
 //!   (fixed-point math, network graphs/params, shapes-32, and the
 //!   from-scratch util kit for this offline environment).
@@ -53,6 +57,7 @@ pub mod fpga;
 pub mod fx;
 pub mod hls;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sched;
 pub mod serve;

@@ -6,6 +6,14 @@
 //!   serve      run the serving coordinator (in-process load, or a TCP
 //!              server with --tcp); --config runs a tuned design point
 //!   loadgen    hammer a serve --tcp endpoint, emit BENCH_serve.json
+//!              (--trace replays a capture as the workload; --smoke
+//!              --trace-out captures the loopback run)
+//!   replay     re-drive a captured trace against an in-process stack
+//!              (or --addr for a live server), reconciling every
+//!              heatmap bitwise; nonzero exit on divergence
+//!   doctor     offline trace audit: per-stage latency decomposition,
+//!              SLO misses, shed storms, batching pathologies
+//!              (BENCH_doctor.json; nonzero exit on violations)
 //!   chaos      fault-injection campaign over the full serving stack,
 //!              emit BENCH_chaos.json (--smoke = the deterministic CI
 //!              campaign; nonzero exit if any fault escaped)
@@ -25,8 +33,12 @@ use attrax::faults::{chaos, FaultHooks, FaultPlan};
 use attrax::fpga::{self, Board, ALL_BOARDS};
 use attrax::hls::HwConfig;
 use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::obs::span::Recorder;
+use attrax::obs::trace::{TraceMeta, TraceWriter};
+use attrax::obs::{doctor, replay};
 use attrax::sched::{AttrOptions, Simulator};
 use attrax::serve::{loadgen, Server, ServerConfig};
+use std::sync::Arc;
 use attrax::util::cli::Command;
 use attrax::util::{log, ppm};
 
@@ -38,6 +50,8 @@ const SUBCOMMANDS: &[(&str, fn(Vec<String>) -> i32)] = &[
     ("attribute", cmd_attribute),
     ("serve", cmd_serve),
     ("loadgen", cmd_loadgen),
+    ("replay", cmd_replay),
+    ("doctor", cmd_doctor),
     ("chaos", cmd_chaos),
     ("tune", cmd_tune),
     ("eval", cmd_eval),
@@ -77,6 +91,11 @@ fn usage() -> String {
      \x20 attribute   one attribution on the device simulator\n\
      \x20 serve       serving coordinator (--tcp <addr> for the network front door)\n\
      \x20 loadgen     drive a serve --tcp endpoint, emit BENCH_serve.json\n\
+     \x20             (--trace <capture> = realistic-traffic mode)\n\
+     \x20 replay      re-drive a captured trace (serve --trace), reconcile every\n\
+     \x20             heatmap bitwise; --addr targets a live server\n\
+     \x20 doctor      audit a captured trace offline (SLO misses, shed storms,\n\
+     \x20             batching pathologies), emit BENCH_doctor.json\n\
      \x20 chaos       fault-injection campaign over the serving stack, emit\n\
      \x20             BENCH_chaos.json (--smoke = deterministic CI campaign)\n\
      \x20 tune        design-space exploration: BENCH_dse.json + tuned configs\n\
@@ -318,6 +337,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("max-conns", "32", "TCP connection pool bound (Busy-shed beyond)")
         .opt("deadline-ms", "0", "default per-request deadline (0 = none)")
         .opt("faults", "", "fault plan (*.faults.json) to inject at the TCP admission site")
+        .opt("trace", "", "stream completed request spans into this attrax-trace/v1 file")
         .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)")
         .opt("config", "", "tuned-config artifact (attrax tune) to run this board on")
         .opt("model", "", "graph-IR model manifest (default: built-in Table III)");
@@ -328,7 +348,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     if let Some(addr) = args.get("tcp").filter(|a| !a.is_empty()) {
         return cmd_serve_tcp(addr, &args, board, hw_cfg);
     }
-    let coord = match start_coordinator(&args, board, hw_cfg) {
+    let (coord, _, _) = match start_coordinator(&args, board, hw_cfg) {
         Ok(c) => c,
         Err(e) => return fail(e),
     };
@@ -361,22 +381,28 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
 
 /// Build the simulator (synthetic-weight fallback) and start the
 /// coordinator from the serve options — the block shared by the
-/// in-process and TCP serving paths.
+/// in-process and TCP serving paths. Also returns the model/weights
+/// provenance strings a trace capture records in its meta record
+/// (`"table3"`/`"custom"` and `"artifacts"`/`"synthetic:42"`).
 fn start_coordinator(
     args: &attrax::util::cli::Args,
     board: Board,
     hw_cfg: HwConfig,
-) -> anyhow::Result<Coordinator> {
+) -> anyhow::Result<(Coordinator, String, String)> {
     // a custom --model manifest always serves synthetic seeded weights:
     // the trained artifacts are Table-III-specific
-    let (sim, artifacts) = match model_of(args) {
+    let (sim, artifacts, model_kind) = match model_of(args) {
         Some(net) => {
             println!("(serving custom graph model with synthetic seeded weights)");
             let params = attrax::model::Params::synthetic(&net, 42);
-            (Simulator::new(net, &params, hw_cfg)?, None)
+            (Simulator::new(net, &params, hw_cfg)?, None, "custom")
         }
-        None => build_sim_or_synthetic(board, Some(hw_cfg))?,
+        None => {
+            let (sim, artifacts) = build_sim_or_synthetic(board, Some(hw_cfg))?;
+            (sim, artifacts, "table3")
+        }
     };
+    let weights = if artifacts.is_some() { "artifacts" } else { "synthetic:42" };
     // shadow verification needs the trained artifacts; drop it (with a
     // warning) rather than silently pretending on the synthetic path
     let mut verify: f64 = args.parse_num("verify", 0.1);
@@ -395,7 +421,8 @@ fn start_coordinator(
         max_retries: args.parse_num("retries", 2),
     };
     let artifacts = if verify > 0.0 { artifacts } else { None };
-    Coordinator::start(sim, cfg, artifacts)
+    let coord = Coordinator::start(sim, cfg, artifacts)?;
+    Ok((coord, model_kind.to_string(), weights.to_string()))
 }
 
 /// `serve --tcp <addr>`: the networked front door. Works offline
@@ -406,7 +433,7 @@ fn cmd_serve_tcp(
     board: Board,
     hw_cfg: HwConfig,
 ) -> i32 {
-    let coord = match start_coordinator(args, board, hw_cfg) {
+    let (coord, model_kind, weights) = match start_coordinator(args, board, hw_cfg) {
         Ok(c) => c,
         Err(e) => return fail(e),
     };
@@ -417,10 +444,34 @@ fn cmd_serve_tcp(
             Err(e) => return fail(e),
         },
     };
+    // --trace: capture every completed request span (plus its exact
+    // wire frames) into an attrax-trace/v1 artifact for replay/doctor
+    let trace_writer = match args.get("trace").filter(|p| !p.is_empty()) {
+        None => None,
+        Some(path) => {
+            let custom_cfg = args.get("config").filter(|s| !s.is_empty()).is_some();
+            let meta = TraceMeta {
+                board: board.name().to_string(),
+                model: model_kind,
+                weights,
+                config: if custom_cfg { "custom" } else { "default" }.to_string(),
+                elems: coord.sim().net.input.elems(),
+                out_n: coord.sim().net.output_shape().elems(),
+                workers: args.parse_num("workers", 2),
+                max_batch: args.parse_num("batch", 1),
+                max_wait_ms: args.parse_num("batch-wait", 2),
+            };
+            match TraceWriter::create(path, &meta) {
+                Ok(w) => Some(Arc::new(w)),
+                Err(e) => return fail(format!("cannot create trace {path}: {e}")),
+            }
+        }
+    };
     let scfg = ServerConfig {
         max_conns: args.parse_num("max-conns", 32),
         default_deadline_ms: args.parse_num("deadline-ms", 0),
         faults,
+        recorder: trace_writer.clone().map(|w| w as Arc<dyn Recorder>),
     };
     let srv = match Server::start(addr, coord, scfg) {
         Ok(s) => s,
@@ -444,6 +495,15 @@ fn cmd_serve_tcp(
     match srv.shutdown() {
         Ok(snap) => {
             println!("\n== serving metrics ==\n{}", snap.report());
+            if let Some(w) = trace_writer {
+                match w.finish() {
+                    Ok(n) => println!("trace: {n} spans captured"),
+                    Err(n) => {
+                        eprintln!("trace: {n} record writes failed");
+                        return 1;
+                    }
+                }
+            }
             0
         }
         Err(e) => fail(e),
@@ -463,6 +523,8 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         .opt("seed", "42", "workload seed")
         .opt("out", "BENCH_serve.json", "machine-readable report path")
         .opt("config", "", "tuned-config artifact for the --smoke loopback server")
+        .opt("trace", "", "recorded trace: replay its frames as the workload (realistic traffic)")
+        .opt("trace-out", "", "with --smoke: capture the loopback run to this trace file")
         .flag("smoke", "2s self-contained check: spin an in-process loopback server");
     let args = parse_or_exit(cmd, argv);
     let method = args.get("method").filter(|s| !s.is_empty()).map(|s| {
@@ -483,22 +545,53 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         method,
         timeout_ms: args.parse_num("timeout-ms", 2000),
         seed: args.parse_num("seed", 42),
+        trace: args.get("trace").filter(|s| !s.is_empty()).map(String::from),
     };
+    let trace_out = args.get("trace-out").filter(|s| !s.is_empty()).map(String::from);
+    if trace_out.is_some() && !smoke {
+        eprintln!("--trace-out only captures the --smoke loopback run (use serve --trace for a live server)");
+        return 2;
+    }
 
     // --smoke: bring up our own loopback server on an ephemeral port
+    let mut smoke_writer: Option<Arc<TraceWriter>> = None;
     let srv = if smoke {
         spec.secs = spec.secs.min(2.0);
         let hw_cfg = resolve_cfg(&args, Board::PynqZ2, &Network::table3());
-        let (sim, _) = match build_sim_or_synthetic(Board::PynqZ2, Some(hw_cfg)) {
+        let (sim, artifacts) = match build_sim_or_synthetic(Board::PynqZ2, Some(hw_cfg)) {
             Ok(v) => v,
             Err(e) => return fail(e),
         };
         let cfg = Config { workers: 2, queue_depth: 32, max_batch: 4, ..Default::default() };
+        let mut scfg = ServerConfig::default();
+        if let Some(path) = &trace_out {
+            let custom_cfg = args.get("config").filter(|s| !s.is_empty()).is_some();
+            let meta = TraceMeta {
+                board: Board::PynqZ2.name().to_string(),
+                model: "table3".to_string(),
+                weights: if artifacts.is_some() { "artifacts" } else { "synthetic:42" }
+                    .to_string(),
+                config: if custom_cfg { "custom" } else { "default" }.to_string(),
+                elems: sim.net.input.elems(),
+                out_n: sim.net.output_shape().elems(),
+                workers: cfg.workers,
+                max_batch: cfg.max_batch,
+                max_wait_ms: cfg.max_wait_ms,
+            };
+            match TraceWriter::create(path, &meta) {
+                Ok(w) => {
+                    let w = Arc::new(w);
+                    smoke_writer = Some(w.clone());
+                    scfg.recorder = Some(w as Arc<dyn Recorder>);
+                }
+                Err(e) => return fail(format!("cannot create trace {path}: {e}")),
+            }
+        }
         let coord = match Coordinator::start(sim, cfg, None) {
             Ok(c) => c,
             Err(e) => return fail(e),
         };
-        let srv = match Server::start("127.0.0.1:0", coord, ServerConfig::default()) {
+        let srv = match Server::start("127.0.0.1:0", coord, scfg) {
             Ok(s) => s,
             Err(e) => return fail(e),
         };
@@ -535,6 +628,15 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
             Err(e) => return fail(e),
         }
     }
+    if let Some(w) = smoke_writer {
+        match w.finish() {
+            Ok(n) => println!("trace: {n} spans captured"),
+            Err(n) => {
+                eprintln!("trace: {n} record writes failed");
+                return 1;
+            }
+        }
+    }
     let out = args.get_or("out", "BENCH_serve.json");
     let payload = format!("{}\n", report.to_json(&spec));
     match std::fs::write(out, &payload) {
@@ -546,6 +648,89 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
     }
     if report.ok == 0 {
         eprintln!("loadgen completed zero requests");
+        return 1;
+    }
+    0
+}
+
+fn cmd_replay(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("replay", "re-drive a captured trace, reconcile heatmaps bitwise")
+        .opt("addr", "", "replay against a live server instead of rebuilding in-process")
+        .opt("timing", "asap", "inter-frame pacing: recorded | asap");
+    let args = parse_or_exit(cmd, argv);
+    let Some(path) = args.positional.first().cloned() else {
+        eprintln!("usage: attrax replay <trace> [--addr host:port] [--timing recorded|asap]");
+        return 2;
+    };
+    let timing_name = args.get_or("timing", "asap");
+    let Some(timing) = replay::Timing::parse(timing_name) else {
+        eprintln!("unknown --timing {timing_name:?} (recorded | asap)");
+        return 2;
+    };
+    let result = match args.get("addr").filter(|a| !a.is_empty()) {
+        Some(addr) => replay::replay_live(&path, addr, timing),
+        None => replay::replay_in_process(&path, timing),
+    };
+    let report = match result {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    println!(
+        "replayed {} frames: {} matched, {} diverged, {} skipped (non-deterministic outcomes)",
+        report.frames, report.matched, report.diverged, report.skipped
+    );
+    if report.ok() {
+        println!("replay reconciled bitwise against the capture");
+        0
+    } else {
+        eprintln!("replay DIVERGED on {} frames", report.diverged);
+        1
+    }
+}
+
+fn cmd_doctor(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("doctor", "audit a captured trace offline, emit BENCH_doctor.json")
+        .opt("out", "BENCH_doctor.json", "machine-readable report path")
+        .opt("max-miss-rate", "1", "max deadline-miss fraction per deadline class")
+        .opt("max-shed-burst", "", "max busy sheds per window (default: unlimited)")
+        .opt("shed-window", "50", "shed-storm sliding window, in records")
+        .opt("min-batch-fill", "0", "min mean batch fill, 0..1")
+        .opt("max-linger-share", "1", "max share of latency spent waiting on batch formation")
+        .opt("max-breaker-trips", "", "max breaker-trip-affected requests (default: unlimited)")
+        .opt("outlier-factor", "10", "queue-wait outlier multiple of the median wait")
+        .opt("max-queue-outliers", "", "max queue-wait outliers (default: unlimited)");
+    let args = parse_or_exit(cmd, argv);
+    let Some(path) = args.positional.first().cloned() else {
+        eprintln!("usage: attrax doctor <trace> [thresholds] [--out BENCH_doctor.json]");
+        return 2;
+    };
+    let spec = doctor::DoctorSpec {
+        max_deadline_miss_rate: args.parse_num("max-miss-rate", 1.0),
+        max_shed_burst: args.parse_num("max-shed-burst", u64::MAX),
+        shed_window: args.parse_num("shed-window", 50),
+        min_batch_fill: args.parse_num("min-batch-fill", 0.0),
+        max_linger_share: args.parse_num("max-linger-share", 1.0),
+        max_breaker_trips: args.parse_num("max-breaker-trips", u64::MAX),
+        outlier_factor: args.parse_num("outlier-factor", 10.0),
+        max_queue_outliers: args.parse_num("max-queue-outliers", u64::MAX),
+    };
+    let report = match doctor::diagnose(&path, &spec) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    print!("{}", report.summary());
+    let out = args.get_or("out", "BENCH_doctor.json");
+    let payload = format!("{}\n", report.to_json());
+    match std::fs::write(out, &payload) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            return 1;
+        }
+    }
+    let violations = report.violations();
+    if violations > 0 {
+        eprintln!("{violations} findings violate configured thresholds");
         return 1;
     }
     0

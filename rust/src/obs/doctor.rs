@@ -1,0 +1,530 @@
+//! `attrax doctor`: offline fleet diagnosis over a captured trace.
+//!
+//! The doctor never touches the live stack — it audits the
+//! `attrax-trace/v1` artifact alone, so two runs over the same trace
+//! emit byte-identical reports (no wall-clock fields, no randomness).
+//! It decomposes every span into per-stage latency segments
+//! (p50/p95/p99/mean per stage, in ms) and checks a typed findings
+//! taxonomy against configurable thresholds:
+//!
+//! * `deadline_miss_rate` — per deadline-class SLO violations
+//!   (`deadline_exceeded` outcomes among deadline-bearing requests);
+//! * `shed_storm` — the densest burst of `busy` sheds in any window
+//!   of [`DoctorSpec::shed_window`] consecutive records;
+//! * `underfull_batches` — mean batch fill vs the capture's
+//!   `max_batch` (paying batching latency without its throughput);
+//! * `linger_dominance` — share of end-to-end latency spent between
+//!   enqueue and batch formation (queue wait + batching linger);
+//! * `breaker_flap` — requests that saw a circuit-breaker trip;
+//! * `queue_wait_outliers` — enqueue→batch-form waits beyond
+//!   [`DoctorSpec::outlier_factor`] × the median wait.
+//!
+//! Every check always emits a [`Finding`] (value + threshold +
+//! violated flag) so the report is a complete health record, not just
+//! a list of failures; the CLI exits nonzero iff any finding is
+//! violated (or the trace itself is corrupt).
+
+use std::collections::BTreeMap;
+
+use crate::obs::span::{Outcome, Span, Stage, ALL_STAGES};
+use crate::obs::trace::{TraceError, TraceMeta, TraceReader, TraceRecord};
+use crate::serve::proto::ErrCode;
+use crate::util::json::{arr, num, obj, s, Json};
+use crate::util::stats::Samples;
+
+pub const DOCTOR_SCHEMA: &str = "attrax-doctor/v1";
+
+/// Audit thresholds. Defaults are lenient (report-only): every check
+/// still runs and reports its value, but nothing is flagged until the
+/// operator tightens the knob.
+#[derive(Clone, Debug)]
+pub struct DoctorSpec {
+    /// Max tolerated deadline-miss fraction per deadline class.
+    pub max_deadline_miss_rate: f64,
+    /// Max tolerated `busy` sheds inside one [`Self::shed_window`].
+    pub max_shed_burst: u64,
+    /// Sliding-window size (records) for shed-storm detection.
+    pub shed_window: usize,
+    /// Min tolerated mean batch fill (batch_size / max_batch).
+    pub min_batch_fill: f64,
+    /// Max tolerated share of latency spent waiting for batch
+    /// formation.
+    pub max_linger_share: f64,
+    /// Max tolerated breaker-trip-affected requests.
+    pub max_breaker_trips: u64,
+    /// A queue wait beyond `outlier_factor × median` is an outlier.
+    pub outlier_factor: f64,
+    /// Max tolerated queue-wait outliers.
+    pub max_queue_outliers: u64,
+}
+
+impl Default for DoctorSpec {
+    fn default() -> DoctorSpec {
+        DoctorSpec {
+            max_deadline_miss_rate: 1.0,
+            max_shed_burst: u64::MAX,
+            shed_window: 50,
+            min_batch_fill: 0.0,
+            max_linger_share: 1.0,
+            max_breaker_trips: u64::MAX,
+            outlier_factor: 10.0,
+            max_queue_outliers: u64::MAX,
+        }
+    }
+}
+
+/// One check's verdict. `value` vs `threshold` direction depends on
+/// the check (documented per kind); `violated` is authoritative.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Finding {
+    pub kind: &'static str,
+    pub detail: String,
+    pub value: f64,
+    pub threshold: f64,
+    pub violated: bool,
+}
+
+impl Finding {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("kind", s(self.kind)),
+            ("detail", s(&self.detail)),
+            ("value", num(self.value)),
+            ("threshold", num(self.threshold)),
+            ("violated", Json::Bool(self.violated)),
+        ])
+    }
+}
+
+/// Latency summary for one pipeline segment, in milliseconds.
+#[derive(Clone, Debug, Default)]
+pub struct StageStat {
+    pub count: usize,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl StageStat {
+    fn of(samples: &Samples) -> StageStat {
+        StageStat {
+            count: samples.len(),
+            mean_ms: samples.mean(),
+            p50_ms: samples.percentile(0.50),
+            p95_ms: samples.percentile(0.95),
+            p99_ms: samples.percentile(0.99),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("count", num(self.count as f64)),
+            ("mean_ms", num(self.mean_ms)),
+            ("p50_ms", num(self.p50_ms)),
+            ("p95_ms", num(self.p95_ms)),
+            ("p99_ms", num(self.p99_ms)),
+        ])
+    }
+}
+
+/// The full audit: stage decomposition + outcome tally + findings.
+#[derive(Clone, Debug)]
+pub struct DoctorReport {
+    pub frames: usize,
+    /// Outcome name → count (sorted, so JSON is canonical).
+    pub outcomes: BTreeMap<String, u64>,
+    /// Segment name → stats, in pipeline order (plus `"total"`).
+    pub stages: Vec<(&'static str, StageStat)>,
+    pub findings: Vec<Finding>,
+}
+
+impl DoctorReport {
+    pub fn violations(&self) -> usize {
+        self.findings.iter().filter(|f| f.violated).count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let outcomes =
+            self.outcomes.iter().map(|(k, v)| (k.as_str(), num(*v as f64))).collect::<Vec<_>>();
+        let stages =
+            self.stages.iter().map(|(name, st)| (*name, st.to_json())).collect::<Vec<_>>();
+        obj(vec![
+            ("schema", s(DOCTOR_SCHEMA)),
+            ("frames", num(self.frames as f64)),
+            ("outcomes", obj(outcomes)),
+            ("stages", obj(stages)),
+            ("findings", arr(self.findings.iter().map(Finding::to_json).collect())),
+            ("violations", num(self.violations() as f64)),
+        ])
+    }
+
+    /// Human-readable digest for the CLI.
+    pub fn summary(&self) -> String {
+        let mut out = format!("{} frames audited\n", self.frames);
+        for (name, st) in &self.stages {
+            if st.count == 0 {
+                continue;
+            }
+            out.push_str(&format!(
+                "  {name:<16} n={:<6} p50={:.3}ms p95={:.3}ms p99={:.3}ms\n",
+                st.count, st.p50_ms, st.p95_ms, st.p99_ms
+            ));
+        }
+        for f in &self.findings {
+            let mark = if f.violated { "FAIL" } else { "ok  " };
+            out.push_str(&format!("  [{mark}] {}: {}\n", f.kind, f.detail));
+        }
+        out
+    }
+}
+
+fn ms(ns: u64) -> f64 {
+    ns as f64 / 1e6
+}
+
+/// Audit the trace at `path`. A corrupt/truncated trace is a
+/// [`TraceError`], not a finding — the caller must treat it as fatal.
+pub fn diagnose(path: &str, spec: &DoctorSpec) -> Result<DoctorReport, TraceError> {
+    let (meta, records) = TraceReader::open(path)?.read_all()?;
+    Ok(diagnose_records(&meta, &records, spec))
+}
+
+/// The audit core — pure function of the records (test seam).
+pub fn diagnose_records(
+    meta: &TraceMeta,
+    records: &[TraceRecord],
+    spec: &DoctorSpec,
+) -> DoctorReport {
+    let spans: Vec<&Span> = records.iter().map(|r| &r.span).collect();
+
+    // outcome tally
+    let mut outcomes: BTreeMap<String, u64> = BTreeMap::new();
+    for sp in &spans {
+        *outcomes.entry(sp.outcome.name().to_string()).or_insert(0) += 1;
+    }
+
+    // per-stage latency decomposition (stage i = segment ending at i)
+    let mut stages = Vec::new();
+    let mut total = Samples::new();
+    for st in ALL_STAGES.iter().skip(1) {
+        let mut seg = Samples::new();
+        for sp in &spans {
+            if let Some(ns) = sp.segment_ns(*st) {
+                seg.push(ms(ns));
+            }
+        }
+        stages.push((st.name(), StageStat::of(&seg)));
+    }
+    for sp in &spans {
+        total.push(ms(sp.total_ns()));
+    }
+    stages.push(("total", StageStat::of(&total)));
+
+    let mut findings = Vec::new();
+    findings.extend(check_deadlines(&spans, spec));
+    findings.push(check_shed_storm(&spans, spec));
+    findings.push(check_batch_fill(&spans, meta, spec));
+    findings.push(check_linger(&spans, spec));
+    findings.push(check_breakers(&spans, spec));
+    findings.push(check_queue_outliers(&spans, spec));
+
+    DoctorReport { frames: spans.len(), outcomes, stages, findings }
+}
+
+/// SLO audit per deadline class (requests sharing a `deadline_ms`).
+fn check_deadlines(spans: &[&Span], spec: &DoctorSpec) -> Vec<Finding> {
+    let mut classes: BTreeMap<u64, (u64, u64)> = BTreeMap::new();
+    for sp in spans {
+        if sp.deadline_ms == 0 {
+            continue; // no deadline: nothing to miss
+        }
+        let e = classes.entry(sp.deadline_ms).or_insert((0, 0));
+        e.0 += 1;
+        if sp.outcome == Outcome::Err(ErrCode::DeadlineExceeded) {
+            e.1 += 1;
+        }
+    }
+    classes
+        .iter()
+        .map(|(class, (n, missed))| {
+            let rate = *missed as f64 / *n as f64;
+            Finding {
+                kind: "deadline_miss_rate",
+                detail: format!("class {class}ms: {missed}/{n} requests missed their deadline"),
+                value: rate,
+                threshold: spec.max_deadline_miss_rate,
+                violated: rate > spec.max_deadline_miss_rate,
+            }
+        })
+        .collect()
+}
+
+/// Densest `busy` burst in any `shed_window` consecutive records.
+fn check_shed_storm(spans: &[&Span], spec: &DoctorSpec) -> Finding {
+    let win = spec.shed_window.max(1);
+    let busy: Vec<u64> =
+        spans.iter().map(|sp| u64::from(sp.outcome == Outcome::Err(ErrCode::Busy))).collect();
+    let mut in_win: u64 = busy.iter().take(win).sum();
+    let mut worst = in_win;
+    for i in win..busy.len() {
+        in_win += busy[i];
+        in_win -= busy[i - win];
+        worst = worst.max(in_win);
+    }
+    Finding {
+        kind: "shed_storm",
+        detail: format!("densest busy-shed burst: {worst} in any {win} consecutive requests"),
+        value: worst as f64,
+        threshold: spec.max_shed_burst as f64,
+        violated: worst > spec.max_shed_burst,
+    }
+}
+
+/// Mean batch fill across served requests.
+fn check_batch_fill(spans: &[&Span], meta: &TraceMeta, spec: &DoctorSpec) -> Finding {
+    let cap = meta.max_batch.max(1) as f64;
+    let mut fill = Samples::new();
+    let mut underfull = 0u64;
+    for sp in spans {
+        if sp.batch_size == 0 {
+            continue; // never batched (shed before enqueue)
+        }
+        fill.push(sp.batch_size as f64 / cap);
+        if (sp.batch_size as usize) < meta.max_batch {
+            underfull += 1;
+        }
+    }
+    let mean = if fill.is_empty() { 1.0 } else { fill.mean() };
+    Finding {
+        kind: "underfull_batches",
+        detail: format!(
+            "mean batch fill {:.3} of max_batch={} ({underfull}/{} requests under-full)",
+            mean,
+            meta.max_batch,
+            fill.len()
+        ),
+        value: mean,
+        threshold: spec.min_batch_fill,
+        violated: mean < spec.min_batch_fill,
+    }
+}
+
+/// Share of end-to-end latency spent between enqueue and batch
+/// formation (queue wait + batching linger).
+fn check_linger(spans: &[&Span], spec: &DoctorSpec) -> Finding {
+    let (mut wait_ns, mut total_ns) = (0u128, 0u128);
+    for sp in spans {
+        if let Some(w) = sp.segment_ns(Stage::BatchForm) {
+            wait_ns += w as u128;
+            total_ns += sp.total_ns() as u128;
+        }
+    }
+    let share = if total_ns == 0 { 0.0 } else { wait_ns as f64 / total_ns as f64 };
+    Finding {
+        kind: "linger_dominance",
+        detail: format!("batch-formation wait is {:.1}% of end-to-end latency", share * 100.0),
+        value: share,
+        threshold: spec.max_linger_share,
+        violated: share > spec.max_linger_share,
+    }
+}
+
+fn check_breakers(spans: &[&Span], spec: &DoctorSpec) -> Finding {
+    let trips = spans.iter().filter(|sp| sp.breaker_tripped).count() as u64;
+    Finding {
+        kind: "breaker_flap",
+        detail: format!("{trips} requests saw a circuit-breaker trip"),
+        value: trips as f64,
+        threshold: spec.max_breaker_trips as f64,
+        violated: trips > spec.max_breaker_trips,
+    }
+}
+
+/// Queue waits beyond `outlier_factor × median` wait.
+fn check_queue_outliers(spans: &[&Span], spec: &DoctorSpec) -> Finding {
+    let mut waits = Samples::new();
+    for sp in spans {
+        if let Some(w) = sp.segment_ns(Stage::BatchForm) {
+            waits.push(ms(w));
+        }
+    }
+    let median = waits.percentile(0.50);
+    let cut = median * spec.outlier_factor;
+    let outliers = if waits.is_empty() || median <= 0.0 {
+        0u64
+    } else {
+        spans
+            .iter()
+            .filter_map(|sp| sp.segment_ns(Stage::BatchForm))
+            .filter(|&w| ms(w) > cut)
+            .count() as u64
+    };
+    Finding {
+        kind: "queue_wait_outliers",
+        detail: format!(
+            "{outliers} waits beyond {:.1}× the {median:.3}ms median queue wait",
+            spec.outlier_factor
+        ),
+        value: outliers as f64,
+        threshold: spec.max_queue_outliers as f64,
+        violated: outliers > spec.max_queue_outliers,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::Method;
+    use crate::serve::proto::{ErrorFrame, Frame, RequestFrame, ResponseFrame};
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            board: "pynq-z2".into(),
+            model: "table3".into(),
+            weights: "synthetic:1".into(),
+            config: "default".into(),
+            elems: 2,
+            out_n: 2,
+            workers: 1,
+            max_batch: 4,
+            max_wait_ms: 1,
+        }
+    }
+
+    /// A record whose span walked the whole pipeline with the given
+    /// queue wait, batch size, and outcome.
+    fn rec(seq: u64, wait_ns: u64, batch_size: u32, outcome: Outcome) -> TraceRecord {
+        let mut span = Span::start(seq, 1, 1, Method::Guided);
+        span.stages = [0; crate::obs::span::N_STAGES];
+        let t0 = 1_000_000 * (seq + 1);
+        span.stamp(Stage::Accept, t0);
+        span.stamp(Stage::Decode, t0 + 10_000);
+        span.stamp(Stage::Admit, t0 + 20_000);
+        span.stamp(Stage::Enqueue, t0 + 30_000);
+        span.stamp(Stage::BatchForm, t0 + 30_000 + wait_ns);
+        span.stamp(Stage::Dispatch, t0 + 40_000 + wait_ns);
+        span.stamp(Stage::DeviceComplete, t0 + 140_000 + wait_ns);
+        span.stamp(Stage::Encode, t0 + 150_000 + wait_ns);
+        span.stamp(Stage::Flush, t0 + 160_000 + wait_ns);
+        span.batch_id = seq;
+        span.batch_size = batch_size;
+        span.device_index = 0;
+        span.attempts = 1;
+        span.deadline_ms = 100;
+        span.outcome = outcome;
+        let req = RequestFrame {
+            id: seq,
+            method: Method::Guided,
+            target: None,
+            n: 1,
+            elems: 2,
+            deadline_ms: Some(100),
+            with_crc: false,
+            trace_seq: None,
+            images: vec![0.0, 1.0],
+        };
+        let reply = match outcome {
+            Outcome::Ok => Frame::Response(ResponseFrame {
+                id: seq,
+                n: 1,
+                elems: 2,
+                out_n: 2,
+                preds: vec![0],
+                device_cycles: vec![100],
+                with_crc: false,
+                logits: vec![1.0, 0.0],
+                relevance: vec![0.5, 0.5],
+            }),
+            Outcome::Err(code) => {
+                Frame::Error(ErrorFrame { id: seq, code, msg: "injected".into() })
+            }
+        };
+        TraceRecord { span, req, reply }
+    }
+
+    #[test]
+    fn healthy_trace_has_no_violations_and_full_decomposition() {
+        let records: Vec<TraceRecord> =
+            (0..20).map(|i| rec(i, 50_000, 4, Outcome::Ok)).collect();
+        let report = diagnose_records(&meta(), &records, &DoctorSpec::default());
+        assert_eq!(report.frames, 20);
+        assert_eq!(report.violations(), 0);
+        assert_eq!(report.outcomes.get("ok"), Some(&20));
+        // every non-accept stage got a sample from every span
+        for (name, st) in &report.stages {
+            assert_eq!(st.count, 20, "stage {name} sampled {}", st.count);
+            assert!(st.p99_ms >= st.p50_ms);
+        }
+        // identical waits: no outliers
+        let f = report.findings.iter().find(|f| f.kind == "queue_wait_outliers").unwrap();
+        assert_eq!(f.value, 0.0);
+    }
+
+    #[test]
+    fn pathologies_are_flagged_against_tight_thresholds() {
+        let mut records: Vec<TraceRecord> = Vec::new();
+        for i in 0..40 {
+            // half the deadline class misses; sheds cluster early;
+            // batches run half-full; one wait is a 100x outlier
+            let outcome = match i {
+                0..=4 => Outcome::Err(ErrCode::Busy),
+                5..=9 => Outcome::Err(ErrCode::DeadlineExceeded),
+                _ => Outcome::Ok,
+            };
+            let wait = if i == 20 { 5_000_000 } else { 50_000 };
+            let mut r = rec(i, wait, 2, outcome);
+            if i == 30 {
+                r.span.breaker_tripped = true;
+                r.span.attempts = 2;
+            }
+            records.push(r);
+        }
+        let spec = DoctorSpec {
+            max_deadline_miss_rate: 0.05,
+            max_shed_burst: 2,
+            shed_window: 10,
+            min_batch_fill: 0.9,
+            max_linger_share: 1.0,
+            max_breaker_trips: 0,
+            outlier_factor: 10.0,
+            max_queue_outliers: 0,
+        };
+        let report = diagnose_records(&meta(), &records, &spec);
+        let violated: Vec<&str> =
+            report.findings.iter().filter(|f| f.violated).map(|f| f.kind).collect();
+        assert!(violated.contains(&"deadline_miss_rate"), "{violated:?}");
+        assert!(violated.contains(&"shed_storm"), "{violated:?}");
+        assert!(violated.contains(&"underfull_batches"), "{violated:?}");
+        assert!(violated.contains(&"breaker_flap"), "{violated:?}");
+        assert!(violated.contains(&"queue_wait_outliers"), "{violated:?}");
+        assert_eq!(report.violations(), violated.len());
+    }
+
+    #[test]
+    fn report_json_is_deterministic_and_schema_tagged() {
+        let records: Vec<TraceRecord> = (0..10)
+            .map(|i| {
+                rec(i, 10_000 * (i + 1), 3, if i == 3 { Outcome::Err(ErrCode::Busy) } else { Outcome::Ok })
+            })
+            .collect();
+        let a = diagnose_records(&meta(), &records, &DoctorSpec::default()).to_json().to_string();
+        let b = diagnose_records(&meta(), &records, &DoctorSpec::default()).to_json().to_string();
+        assert_eq!(a, b);
+        assert!(a.contains("\"schema\":\"attrax-doctor/v1\""), "{a}");
+        // re-parseable
+        Json::parse(&a).unwrap();
+    }
+
+    #[test]
+    fn empty_trace_audits_cleanly() {
+        let report = diagnose_records(&meta(), &[], &DoctorSpec::default());
+        assert_eq!(report.frames, 0);
+        assert_eq!(report.violations(), 0);
+        for f in &report.findings {
+            assert!(f.value.is_finite(), "{}: {}", f.kind, f.value);
+        }
+        let j = report.to_json().to_string();
+        Json::parse(&j).unwrap();
+    }
+}

@@ -1,0 +1,29 @@
+//! Observability: per-request spans, the `attrax-trace/v1` capture
+//! artifact, deterministic replay, and the offline `doctor` audit.
+//!
+//! The design splits cleanly along the hot/cold boundary:
+//!
+//! * [`span`] is the hot path — a fixed-size, heap-free per-request
+//!   ledger the server always stamps (nanosecond stage timestamps +
+//!   batch/device/retry facts), handed to an optional
+//!   [`span::Recorder`] when one is configured and dropped otherwise;
+//! * [`trace`] is the cold sink — a CRC-protected, append-only,
+//!   schema-tagged record stream holding each span plus the exact
+//!   wire frames that crossed the socket;
+//! * [`replay`] re-drives a captured trace against a rebuilt
+//!   coordinator (or a live server) and reconciles every heatmap
+//!   bitwise — the engine's determinism contract, enforced end to
+//!   end;
+//! * [`doctor`] audits a trace offline for SLO misses, shed storms,
+//!   batching pathologies, breaker flaps, and queue-wait outliers,
+//!   emitting the byte-stable `attrax-doctor/v1` report.
+
+pub mod doctor;
+pub mod replay;
+pub mod span;
+pub mod trace;
+
+pub use doctor::{diagnose, DoctorReport, DoctorSpec, Finding};
+pub use replay::{replay_in_process, replay_live, replay_with_sim, ReplayReport, Timing};
+pub use span::{Recorder, Span, Stage};
+pub use trace::{TraceMeta, TraceReader, TraceWriter};

@@ -1,0 +1,352 @@
+//! Deterministic trace replay: re-drive a captured `attrax-trace/v1`
+//! stream against a freshly built in-process coordinator (or a live
+//! server) and reconcile every heatmap bitwise against the recorded
+//! responses.
+//!
+//! The engine is bit-exact regardless of batch composition (the
+//! fixed-point pipeline admits no data races and no
+//! accumulation-order freedom), so a replay on the same model, same
+//! weights, and same board-derived config must reproduce every pred,
+//! logit, and relevance value to the bit. What is deliberately *not*
+//! reconciled: per-image `device_cycles` (the per-batch total is
+//! divided across whatever micro-batch the scheduler formed, which
+//! varies with timing) and load-dependent outcomes (`busy`,
+//! `deadline_exceeded` — those records are counted as skipped, not
+//! replayed). Any payload mismatch is a divergence; divergences make
+//! [`ReplayReport::ok`] false and the CLI exit nonzero.
+
+use std::net::TcpStream;
+use std::sync::mpsc;
+use std::time::Duration;
+
+use crate::attribution::Method;
+use crate::coordinator::{Config, Coordinator};
+use crate::fpga::{self, Board};
+use crate::model::{artifacts_dir, load_artifacts, Network, Params};
+use crate::obs::span::{Outcome, Stage};
+use crate::obs::trace::{TraceMeta, TraceReader, TraceRecord};
+use crate::sched::Simulator;
+use crate::serve::proto::{self, Frame, ResponseFrame};
+
+/// Inter-record pacing.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Timing {
+    /// Sleep the recorded accept-to-accept gaps (capped at 1 s each).
+    Recorded,
+    /// No pacing: replay as fast as the stack answers.
+    Asap,
+}
+
+impl Timing {
+    pub fn parse(s: &str) -> Option<Timing> {
+        match s {
+            "recorded" => Some(Timing::Recorded),
+            "asap" => Some(Timing::Asap),
+            _ => None,
+        }
+    }
+}
+
+/// Per-gap pacing cap: a trace captured across an idle hour should
+/// not take an hour to replay.
+const MAX_GAP: Duration = Duration::from_secs(1);
+
+/// Replay outcome tally. `matched + diverged + skipped == frames`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ReplayReport {
+    /// Records in the trace (excluding meta).
+    pub frames: usize,
+    /// Records whose re-driven response reconciled bitwise.
+    pub matched: usize,
+    /// Records whose re-driven response differed (or failed).
+    pub diverged: usize,
+    /// Records with load-dependent error outcomes — not replayable
+    /// deterministically, so not reconciled.
+    pub skipped: usize,
+}
+
+impl ReplayReport {
+    pub fn ok(&self) -> bool {
+        self.diverged == 0
+    }
+}
+
+/// Rebuild the serving stack the trace was captured on. Refuses
+/// traces whose environment is not reproducible from the meta record
+/// alone (non-built-in model, tuned/custom hardware config).
+fn sim_from_meta(meta: &TraceMeta) -> anyhow::Result<Simulator> {
+    anyhow::ensure!(
+        meta.model == "table3",
+        "trace was captured on model {:?}; in-process replay only rebuilds the built-in table3 \
+         model (use --addr to replay against a live server)",
+        meta.model
+    );
+    anyhow::ensure!(
+        meta.config == "default",
+        "trace was captured on a custom hardware config; in-process replay only rebuilds \
+         board-default configs (use --addr to replay against a live server)"
+    );
+    let board = Board::parse(&meta.board)
+        .ok_or_else(|| anyhow::anyhow!("trace names unknown board {:?}", meta.board))?;
+    let net = Network::table3();
+    let cfg = fpga::choose_config(board, &net, Method::Guided);
+    let params = match meta.weights.strip_prefix("synthetic:") {
+        Some(seed) => {
+            let seed: u64 = seed
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad synthetic weights seed {:?}", meta.weights))?;
+            Params::synthetic(&net, seed)
+        }
+        None if meta.weights == "artifacts" => load_artifacts(&artifacts_dir())?.1,
+        None => anyhow::bail!("trace names unknown weights spec {:?}", meta.weights),
+    };
+    let sim = Simulator::new(net, &params, cfg)?;
+    anyhow::ensure!(
+        sim.net.input.elems() == meta.elems,
+        "rebuilt model takes {} elems, trace says {}",
+        sim.net.input.elems(),
+        meta.elems
+    );
+    Ok(sim)
+}
+
+/// The recorded response for an ok-outcome record, or `None` when the
+/// record is not bitwise-reconcilable (error outcome / error reply).
+fn recorded_response(rec: &TraceRecord) -> Option<&ResponseFrame> {
+    if rec.span.outcome != Outcome::Ok {
+        return None;
+    }
+    match &rec.reply {
+        Frame::Response(r) => Some(r),
+        _ => None,
+    }
+}
+
+/// Bitwise equality for the replay-comparable parts of two responses
+/// (`device_cycles` excluded — see module docs).
+fn responses_match(a: &ResponseFrame, b: &ResponseFrame) -> bool {
+    a.n == b.n
+        && a.elems == b.elems
+        && a.out_n == b.out_n
+        && a.preds == b.preds
+        && a.logits.len() == b.logits.len()
+        && a.relevance.len() == b.relevance.len()
+        && a.logits.iter().zip(&b.logits).all(|(x, y)| x.to_bits() == y.to_bits())
+        && a.relevance.iter().zip(&b.relevance).all(|(x, y)| x.to_bits() == y.to_bits())
+}
+
+fn pace(timing: Timing, prev_accept: &mut u64, rec: &TraceRecord) {
+    if timing != Timing::Recorded {
+        return;
+    }
+    if let Some(accept) = rec.span.get(Stage::Accept) {
+        if *prev_accept != 0 && accept > *prev_accept {
+            std::thread::sleep(Duration::from_nanos(accept - *prev_accept).min(MAX_GAP));
+        }
+        *prev_accept = accept;
+    }
+}
+
+/// Replay `path` against a coordinator built on `sim` — the test seam
+/// (tests pass a tiny model; the CLI builds from the trace meta via
+/// [`replay_in_process`]). Records are re-driven strictly in recorded
+/// order, whole frames at a time, preserving each frame's
+/// method/batch mix.
+pub fn replay_with_sim(
+    path: &str,
+    sim: Simulator,
+    timing: Timing,
+) -> anyhow::Result<ReplayReport> {
+    let (meta, records) = TraceReader::open(path)?.read_all()?;
+    anyhow::ensure!(
+        sim.net.input.elems() == meta.elems,
+        "replay model takes {} elems, trace says {}",
+        sim.net.input.elems(),
+        meta.elems
+    );
+    let coord = Coordinator::start(
+        sim,
+        Config {
+            workers: meta.workers.max(1),
+            max_batch: meta.max_batch.max(1),
+            max_wait_ms: meta.max_wait_ms,
+            ..Default::default()
+        },
+        None,
+    )?;
+    let mut report = ReplayReport::default();
+    let mut prev_accept = 0u64;
+    for rec in &records {
+        report.frames += 1;
+        pace(timing, &mut prev_accept, rec);
+        let Some(recorded) = recorded_response(rec) else {
+            report.skipped += 1;
+            continue;
+        };
+        match redrive_frame(&coord, rec) {
+            Some(again) if responses_match(recorded, &again) => report.matched += 1,
+            _ => report.diverged += 1,
+        }
+    }
+    coord.shutdown();
+    Ok(report)
+}
+
+/// Re-drive one recorded frame through the coordinator; `None` when
+/// any image fails (counts as divergence at the caller).
+fn redrive_frame(coord: &Coordinator, rec: &TraceRecord) -> Option<ResponseFrame> {
+    let req = &rec.req;
+    let mut rxs = Vec::with_capacity(req.n);
+    for img in req.images.chunks_exact(req.elems) {
+        let (tx, rx) = mpsc::channel();
+        coord.submit(img.to_vec(), req.method, req.target, tx).ok()?;
+        rxs.push(rx);
+    }
+    let mut preds = Vec::with_capacity(req.n);
+    let mut device_cycles = Vec::with_capacity(req.n);
+    let mut logits = Vec::new();
+    let mut relevance = Vec::with_capacity(req.images.len());
+    let mut out_n = 0usize;
+    for rx in rxs {
+        let resp = rx.recv().ok()?.ok()?;
+        preds.push(resp.pred);
+        device_cycles.push(resp.device_cycles);
+        out_n = resp.logits.len();
+        logits.extend_from_slice(&resp.logits);
+        relevance.extend_from_slice(&resp.relevance);
+    }
+    Some(ResponseFrame {
+        id: req.id,
+        n: req.n,
+        elems: req.elems,
+        out_n,
+        preds,
+        device_cycles,
+        with_crc: req.with_crc,
+        logits,
+        relevance,
+    })
+}
+
+/// Replay `path` against a coordinator rebuilt from the trace's own
+/// meta record (board, model, weights spec, batching knobs).
+pub fn replay_in_process(path: &str, timing: Timing) -> anyhow::Result<ReplayReport> {
+    let meta = TraceReader::open(path)?.meta.clone();
+    let sim = sim_from_meta(&meta)?;
+    replay_with_sim(path, sim, timing)
+}
+
+/// Replay `path` against a live server at `addr`, resending the exact
+/// recorded request frames over one connection (preserving arrival
+/// order) with `trace_seq` set to the original frame id so the far
+/// end's own trace can be joined back to this one.
+pub fn replay_live(path: &str, addr: &str, timing: Timing) -> anyhow::Result<ReplayReport> {
+    let mut reader = TraceReader::open(path)?;
+    let mut stream = TcpStream::connect(addr)?;
+    stream.set_nodelay(true).ok();
+    let mut report = ReplayReport::default();
+    let mut prev_accept = 0u64;
+    let mut seq = 0u64;
+    while let Some(rec) = reader.next()? {
+        report.frames += 1;
+        pace(timing, &mut prev_accept, &rec);
+        let Some(recorded) = recorded_response(&rec) else {
+            report.skipped += 1;
+            continue;
+        };
+        seq += 1;
+        let mut req = rec.req.clone();
+        req.trace_seq = Some(rec.req.id);
+        req.id = seq;
+        proto::write_frame(&mut stream, &Frame::Request(req))?;
+        let reply = proto::read_frame(&mut stream)
+            .map_err(|e| anyhow::anyhow!("live reply: {e}"))?
+            .ok_or_else(|| anyhow::anyhow!("server closed the connection mid-replay"))?;
+        match reply {
+            Frame::Response(again) if responses_match(recorded, &again) => report.matched += 1,
+            _ => report.diverged += 1,
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Span;
+    use crate::obs::trace::TraceWriter;
+    use crate::serve::proto::{ErrCode, ErrorFrame, RequestFrame};
+
+    #[test]
+    fn timing_parses() {
+        assert_eq!(Timing::parse("recorded"), Some(Timing::Recorded));
+        assert_eq!(Timing::parse("asap"), Some(Timing::Asap));
+        assert_eq!(Timing::parse("warp"), None);
+    }
+
+    #[test]
+    fn response_match_is_bitwise_and_ignores_cycles() {
+        let a = ResponseFrame {
+            id: 1,
+            n: 1,
+            elems: 2,
+            out_n: 1,
+            preds: vec![0],
+            device_cycles: vec![10],
+            with_crc: false,
+            logits: vec![0.5],
+            relevance: vec![1.0, -0.0],
+        };
+        let mut b = a.clone();
+        b.device_cycles = vec![999]; // batch-composition-dependent
+        assert!(responses_match(&a, &b));
+        b.relevance[1] = 0.0; // -0.0 vs 0.0: equal as floats, not as bits
+        assert!(!responses_match(&a, &b));
+    }
+
+    #[test]
+    fn error_outcome_records_are_skipped_not_compared() {
+        let rec = TraceRecord {
+            span: {
+                let mut s = Span::start(1, 1, 1, Method::Guided);
+                s.outcome = Outcome::Err(ErrCode::Busy);
+                s
+            },
+            req: RequestFrame {
+                id: 1,
+                method: Method::Guided,
+                target: None,
+                n: 1,
+                elems: 2,
+                deadline_ms: None,
+                with_crc: false,
+                trace_seq: None,
+                images: vec![0.0, 1.0],
+            },
+            reply: Frame::Error(ErrorFrame { id: 1, code: ErrCode::Busy, msg: "shed".into() }),
+        };
+        assert!(recorded_response(&rec).is_none());
+    }
+
+    #[test]
+    fn in_process_replay_refuses_custom_configs() {
+        let path =
+            std::env::temp_dir().join(format!("attrax_replay_custom_{}.trace", std::process::id()));
+        let meta = TraceMeta {
+            board: "pynq-z2".into(),
+            model: "table3".into(),
+            weights: "synthetic:1".into(),
+            config: "custom".into(),
+            elems: 4,
+            out_n: 2,
+            workers: 1,
+            max_batch: 1,
+            max_wait_ms: 0,
+        };
+        let w = TraceWriter::create(&path, &meta).unwrap();
+        w.finish().unwrap();
+        let err = replay_in_process(path.to_str().unwrap(), Timing::Asap).unwrap_err();
+        assert!(err.to_string().contains("custom hardware config"), "{err}");
+        std::fs::remove_file(&path).ok();
+    }
+}

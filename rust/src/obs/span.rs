@@ -1,0 +1,294 @@
+//! Per-request span ledger: fixed-size, zero-alloc-when-disabled.
+//!
+//! A [`Span`] is a stack-allocated record of one request's trip
+//! through the serving stack — nine stage timestamps plus the
+//! batch/device/retry facts the coordinator stamps into its
+//! [`crate::coordinator::Response`]. Timestamps are nanoseconds since
+//! a process-local epoch ([`now_ns`]), never wall clock, so traces
+//! carry durations and ordering but no real-world time. When no
+//! [`Recorder`] is configured the server still stamps the span (an
+//! array store per stage — no heap) and drops it on the floor;
+//! `tests/alloc_regression.rs` pins that the disabled path allocates
+//! nothing per request.
+
+use std::sync::OnceLock;
+use std::time::Instant;
+
+use crate::attribution::Method;
+use crate::serve::proto::{ErrCode, Frame, RequestFrame};
+
+/// The per-request pipeline stages, in traversal order. Indexes into
+/// [`Span::stages`].
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+#[repr(usize)]
+pub enum Stage {
+    /// Frame preamble seen on the socket (per-frame, not per-conn).
+    Accept = 0,
+    /// Wire frame decoded into a typed request.
+    Decode = 1,
+    /// Admission checks passed (shape, deadline budget, fault sites).
+    Admit = 2,
+    /// All images of the frame accepted by the coordinator queue.
+    Enqueue = 3,
+    /// Worker closed the micro-batch containing the first image.
+    BatchForm = 4,
+    /// Batch handed to the chosen device (first attempt).
+    Dispatch = 5,
+    /// Device pass (including retries) finished.
+    DeviceComplete = 6,
+    /// Response frame encoded.
+    Encode = 7,
+    /// Response bytes flushed to the socket.
+    Flush = 8,
+}
+
+pub const N_STAGES: usize = 9;
+
+pub const ALL_STAGES: [Stage; N_STAGES] = [
+    Stage::Accept,
+    Stage::Decode,
+    Stage::Admit,
+    Stage::Enqueue,
+    Stage::BatchForm,
+    Stage::Dispatch,
+    Stage::DeviceComplete,
+    Stage::Encode,
+    Stage::Flush,
+];
+
+impl Stage {
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Accept => "accept",
+            Stage::Decode => "decode",
+            Stage::Admit => "admit",
+            Stage::Enqueue => "enqueue",
+            Stage::BatchForm => "batch_form",
+            Stage::Dispatch => "dispatch",
+            Stage::DeviceComplete => "device_complete",
+            Stage::Encode => "encode",
+            Stage::Flush => "flush",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Stage> {
+        ALL_STAGES.iter().copied().find(|st| st.name() == s)
+    }
+}
+
+/// How the request ended, mirroring the wire outcome.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum Outcome {
+    Ok,
+    Err(ErrCode),
+}
+
+impl Outcome {
+    pub fn name(self) -> &'static str {
+        match self {
+            Outcome::Ok => "ok",
+            Outcome::Err(c) => c.name(),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Outcome> {
+        if s == "ok" {
+            Some(Outcome::Ok)
+        } else {
+            ErrCode::parse(s).map(Outcome::Err)
+        }
+    }
+}
+
+static EPOCH: OnceLock<Instant> = OnceLock::new();
+
+/// The process-local trace epoch. First call pins it; the server pins
+/// it at startup so request stamps are small positive offsets.
+pub fn epoch() -> Instant {
+    *EPOCH.get_or_init(Instant::now)
+}
+
+/// Nanoseconds since the trace epoch (never 0 — 0 means "unreached").
+pub fn now_ns() -> u64 {
+    ns_of(Instant::now())
+}
+
+/// Convert an `Instant` captured elsewhere (e.g. the coordinator's
+/// enqueue stamp) to epoch nanoseconds. Saturates to 1 for instants
+/// that predate the epoch.
+pub fn ns_of(t: Instant) -> u64 {
+    t.duration_since(epoch()).as_nanos().max(1) as u64
+}
+
+/// One request's ledger. Fixed-size (no heap); `stages[i] == 0` means
+/// the request never reached that stage.
+#[derive(Clone, Copy, Debug)]
+pub struct Span {
+    /// Wire frame id (client-chosen).
+    pub frame_id: u64,
+    /// Server-assigned connection sequence number.
+    pub conn_id: u64,
+    /// Images in the frame.
+    pub n: u32,
+    pub method: Method,
+    /// ns-since-epoch per [`Stage`]; 0 = unreached.
+    pub stages: [u64; N_STAGES],
+    /// Coordinator micro-batch id of the first image (0 = none).
+    pub batch_id: u64,
+    /// Size of that micro-batch (0 = never batched).
+    pub batch_size: u32,
+    /// Fleet index of the device that answered (u32::MAX = none).
+    pub device_index: u32,
+    /// Device execution attempts (1 = first try succeeded).
+    pub attempts: u32,
+    /// A breaker recorded a trip while serving this request.
+    pub breaker_tripped: bool,
+    /// Modeled device cycles (per-image share × n).
+    pub device_cycles: u64,
+    /// Effective deadline budget in ms (0 = none).
+    pub deadline_ms: u64,
+    /// `trace_seq` header field, when the client sent one (replay
+    /// tags resent frames with the original frame id).
+    pub trace_seq: Option<u64>,
+    pub outcome: Outcome,
+}
+
+impl Span {
+    pub fn start(frame_id: u64, conn_id: u64, n: u32, method: Method) -> Span {
+        let mut s = Span {
+            frame_id,
+            conn_id,
+            n,
+            method,
+            stages: [0; N_STAGES],
+            batch_id: 0,
+            batch_size: 0,
+            device_index: u32::MAX,
+            attempts: 0,
+            breaker_tripped: false,
+            device_cycles: 0,
+            deadline_ms: 0,
+            trace_seq: None,
+            outcome: Outcome::Ok,
+        };
+        s.stamp_now(Stage::Accept);
+        s
+    }
+
+    /// Stamp `stage` with the current epoch-relative time.
+    pub fn stamp_now(&mut self, stage: Stage) {
+        self.stages[stage as usize] = now_ns();
+    }
+
+    /// Stamp `stage` with a timestamp captured elsewhere (0 ignored).
+    pub fn stamp(&mut self, stage: Stage, ns: u64) {
+        if ns != 0 {
+            self.stages[stage as usize] = ns;
+        }
+    }
+
+    pub fn get(&self, stage: Stage) -> Option<u64> {
+        match self.stages[stage as usize] {
+            0 => None,
+            t => Some(t),
+        }
+    }
+
+    /// Duration in ns from the latest stamped stage before `to` up to
+    /// `to` itself; `None` if `to` (or every prior stage) is unstamped.
+    pub fn segment_ns(&self, to: Stage) -> Option<u64> {
+        let i = to as usize;
+        let end = self.stages[i];
+        if i == 0 || end == 0 {
+            return None;
+        }
+        let start = self.stages[..i].iter().rev().copied().find(|&t| t != 0)?;
+        Some(end.saturating_sub(start))
+    }
+
+    /// Total accept→last-stamped-stage duration in ns.
+    pub fn total_ns(&self) -> u64 {
+        let first = self.stages.iter().copied().find(|&t| t != 0).unwrap_or(0);
+        let last = self.stages.iter().rev().copied().find(|&t| t != 0).unwrap_or(0);
+        last.saturating_sub(first)
+    }
+}
+
+/// Sink for completed spans. The server calls `record` exactly once
+/// per answered request frame (success *and* typed-error outcomes),
+/// passing the decoded request and the reply frame that went on the
+/// wire, so a recorder can persist the full exchange. Implementations
+/// must be cheap and must never panic — they run on connection
+/// threads.
+pub trait Recorder: Send + Sync {
+    fn record(&self, span: &Span, req: &RequestFrame, reply: &Frame);
+
+    /// Flush buffered records (called at server drain).
+    fn flush(&self) {}
+}
+
+/// Recorder that counts but retains nothing — test aid.
+#[derive(Default, Debug)]
+pub struct CountingRecorder {
+    pub seen: std::sync::atomic::AtomicU64,
+}
+
+impl Recorder for CountingRecorder {
+    fn record(&self, _span: &Span, _req: &RequestFrame, _reply: &Frame) {
+        self.seen.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_names_roundtrip_and_order() {
+        for (i, st) in ALL_STAGES.iter().enumerate() {
+            assert_eq!(*st as usize, i);
+            assert_eq!(Stage::parse(st.name()), Some(*st));
+        }
+        assert_eq!(Stage::parse("nope"), None);
+    }
+
+    #[test]
+    fn outcome_names_roundtrip() {
+        for o in [
+            Outcome::Ok,
+            Outcome::Err(ErrCode::Busy),
+            Outcome::Err(ErrCode::Closed),
+            Outcome::Err(ErrCode::BadRequest),
+            Outcome::Err(ErrCode::DeadlineExceeded),
+            Outcome::Err(ErrCode::Integrity),
+        ] {
+            assert_eq!(Outcome::parse(o.name()), Some(o));
+        }
+        assert_eq!(Outcome::parse("sorcery"), None);
+    }
+
+    #[test]
+    fn segments_and_total() {
+        let mut s = Span::start(1, 1, 1, Method::Guided);
+        s.stages = [0; N_STAGES];
+        s.stamp(Stage::Accept, 100);
+        s.stamp(Stage::Decode, 150);
+        s.stamp(Stage::Admit, 0); // ignored: 0 means unreached
+        s.stamp(Stage::Enqueue, 300);
+        assert_eq!(s.segment_ns(Stage::Decode), Some(50));
+        // admit unstamped -> segment skips back to decode
+        assert_eq!(s.segment_ns(Stage::Admit), None);
+        assert_eq!(s.segment_ns(Stage::Enqueue), Some(150));
+        assert_eq!(s.total_ns(), 200);
+        assert_eq!(s.get(Stage::Admit), None);
+        assert_eq!(s.get(Stage::Accept), Some(100));
+    }
+
+    #[test]
+    fn now_is_monotonic_nonzero() {
+        let a = now_ns();
+        let b = now_ns();
+        assert!(a >= 1);
+        assert!(b >= a);
+    }
+}

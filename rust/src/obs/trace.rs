@@ -1,0 +1,602 @@
+//! The `attrax-trace/v1` artifact: an append-only stream of records,
+//! each framed like the wire protocol (fixed preamble + compact JSON
+//! header + raw payload) and CRC-32-protected, so a truncated or
+//! bit-flipped trace surfaces as a typed [`TraceError`] instead of a
+//! silently wrong replay.
+//!
+//! ```text
+//! offset  size  field
+//! 0       4     magic "XTR1" (LE)
+//! 4       4     header_len H (LE u32, 1 ..= 64 KiB)
+//! 8       4     payload_len P (LE u32, 0 ..= 128 MiB)
+//! 12      H     header: {"k":"meta"|"span", "crc":<crc32(payload)>, ...}
+//! 12+H    P     payload (span records: encoded request frame bytes
+//!               followed by encoded reply frame bytes, split at the
+//!               header's "req_len")
+//! ```
+//!
+//! The first record is always `k:"meta"` (capture environment: board,
+//! model, weights spec, coordinator knobs) — everything replay needs
+//! to rebuild a bit-identical in-process serving stack. Every
+//! subsequent record is one completed request span with the exact
+//! wire frames that crossed the socket. Writing is streaming (one
+//! `BufWriter`, bounded memory); reading is incremental
+//! ([`TraceReader::next`]).
+
+use std::fs::File;
+use std::io::{BufReader, BufWriter, Read, Write};
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::attribution::Method;
+use crate::obs::span::{Outcome, Recorder, Span, N_STAGES};
+use crate::serve::proto::{self, Frame, RequestFrame};
+use crate::util::crc::crc32;
+use crate::util::json::{arr, num, obj, s, Json};
+
+pub const TRACE_SCHEMA: &str = "attrax-trace/v1";
+/// Record preamble magic: "XTR1", little-endian.
+pub const TRACE_MAGIC: u32 = u32::from_le_bytes(*b"XTR1");
+pub const TRACE_PREAMBLE_LEN: usize = 12;
+pub const MAX_TRACE_HEADER_BYTES: usize = 64 * 1024;
+/// A span payload carries two full wire frames, so allow 2× the wire
+/// payload cap.
+pub const MAX_TRACE_PAYLOAD_BYTES: usize = 128 * 1024 * 1024;
+
+/// Typed trace read failures.
+#[derive(Debug)]
+pub enum TraceError {
+    /// Record preamble or body ended mid-read.
+    Truncated,
+    BadMagic(u32),
+    TooLarge { header_len: usize, payload_len: usize },
+    /// Header/payload structurally invalid.
+    Malformed(String),
+    /// CRC mismatch: the trace bytes were corrupted.
+    Integrity { expected: u32, got: u32 },
+    Io(std::io::Error),
+}
+
+impl std::fmt::Display for TraceError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            TraceError::Truncated => write!(f, "trace truncated mid-record"),
+            TraceError::BadMagic(m) => write!(f, "bad trace record magic {m:#010x}"),
+            TraceError::TooLarge { header_len, payload_len } => {
+                write!(f, "trace record too large (header {header_len} B, payload {payload_len} B)")
+            }
+            TraceError::Malformed(m) => write!(f, "malformed trace record: {m}"),
+            TraceError::Integrity { expected, got } => {
+                write!(f, "trace integrity failure: crc expected {expected:#010x} got {got:#010x}")
+            }
+            TraceError::Io(e) => write!(f, "trace i/o error: {e}"),
+        }
+    }
+}
+
+impl std::error::Error for TraceError {}
+
+impl From<std::io::Error> for TraceError {
+    fn from(e: std::io::Error) -> TraceError {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            TraceError::Truncated
+        } else {
+            TraceError::Io(e)
+        }
+    }
+}
+
+fn malformed<S: Into<String>>(m: S) -> TraceError {
+    TraceError::Malformed(m.into())
+}
+
+/// Capture environment, recorded once as the first record. `weights`
+/// is `"synthetic:<seed>"` or `"artifacts"`; `config` is `"default"`
+/// (board-derived `choose_config`) or `"custom"` (tuned/explicit —
+/// in-process replay refuses it, live replay still works).
+#[derive(Clone, Debug, PartialEq)]
+pub struct TraceMeta {
+    pub board: String,
+    pub model: String,
+    pub weights: String,
+    pub config: String,
+    pub elems: usize,
+    pub out_n: usize,
+    pub workers: usize,
+    pub max_batch: usize,
+    pub max_wait_ms: u64,
+}
+
+impl TraceMeta {
+    fn to_json(&self) -> Json {
+        obj(vec![
+            ("k", s("meta")),
+            ("schema", s(TRACE_SCHEMA)),
+            ("board", s(&self.board)),
+            ("model", s(&self.model)),
+            ("weights", s(&self.weights)),
+            ("config", s(&self.config)),
+            ("elems", num(self.elems as f64)),
+            ("out_n", num(self.out_n as f64)),
+            ("workers", num(self.workers as f64)),
+            ("max_batch", num(self.max_batch as f64)),
+            ("max_wait_ms", num(self.max_wait_ms as f64)),
+            ("crc", num(0.0)), // meta payload is empty; crc32("") == 0
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<TraceMeta, TraceError> {
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        if schema != TRACE_SCHEMA {
+            return Err(malformed(format!("unsupported trace schema {schema:?}")));
+        }
+        let text = |k: &str| -> Result<String, TraceError> {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| malformed(format!("meta missing {k:?}")))
+        };
+        Ok(TraceMeta {
+            board: text("board")?,
+            model: text("model")?,
+            weights: text("weights")?,
+            config: text("config")?,
+            elems: get_u64(j, "elems")? as usize,
+            out_n: get_u64(j, "out_n")? as usize,
+            workers: get_u64(j, "workers")? as usize,
+            max_batch: get_u64(j, "max_batch")? as usize,
+            max_wait_ms: get_u64(j, "max_wait_ms")?,
+        })
+    }
+}
+
+fn get_u64(j: &Json, key: &str) -> Result<u64, TraceError> {
+    j.get(key)
+        .and_then(Json::as_f64)
+        .filter(|v| *v >= 0.0 && v.fract() == 0.0)
+        .map(|v| v as u64)
+        .ok_or_else(|| malformed(format!("missing/invalid field {key:?}")))
+}
+
+/// One replayable exchange: the span plus the exact frames that
+/// crossed the wire.
+#[derive(Clone, Debug)]
+pub struct TraceRecord {
+    pub span: Span,
+    pub req: RequestFrame,
+    pub reply: Frame,
+}
+
+fn span_header(span: &Span, req_len: usize, payload_crc: u32) -> Json {
+    let stages = span.stages.iter().map(|&t| num(t as f64)).collect::<Vec<_>>();
+    let mut pairs = vec![
+        ("k", s("span")),
+        ("crc", num(payload_crc as f64)),
+        ("req_len", num(req_len as f64)),
+        ("frame_id", num(span.frame_id as f64)),
+        ("conn_id", num(span.conn_id as f64)),
+        ("n", num(span.n as f64)),
+        ("method", s(span.method.name())),
+        ("stages", arr(stages)),
+        ("batch_id", num(span.batch_id as f64)),
+        ("batch_size", num(span.batch_size as f64)),
+        ("device", num(span.device_index as f64)),
+        ("attempts", num(span.attempts as f64)),
+        ("breaker", Json::Bool(span.breaker_tripped)),
+        ("cycles", num(span.device_cycles as f64)),
+        ("deadline_ms", num(span.deadline_ms as f64)),
+        ("outcome", s(span.outcome.name())),
+    ];
+    if let Some(ts) = span.trace_seq {
+        pairs.push(("trace_seq", num(ts as f64)));
+    }
+    obj(pairs)
+}
+
+fn span_from_header(j: &Json) -> Result<Span, TraceError> {
+    let method_name =
+        j.get("method").and_then(Json::as_str).ok_or_else(|| malformed("span missing method"))?;
+    let method =
+        Method::parse(method_name).ok_or_else(|| malformed(format!("bad method {method_name:?}")))?;
+    let outcome_name =
+        j.get("outcome").and_then(Json::as_str).ok_or_else(|| malformed("span missing outcome"))?;
+    let outcome = Outcome::parse(outcome_name)
+        .ok_or_else(|| malformed(format!("bad outcome {outcome_name:?}")))?;
+    let stages_j =
+        j.get("stages").and_then(Json::as_arr).ok_or_else(|| malformed("span missing stages"))?;
+    if stages_j.len() != N_STAGES {
+        return Err(malformed(format!("span has {} stages, expected {N_STAGES}", stages_j.len())));
+    }
+    let mut stages = [0u64; N_STAGES];
+    for (i, v) in stages_j.iter().enumerate() {
+        stages[i] = v
+            .as_f64()
+            .filter(|t| *t >= 0.0 && t.fract() == 0.0)
+            .ok_or_else(|| malformed("bad stage timestamp"))? as u64;
+    }
+    let trace_seq = match j.get("trace_seq") {
+        None | Some(Json::Null) => None,
+        Some(_) => Some(get_u64(j, "trace_seq")?),
+    };
+    Ok(Span {
+        frame_id: get_u64(j, "frame_id")?,
+        conn_id: get_u64(j, "conn_id")?,
+        n: get_u64(j, "n")? as u32,
+        method,
+        stages,
+        batch_id: get_u64(j, "batch_id")?,
+        batch_size: get_u64(j, "batch_size")? as u32,
+        device_index: get_u64(j, "device")? as u32,
+        attempts: get_u64(j, "attempts")? as u32,
+        breaker_tripped: j.get("breaker").and_then(Json::as_bool).unwrap_or(false),
+        device_cycles: get_u64(j, "cycles")?,
+        deadline_ms: get_u64(j, "deadline_ms")?,
+        trace_seq,
+        outcome,
+    })
+}
+
+fn write_record<W: Write>(w: &mut W, header: &Json, payload: &[u8]) -> std::io::Result<()> {
+    let htext = header.to_string();
+    w.write_all(&TRACE_MAGIC.to_le_bytes())?;
+    w.write_all(&(htext.len() as u32).to_le_bytes())?;
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(htext.as_bytes())?;
+    w.write_all(payload)
+}
+
+/// Streaming trace writer; implements [`Recorder`] so it plugs into
+/// `ServerConfig::recorder` directly. Thread-safe (connection threads
+/// record concurrently); a failed write poisons nothing — the error
+/// is remembered and surfaced by [`TraceWriter::finish`].
+pub struct TraceWriter {
+    inner: Mutex<BufWriter<File>>,
+    io_errors: AtomicU64,
+    records: AtomicU64,
+}
+
+impl TraceWriter {
+    /// Create `path` and write the meta record.
+    pub fn create<P: AsRef<Path>>(path: P, meta: &TraceMeta) -> std::io::Result<TraceWriter> {
+        let mut w = BufWriter::new(File::create(path)?);
+        write_record(&mut w, &meta.to_json(), &[])?;
+        Ok(TraceWriter {
+            inner: Mutex::new(w),
+            io_errors: AtomicU64::new(0),
+            records: AtomicU64::new(0),
+        })
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records.load(Ordering::Relaxed)
+    }
+
+    /// Flush and report: `Ok(records_written)` or the first I/O
+    /// failure class (count of failed writes).
+    pub fn finish(&self) -> Result<u64, u64> {
+        self.flush();
+        match self.io_errors.load(Ordering::Relaxed) {
+            0 => Ok(self.records()),
+            n => Err(n),
+        }
+    }
+}
+
+impl Recorder for TraceWriter {
+    fn record(&self, span: &Span, req: &RequestFrame, reply: &Frame) {
+        // Re-encode both frames; the encoder is canonical, so these
+        // are the bytes that crossed the wire.
+        let req_bytes = match proto::encode(&Frame::Request(req.clone())) {
+            Ok(b) => b,
+            Err(_) => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let reply_bytes = match proto::encode(reply) {
+            Ok(b) => b,
+            Err(_) => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let mut payload = req_bytes;
+        let req_len = payload.len();
+        payload.extend_from_slice(&reply_bytes);
+        let header = span_header(span, req_len, crc32(&payload));
+        let mut w = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        match write_record(&mut *w, &header, &payload) {
+            Ok(()) => {
+                self.records.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(_) => {
+                self.io_errors.fetch_add(1, Ordering::Relaxed);
+            }
+        }
+    }
+
+    fn flush(&self) {
+        let mut w = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        if w.flush().is_err() {
+            self.io_errors.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+impl std::fmt::Debug for TraceWriter {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "TraceWriter {{ records: {} }}", self.records())
+    }
+}
+
+/// Incremental trace reader. The constructor consumes and validates
+/// the meta record; [`TraceReader::next`] yields span records until
+/// clean EOF.
+pub struct TraceReader {
+    r: BufReader<File>,
+    pub meta: TraceMeta,
+}
+
+impl TraceReader {
+    pub fn open<P: AsRef<Path>>(path: P) -> Result<TraceReader, TraceError> {
+        let mut r = BufReader::new(File::open(path).map_err(TraceError::Io)?);
+        let (header, payload) = match read_raw_record(&mut r)? {
+            Some(rec) => rec,
+            None => return Err(TraceError::Truncated),
+        };
+        if header.get("k").and_then(Json::as_str) != Some("meta") {
+            return Err(malformed("first trace record is not meta"));
+        }
+        if !payload.is_empty() {
+            return Err(malformed("meta record carries a payload"));
+        }
+        let meta = TraceMeta::from_json(&header)?;
+        Ok(TraceReader { r, meta })
+    }
+
+    /// Next span record; `Ok(None)` on clean EOF.
+    #[allow(clippy::should_implement_trait)]
+    pub fn next(&mut self) -> Result<Option<TraceRecord>, TraceError> {
+        let (header, payload) = match read_raw_record(&mut self.r)? {
+            Some(rec) => rec,
+            None => return Ok(None),
+        };
+        if header.get("k").and_then(Json::as_str) != Some("span") {
+            return Err(malformed("expected a span record"));
+        }
+        let span = span_from_header(&header)?;
+        let req_len = get_u64(&header, "req_len")? as usize;
+        if req_len > payload.len() {
+            return Err(malformed("req_len exceeds payload"));
+        }
+        let req = match decode_one_frame(&payload[..req_len])? {
+            Frame::Request(q) => q,
+            other => return Err(malformed(format!("payload request is {}", frame_kind(&other)))),
+        };
+        let reply = decode_one_frame(&payload[req_len..])?;
+        Ok(Some(TraceRecord { span, req, reply }))
+    }
+
+    /// Drain the remaining records into a vec (plus the already-read
+    /// meta). Convenience for replay/doctor.
+    pub fn read_all(mut self) -> Result<(TraceMeta, Vec<TraceRecord>), TraceError> {
+        let mut out = Vec::new();
+        while let Some(rec) = self.next()? {
+            out.push(rec);
+        }
+        Ok((self.meta, out))
+    }
+}
+
+fn frame_kind(f: &Frame) -> &'static str {
+    match f {
+        Frame::Request(_) => "a request",
+        Frame::Response(_) => "a response",
+        Frame::Error(_) => "an error",
+    }
+}
+
+fn decode_one_frame(bytes: &[u8]) -> Result<Frame, TraceError> {
+    let mut cur = std::io::Cursor::new(bytes);
+    let f = proto::read_frame(&mut cur)
+        .map_err(|e| malformed(format!("embedded wire frame: {e}")))?
+        .ok_or_else(|| malformed("empty embedded wire frame"))?;
+    if (cur.position() as usize) != bytes.len() {
+        return Err(malformed("trailing bytes after embedded wire frame"));
+    }
+    Ok(f)
+}
+
+/// Read one record's (header, payload); `Ok(None)` on clean EOF at a
+/// record boundary. Verifies the header's `crc` against the payload.
+fn read_raw_record<R: Read>(r: &mut R) -> Result<Option<(Json, Vec<u8>)>, TraceError> {
+    let mut pre = [0u8; TRACE_PREAMBLE_LEN];
+    let mut have = 0usize;
+    while have < TRACE_PREAMBLE_LEN {
+        match r.read(&mut pre[have..]) {
+            Ok(0) if have == 0 => return Ok(None),
+            Ok(0) => return Err(TraceError::Truncated),
+            Ok(k) => have += k,
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e.into()),
+        }
+    }
+    let magic = u32::from_le_bytes(pre[0..4].try_into().unwrap());
+    if magic != TRACE_MAGIC {
+        return Err(TraceError::BadMagic(magic));
+    }
+    let header_len = u32::from_le_bytes(pre[4..8].try_into().unwrap()) as usize;
+    let payload_len = u32::from_le_bytes(pre[8..12].try_into().unwrap()) as usize;
+    if header_len == 0 || header_len > MAX_TRACE_HEADER_BYTES || payload_len > MAX_TRACE_PAYLOAD_BYTES
+    {
+        return Err(TraceError::TooLarge { header_len, payload_len });
+    }
+    let mut header = vec![0u8; header_len];
+    r.read_exact(&mut header)?;
+    let mut payload = vec![0u8; payload_len];
+    r.read_exact(&mut payload)?;
+    let text = std::str::from_utf8(&header).map_err(|_| malformed("header is not utf-8"))?;
+    let j = Json::parse(text).map_err(|e| malformed(format!("header json: {e}")))?;
+    let expected = get_u64(&j, "crc")? as u32;
+    let got = crc32(&payload);
+    if expected != got {
+        return Err(TraceError::Integrity { expected, got });
+    }
+    Ok(Some((j, payload)))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::span::Stage;
+    use crate::serve::proto::{ErrCode, ErrorFrame, ResponseFrame};
+
+    fn meta() -> TraceMeta {
+        TraceMeta {
+            board: "pynq-z2".into(),
+            model: "table3".into(),
+            weights: "synthetic:42".into(),
+            config: "default".into(),
+            elems: 4,
+            out_n: 2,
+            workers: 2,
+            max_batch: 4,
+            max_wait_ms: 1,
+        }
+    }
+
+    fn sample(seq: u64) -> (Span, RequestFrame, Frame) {
+        let req = RequestFrame {
+            id: seq,
+            method: Method::Guided,
+            target: None,
+            n: 1,
+            elems: 4,
+            deadline_ms: Some(100),
+            with_crc: false,
+            trace_seq: None,
+            images: vec![0.5, -1.25, 2.0, 0.0],
+        };
+        let reply = Frame::Response(ResponseFrame {
+            id: seq,
+            n: 1,
+            elems: 4,
+            out_n: 2,
+            preds: vec![1],
+            device_cycles: vec![1234],
+            with_crc: false,
+            logits: vec![0.1, 0.9],
+            relevance: vec![1.0, 2.0, 3.0, 4.0],
+        });
+        let mut span = Span::start(seq, 7, 1, Method::Guided);
+        span.stamp(Stage::Decode, 1000 + seq);
+        span.stamp(Stage::Flush, 2000 + seq);
+        span.batch_id = 3;
+        span.batch_size = 2;
+        span.device_index = 0;
+        span.attempts = 1;
+        span.device_cycles = 1234;
+        span.deadline_ms = 100;
+        (span, req, reply)
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("attrax_trace_{}_{name}.trace", std::process::id()))
+    }
+
+    #[test]
+    fn roundtrip_spans_and_frames() {
+        let path = tmp("roundtrip");
+        let w = TraceWriter::create(&path, &meta()).unwrap();
+        let mut originals = Vec::new();
+        for seq in 0..3u64 {
+            let (mut span, req, reply) = sample(seq);
+            if seq == 2 {
+                span.trace_seq = Some(99);
+                span.outcome = Outcome::Err(ErrCode::Busy);
+            }
+            w.record(&span, &req, &reply);
+            originals.push((span, req, reply));
+        }
+        assert_eq!(w.finish(), Ok(3));
+
+        let (m, recs) = TraceReader::open(&path).unwrap().read_all().unwrap();
+        assert_eq!(m, meta());
+        assert_eq!(recs.len(), 3);
+        for (rec, (span, req, reply)) in recs.iter().zip(&originals) {
+            assert_eq!(rec.span.frame_id, span.frame_id);
+            assert_eq!(rec.span.stages, span.stages);
+            assert_eq!(rec.span.outcome, span.outcome);
+            assert_eq!(rec.span.trace_seq, span.trace_seq);
+            assert_eq!(rec.span.batch_size, span.batch_size);
+            assert_eq!(&rec.req, req);
+            assert_eq!(&rec.reply, reply);
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn error_replies_roundtrip() {
+        let path = tmp("err");
+        let w = TraceWriter::create(&path, &meta()).unwrap();
+        let (mut span, req, _) = sample(0);
+        span.outcome = Outcome::Err(ErrCode::DeadlineExceeded);
+        let reply = Frame::Error(ErrorFrame {
+            id: 0,
+            code: ErrCode::DeadlineExceeded,
+            msg: "budget elapsed".into(),
+        });
+        w.record(&span, &req, &reply);
+        assert_eq!(w.finish(), Ok(1));
+        let (_, recs) = TraceReader::open(&path).unwrap().read_all().unwrap();
+        assert_eq!(recs.len(), 1);
+        assert_eq!(recs[0].reply, reply);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn corruption_is_typed() {
+        let path = tmp("corrupt");
+        let w = TraceWriter::create(&path, &meta()).unwrap();
+        let (span, req, reply) = sample(0);
+        w.record(&span, &req, &reply);
+        w.finish().unwrap();
+        let clean = std::fs::read(&path).unwrap();
+
+        // flip one payload byte near the end: CRC must catch it
+        let mut corrupt = clean.clone();
+        let last = corrupt.len() - 5;
+        corrupt[last] ^= 0x40;
+        std::fs::write(&path, &corrupt).unwrap();
+        let mut rd = TraceReader::open(&path).unwrap();
+        assert!(matches!(rd.next(), Err(TraceError::Integrity { .. })));
+
+        // truncate mid-record
+        std::fs::write(&path, &clean[..clean.len() - 3]).unwrap();
+        let mut rd = TraceReader::open(&path).unwrap();
+        assert!(matches!(rd.next(), Err(TraceError::Truncated)));
+
+        // stomp a record magic
+        let mut bad = clean.clone();
+        bad[0] = b'Q';
+        std::fs::write(&path, &bad).unwrap();
+        assert!(matches!(TraceReader::open(&path), Err(TraceError::BadMagic(_))));
+
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_meta_is_rejected() {
+        let path = tmp("nometa");
+        std::fs::write(&path, b"").unwrap();
+        assert!(matches!(TraceReader::open(&path), Err(TraceError::Truncated)));
+        std::fs::remove_file(&path).ok();
+    }
+}

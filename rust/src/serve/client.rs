@@ -189,6 +189,7 @@ impl Client {
             // to 0, which the server reads as "no deadline"
             deadline_ms: self.timeout.map(|t| (t.as_millis() as u64).max(1)),
             with_crc: self.with_crc,
+            trace_seq: None,
             images: flat,
         });
         let mut attempt = 0u32;

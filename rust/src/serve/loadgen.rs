@@ -37,6 +37,11 @@ pub struct Spec {
     /// Per-request deadline (0 = none).
     pub timeout_ms: u64,
     pub seed: u64,
+    /// Path to an `attrax-trace/v1` capture: replay its recorded
+    /// request frames (method/batch mix and payloads) as the workload
+    /// instead of synthesizing random images. `batch`/`elems`/`method`
+    /// are ignored in this mode — the frames carry their own.
+    pub trace: Option<String>,
 }
 
 impl Default for Spec {
@@ -52,6 +57,7 @@ impl Default for Spec {
             method: None,
             timeout_ms: 2000,
             seed: 42,
+            trace: None,
         }
     }
 }
@@ -89,6 +95,7 @@ impl Report {
             ("elems", num(spec.elems as f64)),
             ("rps_target", num(spec.rps)),
             ("timeout_ms", num(spec.timeout_ms as f64)),
+            ("trace", s(spec.trace.as_deref().unwrap_or(""))),
             ("sent", num(self.sent as f64)),
             ("ok", num(self.ok as f64)),
             ("shed", num(self.shed as f64)),
@@ -146,6 +153,32 @@ struct ConnStats {
     lat_ms: Vec<f64>,
 }
 
+/// One recorded request frame re-driven as workload.
+struct TraceFrame {
+    method: Method,
+    images: Vec<Vec<f32>>,
+}
+
+/// Load the replayable request frames out of a capture (every
+/// recorded request is real traffic, whatever its outcome was).
+fn load_workload(path: &str) -> anyhow::Result<Vec<TraceFrame>> {
+    let (_, records) = crate::obs::trace::TraceReader::open(path)?.read_all()?;
+    let mut out = Vec::with_capacity(records.len());
+    for rec in records {
+        let req = rec.req;
+        if req.elems == 0 {
+            continue;
+        }
+        let images: Vec<Vec<f32>> =
+            req.images.chunks_exact(req.elems).map(<[f32]>::to_vec).collect();
+        if !images.is_empty() {
+            out.push(TraceFrame { method: req.method, images });
+        }
+    }
+    anyhow::ensure!(!out.is_empty(), "trace {path} holds no replayable request frames");
+    Ok(out)
+}
+
 /// Run the workload. Errors only when no connection could be
 /// established at all; per-request failures are counted in the report.
 pub fn run(spec: &Spec) -> anyhow::Result<Report> {
@@ -153,6 +186,10 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
     let max_batch = super::proto::MAX_IMAGES_PER_FRAME;
     anyhow::ensure!(spec.batch > 0 && spec.batch <= max_batch, "batch must be 1..={max_batch}");
     anyhow::ensure!(spec.elems > 0, "elems must be positive");
+    let workload = match &spec.trace {
+        Some(path) => Some(load_workload(path)?),
+        None => None,
+    };
     let per_conn_rate = spec.rps / spec.conns as f64;
     // shared frame budget so the total sent honors `requests` exactly
     let budget = AtomicUsize::new(if spec.requests == 0 { usize::MAX } else { spec.requests });
@@ -161,8 +198,9 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
     let t0 = Instant::now();
     let results: Vec<anyhow::Result<ConnStats>> = std::thread::scope(|sc| {
         let budget = &budget;
+        let workload = workload.as_deref();
         let handles: Vec<_> = (0..spec.conns)
-            .map(|c| sc.spawn(move || conn_loop(spec, c, per_conn_rate, budget, stop_at)))
+            .map(|c| sc.spawn(move || conn_loop(spec, c, per_conn_rate, budget, stop_at, workload)))
             .collect();
         let mut out = Vec::with_capacity(handles.len());
         for h in handles {
@@ -239,6 +277,7 @@ fn conn_loop(
     rate: f64,
     budget: &AtomicUsize,
     stop_at: Instant,
+    workload: Option<&[TraceFrame]>,
 ) -> anyhow::Result<ConnStats> {
     let mut client = Client::connect(spec.addr.as_str())?;
     apply_timeout(&mut client, spec.timeout_ms)?;
@@ -255,13 +294,25 @@ fn conn_loop(
             let remaining = stop_at.saturating_duration_since(Instant::now());
             std::thread::sleep(gap.min(remaining));
         }
-        for img in &mut images {
-            for px in img.iter_mut() {
-                *px = rng.f32();
+        let (refs, method): (Vec<&[f32]>, Method) = match workload {
+            // recorded traffic: stride the capture round-robin across
+            // connections so the global method/batch mix is preserved
+            Some(frames) => {
+                let f = &frames[(cid + i * spec.conns.max(1)) % frames.len()];
+                (f.images.iter().map(|v| v.as_slice()).collect(), f.method)
             }
-        }
-        let refs: Vec<&[f32]> = images.iter().map(|v| v.as_slice()).collect();
-        let method = spec.method.unwrap_or(ALL_METHODS[i % ALL_METHODS.len()]);
+            None => {
+                for img in &mut images {
+                    for px in img.iter_mut() {
+                        *px = rng.f32();
+                    }
+                }
+                (
+                    images.iter().map(|v| v.as_slice()).collect(),
+                    spec.method.unwrap_or(ALL_METHODS[i % ALL_METHODS.len()]),
+                )
+            }
+        };
         i += 1;
         let t = Instant::now();
         st.sent += 1;

@@ -25,7 +25,16 @@
 //!   identical frame (same id — idempotent on the server side).
 //! * [`loadgen`] — multi-connection load generator (`attrax loadgen`)
 //!   emitting `BENCH_serve.json`: sustained RPS, p50/p95/p99 latency,
-//!   shed rate.
+//!   shed rate; `--trace <capture>` replays a recorded traffic mix
+//!   instead of synthetic images.
+//!
+//! Observability hooks ([`crate::obs`]): the server stamps a
+//! per-request span (stage timestamps + batch/device facts) and hands
+//! it to `ServerConfig::recorder` once per answered frame —
+//! `serve --trace` plugs in a [`crate::obs::trace::TraceWriter`] to
+//! capture the `attrax-trace/v1` artifact that `attrax replay` and
+//! `attrax doctor` consume. With no recorder the span costs a few
+//! stack stores and zero heap.
 //!
 //! Heatmap f32s cross the wire bit-exactly (raw LE payload, no text
 //! floats), so a networked client sees the same numerics as an

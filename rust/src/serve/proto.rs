@@ -123,6 +123,12 @@ pub struct RequestFrame {
     /// the response. Decode sets this iff the frame carried a `"crc"`
     /// field (and the check passed).
     pub with_crc: bool,
+    /// Trace-capture correlation tag: replay sets this to the
+    /// original frame id when re-sending a recorded request, so the
+    /// far end's own trace joins back to the source capture.
+    /// Version-negotiated like `crc` — encoded only when `Some`, and
+    /// old peers skip the unknown header field.
+    pub trace_seq: Option<u64>,
     /// `n * elems` f32s, image-major.
     pub images: Vec<f32>,
 }
@@ -353,6 +359,7 @@ fn decode_request(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
         Some(_) => Some(field_usize(j, "target")?),
     };
     let deadline_ms = opt_field_u64(j, "deadline_ms")?;
+    let trace_seq = opt_field_u64(j, "trace_seq")?;
     let want = n
         .checked_mul(elems)
         .and_then(|x| x.checked_mul(4))
@@ -362,7 +369,17 @@ fn decode_request(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
     }
     let with_crc = check_crc(j, payload)?;
     let images = le_to_f32s(payload);
-    Ok(Frame::Request(RequestFrame { id, method, target, n, elems, deadline_ms, with_crc, images }))
+    Ok(Frame::Request(RequestFrame {
+        id,
+        method,
+        target,
+        n,
+        elems,
+        deadline_ms,
+        with_crc,
+        trace_seq,
+        images,
+    }))
 }
 
 fn decode_response(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
@@ -476,6 +493,9 @@ fn encode_parts(f: &Frame) -> (String, Vec<u8>) {
             if let Some(d) = q.deadline_ms {
                 pairs.push(("deadline_ms", num(d as f64)));
             }
+            if let Some(ts) = q.trace_seq {
+                pairs.push(("trace_seq", num(ts as f64)));
+            }
             let payload = f32s_to_le(&q.images);
             if q.with_crc {
                 pairs.push(("crc", num(crc32(&payload) as f64)));
@@ -552,6 +572,7 @@ mod tests {
             elems: 3,
             deadline_ms: Some(1500),
             with_crc: false,
+            trace_seq: None,
             images: vec![0.0, -1.5, f32::MIN_POSITIVE, 1.0, 2.5e-3, 1e20],
         })
     }

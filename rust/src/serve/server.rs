@@ -30,10 +30,11 @@ use std::time::{Duration, Instant};
 use super::proto::{self, ErrCode, ErrorFrame, Frame, RequestFrame, ResponseFrame};
 use crate::coordinator::{metrics, Coordinator, FailKind};
 use crate::faults::{salt, FaultHooks, FaultStats};
+use crate::obs::span::{Outcome, Recorder, Span, Stage};
 
 /// TCP serving configuration (the coordinator has its own
 /// [`crate::coordinator::Config`] for queueing/batching).
-#[derive(Clone, Debug)]
+#[derive(Clone)]
 pub struct ServerConfig {
     /// Bounded connection pool: accepts beyond this are shed with
     /// `Busy` instead of queueing.
@@ -43,11 +44,27 @@ pub struct ServerConfig {
     /// Fault hooks for the admission injection site and wire-CRC
     /// detection accounting. `None` = production serving.
     pub faults: Option<FaultHooks>,
+    /// Per-request span sink (`serve --trace`). `None` = tracing off:
+    /// spans are still stamped on the stack but never recorded, and
+    /// the request path performs no extra heap allocation
+    /// (`tests/alloc_regression.rs`).
+    pub recorder: Option<Arc<dyn Recorder>>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_conns: 32, default_deadline_ms: 0, faults: None }
+        ServerConfig { max_conns: 32, default_deadline_ms: 0, faults: None, recorder: None }
+    }
+}
+
+impl std::fmt::Debug for ServerConfig {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("ServerConfig")
+            .field("max_conns", &self.max_conns)
+            .field("default_deadline_ms", &self.default_deadline_ms)
+            .field("faults", &self.faults)
+            .field("recorder", &self.recorder.as_ref().map(|_| "Some(<dyn Recorder>)"))
+            .finish()
     }
 }
 
@@ -76,6 +93,8 @@ struct Shared {
     /// Admission-site fault clock: one tick per served request frame,
     /// shared across connections so injection schedules are stable.
     admission_seq: AtomicU64,
+    /// Connection id source for span `conn_id` fields.
+    conn_seq: AtomicU64,
 }
 
 /// A running TCP server. Owns the coordinator; [`Server::shutdown`]
@@ -96,6 +115,8 @@ impl Server {
         cfg: ServerConfig,
     ) -> anyhow::Result<Server> {
         anyhow::ensure!(cfg.max_conns > 0, "need at least one connection slot");
+        // pin the span epoch now so request stamps are small offsets
+        crate::obs::span::epoch();
         let listener = TcpListener::bind(addr)?;
         // non-blocking accept so shutdown can stop the loop promptly
         listener.set_nonblocking(true)?;
@@ -107,6 +128,7 @@ impl Server {
             conns: AtomicUsize::new(0),
             handles: Mutex::new(Vec::new()),
             admission_seq: AtomicU64::new(0),
+            conn_seq: AtomicU64::new(0),
         });
         let stop = Arc::new(AtomicBool::new(false));
         let acceptor = {
@@ -143,6 +165,9 @@ impl Server {
         // the acceptor is gone, so no new connection threads can spawn;
         // join any spawned in the drain window
         join_all(&shared.handles);
+        if let Some(rec) = &shared.cfg.recorder {
+            rec.flush();
+        }
         let shared = Arc::try_unwrap(shared)
             .map_err(|_| anyhow::anyhow!("connection threads still alive at shutdown"))?;
         Ok(shared.coord.shutdown())
@@ -229,6 +254,7 @@ fn is_retry_kind(kind: std::io::ErrorKind) -> bool {
 /// connection notices drain without ever splitting a frame.
 fn handle_conn(shared: &Shared, mut stream: TcpStream) {
     let m = &shared.coord.metrics;
+    let conn_id = shared.conn_seq.fetch_add(1, Ordering::Relaxed) + 1;
     m.record_conn_open();
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(Some(IDLE_TICK));
@@ -275,6 +301,8 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) {
         }
         have = 0;
         started = None;
+        // span Accept stamp: the frame's preamble is fully on the host
+        let accept_ns = crate::obs::span::now_ns();
         let pb = match proto::parse_preamble(&pre) {
             Ok(p) => p,
             Err(e) => {
@@ -288,7 +316,7 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) {
         let _ = stream.set_read_timeout(Some(IDLE_TICK));
         match frame {
             Ok(Frame::Request(req)) => {
-                if !serve_request(shared, &mut stream, req) {
+                if !serve_request(shared, &mut stream, req, conn_id, accept_ns) {
                     break;
                 }
             }
@@ -330,17 +358,51 @@ fn handle_conn(shared: &Shared, mut stream: TcpStream) {
     m.record_conn_close();
 }
 
+/// Answer a request with a typed error, completing its span. Returns
+/// false when the connection should be dropped (write failure).
+fn answer_err(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    span: &mut Span,
+    req: &RequestFrame,
+    code: ErrCode,
+    msg: &str,
+) -> bool {
+    span.outcome = Outcome::Err(code);
+    let frame = Frame::Error(ErrorFrame { id: req.id, code, msg: msg.to_string() });
+    span.stamp_now(Stage::Encode);
+    let ok = proto::write_frame(stream, &frame).is_ok();
+    if ok {
+        span.stamp_now(Stage::Flush);
+    }
+    if let Some(rec) = &shared.cfg.recorder {
+        rec.record(span, req, &frame);
+    }
+    ok
+}
+
 /// Serve one request frame. Returns false when the connection should
 /// be dropped (write failure).
-fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> bool {
+fn serve_request(
+    shared: &Shared,
+    stream: &mut TcpStream,
+    req: RequestFrame,
+    conn_id: u64,
+    accept_ns: u64,
+) -> bool {
     let m = &shared.coord.metrics;
+    let mut span = Span::start(req.id, conn_id, req.n as u32, req.method);
+    span.stamp(Stage::Accept, accept_ns);
+    span.stamp_now(Stage::Decode);
+    span.trace_seq = req.trace_seq;
     let elems = shared.coord.sim().net.input.elems();
     if req.elems != elems {
         let msg = format!("image has {} elems, model wants {elems}", req.elems);
-        return write_err(stream, req.id, ErrCode::BadRequest, &msg).is_ok();
+        return answer_err(shared, stream, &mut span, &req, ErrCode::BadRequest, &msg);
     }
     let t0 = Instant::now();
     let deadline_ms = req.deadline_ms.unwrap_or(shared.cfg.default_deadline_ms);
+    span.deadline_ms = deadline_ms;
     let budget = if deadline_ms == 0 {
         NO_DEADLINE
     } else {
@@ -355,15 +417,17 @@ fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> 
         if p.admission.busy.decide(p.seed, salt::ADMISSION_BUSY, seq) {
             FaultStats::bump(&hooks.stats.injected_admission_busy);
             m.record_busy();
-            return write_err(stream, req.id, ErrCode::Busy, "injected: admission shed").is_ok();
+            let msg = "injected: admission shed";
+            return answer_err(shared, stream, &mut span, &req, ErrCode::Busy, msg);
         }
         if p.admission.deadline.decide(p.seed, salt::ADMISSION_DEADLINE, seq) {
             FaultStats::bump(&hooks.stats.injected_admission_deadline);
             m.record_deadline_exceeded();
             let msg = "injected: admission deadline";
-            return write_err(stream, req.id, ErrCode::DeadlineExceeded, msg).is_ok();
+            return answer_err(shared, stream, &mut span, &req, ErrCode::DeadlineExceeded, msg);
         }
     }
+    span.stamp_now(Stage::Admit);
 
     // admit every image of the frame; the coordinator micro-batches
     // same-method submissions back into one device pass
@@ -387,23 +451,39 @@ fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> 
                 if code == ErrCode::Busy {
                     m.record_busy();
                 }
-                return write_err(stream, req.id, code, msg).is_ok();
+                return answer_err(shared, stream, &mut span, &req, code, msg);
             }
         }
     }
+    span.stamp_now(Stage::Enqueue);
 
     let mut preds = Vec::with_capacity(req.n);
     let mut device_cycles = Vec::with_capacity(req.n);
     let mut relevance = Vec::with_capacity(req.n * elems);
     let mut logits = Vec::new();
     let mut out_n = 0usize;
-    for (rx, img) in rxs.iter().zip(req.images.chunks_exact(elems)) {
+    for (b, (rx, img)) in rxs.iter().zip(req.images.chunks_exact(elems)).enumerate() {
         let left = budget.saturating_sub(t0.elapsed());
         match rx.recv_timeout(left) {
             Ok(Ok(resp)) => {
                 // sampled PJRT shadow verification (no-op when the
                 // coordinator has no verifier)
                 shared.coord.shadow_check(img, &resp);
+                if b == 0 {
+                    // batch facts from the first image's micro-batch;
+                    // later images aggregate below
+                    span.stamp(Stage::BatchForm, resp.batch_form_ns);
+                    span.stamp(Stage::Dispatch, resp.dispatch_ns);
+                    span.batch_id = resp.batch_id;
+                    span.batch_size = resp.batch_size;
+                    span.device_index = resp.device_index;
+                }
+                // the frame's device work completes when its last
+                // image does; retries/trips are worst-case across it
+                span.stamp(Stage::DeviceComplete, resp.complete_ns.max(span.stages[Stage::DeviceComplete as usize]));
+                span.attempts = span.attempts.max(resp.attempts);
+                span.breaker_tripped |= resp.breaker_tripped;
+                span.device_cycles += resp.device_cycles;
                 preds.push(resp.pred);
                 device_cycles.push(resp.device_cycles);
                 out_n = resp.logits.len();
@@ -423,15 +503,15 @@ fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> 
                 if code == ErrCode::Busy {
                     m.record_busy();
                 }
-                return write_err(stream, req.id, code, msg).is_ok();
+                return answer_err(shared, stream, &mut span, &req, code, msg);
             }
             Err(mpsc::RecvTimeoutError::Timeout) => {
                 m.record_deadline_exceeded();
                 let msg = format!("deadline of {deadline_ms} ms exceeded");
-                return write_err(stream, req.id, ErrCode::DeadlineExceeded, &msg).is_ok();
+                return answer_err(shared, stream, &mut span, &req, ErrCode::DeadlineExceeded, &msg);
             }
             Err(mpsc::RecvTimeoutError::Disconnected) => {
-                return write_err(stream, req.id, ErrCode::Closed, "worker gone").is_ok();
+                return answer_err(shared, stream, &mut span, &req, ErrCode::Closed, "worker gone");
             }
         }
     }
@@ -448,7 +528,15 @@ fn serve_request(shared: &Shared, stream: &mut TcpStream, req: RequestFrame) -> 
         logits,
         relevance,
     });
-    proto::write_frame(stream, &frame).is_ok()
+    span.stamp_now(Stage::Encode);
+    let ok = proto::write_frame(stream, &frame).is_ok();
+    if ok {
+        span.stamp_now(Stage::Flush);
+    }
+    if let Some(rec) = &shared.cfg.recorder {
+        rec.record(&span, &req, &frame);
+    }
+    ok
 }
 
 #[cfg(test)]

@@ -335,13 +335,17 @@ impl Json {
     /// other finite numbers use Rust's shortest round-trip `f64`
     /// formatting, so `parse(write(v)) == v` for every finite value
     /// (property-tested below). Non-finite numbers are not
-    /// representable in JSON and must not be written.
+    /// representable in JSON and serialize as `null` — emitting the
+    /// bare tokens `NaN`/`inf` would make the whole document
+    /// unparseable, which is strictly worse than one absent value.
     pub fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
             Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
             Json::Num(n) => {
-                if n.fract() == 0.0 && n.abs() < 9e15 {
+                if !n.is_finite() {
+                    out.push_str("null");
+                } else if n.fract() == 0.0 && n.abs() < 9e15 {
                     out.push_str(&format!("{}", *n as i64));
                 } else {
                     out.push_str(&format!("{n}"));
@@ -434,6 +438,16 @@ mod tests {
         let v = Json::parse(src).unwrap();
         let out = v.to_string();
         assert_eq!(Json::parse(&out).unwrap(), v);
+    }
+
+    #[test]
+    fn nonfinite_numbers_serialize_as_null() {
+        for bad in [f64::NAN, f64::INFINITY, f64::NEG_INFINITY] {
+            let doc = obj(vec![("x", num(bad)), ("y", num(1.5))]).to_string();
+            assert_eq!(doc, r#"{"x":null,"y":1.5}"#);
+            // the emitted document must stay parseable
+            assert!(Json::parse(&doc).is_ok());
+        }
     }
 
     #[test]

@@ -1,6 +1,14 @@
-//! Leveled stderr logger with an env switch (`ATTRAX_LOG=debug|info|warn`).
+//! Leveled, target-tagged stderr logger with an env switch
+//! (`ATTRAX_LOG=debug|info|warn|error|off`).
+//!
+//! Library code logs through this — never raw `eprintln!` — so the
+//! serving stack is silent by default: the level starts at
+//! [`Level::Off`] and `init_from_env` keeps it off unless the env var
+//! asks for output. `emitted()` counts lines actually written, which
+//! is what lets a test pin "level=off emits nothing" without capturing
+//! stderr.
 
-use std::sync::atomic::{AtomicU8, Ordering};
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
 use std::time::Instant;
 
 #[derive(Clone, Copy, PartialEq, PartialOrd, Debug)]
@@ -10,17 +18,21 @@ pub enum Level {
     Info = 1,
     Warn = 2,
     Error = 3,
+    /// Sentinel threshold above every real level: nothing emits.
+    Off = 4,
 }
 
-static LEVEL: AtomicU8 = AtomicU8::new(1); // Info
+static LEVEL: AtomicU8 = AtomicU8::new(Level::Off as u8);
+static EMITTED: AtomicU64 = AtomicU64::new(0);
 static START: std::sync::OnceLock<Instant> = std::sync::OnceLock::new();
 
 pub fn init_from_env() {
     let lvl = match std::env::var("ATTRAX_LOG").as_deref() {
         Ok("debug") => Level::Debug,
+        Ok("info") => Level::Info,
         Ok("warn") => Level::Warn,
         Ok("error") => Level::Error,
-        _ => Level::Info,
+        _ => Level::Off,
     };
     set_level(lvl);
 }
@@ -34,8 +46,13 @@ pub fn enabled(l: Level) -> bool {
     l as u8 >= LEVEL.load(Ordering::Relaxed)
 }
 
+/// Total lines actually written to stderr since process start.
+pub fn emitted() -> u64 {
+    EMITTED.load(Ordering::Relaxed)
+}
+
 pub fn log(l: Level, module: &str, msg: std::fmt::Arguments) {
-    if !enabled(l) {
+    if l == Level::Off || !enabled(l) {
         return;
     }
     let t = START.get_or_init(Instant::now).elapsed().as_secs_f64();
@@ -44,7 +61,9 @@ pub fn log(l: Level, module: &str, msg: std::fmt::Arguments) {
         Level::Info => "INF",
         Level::Warn => "WRN",
         Level::Error => "ERR",
+        Level::Off => unreachable!(),
     };
+    EMITTED.fetch_add(1, Ordering::Relaxed);
     eprintln!("[{t:9.3}s {tag} {module}] {msg}");
 }
 
@@ -65,13 +84,28 @@ macro_rules! warn_ {
 mod tests {
     use super::*;
 
+    // One test (not several) so the global level is never mutated by
+    // two parallel test threads at once.
     #[test]
-    fn level_gating() {
+    fn level_gating_and_off_emits_nothing() {
+        // default: off — every level gated, nothing written
+        set_level(Level::Off);
+        let before = emitted();
+        for l in [Level::Debug, Level::Info, Level::Warn, Level::Error] {
+            assert!(!enabled(l), "{l:?} must be gated when level=off");
+            log(l, "test", format_args!("must not emit"));
+        }
+        assert_eq!(emitted(), before, "level=off must emit nothing");
+
         set_level(Level::Warn);
         assert!(!enabled(Level::Debug));
         assert!(!enabled(Level::Info));
         assert!(enabled(Level::Warn));
         assert!(enabled(Level::Error));
-        set_level(Level::Info); // restore default for other tests
+        let before = emitted();
+        log(Level::Error, "test", format_args!("one line"));
+        assert_eq!(emitted(), before + 1);
+
+        set_level(Level::Off); // restore default for other tests
     }
 }

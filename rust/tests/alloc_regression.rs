@@ -16,6 +16,7 @@ use std::collections::BTreeMap;
 use attrax::attribution::Method;
 use attrax::hls::HwConfig;
 use attrax::model::{Network, NetworkBuilder, Params, Shape, Tensor};
+use attrax::obs::span::{self, Span, Stage, ALL_STAGES};
 use attrax::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
 use attrax::util::rng::Pcg32;
 
@@ -159,4 +160,34 @@ fn steady_state_survives_batch_shrink_and_single_image() {
     let before = allocs_now();
     sim.attribute_batch_into(&mut ws, &refs4, Method::Guided, unfused, false, &mut out);
     assert_eq!(allocs_now() - before, 0, "unfused ablation allocated on a warm workspace");
+}
+
+#[test]
+fn span_ledger_with_tracing_disabled_is_allocation_free() {
+    // the obs contract (ISSUE 8 acceptance): with no recorder
+    // configured the server still stamps a full span per request —
+    // create, every stage stamp, all batch/device facts, segment
+    // queries — and none of it may touch the heap
+    span::epoch(); // pin outside the measured window
+    let before = allocs_now();
+    for i in 0..100u64 {
+        let mut sp = Span::start(i, 1, 4, Method::Guided);
+        for st in ALL_STAGES {
+            sp.stamp_now(st);
+        }
+        sp.stamp(Stage::DeviceComplete, 12_345 + i);
+        sp.batch_id = i;
+        sp.batch_size = 4;
+        sp.device_index = 0;
+        sp.attempts = 1;
+        sp.breaker_tripped = i % 2 == 0;
+        sp.device_cycles += 999;
+        sp.deadline_ms = 50;
+        sp.trace_seq = Some(i);
+        let _ = sp.segment_ns(Stage::Flush);
+        let _ = sp.total_ns();
+        std::hint::black_box(&sp);
+    }
+    let n = allocs_now() - before;
+    assert_eq!(n, 0, "span stamping allocated {n} times with tracing disabled");
 }

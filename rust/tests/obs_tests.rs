@@ -1,0 +1,161 @@
+//! End-to-end observability tests: capture spans from a live TCP
+//! server into an `attrax-trace/v1` artifact, then (a) replay the
+//! trace against a freshly built coordinator and reconcile every
+//! response bitwise, and (b) audit it offline with the doctor.
+//!
+//! These are artifact-free: the server runs the deterministic tiny
+//! model from `sched::tests_support`, so replay uses the
+//! `replay_with_sim` seam rather than rebuilding from the trace meta
+//! (which only knows the built-in table3 model).
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+
+use attrax::attribution::Method;
+use attrax::coordinator::{Config, Coordinator};
+use attrax::hls::HwConfig;
+use attrax::obs::doctor::{self, DoctorSpec, DOCTOR_SCHEMA};
+use attrax::obs::replay::{replay_with_sim, Timing};
+use attrax::obs::span::{CountingRecorder, Recorder};
+use attrax::obs::trace::{TraceMeta, TraceReader, TraceWriter};
+use attrax::sched::tests_support::tiny_sim;
+use attrax::serve::{Client, Server, ServerConfig};
+use attrax::util::rng::Pcg32;
+
+/// The tiny test model's input size ([2,8,8]).
+const ELEMS: usize = 128;
+
+fn image(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..ELEMS).map(|_| rng.f32()).collect()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("attrax_obs_{}_{name}.trace", std::process::id()))
+}
+
+/// Capture meta for a tiny-model run. `model`/`config` mark the trace
+/// as not-rebuildable-from-meta, which is true: replay must go through
+/// the `replay_with_sim` seam.
+fn meta(seed: u64) -> TraceMeta {
+    TraceMeta {
+        board: "pynq-z2".into(),
+        model: "tiny-test".into(),
+        weights: format!("synthetic:{seed}"),
+        config: "custom".into(),
+        elems: ELEMS,
+        out_n: 4,
+        workers: 1,
+        max_batch: 4,
+        max_wait_ms: 2,
+    }
+}
+
+/// Serve `frames` request frames on a traced loopback server and
+/// return the trace path.
+fn capture(name: &str, seed: u64) -> std::path::PathBuf {
+    let path = tmp(name);
+    let writer = Arc::new(TraceWriter::create(&path, &meta(seed)).unwrap());
+    let coord = Coordinator::start(
+        tiny_sim(seed, HwConfig::pynq_z2()),
+        Config { workers: 1, max_batch: 4, max_wait_ms: 2, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let cfg =
+        ServerConfig { recorder: Some(writer.clone() as Arc<dyn Recorder>), ..Default::default() };
+    let server = Server::start("127.0.0.1:0", coord, cfg).unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    // single-image frames across methods, plus one multi-image frame —
+    // the replay must preserve this method/batch mix
+    for (i, m) in [Method::Saliency, Method::Guided, Method::Deconvnet].into_iter().enumerate() {
+        c.attribute(&image(100 + i as u64), m).unwrap();
+    }
+    let (a, b) = (image(110), image(111));
+    let batch = c.attribute_batch(&[&a, &b], Method::Guided).unwrap();
+    assert_eq!(batch.len(), 2);
+    server.shutdown().unwrap();
+    assert_eq!(writer.finish(), Ok(4), "one trace record per answered frame");
+    path
+}
+
+#[test]
+fn captured_trace_replays_bitwise_and_catches_divergence() {
+    let path = capture("replay", 7);
+    let p = path.to_str().unwrap();
+
+    // spans carry real pipeline stamps end to end
+    let (_, recs) = TraceReader::open(p).unwrap().read_all().unwrap();
+    assert_eq!(recs.len(), 4);
+    for rec in &recs {
+        assert!(rec.span.total_ns() > 0);
+        assert!(rec.span.batch_size >= 1, "served spans carry batch facts");
+        assert_ne!(rec.span.device_index, u32::MAX);
+    }
+
+    // same seed → same weights → every response reconciles bitwise
+    let report = replay_with_sim(p, tiny_sim(7, HwConfig::pynq_z2()), Timing::Asap).unwrap();
+    assert_eq!(report.frames, 4);
+    assert_eq!(report.matched, 4);
+    assert_eq!(report.diverged, 0);
+    assert!(report.ok());
+
+    // recorded pacing replays the same frames (gaps here are tiny)
+    let report = replay_with_sim(p, tiny_sim(7, HwConfig::pynq_z2()), Timing::Recorded).unwrap();
+    assert!(report.ok());
+
+    // a different seed is a different model: replay must flag it
+    let report = replay_with_sim(p, tiny_sim(8, HwConfig::pynq_z2()), Timing::Asap).unwrap();
+    assert!(report.diverged > 0);
+    assert!(!report.ok());
+
+    // a flipped trace byte surfaces as a typed error, not a clean pass
+    let mut bytes = std::fs::read(&path).unwrap();
+    let last = bytes.len() - 5;
+    bytes[last] ^= 0x20;
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(replay_with_sim(p, tiny_sim(7, HwConfig::pynq_z2()), Timing::Asap).is_err());
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn doctor_audit_is_deterministic_and_schema_tagged() {
+    let path = capture("doctor", 13);
+    let p = path.to_str().unwrap();
+
+    let a = doctor::diagnose(p, &DoctorSpec::default()).unwrap();
+    let b = doctor::diagnose(p, &DoctorSpec::default()).unwrap();
+    // byte-identical reruns: the report carries no wall-clock fields
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+    let json = a.to_json().to_string();
+    assert!(json.contains(&format!("\"schema\":\"{DOCTOR_SCHEMA}\"")), "{json}");
+    assert_eq!(a.frames, 4);
+    assert_eq!(a.outcomes.get("ok"), Some(&4));
+    assert_eq!(a.violations(), 0, "default thresholds are report-only: {:?}", a.findings);
+    assert!(a.summary().contains("4 frames audited"));
+
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn recorder_sees_every_answered_frame_including_errors() {
+    let rec = Arc::new(CountingRecorder::default());
+    let coord = Coordinator::start(
+        tiny_sim(9, HwConfig::pynq_z2()),
+        Config { workers: 1, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let cfg =
+        ServerConfig { recorder: Some(rec.clone() as Arc<dyn Recorder>), ..Default::default() };
+    let server = Server::start("127.0.0.1:0", coord, cfg).unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.attribute(&image(1), Method::Saliency).unwrap();
+    // wrong image size: a typed BadRequest — still exactly one record
+    let short = vec![0.5f32; ELEMS / 2];
+    assert!(c.attribute(&short, Method::Saliency).is_err());
+    server.shutdown().unwrap();
+    assert_eq!(rec.seen.load(Ordering::Relaxed), 2);
+}

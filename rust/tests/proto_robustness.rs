@@ -21,6 +21,7 @@ fn sample_request() -> Frame {
         elems: 4,
         deadline_ms: Some(250),
         with_crc: false,
+        trace_seq: None,
         images: vec![0.0, 1.5, -2.25, 3.5, -0.125, 0.75, 8.0, -9.5],
     })
 }
@@ -176,6 +177,57 @@ fn zero_length_preamble_fields_are_rejected() {
         assert!(
             read_frame(&mut Cursor::new(&bytes)).is_err(),
             "empty header with payload_len {payload_len} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn trace_seq_is_version_negotiated_like_crc() {
+    // a tagged request round-trips through encode/decode
+    let tagged = match sample_request() {
+        Frame::Request(mut q) => {
+            q.trace_seq = Some(777);
+            Frame::Request(q)
+        }
+        _ => unreachable!(),
+    };
+    let bytes = encode(&tagged).unwrap();
+    assert_eq!(read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap(), tagged);
+
+    // an old client's frame (no trace_seq header field) decodes to None
+    let plain = encode(&sample_request()).unwrap();
+    match read_frame(&mut Cursor::new(&plain)).unwrap().unwrap() {
+        Frame::Request(q) => assert_eq!(q.trace_seq, None),
+        other => panic!("decoded as {other:?}"),
+    }
+    // and a tagged frame is strictly longer on the wire — the field
+    // costs nothing when absent
+    assert!(bytes.len() > plain.len());
+
+    // an old *server* (this decoder, standing in for one that predates
+    // the field) skips unknown header fields, so a future tag spelling
+    // still decodes; explicit null means absent, like deadline_ms
+    for (extra, want) in [
+        (r#","trace_seq":9"#, Some(9u64)),
+        (r#","trace_seq":null"#, None),
+        (r#","trace_seq_v2":{"x":1}"#, None),
+    ] {
+        let header = format!(
+            r#"{{"t":"req","id":1,"method":"guided","n":1,"elems":2{extra}}}"#
+        );
+        let payload = [0u8; 8];
+        match proto::decode(header.as_bytes(), &payload) {
+            Ok(Frame::Request(q)) => assert_eq!(q.trace_seq, want, "header {header}"),
+            other => panic!("header {header} decoded as {other:?}"),
+        }
+    }
+
+    // a malformed trace_seq (negative / fractional) is typed, not UB
+    for bad in [r#","trace_seq":-1"#, r#","trace_seq":1.5"#, r#","trace_seq":"x""#] {
+        let header = format!(r#"{{"t":"req","id":1,"method":"guided","n":1,"elems":2{bad}}}"#);
+        assert!(
+            matches!(proto::decode(header.as_bytes(), &[0u8; 8]), Err(ProtoError::Malformed(_))),
+            "header {header} must be rejected"
         );
     }
 }

@@ -105,6 +105,20 @@ grep -q '"schema":"attrax-chaos/v1"' BENCH_chaos_a.json
 grep -q '"escaped":0' BENCH_chaos_a.json
 rm -f BENCH_chaos_a.json BENCH_chaos_b.json
 
+echo "== obs gate: capture -> bit-exact replay -> deterministic doctor =="
+# Capture a short traced loopback run, then (1) replay it in-process:
+# the binary exits nonzero unless every recorded heatmap reconciles
+# bitwise; (2) doctor it: schema-tagged BENCH_doctor.json, and two runs
+# must be byte-identical (no wall-clock fields in the report).
+cargo run --release -q -- loadgen --smoke --secs 2 --trace-out smoke.trace \
+    --out BENCH_serve_smoke.json
+cargo run --release -q -- replay smoke.trace
+cargo run --release -q -- doctor smoke.trace --out BENCH_doctor.json
+grep -q '"schema":"attrax-doctor/v1"' BENCH_doctor.json
+cargo run --release -q -- doctor smoke.trace --out BENCH_doctor_b.json
+cmp BENCH_doctor.json BENCH_doctor_b.json
+rm -f smoke.trace BENCH_serve_smoke.json BENCH_doctor.json BENCH_doctor_b.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
