@@ -228,6 +228,12 @@ impl Device {
         }
         r
     }
+
+    /// Current in-flight modeled microseconds (the router's load
+    /// estimate) — read-only view for the stats exposition endpoint.
+    pub fn inflight_us(&self) -> u64 {
+        self.inflight_us.load(Ordering::Relaxed)
+    }
 }
 
 /// A fleet of heterogeneous devices with ETA routing.

@@ -1,9 +1,16 @@
 //! Serving metrics: latency percentiles, throughput, queue stats,
 //! shadow-verification agreement.
+//!
+//! When a telemetry [`Registry`] is attached (`Metrics::attach`), every
+//! record method dual-writes its counter into the registry's lock-free
+//! atomics, so a quiesced stats-endpoint scrape reconciles *exactly*
+//! with [`Metrics::snapshot`] — the `loadgen --stats-addr` gate in
+//! `scripts/ci.sh` asserts this equality end to end.
 
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;
 
+use crate::obs::telemetry::Registry;
 use crate::util::stats::Samples;
 
 #[derive(Default)]
@@ -32,6 +39,9 @@ struct Inner {
 #[derive(Default)]
 pub struct Metrics {
     inner: Mutex<Inner>,
+    /// Optional telemetry registry receiving a dual write of every
+    /// counter (set once via [`Metrics::attach`], never detached).
+    registry: OnceLock<Arc<Registry>>,
 }
 
 /// Immutable snapshot for reporting.
@@ -88,6 +98,18 @@ impl Metrics {
         Metrics::default()
     }
 
+    /// Attach a telemetry registry for lock-free dual writes. First
+    /// attach wins; later calls are silently ignored (the sink is
+    /// shared across server + coordinator which both try to attach
+    /// the same registry).
+    pub fn attach(&self, registry: Arc<Registry>) {
+        let _ = self.registry.set(registry);
+    }
+
+    fn reg(&self) -> Option<&Arc<Registry>> {
+        self.registry.get()
+    }
+
     pub fn record_start(&self) {
         let mut g = self.inner.lock().unwrap();
         if g.start.is_none() {
@@ -102,61 +124,102 @@ impl Metrics {
         g.queue_wait_ms.push(queue_wait_ms);
         g.sim_cycles.push(sim_cycles as f64);
         g.end = Some(Instant::now());
+        drop(g);
+        if let Some(r) = self.reg() {
+            r.completed.inc();
+        }
     }
 
     pub fn record_rejection(&self) {
         self.inner.lock().unwrap().rejected += 1;
+        if let Some(r) = self.reg() {
+            r.rejected.inc();
+        }
     }
 
     /// A request (or connection) was shed with a `Busy` error frame.
     pub fn record_busy(&self) {
         self.inner.lock().unwrap().rejected_busy += 1;
+        if let Some(r) = self.reg() {
+            r.rejected_busy.inc();
+        }
     }
 
     /// A request's deadline elapsed before its response was ready.
     pub fn record_deadline_exceeded(&self) {
         self.inner.lock().unwrap().deadline_exceeded += 1;
+        if let Some(r) = self.reg() {
+            r.deadline_exceeded.inc();
+        }
     }
 
     pub fn record_conn_open(&self) {
         let mut g = self.inner.lock().unwrap();
         g.conns_open += 1;
         g.conns_total += 1;
+        drop(g);
+        if let Some(r) = self.reg() {
+            r.conns_open.inc();
+            r.conns_total.inc();
+        }
     }
 
     pub fn record_conn_close(&self) {
         let mut g = self.inner.lock().unwrap();
         g.conns_open = g.conns_open.saturating_sub(1);
+        drop(g);
+        if let Some(r) = self.reg() {
+            r.conns_open.dec();
+        }
     }
 
     pub fn record_error(&self) {
         self.inner.lock().unwrap().errors += 1;
+        if let Some(r) = self.reg() {
+            r.errors.inc();
+        }
     }
 
     /// A failed request was re-executed on a healthy device.
     pub fn record_retry(&self) {
         self.inner.lock().unwrap().retries += 1;
+        if let Some(r) = self.reg() {
+            r.retries.inc();
+        }
     }
 
     /// A device's circuit breaker opened (quarantine).
     pub fn record_breaker_trip(&self) {
         self.inner.lock().unwrap().breaker_trips += 1;
+        if let Some(r) = self.reg() {
+            r.breaker_trips.inc();
+        }
     }
 
     /// An integrity check caught corrupted data (CRC / checksum / DMR).
     pub fn record_integrity_failure(&self) {
         self.inner.lock().unwrap().integrity_failures += 1;
+        if let Some(r) = self.reg() {
+            r.integrity_failures.inc();
+        }
     }
 
     /// A client re-established a broken transport connection.
     pub fn record_reconnect(&self) {
         self.inner.lock().unwrap().reconnects += 1;
+        if let Some(r) = self.reg() {
+            r.reconnects.inc();
+        }
     }
 
     pub fn record_verification(&self, correlation: f64) {
         let mut g = self.inner.lock().unwrap();
         g.verified += 1;
         g.verify_corr.push(correlation);
+        drop(g);
+        if let Some(r) = self.reg() {
+            r.verified.inc();
+        }
     }
 
     pub fn snapshot(&self) -> Snapshot {
@@ -312,6 +375,47 @@ mod tests {
         m.record_conn_close();
         m.record_conn_close();
         assert_eq!(m.snapshot().open_conns, 0);
+    }
+
+    #[test]
+    fn attached_registry_mirrors_every_counter() {
+        let m = Metrics::new();
+        let reg = Arc::new(Registry::new());
+        m.attach(reg.clone());
+        m.record_start();
+        m.record_completion(1.0, 0.5, 1_000);
+        m.record_completion(2.0, 0.25, 2_000);
+        m.record_rejection();
+        m.record_busy();
+        m.record_deadline_exceeded();
+        m.record_conn_open();
+        m.record_conn_open();
+        m.record_conn_close();
+        m.record_error();
+        m.record_retry();
+        m.record_breaker_trip();
+        m.record_integrity_failure();
+        m.record_reconnect();
+        m.record_verification(0.9);
+        let s = m.snapshot();
+        assert_eq!(reg.completed.get(), s.completed);
+        assert_eq!(reg.rejected.get(), s.rejected);
+        assert_eq!(reg.rejected_busy.get(), s.rejected_busy);
+        assert_eq!(reg.deadline_exceeded.get(), s.deadline_exceeded);
+        assert_eq!(reg.conns_open.get(), s.open_conns);
+        assert_eq!(reg.conns_total.get(), s.total_conns);
+        assert_eq!(reg.errors.get(), s.errors);
+        assert_eq!(reg.retries.get(), s.retries);
+        assert_eq!(reg.breaker_trips.get(), s.breaker_trips);
+        assert_eq!(reg.integrity_failures.get(), s.integrity_failures);
+        assert_eq!(reg.reconnects.get(), s.reconnects);
+        assert_eq!(reg.verified.get(), s.verified);
+        // second attach is a no-op (first wins)
+        let other = Arc::new(Registry::new());
+        m.attach(other.clone());
+        m.record_error();
+        assert_eq!(other.errors.get(), 0);
+        assert_eq!(reg.errors.get(), 2);
     }
 
     #[test]

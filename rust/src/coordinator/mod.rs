@@ -32,6 +32,7 @@ use std::time::Instant;
 use crate::attribution::Method;
 use crate::fpga::Board;
 use crate::model::{Manifest, Params};
+use crate::obs::telemetry::{Registry, UnitProfiler};
 use crate::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
 use crate::util::stats::pearson;
 use fleet::{Device, DeviceFault, Fleet};
@@ -147,6 +148,12 @@ pub struct Config {
     /// [`Failure`]. Retries respect the request deadline and never
     /// start past it.
     pub max_retries: usize,
+    /// Optional telemetry registry: when set, [`Metrics`] dual-writes
+    /// every counter into it, and a per-fused-unit [`UnitProfiler`] is
+    /// built for the plan and attached to every worker workspace (the
+    /// live counterpart of paper Table III). `None` (the default)
+    /// keeps the hot path byte-identical to the untelemetered build.
+    pub telemetry: Option<Arc<Registry>>,
 }
 
 impl Default for Config {
@@ -160,6 +167,7 @@ impl Default for Config {
             max_wait_ms: 0,
             shards: 0,
             max_retries: 2,
+            telemetry: None,
         }
     }
 }
@@ -213,6 +221,15 @@ impl Coordinator {
         let queue = Arc::new(Bounded::new(cfg.queue_depth));
         let metrics = Arc::new(Metrics::new());
 
+        // telemetry: dual-write counters + the per-fused-unit engine
+        // profiler (every device runs the same plan, so the profiler
+        // built from device 0 labels all of them)
+        let profiler = cfg.telemetry.as_ref().map(|reg| {
+            metrics.attach(reg.clone());
+            reg.install_profiler(Arc::new(UnitProfiler::for_plan(&devices[0].sim)));
+            reg.profiler().expect("profiler installed above").clone()
+        });
+
         // shard budget: split the host's cores across the worker pool
         // unless the operator pinned an explicit count
         let shards = if cfg.shards == 0 {
@@ -230,6 +247,7 @@ impl Coordinator {
                 max_wait: std::time::Duration::from_millis(cfg.max_wait_ms),
                 shards,
                 max_retries: cfg.max_retries,
+                profiler: profiler.clone(),
             };
             let queue = queue.clone();
             workers.push(
@@ -432,6 +450,7 @@ struct WorkerCtx {
     max_wait: std::time::Duration,
     shards: usize,
     max_retries: usize,
+    profiler: Option<Arc<UnitProfiler>>,
 }
 
 fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
@@ -444,6 +463,7 @@ fn worker_loop(ctx: WorkerCtx, queue: Arc<Bounded<Request>>) {
     // quantized model itself is the shared Arc<Plan> inside each
     // device's sim — N workers hold one copy of the weights, not N
     let mut ws = Workspace::with_shards(ctx.shards);
+    ws.profiler = ctx.profiler.clone();
     let mut out = BatchOutput::new();
     while let Some(batch) = queue.pop_batch(ctx.max_batch, ctx.max_wait, compatible) {
         // queue-wait stat + obs enqueue stamp in one pass (one Vec per

@@ -208,7 +208,7 @@ pub fn run(spec: &ChaosSpec) -> anyhow::Result<ChaosReport> {
             max_conns: 4,
             default_deadline_ms: 0,
             faults: Some(hooks.clone()),
-            recorder: None,
+            ..Default::default()
         },
     )?;
     let mut proxy = WireProxy::start(server.local_addr(), hooks.clone())?;

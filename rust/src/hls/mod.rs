@@ -199,6 +199,29 @@ pub enum Phase {
     Backward,
 }
 
+/// The engine family a fused plan unit dispatches to — the label axis
+/// of the per-unit telemetry profile (paper Table III rows).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum EngineKind {
+    Conv,
+    Vmm,
+    Pool,
+    Relu,
+    Eltwise,
+}
+
+impl EngineKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            EngineKind::Conv => "conv",
+            EngineKind::Vmm => "vmm",
+            EngineKind::Pool => "pool",
+            EngineKind::Relu => "relu",
+            EngineKind::Eltwise => "eltwise",
+        }
+    }
+}
+
 /// Cycle/traffic ledger, filled in by the engines as they execute.
 #[derive(Clone, Debug, Default)]
 pub struct Cost {

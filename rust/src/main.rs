@@ -12,8 +12,12 @@
 //!              (or --addr for a live server), reconciling every
 //!              heatmap bitwise; nonzero exit on divergence
 //!   doctor     offline trace audit: per-stage latency decomposition,
-//!              SLO misses, shed storms, batching pathologies
-//!              (BENCH_doctor.json; nonzero exit on violations)
+//!              SLO misses, shed storms, batching pathologies, fleet
+//!              load imbalance (BENCH_doctor.json; nonzero exit on
+//!              violations)
+//!   top        live dashboard: poll a serve --stats-addr endpoint and
+//!              render req/s, stage quantiles, the per-unit engine
+//!              profile and per-device fleet state
 //!   chaos      fault-injection campaign over the full serving stack,
 //!              emit BENCH_chaos.json (--smoke = the deterministic CI
 //!              campaign; nonzero exit if any fault escaped)
@@ -33,7 +37,9 @@ use attrax::faults::{chaos, FaultHooks, FaultPlan};
 use attrax::fpga::{self, Board, ALL_BOARDS};
 use attrax::hls::HwConfig;
 use attrax::model::{artifacts_dir, load_artifacts, Network};
+use attrax::obs::export as obs_export;
 use attrax::obs::span::Recorder;
+use attrax::obs::telemetry::{Registry, SampledRecorder};
 use attrax::obs::trace::{TraceMeta, TraceWriter};
 use attrax::obs::{doctor, replay};
 use attrax::sched::{AttrOptions, Simulator};
@@ -60,6 +66,7 @@ const SUBCOMMANDS: &[(&str, fn(Vec<String>) -> i32)] = &[
     ("masks", cmd_masks),
     ("report", cmd_report),
     ("fleet", cmd_fleet),
+    ("top", cmd_top),
 ];
 
 fn main() {
@@ -95,7 +102,8 @@ fn usage() -> String {
      \x20 replay      re-drive a captured trace (serve --trace), reconcile every\n\
      \x20             heatmap bitwise; --addr targets a live server\n\
      \x20 doctor      audit a captured trace offline (SLO misses, shed storms,\n\
-     \x20             batching pathologies), emit BENCH_doctor.json\n\
+     \x20             batching pathologies, fleet imbalance), emit BENCH_doctor.json\n\
+     \x20 top         live dashboard over a serve --stats-addr endpoint\n\
      \x20 chaos       fault-injection campaign over the serving stack, emit\n\
      \x20             BENCH_chaos.json (--smoke = deterministic CI campaign)\n\
      \x20 tune        design-space exploration: BENCH_dse.json + tuned configs\n\
@@ -338,6 +346,9 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("deadline-ms", "0", "default per-request deadline (0 = none)")
         .opt("faults", "", "fault plan (*.faults.json) to inject at the TCP admission site")
         .opt("trace", "", "stream completed request spans into this attrax-trace/v1 file")
+        .opt("trace-sample", "1", "record only 1-in-N request spans (deterministic by sequence)")
+        .opt("trace-cap-mb", "0", "rotate the trace into self-contained segments at this size (0 = unlimited)")
+        .opt("stats-addr", "", "expose a one-shot stats endpoint on this address (attrax top)")
         .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)")
         .opt("config", "", "tuned-config artifact (attrax tune) to run this board on")
         .opt("model", "", "graph-IR model manifest (default: built-in Table III)");
@@ -348,7 +359,7 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
     if let Some(addr) = args.get("tcp").filter(|a| !a.is_empty()) {
         return cmd_serve_tcp(addr, &args, board, hw_cfg);
     }
-    let (coord, _, _) = match start_coordinator(&args, board, hw_cfg) {
+    let (coord, _, _) = match start_coordinator(&args, board, hw_cfg, None) {
         Ok(c) => c,
         Err(e) => return fail(e),
     };
@@ -388,6 +399,7 @@ fn start_coordinator(
     args: &attrax::util::cli::Args,
     board: Board,
     hw_cfg: HwConfig,
+    telemetry: Option<Arc<Registry>>,
 ) -> anyhow::Result<(Coordinator, String, String)> {
     // a custom --model manifest always serves synthetic seeded weights:
     // the trained artifacts are Table-III-specific
@@ -419,6 +431,7 @@ fn start_coordinator(
         max_wait_ms: args.parse_num("batch-wait", 2),
         shards: args.parse_num("shards", 0),
         max_retries: args.parse_num("retries", 2),
+        telemetry,
     };
     let artifacts = if verify > 0.0 { artifacts } else { None };
     let coord = Coordinator::start(sim, cfg, artifacts)?;
@@ -433,7 +446,13 @@ fn cmd_serve_tcp(
     board: Board,
     hw_cfg: HwConfig,
 ) -> i32 {
-    let (coord, model_kind, weights) = match start_coordinator(args, board, hw_cfg) {
+    // --stats-addr: a Registry shared by the coordinator (which feeds
+    // it through Metrics and the per-unit profiler) and the server
+    // (which feeds it request spans + exposes it over one-shot TCP)
+    let stats_addr = args.get("stats-addr").filter(|a| !a.is_empty()).map(String::from);
+    let telemetry = stats_addr.as_ref().map(|_| Arc::new(Registry::new()));
+    let (coord, model_kind, weights) = match start_coordinator(args, board, hw_cfg, telemetry.clone())
+    {
         Ok(c) => c,
         Err(e) => return fail(e),
     };
@@ -445,7 +464,11 @@ fn cmd_serve_tcp(
         },
     };
     // --trace: capture every completed request span (plus its exact
-    // wire frames) into an attrax-trace/v1 artifact for replay/doctor
+    // wire frames) into an attrax-trace/v1 artifact for replay/doctor.
+    // --trace-cap-mb rotates it into self-contained segments;
+    // --trace-sample N keeps a deterministic 1-in-N of the spans.
+    let sample: u64 = args.parse_num("trace-sample", 1);
+    let cap_mb: u64 = args.parse_num("trace-cap-mb", 0);
     let trace_writer = match args.get("trace").filter(|p| !p.is_empty()) {
         None => None,
         Some(path) => {
@@ -461,22 +484,40 @@ fn cmd_serve_tcp(
                 max_batch: args.parse_num("batch", 1),
                 max_wait_ms: args.parse_num("batch-wait", 2),
             };
-            match TraceWriter::create(path, &meta) {
+            let created = if cap_mb > 0 {
+                TraceWriter::create_rotating(path, &meta, cap_mb * 1024 * 1024)
+            } else {
+                TraceWriter::create(path, &meta)
+            };
+            match created {
                 Ok(w) => Some(Arc::new(w)),
                 Err(e) => return fail(format!("cannot create trace {path}: {e}")),
             }
         }
     };
+    let recorder = trace_writer.clone().map(|w| {
+        let base = w as Arc<dyn Recorder>;
+        if sample > 1 {
+            Arc::new(SampledRecorder::new(base, sample, telemetry.clone())) as Arc<dyn Recorder>
+        } else {
+            base
+        }
+    });
     let scfg = ServerConfig {
         max_conns: args.parse_num("max-conns", 32),
         default_deadline_ms: args.parse_num("deadline-ms", 0),
         faults,
-        recorder: trace_writer.clone().map(|w| w as Arc<dyn Recorder>),
+        recorder,
+        telemetry,
+        stats_addr,
     };
     let srv = match Server::start(addr, coord, scfg) {
         Ok(s) => s,
         Err(e) => return fail(e),
     };
+    if let Some(sa) = srv.stats_addr() {
+        println!("stats endpoint on {sa} (poll it: attrax top {sa})");
+    }
     let duration: u64 = args.parse_num("duration", 0);
     let dur_txt = if duration == 0 {
         "until killed".to_string()
@@ -497,7 +538,14 @@ fn cmd_serve_tcp(
             println!("\n== serving metrics ==\n{}", snap.report());
             if let Some(w) = trace_writer {
                 match w.finish() {
-                    Ok(n) => println!("trace: {n} spans captured"),
+                    Ok(n) => {
+                        let segs = w.segments();
+                        if segs > 1 {
+                            println!("trace: {n} spans captured across {segs} segments");
+                        } else {
+                            println!("trace: {n} spans captured");
+                        }
+                    }
                     Err(n) => {
                         eprintln!("trace: {n} record writes failed");
                         return 1;
@@ -525,6 +573,12 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         .opt("config", "", "tuned-config artifact for the --smoke loopback server")
         .opt("trace", "", "recorded trace: replay its frames as the workload (realistic traffic)")
         .opt("trace-out", "", "with --smoke: capture the loopback run to this trace file")
+        .opt(
+            "stats-addr",
+            "",
+            "scrape the server's stats endpoint before/after the run (with --smoke: \
+             bind the loopback endpoint here, e.g. 127.0.0.1:0)",
+        )
         .flag("smoke", "2s self-contained check: spin an in-process loopback server");
     let args = parse_or_exit(cmd, argv);
     let method = args.get("method").filter(|s| !s.is_empty()).map(|s| {
@@ -534,6 +588,7 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         })
     });
     let smoke = args.flag("smoke");
+    let stats_addr_opt = args.get("stats-addr").filter(|s| !s.is_empty()).map(String::from);
     let mut spec = loadgen::Spec {
         addr: String::new(),
         conns: args.parse_num("conns", 4),
@@ -546,6 +601,7 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         timeout_ms: args.parse_num("timeout-ms", 2000),
         seed: args.parse_num("seed", 42),
         trace: args.get("trace").filter(|s| !s.is_empty()).map(String::from),
+        stats_addr: None,
     };
     let trace_out = args.get("trace-out").filter(|s| !s.is_empty()).map(String::from);
     if trace_out.is_some() && !smoke {
@@ -562,8 +618,19 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
             Ok(v) => v,
             Err(e) => return fail(e),
         };
-        let cfg = Config { workers: 2, queue_depth: 32, max_batch: 4, ..Default::default() };
+        // --stats-addr with --smoke: one Registry shared by coordinator
+        // and server, exposed on the requested (usually ephemeral) addr
+        let telemetry = stats_addr_opt.as_ref().map(|_| Arc::new(Registry::new()));
+        let cfg = Config {
+            workers: 2,
+            queue_depth: 32,
+            max_batch: 4,
+            telemetry: telemetry.clone(),
+            ..Default::default()
+        };
         let mut scfg = ServerConfig::default();
+        scfg.telemetry = telemetry;
+        scfg.stats_addr = stats_addr_opt.clone();
         if let Some(path) = &trace_out {
             let custom_cfg = args.get("config").filter(|s| !s.is_empty()).is_some();
             let meta = TraceMeta {
@@ -596,6 +663,7 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
             Err(e) => return fail(e),
         };
         spec.addr = srv.local_addr().to_string();
+        spec.stats_addr = srv.stats_addr().map(|a| a.to_string());
         Some(srv)
     } else {
         match args.positional.first() {
@@ -605,6 +673,7 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
                 return 2;
             }
         }
+        spec.stats_addr = stats_addr_opt.clone();
         None
     };
 
@@ -617,14 +686,52 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         "loadgen: {} conns x batch {} against {} ({budget_txt} ...)",
         spec.conns, spec.batch, spec.addr
     );
-    let report = match loadgen::run(&spec) {
+    let mut report = match loadgen::run(&spec) {
         Ok(r) => r,
         Err(e) => return fail(e),
     };
     println!("\n== loadgen report ==\n{}", report.render());
+    let mut reconcile_failed = false;
     if let Some(srv) = srv {
         match srv.shutdown() {
-            Ok(snap) => println!("\n== server metrics ==\n{}", snap.report()),
+            Ok(snap) => {
+                println!("\n== server metrics ==\n{}", snap.report());
+                // Loopback mode holds both ends, so the scrape must
+                // reconcile exactly with the final metrics snapshot
+                // (counters only — every record_* precedes its reply
+                // write, so they are final once all clients returned).
+                if let Some(ss) = report.server_stats.as_mut() {
+                    let pairs: [(&str, u64); 11] = [
+                        ("attrax_completed_total", snap.completed),
+                        ("attrax_rejected_total", snap.rejected),
+                        ("attrax_rejected_busy_total", snap.rejected_busy),
+                        ("attrax_deadline_exceeded_total", snap.deadline_exceeded),
+                        ("attrax_errors_total", snap.errors),
+                        ("attrax_retries_total", snap.retries),
+                        ("attrax_breaker_trips_total", snap.breaker_trips),
+                        ("attrax_integrity_failures_total", snap.integrity_failures),
+                        ("attrax_reconnects_total", snap.reconnects),
+                        ("attrax_conns_total", snap.total_conns),
+                        ("attrax_verified_total", snap.verified),
+                    ];
+                    let reconciled = pairs.iter().all(|(name, v)| {
+                        ss.summary.counters.get(*name).copied().unwrap_or(0.0) == *v as f64
+                    });
+                    ss.reconciled = Some(reconciled);
+                    if reconciled {
+                        println!("stats scrape reconciles with the final metrics snapshot");
+                    } else {
+                        reconcile_failed = true;
+                        eprintln!("stats scrape DOES NOT reconcile with the final snapshot:");
+                        for (name, v) in pairs {
+                            let got = ss.summary.counters.get(name).copied().unwrap_or(0.0);
+                            if got != v as f64 {
+                                eprintln!("  {name}: scrape {got} vs snapshot {v}");
+                            }
+                        }
+                    }
+                }
+            }
             Err(e) => return fail(e),
         }
     }
@@ -650,6 +757,9 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         eprintln!("loadgen completed zero requests");
         return 1;
     }
+    if reconcile_failed {
+        return 1;
+    }
     0
 }
 
@@ -658,18 +768,25 @@ fn cmd_replay(argv: Vec<String>) -> i32 {
         .opt("addr", "", "replay against a live server instead of rebuilding in-process")
         .opt("timing", "asap", "inter-frame pacing: recorded | asap");
     let args = parse_or_exit(cmd, argv);
-    let Some(path) = args.positional.first().cloned() else {
-        eprintln!("usage: attrax replay <trace> [--addr host:port] [--timing recorded|asap]");
+    // every positional is a trace segment (serve --trace-cap-mb rotates
+    // a capture into foo.trace foo.1.trace ...); one file is the
+    // single-segment special case
+    let paths: Vec<String> = args.positional.clone();
+    if paths.is_empty() {
+        eprintln!(
+            "usage: attrax replay <trace> [more segments ...] [--addr host:port] \
+             [--timing recorded|asap]"
+        );
         return 2;
-    };
+    }
     let timing_name = args.get_or("timing", "asap");
     let Some(timing) = replay::Timing::parse(timing_name) else {
         eprintln!("unknown --timing {timing_name:?} (recorded | asap)");
         return 2;
     };
     let result = match args.get("addr").filter(|a| !a.is_empty()) {
-        Some(addr) => replay::replay_live(&path, addr, timing),
-        None => replay::replay_in_process(&path, timing),
+        Some(addr) => replay::replay_segments_live(&paths, addr, timing),
+        None => replay::replay_segments_in_process(&paths, timing),
     };
     let report = match result {
         Ok(r) => r,
@@ -698,12 +815,21 @@ fn cmd_doctor(argv: Vec<String>) -> i32 {
         .opt("max-linger-share", "1", "max share of latency spent waiting on batch formation")
         .opt("max-breaker-trips", "", "max breaker-trip-affected requests (default: unlimited)")
         .opt("outlier-factor", "10", "queue-wait outlier multiple of the median wait")
-        .opt("max-queue-outliers", "", "max queue-wait outliers (default: unlimited)");
+        .opt("max-queue-outliers", "", "max queue-wait outliers (default: unlimited)")
+        .opt(
+            "max-device-skew",
+            "",
+            "max busiest-device/mean span-count ratio (default: unlimited)",
+        );
     let args = parse_or_exit(cmd, argv);
-    let Some(path) = args.positional.first().cloned() else {
-        eprintln!("usage: attrax doctor <trace> [thresholds] [--out BENCH_doctor.json]");
+    let paths: Vec<String> = args.positional.clone();
+    if paths.is_empty() {
+        eprintln!(
+            "usage: attrax doctor <trace> [more segments ...] [thresholds] \
+             [--out BENCH_doctor.json]"
+        );
         return 2;
-    };
+    }
     let spec = doctor::DoctorSpec {
         max_deadline_miss_rate: args.parse_num("max-miss-rate", 1.0),
         max_shed_burst: args.parse_num("max-shed-burst", u64::MAX),
@@ -713,8 +839,9 @@ fn cmd_doctor(argv: Vec<String>) -> i32 {
         max_breaker_trips: args.parse_num("max-breaker-trips", u64::MAX),
         outlier_factor: args.parse_num("outlier-factor", 10.0),
         max_queue_outliers: args.parse_num("max-queue-outliers", u64::MAX),
+        max_device_skew: args.parse_num("max-device-skew", f64::INFINITY),
     };
-    let report = match doctor::diagnose(&path, &spec) {
+    let report = match doctor::diagnose_segments(&paths, &spec) {
         Ok(r) => r,
         Err(e) => return fail(e),
     };
@@ -734,6 +861,53 @@ fn cmd_doctor(argv: Vec<String>) -> i32 {
         return 1;
     }
     0
+}
+
+/// `attrax top <addr>` — periodic dashboard over a `serve --stats-addr`
+/// endpoint: scrape, parse, summarize, render, sleep, repeat. The
+/// endpoint is one-shot (connect, read one full render, EOF), so each
+/// frame is a fresh TCP connection and the server never holds state
+/// for us.
+fn cmd_top(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("top", "live dashboard over a serve --stats-addr endpoint")
+        .opt("interval", "2", "seconds between scrapes")
+        .opt("iters", "0", "frames to render before exiting (0 = until killed)")
+        .flag("once", "render a single frame and exit (same as --iters 1)")
+        .flag("plain", "no screen clearing between frames (log-friendly)");
+    let args = parse_or_exit(cmd, argv);
+    let Some(addr) = args.positional.first().cloned() else {
+        eprintln!("usage: attrax top <host:port> [--interval s] [--once | --iters n] [--plain]");
+        return 2;
+    };
+    let interval: f64 = args.parse_num("interval", 2.0);
+    let iters: u64 = if args.flag("once") { 1 } else { args.parse_num("iters", 0) };
+    let plain = args.flag("plain");
+    let mut prev: Option<(obs_export::StatsSummary, std::time::Instant)> = None;
+    let mut frames: u64 = 0;
+    loop {
+        let cur = match obs_export::scrape(&addr, std::time::Duration::from_secs(2))
+            .and_then(|text| obs_export::parse(&text))
+            .map(|metrics| obs_export::summarize(&metrics))
+        {
+            Ok(s) => s,
+            Err(e) => return fail(format!("scrape {addr}: {e}")),
+        };
+        let now = std::time::Instant::now();
+        let dt = prev.as_ref().map_or(0.0, |(_, t0)| now.duration_since(*t0).as_secs_f64());
+        if !plain {
+            // ANSI clear + home: a redrawn frame, not a scrolling log
+            print!("\x1b[2J\x1b[H");
+        }
+        print!("{}", obs_export::dashboard(prev.as_ref().map(|(s, _)| s), &cur, dt));
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        frames += 1;
+        if iters > 0 && frames >= iters {
+            return 0;
+        }
+        prev = Some((cur, now));
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval.max(0.1)));
+    }
 }
 
 fn cmd_chaos(argv: Vec<String>) -> i32 {

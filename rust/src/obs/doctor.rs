@@ -17,7 +17,9 @@
 //!   enqueue and batch formation (queue wait + batching linger);
 //! * `breaker_flap` — requests that saw a circuit-breaker trip;
 //! * `queue_wait_outliers` — enqueue→batch-form waits beyond
-//!   [`DoctorSpec::outlier_factor`] × the median wait.
+//!   [`DoctorSpec::outlier_factor`] × the median wait;
+//! * `device_skew` — fleet load imbalance: the busiest device's span
+//!   count vs the per-device mean (max/mean ratio).
 //!
 //! Every check always emits a [`Finding`] (value + threshold +
 //! violated flag) so the report is a complete health record, not just
@@ -56,6 +58,9 @@ pub struct DoctorSpec {
     pub outlier_factor: f64,
     /// Max tolerated queue-wait outliers.
     pub max_queue_outliers: u64,
+    /// Max tolerated per-device load skew (busiest device's span
+    /// count / per-device mean; 1.0 = perfectly balanced).
+    pub max_device_skew: f64,
 }
 
 impl Default for DoctorSpec {
@@ -69,6 +74,7 @@ impl Default for DoctorSpec {
             max_breaker_trips: u64::MAX,
             outlier_factor: 10.0,
             max_queue_outliers: u64::MAX,
+            max_device_skew: f64::INFINITY,
         }
     }
 }
@@ -190,6 +196,16 @@ pub fn diagnose(path: &str, spec: &DoctorSpec) -> Result<DoctorReport, TraceErro
     Ok(diagnose_records(&meta, &records, spec))
 }
 
+/// Audit a rotated multi-segment capture as one stream (segments in
+/// order; every segment must carry the same meta record).
+pub fn diagnose_segments<P: AsRef<std::path::Path>>(
+    paths: &[P],
+    spec: &DoctorSpec,
+) -> Result<DoctorReport, TraceError> {
+    let (meta, records) = crate::obs::trace::read_all_segments(paths)?;
+    Ok(diagnose_records(&meta, &records, spec))
+}
+
 /// The audit core — pure function of the records (test seam).
 pub fn diagnose_records(
     meta: &TraceMeta,
@@ -228,6 +244,7 @@ pub fn diagnose_records(
     findings.push(check_linger(&spans, spec));
     findings.push(check_breakers(&spans, spec));
     findings.push(check_queue_outliers(&spans, spec));
+    findings.push(check_device_skew(&spans, spec));
 
     DoctorReport { frames: spans.len(), outcomes, stages, findings }
 }
@@ -372,6 +389,45 @@ fn check_queue_outliers(spans: &[&Span], spec: &DoctorSpec) -> Finding {
     }
 }
 
+/// Fleet load imbalance: the busiest device's span count vs the
+/// per-device mean. Only spans actually served by a device count
+/// (`device_index == u32::MAX` means "never dispatched"). A fleet of
+/// 0 or 1 devices cannot be skewed (value 0.0 / 1.0 respectively).
+fn check_device_skew(spans: &[&Span], spec: &DoctorSpec) -> Finding {
+    let mut counts: BTreeMap<u32, u64> = BTreeMap::new();
+    for sp in spans {
+        if sp.device_index != u32::MAX {
+            *counts.entry(sp.device_index).or_insert(0) += 1;
+        }
+    }
+    let (value, detail) = if counts.is_empty() {
+        (0.0, "no spans reached a device".to_string())
+    } else if counts.len() == 1 {
+        let (dev, n) = counts.iter().next().map(|(d, n)| (*d, *n)).unwrap();
+        (1.0, format!("single device {dev} served all {n} spans"))
+    } else {
+        let total: u64 = counts.values().sum();
+        let (busiest, max) = counts.iter().max_by_key(|(_, n)| **n).map(|(d, n)| (*d, *n)).unwrap();
+        let mean = total as f64 / counts.len() as f64;
+        let ratio = max as f64 / mean;
+        (
+            ratio,
+            format!(
+                "busiest device {busiest} served {max}/{total} spans across {} devices \
+                 ({ratio:.3}x the per-device mean)",
+                counts.len()
+            ),
+        )
+    };
+    Finding {
+        kind: "device_skew",
+        detail,
+        value,
+        threshold: spec.max_device_skew,
+        violated: value > spec.max_device_skew,
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -489,6 +545,7 @@ mod tests {
             max_breaker_trips: 0,
             outlier_factor: 10.0,
             max_queue_outliers: 0,
+            max_device_skew: f64::INFINITY,
         };
         let report = diagnose_records(&meta(), &records, &spec);
         let violated: Vec<&str> =
@@ -499,6 +556,52 @@ mod tests {
         assert!(violated.contains(&"breaker_flap"), "{violated:?}");
         assert!(violated.contains(&"queue_wait_outliers"), "{violated:?}");
         assert_eq!(report.violations(), violated.len());
+    }
+
+    #[test]
+    fn device_skew_measures_fleet_imbalance() {
+        // balanced: 10 spans each on devices 0 and 1 -> ratio 1.0
+        let mut records: Vec<TraceRecord> = Vec::new();
+        for i in 0..20u64 {
+            let mut r = rec(i, 50_000, 4, Outcome::Ok);
+            r.span.device_index = (i % 2) as u32;
+            records.push(r);
+        }
+        let spec = DoctorSpec { max_device_skew: 1.5, ..DoctorSpec::default() };
+        let report = diagnose_records(&meta(), &records, &spec);
+        let f = report.findings.iter().find(|f| f.kind == "device_skew").unwrap();
+        assert_eq!(f.value, 1.0);
+        assert!(!f.violated);
+
+        // skewed: 18 spans on device 0, 2 on device 1 -> ratio 1.8
+        for (i, r) in records.iter_mut().enumerate() {
+            r.span.device_index = u32::from(i >= 18);
+        }
+        let report = diagnose_records(&meta(), &records, &spec);
+        let f = report.findings.iter().find(|f| f.kind == "device_skew").unwrap();
+        assert!((f.value - 1.8).abs() < 1e-12, "{}", f.value);
+        assert!(f.violated, "1.8x skew beyond the 1.5 threshold");
+        assert!(f.detail.contains("busiest device 0"), "{}", f.detail);
+
+        // undispatched spans are excluded entirely
+        for r in records.iter_mut() {
+            r.span.device_index = u32::MAX;
+        }
+        let report = diagnose_records(&meta(), &records, &spec);
+        let f = report.findings.iter().find(|f| f.kind == "device_skew").unwrap();
+        assert_eq!(f.value, 0.0);
+        assert!(!f.violated);
+    }
+
+    #[test]
+    fn single_device_fleet_is_never_skewed() {
+        // rec() pins device_index = 0: default captures stay clean
+        let records: Vec<TraceRecord> = (0..8).map(|i| rec(i, 50_000, 4, Outcome::Ok)).collect();
+        let spec = DoctorSpec { max_device_skew: 1.0, ..DoctorSpec::default() };
+        let report = diagnose_records(&meta(), &records, &spec);
+        let f = report.findings.iter().find(|f| f.kind == "device_skew").unwrap();
+        assert_eq!(f.value, 1.0);
+        assert!(!f.violated, "ratio 1.0 is not beyond a 1.0 threshold");
     }
 
     #[test]

@@ -1,0 +1,933 @@
+//! Stats exposition: render the live [`Registry`] as Prometheus-style
+//! text lines, serve them over a one-shot TCP endpoint, and parse them
+//! back (`loadgen --stats-addr`, `attrax top`).
+//!
+//! The exposition grammar is one metric per line:
+//!
+//! ```text
+//! name value
+//! name{label="value",label2="value2"} value
+//! ```
+//!
+//! `#`-prefixed lines are comments. Label values are quoted with the
+//! same backslash-escape grammar as JSON strings
+//! ([`crate::util::json::escape`]), so any unit/board name round-trips.
+//! Values print as Rust `f64`/`u64` literals (`parse::<f64>` reads
+//! every one back). The endpoint is deliberately one-shot: a client
+//! connects, the server writes one full render and closes — no HTTP,
+//! no request parsing, no keep-alive state — so a scrape can never
+//! wedge a serving thread.
+//!
+//! Naming: every metric is `attrax_`-prefixed; monotone counters end
+//! `_total`; histograms follow the `_bucket{le=...}`/`_count`/`_sum`
+//! cumulative convention with deterministic power-of-two edges
+//! ([`Histogram::edge`]). `attrax_snapshot_*` lines mirror
+//! [`Snapshot`]'s fields one-for-one (a test destructures the struct
+//! with no `..` to keep that set exhaustive).
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream, ToSocketAddrs};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::coordinator::fleet::Device;
+use crate::coordinator::metrics::Snapshot;
+use crate::hls::Phase;
+use crate::obs::span::{Stage, ALL_STAGES};
+use crate::obs::telemetry::{Histogram, Registry, HIST_BUCKETS};
+use crate::util::json::escape;
+
+// ---------------------------------------------------------------------------
+// Rendering
+// ---------------------------------------------------------------------------
+
+/// The registry's monotone counters with their exported names, in
+/// exposition order. One row per [`Registry`] counter field — the
+/// single source of truth shared by the renderer, the reconciliation
+/// check in `loadgen`, and the coverage tests.
+pub fn counter_pairs(reg: &Registry) -> Vec<(&'static str, u64)> {
+    vec![
+        ("attrax_completed_total", reg.completed.get()),
+        ("attrax_rejected_total", reg.rejected.get()),
+        ("attrax_rejected_busy_total", reg.rejected_busy.get()),
+        ("attrax_deadline_exceeded_total", reg.deadline_exceeded.get()),
+        ("attrax_errors_total", reg.errors.get()),
+        ("attrax_retries_total", reg.retries.get()),
+        ("attrax_breaker_trips_total", reg.breaker_trips.get()),
+        ("attrax_integrity_failures_total", reg.integrity_failures.get()),
+        ("attrax_reconnects_total", reg.reconnects.get()),
+        ("attrax_conns_total", reg.conns_total.get()),
+        ("attrax_verified_total", reg.verified.get()),
+        ("attrax_spans_sampled_out_total", reg.spans_sampled_out.get()),
+    ]
+}
+
+fn phase_label(phase: Phase) -> &'static str {
+    match phase {
+        Phase::Forward => "fwd",
+        Phase::Backward => "bwd",
+    }
+}
+
+fn push_label(out: &mut String, key: &str, value: &str) {
+    out.push_str(key);
+    out.push('=');
+    escape(value, out);
+}
+
+fn push_hist(out: &mut String, name: &str, labels: &str, h: &Histogram) {
+    let cum = h.cumulative();
+    for (i, &c) in cum.iter().enumerate() {
+        out.push_str(name);
+        out.push_str("_bucket{");
+        if !labels.is_empty() {
+            out.push_str(labels);
+            out.push(',');
+        }
+        match Histogram::edge(i) {
+            Some(e) => {
+                out.push_str("le=\"");
+                out.push_str(&e.to_string());
+                out.push('"');
+            }
+            None => out.push_str("le=\"+Inf\""),
+        }
+        out.push_str("} ");
+        out.push_str(&c.to_string());
+        out.push('\n');
+    }
+    for (suffix, v) in [("_count", h.count()), ("_sum", h.sum())] {
+        out.push_str(name);
+        out.push_str(suffix);
+        if !labels.is_empty() {
+            out.push('{');
+            out.push_str(labels);
+            out.push('}');
+        }
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+}
+
+/// Render the registry: counters, gauges, the per-stage and
+/// end-to-end latency histograms, and (when installed) the per-unit
+/// engine profile.
+pub fn render_registry(reg: &Registry) -> String {
+    let mut out = String::with_capacity(8192);
+    out.push_str("# attrax stats exposition\n");
+    for (name, v) in counter_pairs(reg) {
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    for (name, v) in [
+        ("attrax_conns_open", reg.conns_open.get()),
+        ("attrax_queue_depth", reg.queue_depth.get()),
+    ] {
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    for st in ALL_STAGES {
+        if st == Stage::Accept {
+            continue; // a span's first stamp opens no segment
+        }
+        let mut labels = String::new();
+        push_label(&mut labels, "stage", st.name());
+        push_hist(&mut out, "attrax_stage_ns", &labels, &reg.stage_ns[st as usize]);
+    }
+    push_hist(&mut out, "attrax_request_ns", "", &reg.request_ns);
+    if let Some(prof) = reg.profiler() {
+        for row in prof.rows() {
+            let mut labels = String::new();
+            push_label(&mut labels, "unit", &row.unit);
+            labels.push(',');
+            push_label(&mut labels, "kind", row.kind.name());
+            labels.push(',');
+            push_label(&mut labels, "phase", phase_label(row.phase));
+            for (name, v) in [
+                ("attrax_unit_passes_total", row.passes),
+                ("attrax_unit_cycles_total", row.cycles),
+                ("attrax_unit_wall_ns_total", row.wall_ns),
+            ] {
+                out.push_str(name);
+                out.push('{');
+                out.push_str(&labels);
+                out.push_str("} ");
+                out.push_str(&v.to_string());
+                out.push('\n');
+            }
+        }
+    }
+    out
+}
+
+/// Render the coordinator's [`Snapshot`] as `attrax_snapshot_*`
+/// lines. The destructure is exhaustive (no `..`) on purpose: adding
+/// a `Snapshot` field without exporting it fails to compile.
+pub fn snapshot_lines(snap: &Snapshot) -> String {
+    let Snapshot {
+        completed,
+        rejected,
+        rejected_busy,
+        deadline_exceeded,
+        open_conns,
+        total_conns,
+        errors,
+        retries,
+        breaker_trips,
+        integrity_failures,
+        reconnects,
+        wall_s,
+        throughput_ips,
+        p50_ms,
+        p95_ms,
+        p99_ms,
+        mean_ms,
+        mean_queue_wait_ms,
+        p50_queue_wait_ms,
+        p95_queue_wait_ms,
+        p99_queue_wait_ms,
+        mean_sim_mcycles,
+        verified,
+        mean_verify_corr,
+        min_verify_corr,
+    } = snap;
+    let ints: [(&str, u64); 11] = [
+        ("completed", *completed),
+        ("rejected", *rejected),
+        ("rejected_busy", *rejected_busy),
+        ("deadline_exceeded", *deadline_exceeded),
+        ("open_conns", *open_conns),
+        ("total_conns", *total_conns),
+        ("errors", *errors),
+        ("retries", *retries),
+        ("breaker_trips", *breaker_trips),
+        ("integrity_failures", *integrity_failures),
+        ("reconnects", *reconnects),
+    ];
+    let floats: [(&str, f64); 13] = [
+        ("wall_s", *wall_s),
+        ("throughput_ips", *throughput_ips),
+        ("p50_ms", *p50_ms),
+        ("p95_ms", *p95_ms),
+        ("p99_ms", *p99_ms),
+        ("mean_ms", *mean_ms),
+        ("mean_queue_wait_ms", *mean_queue_wait_ms),
+        ("p50_queue_wait_ms", *p50_queue_wait_ms),
+        ("p95_queue_wait_ms", *p95_queue_wait_ms),
+        ("p99_queue_wait_ms", *p99_queue_wait_ms),
+        ("mean_sim_mcycles", *mean_sim_mcycles),
+        ("mean_verify_corr", *mean_verify_corr),
+        ("min_verify_corr", *min_verify_corr),
+    ];
+    let mut out = String::new();
+    for (name, v) in ints {
+        out.push_str("attrax_snapshot_");
+        out.push_str(name);
+        out.push(' ');
+        out.push_str(&v.to_string());
+        out.push('\n');
+    }
+    out.push_str("attrax_snapshot_verified ");
+    out.push_str(&verified.to_string());
+    out.push('\n');
+    for (name, v) in floats {
+        out.push_str("attrax_snapshot_");
+        out.push_str(name);
+        out.push(' ');
+        if v.is_finite() {
+            out.push_str(&v.to_string());
+        } else {
+            out.push_str("NaN");
+        }
+        out.push('\n');
+    }
+    out
+}
+
+/// Render per-device fleet gauges: completed requests, the router's
+/// in-flight load estimate, and breaker state/trips.
+pub fn device_lines(devices: &[Arc<Device>]) -> String {
+    let mut out = String::new();
+    for (i, dev) in devices.iter().enumerate() {
+        let mut labels = String::new();
+        push_label(&mut labels, "device", &i.to_string());
+        labels.push(',');
+        push_label(&mut labels, "board", dev.board.name());
+        let rows: [(&str, u64); 4] = [
+            ("attrax_device_completed_total", dev.completed.load(Ordering::Relaxed)),
+            ("attrax_device_inflight_us", dev.inflight_us()),
+            ("attrax_device_breaker_open", dev.breaker.is_open() as u64),
+            ("attrax_device_breaker_trips_total", dev.breaker.trips()),
+        ];
+        for (name, v) in rows {
+            out.push_str(name);
+            out.push('{');
+            out.push_str(&labels);
+            out.push_str("} ");
+            out.push_str(&v.to_string());
+            out.push('\n');
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------------
+// Endpoint
+// ---------------------------------------------------------------------------
+
+/// One-shot TCP stats endpoint: each accepted connection gets one
+/// full render and an immediate close. Runs its accept loop on a
+/// dedicated thread; dropping the endpoint stops and joins it.
+pub struct StatsEndpoint {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    thread: Option<JoinHandle<()>>,
+}
+
+impl StatsEndpoint {
+    pub fn start<A: ToSocketAddrs>(
+        addr: A,
+        render: Box<dyn Fn() -> String + Send + Sync>,
+    ) -> anyhow::Result<StatsEndpoint> {
+        let listener = TcpListener::bind(addr)?;
+        listener.set_nonblocking(true)?;
+        let local = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let thread = std::thread::Builder::new()
+            .name("attrax-stats".into())
+            .spawn(move || {
+                while !stop2.load(Ordering::Relaxed) {
+                    match listener.accept() {
+                        Ok((mut stream, _)) => {
+                            let _ = stream.set_write_timeout(Some(Duration::from_secs(2)));
+                            let body = render();
+                            let _ = stream.write_all(body.as_bytes());
+                            // drop closes the socket: one shot per conn
+                        }
+                        Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                            std::thread::sleep(Duration::from_millis(5));
+                        }
+                        Err(_) => std::thread::sleep(Duration::from_millis(5)),
+                    }
+                }
+            })?;
+        Ok(StatsEndpoint { addr: local, stop, thread: Some(thread) })
+    }
+
+    pub fn local_addr(&self) -> SocketAddr {
+        self.addr
+    }
+}
+
+impl Drop for StatsEndpoint {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.thread.take() {
+            let _ = t.join();
+        }
+    }
+}
+
+impl std::fmt::Debug for StatsEndpoint {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("StatsEndpoint").field("addr", &self.addr).finish()
+    }
+}
+
+/// Fetch one exposition body from a stats endpoint.
+pub fn scrape(addr: &str, timeout: Duration) -> anyhow::Result<String> {
+    let sa = addr
+        .to_socket_addrs()?
+        .next()
+        .ok_or_else(|| anyhow::anyhow!("stats addr {addr} resolves to nothing"))?;
+    let mut stream = TcpStream::connect_timeout(&sa, timeout)?;
+    stream.set_read_timeout(Some(timeout))?;
+    let mut body = String::new();
+    stream.read_to_string(&mut body)?;
+    Ok(body)
+}
+
+// ---------------------------------------------------------------------------
+// Parsing
+// ---------------------------------------------------------------------------
+
+/// One parsed exposition line.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Metric {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl Metric {
+    pub fn label(&self, key: &str) -> Option<&str> {
+        self.labels.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+    }
+}
+
+fn unescape(s: &str) -> anyhow::Result<(String, usize)> {
+    // `s` starts just past the opening quote; returns (value, bytes
+    // consumed including the closing quote).
+    let mut out = String::new();
+    let mut chars = s.char_indices();
+    while let Some((i, c)) = chars.next() {
+        match c {
+            '"' => return Ok((out, i + 1)),
+            '\\' => match chars.next() {
+                Some((_, '"')) => out.push('"'),
+                Some((_, '\\')) => out.push('\\'),
+                Some((_, 'n')) => out.push('\n'),
+                Some((_, 'r')) => out.push('\r'),
+                Some((_, 't')) => out.push('\t'),
+                Some((_, 'u')) => {
+                    let mut code = 0u32;
+                    for _ in 0..4 {
+                        let (_, h) = chars
+                            .next()
+                            .ok_or_else(|| anyhow::anyhow!("truncated \\u escape"))?;
+                        code = code * 16
+                            + h.to_digit(16).ok_or_else(|| anyhow::anyhow!("bad \\u digit"))?;
+                    }
+                    out.push(
+                        char::from_u32(code)
+                            .ok_or_else(|| anyhow::anyhow!("bad \\u code point"))?,
+                    );
+                }
+                other => anyhow::bail!("bad escape {other:?} in label value"),
+            },
+            c => out.push(c),
+        }
+    }
+    anyhow::bail!("unterminated label value")
+}
+
+fn parse_line(line: &str) -> anyhow::Result<Metric> {
+    let (head, rest) = match line.find(|c| c == '{' || c == ' ') {
+        Some(i) => line.split_at(i),
+        None => anyhow::bail!("no value on line {line:?}"),
+    };
+    let name = head.to_string();
+    anyhow::ensure!(!name.is_empty(), "empty metric name in {line:?}");
+    let mut labels = Vec::new();
+    let mut rest = rest;
+    if let Some(stripped) = rest.strip_prefix('{') {
+        let mut cur = stripped;
+        loop {
+            let eq = cur
+                .find('=')
+                .ok_or_else(|| anyhow::anyhow!("label without '=' in {line:?}"))?;
+            let key = cur[..eq].trim().to_string();
+            let after = &cur[eq + 1..];
+            let q = after
+                .strip_prefix('"')
+                .ok_or_else(|| anyhow::anyhow!("unquoted label value in {line:?}"))?;
+            let (value, used) = unescape(q)?;
+            labels.push((key, value));
+            let tail = &after[1 + used..];
+            if let Some(t) = tail.strip_prefix(',') {
+                cur = t;
+            } else if let Some(t) = tail.strip_prefix('}') {
+                rest = t;
+                break;
+            } else {
+                anyhow::bail!("expected ',' or '}}' after label in {line:?}");
+            }
+        }
+    }
+    let value: f64 = rest
+        .trim()
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad value {:?} in {line:?}", rest.trim()))?;
+    Ok(Metric { name, labels, value })
+}
+
+/// Parse a full exposition body line-by-line (comments and blank
+/// lines skipped; any malformed line is an error).
+pub fn parse(text: &str) -> anyhow::Result<Vec<Metric>> {
+    let mut out = Vec::new();
+    for line in text.lines() {
+        let line = line.trim_end();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        out.push(parse_line(line)?);
+    }
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------------
+// Summarizing (loadgen report + `attrax top`)
+// ---------------------------------------------------------------------------
+
+/// Per-stage latency quantiles recovered from the cumulative
+/// histogram buckets of one scrape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct StageQuantiles {
+    pub stage: String,
+    pub count: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// One per-unit engine profile row from a scrape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct UnitRow {
+    pub unit: String,
+    pub kind: String,
+    pub phase: String,
+    pub passes: u64,
+    pub cycles: u64,
+    pub wall_ns: u64,
+}
+
+/// One per-device fleet row from a scrape.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DeviceRow {
+    pub device: u64,
+    pub board: String,
+    pub completed: u64,
+    pub inflight_us: u64,
+    pub breaker_open: bool,
+    pub breaker_trips: u64,
+}
+
+/// Structured view of one scrape.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct StatsSummary {
+    /// Unlabeled `_total` counters by full metric name.
+    pub counters: std::collections::BTreeMap<String, f64>,
+    /// Unlabeled non-counter values (gauges + `attrax_snapshot_*`).
+    pub gauges: std::collections::BTreeMap<String, f64>,
+    pub stages: Vec<StageQuantiles>,
+    pub units: Vec<UnitRow>,
+    pub devices: Vec<DeviceRow>,
+}
+
+fn bucket_quantile(buckets: &[(f64, f64)], total: f64, q: f64) -> f64 {
+    // buckets: (upper edge ns, cumulative count) sorted by edge.
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let rank = (q * total).ceil().clamp(1.0, total);
+    for &(edge, cum) in buckets {
+        if cum >= rank {
+            return edge;
+        }
+    }
+    f64::INFINITY
+}
+
+fn hist_quantiles(metrics: &[Metric], name: &str, filter: Option<(&str, &str)>) -> StageQuantiles {
+    let bucket_name = format!("{name}_bucket");
+    let matches = |m: &Metric| match filter {
+        Some((k, v)) => m.label(k) == Some(v),
+        None => true,
+    };
+    let mut buckets: Vec<(f64, f64)> = metrics
+        .iter()
+        .filter(|m| m.name == bucket_name && matches(m))
+        .filter_map(|m| {
+            let le = m.label("le")?;
+            let edge = if le == "+Inf" { f64::INFINITY } else { le.parse().ok()? };
+            Some((edge, m.value))
+        })
+        .collect();
+    buckets.sort_by(|a, b| a.0.total_cmp(&b.0));
+    let count_of = |suffix: &str| {
+        metrics
+            .iter()
+            .find(|m| m.name == format!("{name}{suffix}") && matches(m))
+            .map_or(0.0, |m| m.value)
+    };
+    let (count, sum) = (count_of("_count"), count_of("_sum"));
+    let ns_to_ms = 1e-6;
+    StageQuantiles {
+        stage: filter.map(|(_, v)| v.to_string()).unwrap_or_else(|| "request".into()),
+        count: count as u64,
+        mean_ms: if count > 0.0 { sum / count * ns_to_ms } else { 0.0 },
+        p50_ms: bucket_quantile(&buckets, count, 0.50) * ns_to_ms,
+        p95_ms: bucket_quantile(&buckets, count, 0.95) * ns_to_ms,
+        p99_ms: bucket_quantile(&buckets, count, 0.99) * ns_to_ms,
+    }
+}
+
+/// Build the structured summary of one parsed scrape: counters,
+/// gauges, per-stage quantiles (pipeline order, stamped stages only),
+/// the end-to-end `request` row, per-unit profile rows (exposition
+/// order), and per-device fleet rows.
+pub fn summarize(metrics: &[Metric]) -> StatsSummary {
+    let mut out = StatsSummary::default();
+    for m in metrics {
+        if m.labels.is_empty() {
+            if m.name.ends_with("_total") {
+                out.counters.insert(m.name.clone(), m.value);
+            } else if !m.name.ends_with("_bucket")
+                && !m.name.ends_with("_count")
+                && !m.name.ends_with("_sum")
+            {
+                out.gauges.insert(m.name.clone(), m.value);
+            }
+        }
+    }
+    for st in ALL_STAGES {
+        if st == Stage::Accept {
+            continue;
+        }
+        let q = hist_quantiles(metrics, "attrax_stage_ns", Some(("stage", st.name())));
+        if q.count > 0 {
+            out.stages.push(q);
+        }
+    }
+    let req = hist_quantiles(metrics, "attrax_request_ns", None);
+    if req.count > 0 {
+        out.stages.push(req);
+    }
+    // units: keyed rows appear as passes/cycles/wall triples; walk the
+    // passes rows (exposition order = plan order) and join the rest.
+    let find = |name: &str, unit: &str, phase: &str| {
+        metrics
+            .iter()
+            .find(|m| m.name == name && m.label("unit") == Some(unit) && m.label("phase") == Some(phase))
+            .map_or(0.0, |m| m.value)
+    };
+    for m in metrics.iter().filter(|m| m.name == "attrax_unit_passes_total") {
+        let (Some(unit), Some(kind), Some(phase)) =
+            (m.label("unit"), m.label("kind"), m.label("phase"))
+        else {
+            continue;
+        };
+        out.units.push(UnitRow {
+            unit: unit.to_string(),
+            kind: kind.to_string(),
+            phase: phase.to_string(),
+            passes: m.value as u64,
+            cycles: find("attrax_unit_cycles_total", unit, phase) as u64,
+            wall_ns: find("attrax_unit_wall_ns_total", unit, phase) as u64,
+        });
+    }
+    let dev_find = |name: &str, device: &str| {
+        metrics
+            .iter()
+            .find(|m| m.name == name && m.label("device") == Some(device))
+            .map_or(0.0, |m| m.value)
+    };
+    let mut dev_rows: Vec<DeviceRow> = metrics
+        .iter()
+        .filter(|m| m.name == "attrax_device_completed_total")
+        .filter_map(|m| {
+            let device = m.label("device")?;
+            Some(DeviceRow {
+                device: device.parse().ok()?,
+                board: m.label("board").unwrap_or("?").to_string(),
+                completed: m.value as u64,
+                inflight_us: dev_find("attrax_device_inflight_us", device) as u64,
+                breaker_open: dev_find("attrax_device_breaker_open", device) != 0.0,
+                breaker_trips: dev_find("attrax_device_breaker_trips_total", device) as u64,
+            })
+        })
+        .collect();
+    dev_rows.sort_by_key(|d| d.device);
+    out.devices = dev_rows;
+    out
+}
+
+impl StatsSummary {
+    /// JSON shape embedded in `BENCH_serve.json` (`server_stats`).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::{arr, num, obj, s, Json};
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+        );
+        let stages = arr(self
+            .stages
+            .iter()
+            .map(|st| {
+                obj(vec![
+                    ("stage", s(&st.stage)),
+                    ("count", num(st.count as f64)),
+                    ("mean_ms", num(st.mean_ms)),
+                    ("p50_ms", num(st.p50_ms)),
+                    ("p95_ms", num(st.p95_ms)),
+                    ("p99_ms", num(st.p99_ms)),
+                ])
+            })
+            .collect());
+        let units = arr(self
+            .units
+            .iter()
+            .map(|u| {
+                obj(vec![
+                    ("unit", s(&u.unit)),
+                    ("kind", s(&u.kind)),
+                    ("phase", s(&u.phase)),
+                    ("passes", num(u.passes as f64)),
+                    ("cycles", num(u.cycles as f64)),
+                    ("wall_ns", num(u.wall_ns as f64)),
+                ])
+            })
+            .collect());
+        let devices = arr(self
+            .devices
+            .iter()
+            .map(|d| {
+                obj(vec![
+                    ("device", num(d.device as f64)),
+                    ("board", s(&d.board)),
+                    ("completed", num(d.completed as f64)),
+                    ("inflight_us", num(d.inflight_us as f64)),
+                    ("breaker_open", Json::Bool(d.breaker_open)),
+                    ("breaker_trips", num(d.breaker_trips as f64)),
+                ])
+            })
+            .collect());
+        obj(vec![
+            ("counters", counters),
+            ("stages", stages),
+            ("units", units),
+            ("devices", devices),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Dashboard (`attrax top`)
+// ---------------------------------------------------------------------------
+
+fn counter(sum: &StatsSummary, name: &str) -> f64 {
+    sum.counters.get(name).copied().unwrap_or(0.0)
+}
+
+/// Render one `attrax top` frame from the current scrape summary
+/// (and, when available, the previous one for rate computation over
+/// `dt_s` seconds of wall time between scrapes).
+pub fn dashboard(prev: Option<&StatsSummary>, cur: &StatsSummary, dt_s: f64) -> String {
+    let mut out = String::with_capacity(4096);
+    let completed = counter(cur, "attrax_completed_total");
+    let rps = match prev {
+        Some(p) if dt_s > 0.0 => (completed - counter(p, "attrax_completed_total")).max(0.0) / dt_s,
+        _ => 0.0,
+    };
+    let gauge = |n: &str| cur.gauges.get(n).copied().unwrap_or(0.0);
+    out.push_str(&format!(
+        "attrax top — {rps:.1} req/s | completed {completed:.0} | shed {:.0} | \
+         deadline {:.0} | errors {:.0} | retries {:.0}\n",
+        counter(cur, "attrax_rejected_busy_total"),
+        counter(cur, "attrax_deadline_exceeded_total"),
+        counter(cur, "attrax_errors_total"),
+        counter(cur, "attrax_retries_total"),
+    ));
+    out.push_str(&format!(
+        "conns open {:.0} / total {:.0} | queue depth {:.0} | sampled-out spans {:.0}\n",
+        gauge("attrax_conns_open"),
+        counter(cur, "attrax_conns_total"),
+        gauge("attrax_queue_depth"),
+        counter(cur, "attrax_spans_sampled_out_total"),
+    ));
+    if !cur.stages.is_empty() {
+        out.push_str("\n  stage              count      mean_ms     p50_ms     p95_ms     p99_ms\n");
+        for st in &cur.stages {
+            out.push_str(&format!(
+                "  {:<16} {:>8} {:>12.3} {:>10.3} {:>10.3} {:>10.3}\n",
+                st.stage, st.count, st.mean_ms, st.p50_ms, st.p95_ms, st.p99_ms
+            ));
+        }
+    }
+    if !cur.units.is_empty() {
+        let total_wall: u64 = cur.units.iter().map(|u| u.wall_ns).sum();
+        out.push_str("\n  unit       kind     phase    passes       Mcycles      wall_ms   wall%\n");
+        for u in &cur.units {
+            let share = if total_wall > 0 { 100.0 * u.wall_ns as f64 / total_wall as f64 } else { 0.0 };
+            out.push_str(&format!(
+                "  {:<10} {:<8} {:<5} {:>9} {:>13.3} {:>12.3} {:>6.1}\n",
+                u.unit,
+                u.kind,
+                u.phase,
+                u.passes,
+                u.cycles as f64 / 1e6,
+                u.wall_ns as f64 / 1e6,
+                share
+            ));
+        }
+    }
+    if !cur.devices.is_empty() {
+        out.push_str("\n  device  board        completed  inflight_us  breaker  trips\n");
+        for d in &cur.devices {
+            out.push_str(&format!(
+                "  {:<7} {:<12} {:>9} {:>12} {:<8} {:>5}\n",
+                d.device,
+                d.board,
+                d.completed,
+                d.inflight_us,
+                if d.breaker_open { "OPEN" } else { "closed" },
+                d.breaker_trips
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::hls::EngineKind;
+    use crate::obs::telemetry::UnitProfiler;
+
+    #[test]
+    fn render_parse_roundtrip_with_hard_label_values() {
+        let reg = Registry::new();
+        reg.completed.add(7);
+        reg.install_profiler(Arc::new(UnitProfiler::new(vec![(
+            "we\"ird\\unit\n".into(),
+            EngineKind::Conv,
+        )])));
+        reg.profiler().unwrap().record(0, Phase::Forward, 123, 456);
+        let text = render_registry(&reg);
+        let metrics = parse(&text).unwrap();
+        let m = metrics
+            .iter()
+            .find(|m| m.name == "attrax_unit_cycles_total")
+            .expect("profiler row exported");
+        assert_eq!(m.label("unit"), Some("we\"ird\\unit\n"), "escaping round-trips");
+        assert_eq!(m.value, 123.0);
+        let c = metrics.iter().find(|m| m.name == "attrax_completed_total").unwrap();
+        assert_eq!(c.value, 7.0);
+    }
+
+    #[test]
+    fn every_rendered_metric_is_unique() {
+        let reg = Registry::new();
+        reg.install_profiler(Arc::new(UnitProfiler::new(vec![
+            ("c1".into(), EngineKind::Conv),
+            ("f1".into(), EngineKind::Vmm),
+        ])));
+        let text = render_registry(&reg);
+        let metrics = parse(&text).unwrap();
+        let mut seen = std::collections::BTreeSet::new();
+        for m in &metrics {
+            let mut key = m.name.clone();
+            for (k, v) in &m.labels {
+                key.push_str(&format!("|{k}={v}"));
+            }
+            assert!(seen.insert(key.clone()), "duplicate series {key}");
+        }
+        assert!(metrics.len() > 12 + 2 + 8 * (HIST_BUCKETS + 2));
+    }
+
+    #[test]
+    fn parse_rejects_malformed_lines() {
+        assert!(parse("attrax_x{unterminated=\"v} 1").is_err());
+        assert!(parse("attrax_x nope").is_err());
+        assert!(parse("attrax_x{k=unquoted} 1").is_err());
+        assert!(parse("").unwrap().is_empty());
+        assert!(parse("# comment only\n\n").unwrap().is_empty());
+    }
+
+    #[test]
+    fn stage_quantiles_come_from_cumulative_buckets() {
+        let reg = Registry::new();
+        // 90 fast decodes (~2 µs) and 10 slow ones (~1 ms)
+        for _ in 0..90 {
+            reg.stage_ns[Stage::Decode as usize].observe(2_000);
+        }
+        for _ in 0..10 {
+            reg.stage_ns[Stage::Decode as usize].observe(1_000_000);
+        }
+        let metrics = parse(&render_registry(&reg)).unwrap();
+        let sum = summarize(&metrics);
+        let decode = sum.stages.iter().find(|s| s.stage == "decode").expect("decode row");
+        assert_eq!(decode.count, 100);
+        assert!(decode.p50_ms <= 0.005, "p50 in the fast buckets, got {}", decode.p50_ms);
+        assert!(decode.p95_ms >= 0.5, "p95 must see the slow tail, got {}", decode.p95_ms);
+        assert!(decode.p50_ms <= decode.p95_ms && decode.p95_ms <= decode.p99_ms);
+        // stages without observations are omitted entirely
+        assert!(!sum.stages.iter().any(|s| s.stage == "encode"));
+    }
+
+    #[test]
+    fn snapshot_lines_cover_every_field_and_parse() {
+        let snap = Snapshot {
+            completed: 1,
+            rejected: 2,
+            rejected_busy: 3,
+            deadline_exceeded: 4,
+            open_conns: 5,
+            total_conns: 6,
+            errors: 7,
+            retries: 8,
+            breaker_trips: 9,
+            integrity_failures: 10,
+            reconnects: 11,
+            wall_s: 1.5,
+            throughput_ips: 2.5,
+            p50_ms: 3.5,
+            p95_ms: 4.5,
+            p99_ms: 5.5,
+            mean_ms: 6.5,
+            mean_queue_wait_ms: 7.5,
+            p50_queue_wait_ms: 8.5,
+            p95_queue_wait_ms: 9.5,
+            p99_queue_wait_ms: 10.5,
+            mean_sim_mcycles: 11.5,
+            verified: 12,
+            mean_verify_corr: 0.25,
+            min_verify_corr: f64::NAN,
+        };
+        let metrics = parse(&snapshot_lines(&snap)).unwrap();
+        assert_eq!(metrics.len(), 25, "one line per Snapshot field");
+        let get = |n: &str| {
+            metrics
+                .iter()
+                .find(|m| m.name == format!("attrax_snapshot_{n}"))
+                .unwrap_or_else(|| panic!("missing attrax_snapshot_{n}"))
+                .value
+        };
+        assert_eq!(get("completed"), 1.0);
+        assert_eq!(get("reconnects"), 11.0);
+        assert_eq!(get("verified"), 12.0);
+        assert_eq!(get("mean_verify_corr"), 0.25);
+        assert!(get("min_verify_corr").is_nan(), "NaN survives the wire");
+    }
+
+    #[test]
+    fn endpoint_serves_one_shot_scrapes() {
+        let ep = StatsEndpoint::start(
+            "127.0.0.1:0",
+            Box::new(|| "attrax_completed_total 42\n".to_string()),
+        )
+        .unwrap();
+        let addr = ep.local_addr().to_string();
+        for _ in 0..3 {
+            let body = scrape(&addr, Duration::from_secs(2)).unwrap();
+            let metrics = parse(&body).unwrap();
+            assert_eq!(metrics.len(), 1);
+            assert_eq!(metrics[0].value, 42.0);
+        }
+        drop(ep); // joins the accept thread
+        assert!(scrape(&addr, Duration::from_millis(200)).is_err(), "endpoint gone after drop");
+    }
+
+    #[test]
+    fn dashboard_renders_rates_and_tables() {
+        let reg = Registry::new();
+        reg.completed.add(100);
+        reg.stage_ns[Stage::Decode as usize].observe(2_000);
+        let prev = summarize(&parse(&render_registry(&reg)).unwrap());
+        reg.completed.add(50);
+        let cur = summarize(&parse(&render_registry(&reg)).unwrap());
+        let frame = dashboard(Some(&prev), &cur, 2.0);
+        assert!(frame.contains("25.0 req/s"), "50 completions / 2 s:\n{frame}");
+        assert!(frame.contains("decode"));
+        let cold = dashboard(None, &cur, 0.0);
+        assert!(cold.contains("0.0 req/s"));
+    }
+}

@@ -15,15 +15,31 @@
 //!   bitwise — the engine's determinism contract, enforced end to
 //!   end;
 //! * [`doctor`] audits a trace offline for SLO misses, shed storms,
-//!   batching pathologies, breaker flaps, and queue-wait outliers,
-//!   emitting the byte-stable `attrax-doctor/v1` report.
+//!   batching pathologies, breaker flaps, queue-wait outliers, and
+//!   fleet load imbalance, emitting the byte-stable `attrax-doctor/v1`
+//!   report;
+//! * [`telemetry`] is the *live* hot path — a lock-free metrics
+//!   registry (counters/gauges/fixed-edge histograms, atomics only)
+//!   plus the per-fused-unit engine profiler and the deterministic
+//!   1-in-N span sampler;
+//! * [`export`] is the live cold side — Prometheus-style text
+//!   exposition of the registry over a one-shot TCP endpoint
+//!   (`serve --stats-addr`), with the scrape client, parser, and
+//!   `attrax top` dashboard renderer.
 
 pub mod doctor;
+pub mod export;
 pub mod replay;
 pub mod span;
+pub mod telemetry;
 pub mod trace;
 
-pub use doctor::{diagnose, DoctorReport, DoctorSpec, Finding};
-pub use replay::{replay_in_process, replay_live, replay_with_sim, ReplayReport, Timing};
+pub use doctor::{diagnose, diagnose_segments, DoctorReport, DoctorSpec, Finding};
+pub use export::{scrape, StatsEndpoint, StatsSummary};
+pub use replay::{
+    replay_in_process, replay_live, replay_segments_in_process, replay_segments_live,
+    replay_with_sim, ReplayReport, Timing,
+};
 pub use span::{Recorder, Span, Stage};
-pub use trace::{TraceMeta, TraceReader, TraceWriter};
+pub use telemetry::{Registry, SampledRecorder, UnitProfiler};
+pub use trace::{read_all_segments, TraceMeta, TraceReader, TraceWriter};

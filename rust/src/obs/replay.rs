@@ -158,6 +158,18 @@ pub fn replay_with_sim(
     timing: Timing,
 ) -> anyhow::Result<ReplayReport> {
     let (meta, records) = TraceReader::open(path)?.read_all()?;
+    replay_records_with_sim(&meta, &records, sim, timing)
+}
+
+/// The in-process replay core: re-drive already-loaded records
+/// through a coordinator built on `sim` (shared by the single-file
+/// and multi-segment entry points).
+fn replay_records_with_sim(
+    meta: &TraceMeta,
+    records: &[TraceRecord],
+    sim: Simulator,
+    timing: Timing,
+) -> anyhow::Result<ReplayReport> {
     anyhow::ensure!(
         sim.net.input.elems() == meta.elems,
         "replay model takes {} elems, trace says {}",
@@ -176,7 +188,7 @@ pub fn replay_with_sim(
     )?;
     let mut report = ReplayReport::default();
     let mut prev_accept = 0u64;
-    for rec in &records {
+    for rec in records {
         report.frames += 1;
         pace(timing, &mut prev_accept, rec);
         let Some(recorded) = recorded_response(rec) else {
@@ -236,35 +248,69 @@ pub fn replay_in_process(path: &str, timing: Timing) -> anyhow::Result<ReplayRep
     replay_with_sim(path, sim, timing)
 }
 
+/// Replay a rotated multi-segment capture in-process as one stream
+/// (segments in order, coordinator rebuilt once from the shared meta).
+pub fn replay_segments_in_process(
+    paths: &[String],
+    timing: Timing,
+) -> anyhow::Result<ReplayReport> {
+    let (meta, records) = crate::obs::trace::read_all_segments(paths)?;
+    let sim = sim_from_meta(&meta)?;
+    replay_records_with_sim(&meta, &records, sim, timing)
+}
+
 /// Replay `path` against a live server at `addr`, resending the exact
 /// recorded request frames over one connection (preserving arrival
 /// order) with `trace_seq` set to the original frame id so the far
 /// end's own trace can be joined back to this one.
 pub fn replay_live(path: &str, addr: &str, timing: Timing) -> anyhow::Result<ReplayReport> {
-    let mut reader = TraceReader::open(path)?;
+    replay_segments_live(std::slice::from_ref(&path.to_string()), addr, timing)
+}
+
+/// Live replay of a rotated multi-segment capture: one connection and
+/// one resend sequence shared across all segments (the far end sees
+/// the same stream the original server did). Segments are read
+/// incrementally; every segment must repeat the first one's meta.
+pub fn replay_segments_live(
+    paths: &[String],
+    addr: &str,
+    timing: Timing,
+) -> anyhow::Result<ReplayReport> {
+    anyhow::ensure!(!paths.is_empty(), "no trace segments given");
     let mut stream = TcpStream::connect(addr)?;
     stream.set_nodelay(true).ok();
     let mut report = ReplayReport::default();
     let mut prev_accept = 0u64;
     let mut seq = 0u64;
-    while let Some(rec) = reader.next()? {
-        report.frames += 1;
-        pace(timing, &mut prev_accept, &rec);
-        let Some(recorded) = recorded_response(&rec) else {
-            report.skipped += 1;
-            continue;
-        };
-        seq += 1;
-        let mut req = rec.req.clone();
-        req.trace_seq = Some(rec.req.id);
-        req.id = seq;
-        proto::write_frame(&mut stream, &Frame::Request(req))?;
-        let reply = proto::read_frame(&mut stream)
-            .map_err(|e| anyhow::anyhow!("live reply: {e}"))?
-            .ok_or_else(|| anyhow::anyhow!("server closed the connection mid-replay"))?;
-        match reply {
-            Frame::Response(again) if responses_match(recorded, &again) => report.matched += 1,
-            _ => report.diverged += 1,
+    let mut meta: Option<TraceMeta> = None;
+    for path in paths {
+        let mut reader = TraceReader::open(path)?;
+        match &meta {
+            None => meta = Some(reader.meta.clone()),
+            Some(m) => anyhow::ensure!(
+                *m == reader.meta,
+                "segment {path} has a different meta record (not the same capture)"
+            ),
+        }
+        while let Some(rec) = reader.next()? {
+            report.frames += 1;
+            pace(timing, &mut prev_accept, &rec);
+            let Some(recorded) = recorded_response(&rec) else {
+                report.skipped += 1;
+                continue;
+            };
+            seq += 1;
+            let mut req = rec.req.clone();
+            req.trace_seq = Some(rec.req.id);
+            req.id = seq;
+            proto::write_frame(&mut stream, &Frame::Request(req))?;
+            let reply = proto::read_frame(&mut stream)
+                .map_err(|e| anyhow::anyhow!("live reply: {e}"))?
+                .ok_or_else(|| anyhow::anyhow!("server closed the connection mid-replay"))?;
+            match reply {
+                Frame::Response(again) if responses_match(recorded, &again) => report.matched += 1,
+                _ => report.diverged += 1,
+            }
         }
     }
     Ok(report)

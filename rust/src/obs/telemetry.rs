@@ -1,0 +1,597 @@
+//! Live telemetry (S18): a lock-free metrics registry and a per-unit
+//! engine profiler.
+//!
+//! Everything here is publish-side machinery for the hot path, so the
+//! memory model is deliberate:
+//!
+//! * every metric is a plain `AtomicU64` updated with `Relaxed`
+//!   ordering — publication is a handful of uncontended atomic adds,
+//!   never a lock, never a heap allocation (the
+//!   `tests/alloc_regression.rs` pin extends over it);
+//! * the registry holds a **fixed** field per metric — no name→metric
+//!   map, no interning, no registration at request time. The exported
+//!   name set is decided at compile time (`obs::export` renders it);
+//! * histograms use fixed log-scale bucket edges (powers of two from
+//!   2^10 ns up), so bucket boundaries are deterministic across runs
+//!   and machines and two scrapes are directly comparable;
+//! * nothing in the registry reads the wall clock. Durations are
+//!   observed from `obs::span` stamps; rates are the *scraper's*
+//!   business (two scrapes + wall time between them).
+//!
+//! Scrape-side reads are `Relaxed` too: a scrape concurrent with
+//! traffic sees each metric at some recent value, not a consistent
+//! cross-metric cut. The one exact-reconciliation guarantee is with
+//! [`crate::coordinator::metrics::Metrics`]: its record methods
+//! dual-write these counters inside the same critical section that
+//! updates the snapshot state, so a quiesced server scrapes counters
+//! that equal its final `Snapshot` exactly.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, OnceLock};
+
+use crate::hls::{EngineKind, Phase};
+use crate::obs::span::{Recorder, Span, Stage, ALL_STAGES, N_STAGES};
+use crate::sched::Plan;
+use crate::serve::proto::{Frame, RequestFrame};
+
+/// Monotonic counter. `Relaxed` everywhere: per-metric totals are
+/// exact, cross-metric views are advisory.
+#[derive(Debug, Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down gauge (never underflows below zero).
+#[derive(Debug, Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn dec(&self) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(1)));
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// First finite bucket edge is `2^HIST_SHIFT` = 1024 ns (~1 µs).
+pub const HIST_SHIFT: u32 = 10;
+/// 26 finite power-of-two edges (2^10 .. 2^35 ns ≈ 34 s) + overflow.
+pub const HIST_BUCKETS: usize = 27;
+
+/// Fixed-boundary log-scale histogram of `u64` values (ns). Bucket `i`
+/// holds values `v` with `edge(i-1) < v <= edge(i)`; the last bucket
+/// is the +Inf overflow. Observing is one index computation from
+/// `leading_zeros` plus three relaxed atomic adds — O(1), alloc-free.
+#[derive(Debug)]
+pub struct Histogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+        }
+    }
+
+    /// Upper edge of bucket `i`, or `None` for the +Inf overflow.
+    pub fn edge(i: usize) -> Option<u64> {
+        if i + 1 < HIST_BUCKETS {
+            Some(1u64 << (HIST_SHIFT + i as u32))
+        } else {
+            None
+        }
+    }
+
+    /// Deterministic bucket index for a value.
+    pub fn bucket_index(v: u64) -> usize {
+        if v <= (1 << HIST_SHIFT) {
+            return 0;
+        }
+        // bits(v-1) - SHIFT: v in (2^(b-1), 2^b] lands in bucket b-SHIFT
+        let bits = 64 - (v - 1).leading_zeros();
+        ((bits - HIST_SHIFT) as usize).min(HIST_BUCKETS - 1)
+    }
+
+    pub fn observe(&self, v: u64) {
+        self.buckets[Self::bucket_index(v)].fetch_add(1, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative per-bucket counts (monotone non-decreasing by
+    /// construction; the last entry equals a concurrent lower bound on
+    /// [`Histogram::count`]).
+    pub fn cumulative(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = [0u64; HIST_BUCKETS];
+        let mut cum = 0u64;
+        for (i, slot) in out.iter_mut().enumerate() {
+            cum += self.buckets[i].load(Ordering::Relaxed);
+            *slot = cum;
+        }
+        out
+    }
+
+    /// Quantile estimate: the upper edge of the bucket holding rank
+    /// `ceil(q * count)` (`u64::MAX` for the overflow bucket, 0 when
+    /// empty). Exact to within one bucket width, like any fixed-bucket
+    /// histogram.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let cum = self.cumulative();
+        let total = cum[HIST_BUCKETS - 1];
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        for (i, &c) in cum.iter().enumerate() {
+            if c >= rank {
+                return Self::edge(i).unwrap_or(u64::MAX);
+            }
+        }
+        u64::MAX
+    }
+}
+
+/// The serving stack's live metric set: fixed fields, all atomics.
+///
+/// Counters mirror [`crate::coordinator::metrics::Snapshot`]'s
+/// monotone fields one-for-one (the `Metrics` record methods
+/// dual-write them when a registry is attached); gauges and the
+/// stage/request histograms are registry-only (spans feed them via
+/// [`Registry::observe_span`]).
+#[derive(Debug, Default)]
+pub struct Registry {
+    // -- counters (dual-written by coordinator::metrics) --
+    pub completed: Counter,
+    pub rejected: Counter,
+    pub rejected_busy: Counter,
+    pub deadline_exceeded: Counter,
+    pub errors: Counter,
+    pub retries: Counter,
+    pub breaker_trips: Counter,
+    pub integrity_failures: Counter,
+    pub reconnects: Counter,
+    pub conns_total: Counter,
+    pub verified: Counter,
+    // -- registry-only counters --
+    /// Spans dropped by a [`SampledRecorder`] (`--trace-sample N`).
+    pub spans_sampled_out: Counter,
+    // -- gauges --
+    pub conns_open: Gauge,
+    /// Coordinator queue depth. Set by the exposition endpoint at
+    /// scrape time (the queue is the source of truth; the gauge is a
+    /// sample of it, not an up/down ledger).
+    pub queue_depth: Gauge,
+    // -- histograms (ns) --
+    /// Per-stage pipeline segment latency, indexed by
+    /// [`Stage`]` as usize` (the `Accept` slot stays empty: a span's
+    /// first stamp opens no segment).
+    pub stage_ns: [Histogram; N_STAGES],
+    /// End-to-end accept→last-stamp latency.
+    pub request_ns: Histogram,
+    profiler: OnceLock<Arc<UnitProfiler>>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Install the per-unit engine profiler (once; later calls are
+    /// ignored so racing workers can all try).
+    pub fn install_profiler(&self, p: Arc<UnitProfiler>) {
+        let _ = self.profiler.set(p);
+    }
+
+    pub fn profiler(&self) -> Option<&Arc<UnitProfiler>> {
+        self.profiler.get()
+    }
+
+    /// Fold one completed request span into the latency histograms.
+    /// Atomics only — safe on the recorder-disabled hot path.
+    pub fn observe_span(&self, span: &Span) {
+        for st in ALL_STAGES {
+            if st == Stage::Accept {
+                continue;
+            }
+            if let Some(ns) = span.segment_ns(st) {
+                self.stage_ns[st as usize].observe(ns);
+            }
+        }
+        self.request_ns.observe(span.total_ns());
+    }
+}
+
+/// One (unit, phase) profile slot.
+#[derive(Debug, Default)]
+pub struct UnitSlot {
+    /// Modeled device cycles attributed to this unit (under the plan's
+    /// own tile-latency model).
+    pub cycles: AtomicU64,
+    /// Measured host wall time spent executing this unit.
+    pub wall_ns: AtomicU64,
+    /// Batch passes through this unit.
+    pub passes: AtomicU64,
+}
+
+/// Aggregated per-unit profile row (scrape/report side).
+#[derive(Clone, Debug, PartialEq)]
+pub struct ProfileRow {
+    pub unit: String,
+    pub kind: EngineKind,
+    pub phase: Phase,
+    pub passes: u64,
+    pub cycles: u64,
+    pub wall_ns: u64,
+}
+
+/// Per-fused-unit engine profiler: the live counterpart of the paper's
+/// Table III per-layer dataflow analysis. One slot pair (forward /
+/// backward) per plan unit, preallocated at construction so recording
+/// is three relaxed atomic adds — the `sched` execution loops call
+/// [`UnitProfiler::record`] with cycle/wall deltas around each unit
+/// dispatch when a profiler is attached to the worker's `Workspace`.
+#[derive(Debug)]
+pub struct UnitProfiler {
+    names: Vec<String>,
+    kinds: Vec<EngineKind>,
+    fwd: Vec<UnitSlot>,
+    bwd: Vec<UnitSlot>,
+}
+
+impl UnitProfiler {
+    /// Slots for an explicit (name, kind) unit list.
+    pub fn new(meta: Vec<(String, EngineKind)>) -> UnitProfiler {
+        let (names, kinds): (Vec<_>, Vec<_>) = meta.into_iter().unzip();
+        let n = names.len();
+        UnitProfiler {
+            names,
+            kinds,
+            fwd: (0..n).map(|_| UnitSlot::default()).collect(),
+            bwd: (0..n).map(|_| UnitSlot::default()).collect(),
+        }
+    }
+
+    /// Slots matching a compiled plan's fused-unit list.
+    pub fn for_plan(plan: &Plan) -> UnitProfiler {
+        UnitProfiler::new(plan.unit_meta())
+    }
+
+    pub fn n_units(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn unit_name(&self, ui: usize) -> &str {
+        &self.names[ui]
+    }
+
+    pub fn unit_kind(&self, ui: usize) -> EngineKind {
+        self.kinds[ui]
+    }
+
+    pub fn slot(&self, ui: usize, phase: Phase) -> &UnitSlot {
+        match phase {
+            Phase::Forward => &self.fwd[ui],
+            Phase::Backward => &self.bwd[ui],
+        }
+    }
+
+    /// Attribute one unit dispatch: `cycles` modeled device cycles and
+    /// `wall_ns` measured host time. Alloc-free.
+    pub fn record(&self, ui: usize, phase: Phase, cycles: u64, wall_ns: u64) {
+        let slot = self.slot(ui, phase);
+        slot.cycles.fetch_add(cycles, Ordering::Relaxed);
+        slot.wall_ns.fetch_add(wall_ns, Ordering::Relaxed);
+        slot.passes.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// All (unit, phase) rows in plan order, forward then backward per
+    /// unit (the report/export shape).
+    pub fn rows(&self) -> Vec<ProfileRow> {
+        let mut out = Vec::with_capacity(2 * self.names.len());
+        for ui in 0..self.names.len() {
+            for phase in [Phase::Forward, Phase::Backward] {
+                let slot = self.slot(ui, phase);
+                out.push(ProfileRow {
+                    unit: self.names[ui].clone(),
+                    kind: self.kinds[ui],
+                    phase,
+                    passes: slot.passes.load(Ordering::Relaxed),
+                    cycles: slot.cycles.load(Ordering::Relaxed),
+                    wall_ns: slot.wall_ns.load(Ordering::Relaxed),
+                });
+            }
+        }
+        out
+    }
+}
+
+/// SplitMix64: the standard 64-bit avalanche mixer (public-domain
+/// constants). Pure function of the input — no RNG state, no clock.
+pub fn splitmix64(x: u64) -> u64 {
+    let mut z = x.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic 1-in-N span sampling wrapper (ISSUE 9 satellite):
+/// keeps a trace capture bounded under sustained overload. The keep
+/// decision is a pure hash of the recorder's own arrival sequence —
+/// no RNG, no clock — so two identical runs sample identically.
+/// Sampled-out requests still count (`spans_sampled_out`, locally and
+/// in an attached [`Registry`]).
+pub struct SampledRecorder {
+    inner: Arc<dyn Recorder>,
+    every: u64,
+    seq: AtomicU64,
+    sampled_out: AtomicU64,
+    registry: Option<Arc<Registry>>,
+}
+
+impl SampledRecorder {
+    /// Keep ~1 in `every` spans (`every <= 1` keeps all).
+    pub fn new(
+        inner: Arc<dyn Recorder>,
+        every: u64,
+        registry: Option<Arc<Registry>>,
+    ) -> SampledRecorder {
+        SampledRecorder {
+            inner,
+            every: every.max(1),
+            seq: AtomicU64::new(0),
+            sampled_out: AtomicU64::new(0),
+            registry,
+        }
+    }
+
+    pub fn sampled_out(&self) -> u64 {
+        self.sampled_out.load(Ordering::Relaxed)
+    }
+}
+
+impl Recorder for SampledRecorder {
+    fn record(&self, span: &Span, req: &RequestFrame, reply: &Frame) {
+        let seq = self.seq.fetch_add(1, Ordering::Relaxed);
+        if self.every <= 1 || splitmix64(seq) % self.every == 0 {
+            self.inner.record(span, req, reply);
+        } else {
+            self.sampled_out.fetch_add(1, Ordering::Relaxed);
+            if let Some(reg) = &self.registry {
+                reg.spans_sampled_out.inc();
+            }
+        }
+    }
+
+    fn flush(&self) {
+        self.inner.flush();
+    }
+}
+
+impl std::fmt::Debug for SampledRecorder {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("SampledRecorder")
+            .field("every", &self.every)
+            .field("seq", &self.seq.load(Ordering::Relaxed))
+            .field("sampled_out", &self.sampled_out())
+            .finish()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::attribution::Method;
+    use crate::obs::span::CountingRecorder;
+
+    #[test]
+    fn histogram_edges_are_deterministic_powers_of_two() {
+        assert_eq!(Histogram::edge(0), Some(1024));
+        assert_eq!(Histogram::edge(1), Some(2048));
+        assert_eq!(Histogram::edge(HIST_BUCKETS - 2), Some(1u64 << 35));
+        assert_eq!(Histogram::edge(HIST_BUCKETS - 1), None, "last bucket is +Inf");
+        // boundary placement: v <= edge(i) lands in bucket i
+        assert_eq!(Histogram::bucket_index(0), 0);
+        assert_eq!(Histogram::bucket_index(1), 0);
+        assert_eq!(Histogram::bucket_index(1024), 0);
+        assert_eq!(Histogram::bucket_index(1025), 1);
+        assert_eq!(Histogram::bucket_index(2048), 1);
+        assert_eq!(Histogram::bucket_index(2049), 2);
+        assert_eq!(Histogram::bucket_index(u64::MAX), HIST_BUCKETS - 1);
+        // every value lands in the bucket whose edge bounds it
+        for v in [1u64, 7, 1023, 1024, 1025, 99_999, 1 << 20, (1 << 35) + 1] {
+            let i = Histogram::bucket_index(v);
+            if let Some(edge) = Histogram::edge(i) {
+                assert!(v <= edge, "{v} above its bucket edge {edge}");
+            }
+            if i > 0 {
+                let lower = Histogram::edge(i - 1).unwrap();
+                assert!(v > lower, "{v} below its bucket floor {lower}");
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_cumulative_counts_are_monotone_and_quantiles_bound() {
+        let h = Histogram::new();
+        let mut x = 1u64;
+        for _ in 0..1000 {
+            x = splitmix64(x);
+            h.observe(x % 50_000_000 + 1);
+        }
+        assert_eq!(h.count(), 1000);
+        let cum = h.cumulative();
+        for w in cum.windows(2) {
+            assert!(w[0] <= w[1], "cumulative counts must be monotone");
+        }
+        assert_eq!(cum[HIST_BUCKETS - 1], 1000);
+        let (p50, p95, p99) = (h.quantile_ns(0.50), h.quantile_ns(0.95), h.quantile_ns(0.99));
+        assert!(p50 <= p95 && p95 <= p99);
+        assert!(p99 <= 1 << 26, "observations cap at 5e7, p99 edge must stay near");
+        // quantiles are bucket edges: deterministic across reruns
+        let h2 = Histogram::new();
+        let mut x = 1u64;
+        for _ in 0..1000 {
+            x = splitmix64(x);
+            h2.observe(x % 50_000_000 + 1);
+        }
+        assert_eq!(h2.quantile_ns(0.95), p95);
+    }
+
+    #[test]
+    fn empty_histogram_quantile_is_zero() {
+        let h = Histogram::new();
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.count(), 0);
+        assert_eq!(h.sum(), 0);
+    }
+
+    #[test]
+    fn gauge_never_underflows() {
+        let g = Gauge::default();
+        g.inc();
+        g.dec();
+        g.dec();
+        assert_eq!(g.get(), 0);
+        g.set(5);
+        assert_eq!(g.get(), 5);
+    }
+
+    #[test]
+    fn observe_span_fills_stage_and_total_histograms() {
+        let reg = Registry::new();
+        let mut sp = Span::start(1, 1, 1, Method::Guided);
+        sp.stages = [0; N_STAGES];
+        sp.stamp(Stage::Accept, 1_000);
+        sp.stamp(Stage::Decode, 3_000);
+        sp.stamp(Stage::Flush, 10_000);
+        reg.observe_span(&sp);
+        assert_eq!(reg.stage_ns[Stage::Decode as usize].count(), 1);
+        assert_eq!(reg.stage_ns[Stage::Decode as usize].sum(), 2_000);
+        assert_eq!(reg.stage_ns[Stage::Flush as usize].sum(), 7_000);
+        assert_eq!(reg.stage_ns[Stage::Admit as usize].count(), 0, "unstamped stage stays empty");
+        assert_eq!(reg.stage_ns[Stage::Accept as usize].count(), 0, "accept opens no segment");
+        assert_eq!(reg.request_ns.count(), 1);
+        assert_eq!(reg.request_ns.sum(), 9_000);
+    }
+
+    #[test]
+    fn profiler_slots_accumulate_per_unit_and_phase() {
+        let p = UnitProfiler::new(vec![
+            ("c1".into(), EngineKind::Conv),
+            ("f1".into(), EngineKind::Vmm),
+        ]);
+        p.record(0, Phase::Forward, 100, 10);
+        p.record(0, Phase::Forward, 100, 10);
+        p.record(0, Phase::Backward, 300, 30);
+        p.record(1, Phase::Forward, 50, 5);
+        let rows = p.rows();
+        assert_eq!(rows.len(), 4, "fwd+bwd per unit");
+        let c1f = &rows[0];
+        assert_eq!((c1f.unit.as_str(), c1f.phase), ("c1", Phase::Forward));
+        assert_eq!((c1f.passes, c1f.cycles, c1f.wall_ns), (2, 200, 20));
+        let c1b = &rows[1];
+        assert_eq!((c1b.passes, c1b.cycles), (1, 300));
+        assert_eq!(rows[2].kind, EngineKind::Vmm);
+        assert_eq!(rows[3].passes, 0, "untouched slot reads zero");
+    }
+
+    #[test]
+    fn registry_installs_exactly_one_profiler() {
+        let reg = Registry::new();
+        assert!(reg.profiler().is_none());
+        let a = Arc::new(UnitProfiler::new(vec![("u".into(), EngineKind::Pool)]));
+        let b = Arc::new(UnitProfiler::new(vec![("v".into(), EngineKind::Relu)]));
+        reg.install_profiler(a.clone());
+        reg.install_profiler(b);
+        assert_eq!(reg.profiler().unwrap().unit_name(0), "u", "first install wins");
+        assert!(Arc::ptr_eq(reg.profiler().unwrap(), &a));
+    }
+
+    fn span_for(seq: u64) -> (Span, RequestFrame, Frame) {
+        let sp = Span::start(seq, 1, 1, Method::Guided);
+        let req = RequestFrame {
+            id: seq,
+            method: Method::Guided,
+            target: None,
+            n: 1,
+            elems: 2,
+            deadline_ms: None,
+            with_crc: false,
+            trace_seq: None,
+            images: vec![0.0, 1.0],
+        };
+        let reply = Frame::Request(req.clone());
+        (sp, req, reply)
+    }
+
+    #[test]
+    fn sampling_is_deterministic_and_counts_everything() {
+        let run = |every: u64| {
+            let inner = Arc::new(CountingRecorder::default());
+            let reg = Arc::new(Registry::new());
+            let rec = SampledRecorder::new(inner.clone(), every, Some(reg.clone()));
+            for i in 0..400 {
+                let (sp, req, reply) = span_for(i);
+                rec.record(&sp, &req, &reply);
+            }
+            (
+                inner.seen.load(Ordering::Relaxed),
+                rec.sampled_out(),
+                reg.spans_sampled_out.get(),
+            )
+        };
+        let (kept, dropped, reg_dropped) = run(8);
+        assert_eq!(kept + dropped, 400, "every span is either kept or counted out");
+        assert_eq!(dropped, reg_dropped);
+        assert!(kept > 0, "a 1-in-8 sampler must keep something over 400 spans");
+        assert!(dropped > kept, "a 1-in-8 sampler must drop the bulk");
+        // pure hash of sequence: reruns sample identically
+        assert_eq!(run(8), (kept, dropped, reg_dropped));
+        // every=1 keeps everything
+        let (k1, d1, _) = run(1);
+        assert_eq!((k1, d1), (400, 0));
+    }
+}

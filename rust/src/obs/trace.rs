@@ -237,32 +237,87 @@ fn span_from_header(j: &Json) -> Result<Span, TraceError> {
     })
 }
 
-fn write_record<W: Write>(w: &mut W, header: &Json, payload: &[u8]) -> std::io::Result<()> {
+fn write_record<W: Write>(w: &mut W, header: &Json, payload: &[u8]) -> std::io::Result<u64> {
     let htext = header.to_string();
     w.write_all(&TRACE_MAGIC.to_le_bytes())?;
     w.write_all(&(htext.len() as u32).to_le_bytes())?;
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(htext.as_bytes())?;
-    w.write_all(payload)
+    w.write_all(payload)?;
+    Ok((TRACE_PREAMBLE_LEN + htext.len() + payload.len()) as u64)
+}
+
+/// Path of segment `i` of a rotating capture: segment 0 is the base
+/// path itself, segment `i > 0` inserts the index before the
+/// extension (`foo.trace` → `foo.1.trace`; extensionless `foo` →
+/// `foo.1`). Replay/doctor take the explicit segment list — nothing
+/// is inferred from what happens to sit next to a file on disk.
+pub fn segment_path<P: AsRef<Path>>(base: P, i: u32) -> std::path::PathBuf {
+    let base = base.as_ref();
+    if i == 0 {
+        return base.to_path_buf();
+    }
+    let stem = base.file_stem().and_then(|s| s.to_str()).unwrap_or("trace");
+    let name = match base.extension().and_then(|e| e.to_str()) {
+        Some(ext) => format!("{stem}.{i}.{ext}"),
+        None => format!("{stem}.{i}"),
+    };
+    base.with_file_name(name)
+}
+
+struct WriterState {
+    w: BufWriter<File>,
+    /// Bytes written to the current segment.
+    bytes: u64,
+    /// Span records in the current segment (rotation requires ≥ 1 so
+    /// no segment is ever meta-only, however small the cap).
+    seg_records: u64,
+    /// Index of the current segment (0 = the base path).
+    segment: u32,
 }
 
 /// Streaming trace writer; implements [`Recorder`] so it plugs into
 /// `ServerConfig::recorder` directly. Thread-safe (connection threads
 /// record concurrently); a failed write poisons nothing — the error
 /// is remembered and surfaced by [`TraceWriter::finish`].
+///
+/// With a segment-size cap ([`TraceWriter::create_rotating`]) the
+/// writer rolls to the next [`segment_path`] before any record that
+/// would start past the cap, repeating the meta record first so every
+/// segment is a self-contained, independently-replayable
+/// `attrax-trace/v1` stream. Rotation is lazy — a segment is only
+/// opened when a record needs it, so a capture never ends with an
+/// empty trailing segment.
 pub struct TraceWriter {
-    inner: Mutex<BufWriter<File>>,
+    inner: Mutex<WriterState>,
+    meta: TraceMeta,
+    base: std::path::PathBuf,
+    max_segment_bytes: u64,
     io_errors: AtomicU64,
     records: AtomicU64,
 }
 
 impl TraceWriter {
-    /// Create `path` and write the meta record.
+    /// Create `path` and write the meta record (no rotation).
     pub fn create<P: AsRef<Path>>(path: P, meta: &TraceMeta) -> std::io::Result<TraceWriter> {
-        let mut w = BufWriter::new(File::create(path)?);
-        write_record(&mut w, &meta.to_json(), &[])?;
+        TraceWriter::create_rotating(path, meta, u64::MAX)
+    }
+
+    /// Create a rotating capture: a new segment starts whenever the
+    /// current one holds at least `max_segment_bytes` bytes.
+    pub fn create_rotating<P: AsRef<Path>>(
+        path: P,
+        meta: &TraceMeta,
+        max_segment_bytes: u64,
+    ) -> std::io::Result<TraceWriter> {
+        let base = path.as_ref().to_path_buf();
+        let mut w = BufWriter::new(File::create(&base)?);
+        let bytes = write_record(&mut w, &meta.to_json(), &[])?;
         Ok(TraceWriter {
-            inner: Mutex::new(w),
+            inner: Mutex::new(WriterState { w, bytes, seg_records: 0, segment: 0 }),
+            meta: meta.clone(),
+            base,
+            max_segment_bytes: max_segment_bytes.max(1),
             io_errors: AtomicU64::new(0),
             records: AtomicU64::new(0),
         })
@@ -270,6 +325,37 @@ impl TraceWriter {
 
     pub fn records(&self) -> u64 {
         self.records.load(Ordering::Relaxed)
+    }
+
+    /// Number of segments written so far (≥ 1).
+    pub fn segments(&self) -> u32 {
+        let g = match self.inner.lock() {
+            Ok(g) => g,
+            Err(p) => p.into_inner(),
+        };
+        g.segment + 1
+    }
+
+    /// The paths of every segment written so far, in order.
+    pub fn segment_paths(&self) -> Vec<std::path::PathBuf> {
+        (0..self.segments()).map(|i| segment_path(&self.base, i)).collect()
+    }
+
+    /// Roll to the next segment if the current one is at the cap (and
+    /// holds at least one span — a segment is never meta-only).
+    fn maybe_rotate(&self, state: &mut WriterState) -> std::io::Result<()> {
+        if state.seg_records == 0 || state.bytes < self.max_segment_bytes {
+            return Ok(());
+        }
+        state.w.flush()?;
+        let next = state.segment + 1;
+        let mut w = BufWriter::new(File::create(segment_path(&self.base, next))?);
+        let bytes = write_record(&mut w, &self.meta.to_json(), &[])?;
+        state.w = w;
+        state.bytes = bytes;
+        state.seg_records = 0;
+        state.segment = next;
+        Ok(())
     }
 
     /// Flush and report: `Ok(records_written)` or the first I/O
@@ -305,12 +391,18 @@ impl Recorder for TraceWriter {
         let req_len = payload.len();
         payload.extend_from_slice(&reply_bytes);
         let header = span_header(span, req_len, crc32(&payload));
-        let mut w = match self.inner.lock() {
+        let mut g = match self.inner.lock() {
             Ok(g) => g,
             Err(p) => p.into_inner(),
         };
-        match write_record(&mut *w, &header, &payload) {
-            Ok(()) => {
+        if self.maybe_rotate(&mut g).is_err() {
+            self.io_errors.fetch_add(1, Ordering::Relaxed);
+            return;
+        }
+        match write_record(&mut g.w, &header, &payload) {
+            Ok(n) => {
+                g.bytes += n;
+                g.seg_records += 1;
                 self.records.fetch_add(1, Ordering::Relaxed);
             }
             Err(_) => {
@@ -320,11 +412,11 @@ impl Recorder for TraceWriter {
     }
 
     fn flush(&self) {
-        let mut w = match self.inner.lock() {
+        let mut g = match self.inner.lock() {
             Ok(g) => g,
             Err(p) => p.into_inner(),
         };
-        if w.flush().is_err() {
+        if g.w.flush().is_err() {
             self.io_errors.fetch_add(1, Ordering::Relaxed);
         }
     }
@@ -393,6 +485,28 @@ impl TraceReader {
         }
         Ok((self.meta, out))
     }
+}
+
+/// Read a multi-segment capture in order: every segment must be a
+/// self-contained trace whose meta record equals the first segment's
+/// (a rotated capture repeats it verbatim); the records concatenate.
+pub fn read_all_segments<P: AsRef<Path>>(
+    paths: &[P],
+) -> Result<(TraceMeta, Vec<TraceRecord>), TraceError> {
+    let mut iter = paths.iter();
+    let first = iter.next().ok_or_else(|| malformed("no trace segments given"))?;
+    let (meta, mut records) = TraceReader::open(first)?.read_all()?;
+    for p in iter {
+        let (m, recs) = TraceReader::open(p)?.read_all()?;
+        if m != meta {
+            return Err(malformed(format!(
+                "segment {} has a different meta record (not the same capture)",
+                p.as_ref().display()
+            )));
+        }
+        records.extend(recs);
+    }
+    Ok((meta, records))
 }
 
 fn frame_kind(f: &Frame) -> &'static str {
@@ -590,6 +704,89 @@ mod tests {
         assert!(matches!(TraceReader::open(&path), Err(TraceError::BadMagic(_))));
 
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn segment_paths_insert_index_before_extension() {
+        let p = |s: &str, i| segment_path(s, i).to_string_lossy().into_owned();
+        assert_eq!(p("cap.trace", 0), "cap.trace");
+        assert_eq!(p("cap.trace", 1), "cap.1.trace");
+        assert_eq!(p("cap.trace", 12), "cap.12.trace");
+        assert_eq!(p("dir/cap.trace", 2), "dir/cap.2.trace");
+        assert_eq!(p("noext", 1), "noext.1");
+    }
+
+    #[test]
+    fn rotation_yields_self_contained_segments_that_concatenate() {
+        let base = tmp("rotate");
+        // tiny cap: every span record starts a fresh segment after the
+        // first (meta alone already exceeds 64 bytes)
+        let w = TraceWriter::create_rotating(&base, &meta(), 64).unwrap();
+        let mut originals = Vec::new();
+        for seq in 0..5u64 {
+            let (span, req, reply) = sample(seq);
+            w.record(&span, &req, &reply);
+            originals.push(req);
+        }
+        assert_eq!(w.finish(), Ok(5));
+        assert_eq!(w.segments(), 5, "lazy rotation: first record stays in segment 0");
+        let paths = w.segment_paths();
+        assert_eq!(paths[0], base);
+        assert_eq!(paths[1], segment_path(&base, 1));
+
+        // each segment is independently a valid capture with the meta
+        for (i, p) in paths.iter().enumerate() {
+            let (m, recs) = TraceReader::open(p).unwrap().read_all().unwrap();
+            assert_eq!(m, meta(), "segment {i} repeats the meta record");
+            assert_eq!(recs.len(), 1);
+        }
+        // and the segment list concatenates in order
+        let (m, recs) = read_all_segments(&paths).unwrap();
+        assert_eq!(m, meta());
+        assert_eq!(recs.len(), 5);
+        for (rec, req) in recs.iter().zip(&originals) {
+            assert_eq!(&rec.req, req);
+        }
+        for p in &paths {
+            std::fs::remove_file(p).ok();
+        }
+    }
+
+    #[test]
+    fn uncapped_writer_never_rotates() {
+        let base = tmp("norotate");
+        let w = TraceWriter::create(&base, &meta()).unwrap();
+        for seq in 0..10u64 {
+            let (span, req, reply) = sample(seq);
+            w.record(&span, &req, &reply);
+        }
+        assert_eq!(w.finish(), Ok(10));
+        assert_eq!(w.segments(), 1);
+        let (_, recs) = read_all_segments(&[&base]).unwrap();
+        assert_eq!(recs.len(), 10);
+        std::fs::remove_file(&base).ok();
+    }
+
+    #[test]
+    fn mismatched_segment_meta_is_rejected() {
+        let a = tmp("seg_a");
+        let b = tmp("seg_b");
+        let w = TraceWriter::create(&a, &meta()).unwrap();
+        let (span, req, reply) = sample(0);
+        w.record(&span, &req, &reply);
+        w.finish().unwrap();
+        let mut other = meta();
+        other.board = "zcu104".into();
+        let w = TraceWriter::create(&b, &other).unwrap();
+        w.record(&span, &req, &reply);
+        w.finish().unwrap();
+        assert!(matches!(read_all_segments(&[&a, &b]), Err(TraceError::Malformed(_))));
+        assert!(matches!(
+            read_all_segments(&Vec::<std::path::PathBuf>::new()),
+            Err(TraceError::Malformed(_))
+        ));
+        std::fs::remove_file(&a).ok();
+        std::fs::remove_file(&b).ok();
     }
 
     #[test]

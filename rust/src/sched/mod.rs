@@ -35,7 +35,7 @@ use crate::attribution::Method;
 use crate::fx::QFormat;
 use crate::hls::conv::{self, Post};
 use crate::hls::relu::{self, MaskSource};
-use crate::hls::{eltwise, pool, vmm, Cost, HwConfig};
+use crate::hls::{eltwise, pool, vmm, Cost, HwConfig, Phase};
 use crate::model::{Network, Params};
 use plan::{Src, Unit};
 
@@ -983,6 +983,9 @@ impl Simulator {
             ws.grads.resize_with(n_units, Vec::new);
         }
         ws.grad_written.resize(n_units, false);
+        // Cheap Arc clone of the (optional) per-unit profiler before the
+        // slab destructure; `None` keeps both loops free of clock reads.
+        let profiler = ws.profiler.clone();
         let Workspace {
             scratch,
             conv_out,
@@ -1016,6 +1019,9 @@ impl Simulator {
             // cloned) or to the quantized image
             let (before, rest) = acts.split_at_mut(ui);
             let cur = &mut rest[0];
+            let prof_at = profiler
+                .as_ref()
+                .map(|_| (fp_cost.cycles_under(cfg), crate::obs::span::now_ns()));
             match unit {
                 Unit::Conv { name, src, w, bias, in_shape, out_ch, k, pad, relu, pool, .. } => {
                     let input = src_slice(*src, before, qimg);
@@ -1126,6 +1132,14 @@ impl Simulator {
                     }
                 }
             }
+            if let (Some(p), Some((c0, t0))) = (&profiler, prof_at) {
+                p.record(
+                    ui,
+                    Phase::Forward,
+                    fp_cost.cycles_under(cfg).saturating_sub(c0),
+                    crate::obs::span::now_ns().saturating_sub(t0),
+                );
+            }
         }
 
         // logits + predictions from the last unit's slab
@@ -1168,6 +1182,9 @@ impl Simulator {
             let (gs_before, gs_rest) = grads.split_at_mut(ui);
             let gcur: &mut Vec<i32> = &mut gs_rest[0];
             let (w_before, _) = grad_written.split_at_mut(ui);
+            let prof_at = profiler
+                .as_ref()
+                .map(|_| (bp_cost.cycles_under(cfg), crate::obs::span::now_ns()));
             match unit {
                 Unit::Fc { name, src, w, out_n: fo, in_n: fi, relu, .. } => {
                     if *relu {
@@ -1443,6 +1460,14 @@ impl Simulator {
                         bp_cost.checkpoint(&format!("{name}ᵀ"));
                     }
                 }
+            }
+            if let (Some(p), Some((c0, t0))) = (&profiler, prof_at) {
+                p.record(
+                    ui,
+                    Phase::Backward,
+                    bp_cost.cycles_under(cfg).saturating_sub(c0),
+                    crate::obs::span::now_ns().saturating_sub(t0),
+                );
             }
         }
 

@@ -30,10 +30,12 @@
 
 use std::fmt;
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 
 use crate::hls::conv::{self, ConvBatchOut};
-use crate::hls::{Cost, EngineScratch, HwConfig};
+use crate::hls::{Cost, EngineKind, EngineScratch, HwConfig};
 use crate::model::{Layer, Network, NodeId, Params, Shape, SrcRef};
+use crate::obs::telemetry::UnitProfiler;
 use crate::util::crc::crc32_i32s;
 
 /// Where a unit reads its input activation from: the quantized input
@@ -431,6 +433,23 @@ impl Plan {
         self.units.len()
     }
 
+    /// (name, engine kind) per fused unit, in execution order — the
+    /// label axis of the per-unit telemetry profile. Fused pool/ReLU
+    /// stay attributed to their producer (that is where the cycles
+    /// go); an unfused pool unit is named by its plan index.
+    pub fn unit_meta(&self) -> Vec<(String, EngineKind)> {
+        self.units
+            .iter()
+            .enumerate()
+            .map(|(ui, u)| match u {
+                Unit::Conv { name, .. } => (name.clone(), EngineKind::Conv),
+                Unit::Pool { .. } => (format!("pool{ui}"), EngineKind::Pool),
+                Unit::Fc { name, .. } => (name.clone(), EngineKind::Vmm),
+                Unit::Add { name, .. } => (name.clone(), EngineKind::Eltwise),
+            })
+            .collect()
+    }
+
     /// Derive the plan's memory shape from the schedule's live ranges
     /// (batch 1). See [`LiveReport`].
     pub fn live_report(&self) -> LiveReport {
@@ -573,6 +592,10 @@ pub struct Workspace {
     pub(crate) g_tmp: Vec<i32>,
     /// Unfused-ablation scratch (materialized full-grid activations).
     pub(crate) tmp: Vec<i32>,
+    /// Per-unit engine profiler to attribute cycle/wall deltas into
+    /// during execution. `None` (the default) keeps the hot path
+    /// completely untouched — no time reads, no atomics.
+    pub profiler: Option<Arc<UnitProfiler>>,
 }
 
 impl Workspace {
@@ -597,6 +620,7 @@ impl Workspace {
             g_img: Vec::new(),
             g_tmp: Vec::new(),
             tmp: Vec::new(),
+            profiler: None,
         }
     }
 

@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 use super::client::{Client, ClientError};
 use super::proto::ErrCode;
 use crate::attribution::{Method, ALL_METHODS};
+use crate::obs::export::{self, StatsSummary};
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::Pcg32;
 use crate::util::stats::Samples;
@@ -42,6 +43,11 @@ pub struct Spec {
     /// instead of synthesizing random images. `batch`/`elems`/`method`
     /// are ignored in this mode — the frames carry their own.
     pub trace: Option<String>,
+    /// Address of the server's stats exposition endpoint
+    /// (`serve --stats-addr`): scraped once before and once after the
+    /// run, adding the server-side stage/unit breakdown (and a counter
+    /// monotonicity check) to the report.
+    pub stats_addr: Option<String>,
 }
 
 impl Default for Spec {
@@ -58,8 +64,26 @@ impl Default for Spec {
             timeout_ms: 2000,
             seed: 42,
             trace: None,
+            stats_addr: None,
         }
     }
+}
+
+/// Server-side view of a load run, scraped from the stats endpoint.
+#[derive(Clone, Debug)]
+pub struct ServerStats {
+    /// Every unlabeled `_total` counter present in the pre-run scrape
+    /// was `<=` its value in the post-run scrape (cumulative counters
+    /// never move backwards).
+    pub monotone: bool,
+    /// Post-run scrape counters exactly equal the coordinator's final
+    /// [`crate::coordinator::metrics::Snapshot`]. Only a harness that
+    /// holds both sides can compute this (`loadgen --smoke` does);
+    /// `None` = not checked.
+    pub reconciled: Option<bool>,
+    /// Parsed post-run scrape: counters, per-stage latency quantiles,
+    /// per-unit engine profile, per-device fleet load.
+    pub summary: StatsSummary,
 }
 
 /// Aggregate outcome of one load run.
@@ -83,11 +107,14 @@ pub struct Report {
     pub p99_ms: f64,
     /// shed / sent.
     pub shed_rate: f64,
+    /// Server-side breakdown (present when the spec carried a
+    /// `stats_addr` and both scrapes succeeded).
+    pub server_stats: Option<ServerStats>,
 }
 
 impl Report {
     pub fn to_json(&self, spec: &Spec) -> Json {
-        obj(vec![
+        let mut fields = vec![
             ("bench", s("serve_loadgen")),
             ("addr", s(&spec.addr)),
             ("conns", num(spec.conns as f64)),
@@ -115,11 +142,28 @@ impl Report {
                 ]),
             ),
             ("shed_rate", num(self.shed_rate)),
-        ])
+        ];
+        if let Some(ss) = &self.server_stats {
+            fields.push((
+                "server_stats",
+                obj(vec![
+                    ("monotone", Json::Bool(ss.monotone)),
+                    (
+                        "reconciled",
+                        match ss.reconciled {
+                            Some(b) => Json::Bool(b),
+                            None => Json::Null,
+                        },
+                    ),
+                    ("summary", ss.summary.to_json()),
+                ]),
+            ));
+        }
+        obj(fields)
     }
 
     pub fn render(&self) -> String {
-        format!(
+        let mut out = format!(
             "sent={} ok={} shed={} deadline-exceeded={} closed={} errors={} wall={:.2}s\n\
              sustained: {:.1} req/s ({:.1} img/s)\n\
              latency: mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms\n\
@@ -138,7 +182,20 @@ impl Report {
             self.p95_ms,
             self.p99_ms,
             100.0 * self.shed_rate,
-        )
+        );
+        if let Some(ss) = &self.server_stats {
+            out.push_str("\nserver stages (from --stats-addr scrape):");
+            for st in &ss.summary.stages {
+                out.push_str(&format!(
+                    "\n  {:<14} n={:<7} mean={:.3}ms p50={:.3}ms p95={:.3}ms p99={:.3}ms",
+                    st.stage, st.count, st.mean_ms, st.p50_ms, st.p95_ms, st.p99_ms,
+                ));
+            }
+            if !ss.monotone {
+                out.push_str("\nWARNING: server counters moved backwards between scrapes");
+            }
+        }
+        out
     }
 }
 
@@ -188,6 +245,11 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
     anyhow::ensure!(spec.elems > 0, "elems must be positive");
     let workload = match &spec.trace {
         Some(path) => Some(load_workload(path)?),
+        None => None,
+    };
+    // pre-run scrape: the baseline for the counter monotonicity check
+    let pre_scrape = match &spec.stats_addr {
+        Some(a) => Some(scrape_summary(a)?),
         None => None,
     };
     let per_conn_rate = spec.rps / spec.conns as f64;
@@ -240,6 +302,19 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
     for &x in &agg.lat_ms {
         lat.push(x);
     }
+    // post-run scrape: counters must only have grown since the pre-run
+    // baseline (each scrape is an independent one-shot TCP read)
+    let server_stats = match (&spec.stats_addr, pre_scrape) {
+        (Some(a), Some(pre)) => {
+            let post = scrape_summary(a)?;
+            let monotone = pre
+                .counters
+                .iter()
+                .all(|(k, v)| post.counters.get(k).is_some_and(|p| p >= v));
+            Some(ServerStats { monotone, reconciled: None, summary: post })
+        }
+        _ => None,
+    };
     Ok(Report {
         sent: agg.sent,
         ok: agg.ok,
@@ -255,7 +330,14 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
         p95_ms: lat.percentile(0.95),
         p99_ms: lat.percentile(0.99),
         shed_rate: if agg.sent > 0 { agg.shed as f64 / agg.sent as f64 } else { 0.0 },
+        server_stats,
     })
+}
+
+/// One scrape of a stats endpoint, parsed and summarized.
+fn scrape_summary(addr: &str) -> anyhow::Result<StatsSummary> {
+    let text = export::scrape(addr, Duration::from_secs(5))?;
+    Ok(export::summarize(&export::parse(&text)?))
 }
 
 fn apply_timeout(client: &mut Client, timeout_ms: u64) -> std::io::Result<()> {

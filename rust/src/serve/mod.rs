@@ -26,7 +26,9 @@
 //! * [`loadgen`] — multi-connection load generator (`attrax loadgen`)
 //!   emitting `BENCH_serve.json`: sustained RPS, p50/p95/p99 latency,
 //!   shed rate; `--trace <capture>` replays a recorded traffic mix
-//!   instead of synthetic images.
+//!   instead of synthetic images, and `--stats-addr` scrapes the
+//!   server's stats endpoint before and after the run, adding the
+//!   server-side per-stage/per-unit breakdown to the report.
 //!
 //! Observability hooks ([`crate::obs`]): the server stamps a
 //! per-request span (stage timestamps + batch/device facts) and hands
@@ -34,7 +36,11 @@
 //! `serve --trace` plugs in a [`crate::obs::trace::TraceWriter`] to
 //! capture the `attrax-trace/v1` artifact that `attrax replay` and
 //! `attrax doctor` consume. With no recorder the span costs a few
-//! stack stores and zero heap.
+//! stack stores and zero heap. `ServerConfig::telemetry` feeds every
+//! completed span into a lock-free [`crate::obs::telemetry::Registry`],
+//! and `ServerConfig::stats_addr` exposes that registry (plus the
+//! metrics snapshot and per-device fleet gauges) over a one-shot TCP
+//! text endpoint that `attrax top` polls.
 //!
 //! Heatmap f32s cross the wire bit-exactly (raw LE payload, no text
 //! floats), so a networked client sees the same numerics as an

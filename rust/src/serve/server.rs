@@ -30,7 +30,9 @@ use std::time::{Duration, Instant};
 use super::proto::{self, ErrCode, ErrorFrame, Frame, RequestFrame, ResponseFrame};
 use crate::coordinator::{metrics, Coordinator, FailKind};
 use crate::faults::{salt, FaultHooks, FaultStats};
+use crate::obs::export::{device_lines, render_registry, snapshot_lines, StatsEndpoint};
 use crate::obs::span::{Outcome, Recorder, Span, Stage};
+use crate::obs::telemetry::Registry;
 
 /// TCP serving configuration (the coordinator has its own
 /// [`crate::coordinator::Config`] for queueing/batching).
@@ -49,11 +51,29 @@ pub struct ServerConfig {
     /// the request path performs no extra heap allocation
     /// (`tests/alloc_regression.rs`).
     pub recorder: Option<Arc<dyn Recorder>>,
+    /// Telemetry registry: every completed span's per-stage latencies
+    /// feed its lock-free histograms, and the coordinator's counters
+    /// dual-write into it (share the same `Arc` with
+    /// [`crate::coordinator::Config::telemetry`] so the stats endpoint
+    /// reconciles with the metrics snapshot). `None` = telemetry off,
+    /// zero hot-path cost.
+    pub telemetry: Option<Arc<Registry>>,
+    /// Bind address for the one-shot stats exposition endpoint
+    /// (`serve --stats-addr`; port 0 picks an ephemeral port — see
+    /// [`Server::stats_addr`]). `None` = no endpoint.
+    pub stats_addr: Option<String>,
 }
 
 impl Default for ServerConfig {
     fn default() -> Self {
-        ServerConfig { max_conns: 32, default_deadline_ms: 0, faults: None, recorder: None }
+        ServerConfig {
+            max_conns: 32,
+            default_deadline_ms: 0,
+            faults: None,
+            recorder: None,
+            telemetry: None,
+            stats_addr: None,
+        }
     }
 }
 
@@ -64,6 +84,8 @@ impl std::fmt::Debug for ServerConfig {
             .field("default_deadline_ms", &self.default_deadline_ms)
             .field("faults", &self.faults)
             .field("recorder", &self.recorder.as_ref().map(|_| "Some(<dyn Recorder>)"))
+            .field("telemetry", &self.telemetry.as_ref().map(|_| "Some(<Registry>)"))
+            .field("stats_addr", &self.stats_addr)
             .finish()
     }
 }
@@ -104,6 +126,10 @@ pub struct Server {
     stop: Arc<AtomicBool>,
     acceptor: Option<std::thread::JoinHandle<()>>,
     addr: SocketAddr,
+    /// One-shot stats exposition endpoint (`--stats-addr`). Holds a
+    /// clone of `shared` inside its render closure, so shutdown drops
+    /// it before unwrapping the `Arc`.
+    stats: Option<StatsEndpoint>,
 }
 
 impl Server {
@@ -131,6 +157,27 @@ impl Server {
             conn_seq: AtomicU64::new(0),
         });
         let stop = Arc::new(AtomicBool::new(false));
+        // stats exposition endpoint: one-shot TCP scrapes rendering
+        // registry + snapshot + per-device fleet gauges at read time
+        let stats = match shared.cfg.stats_addr.clone() {
+            Some(stats_addr) => {
+                let sh = shared.clone();
+                let render = Box::new(move || {
+                    let mut out = String::new();
+                    if let Some(reg) = &sh.cfg.telemetry {
+                        // the queue-depth gauge is sampled at scrape
+                        // time, not maintained on the request path
+                        reg.queue_depth.set(sh.coord.queue_depth() as u64);
+                        out.push_str(&render_registry(reg));
+                    }
+                    out.push_str(&snapshot_lines(&sh.coord.metrics.snapshot()));
+                    out.push_str(&device_lines(sh.coord.devices()));
+                    out
+                });
+                Some(StatsEndpoint::start(stats_addr.as_str(), render)?)
+            }
+            None => None,
+        };
         let acceptor = {
             let shared = shared.clone();
             let stop = stop.clone();
@@ -138,12 +185,18 @@ impl Server {
                 .name("serve-acceptor".into())
                 .spawn(move || accept_loop(listener, &shared, &stop))?
         };
-        Ok(Server { shared, stop, acceptor: Some(acceptor), addr: bound })
+        Ok(Server { shared, stop, acceptor: Some(acceptor), addr: bound, stats })
     }
 
     /// The actually-bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// The stats endpoint's actually-bound address (resolves port 0);
+    /// `None` when the server was started without `stats_addr`.
+    pub fn stats_addr(&self) -> Option<SocketAddr> {
+        self.stats.as_ref().map(|s| s.local_addr())
     }
 
     /// Open TCP connections right now (the pool gauge).
@@ -155,7 +208,10 @@ impl Server {
     /// requests get their responses, then the coordinator shuts down
     /// and the final metrics snapshot is returned.
     pub fn shutdown(self) -> anyhow::Result<metrics::Snapshot> {
-        let Server { shared, stop, acceptor, .. } = self;
+        let Server { shared, stop, acceptor, stats, .. } = self;
+        // the endpoint's render closure holds a `shared` clone: join
+        // its thread first or `Arc::try_unwrap` below can never win
+        drop(stats);
         shared.draining.store(true, Ordering::Relaxed);
         join_all(&shared.handles);
         stop.store(true, Ordering::Relaxed);
@@ -375,6 +431,9 @@ fn answer_err(
     if ok {
         span.stamp_now(Stage::Flush);
     }
+    if let Some(reg) = &shared.cfg.telemetry {
+        reg.observe_span(span);
+    }
     if let Some(rec) = &shared.cfg.recorder {
         rec.record(span, req, &frame);
     }
@@ -532,6 +591,9 @@ fn serve_request(
     let ok = proto::write_frame(stream, &frame).is_ok();
     if ok {
         span.stamp_now(Stage::Flush);
+    }
+    if let Some(reg) = &shared.cfg.telemetry {
+        reg.observe_span(&span);
     }
     if let Some(rec) = &shared.cfg.recorder {
         rec.record(&span, &req, &frame);

@@ -304,7 +304,10 @@ impl<'a> Parser<'a> {
 // Serialization
 // ---------------------------------------------------------------------------
 
-fn escape(s: &str, out: &mut String) {
+/// Append `s` as a quoted, backslash-escaped string literal. Shared
+/// with the stats exposition endpoint (`obs::export`), whose label
+/// values follow the same quoting grammar as JSON strings.
+pub fn escape(s: &str, out: &mut String) {
     out.push('"');
     for c in s.chars() {
         match c {

@@ -13,10 +13,13 @@ use std::alloc::{GlobalAlloc, Layout, System};
 use std::cell::Cell;
 use std::collections::BTreeMap;
 
+use std::sync::Arc;
+
 use attrax::attribution::Method;
-use attrax::hls::HwConfig;
+use attrax::hls::{HwConfig, Phase};
 use attrax::model::{Network, NetworkBuilder, Params, Shape, Tensor};
 use attrax::obs::span::{self, Span, Stage, ALL_STAGES};
+use attrax::obs::telemetry::{Registry, UnitProfiler};
 use attrax::sched::{AttrOptions, BatchOutput, Simulator, Workspace};
 use attrax::util::rng::Pcg32;
 
@@ -190,4 +193,71 @@ fn span_ledger_with_tracing_disabled_is_allocation_free() {
     }
     let n = allocs_now() - before;
     assert_eq!(n, 0, "span stamping allocated {n} times with tracing disabled");
+}
+
+#[test]
+fn telemetry_publication_is_allocation_free() {
+    // the ISSUE 9 hot-path contract: publishing into the lock-free
+    // registry — counters, gauges, histogram observes, folding a full
+    // span, profiler slot updates — is atomics only, zero heap
+    let reg = Registry::new();
+    let prof = UnitProfiler::new(vec![
+        ("c1".into(), attrax::hls::EngineKind::Conv),
+        ("f1".into(), attrax::hls::EngineKind::Vmm),
+    ]);
+    let mut sp = Span::start(1, 1, 4, Method::Guided);
+    for st in ALL_STAGES {
+        sp.stamp(st, 1_000 * (st as u64 + 1));
+    }
+    let before = allocs_now();
+    for i in 0..100u64 {
+        reg.completed.inc();
+        reg.retries.add(2);
+        reg.conns_open.inc();
+        reg.queue_depth.set(i);
+        reg.conns_open.dec();
+        reg.request_ns.observe(10_000 + i);
+        reg.observe_span(&sp);
+        prof.record((i % 2) as usize, Phase::Forward, 500, 80);
+        prof.record((i % 2) as usize, Phase::Backward, 700, 90);
+    }
+    let n = allocs_now() - before;
+    assert_eq!(n, 0, "telemetry publication allocated {n} times");
+    assert_eq!(reg.completed.get(), 100);
+    assert_eq!(reg.request_ns.count(), 200, "direct observes + observe_span folds");
+}
+
+#[test]
+fn profiled_attribute_batch_is_allocation_free_when_warm() {
+    // attaching the per-unit profiler must not reopen the zero-alloc
+    // pin: the hooks around each unit dispatch are cycle-ledger reads,
+    // clock reads, and relaxed atomic adds into preallocated slots
+    let sim = tiny_sim(21);
+    let imgs = images(4, 2 * 8 * 8);
+    let refs: Vec<&[f32]> = imgs.iter().map(|v| v.as_slice()).collect();
+    let mut ws = Workspace::with_shards(1);
+    let mut out = BatchOutput::new();
+    let prof = Arc::new(UnitProfiler::for_plan(&sim));
+    ws.profiler = Some(prof.clone());
+    for _ in 0..3 {
+        for m in attrax::attribution::ALL_METHODS {
+            sim.attribute_batch_into(&mut ws, &refs, m, AttrOptions::default(), false, &mut out);
+        }
+    }
+    let passes_warm = prof.rows().iter().map(|r| r.passes).sum::<u64>();
+    assert!(passes_warm > 0, "profiler never saw a unit dispatch");
+    let before = allocs_now();
+    for _ in 0..5 {
+        for m in attrax::attribution::ALL_METHODS {
+            sim.attribute_batch_into(&mut ws, &refs, m, AttrOptions::default(), false, &mut out);
+        }
+    }
+    let n = allocs_now() - before;
+    assert_eq!(n, 0, "profiled steady-state attribute_batch_into allocated {n} times");
+    let rows = prof.rows();
+    assert!(rows.iter().map(|r| r.passes).sum::<u64>() > passes_warm);
+    for r in &rows {
+        assert!(r.passes > 0, "unit {} {:?} never profiled", r.unit, r.phase);
+        assert!(r.cycles > 0, "unit {} {:?} has no modeled cycles", r.unit, r.phase);
+    }
 }

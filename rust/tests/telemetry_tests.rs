@@ -1,0 +1,267 @@
+//! End-to-end telemetry tests: a live TCP server publishing into a
+//! shared [`Registry`], scraped over the one-shot stats endpoint.
+//!
+//! The acceptance contract under test (ISSUE 9): after the client
+//! quiesces, a scrape's counters reconcile EXACTLY with the final
+//! coordinator `Snapshot`; the per-unit engine profiler attributes
+//! forward and backward passes to every fused plan unit; span
+//! sampling is a pure hash of sequence (reruns identical); and a
+//! rotated capture audits segment-by-segment like a single file.
+//!
+//! Artifact-free: everything runs the deterministic tiny model from
+//! `sched::tests_support`.
+
+use std::sync::atomic::Ordering;
+use std::sync::Arc;
+use std::time::Duration;
+
+use attrax::attribution::Method;
+use attrax::coordinator::{Config, Coordinator};
+use attrax::hls::HwConfig;
+use attrax::obs::doctor::{self, DoctorSpec};
+use attrax::obs::export;
+use attrax::obs::span::{CountingRecorder, Recorder};
+use attrax::obs::telemetry::{splitmix64, Registry, SampledRecorder};
+use attrax::obs::trace::{TraceMeta, TraceWriter};
+use attrax::sched::tests_support::tiny_sim;
+use attrax::serve::{loadgen, Client, Server, ServerConfig};
+use attrax::util::rng::Pcg32;
+
+/// The tiny test model's input size ([2,8,8]).
+const ELEMS: usize = 128;
+
+fn image(seed: u64) -> Vec<f32> {
+    let mut rng = Pcg32::seeded(seed);
+    (0..ELEMS).map(|_| rng.f32()).collect()
+}
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("attrax_telem_{}_{name}.trace", std::process::id()))
+}
+
+/// Start a loopback server whose coordinator and serving layer share
+/// one registry, with the stats endpoint on an ephemeral port.
+fn start_telemetry_server(seed: u64) -> (Server, Arc<Registry>) {
+    let reg = Arc::new(Registry::new());
+    let coord = Coordinator::start(
+        tiny_sim(seed, HwConfig::pynq_z2()),
+        Config {
+            workers: 1,
+            max_batch: 4,
+            max_wait_ms: 2,
+            telemetry: Some(reg.clone()),
+            ..Default::default()
+        },
+        None,
+    )
+    .unwrap();
+    let cfg = ServerConfig {
+        telemetry: Some(reg.clone()),
+        stats_addr: Some("127.0.0.1:0".into()),
+        ..Default::default()
+    };
+    let server = Server::start("127.0.0.1:0", coord, cfg).unwrap();
+    (server, reg)
+}
+
+fn scrape_summary(addr: &str) -> export::StatsSummary {
+    let body = export::scrape(addr, Duration::from_secs(5)).unwrap();
+    export::summarize(&export::parse(&body).unwrap())
+}
+
+#[test]
+fn live_scrape_reconciles_with_snapshot_and_profiles_every_unit() {
+    let (server, _reg) = start_telemetry_server(7);
+    let stats = server.stats_addr().expect("stats endpoint bound").to_string();
+
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for (i, m) in [Method::Saliency, Method::Guided, Method::Deconvnet].into_iter().enumerate() {
+        c.attribute(&image(100 + i as u64), m).unwrap();
+    }
+    let (a, b) = (image(110), image(111));
+    assert_eq!(c.attribute_batch(&[&a, &b], Method::Guided).unwrap().len(), 2);
+    drop(c); // quiesce: counters are final before the last reply byte
+
+    let sum = scrape_summary(&stats);
+
+    // per-unit engine profile: forward AND backward passes attributed
+    // to every fused unit of the tiny plan, modeled cycles alongside
+    // measured host wall time (the live Table III counterpart)
+    assert!(!sum.units.is_empty(), "profiler rows must be exposed");
+    for phase in ["fwd", "bwd"] {
+        let rows: Vec<_> = sum.units.iter().filter(|u| u.phase == phase).collect();
+        assert!(!rows.is_empty(), "missing {phase} rows");
+        for u in rows {
+            assert!(u.passes > 0, "unit {} {phase} never ran", u.unit);
+            assert!(u.cycles > 0, "unit {} {phase} has no modeled cycles", u.unit);
+        }
+    }
+    assert!(sum.units.iter().map(|u| u.wall_ns).sum::<u64>() > 0, "no wall time attributed");
+
+    // span histograms landed, the scrape carries the live gauges and
+    // the per-device fleet rows, and the snapshot mirror is present
+    assert!(sum.stages.iter().any(|s| s.count > 0), "no stage/request histograms");
+    assert!(sum.gauges.contains_key("attrax_queue_depth"));
+    assert!(sum.gauges.contains_key("attrax_snapshot_completed"));
+    assert!(!sum.devices.is_empty(), "fleet rows missing");
+    assert!(sum.devices.iter().map(|d| d.completed).sum::<u64>() > 0);
+
+    // quiesced reconciliation: every dual-written counter equals the
+    // final Snapshot exactly — not approximately
+    let snap = server.shutdown().unwrap();
+    let pairs = [
+        ("attrax_completed_total", snap.completed),
+        ("attrax_rejected_total", snap.rejected),
+        ("attrax_rejected_busy_total", snap.rejected_busy),
+        ("attrax_deadline_exceeded_total", snap.deadline_exceeded),
+        ("attrax_errors_total", snap.errors),
+        ("attrax_retries_total", snap.retries),
+        ("attrax_breaker_trips_total", snap.breaker_trips),
+        ("attrax_integrity_failures_total", snap.integrity_failures),
+        ("attrax_reconnects_total", snap.reconnects),
+        ("attrax_conns_total", snap.total_conns),
+        ("attrax_verified_total", snap.verified),
+    ];
+    for (name, v) in pairs {
+        assert_eq!(
+            sum.counters.get(name).copied(),
+            Some(v as f64),
+            "{name} does not reconcile with the snapshot"
+        );
+    }
+    assert!(snap.completed >= 4, "all driven requests completed");
+}
+
+#[test]
+fn stats_endpoint_dies_with_the_server() {
+    let (server, _reg) = start_telemetry_server(11);
+    let stats = server.stats_addr().unwrap().to_string();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    c.attribute(&image(1), Method::Saliency).unwrap();
+    drop(c);
+    assert!(export::scrape(&stats, Duration::from_secs(5)).is_ok());
+    server.shutdown().unwrap();
+    assert!(
+        export::scrape(&stats, Duration::from_millis(200)).is_err(),
+        "endpoint must not outlive the server"
+    );
+}
+
+#[test]
+fn live_sampling_is_deterministic_and_registry_counts_the_rest() {
+    let n = 8u64;
+    // one client, serial requests: the recorder sees sequence 0..n in
+    // order, so the keep set is a pure function of splitmix64
+    let expected_kept = (0..n).filter(|&i| splitmix64(i) % 2 == 0).count() as u64;
+    let run = || {
+        let reg = Arc::new(Registry::new());
+        let inner = Arc::new(CountingRecorder::default());
+        let coord = Coordinator::start(
+            tiny_sim(3, HwConfig::pynq_z2()),
+            Config { workers: 1, ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let cfg = ServerConfig {
+            recorder: Some(Arc::new(SampledRecorder::new(
+                inner.clone() as Arc<dyn Recorder>,
+                2,
+                Some(reg.clone()),
+            )) as Arc<dyn Recorder>),
+            ..Default::default()
+        };
+        let server = Server::start("127.0.0.1:0", coord, cfg).unwrap();
+        let mut c = Client::connect(server.local_addr()).unwrap();
+        for i in 0..n {
+            c.attribute(&image(i), Method::Saliency).unwrap();
+        }
+        drop(c);
+        server.shutdown().unwrap();
+        (inner.seen.load(Ordering::Relaxed) as u64, reg.spans_sampled_out.get())
+    };
+    let (kept, dropped) = run();
+    assert_eq!(kept, expected_kept);
+    assert_eq!(kept + dropped, n, "every span kept or counted out");
+    assert_eq!(run(), (kept, dropped), "reruns sample identically");
+}
+
+#[test]
+fn rotated_live_capture_audits_segment_by_segment() {
+    let base = tmp("rotating");
+    let meta = TraceMeta {
+        board: "pynq-z2".into(),
+        model: "tiny-test".into(),
+        weights: "synthetic:5".into(),
+        config: "custom".into(),
+        elems: ELEMS,
+        out_n: 4,
+        workers: 1,
+        max_batch: 4,
+        max_wait_ms: 2,
+    };
+    // tiny cap: every record (frames + span, ~KB) exceeds it, so each
+    // span lands in its own self-contained segment
+    let writer = Arc::new(TraceWriter::create_rotating(&base, &meta, 512).unwrap());
+    let coord = Coordinator::start(
+        tiny_sim(5, HwConfig::pynq_z2()),
+        Config { workers: 1, max_batch: 4, max_wait_ms: 2, ..Default::default() },
+        None,
+    )
+    .unwrap();
+    let cfg =
+        ServerConfig { recorder: Some(writer.clone() as Arc<dyn Recorder>), ..Default::default() };
+    let server = Server::start("127.0.0.1:0", coord, cfg).unwrap();
+    let mut c = Client::connect(server.local_addr()).unwrap();
+    for (i, m) in [Method::Saliency, Method::Guided, Method::Deconvnet, Method::Saliency]
+        .into_iter()
+        .enumerate()
+    {
+        c.attribute(&image(200 + i as u64), m).unwrap();
+    }
+    drop(c);
+    server.shutdown().unwrap();
+    assert_eq!(writer.finish(), Ok(4));
+    assert!(writer.segments() > 1, "cap of 512 B must force rotation");
+    let paths = writer.segment_paths();
+
+    // the segment list audits as one capture, byte-identically on rerun
+    let a = doctor::diagnose_segments(&paths, &DoctorSpec::default()).unwrap();
+    let b = doctor::diagnose_segments(&paths, &DoctorSpec::default()).unwrap();
+    assert_eq!(a.frames, 4, "doctor sees every frame across segments");
+    assert_eq!(a.outcomes.get("ok"), Some(&4));
+    assert_eq!(a.to_json().to_string(), b.to_json().to_string());
+
+    for p in &paths {
+        std::fs::remove_file(p).ok();
+    }
+}
+
+#[test]
+fn loadgen_scrape_attaches_monotone_server_stats() {
+    let (server, _reg) = start_telemetry_server(13);
+    let spec = loadgen::Spec {
+        addr: server.local_addr().to_string(),
+        conns: 1,
+        requests: 6,
+        secs: 30.0,
+        rps: 0.0,
+        batch: 1,
+        elems: ELEMS,
+        method: None,
+        timeout_ms: 5000,
+        seed: 1,
+        trace: None,
+        stats_addr: server.stats_addr().map(|a| a.to_string()),
+    };
+    let report = loadgen::run(&spec).unwrap();
+    assert_eq!(report.ok, 6);
+    let ss = report.server_stats.as_ref().expect("--stats-addr attaches server stats");
+    assert!(ss.monotone, "counters can only grow between the two scrapes");
+    assert!(ss.reconciled.is_none(), "reconciliation is the CLI's job (needs the snapshot)");
+    assert!(ss.summary.counters.get("attrax_completed_total").copied().unwrap_or(0.0) >= 6.0);
+    assert!(!ss.summary.units.is_empty(), "server-side unit breakdown rides in the report");
+    let json = report.to_json(&spec).to_string();
+    assert!(json.contains("\"monotone\":true"), "{json}");
+    assert!(json.contains("\"server_stats\":"), "{json}");
+    server.shutdown().unwrap();
+}

@@ -119,6 +119,20 @@ cargo run --release -q -- doctor smoke.trace --out BENCH_doctor_b.json
 cmp BENCH_doctor.json BENCH_doctor_b.json
 rm -f smoke.trace BENCH_serve_smoke.json BENCH_doctor.json BENCH_doctor_b.json
 
+echo "== telemetry gate: live scrape reconciles with the final snapshot =="
+# Loadgen smoke with the stats endpoint bound on an ephemeral loopback
+# port: the report must carry the server-side stage/unit breakdown,
+# counters may only grow between the two scrapes (monotone:true), and
+# the final scrape's dual-written counters must equal the in-process
+# coordinator Snapshot exactly (reconciled:true; the binary also exits
+# nonzero on a reconciliation failure).
+cargo run --release -q -- loadgen --smoke --secs 2 --stats-addr 127.0.0.1:0 \
+    --out BENCH_serve_stats.json
+grep -q '"server_stats":' BENCH_serve_stats.json
+grep -q '"monotone":true' BENCH_serve_stats.json
+grep -q '"reconciled":true' BENCH_serve_stats.json
+rm -f BENCH_serve_stats.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
