@@ -6,6 +6,13 @@
 //! atomics, so a quiesced stats-endpoint scrape reconciles *exactly*
 //! with [`Metrics::snapshot`] — the `loadgen --stats-addr` gate in
 //! `scripts/ci.sh` asserts this equality end to end.
+//!
+//! The registry's per-SLO-class counters are *not* dual-written here:
+//! classification needs the request's end-to-end span, so the server
+//! publishes them directly at span completion
+//! ([`Registry::observe_class`]), and the classed reconciliation
+//! contract (Σ_class (good+bad) × batch == `completed`) is checked by
+//! the `loadgen --class-mix` CI gate instead.
 
 use std::sync::{Arc, Mutex, OnceLock};
 use std::time::Instant;

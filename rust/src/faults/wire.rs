@@ -245,6 +245,7 @@ mod tests {
             deadline_ms: None,
             with_crc,
             trace_seq: None,
+            slo_class: None,
             images: vec![0.25; 8],
         })
     }

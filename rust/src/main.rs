@@ -17,7 +17,12 @@
 //!              violations)
 //!   top        live dashboard: poll a serve --stats-addr endpoint and
 //!              render req/s, stage quantiles, the per-unit engine
-//!              profile and per-device fleet state
+//!              profile and per-device fleet state (--json = one-shot
+//!              machine-readable summary)
+//!   monitor    multi-fleet SLO monitor: poll stats endpoints against
+//!              an attrax-slo/v1 spec, render per-class burn rates,
+//!              exit nonzero on budget exhaustion (BENCH_slo.json;
+//!              --smoke = the deterministic CI check)
 //!   chaos      fault-injection campaign over the full serving stack,
 //!              emit BENCH_chaos.json (--smoke = the deterministic CI
 //!              campaign; nonzero exit if any fault escaped)
@@ -41,7 +46,7 @@ use attrax::obs::export as obs_export;
 use attrax::obs::span::Recorder;
 use attrax::obs::telemetry::{Registry, SampledRecorder};
 use attrax::obs::trace::{TraceMeta, TraceWriter};
-use attrax::obs::{doctor, replay};
+use attrax::obs::{doctor, replay, slo};
 use attrax::sched::{AttrOptions, Simulator};
 use attrax::serve::{loadgen, Server, ServerConfig};
 use std::sync::Arc;
@@ -67,6 +72,7 @@ const SUBCOMMANDS: &[(&str, fn(Vec<String>) -> i32)] = &[
     ("report", cmd_report),
     ("fleet", cmd_fleet),
     ("top", cmd_top),
+    ("monitor", cmd_monitor),
 ];
 
 fn main() {
@@ -104,6 +110,9 @@ fn usage() -> String {
      \x20 doctor      audit a captured trace offline (SLO misses, shed storms,\n\
      \x20             batching pathologies, fleet imbalance), emit BENCH_doctor.json\n\
      \x20 top         live dashboard over a serve --stats-addr endpoint\n\
+     \x20             (--json = one-shot machine-readable summary)\n\
+     \x20 monitor     multi-fleet SLO burn-rate monitor over stats endpoints,\n\
+     \x20             emit BENCH_slo.json (--smoke = deterministic CI check)\n\
      \x20 chaos       fault-injection campaign over the serving stack, emit\n\
      \x20             BENCH_chaos.json (--smoke = deterministic CI campaign)\n\
      \x20 tune        design-space exploration: BENCH_dse.json + tuned configs\n\
@@ -351,7 +360,10 @@ fn cmd_serve(argv: Vec<String>) -> i32 {
         .opt("stats-addr", "", "expose a one-shot stats endpoint on this address (attrax top)")
         .opt("duration", "0", "seconds to serve before graceful drain (0 = forever)")
         .opt("config", "", "tuned-config artifact (attrax tune) to run this board on")
-        .opt("model", "", "graph-IR model manifest (default: built-in Table III)");
+        .opt("model", "", "graph-IR model manifest (default: built-in Table III)")
+        .opt("slo", "", "SLO spec (*.slo.json): admit slo_class-tagged requests, publish per-class counters")
+        .opt("push-addr", "", "push statsd-style counter deltas to this UDP collector")
+        .opt("push-every", "1000", "milliseconds between pushes");
     let args = parse_or_exit(cmd, argv);
     let board = board_of(&args);
     let net = model_of(&args).unwrap_or_else(Network::table3);
@@ -450,7 +462,18 @@ fn cmd_serve_tcp(
     // it through Metrics and the per-unit profiler) and the server
     // (which feeds it request spans + exposes it over one-shot TCP)
     let stats_addr = args.get("stats-addr").filter(|a| !a.is_empty()).map(String::from);
-    let telemetry = stats_addr.as_ref().map(|_| Arc::new(Registry::new()));
+    let slo_spec = match args.get("slo").filter(|p| !p.is_empty()) {
+        None => None,
+        Some(path) => match slo::SloSpec::load(std::path::Path::new(path)) {
+            Ok(sp) => Some(Arc::new(sp)),
+            Err(e) => return fail(e),
+        },
+    };
+    let push_addr = args.get("push-addr").filter(|a| !a.is_empty()).map(String::from);
+    // classed publication and push export both need a registry, even
+    // when no pull endpoint is exposed
+    let telemetry = (stats_addr.is_some() || push_addr.is_some() || slo_spec.is_some())
+        .then(|| Arc::new(Registry::new()));
     let (coord, model_kind, weights) = match start_coordinator(args, board, hw_cfg, telemetry.clone())
     {
         Ok(c) => c,
@@ -510,6 +533,9 @@ fn cmd_serve_tcp(
         recorder,
         telemetry,
         stats_addr,
+        slo: slo_spec,
+        push_addr,
+        push_every_ms: args.parse_num("push-every", 1000),
     };
     let srv = match Server::start(addr, coord, scfg) {
         Ok(s) => s,
@@ -579,6 +605,12 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
             "scrape the server's stats endpoint before/after the run (with --smoke: \
              bind the loopback endpoint here, e.g. 127.0.0.1:0)",
         )
+        .opt(
+            "class-mix",
+            "",
+            "tag requests with SLO classes, e.g. gold:1,silver:2,bronze:5 (with --smoke \
+             the loopback server admits them via a synthetic spec)",
+        )
         .flag("smoke", "2s self-contained check: spin an in-process loopback server");
     let args = parse_or_exit(cmd, argv);
     let method = args.get("method").filter(|s| !s.is_empty()).map(|s| {
@@ -589,6 +621,16 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
     });
     let smoke = args.flag("smoke");
     let stats_addr_opt = args.get("stats-addr").filter(|s| !s.is_empty()).map(String::from);
+    let class_mix = match args.get("class-mix").filter(|s| !s.is_empty()) {
+        None => Vec::new(),
+        Some(text) => match loadgen::parse_class_mix(text) {
+            Ok(m) => m,
+            Err(e) => {
+                eprintln!("--class-mix: {e}");
+                return 2;
+            }
+        },
+    };
     let mut spec = loadgen::Spec {
         addr: String::new(),
         conns: args.parse_num("conns", 4),
@@ -602,6 +644,7 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         seed: args.parse_num("seed", 42),
         trace: args.get("trace").filter(|s| !s.is_empty()).map(String::from),
         stats_addr: None,
+        class_mix,
     };
     let trace_out = args.get("trace-out").filter(|s| !s.is_empty()).map(String::from);
     if trace_out.is_some() && !smoke {
@@ -620,7 +663,9 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         };
         // --stats-addr with --smoke: one Registry shared by coordinator
         // and server, exposed on the requested (usually ephemeral) addr
-        let telemetry = stats_addr_opt.as_ref().map(|_| Arc::new(Registry::new()));
+        // (--class-mix also needs one for the per-class slots)
+        let telemetry = (stats_addr_opt.is_some() || !spec.class_mix.is_empty())
+            .then(|| Arc::new(Registry::new()));
         let cfg = Config {
             workers: 2,
             queue_depth: 32,
@@ -631,6 +676,11 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
         let mut scfg = ServerConfig::default();
         scfg.telemetry = telemetry;
         scfg.stats_addr = stats_addr_opt.clone();
+        if !spec.class_mix.is_empty() {
+            // the loopback server must admit the mix's class names
+            let names: Vec<String> = spec.class_mix.iter().map(|(n, _)| n.clone()).collect();
+            scfg.slo = Some(Arc::new(slo::SloSpec::synthetic(&names)));
+        }
         if let Some(path) = &trace_out {
             let custom_cfg = args.get("config").filter(|s| !s.is_empty()).is_some();
             let meta = TraceMeta {
@@ -714,14 +764,12 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
                         ("attrax_conns_total", snap.total_conns),
                         ("attrax_verified_total", snap.verified),
                     ];
-                    let reconciled = pairs.iter().all(|(name, v)| {
+                    let mut reconciled = pairs.iter().all(|(name, v)| {
                         ss.summary.counters.get(*name).copied().unwrap_or(0.0) == *v as f64
                     });
-                    ss.reconciled = Some(reconciled);
                     if reconciled {
                         println!("stats scrape reconciles with the final metrics snapshot");
                     } else {
-                        reconcile_failed = true;
                         eprintln!("stats scrape DOES NOT reconcile with the final snapshot:");
                         for (name, v) in pairs {
                             let got = ss.summary.counters.get(name).copied().unwrap_or(0.0);
@@ -729,6 +777,34 @@ fn cmd_loadgen(argv: Vec<String>) -> i32 {
                                 eprintln!("  {name}: scrape {got} vs snapshot {v}");
                             }
                         }
+                    }
+                    // With --class-mix every Ok frame lands in exactly
+                    // one class slot, so the classed frame count times
+                    // the batch size must equal the completed-image
+                    // snapshot total — classed publication may neither
+                    // drop nor double-count.
+                    if !spec.class_mix.is_empty() {
+                        let classed: u64 =
+                            ss.summary.classes.iter().map(|c| c.good + c.bad).sum();
+                        let images = classed * spec.batch as u64;
+                        if images == snap.completed {
+                            println!(
+                                "per-class counters reconcile: {classed} classed frames x \
+                                 batch {} == {} completed images",
+                                spec.batch, snap.completed
+                            );
+                        } else {
+                            reconciled = false;
+                            eprintln!(
+                                "per-class counters DO NOT reconcile: {classed} classed \
+                                 frames x batch {} != {} completed images",
+                                spec.batch, snap.completed
+                            );
+                        }
+                    }
+                    ss.reconciled = Some(reconciled);
+                    if !reconciled {
+                        reconcile_failed = true;
                     }
                 }
             }
@@ -820,7 +896,8 @@ fn cmd_doctor(argv: Vec<String>) -> i32 {
             "max-device-skew",
             "",
             "max busiest-device/mean span-count ratio (default: unlimited)",
-        );
+        )
+        .opt("slo", "", "SLO spec (*.slo.json): audit per-class burn rates from classed Ok frames");
     let args = parse_or_exit(cmd, argv);
     let paths: Vec<String> = args.positional.clone();
     if paths.is_empty() {
@@ -830,6 +907,13 @@ fn cmd_doctor(argv: Vec<String>) -> i32 {
         );
         return 2;
     }
+    let slo_spec = match args.get("slo").filter(|p| !p.is_empty()) {
+        None => None,
+        Some(path) => match slo::SloSpec::load(std::path::Path::new(path)) {
+            Ok(sp) => Some(sp),
+            Err(e) => return fail(e),
+        },
+    };
     let spec = doctor::DoctorSpec {
         max_deadline_miss_rate: args.parse_num("max-miss-rate", 1.0),
         max_shed_burst: args.parse_num("max-shed-burst", u64::MAX),
@@ -840,6 +924,7 @@ fn cmd_doctor(argv: Vec<String>) -> i32 {
         outlier_factor: args.parse_num("outlier-factor", 10.0),
         max_queue_outliers: args.parse_num("max-queue-outliers", u64::MAX),
         max_device_skew: args.parse_num("max-device-skew", f64::INFINITY),
+        slo: slo_spec,
     };
     let report = match doctor::diagnose_segments(&paths, &spec) {
         Ok(r) => r,
@@ -873,12 +958,29 @@ fn cmd_top(argv: Vec<String>) -> i32 {
         .opt("interval", "2", "seconds between scrapes")
         .opt("iters", "0", "frames to render before exiting (0 = until killed)")
         .flag("once", "render a single frame and exit (same as --iters 1)")
-        .flag("plain", "no screen clearing between frames (log-friendly)");
+        .flag("plain", "no screen clearing between frames (log-friendly)")
+        .flag("json", "print one machine-readable summary frame and exit");
     let args = parse_or_exit(cmd, argv);
     let Some(addr) = args.positional.first().cloned() else {
-        eprintln!("usage: attrax top <host:port> [--interval s] [--once | --iters n] [--plain]");
+        eprintln!(
+            "usage: attrax top <host:port> [--interval s] [--once | --iters n] [--plain | --json]"
+        );
         return 2;
     };
+    if args.flag("json") {
+        // one scrape, the raw StatsSummary as JSON — for scripts that
+        // want the parsed counters without the ANSI dashboard
+        return match obs_export::scrape(&addr, std::time::Duration::from_secs(2))
+            .and_then(|text| obs_export::parse(&text))
+            .map(|metrics| obs_export::summarize(&metrics))
+        {
+            Ok(cur) => {
+                println!("{}", cur.to_json());
+                0
+            }
+            Err(e) => fail(format!("scrape {addr}: {e}")),
+        };
+    }
     let interval: f64 = args.parse_num("interval", 2.0);
     let iters: u64 = if args.flag("once") { 1 } else { args.parse_num("iters", 0) };
     let plain = args.flag("plain");
@@ -908,6 +1010,211 @@ fn cmd_top(argv: Vec<String>) -> i32 {
         prev = Some((cur, now));
         std::thread::sleep(std::time::Duration::from_secs_f64(interval.max(0.1)));
     }
+}
+
+/// The `BENCH_slo.json` payload: schema tag plus one entry per
+/// monitored target. [`slo::SloReport::to_json`] is counter arithmetic
+/// only, so identical scrapes serialize byte-identically.
+fn slo_report_json(targets: &[(String, slo::SloReport)]) -> attrax::util::json::Json {
+    use attrax::util::json::{arr, obj, s};
+    obj(vec![
+        ("schema", s(slo::SLO_REPORT_SCHEMA)),
+        (
+            "targets",
+            arr(targets
+                .iter()
+                .map(|(addr, r)| obj(vec![("addr", s(addr)), ("classes", r.to_json())]))
+                .collect()),
+        ),
+    ])
+}
+
+/// `attrax monitor <spec.slo.json> <addr>...` — the multi-fleet SLO
+/// view: each poll scrapes every stats endpoint, renders its dashboard
+/// plus the per-class burn table ([`slo::evaluate`] over the previous
+/// and current scrape), and exits nonzero the moment any class's error
+/// budget is exhausted. `--smoke` runs the whole loop self-contained
+/// against a loopback server for the CI gate.
+fn cmd_monitor(argv: Vec<String>) -> i32 {
+    let cmd = Command::new("monitor", "multi-fleet SLO burn-rate monitor, emit BENCH_slo.json")
+        .opt("interval", "2", "seconds between polls")
+        .opt("iters", "0", "polls before exiting (0 = until killed or a budget is exhausted)")
+        .flag("once", "poll once and exit (same as --iters 1)")
+        .flag("plain", "no screen clearing between frames (log-friendly)")
+        .opt("out", "BENCH_slo.json", "machine-readable report path (written on bounded exit)")
+        .opt("requests", "96", "with --smoke: classed frames the fixed workload drives")
+        .flag("smoke", "self-contained check: loopback server + fixed classed workload");
+    let args = parse_or_exit(cmd, argv);
+    let usage = "usage: attrax monitor <spec.slo.json> <addr>... [--interval s] \
+                 [--once | --iters n] [--plain] [--out BENCH_slo.json]\n\
+                 \x20      attrax monitor <spec.slo.json> --smoke";
+    let Some(spec_path) = args.positional.first().cloned() else {
+        eprintln!("{usage}");
+        return 2;
+    };
+    let spec = match slo::SloSpec::load(std::path::Path::new(&spec_path)) {
+        Ok(sp) => sp,
+        Err(e) => return fail(e),
+    };
+    let out = args.get_or("out", "BENCH_slo.json");
+    if args.flag("smoke") {
+        return monitor_smoke(&spec, args.parse_num("requests", 96), out);
+    }
+    let addrs: Vec<String> = args.positional[1..].to_vec();
+    if addrs.is_empty() {
+        eprintln!("{usage}");
+        return 2;
+    }
+    let interval: f64 = args.parse_num("interval", 2.0);
+    let iters: u64 = if args.flag("once") { 1 } else { args.parse_num("iters", 0) };
+    let plain = args.flag("plain");
+    let mut prev: Vec<Option<(obs_export::StatsSummary, std::time::Instant)>> =
+        vec![None; addrs.len()];
+    let mut last: Vec<(String, slo::SloReport)> = Vec::new();
+    let mut frames: u64 = 0;
+    loop {
+        if !plain {
+            print!("\x1b[2J\x1b[H");
+        }
+        let mut exhausted = false;
+        last.clear();
+        for (i, addr) in addrs.iter().enumerate() {
+            let cur = match obs_export::scrape(addr, std::time::Duration::from_secs(2))
+                .and_then(|text| obs_export::parse(&text))
+                .map(|metrics| obs_export::summarize(&metrics))
+            {
+                Ok(s) => s,
+                Err(e) => return fail(format!("scrape {addr}: {e}")),
+            };
+            let now = std::time::Instant::now();
+            let prev_summary = prev[i].as_ref().map(|(s, _)| s);
+            let dt = prev[i].as_ref().map_or(0.0, |(_, t0)| now.duration_since(*t0).as_secs_f64());
+            println!("== {addr} ==");
+            print!("{}", obs_export::dashboard(prev_summary, &cur, dt));
+            let report = slo::evaluate(&spec, prev_summary, &cur);
+            println!("\n  slo burn:");
+            print!("{}", report.render());
+            println!();
+            exhausted |= report.exhausted();
+            last.push((addr.clone(), report));
+            prev[i] = Some((cur, now));
+        }
+        use std::io::Write as _;
+        let _ = std::io::stdout().flush();
+        frames += 1;
+        if exhausted || (iters > 0 && frames >= iters) {
+            let payload = format!("{}\n", slo_report_json(&last));
+            match std::fs::write(out, &payload) {
+                Ok(()) => println!("wrote {out}"),
+                Err(e) => {
+                    eprintln!("failed to write {out}: {e}");
+                    return 1;
+                }
+            }
+            if exhausted {
+                eprintln!("error budget exhausted");
+                return 1;
+            }
+            return 0;
+        }
+        std::thread::sleep(std::time::Duration::from_secs_f64(interval.max(0.1)));
+    }
+}
+
+/// The deterministic CI path behind `monitor --smoke`: a loopback
+/// server under the given spec, a fixed classed workload driven closed
+/// loop with no deadline (so every frame completes Ok and the
+/// per-class counters depend only on the request count and the class
+/// schedule, not on timing), one scrape, one evaluation. Two runs of
+/// the same spec write byte-identical `BENCH_slo.json`.
+fn monitor_smoke(spec: &slo::SloSpec, requests: usize, out: &str) -> i32 {
+    let net = Network::table3();
+    let hw_cfg = fpga::choose_config(Board::PynqZ2, &net, Method::Guided);
+    let (sim, _) = match build_sim_or_synthetic(Board::PynqZ2, Some(hw_cfg)) {
+        Ok(v) => v,
+        Err(e) => return fail(e),
+    };
+    let elems = sim.net.input.elems();
+    let telemetry = Some(Arc::new(Registry::new()));
+    let cfg = Config {
+        workers: 2,
+        queue_depth: 32,
+        max_batch: 4,
+        telemetry: telemetry.clone(),
+        ..Default::default()
+    };
+    let coord = match Coordinator::start(sim, cfg, None) {
+        Ok(c) => c,
+        Err(e) => return fail(e),
+    };
+    let mut scfg = ServerConfig::default();
+    scfg.telemetry = telemetry;
+    scfg.stats_addr = Some("127.0.0.1:0".to_string());
+    scfg.slo = Some(Arc::new(spec.clone()));
+    let srv = match Server::start("127.0.0.1:0", coord, scfg) {
+        Ok(s) => s,
+        Err(e) => return fail(e),
+    };
+    let Some(stats_addr) = srv.stats_addr().map(|a| a.to_string()) else {
+        return fail("loopback stats endpoint failed to bind");
+    };
+    let lspec = loadgen::Spec {
+        addr: srv.local_addr().to_string(),
+        conns: 2,
+        requests,
+        secs: 3600.0, // the fixed request count ends the run
+        rps: 0.0,     // closed loop
+        batch: 1,
+        elems,
+        method: None,
+        timeout_ms: 0, // no deadline: every frame completes Ok
+        seed: 42,
+        trace: None,
+        stats_addr: None, // scraped below, after the run quiesces
+        class_mix: spec.classes.iter().map(|c| (c.name.clone(), 1)).collect(),
+    };
+    println!("monitor --smoke: {requests} classed frames against the loopback server ...");
+    let report = match loadgen::run(&lspec) {
+        Ok(r) => r,
+        Err(e) => return fail(e),
+    };
+    if report.ok != requests as u64 {
+        // a shed or error would make the per-class counts
+        // scheduling-dependent; the smoke parameters are sized so it
+        // cannot happen
+        let _ = srv.shutdown();
+        return fail(format!("smoke workload incomplete: {}/{requests} frames ok", report.ok));
+    }
+    let cur = match obs_export::scrape(&stats_addr, std::time::Duration::from_secs(2))
+        .and_then(|text| obs_export::parse(&text))
+        .map(|metrics| obs_export::summarize(&metrics))
+    {
+        Ok(s) => s,
+        Err(e) => {
+            let _ = srv.shutdown();
+            return fail(format!("scrape {stats_addr}: {e}"));
+        }
+    };
+    if let Err(e) = srv.shutdown() {
+        return fail(e);
+    }
+    let verdict = slo::evaluate(spec, None, &cur);
+    println!("\n  slo burn:");
+    print!("{}", verdict.render());
+    let exhausted = verdict.exhausted();
+    let payload = format!("{}\n", slo_report_json(&[("loopback".to_string(), verdict)]));
+    match std::fs::write(out, &payload) {
+        Ok(()) => println!("wrote {out}"),
+        Err(e) => {
+            eprintln!("failed to write {out}: {e}");
+            return 1;
+        }
+    }
+    if exhausted {
+        eprintln!("error budget exhausted");
+        return 1;
+    }
+    0
 }
 
 fn cmd_chaos(argv: Vec<String>) -> i32 {

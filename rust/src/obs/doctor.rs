@@ -19,7 +19,13 @@
 //! * `queue_wait_outliers` — enqueue→batch-form waits beyond
 //!   [`DoctorSpec::outlier_factor`] × the median wait;
 //! * `device_skew` — fleet load imbalance: the busiest device's span
-//!   count vs the per-device mean (max/mean ratio).
+//!   count vs the per-device mean (max/mean ratio);
+//! * `slo_burn` — with an `attrax-slo/v1` spec loaded
+//!   (`doctor --slo`), per-class burn rate from the trace: the bad
+//!   fraction among each class's Ok-outcome frames (total latency
+//!   over the class threshold) relative to its allowed `1 - target`.
+//!   The same arithmetic as the live [`crate::obs::slo::evaluate`],
+//!   fed from spans instead of scrapes.
 //!
 //! Every check always emits a [`Finding`] (value + threshold +
 //! violated flag) so the report is a complete health record, not just
@@ -61,6 +67,9 @@ pub struct DoctorSpec {
     /// Max tolerated per-device load skew (busiest device's span
     /// count / per-device mean; 1.0 = perfectly balanced).
     pub max_device_skew: f64,
+    /// SLO objectives to audit classed frames against (`doctor
+    /// --slo`). `None` = no `slo_burn` findings.
+    pub slo: Option<crate::obs::slo::SloSpec>,
 }
 
 impl Default for DoctorSpec {
@@ -75,6 +84,7 @@ impl Default for DoctorSpec {
             outlier_factor: 10.0,
             max_queue_outliers: u64::MAX,
             max_device_skew: f64::INFINITY,
+            slo: None,
         }
     }
 }
@@ -245,6 +255,7 @@ pub fn diagnose_records(
     findings.push(check_breakers(&spans, spec));
     findings.push(check_queue_outliers(&spans, spec));
     findings.push(check_device_skew(&spans, spec));
+    findings.extend(check_slo_burn(records, spec));
 
     DoctorReport { frames: spans.len(), outcomes, stages, findings }
 }
@@ -428,6 +439,51 @@ fn check_device_skew(spans: &[&Span], spec: &DoctorSpec) -> Finding {
     }
 }
 
+/// Per-class SLO burn from the trace. Only Ok outcomes count (sheds
+/// and typed errors are other checks' business), matching the live
+/// registry's classification; an idle class is vacuously clean.
+fn check_slo_burn(records: &[TraceRecord], spec: &DoctorSpec) -> Vec<Finding> {
+    let Some(slo) = &spec.slo else {
+        return Vec::new();
+    };
+    slo.classes
+        .iter()
+        .map(|class| {
+            let (mut good, mut bad) = (0u64, 0u64);
+            for r in records {
+                if r.span.outcome != Outcome::Ok
+                    || r.req.slo_class.as_deref() != Some(class.name.as_str())
+                {
+                    continue;
+                }
+                if r.span.total_ns() <= class.latency_ns() {
+                    good += 1;
+                } else {
+                    bad += 1;
+                }
+            }
+            let total = good + bad;
+            let allowed = 1.0 - class.target;
+            let burn = if total == 0 || allowed <= 0.0 {
+                0.0
+            } else {
+                (bad as f64 / total as f64) / allowed
+            };
+            Finding {
+                kind: "slo_burn",
+                detail: format!(
+                    "class {:?}: {bad}/{total} Ok frames over {}ms against target {} \
+                     (burn {burn:.3})",
+                    class.name, class.latency_ms, class.target
+                ),
+                value: burn,
+                threshold: 1.0,
+                violated: burn > 1.0,
+            }
+        })
+        .collect()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -478,6 +534,7 @@ mod tests {
             deadline_ms: Some(100),
             with_crc: false,
             trace_seq: None,
+            slo_class: None,
             images: vec![0.0, 1.0],
         };
         let reply = match outcome {
@@ -546,6 +603,7 @@ mod tests {
             outlier_factor: 10.0,
             max_queue_outliers: 0,
             max_device_skew: f64::INFINITY,
+            slo: None,
         };
         let report = diagnose_records(&meta(), &records, &spec);
         let violated: Vec<&str> =
@@ -602,6 +660,42 @@ mod tests {
         let f = report.findings.iter().find(|f| f.kind == "device_skew").unwrap();
         assert_eq!(f.value, 1.0);
         assert!(!f.violated, "ratio 1.0 is not beyond a 1.0 threshold");
+    }
+
+    #[test]
+    fn slo_burn_audits_classed_ok_frames_per_class() {
+        use crate::obs::slo::{SloClass, SloSpec};
+        // rec() spans span accept→flush in 210 µs (0.21 ms)
+        let mut records: Vec<TraceRecord> =
+            (0..20).map(|i| rec(i, 50_000, 4, Outcome::Ok)).collect();
+        for r in records.iter_mut().take(10) {
+            r.req.slo_class = Some("gold".into());
+        }
+        // half the classed frames are sheds: they never count
+        for r in records.iter_mut().take(5) {
+            r.span.outcome = Outcome::Err(ErrCode::Busy);
+        }
+        let slo = SloSpec {
+            classes: vec![
+                SloClass { name: "gold".into(), latency_ms: 0.1, target: 0.9, budget: 1 },
+                SloClass { name: "silver".into(), latency_ms: 1.0, target: 0.9, budget: 1 },
+            ],
+        };
+        let spec = DoctorSpec { slo: Some(slo), ..DoctorSpec::default() };
+        let report = diagnose_records(&meta(), &records, &spec);
+        let burns: Vec<&Finding> =
+            report.findings.iter().filter(|f| f.kind == "slo_burn").collect();
+        assert_eq!(burns.len(), 2, "one finding per spec class");
+        // gold: 5 Ok classed frames, all over 0.1 ms → bad fraction
+        // 1.0 against an allowed 0.1 → burn 10
+        assert!((burns[0].value - 10.0).abs() < 1e-9, "{}", burns[0].value);
+        assert!(burns[0].violated);
+        // silver: idle class is vacuously clean
+        assert_eq!(burns[1].value, 0.0);
+        assert!(!burns[1].violated);
+        // without a spec, no slo finding exists at all
+        let plain = diagnose_records(&meta(), &records, &DoctorSpec::default());
+        assert!(plain.findings.iter().all(|f| f.kind != "slo_burn"));
     }
 
     #[test]

@@ -61,6 +61,7 @@ pub fn counter_pairs(reg: &Registry) -> Vec<(&'static str, u64)> {
         ("attrax_conns_total", reg.conns_total.get()),
         ("attrax_verified_total", reg.verified.get()),
         ("attrax_spans_sampled_out_total", reg.spans_sampled_out.get()),
+        ("attrax_push_dropped_total", reg.push_dropped.get()),
     ]
 }
 
@@ -142,6 +143,22 @@ pub fn render_registry(reg: &Registry) -> String {
         push_hist(&mut out, "attrax_stage_ns", &labels, &reg.stage_ns[st as usize]);
     }
     push_hist(&mut out, "attrax_request_ns", "", &reg.request_ns);
+    for (idx, class) in reg.class_names().iter().enumerate() {
+        let mut labels = String::new();
+        push_label(&mut labels, "class", class);
+        for (name, v) in [
+            ("attrax_class_good_total", reg.class_good[idx].get()),
+            ("attrax_class_bad_total", reg.class_bad[idx].get()),
+        ] {
+            out.push_str(name);
+            out.push('{');
+            out.push_str(&labels);
+            out.push_str("} ");
+            out.push_str(&v.to_string());
+            out.push('\n');
+        }
+        push_hist(&mut out, "attrax_class_request_ns", &labels, &reg.class_request_ns[idx]);
+    }
     if let Some(prof) = reg.profiler() {
         for row in prof.rows() {
             let mut labels = String::new();
@@ -490,6 +507,20 @@ pub struct UnitRow {
     pub wall_ns: u64,
 }
 
+/// One per-SLO-class row from a scrape: the registry's good/bad
+/// counters plus the class latency quantiles. The raw counts feed
+/// [`crate::obs::slo::evaluate`]'s pure counter arithmetic.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassRow {
+    pub class: String,
+    /// Completions within the class's latency threshold.
+    pub good: u64,
+    /// Completions over it.
+    pub bad: u64,
+    /// Class latency quantiles (None until something was observed).
+    pub lat: Option<StageQuantiles>,
+}
+
 /// One per-device fleet row from a scrape.
 #[derive(Clone, Debug, PartialEq)]
 pub struct DeviceRow {
@@ -509,20 +540,41 @@ pub struct StatsSummary {
     /// Unlabeled non-counter values (gauges + `attrax_snapshot_*`).
     pub gauges: std::collections::BTreeMap<String, f64>,
     pub stages: Vec<StageQuantiles>,
+    /// Per-SLO-class rows (exposition order = spec slot order).
+    pub classes: Vec<ClassRow>,
     pub units: Vec<UnitRow>,
     pub devices: Vec<DeviceRow>,
 }
 
 fn bucket_quantile(buckets: &[(f64, f64)], total: f64, q: f64) -> f64 {
     // buckets: (upper edge ns, cumulative count) sorted by edge.
+    // The rank is placed *within* its bucket by linear interpolation
+    // (reporting the raw upper edge overstates quantiles by up to 2x
+    // on power-of-two edges). Two cases keep their exact old-edge
+    // values: a histogram whose whole mass sits in one bucket (nothing
+    // to interpolate against — every quantile is that bucket's edge)
+    // and a rank landing in the +Inf overflow bucket (no finite edge).
     if total <= 0.0 {
         return 0.0;
     }
     let rank = (q * total).ceil().clamp(1.0, total);
+    let mut lower = 0.0;
+    let mut prev_cum = 0.0;
     for &(edge, cum) in buckets {
         if cum >= rank {
-            return edge;
+            if !edge.is_finite() {
+                return f64::INFINITY;
+            }
+            let in_bucket = cum - prev_cum;
+            if in_bucket <= 0.0 || in_bucket >= total {
+                return edge;
+            }
+            return lower + (rank - prev_cum) / in_bucket * (edge - lower);
         }
+        if edge.is_finite() {
+            lower = edge;
+        }
+        prev_cum = cum;
     }
     f64::INFINITY
 }
@@ -591,6 +643,22 @@ pub fn summarize(metrics: &[Metric]) -> StatsSummary {
     let req = hist_quantiles(metrics, "attrax_request_ns", None);
     if req.count > 0 {
         out.stages.push(req);
+    }
+    for m in metrics.iter().filter(|m| m.name == "attrax_class_good_total") {
+        let Some(class) = m.label("class") else {
+            continue;
+        };
+        let bad = metrics
+            .iter()
+            .find(|b| b.name == "attrax_class_bad_total" && b.label("class") == Some(class))
+            .map_or(0.0, |b| b.value);
+        let q = hist_quantiles(metrics, "attrax_class_request_ns", Some(("class", class)));
+        out.classes.push(ClassRow {
+            class: class.to_string(),
+            good: m.value as u64,
+            bad: bad as u64,
+            lat: (q.count > 0).then_some(q),
+        });
     }
     // units: keyed rows appear as passes/cycles/wall triples; walk the
     // passes rows (exposition order = plan order) and join the rest.
@@ -662,6 +730,25 @@ impl StatsSummary {
                 ])
             })
             .collect());
+        let classes = arr(self
+            .classes
+            .iter()
+            .map(|c| {
+                let mut pairs = vec![
+                    ("class", s(&c.class)),
+                    ("good", num(c.good as f64)),
+                    ("bad", num(c.bad as f64)),
+                ];
+                if let Some(l) = &c.lat {
+                    pairs.push(("count", num(l.count as f64)));
+                    pairs.push(("mean_ms", num(l.mean_ms)));
+                    pairs.push(("p50_ms", num(l.p50_ms)));
+                    pairs.push(("p95_ms", num(l.p95_ms)));
+                    pairs.push(("p99_ms", num(l.p99_ms)));
+                }
+                obj(pairs)
+            })
+            .collect());
         let units = arr(self
             .units
             .iter()
@@ -693,6 +780,7 @@ impl StatsSummary {
         obj(vec![
             ("counters", counters),
             ("stages", stages),
+            ("classes", classes),
             ("units", units),
             ("devices", devices),
         ])
@@ -739,6 +827,19 @@ pub fn dashboard(prev: Option<&StatsSummary>, cur: &StatsSummary, dt_s: f64) -> 
             out.push_str(&format!(
                 "  {:<16} {:>8} {:>12.3} {:>10.3} {:>10.3} {:>10.3}\n",
                 st.stage, st.count, st.mean_ms, st.p50_ms, st.p95_ms, st.p99_ms
+            ));
+        }
+    }
+    if !cur.classes.is_empty() {
+        out.push_str("\n  class            good      bad     p50_ms     p95_ms     p99_ms\n");
+        for c in &cur.classes {
+            let (p50, p95, p99) = c
+                .lat
+                .as_ref()
+                .map_or((0.0, 0.0, 0.0), |l| (l.p50_ms, l.p95_ms, l.p99_ms));
+            out.push_str(&format!(
+                "  {:<14} {:>6} {:>8} {:>10.3} {:>10.3} {:>10.3}\n",
+                c.class, c.good, c.bad, p50, p95, p99
             ));
         }
     }
@@ -914,6 +1015,62 @@ mod tests {
         }
         drop(ep); // joins the accept thread
         assert!(scrape(&addr, Duration::from_millis(200)).is_err(), "endpoint gone after drop");
+    }
+
+    #[test]
+    fn bucket_quantile_interpolates_within_buckets() {
+        // 100 obs: 90 in (0, 1000], 10 in (1000, 2000].
+        let b = [(1000.0, 90.0), (2000.0, 100.0), (f64::INFINITY, 100.0)];
+        // Old-edge behavior is preserved where the rank exhausts its
+        // bucket: rank 90 is the whole first bucket, rank 100 the whole
+        // second one — both land exactly on the upper edge.
+        assert_eq!(bucket_quantile(&b, 100.0, 0.9), 1000.0);
+        assert_eq!(bucket_quantile(&b, 100.0, 1.0), 2000.0);
+        // Mid-bucket ranks interpolate linearly instead of overstating
+        // to the edge: rank 45 sits 45/90 through [0, 1000], rank 95
+        // sits 5/10 through [1000, 2000].
+        assert_eq!(bucket_quantile(&b, 100.0, 0.45), 500.0);
+        assert_eq!(bucket_quantile(&b, 100.0, 0.95), 1500.0);
+        // Empty histogram reports 0 as before.
+        assert_eq!(bucket_quantile(&b, 0.0, 0.5), 0.0);
+    }
+
+    #[test]
+    fn bucket_quantile_single_bucket_and_overflow_keep_exact_edges() {
+        // Whole mass in one bucket: nothing to interpolate against, so
+        // every quantile reports that bucket's edge (the old value).
+        let single = [(1000.0, 0.0), (2000.0, 10.0), (f64::INFINITY, 10.0)];
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(bucket_quantile(&single, 10.0, q), 2000.0);
+        }
+        // Ranks in the +Inf overflow bucket have no finite edge (old
+        // behavior); finite ranks below still interpolate normally.
+        let over = [(1000.0, 5.0), (f64::INFINITY, 10.0)];
+        assert_eq!(bucket_quantile(&over, 10.0, 0.99), f64::INFINITY);
+        assert_eq!(bucket_quantile(&over, 10.0, 0.5), 1000.0);
+    }
+
+    #[test]
+    fn class_rows_roundtrip_through_exposition() {
+        let reg = Registry::new();
+        reg.install_classes(vec!["gold".into(), "silver".into()]);
+        reg.observe_class(0, 2_000, true);
+        reg.observe_class(0, 1_000_000, false);
+        reg.observe_class(1, 2_000, true);
+        let sum = summarize(&parse(&render_registry(&reg)).unwrap());
+        assert_eq!(sum.classes.len(), 2, "one row per installed class");
+        let gold = &sum.classes[0];
+        assert_eq!((gold.class.as_str(), gold.good, gold.bad), ("gold", 1, 1));
+        let lat = gold.lat.as_ref().expect("observed class has quantiles");
+        assert_eq!(lat.count, 2);
+        assert!(lat.p99_ms >= 0.5, "tail sees the slow request: {}", lat.p99_ms);
+        let silver = &sum.classes[1];
+        assert_eq!((silver.good, silver.bad), (1, 0));
+        // rows survive the dashboard and JSON embeddings
+        let frame = dashboard(None, &sum, 0.0);
+        assert!(frame.contains("gold") && frame.contains("silver"), "{frame}");
+        let js = sum.to_json().to_string();
+        assert!(js.contains("\"classes\":[{\"bad\":1"), "{js}");
     }
 
     #[test]

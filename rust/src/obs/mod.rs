@@ -25,17 +25,29 @@
 //! * [`export`] is the live cold side — Prometheus-style text
 //!   exposition of the registry over a one-shot TCP endpoint
 //!   (`serve --stats-addr`), with the scrape client, parser, and
-//!   `attrax top` dashboard renderer.
+//!   `attrax top` dashboard renderer;
+//! * [`slo`] turns scrapes into verdicts — the `attrax-slo/v1`
+//!   objective artifact (per-class latency threshold, success target,
+//!   error budget) and the pure counter-delta evaluator behind
+//!   `attrax monitor`'s burn-rate table;
+//! * [`push`] inverts the export direction for fleets behind NAT —
+//!   statsd-style counter deltas over UDP from a bounded-queue
+//!   emitter thread (`serve --push-addr`), drops counted in the
+//!   registry rather than ever blocking a request.
 
 pub mod doctor;
 pub mod export;
+pub mod push;
 pub mod replay;
+pub mod slo;
 pub mod span;
 pub mod telemetry;
 pub mod trace;
 
 pub use doctor::{diagnose, diagnose_segments, DoctorReport, DoctorSpec, Finding};
 pub use export::{scrape, StatsEndpoint, StatsSummary};
+pub use push::PushEmitter;
+pub use slo::{evaluate, SloReport, SloSpec};
 pub use replay::{
     replay_in_process, replay_live, replay_segments_in_process, replay_segments_live,
     replay_with_sim, ReplayReport, Timing,

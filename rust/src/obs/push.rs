@@ -1,0 +1,323 @@
+//! Push-based metric export: statsd-style lines over UDP.
+//!
+//! The pull-based stats endpoint ([`crate::obs::export::StatsEndpoint`])
+//! covers interactive scraping, but edge fleets often sit behind NAT
+//! where the collector cannot reach in. [`PushEmitter`] inverts the
+//! direction: a ticker thread snapshots the registry every
+//! `every_ms`, renders counter *deltas* (statsd `|c`) and gauge
+//! absolutes (`|g`), and hands datagram-sized chunks to a sender
+//! thread over a bounded queue. Nothing here ever blocks a request
+//! path:
+//!
+//! * rendering happens on the ticker thread from relaxed atomic
+//!   loads — publication stays lock- and allocation-free;
+//! * the queue is a `sync_channel`; when the sender falls behind the
+//!   ticker drops the datagram and bumps the registry's
+//!   `push_dropped` counter (visible in the pull exposition, so a
+//!   lossy push path is itself observable);
+//! * UDP send failures likewise count as drops rather than erroring.
+//!
+//! The emitter dies with the server: [`PushEmitter`] joins both
+//! threads on drop, flushing one final snapshot first so short runs
+//! (e.g. `--smoke`) still emit their totals.
+
+use std::net::UdpSocket;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{sync_channel, Receiver as MpscReceiver, SyncSender, TrySendError};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::obs::export::counter_pairs;
+use crate::obs::telemetry::Registry;
+
+/// Bounded queue depth between the ticker and the sender. Deep enough
+/// to absorb a transient stall, small enough that a dead collector
+/// cannot pin unbounded memory.
+const QUEUE_DEPTH: usize = 64;
+
+/// Keep each datagram under the conventional safe UDP payload size.
+const MAX_DATAGRAM_BYTES: usize = 1400;
+
+/// statsd metric names must not contain the protocol's own
+/// delimiters; replace anything suspicious from label-derived parts.
+fn sanitize(name: &str, out: &mut String) {
+    for c in name.chars() {
+        match c {
+            ':' | '|' | '@' | '\n' | ' ' => out.push('_'),
+            _ => out.push(c),
+        }
+    }
+}
+
+/// Render one statsd snapshot: counter deltas vs `last` (updated in
+/// place) and gauge absolutes. Pure string-building so it can be
+/// tested without sockets; returns one `name:value|type` line per
+/// metric, newline-terminated.
+fn render_lines(reg: &Registry, last: &mut Vec<u64>) -> String {
+    let pairs = counter_pairs(reg);
+    last.resize(pairs.len(), 0);
+    let mut out = String::with_capacity(1024);
+    for (i, (name, v)) in pairs.iter().enumerate() {
+        let delta = v.saturating_sub(last[i]);
+        last[i] = *v;
+        if delta == 0 {
+            continue; // statsd counters are increments; zero is noise
+        }
+        sanitize(name, &mut out);
+        out.push(':');
+        out.push_str(&delta.to_string());
+        out.push_str("|c\n");
+    }
+    for (name, v) in [
+        ("attrax_conns_open", reg.conns_open.get()),
+        ("attrax_queue_depth", reg.queue_depth.get()),
+    ] {
+        sanitize(name, &mut out);
+        out.push(':');
+        out.push_str(&v.to_string());
+        out.push_str("|g\n");
+    }
+    for (idx, class) in reg.class_names().iter().enumerate() {
+        for (suffix, v) in [
+            ("good", reg.class_good[idx].get()),
+            ("bad", reg.class_bad[idx].get()),
+        ] {
+            out.push_str("attrax_class_");
+            sanitize(class, &mut out);
+            out.push('_');
+            out.push_str(suffix);
+            out.push(':');
+            out.push_str(&v.to_string());
+            out.push_str("|g\n"); // absolute, so the collector needs no delta state
+        }
+    }
+    out
+}
+
+/// Split rendered lines into datagram-sized chunks on line
+/// boundaries. A single oversized line (cannot happen with our fixed
+/// metric names, but belt-and-braces) becomes its own datagram.
+fn chunk_datagrams(lines: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for line in lines.split_inclusive('\n') {
+        if !cur.is_empty() && cur.len() + line.len() > MAX_DATAGRAM_BYTES {
+            out.push(std::mem::take(&mut cur));
+        }
+        cur.push_str(line);
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+/// Background statsd push exporter. Construct with [`PushEmitter::start`];
+/// drop to flush and join. Owned by the server so its lifetime matches
+/// the stats endpoint's.
+pub struct PushEmitter {
+    stop: Arc<AtomicBool>,
+    ticker: Option<JoinHandle<()>>,
+    sender: Option<JoinHandle<()>>,
+}
+
+impl PushEmitter {
+    /// Spawn the ticker + sender pair pushing `registry` snapshots to
+    /// `addr` (host:port) every `every_ms` milliseconds. Resolution
+    /// and binding happen up front so a bad address fails loudly at
+    /// startup instead of silently dropping forever.
+    pub fn start(registry: Arc<Registry>, addr: &str, every_ms: u64) -> std::io::Result<Self> {
+        let sock = UdpSocket::bind("0.0.0.0:0")?;
+        sock.connect(addr)?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let (tx, rx): (SyncSender<String>, MpscReceiver<String>) = sync_channel(QUEUE_DEPTH);
+
+        let send_reg = Arc::clone(&registry);
+        let sender = std::thread::spawn(move || {
+            // Exits when the ticker drops its `tx`.
+            while let Ok(datagram) = rx.recv() {
+                if sock.send(datagram.as_bytes()).is_err() {
+                    send_reg.push_dropped.inc();
+                }
+            }
+        });
+
+        let tick_stop = Arc::clone(&stop);
+        let every = Duration::from_millis(every_ms.max(1));
+        let ticker = std::thread::spawn(move || {
+            let mut last: Vec<u64> = Vec::new();
+            let mut emit = |final_flush: bool| {
+                let lines = render_lines(&registry, &mut last);
+                for datagram in chunk_datagrams(&lines) {
+                    match tx.try_send(datagram) {
+                        Ok(()) => {}
+                        Err(TrySendError::Full(_)) if !final_flush => {
+                            registry.push_dropped.inc();
+                        }
+                        // On the final flush give the sender a moment
+                        // to drain rather than dropping the totals.
+                        Err(TrySendError::Full(d)) => {
+                            if tx.send(d).is_err() {
+                                registry.push_dropped.inc();
+                            }
+                        }
+                        Err(TrySendError::Disconnected(_)) => return,
+                    }
+                }
+            };
+            while !tick_stop.load(Ordering::Relaxed) {
+                // Sleep in small steps so shutdown is prompt even with
+                // long push intervals.
+                let mut slept = Duration::ZERO;
+                while slept < every && !tick_stop.load(Ordering::Relaxed) {
+                    let step = (every - slept).min(Duration::from_millis(5));
+                    std::thread::sleep(step);
+                    slept += step;
+                }
+                if tick_stop.load(Ordering::Relaxed) {
+                    break;
+                }
+                emit(false);
+            }
+            emit(true); // final snapshot so short runs still report
+        });
+
+        Ok(Self { stop, ticker: Some(ticker), sender: Some(sender) })
+    }
+}
+
+impl Drop for PushEmitter {
+    fn drop(&mut self) {
+        self.stop.store(true, Ordering::Relaxed);
+        if let Some(t) = self.ticker.take() {
+            let _ = t.join(); // drops tx, which in turn stops the sender
+        }
+        if let Some(s) = self.sender.take() {
+            let _ = s.join();
+        }
+    }
+}
+
+/// Std-only test collector: binds an ephemeral UDP port and gathers
+/// lines until `timeout` with no traffic. Used by tests and the CI
+/// gate; not part of the serving path.
+pub struct Receiver {
+    sock: UdpSocket,
+}
+
+impl Receiver {
+    pub fn bind() -> std::io::Result<Self> {
+        let sock = UdpSocket::bind("127.0.0.1:0")?;
+        Ok(Self { sock })
+    }
+
+    /// `host:port` to point a [`PushEmitter`] at.
+    pub fn addr(&self) -> String {
+        self.sock.local_addr().map(|a| a.to_string()).unwrap_or_default()
+    }
+
+    /// Collect individual statsd lines until no datagram arrives for
+    /// `idle`. Each datagram may carry many newline-separated lines.
+    pub fn recv_lines(&self, idle: Duration) -> Vec<String> {
+        let _ = self.sock.set_read_timeout(Some(idle));
+        let mut buf = [0u8; 64 * 1024];
+        let mut lines = Vec::new();
+        while let Ok(n) = self.sock.recv(&mut buf) {
+            let text = String::from_utf8_lossy(&buf[..n]);
+            lines.extend(text.lines().map(str::to_string));
+        }
+        lines
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn render_emits_counter_deltas_and_gauge_absolutes() {
+        let reg = Registry::new();
+        reg.completed.add(10);
+        reg.conns_open.set(3);
+        let mut last = Vec::new();
+        let first = render_lines(&reg, &mut last);
+        assert!(first.contains("attrax_completed_total:10|c"), "{first}");
+        assert!(first.contains("attrax_conns_open:3|g"), "{first}");
+        // unchanged counters render nothing on the next tick; gauges repeat
+        let second = render_lines(&reg, &mut last);
+        assert!(!second.contains("attrax_completed_total"), "{second}");
+        assert!(second.contains("attrax_conns_open:3|g"), "{second}");
+        // a new increment shows up as its delta, not the running total
+        reg.completed.add(5);
+        let third = render_lines(&reg, &mut last);
+        assert!(third.contains("attrax_completed_total:5|c"), "{third}");
+    }
+
+    #[test]
+    fn render_covers_installed_classes() {
+        let reg = Registry::new();
+        reg.install_classes(vec!["gold".into()]);
+        reg.observe_class(0, 1_000, true);
+        reg.observe_class(0, 9_999_999, false);
+        let mut last = Vec::new();
+        let lines = render_lines(&reg, &mut last);
+        assert!(lines.contains("attrax_class_gold_good:1|g"), "{lines}");
+        assert!(lines.contains("attrax_class_gold_bad:1|g"), "{lines}");
+    }
+
+    #[test]
+    fn sanitize_strips_statsd_delimiters() {
+        let mut out = String::new();
+        sanitize("we|ird:na me\n", &mut out);
+        assert_eq!(out, "we_ird_na_me_");
+    }
+
+    #[test]
+    fn chunking_respects_datagram_size_and_line_boundaries() {
+        let line = format!("{}:1|c\n", "x".repeat(200));
+        let many = line.repeat(20); // ~4 KiB total
+        let chunks = chunk_datagrams(&many);
+        assert!(chunks.len() > 1, "must split");
+        for c in &chunks {
+            assert!(c.len() <= MAX_DATAGRAM_BYTES, "chunk of {} bytes", c.len());
+            assert!(c.ends_with('\n'), "chunks end on line boundaries");
+        }
+        assert_eq!(chunks.concat(), many, "no lines lost or reordered");
+    }
+
+    #[test]
+    fn emitter_pushes_to_udp_receiver_and_flushes_on_drop() {
+        let reg = Arc::new(Registry::new());
+        reg.install_classes(vec!["gold".into()]);
+        let rx = Receiver::bind().unwrap();
+        let emitter = PushEmitter::start(Arc::clone(&reg), &rx.addr(), 10).unwrap();
+        reg.completed.add(42);
+        reg.observe_class(0, 500, true);
+        std::thread::sleep(Duration::from_millis(60));
+        drop(emitter); // joins both threads, final flush included
+        let lines = rx.recv_lines(Duration::from_millis(300));
+        assert!(
+            lines.iter().any(|l| l.starts_with("attrax_completed_total:") && l.ends_with("|c")),
+            "completed counter pushed: {lines:?}"
+        );
+        assert!(
+            lines.iter().any(|l| l == "attrax_class_gold_good:1|g"),
+            "classed slot pushed: {lines:?}"
+        );
+        // the deltas across all pushed datagrams sum to the true total
+        let total: u64 = lines
+            .iter()
+            .filter_map(|l| l.strip_prefix("attrax_completed_total:"))
+            .filter_map(|v| v.strip_suffix("|c"))
+            .filter_map(|v| v.parse::<u64>().ok())
+            .sum();
+        assert_eq!(total, 42);
+    }
+
+    #[test]
+    fn bad_address_fails_at_startup() {
+        let reg = Arc::new(Registry::new());
+        assert!(PushEmitter::start(reg, "not-an-addr", 10).is_err());
+    }
+}

@@ -367,6 +367,7 @@ mod tests {
                 deadline_ms: None,
                 with_crc: false,
                 trace_seq: None,
+                slo_class: None,
                 images: vec![0.0, 1.0],
             },
             reply: Frame::Error(ErrorFrame { id: 1, code: ErrCode::Busy, msg: "shed".into() }),

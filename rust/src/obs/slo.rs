@@ -1,0 +1,520 @@
+//! SLO objectives and burn-rate evaluation.
+//!
+//! An SLO spec is a small schema-tagged artifact (`attrax-slo/v1`,
+//! conventionally `*.slo.json`) naming request classes — e.g. `gold` /
+//! `silver` / `bronze` — each with a latency threshold, a target
+//! success fraction, and an absolute error budget:
+//!
+//! ```json
+//! {"schema":"attrax-slo/v1","classes":[
+//!   {"name":"gold","latency_ms":50.0,"target":0.999,"budget":100},
+//!   {"name":"bronze","latency_ms":500.0,"target":0.9,"budget":10000}]}
+//! ```
+//!
+//! It is loaded and validated like the tuned-config artifact
+//! ([`crate::dse::tune`]): schema checked first, every class checked
+//! field by field, any violation a typed `anyhow` error naming the
+//! offending class. The server loads it via `serve --slo`, resolves
+//! each request's optional `slo_class` wire field to a fixed class
+//! index at admission, and publishes completions into the registry's
+//! preallocated per-class slots
+//! ([`crate::obs::telemetry::Registry::observe_class`]).
+//!
+//! **Evaluation is pure counter arithmetic.** [`evaluate`] maps
+//! (spec, previous scrape, current scrape) to per-class compliance,
+//! remaining error budget, and burn rates over two windows — the delta
+//! window between the scrapes and the process lifetime — using only
+//! the monotone `attrax_class_good_total` / `attrax_class_bad_total`
+//! counters. No wall clock is read, so identical inputs give
+//! byte-identical verdicts (the property `attrax monitor --smoke`
+//! reruns are gated on in `scripts/ci.sh`).
+//!
+//! A *good* request completed successfully within its class's latency
+//! threshold; every other completion of a classed request is *bad*.
+//! The burn rate is the classic SRE ratio: observed bad fraction over
+//! allowed bad fraction (`1 - target`) — burn 1.0 spends the budget
+//! exactly at the target rate, above 1.0 the class is out of
+//! compliance.
+
+use std::path::Path;
+
+use crate::obs::export::StatsSummary;
+use crate::serve::proto::MAX_SLO_CLASS_BYTES;
+use crate::util::json::{arr, num, obj, s, Json};
+
+/// Schema tag of the spec artifact.
+pub const SLO_SCHEMA: &str = "attrax-slo/v1";
+/// Schema tag of the evaluation report (`BENCH_slo.json`).
+pub const SLO_REPORT_SCHEMA: &str = "attrax-slo-report/v1";
+/// Preallocated per-class registry slots; a spec may not exceed it.
+pub use crate::obs::telemetry::MAX_SLO_CLASSES;
+
+/// One named request class.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloClass {
+    pub name: String,
+    /// A completion within this many milliseconds is *good*.
+    pub latency_ms: f64,
+    /// Required good fraction, exclusive on both ends (0, 1).
+    pub target: f64,
+    /// Absolute error budget: cumulative bad completions above this
+    /// count the budget *exhausted*.
+    pub budget: u64,
+}
+
+impl SloClass {
+    /// The latency threshold in integer nanoseconds (span clock units).
+    pub fn latency_ns(&self) -> u64 {
+        (self.latency_ms * 1e6).round() as u64
+    }
+}
+
+/// A validated SLO spec: an ordered set of classes. The order is the
+/// class-index order the registry slots use.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SloSpec {
+    pub classes: Vec<SloClass>,
+}
+
+impl SloSpec {
+    /// Parse + validate a spec artifact (see module docs for the shape).
+    pub fn parse(text: &str) -> anyhow::Result<SloSpec> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("slo artifact: {e}"))?;
+        let schema = j.get("schema").and_then(Json::as_str).unwrap_or("");
+        anyhow::ensure!(
+            schema == SLO_SCHEMA,
+            "slo artifact schema {schema:?} (expected {SLO_SCHEMA:?})"
+        );
+        let classes_json = j
+            .get("classes")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("slo artifact: missing \"classes\" array"))?;
+        anyhow::ensure!(!classes_json.is_empty(), "slo artifact: no classes");
+        anyhow::ensure!(
+            classes_json.len() <= MAX_SLO_CLASSES,
+            "slo artifact: {} classes exceed the {MAX_SLO_CLASSES} registry slots",
+            classes_json.len()
+        );
+        let mut classes = Vec::with_capacity(classes_json.len());
+        for (i, c) in classes_json.iter().enumerate() {
+            let name = c
+                .get("name")
+                .and_then(Json::as_str)
+                .ok_or_else(|| anyhow::anyhow!("slo class #{i}: missing \"name\""))?
+                .to_string();
+            anyhow::ensure!(
+                !name.is_empty() && name.len() <= MAX_SLO_CLASS_BYTES,
+                "slo class #{i}: name must be 1 ..= {MAX_SLO_CLASS_BYTES} bytes"
+            );
+            let latency_ms = c
+                .get("latency_ms")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("slo class {name:?}: missing \"latency_ms\""))?;
+            anyhow::ensure!(
+                latency_ms.is_finite() && latency_ms > 0.0,
+                "slo class {name:?}: latency_ms must be a positive finite number"
+            );
+            let target = c
+                .get("target")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("slo class {name:?}: missing \"target\""))?;
+            anyhow::ensure!(
+                target > 0.0 && target < 1.0,
+                "slo class {name:?}: target must be strictly between 0 and 1"
+            );
+            let budget = c
+                .get("budget")
+                .and_then(Json::as_f64)
+                .ok_or_else(|| anyhow::anyhow!("slo class {name:?}: missing \"budget\""))?;
+            anyhow::ensure!(
+                budget >= 0.0 && budget.fract() == 0.0,
+                "slo class {name:?}: budget must be a non-negative integer"
+            );
+            if classes.iter().any(|prev: &SloClass| prev.name == name) {
+                anyhow::bail!("slo artifact: duplicate class name {name:?}");
+            }
+            classes.push(SloClass { name, latency_ms, target, budget: budget as u64 });
+        }
+        Ok(SloSpec { classes })
+    }
+
+    /// Load + validate a `*.slo.json` file.
+    pub fn load(path: &Path) -> anyhow::Result<SloSpec> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| anyhow::anyhow!("read {}: {e}", path.display()))?;
+        SloSpec::parse(&text).map_err(|e| anyhow::anyhow!("{}: {e}", path.display()))
+    }
+
+    /// The fixed class index a wire `slo_class` name resolves to.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.classes.iter().position(|c| c.name == name)
+    }
+
+    /// Class names in slot order (what the registry installs).
+    pub fn names(&self) -> Vec<String> {
+        self.classes.iter().map(|c| c.name.clone()).collect()
+    }
+
+    /// A permissive spec synthesized from bare class names (used by
+    /// `loadgen --smoke --class-mix`, which needs the loopback server
+    /// to admit the mix's classes without a spec file on disk):
+    /// generous thresholds, lax targets, effectively infinite budget.
+    pub fn synthetic(names: &[String]) -> SloSpec {
+        SloSpec {
+            classes: names
+                .iter()
+                .map(|n| SloClass {
+                    name: n.clone(),
+                    latency_ms: 600_000.0,
+                    target: 0.5,
+                    budget: u64::MAX / 2,
+                })
+                .collect(),
+        }
+    }
+
+    /// The spec as artifact JSON (inverse of [`SloSpec::parse`]).
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("schema", s(SLO_SCHEMA)),
+            (
+                "classes",
+                arr(self
+                    .classes
+                    .iter()
+                    .map(|c| {
+                        obj(vec![
+                            ("name", s(&c.name)),
+                            ("latency_ms", num(c.latency_ms)),
+                            ("target", num(c.target)),
+                            ("budget", num(c.budget as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ])
+    }
+}
+
+/// Per-class verdict from [`evaluate`]. All counts are exact counter
+/// values; all ratios are derived from them and nothing else.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassVerdict {
+    pub name: String,
+    /// Cumulative good/bad completions at the current scrape.
+    pub good: u64,
+    pub bad: u64,
+    /// Completions inside the delta window (current - previous).
+    pub delta_good: u64,
+    pub delta_bad: u64,
+    /// Good fraction over the delta window (1.0 with no traffic —
+    /// an idle class is vacuously compliant).
+    pub compliance: f64,
+    /// `compliance >= target`.
+    pub compliant: bool,
+    /// Burn rate over the delta window: bad fraction / (1 - target).
+    pub burn_window: f64,
+    /// Burn rate over the process lifetime (cumulative counters).
+    pub burn_total: f64,
+    pub budget: u64,
+    /// `budget - bad`, saturating at zero.
+    pub budget_remaining: u64,
+    /// Cumulative bad completions exceed the budget.
+    pub exhausted: bool,
+}
+
+/// Evaluation of one scrape pair against a spec.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SloReport {
+    pub classes: Vec<ClassVerdict>,
+}
+
+impl SloReport {
+    /// Any class has spent its whole error budget (the `attrax
+    /// monitor` nonzero-exit condition).
+    pub fn exhausted(&self) -> bool {
+        self.classes.iter().any(|c| c.exhausted)
+    }
+
+    /// Every class is compliant and inside its budget.
+    pub fn healthy(&self) -> bool {
+        self.classes.iter().all(|c| c.compliant && !c.exhausted)
+    }
+
+    /// The burn table rendered for the `attrax monitor` dashboard.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&format!(
+            "  {:<10} {:>8} {:>8} {:>9} {:>8} {:>8} {:>10}  state\n",
+            "class", "good", "bad", "complnce", "burn(w)", "burn(t)", "budget"
+        ));
+        for c in &self.classes {
+            let state = if c.exhausted {
+                "EXHAUSTED"
+            } else if !c.compliant {
+                "burning"
+            } else {
+                "ok"
+            };
+            out.push_str(&format!(
+                "  {:<10} {:>8} {:>8} {:>8.4}% {:>8.2} {:>8.2} {:>10}  {state}\n",
+                c.name,
+                c.good,
+                c.bad,
+                c.compliance * 100.0,
+                c.burn_window,
+                c.burn_total,
+                c.budget_remaining,
+            ));
+        }
+        out
+    }
+
+    /// Deterministic report JSON: counts, ratios and verdicts only —
+    /// no wall clock, no latencies — so identical counter inputs
+    /// serialize byte-identically.
+    pub fn to_json(&self) -> Json {
+        arr(self
+            .classes
+            .iter()
+            .map(|c| {
+                obj(vec![
+                    ("name", s(&c.name)),
+                    ("good", num(c.good as f64)),
+                    ("bad", num(c.bad as f64)),
+                    ("delta_good", num(c.delta_good as f64)),
+                    ("delta_bad", num(c.delta_bad as f64)),
+                    ("compliance", num(c.compliance)),
+                    ("compliant", Json::Bool(c.compliant)),
+                    ("burn_window", num(c.burn_window)),
+                    ("burn_total", num(c.burn_total)),
+                    ("budget", num(c.budget as f64)),
+                    ("budget_remaining", num(c.budget_remaining as f64)),
+                    ("exhausted", Json::Bool(c.exhausted)),
+                ])
+            })
+            .collect())
+    }
+}
+
+/// Good fraction of a (good, bad) pair; idle windows are vacuously
+/// fully compliant.
+fn fraction_good(good: u64, bad: u64) -> f64 {
+    let total = good + bad;
+    if total == 0 {
+        1.0
+    } else {
+        good as f64 / total as f64
+    }
+}
+
+/// Burn rate: observed bad fraction over the allowed bad fraction.
+/// `target` is validated into (0, 1), so the allowance is positive.
+fn burn(good: u64, bad: u64, target: f64) -> f64 {
+    (1.0 - fraction_good(good, bad)) / (1.0 - target)
+}
+
+/// Pure SLO evaluation of a scrape pair. `prev` is `None` on the first
+/// observation (the delta window is then the whole lifetime). Counter
+/// deltas only — no wall clock — so identical inputs give
+/// byte-identical verdicts.
+pub fn evaluate(spec: &SloSpec, prev: Option<&StatsSummary>, cur: &StatsSummary) -> SloReport {
+    let lookup = |summary: &StatsSummary, name: &str| -> (u64, u64) {
+        summary
+            .classes
+            .iter()
+            .find(|r| r.class == name)
+            .map(|r| (r.good, r.bad))
+            .unwrap_or((0, 0))
+    };
+    let classes = spec
+        .classes
+        .iter()
+        .map(|c| {
+            let (good, bad) = lookup(cur, &c.name);
+            let (pg, pb) = prev.map(|p| lookup(p, &c.name)).unwrap_or((0, 0));
+            // a restarted server resets its counters; clamp instead of
+            // underflowing so a stale prev scrape cannot panic
+            let delta_good = good.saturating_sub(pg);
+            let delta_bad = bad.saturating_sub(pb);
+            let compliance = fraction_good(delta_good, delta_bad);
+            ClassVerdict {
+                name: c.name.clone(),
+                good,
+                bad,
+                delta_good,
+                delta_bad,
+                compliance,
+                compliant: compliance >= c.target,
+                burn_window: burn(delta_good, delta_bad, c.target),
+                burn_total: burn(good, bad, c.target),
+                budget: c.budget,
+                budget_remaining: c.budget.saturating_sub(bad),
+                exhausted: bad > c.budget,
+            }
+        })
+        .collect();
+    SloReport { classes }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::export::ClassRow;
+
+    fn spec() -> SloSpec {
+        SloSpec {
+            classes: vec![
+                SloClass { name: "gold".into(), latency_ms: 50.0, target: 0.99, budget: 10 },
+                SloClass { name: "bronze".into(), latency_ms: 500.0, target: 0.9, budget: 100 },
+            ],
+        }
+    }
+
+    fn summary(rows: &[(&str, u64, u64)]) -> StatsSummary {
+        StatsSummary {
+            classes: rows
+                .iter()
+                .map(|&(class, good, bad)| ClassRow {
+                    class: class.into(),
+                    good,
+                    bad,
+                    lat: None,
+                })
+                .collect(),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn spec_roundtrips_through_artifact_json() {
+        let sp = spec();
+        let text = sp.to_json().to_string();
+        assert_eq!(SloSpec::parse(&text).unwrap(), sp);
+    }
+
+    #[test]
+    fn parse_rejects_bad_specs() {
+        let cases = [
+            (r#"{"classes":[]}"#, "schema"),
+            (r#"{"schema":"attrax-slo/v0","classes":[]}"#, "schema"),
+            (r#"{"schema":"attrax-slo/v1"}"#, "classes"),
+            (r#"{"schema":"attrax-slo/v1","classes":[]}"#, "no classes"),
+            (
+                r#"{"schema":"attrax-slo/v1","classes":[{"latency_ms":1,"target":0.5,"budget":0}]}"#,
+                "name",
+            ),
+            (
+                r#"{"schema":"attrax-slo/v1","classes":[{"name":"g","latency_ms":0,"target":0.5,"budget":0}]}"#,
+                "latency_ms",
+            ),
+            (
+                r#"{"schema":"attrax-slo/v1","classes":[{"name":"g","latency_ms":1,"target":1,"budget":0}]}"#,
+                "target",
+            ),
+            (
+                r#"{"schema":"attrax-slo/v1","classes":[{"name":"g","latency_ms":1,"target":0.5,"budget":1.5}]}"#,
+                "budget",
+            ),
+            (
+                r#"{"schema":"attrax-slo/v1","classes":[{"name":"g","latency_ms":1,"target":0.5,"budget":0},{"name":"g","latency_ms":1,"target":0.5,"budget":0}]}"#,
+                "duplicate",
+            ),
+        ];
+        for (text, needle) in cases {
+            let err = SloSpec::parse(text).expect_err(text).to_string();
+            assert!(err.contains(needle), "error {err:?} should mention {needle:?}");
+        }
+    }
+
+    #[test]
+    fn parse_rejects_too_many_classes() {
+        let classes: Vec<String> = (0..=MAX_SLO_CLASSES)
+            .map(|i| format!(r#"{{"name":"c{i}","latency_ms":1,"target":0.5,"budget":0}}"#))
+            .collect();
+        let text = format!(r#"{{"schema":"attrax-slo/v1","classes":[{}]}}"#, classes.join(","));
+        assert!(SloSpec::parse(&text).unwrap_err().to_string().contains("registry slots"));
+    }
+
+    #[test]
+    fn index_of_is_slot_order() {
+        let sp = spec();
+        assert_eq!(sp.index_of("gold"), Some(0));
+        assert_eq!(sp.index_of("bronze"), Some(1));
+        assert_eq!(sp.index_of("silver"), None);
+        assert_eq!(sp.names(), vec!["gold".to_string(), "bronze".to_string()]);
+    }
+
+    #[test]
+    fn latency_threshold_converts_to_ns() {
+        let c = SloClass { name: "g".into(), latency_ms: 1.5, target: 0.5, budget: 0 };
+        assert_eq!(c.latency_ns(), 1_500_000);
+    }
+
+    #[test]
+    fn evaluate_is_pure_counter_arithmetic() {
+        let sp = spec();
+        let prev = summary(&[("gold", 90, 0), ("bronze", 50, 5)]);
+        let cur = summary(&[("gold", 188, 2), ("bronze", 140, 15)]);
+        let rep = evaluate(&sp, Some(&prev), &cur);
+        let gold = &rep.classes[0];
+        assert_eq!((gold.good, gold.bad), (188, 2));
+        assert_eq!((gold.delta_good, gold.delta_bad), (98, 2));
+        assert_eq!(gold.compliance, 0.98);
+        assert!(!gold.compliant, "98% < 99% target");
+        // bad fraction 2% against a 1% allowance: burning at 2x
+        assert!((gold.burn_window - 2.0).abs() < 1e-12, "burn {}", gold.burn_window);
+        assert_eq!(gold.budget_remaining, 8);
+        assert!(!gold.exhausted);
+        let bronze = &rep.classes[1];
+        assert_eq!((bronze.delta_good, bronze.delta_bad), (90, 10));
+        assert!(bronze.compliant, "90% meets the 90% bronze target");
+        assert!(!rep.healthy(), "gold is burning");
+        assert!(!rep.exhausted());
+        // determinism: same inputs, byte-identical verdict JSON
+        let again = evaluate(&sp, Some(&prev), &cur);
+        assert_eq!(rep.to_json().to_string(), again.to_json().to_string());
+    }
+
+    #[test]
+    fn idle_class_is_vacuously_compliant() {
+        let sp = spec();
+        let rep = evaluate(&sp, None, &summary(&[]));
+        assert!(rep.healthy());
+        for c in &rep.classes {
+            assert_eq!(c.compliance, 1.0);
+            assert_eq!(c.burn_window, 0.0);
+            assert_eq!(c.budget_remaining, c.budget);
+        }
+    }
+
+    #[test]
+    fn budget_exhaustion_trips_on_strictly_more_bad_than_budget() {
+        let sp = spec();
+        let at = evaluate(&sp, None, &summary(&[("gold", 0, 10)]));
+        assert!(!at.classes[0].exhausted, "bad == budget is the last allowed state");
+        assert_eq!(at.classes[0].budget_remaining, 0);
+        let over = evaluate(&sp, None, &summary(&[("gold", 0, 11)]));
+        assert!(over.classes[0].exhausted);
+        assert!(over.exhausted());
+    }
+
+    #[test]
+    fn counter_reset_clamps_instead_of_underflowing() {
+        let sp = spec();
+        let prev = summary(&[("gold", 1000, 5)]);
+        let cur = summary(&[("gold", 10, 0)]); // restarted server
+        let rep = evaluate(&sp, Some(&prev), &cur);
+        assert_eq!((rep.classes[0].delta_good, rep.classes[0].delta_bad), (0, 0));
+        assert!(rep.classes[0].compliant);
+    }
+
+    #[test]
+    fn synthetic_spec_is_valid_and_permissive() {
+        let names = vec!["gold".to_string(), "silver".to_string()];
+        let sp = SloSpec::synthetic(&names);
+        assert_eq!(sp.names(), names);
+        // must survive its own artifact round-trip (i.e. validate)
+        assert_eq!(SloSpec::parse(&sp.to_json().to_string()).unwrap(), sp);
+    }
+}

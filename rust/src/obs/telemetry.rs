@@ -77,6 +77,12 @@ impl Gauge {
     }
 }
 
+/// Preallocated per-SLO-class registry slots. A spec
+/// ([`crate::obs::slo::SloSpec`]) may define at most this many
+/// classes; the bound keeps classed publication a fixed-size array
+/// index with no registration at request time.
+pub const MAX_SLO_CLASSES: usize = 8;
+
 /// First finite bucket edge is `2^HIST_SHIFT` = 1024 ns (~1 µs).
 pub const HIST_SHIFT: u32 = 10;
 /// 26 finite power-of-two edges (2^10 .. 2^35 ns ≈ 34 s) + overflow.
@@ -198,6 +204,17 @@ pub struct Registry {
     // -- registry-only counters --
     /// Spans dropped by a [`SampledRecorder`] (`--trace-sample N`).
     pub spans_sampled_out: Counter,
+    /// Datagrams the push exporter dropped (bounded queue full or UDP
+    /// send failure — push is lossy by design, but the loss is counted).
+    pub push_dropped: Counter,
+    // -- per-SLO-class slots (see [`Registry::observe_class`]) --
+    /// Completions within the class's latency threshold.
+    pub class_good: [Counter; MAX_SLO_CLASSES],
+    /// Completions over the threshold.
+    pub class_bad: [Counter; MAX_SLO_CLASSES],
+    /// End-to-end request latency per class.
+    pub class_request_ns: [Histogram; MAX_SLO_CLASSES],
+    class_names: OnceLock<Vec<String>>,
     // -- gauges --
     pub conns_open: Gauge,
     /// Coordinator queue depth. Set by the exposition endpoint at
@@ -227,6 +244,38 @@ impl Registry {
 
     pub fn profiler(&self) -> Option<&Arc<UnitProfiler>> {
         self.profiler.get()
+    }
+
+    /// Install the SLO class-name list (slot order = spec order; at
+    /// most [`MAX_SLO_CLASSES`] names are kept). Once, first install
+    /// wins — like [`Registry::install_profiler`]. Names are only read
+    /// at scrape time; classed *publication* is index-based and never
+    /// touches them.
+    pub fn install_classes(&self, mut names: Vec<String>) {
+        names.truncate(MAX_SLO_CLASSES);
+        let _ = self.class_names.set(names);
+    }
+
+    /// Installed class names in slot order (empty until installed).
+    pub fn class_names(&self) -> &[String] {
+        self.class_names.get().map(Vec::as_slice).unwrap_or(&[])
+    }
+
+    /// Publish one classed completion: latency into the class
+    /// histogram, one good-or-bad tick. Array index + relaxed atomics
+    /// only — no strings, no allocation (pinned in
+    /// `tests/alloc_regression.rs`). Out-of-range indices are ignored
+    /// (admission rejects unknown classes before they get here).
+    pub fn observe_class(&self, idx: usize, latency_ns: u64, good: bool) {
+        if idx >= MAX_SLO_CLASSES {
+            return;
+        }
+        self.class_request_ns[idx].observe(latency_ns);
+        if good {
+            self.class_good[idx].inc();
+        } else {
+            self.class_bad[idx].inc();
+        }
     }
 
     /// Fold one completed request span into the latency histograms.
@@ -550,6 +599,41 @@ mod tests {
         assert!(Arc::ptr_eq(reg.profiler().unwrap(), &a));
     }
 
+    #[test]
+    fn registry_installs_exactly_one_class_name_list() {
+        let reg = Registry::new();
+        assert!(reg.class_names().is_empty());
+        reg.install_classes(vec!["gold".into(), "bronze".into()]);
+        reg.install_classes(vec!["other".into()]);
+        assert_eq!(reg.class_names(), ["gold".to_string(), "bronze".to_string()]);
+        // an oversized list truncates to the preallocated slot count
+        let reg2 = Registry::new();
+        reg2.install_classes((0..MAX_SLO_CLASSES + 3).map(|i| format!("c{i}")).collect());
+        assert_eq!(reg2.class_names().len(), MAX_SLO_CLASSES);
+    }
+
+    #[test]
+    fn observe_class_publishes_into_fixed_slots() {
+        let reg = Registry::new();
+        reg.observe_class(0, 2_000, true);
+        reg.observe_class(0, 3_000, true);
+        reg.observe_class(0, 9_000_000, false);
+        reg.observe_class(1, 5_000, true);
+        assert_eq!(reg.class_good[0].get(), 2);
+        assert_eq!(reg.class_bad[0].get(), 1);
+        assert_eq!(reg.class_request_ns[0].count(), 3);
+        assert_eq!(reg.class_request_ns[0].sum(), 2_000 + 3_000 + 9_000_000);
+        assert_eq!(reg.class_good[1].get(), 1);
+        assert_eq!(reg.class_bad[1].get(), 0);
+        // out-of-range index is a no-op, not a panic
+        reg.observe_class(MAX_SLO_CLASSES, 1, true);
+        reg.observe_class(usize::MAX, 1, false);
+        let total: u64 = (0..MAX_SLO_CLASSES)
+            .map(|i| reg.class_good[i].get() + reg.class_bad[i].get())
+            .sum();
+        assert_eq!(total, 4);
+    }
+
     fn span_for(seq: u64) -> (Span, RequestFrame, Frame) {
         let sp = Span::start(seq, 1, 1, Method::Guided);
         let req = RequestFrame {
@@ -561,6 +645,7 @@ mod tests {
             deadline_ms: None,
             with_crc: false,
             trace_seq: None,
+            slo_class: None,
             images: vec![0.0, 1.0],
         };
         let reply = Frame::Request(req.clone());

@@ -596,6 +596,7 @@ mod tests {
             deadline_ms: Some(100),
             with_crc: false,
             trace_seq: None,
+            slo_class: None,
             images: vec![0.5, -1.25, 2.0, 0.0],
         };
         let reply = Frame::Response(ResponseFrame {
@@ -631,7 +632,12 @@ mod tests {
         let w = TraceWriter::create(&path, &meta()).unwrap();
         let mut originals = Vec::new();
         for seq in 0..3u64 {
-            let (mut span, req, reply) = sample(seq);
+            let (mut span, mut req, reply) = sample(seq);
+            if seq == 1 {
+                // classed requests persist their tag (doctor reads it
+                // back for the per-class burn audit)
+                req.slo_class = Some("gold".to_string());
+            }
             if seq == 2 {
                 span.trace_seq = Some(99);
                 span.outcome = Outcome::Err(ErrCode::Busy);

@@ -84,6 +84,8 @@ pub struct Client {
     timeout: Option<Duration>,
     /// Ask for CRC-protected payloads in both directions.
     with_crc: bool,
+    /// SLO class name tagged onto every request (None = untagged).
+    slo_class: Option<String>,
     /// Transparent retries of transient failures (0 = fail fast).
     retries: u32,
     backoff: Duration,
@@ -102,6 +104,7 @@ impl Client {
             next_id: 1,
             timeout: None,
             with_crc: false,
+            slo_class: None,
             retries: 0,
             backoff: Duration::from_millis(2),
             seed: 0,
@@ -125,6 +128,14 @@ impl Client {
     /// old servers ignore the field and answer unprotected).
     pub fn set_crc(&mut self, on: bool) {
         self.with_crc = on;
+    }
+
+    /// Tag every subsequent request with an SLO class name, resolved
+    /// by the server against its loaded `*.slo.json` spec
+    /// (version-negotiated: old servers skip the unknown field).
+    /// `None` reverts to untagged requests.
+    pub fn set_slo_class(&mut self, class: Option<&str>) {
+        self.slo_class = class.map(str::to_string);
     }
 
     /// Enable transparent recovery: up to `retries` re-attempts of a
@@ -190,6 +201,7 @@ impl Client {
             deadline_ms: self.timeout.map(|t| (t.as_millis() as u64).max(1)),
             with_crc: self.with_crc,
             trace_seq: None,
+            slo_class: self.slo_class.clone(),
             images: flat,
         });
         let mut attempt = 0u32;

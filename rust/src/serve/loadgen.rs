@@ -48,6 +48,12 @@ pub struct Spec {
     /// run, adding the server-side stage/unit breakdown (and a counter
     /// monotonicity check) to the report.
     pub stats_addr: Option<String>,
+    /// SLO class mix (`--class-mix gold:1,silver:2`): every request is
+    /// tagged with a class name, drawn from a weighted round-robin
+    /// schedule over one *shared* sequence across connections, so the
+    /// per-class request totals of a fixed-count run are deterministic
+    /// regardless of thread scheduling. Empty = untagged requests.
+    pub class_mix: Vec<(String, u32)>,
 }
 
 impl Default for Spec {
@@ -65,8 +71,35 @@ impl Default for Spec {
             seed: 42,
             trace: None,
             stats_addr: None,
+            class_mix: Vec::new(),
         }
     }
+}
+
+/// Parse a `--class-mix` argument: comma-separated `name:weight`
+/// pairs (`gold:1,silver:2,bronze:5`); weights are relative request
+/// shares in the round-robin schedule.
+pub fn parse_class_mix(text: &str) -> anyhow::Result<Vec<(String, u32)>> {
+    let mut out: Vec<(String, u32)> = Vec::new();
+    for part in text.split(',') {
+        let part = part.trim();
+        if part.is_empty() {
+            continue;
+        }
+        let (name, w) = part
+            .split_once(':')
+            .ok_or_else(|| anyhow::anyhow!("class mix entry {part:?} is not name:weight"))?;
+        anyhow::ensure!(!name.is_empty(), "class mix entry {part:?} has an empty name");
+        let weight: u32 =
+            w.parse().map_err(|_| anyhow::anyhow!("class {name:?}: weight {w:?} is not a u32"))?;
+        anyhow::ensure!(weight > 0, "class {name:?}: weight must be positive");
+        if out.iter().any(|(n, _)| n == name) {
+            anyhow::bail!("class {name:?} appears twice in the mix");
+        }
+        out.push((name.to_string(), weight));
+    }
+    anyhow::ensure!(!out.is_empty(), "empty class mix");
+    Ok(out)
 }
 
 /// Server-side view of a load run, scraped from the stats endpoint.
@@ -84,6 +117,18 @@ pub struct ServerStats {
     /// Parsed post-run scrape: counters, per-stage latency quantiles,
     /// per-unit engine profile, per-device fleet load.
     pub summary: StatsSummary,
+}
+
+/// Per-class client-side latency row of a classed run (`--class-mix`).
+#[derive(Clone, Debug)]
+pub struct ClassLat {
+    pub class: String,
+    /// Completed (Ok) frames tagged with this class.
+    pub ok: u64,
+    pub mean_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
 }
 
 /// Aggregate outcome of one load run.
@@ -107,6 +152,9 @@ pub struct Report {
     pub p99_ms: f64,
     /// shed / sent.
     pub shed_rate: f64,
+    /// Per-class latency rows, in mix order (empty without
+    /// `class_mix`).
+    pub classes: Vec<ClassLat>,
     /// Server-side breakdown (present when the spec carried a
     /// `stats_addr` and both scrapes succeeded).
     pub server_stats: Option<ServerStats>,
@@ -142,6 +190,24 @@ impl Report {
                 ]),
             ),
             ("shed_rate", num(self.shed_rate)),
+            (
+                "classes",
+                crate::util::json::arr(
+                    self.classes
+                        .iter()
+                        .map(|c| {
+                            obj(vec![
+                                ("class", s(&c.class)),
+                                ("ok", num(c.ok as f64)),
+                                ("mean_ms", num(c.mean_ms)),
+                                ("p50_ms", num(c.p50_ms)),
+                                ("p95_ms", num(c.p95_ms)),
+                                ("p99_ms", num(c.p99_ms)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ];
         if let Some(ss) = &self.server_stats {
             fields.push((
@@ -183,6 +249,12 @@ impl Report {
             self.p99_ms,
             100.0 * self.shed_rate,
         );
+        for c in &self.classes {
+            out.push_str(&format!(
+                "\nclass {:<12} ok={:<7} mean={:.2}ms p50={:.2}ms p95={:.2}ms p99={:.2}ms",
+                c.class, c.ok, c.mean_ms, c.p50_ms, c.p95_ms, c.p99_ms,
+            ));
+        }
         if let Some(ss) = &self.server_stats {
             out.push_str("\nserver stages (from --stats-addr scrape):");
             for st in &ss.summary.stages {
@@ -208,6 +280,18 @@ struct ConnStats {
     closed: u64,
     errors: u64,
     lat_ms: Vec<f64>,
+    /// Per-mix-class Ok latencies (indexed like `Spec::class_mix`).
+    class_lat_ms: Vec<Vec<f64>>,
+}
+
+/// Expand the weighted mix into the repeating class-index schedule
+/// the shared sequence strides over (`gold:1,silver:2` →
+/// `[gold, silver, silver]`).
+fn class_schedule(mix: &[(String, u32)]) -> Vec<usize> {
+    mix.iter()
+        .enumerate()
+        .flat_map(|(i, (_, w))| std::iter::repeat(i).take(*w as usize))
+        .collect()
 }
 
 /// One recorded request frame re-driven as workload.
@@ -255,14 +339,24 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
     let per_conn_rate = spec.rps / spec.conns as f64;
     // shared frame budget so the total sent honors `requests` exactly
     let budget = AtomicUsize::new(if spec.requests == 0 { usize::MAX } else { spec.requests });
+    // class tagging strides this one shared sequence (not per-conn
+    // position — per-conn ticket counts vary with scheduling, the
+    // shared sequence does not)
+    let schedule = class_schedule(&spec.class_mix);
+    let class_seq = AtomicUsize::new(0);
     let secs = if spec.secs > 0.0 { spec.secs } else { 3600.0 };
     let stop_at = Instant::now() + Duration::from_secs_f64(secs);
     let t0 = Instant::now();
     let results: Vec<anyhow::Result<ConnStats>> = std::thread::scope(|sc| {
         let budget = &budget;
+        let (schedule, class_seq) = (schedule.as_slice(), &class_seq);
         let workload = workload.as_deref();
         let handles: Vec<_> = (0..spec.conns)
-            .map(|c| sc.spawn(move || conn_loop(spec, c, per_conn_rate, budget, stop_at, workload)))
+            .map(|c| {
+                sc.spawn(move || {
+                    conn_loop(spec, c, per_conn_rate, budget, stop_at, workload, schedule, class_seq)
+                })
+            })
             .collect();
         let mut out = Vec::with_capacity(handles.len());
         for h in handles {
@@ -274,6 +368,7 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
     let wall_s = t0.elapsed().as_secs_f64();
 
     let mut agg = ConnStats::default();
+    agg.class_lat_ms.resize(spec.class_mix.len(), Vec::new());
     let mut first_err = None;
     let mut ok_conns = 0usize;
     for r in results {
@@ -287,6 +382,9 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
                 agg.closed += st.closed;
                 agg.errors += st.errors;
                 agg.lat_ms.extend_from_slice(&st.lat_ms);
+                for (into, from) in agg.class_lat_ms.iter_mut().zip(&st.class_lat_ms) {
+                    into.extend_from_slice(from);
+                }
             }
             Err(e) => {
                 if first_err.is_none() {
@@ -330,6 +428,25 @@ pub fn run(spec: &Spec) -> anyhow::Result<Report> {
         p95_ms: lat.percentile(0.95),
         p99_ms: lat.percentile(0.99),
         shed_rate: if agg.sent > 0 { agg.shed as f64 / agg.sent as f64 } else { 0.0 },
+        classes: spec
+            .class_mix
+            .iter()
+            .zip(&agg.class_lat_ms)
+            .map(|((name, _), lat_ms)| {
+                let mut lat = Samples::new();
+                for &x in lat_ms {
+                    lat.push(x);
+                }
+                ClassLat {
+                    class: name.clone(),
+                    ok: lat_ms.len() as u64,
+                    mean_ms: lat.mean(),
+                    p50_ms: lat.percentile(0.50),
+                    p95_ms: lat.percentile(0.95),
+                    p99_ms: lat.percentile(0.99),
+                }
+            })
+            .collect(),
         server_stats,
     })
 }
@@ -353,6 +470,7 @@ fn take_ticket(budget: &AtomicUsize) -> bool {
     budget.fetch_update(Ordering::Relaxed, Ordering::Relaxed, |b| b.checked_sub(1)).is_ok()
 }
 
+#[allow(clippy::too_many_arguments)]
 fn conn_loop(
     spec: &Spec,
     cid: usize,
@@ -360,11 +478,14 @@ fn conn_loop(
     budget: &AtomicUsize,
     stop_at: Instant,
     workload: Option<&[TraceFrame]>,
+    schedule: &[usize],
+    class_seq: &AtomicUsize,
 ) -> anyhow::Result<ConnStats> {
     let mut client = Client::connect(spec.addr.as_str())?;
     apply_timeout(&mut client, spec.timeout_ms)?;
     let mut rng = Pcg32::seeded(spec.seed ^ (cid as u64).wrapping_mul(0x9e37_79b9_7f4a_7c15));
     let mut st = ConnStats::default();
+    st.class_lat_ms.resize(spec.class_mix.len(), Vec::new());
     let mut images: Vec<Vec<f32>> = (0..spec.batch).map(|_| vec![0.0f32; spec.elems]).collect();
     let mut i = 0usize;
     while Instant::now() < stop_at && take_ticket(budget) {
@@ -396,12 +517,22 @@ fn conn_loop(
             }
         };
         i += 1;
+        let class_idx = if schedule.is_empty() {
+            None
+        } else {
+            Some(schedule[class_seq.fetch_add(1, Ordering::Relaxed) % schedule.len()])
+        };
+        client.set_slo_class(class_idx.map(|ci| spec.class_mix[ci].0.as_str()));
         let t = Instant::now();
         st.sent += 1;
         match client.attribute_batch(&refs, method) {
             Ok(_) => {
                 st.ok += 1;
-                st.lat_ms.push(t.elapsed().as_secs_f64() * 1e3);
+                let ms = t.elapsed().as_secs_f64() * 1e3;
+                st.lat_ms.push(ms);
+                if let Some(ci) = class_idx {
+                    st.class_lat_ms[ci].push(ms);
+                }
             }
             Err(ClientError::Rejected { code: ErrCode::Busy, .. }) => st.shed += 1,
             Err(ClientError::Rejected { code: ErrCode::DeadlineExceeded, .. }) => st.deadline += 1,
@@ -425,4 +556,34 @@ fn conn_loop(
         }
     }
     Ok(st)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn class_mix_parses_names_and_weights() {
+        let mix = parse_class_mix("gold:1,silver:2,bronze:5").unwrap();
+        assert_eq!(
+            mix,
+            vec![("gold".to_string(), 1), ("silver".to_string(), 2), ("bronze".to_string(), 5)]
+        );
+        for bad in ["", "gold", "gold:", "gold:0", "gold:-1", ":3", "gold:1,gold:2"] {
+            assert!(parse_class_mix(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn schedule_expands_weights_in_mix_order() {
+        let mix = parse_class_mix("gold:1,silver:2").unwrap();
+        assert_eq!(class_schedule(&mix), vec![0, 1, 1]);
+        // exactly-known per-class totals for a fixed request count:
+        // 10 tickets over [gold, silver, silver] → 4 gold, 6 silver
+        let sched = class_schedule(&mix);
+        let picks: Vec<usize> = (0..10).map(|k| sched[k % sched.len()]).collect();
+        assert_eq!(picks.iter().filter(|&&c| c == 0).count(), 4);
+        assert_eq!(picks.iter().filter(|&&c| c == 1).count(), 6);
+        assert!(class_schedule(&[]).is_empty());
+    }
 }

@@ -40,7 +40,12 @@
 //! completed span into a lock-free [`crate::obs::telemetry::Registry`],
 //! and `ServerConfig::stats_addr` exposes that registry (plus the
 //! metrics snapshot and per-device fleet gauges) over a one-shot TCP
-//! text endpoint that `attrax top` polls.
+//! text endpoint that `attrax top` polls. `ServerConfig::slo` admits
+//! the version-negotiated `slo_class` request tag (resolved to a fixed
+//! registry slot at admission; unknown names answer `BadRequest`) so
+//! `attrax monitor` can evaluate per-class burn rates, and
+//! `ServerConfig::push_addr` pushes statsd-style counter deltas over
+//! UDP for fleets a collector cannot scrape ([`crate::obs::push`]).
 //!
 //! Heatmap f32s cross the wire bit-exactly (raw LE payload, no text
 //! floats), so a networked client sees the same numerics as an

@@ -54,6 +54,9 @@ pub const MAX_HEADER_BYTES: usize = 64 * 1024;
 pub const MAX_PAYLOAD_BYTES: usize = 64 * 1024 * 1024;
 /// Cap on images per request frame (admission checks it too).
 pub const MAX_IMAGES_PER_FRAME: usize = 64;
+/// Cap on the optional `slo_class` header field (a class name is a
+/// short word like "gold"; anything longer is malformed, not data).
+pub const MAX_SLO_CLASS_BYTES: usize = 64;
 
 /// IEEE CRC-32 over payload bytes (shared with the plan's weight-slab
 /// integrity manifest — [`crate::util::crc`]).
@@ -129,6 +132,14 @@ pub struct RequestFrame {
     /// Version-negotiated like `crc` — encoded only when `Some`, and
     /// old peers skip the unknown header field.
     pub trace_seq: Option<u64>,
+    /// SLO class name (e.g. `"gold"`): the server resolves it against
+    /// its loaded `*.slo.json` spec at admission and publishes the
+    /// request into that class's latency histogram and good/bad
+    /// counters. Version-negotiated like `crc`/`trace_seq` — encoded
+    /// only when `Some`, skipped by old peers. A name the server's
+    /// spec does not know is answered with a typed
+    /// [`ErrCode::BadRequest`].
+    pub slo_class: Option<String>,
     /// `n * elems` f32s, image-major.
     pub images: Vec<f32>,
 }
@@ -360,6 +371,18 @@ fn decode_request(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
     };
     let deadline_ms = opt_field_u64(j, "deadline_ms")?;
     let trace_seq = opt_field_u64(j, "trace_seq")?;
+    let slo_class = match j.get("slo_class") {
+        None | Some(Json::Null) => None,
+        Some(v) => {
+            let name = v.as_str().ok_or_else(|| malformed("slo_class must be a string"))?;
+            if name.is_empty() || name.len() > MAX_SLO_CLASS_BYTES {
+                return Err(malformed(format!(
+                    "slo_class must be 1 ..= {MAX_SLO_CLASS_BYTES} bytes"
+                )));
+            }
+            Some(name.to_string())
+        }
+    };
     let want = n
         .checked_mul(elems)
         .and_then(|x| x.checked_mul(4))
@@ -378,6 +401,7 @@ fn decode_request(j: &Json, payload: &[u8]) -> Result<Frame, ProtoError> {
         deadline_ms,
         with_crc,
         trace_seq,
+        slo_class,
         images,
     }))
 }
@@ -496,6 +520,9 @@ fn encode_parts(f: &Frame) -> (String, Vec<u8>) {
             if let Some(ts) = q.trace_seq {
                 pairs.push(("trace_seq", num(ts as f64)));
             }
+            if let Some(c) = &q.slo_class {
+                pairs.push(("slo_class", s(c)));
+            }
             let payload = f32s_to_le(&q.images);
             if q.with_crc {
                 pairs.push(("crc", num(crc32(&payload) as f64)));
@@ -573,6 +600,7 @@ mod tests {
             deadline_ms: Some(1500),
             with_crc: false,
             trace_seq: None,
+            slo_class: None,
             images: vec![0.0, -1.5, f32::MIN_POSITIVE, 1.0, 2.5e-3, 1e20],
         })
     }

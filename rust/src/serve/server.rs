@@ -31,6 +31,8 @@ use super::proto::{self, ErrCode, ErrorFrame, Frame, RequestFrame, ResponseFrame
 use crate::coordinator::{metrics, Coordinator, FailKind};
 use crate::faults::{salt, FaultHooks, FaultStats};
 use crate::obs::export::{device_lines, render_registry, snapshot_lines, StatsEndpoint};
+use crate::obs::push::PushEmitter;
+use crate::obs::slo::SloSpec;
 use crate::obs::span::{Outcome, Recorder, Span, Stage};
 use crate::obs::telemetry::Registry;
 
@@ -62,6 +64,17 @@ pub struct ServerConfig {
     /// (`serve --stats-addr`; port 0 picks an ephemeral port — see
     /// [`Server::stats_addr`]). `None` = no endpoint.
     pub stats_addr: Option<String>,
+    /// SLO objectives (`serve --slo`). When set, requests carrying a
+    /// `slo_class` header resolve to a fixed registry slot at
+    /// admission (unknown names → `BadRequest`) and Ok outcomes
+    /// publish into the per-class good/bad counters and latency
+    /// histogram. `None` = classed requests are rejected.
+    pub slo: Option<Arc<SloSpec>>,
+    /// Destination for the statsd push exporter (`serve --push-addr`,
+    /// host:port UDP). Requires `telemetry`. `None` = no pushing.
+    pub push_addr: Option<String>,
+    /// Push interval in milliseconds (`serve --push-every`).
+    pub push_every_ms: u64,
 }
 
 impl Default for ServerConfig {
@@ -73,6 +86,9 @@ impl Default for ServerConfig {
             recorder: None,
             telemetry: None,
             stats_addr: None,
+            slo: None,
+            push_addr: None,
+            push_every_ms: 1000,
         }
     }
 }
@@ -86,6 +102,9 @@ impl std::fmt::Debug for ServerConfig {
             .field("recorder", &self.recorder.as_ref().map(|_| "Some(<dyn Recorder>)"))
             .field("telemetry", &self.telemetry.as_ref().map(|_| "Some(<Registry>)"))
             .field("stats_addr", &self.stats_addr)
+            .field("slo", &self.slo.as_ref().map(|s| s.names()))
+            .field("push_addr", &self.push_addr)
+            .field("push_every_ms", &self.push_every_ms)
             .finish()
     }
 }
@@ -130,6 +149,9 @@ pub struct Server {
     /// clone of `shared` inside its render closure, so shutdown drops
     /// it before unwrapping the `Arc`.
     stats: Option<StatsEndpoint>,
+    /// statsd push exporter (`--push-addr`): dies with the server,
+    /// flushing a final snapshot on shutdown.
+    push: Option<PushEmitter>,
 }
 
 impl Server {
@@ -141,6 +163,16 @@ impl Server {
         cfg: ServerConfig,
     ) -> anyhow::Result<Server> {
         anyhow::ensure!(cfg.max_conns > 0, "need at least one connection slot");
+        anyhow::ensure!(
+            cfg.push_addr.is_none() || cfg.telemetry.is_some(),
+            "push export needs a telemetry registry (--push-addr without telemetry)"
+        );
+        // pin the SLO class names into their registry slots up front so
+        // publication is index-only and exposition covers every class
+        // from the first scrape
+        if let (Some(reg), Some(spec)) = (&cfg.telemetry, &cfg.slo) {
+            reg.install_classes(spec.names());
+        }
         // pin the span epoch now so request stamps are small offsets
         crate::obs::span::epoch();
         let listener = TcpListener::bind(addr)?;
@@ -178,6 +210,12 @@ impl Server {
             }
             None => None,
         };
+        let push = match (&shared.cfg.push_addr, &shared.cfg.telemetry) {
+            (Some(addr), Some(reg)) => {
+                Some(PushEmitter::start(reg.clone(), addr, shared.cfg.push_every_ms)?)
+            }
+            _ => None,
+        };
         let acceptor = {
             let shared = shared.clone();
             let stop = stop.clone();
@@ -185,7 +223,7 @@ impl Server {
                 .name("serve-acceptor".into())
                 .spawn(move || accept_loop(listener, &shared, &stop))?
         };
-        Ok(Server { shared, stop, acceptor: Some(acceptor), addr: bound, stats })
+        Ok(Server { shared, stop, acceptor: Some(acceptor), addr: bound, stats, push })
     }
 
     /// The actually-bound address (resolves port 0).
@@ -208,10 +246,13 @@ impl Server {
     /// requests get their responses, then the coordinator shuts down
     /// and the final metrics snapshot is returned.
     pub fn shutdown(self) -> anyhow::Result<metrics::Snapshot> {
-        let Server { shared, stop, acceptor, stats, .. } = self;
+        let Server { shared, stop, acceptor, stats, push, .. } = self;
         // the endpoint's render closure holds a `shared` clone: join
         // its thread first or `Arc::try_unwrap` below can never win
         drop(stats);
+        // join the push threads too: the final flush must happen while
+        // the registry still reflects the finished run
+        drop(push);
         shared.draining.store(true, Ordering::Relaxed);
         join_all(&shared.handles);
         stop.store(true, Ordering::Relaxed);
@@ -454,6 +495,24 @@ fn serve_request(
     span.stamp(Stage::Accept, accept_ns);
     span.stamp_now(Stage::Decode);
     span.trace_seq = req.trace_seq;
+    // resolve the optional `slo_class` header to its fixed registry
+    // slot now, so publication later is pure index arithmetic. The
+    // spec is the contract: an unknown (or spec-less) class name is a
+    // client error, not a silently-unclassed request.
+    let slo_idx = match (&req.slo_class, &shared.cfg.slo) {
+        (None, _) => None,
+        (Some(name), Some(spec)) => match spec.index_of(name) {
+            Some(i) => Some(i),
+            None => {
+                let msg = format!("unknown slo_class {name:?}");
+                return answer_err(shared, stream, &mut span, &req, ErrCode::BadRequest, &msg);
+            }
+        },
+        (Some(name), None) => {
+            let msg = format!("server has no SLO spec; slo_class {name:?} rejected");
+            return answer_err(shared, stream, &mut span, &req, ErrCode::BadRequest, &msg);
+        }
+    };
     let elems = shared.coord.sim().net.input.elems();
     if req.elems != elems {
         let msg = format!("image has {} elems, model wants {elems}", req.elems);
@@ -594,6 +653,14 @@ fn serve_request(
     }
     if let Some(reg) = &shared.cfg.telemetry {
         reg.observe_span(&span);
+        // classed publication: only Ok outcomes count (sheds and typed
+        // errors never reach here), good = within the class's latency
+        // threshold. This keeps Σ(good+bad) per class reconcilable
+        // against the coordinator's `completed` counter.
+        if let (Some(idx), Some(spec)) = (slo_idx, &shared.cfg.slo) {
+            let total_ns = span.total_ns();
+            reg.observe_class(idx, total_ns, total_ns <= spec.classes[idx].latency_ns());
+        }
     }
     if let Some(rec) = &shared.cfg.recorder {
         rec.record(&span, &req, &frame);
@@ -638,5 +705,44 @@ mod tests {
         // ...and graceful shutdown completes with a snapshot
         let snap = server.shutdown().unwrap();
         assert_eq!(snap.completed, 1);
+    }
+
+    #[test]
+    fn classed_requests_publish_into_slots_and_unknown_names_are_rejected() {
+        use crate::obs::slo::SloSpec;
+        use crate::serve::client::ClientError;
+        let reg = Arc::new(Registry::new());
+        let spec = Arc::new(SloSpec::synthetic(&["gold".into(), "silver".into()]));
+        let coord = Coordinator::start(
+            tiny_sim(41, HwConfig::pynq_z2()),
+            Config { workers: 1, telemetry: Some(reg.clone()), ..Default::default() },
+            None,
+        )
+        .unwrap();
+        let cfg =
+            ServerConfig { telemetry: Some(reg.clone()), slo: Some(spec), ..Default::default() };
+        let server = Server::start("127.0.0.1:0", coord, cfg).unwrap();
+        // starting the server pinned the spec's names into their slots
+        assert_eq!(reg.class_names(), ["gold".to_string(), "silver".to_string()]);
+        let mut c = Client::connect(server.local_addr()).unwrap();
+        let img = vec![0.5f32; 128];
+        c.set_slo_class(Some("silver"));
+        c.attribute(&img, Method::Saliency).unwrap();
+        // the synthetic spec's thresholds are minutes wide: good
+        assert_eq!((reg.class_good[1].get(), reg.class_bad[1].get()), (1, 0));
+        assert_eq!(reg.class_good[0].get() + reg.class_bad[0].get(), 0, "gold slot untouched");
+        // unknown class: typed BadRequest, and the connection lives on
+        c.set_slo_class(Some("platinum"));
+        match c.attribute(&img, Method::Saliency) {
+            Err(ClientError::Rejected { code: ErrCode::BadRequest, .. }) => {}
+            other => panic!("want a BadRequest rejection, got {other:?}"),
+        }
+        c.set_slo_class(None);
+        c.attribute(&img, Method::Saliency).unwrap();
+        let snap = server.shutdown().unwrap();
+        assert_eq!(snap.completed, 2, "the rejected frame never reached the coordinator");
+        // only Ok outcomes are classed: one silver, nothing else
+        let classed: u64 = (0..2).map(|i| reg.class_good[i].get() + reg.class_bad[i].get()).sum();
+        assert_eq!(classed, 1);
     }
 }

@@ -201,6 +201,9 @@ fn telemetry_publication_is_allocation_free() {
     // registry — counters, gauges, histogram observes, folding a full
     // span, profiler slot updates — is atomics only, zero heap
     let reg = Registry::new();
+    // classed publication rides the same contract: the slots are
+    // preallocated at install time, so observe_class is atomics only
+    reg.install_classes(vec!["gold".into(), "bronze".into()]);
     let prof = UnitProfiler::new(vec![
         ("c1".into(), attrax::hls::EngineKind::Conv),
         ("f1".into(), attrax::hls::EngineKind::Vmm),
@@ -218,6 +221,7 @@ fn telemetry_publication_is_allocation_free() {
         reg.conns_open.dec();
         reg.request_ns.observe(10_000 + i);
         reg.observe_span(&sp);
+        reg.observe_class((i % 2) as usize, 10_000 + i, i % 3 != 0);
         prof.record((i % 2) as usize, Phase::Forward, 500, 80);
         prof.record((i % 2) as usize, Phase::Backward, 700, 90);
     }
@@ -225,6 +229,8 @@ fn telemetry_publication_is_allocation_free() {
     assert_eq!(n, 0, "telemetry publication allocated {n} times");
     assert_eq!(reg.completed.get(), 100);
     assert_eq!(reg.request_ns.count(), 200, "direct observes + observe_span folds");
+    let classed: u64 = (0..2).map(|c| reg.class_good[c].get() + reg.class_bad[c].get()).sum();
+    assert_eq!(classed, 100, "every classed observation landed in a slot");
 }
 
 #[test]

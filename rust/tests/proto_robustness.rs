@@ -22,6 +22,7 @@ fn sample_request() -> Frame {
         deadline_ms: Some(250),
         with_crc: false,
         trace_seq: None,
+        slo_class: None,
         images: vec![0.0, 1.5, -2.25, 3.5, -0.125, 0.75, 8.0, -9.5],
     })
 }
@@ -224,6 +225,65 @@ fn trace_seq_is_version_negotiated_like_crc() {
 
     // a malformed trace_seq (negative / fractional) is typed, not UB
     for bad in [r#","trace_seq":-1"#, r#","trace_seq":1.5"#, r#","trace_seq":"x""#] {
+        let header = format!(r#"{{"t":"req","id":1,"method":"guided","n":1,"elems":2{bad}}}"#);
+        assert!(
+            matches!(proto::decode(header.as_bytes(), &[0u8; 8]), Err(ProtoError::Malformed(_))),
+            "header {header} must be rejected"
+        );
+    }
+}
+
+#[test]
+fn slo_class_is_version_negotiated_like_crc_and_trace_seq() {
+    use attrax::serve::proto::MAX_SLO_CLASS_BYTES;
+
+    // a classed request round-trips through encode/decode
+    let classed = match sample_request() {
+        Frame::Request(mut q) => {
+            q.slo_class = Some("gold".to_string());
+            Frame::Request(q)
+        }
+        _ => unreachable!(),
+    };
+    let bytes = encode(&classed).unwrap();
+    assert_eq!(read_frame(&mut Cursor::new(&bytes)).unwrap().unwrap(), classed);
+
+    // an old client's frame (no slo_class header field) decodes to
+    // None, and the field costs nothing on the wire when absent
+    let plain = encode(&sample_request()).unwrap();
+    match read_frame(&mut Cursor::new(&plain)).unwrap().unwrap() {
+        Frame::Request(q) => assert_eq!(q.slo_class, None),
+        other => panic!("decoded as {other:?}"),
+    }
+    assert!(bytes.len() > plain.len());
+
+    // an old server skips unknown spellings; explicit null is absent
+    for (extra, want) in [
+        (r#","slo_class":"gold""#.to_string(), Some("gold".to_string())),
+        (r#","slo_class":null"#.to_string(), None),
+        (r#","slo_class_v2":{"x":1}"#.to_string(), None),
+        // names up to the cap are carried verbatim
+        (
+            format!(r#","slo_class":"{}""#, "c".repeat(MAX_SLO_CLASS_BYTES)),
+            Some("c".repeat(MAX_SLO_CLASS_BYTES)),
+        ),
+    ] {
+        let header = format!(r#"{{"t":"req","id":1,"method":"guided","n":1,"elems":2{extra}}}"#);
+        let payload = [0u8; 8];
+        match proto::decode(header.as_bytes(), &payload) {
+            Ok(Frame::Request(q)) => assert_eq!(q.slo_class, want, "header {header}"),
+            other => panic!("header {header} decoded as {other:?}"),
+        }
+    }
+
+    // a malformed slo_class (non-string / empty / over the cap) is
+    // typed, not UB and not a silent admit
+    for bad in [
+        r#","slo_class":7"#.to_string(),
+        r#","slo_class":[]"#.to_string(),
+        r#","slo_class":"""#.to_string(),
+        format!(r#","slo_class":"{}""#, "x".repeat(MAX_SLO_CLASS_BYTES + 1)),
+    ] {
         let header = format!(r#"{{"t":"req","id":1,"method":"guided","n":1,"elems":2{bad}}}"#);
         assert!(
             matches!(proto::decode(header.as_bytes(), &[0u8; 8]), Err(ProtoError::Malformed(_))),

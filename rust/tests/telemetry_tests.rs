@@ -252,6 +252,7 @@ fn loadgen_scrape_attaches_monotone_server_stats() {
         seed: 1,
         trace: None,
         stats_addr: server.stats_addr().map(|a| a.to_string()),
+        class_mix: Vec::new(),
     };
     let report = loadgen::run(&spec).unwrap();
     assert_eq!(report.ok, 6);

@@ -133,6 +133,33 @@ grep -q '"monotone":true' BENCH_serve_stats.json
 grep -q '"reconciled":true' BENCH_serve_stats.json
 rm -f BENCH_serve_stats.json
 
+echo "== slo gate: classed loadgen reconciles + deterministic monitor smoke =="
+# (1) Classed traffic: every Ok frame must land in exactly one per-class
+# slot, so the classed scrape counters times the batch size must equal
+# the final Snapshot's completed count (reconciled:true covers it; the
+# binary exits nonzero otherwise). (2) monitor --smoke drives a fixed
+# classed workload against a loopback server under the committed spec:
+# exit 0 on the compliant spec with a byte-identical rerun (the report
+# is counter arithmetic only — no wall clock, no latencies), nonzero on
+# the impossible one (1 ns threshold, zero budget => exhausted).
+cargo run --release -q -- loadgen --smoke --secs 2 --stats-addr 127.0.0.1:0 \
+    --class-mix gold:1,silver:2,bronze:5 --out BENCH_serve_classed.json
+grep -q '"reconciled":true' BENCH_serve_classed.json
+grep -q '"classes":' BENCH_serve_classed.json
+grep -q '"schema":"attrax-slo/v1"' examples/slo/default.slo.json
+cargo run --release -q -- monitor examples/slo/default.slo.json --smoke --out BENCH_slo_a.json
+cargo run --release -q -- monitor examples/slo/default.slo.json --smoke --out BENCH_slo_b.json
+cmp BENCH_slo_a.json BENCH_slo_b.json
+grep -q '"schema":"attrax-slo-report/v1"' BENCH_slo_a.json
+grep -q '"exhausted":false' BENCH_slo_a.json
+if cargo run --release -q -- monitor examples/slo/impossible.slo.json --smoke \
+    --out BENCH_slo_bad.json; then
+    echo "ERROR: the impossible spec must exhaust its budget (nonzero exit)"
+    exit 1
+fi
+grep -q '"exhausted":true' BENCH_slo_bad.json
+rm -f BENCH_serve_classed.json BENCH_slo_a.json BENCH_slo_b.json BENCH_slo_bad.json
+
 echo "== style: cargo fmt --check =="
 cargo fmt --check
 
